@@ -1,0 +1,7 @@
+"""Pytest path shim: make `compile.*` importable whether pytest runs from
+the repo root (`pytest python/tests/`) or from `python/` (the Makefile)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

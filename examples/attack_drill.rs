@@ -1,0 +1,23 @@
+//! Red-team drill — runs all five §VIII.C attack scenarios against the live
+//! components and verifies every mitigation holds.
+//!
+//! Run: `cargo run --release --example attack_drill`
+
+use islandrun::security;
+
+fn main() {
+    let outcomes = security::run_all();
+    let mut failed = 0;
+    println!("§VIII.C attack drill:");
+    for o in &outcomes {
+        println!("  {:<28} mitigated={:<5} {}", o.name, o.mitigated, o.details);
+        if !o.mitigated {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        eprintln!("\n{failed} attack(s) NOT mitigated");
+        std::process::exit(1);
+    }
+    println!("\nall {} attacks mitigated — attack_drill OK", outcomes.len());
+}

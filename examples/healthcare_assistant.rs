@@ -1,0 +1,88 @@
+//! Healthcare assistant — Scenario 4 / Scenario B: a HIPAA-constrained
+//! clinic serving a 1000-query day (200 high / 500 moderate / 300 low),
+//! with chat-context migration across the trust boundary.
+//!
+//! Run: `cargo run --release --example healthcare_assistant`
+
+use islandrun::agents::mist::Mist;
+use islandrun::config::{preset_healthcare, Config};
+use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator};
+use islandrun::substrate::trace::healthcare_day;
+use islandrun::types::{PriorityTier, TrustTier};
+use islandrun::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let islands = preset_healthcare();
+    let fleet = Fleet::new(islands.clone(), 4);
+    let mut orch = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 4);
+
+    // ---- the 1000-query day -------------------------------------------
+    let day = healthcare_day(1000, 2026);
+    let session = orch.open_session("clinic");
+    let mut per_tier = [0usize; 3]; // personal / edge / cloud
+    let mut violations = 0usize;
+    let mut cost = 0.0;
+    for item in &day {
+        orch.advance(86_400.0 / 1000.0 * 0.9); // spread over a virtual day
+        let out = orch.submit(session, &item.request.prompt, item.request.priority, None)?;
+        if let Some(id) = out.decision.target() {
+            let island = islands.iter().find(|i| i.id == id).unwrap();
+            match island.tier {
+                TrustTier::Personal => per_tier[0] += 1,
+                TrustTier::PrivateEdge => per_tier[1] += 1,
+                TrustTier::Cloud => per_tier[2] += 1,
+            }
+            if island.privacy < item.truth.score() {
+                violations += 1;
+            }
+            cost += out.cost;
+        }
+    }
+
+    let mut t = Table::new("healthcare day (Scenario 4/B)", &["metric", "value"]);
+    t.row(&["queries".into(), day.len().to_string()]);
+    t.row(&["on clinic workstation (PHI)".into(), per_tier[0].to_string()]);
+    t.row(&["on on-prem edge (literature)".into(), per_tier[1].to_string()]);
+    t.row(&["on public cloud (education)".into(), per_tier[2].to_string()]);
+    t.row(&["HIPAA violations".into(), violations.to_string()]);
+    t.row(&["cloud spend".into(), format!("${cost:.2}")]);
+    t.print();
+    assert_eq!(violations, 0, "PHI must never reach a low-privacy island");
+
+    // ---- context migration demo (§VII.B) -------------------------------
+    println!("context migration across the trust boundary:");
+    let s = orch.open_session("dr-lee");
+    let turn1 = orch.submit(
+        s,
+        "patient john doe ssn 123-45-6789 diagnosed with diabetes, hba1c elevated",
+        PriorityTier::Primary,
+        None,
+    )?;
+    println!("  turn 1 (PHI): s_r={:.2} -> {:?}, sanitized={}", turn1.s_r, turn1.decision.target(), turn1.sanitized);
+
+    // saturate the clinic + edge so the general follow-up must use cloud
+    if let Some(fleet) = orch.fleet_mut() {
+        for island in fleet.islands.iter_mut() {
+            if !island.spec.unbounded() {
+                island.external_load = 0.99;
+            }
+        }
+    }
+    let turn2 = orch.submit(s, "what lifestyle changes are usually recommended", PriorityTier::Burstable, None)?;
+    let island = islands.iter().find(|i| Some(i.id) == turn2.decision.target()).unwrap();
+    println!(
+        "  turn 2 (general): s_r={:.2} -> {} (P={}), history sanitized={}",
+        turn2.s_r, island.name, island.privacy, turn2.sanitized
+    );
+    assert!(turn2.sanitized, "crossing the trust boundary must sanitize chat history");
+
+    // show what the cloud actually saw
+    let sess = orch.sessions.get_mut(s).unwrap();
+    let leaked = sess.placeholders.sanitize("patient john doe ssn 123-45-6789 diagnosed with diabetes", island.privacy);
+    println!("  cloud-visible history example: \"{leaked}\"");
+    assert!(!leaked.contains("john doe") && !leaked.contains("123-45-6789"));
+
+    println!("\nhealthcare_assistant OK");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Legal-firm RAG — Scenario 3/C: the case-law vector store lives on the
+//! firm server; IslandRun routes *compute to data*. Uses the real AOT
+//! Embedder artifact when available (falls back to the rust featurizer +
+//! random projection otherwise, so the example always runs).
+//!
+//! Run: `cargo run --release --example legal_rag`
+
+use std::path::Path;
+
+use islandrun::agents::waves::Waves;
+use islandrun::agents::tide::hysteresis::Preference;
+use islandrun::config::{preset_legal, Config};
+use islandrun::islands::Fleet;
+use islandrun::runtime::{features, Engine};
+use islandrun::substrate::trace::rag_trace;
+use islandrun::substrate::vectorstore::VectorStore;
+use islandrun::util::Table;
+
+const CASE_LAW: &[&str] = &[
+    "contract dispute over delivery timelines in maritime shipping",
+    "precedent on data privacy obligations for cloud storage providers",
+    "employment agreement non-compete clause enforceability ruling",
+    "patent infringement claim regarding distributed routing algorithms",
+    "liability for autonomous vehicle sensor failures on highways",
+    "medical malpractice standard of care for remote diagnosis",
+    "intellectual property assignment in open source contributions",
+    "negligence claim for inadequate network security controls",
+    "arbitration clause enforceability in consumer software licenses",
+    "regulatory compliance for cross border financial data transfers",
+    "trade secret misappropriation by departing employees",
+    "class action over misleading subscription renewal practices",
+];
+
+fn embed(engine: Option<&Engine>, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+    match engine {
+        Some(e) => e.handle().embed(texts.to_vec()),
+        None => {
+            // deterministic fallback: featurizer + fixed projection via FNV
+            Ok(texts
+                .iter()
+                .map(|t| {
+                    let f = features::featurize(t);
+                    let mut out = vec![0f32; 64];
+                    for (i, &v) in f.iter().enumerate() {
+                        out[i % 64] += v * if (features::fnv1a(&[i as u8]) & 1) == 0 { 1.0 } else { -1.0 };
+                    }
+                    let n: f32 = out.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+                    out.iter().map(|x| x / n).collect()
+                })
+                .collect())
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load(Path::new("artifacts")).ok();
+    if engine.is_none() {
+        println!("(artifacts not built — using fallback embedder; run `make artifacts` for the real one)");
+    }
+
+    // 1) Build the firm's vector store (lives ON the firm server island)
+    let texts: Vec<String> = CASE_LAW.iter().map(|s| s.to_string()).collect();
+    let embs = embed(engine.as_ref(), &texts)?;
+    let mut store = VectorStore::new(embs[0].len());
+    for (i, (text, e)) in texts.iter().zip(embs).enumerate() {
+        store.insert(i as u64, text, e)?;
+    }
+    let store_path = std::env::temp_dir().join("islandrun_case_law.json");
+    store.save(&store_path)?;
+    println!("firm vector store: {} docs, {:.1} KB on disk, saved to {}", store.len(), store.payload_kb(), store_path.display());
+
+    // 2) Route queries: data-locality forces the firm server
+    let islands = preset_legal();
+    let fleet = Fleet::new(islands.clone(), 12);
+    let waves = Waves::new(Config::default());
+    let queries = rag_trace(6, "case_law", 3);
+
+    let mut t = Table::new("compute-to-data routing (Scenario 3/C)", &["query", "routed to", "top case-law hit"]);
+    for item in &queries {
+        let states = fleet.states();
+        let d = waves.route(&item.request, 0.8, &states, fleet.local_capacity(), Preference::Local, f64::INFINITY);
+        let target = islands.iter().find(|i| Some(i.id) == d.target()).expect("routable");
+        assert_eq!(target.name, "firm-server", "data locality must win");
+        // run retrieval where the data lives
+        let qe = embed(engine.as_ref(), &[item.request.prompt.clone()])?;
+        let hits = store.search(&qe[0], 1);
+        let best = store.get(hits[0].id).unwrap();
+        t.row(&[
+            item.request.prompt.chars().take(44).collect::<String>(),
+            target.name.clone(),
+            best.text.chars().take(44).collect::<String>(),
+        ]);
+    }
+    t.print();
+
+    // 3) The counterfactual: uploading the corpus to cloud per query
+    let corpus_kb = store.payload_kb();
+    println!(
+        "bytes moved per query — compute-to-data: ~{:.1} KB (query only) vs data-to-compute: ~{:.1} KB (corpus shard)",
+        0.5,
+        corpus_kb
+    );
+    std::fs::remove_file(&store_path).ok();
+    println!("\nlegal_rag OK");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Personal island group + dynamic resource sharing — Scenarios 1 & 2:
+//! a user's devices form a trusted mesh (laptop/mobile/TV/NAS); two hiking
+//! friends rebalance inference by battery over a Bluetooth link.
+//!
+//! Run: `cargo run --release --example personal_mesh`
+
+use islandrun::agents::lighthouse::Lighthouse;
+use islandrun::agents::mist::Mist;
+use islandrun::config::{preset_hiking_pair, preset_personal_group, Config};
+use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator};
+use islandrun::types::{IslandId, PriorityTier};
+use islandrun::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    // ---- Scenario 1: conversation follows the user across devices -------
+    let islands = preset_personal_group();
+    let mut lighthouse = Lighthouse::new(0x5EED, 500.0, 3);
+    for i in islands.clone() {
+        lighthouse.register_owned(i, 0.0);
+    }
+    println!("mesh registered: {} islands online", lighthouse.islands().len());
+
+    let fleet = Fleet::new(islands.clone(), 21);
+    let mut orch = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 21);
+    let session = orch.open_session("commuter");
+
+    // at the desk: laptop serves
+    let turn1 = orch.submit(session, "refactor this helper function in the platform service", PriorityTier::Secondary, None)?;
+    let t1 = islands.iter().find(|i| Some(i.id) == turn1.decision.target()).unwrap();
+    println!("at the desk    -> {} (sanitized={})", t1.name, turn1.sanitized);
+
+    // driving: laptop disappears from the mesh (missed heartbeats);
+    // the same conversation continues on another trusted island
+    lighthouse.tick(10_000.0);
+    if let Some(fleet) = orch.fleet_mut() {
+        fleet.islands.retain(|i| i.spec.id != IslandId(0));
+    }
+    let turn2 = orch.submit(session, "continue: also update the unit tests", PriorityTier::Secondary, None)?;
+    let t2 = islands.iter().find(|i| Some(i.id) == turn2.decision.target()).unwrap();
+    println!("in the car     -> {} (intra-group, sanitized={})", t2.name, turn2.sanitized);
+    assert_ne!(t1.id, t2.id);
+    assert!(!turn2.sanitized, "intra-personal-group continuation never sanitizes");
+
+    // ---- Scenario 2: hiking friends, battery-aware sharing --------------
+    println!("\nhiking pair (battery-aware Bluetooth sharing):");
+    let pair = preset_hiking_pair();
+    let fleet = Fleet::new(pair.clone(), 22);
+    let mut orch2 = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 22);
+    let s2 = orch2.open_session("friend-a");
+
+    let mut t = Table::new("photo-enhancement requests from friend A (phone at 15% battery)", &["request", "executed on", "battery rule"]);
+    for i in 0..4 {
+        let out = orch2.submit(s2, "enhance this mountain photo with ai", PriorityTier::Secondary, None)?;
+        let island = pair.iter().find(|x| Some(x.id) == out.decision.target()).unwrap();
+        t.row(&[
+            format!("photo {}", i + 1),
+            island.name.clone(),
+            if island.id == IslandId(1) { "offloaded to friend B (90% battery)".into() } else { "local".into() },
+        ]);
+        orch2.advance(500.0);
+    }
+    t.print();
+    // the low-battery phone must not serve while a charged peer exists
+    let served_on_a = orch2.fleet().unwrap().get(IslandId(0)).unwrap().executed;
+    let served_on_b = orch2.fleet().unwrap().get(IslandId(1)).unwrap().executed;
+    println!("phone-a executed {served_on_a}, phone-b executed {served_on_b}");
+    assert!(served_on_b > served_on_a, "battery-aware rebalancing must favor friend B");
+
+    println!("\npersonal_mesh OK");
+    Ok(())
+}

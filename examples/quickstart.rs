@@ -1,0 +1,109 @@
+//! Quickstart — the END-TO-END driver: load the real AOT TinyLM artifacts,
+//! stand up a personal-island-group mesh, and serve a batched
+//! mixed-sensitivity workload through the full Fig. 2 pipeline
+//! (MIST → TIDE → WAVES → island execute → desanitize), reporting
+//! latency / throughput / cost / privacy. Results are recorded in
+//! EXPERIMENTS.md §E13.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::path::Path;
+use std::time::Instant;
+
+use islandrun::agents::mist::{Mist, Stage2};
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::islands::executor::IslandExecutor;
+use islandrun::runtime::{BatchPolicy, Batcher, Engine};
+use islandrun::server::{Backend, Orchestrator};
+use islandrun::substrate::trace::{paper_mix, SensClass};
+use islandrun::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    anyhow::ensure!(artifacts.join("meta.json").exists(), "run `make artifacts` first");
+
+    println!("loading AOT artifacts (HLO text -> PJRT)…");
+    let engine = Engine::load(artifacts)?;
+    let meta = engine.meta().clone();
+    println!(
+        "  TinyLM seq_len {}, vocab {}, batch variants {:?}; classifier val acc {:.3}",
+        meta.seq_len, meta.vocab, meta.lm_batch_variants, meta.classifier_val_acc
+    );
+    println!("  LM training loss curve (from meta.json): {:?}", meta.lm_loss_curve);
+
+    // 1) The full orchestrated pipeline over the REAL engine --------------
+    let mist = Mist::new(Stage2::Classifier(engine.handle()));
+    let executor = IslandExecutor::new(engine.handle(), 7);
+    let islands = preset_personal_group();
+    let mut orch = Orchestrator::new(Config::default(), mist, Backend::Real { executor, islands: islands.clone() }, 7);
+    let session = orch.open_session("quickstart");
+
+    let n = 48;
+    let trace = paper_mix(n, 42);
+    let t0 = Instant::now();
+    let mut served = 0usize;
+    let mut violations = 0usize;
+    let mut total_cost = 0.0;
+    let mut latencies = Vec::new();
+    for item in &trace {
+        let out = orch.submit(session, &item.request.prompt, item.request.priority, None)?;
+        if let Some(id) = out.decision.target() {
+            let island = islands.iter().find(|i| i.id == id).unwrap();
+            if island.privacy < item.truth.score() {
+                violations += 1;
+            }
+            served += 1;
+            latencies.push(out.latency_ms);
+            total_cost += out.cost;
+            if served <= 6 {
+                println!(
+                    "  [{}] s_r={:.2} -> {:<16} {:>7.1}ms  \"{}…\"",
+                    served,
+                    out.s_r,
+                    island.name,
+                    out.latency_ms,
+                    &out.response[..out.response.len().min(28)]
+                );
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // 2) Dynamic batching throughput on the raw engine --------------------
+    let mut batcher = Batcher::new(BatchPolicy::default());
+    for item in trace.iter().take(24) {
+        batcher.push(item.request.prompt.clone());
+    }
+    let tb = Instant::now();
+    let mut batched_tokens = 0usize;
+    while !batcher.is_empty() {
+        let batch = batcher.take_batch();
+        let gens = engine.handle().generate(batch, 8)?;
+        batched_tokens += gens.iter().map(|g| g.tokens_generated).sum::<usize>();
+    }
+    let batch_wall = tb.elapsed().as_secs_f64();
+
+    let mut t = Table::new("quickstart end-to-end (E13)", &["metric", "value"]);
+    t.row(&["requests served".into(), format!("{served}/{n}")]);
+    t.row(&["wall time".into(), format!("{wall:.2}s")]);
+    t.row(&["throughput".into(), format!("{:.2} req/s", served as f64 / wall)]);
+    t.row(&["p50 latency".into(), format!("{:.1} ms", islandrun::util::stats::percentile(&latencies, 0.5))]);
+    t.row(&["p95 latency".into(), format!("{:.1} ms", islandrun::util::stats::percentile(&latencies, 0.95))]);
+    t.row(&["privacy violations (ground truth)".into(), violations.to_string()]);
+    t.row(&["total cost".into(), format!("${total_cost:.4}")]);
+    t.row(&[
+        "batched decode".into(),
+        format!("{batched_tokens} tokens in {batch_wall:.2}s ({:.1} tok/s)", batched_tokens as f64 / batch_wall),
+    ]);
+    t.print();
+
+    let high = trace.iter().filter(|i| i.truth == SensClass::High).count();
+    println!(
+        "workload mix: {high} high / {} moderate / {} low",
+        trace.iter().filter(|i| i.truth == SensClass::Moderate).count(),
+        trace.iter().filter(|i| i.truth == SensClass::Low).count()
+    );
+    assert_eq!(violations, 0, "IslandRun must never violate privacy");
+    println!("\nquickstart OK");
+    Ok(())
+}

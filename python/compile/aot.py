@@ -1,0 +1,162 @@
+"""AOT compile path: train, lower to HLO *text*, write artifacts/.
+
+Run via `make artifacts` (no-op if artifacts are newer than the python
+sources). Emits, into artifacts/:
+
+  lm_b{1,4,8}.hlo.txt     TinyLM forward (weights baked as constants), one
+                          executable per dynamic-batcher batch variant:
+                          tokens [B, 64] i32 -> logits [B, 64, 256] f32
+  classifier.hlo.txt      MIST Stage-2: feats [8, 512] f32 -> logits [8, 4]
+  embedder.hlo.txt        feats [8, 512] f32 -> unit embeddings [8, 64]
+  meta.json               dims, featurizer config, train metrics, loss curve,
+                          golden featurizer/classifier vectors for the rust
+                          cross-language tests
+
+Interchange format is HLO TEXT, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` crate) rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model, train
+
+LM_BATCH_VARIANTS = (1, 4, 8)
+CLS_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jax .lower() result to XLA HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    # Guard: without print_large_constants the printer elides weights as
+    # `constant({...})`, which parses but executes as zeros on the rust side.
+    assert "{...}" not in text, "HLO printer elided constants"
+    return text
+
+
+def export_lm(lm_params, out_dir, use_pallas=True):
+    paths = {}
+    for b in LM_BATCH_VARIANTS:
+        spec = jax.ShapeDtypeStruct((b, model.SEQ_LEN), jnp.int32)
+        fn = lambda toks: (model.lm_forward(lm_params, toks,
+                                            use_pallas=use_pallas),)
+        text = to_hlo_text(jax.jit(fn).lower(spec))
+        path = os.path.join(out_dir, f"lm_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        paths[f"lm_b{b}"] = os.path.basename(path)
+        print(f"  wrote {path} ({len(text)} chars)")
+    return paths
+
+
+def export_classifier(cls_params, out_dir, use_pallas=True):
+    spec = jax.ShapeDtypeStruct((CLS_BATCH, model.FEAT_DIM), jnp.float32)
+    fn = lambda feats: (model.classifier_forward(cls_params, feats,
+                                                 use_pallas=use_pallas),)
+    text = to_hlo_text(jax.jit(fn).lower(spec))
+    path = os.path.join(out_dir, "classifier.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def export_embedder(emb_params, out_dir):
+    spec = jax.ShapeDtypeStruct((CLS_BATCH, model.FEAT_DIM), jnp.float32)
+    fn = lambda feats: (model.embedder_forward(emb_params, feats),)
+    text = to_hlo_text(jax.jit(fn).lower(spec))
+    path = os.path.join(out_dir, "embedder.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def golden_vectors(cls_params, emb_params):
+    """Golden cross-language test vectors pinned by rust unit tests."""
+    texts = [
+        "patient john doe ssn 123-45-6789 diagnosed with diabetes",
+        "what is the capital of france",
+        "draft the agenda for the platform team standup",
+    ]
+    out = []
+    for t in texts:
+        f = model.featurize(t)
+        logits = np.asarray(model.classifier_forward(
+            cls_params, jnp.asarray(f[None, :])))[0]
+        emb = np.asarray(model.embedder_forward(
+            emb_params, jnp.asarray(f[None, :])))[0]
+        nz = np.nonzero(f)[0][:8]
+        out.append({
+            "text": t,
+            "feat_nonzero_idx": [int(i) for i in nz],
+            "feat_nonzero_val": [round(float(f[i]), 6) for i in nz],
+            "feat_l2": round(float(np.linalg.norm(f)), 6),
+            "class_argmax": int(np.argmax(logits)),
+            "emb_head": [round(float(x), 6) for x in emb[:4]],
+        })
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--lm-steps", type=int, default=300)
+    ap.add_argument("--clf-steps", type=int, default=400)
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny step counts (CI smoke)")
+    args = ap.parse_args()
+    if args.fast:
+        args.lm_steps, args.clf_steps = 20, 50
+
+    os.makedirs(args.out, exist_ok=True)
+
+    print("[1/5] training TinyLM on embedded corpus")
+    lm_params, lm_log = train.train_lm(steps=args.lm_steps)
+    print("[2/5] training MIST Stage-2 classifier")
+    cls_params, tr_acc, va_acc = train.train_classifier(steps=args.clf_steps)
+    print(f"  classifier acc train={tr_acc:.3f} val={va_acc:.3f}")
+    emb_params = model.init_embedder_params(jax.random.PRNGKey(7))
+
+    print("[3/5] exporting TinyLM HLO (pallas kernel path)")
+    export_lm(lm_params, args.out)
+    print("[4/5] exporting classifier + embedder HLO")
+    export_classifier(cls_params, args.out)
+    export_embedder(emb_params, args.out)
+
+    print("[5/5] writing meta.json")
+    meta = {
+        "vocab": model.VOCAB,
+        "seq_len": model.SEQ_LEN,
+        "d_model": model.D_MODEL,
+        "n_heads": model.N_HEADS,
+        "n_layers": model.N_LAYERS,
+        "feat_dim": model.FEAT_DIM,
+        "ngram_sizes": list(model.NGRAM_SIZES),
+        "n_classes": model.N_CLASSES,
+        "embed_dim": model.EMBED_DIM,
+        "lm_batch_variants": list(LM_BATCH_VARIANTS),
+        "cls_batch": CLS_BATCH,
+        "class_sensitivity": [0.2, 0.5, 0.8, 1.0],
+        "lm_loss_curve": [[s, round(l, 4)] for s, l in lm_log],
+        "classifier_train_acc": round(tr_acc, 4),
+        "classifier_val_acc": round(va_acc, 4),
+        "golden": golden_vectors(cls_params, emb_params),
+    }
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

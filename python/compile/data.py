@@ -1,0 +1,140 @@
+"""Training data for the AOT artifacts.
+
+Everything here is synthetic/embedded so `make artifacts` is hermetic:
+  - CORPUS: a tiny character-level corpus for TinyLM (themed on the paper's
+    domains: islands/orchestration, healthcare, legal, code).
+  - Classifier templates: generate labeled sensitivity examples matching the
+    paper's four MIST Stage-2 classes (public 0.2 / internal 0.5 /
+    confidential 0.8 / restricted 1.0).
+
+The substitution "production workloads -> synthetic templates" is recorded in
+DESIGN.md §2: the paper's routing behavior depends on the *score* MIST
+assigns, not on the linguistic richness of the inputs.
+"""
+
+import numpy as np
+
+CORPUS = """
+The islands form an archipelago across the network ocean. Waves carry each
+request from shore to horizon and back again. The lighthouse watches every
+island and keeps the mesh alive with steady heartbeats. Mist settles over
+the channel when data must cross a trust boundary, hiding names and places
+while the shape of the conversation survives.
+
+A request arrives at the shore. The router asks: how sensitive is this, how
+much will it cost, how long will it take, and which islands can be trusted
+with it? Privacy is not negotiable; the system fails closed rather than
+leaking a secret to a distant cloud. Free local compute is spent before a
+single paid token crosses the horizon.
+
+The patient presented with elevated glucose and a history of hypertension.
+The physician reviewed treatment options and adjusted the dosage. General
+health advice: stay hydrated, sleep well, and exercise regularly. Common
+complications of diabetes include neuropathy and retinopathy.
+
+The firm holds ten terabytes of case law on its private server. Counsel
+queries the index where the embeddings already live; the documents never
+leave the building. Attorney and client speak under privilege, and the
+router honors it.
+
+fn route(request) { let score = waves.score(request); islands.filter(ok)
+.min_by(score) } // compute to data, not data to compute. The scheduler
+queues primary work locally, spills secondary work to the edge, and lets
+burstable work ride the cloud when capacity runs low.
+""".strip()
+
+
+# (template, label) — label indexes {0: public, 1: internal, 2: confidential,
+# 3: restricted}. Placeholders are filled from the word banks below.
+TEMPLATES = [
+    # -------- public (general knowledge, no org/person data) --------
+    ("what is the capital of {country}", 0),
+    ("explain how {tech} works in simple terms", 0),
+    ("write a haiku about {nature}", 0),
+    ("what are common complications of {disease}", 0),
+    ("summarize the history of {tech}", 0),
+    ("tips for staying healthy while traveling", 0),
+    ("how do i sort a list in python", 0),
+    ("what time zone is {country} in", 0),
+    # -------- internal (non-public but non-sensitive) --------
+    ("draft the agenda for the {team} team standup", 1),
+    ("summarize the notes from yesterdays {team} sync", 1),
+    ("refactor this helper function in the {team} service", 1),
+    ("what did we decide about the {tech} migration", 1),
+    ("update the onboarding doc for the {team} team", 1),
+    ("estimate effort for the {tech} upgrade next sprint", 1),
+    ("search medical literature for {disease} treatment guidelines", 1),
+    ("summarize recent {disease} research guidelines for the clinic", 1),
+    # -------- confidential (personal data) --------
+    ("email {person} at {email} about the offer letter", 2),
+    ("call {person} on {phone} regarding the invoice", 2),
+    ("my name is {person} and i live in {city}", 2),
+    ("{person} reported the issue from ip 10.0.0.{num}", 2),
+    ("salary review for {person} is scheduled friday", 2),
+    ("the candidate {person} interviewed for the {team} role", 2),
+    # -------- restricted (regulated: PHI / financial / identifiers) --------
+    ("patient {person} ssn {ssn} diagnosed with {disease}", 3),
+    ("analyze treatment options for patient {person} with {disease}", 3),
+    ("charge card {card} for {person} account", 3),
+    ("patient mrn {num}{num} prescribed {drug} {num} mg daily", 3),
+    ("wire transfer from account {account} routing {routing}", 3),
+    ("{person} hba1c results elevated, adjust {drug} dosage", 3),
+]
+
+WORDS = {
+    "country": ["france", "japan", "brazil", "kenya", "norway", "india"],
+    "tech": ["kubernetes", "rust", "jax", "raft", "vector databases", "tls"],
+    "nature": ["islands", "tides", "mist", "the horizon", "lighthouses"],
+    "disease": ["diabetes", "hypertension", "asthma", "migraine", "anemia"],
+    "team": ["platform", "billing", "search", "mobile", "infra"],
+    "person": ["john doe", "jane smith", "arun patel", "maria garcia",
+               "wei chen", "fatima khan"],
+    "city": ["chicago", "mumbai", "berlin", "osaka", "lagos", "austin"],
+    "drug": ["metformin", "lisinopril", "insulin", "atorvastatin"],
+}
+
+
+def _fill(template: str, rng: np.random.Generator) -> str:
+    out = template
+    for key, bank in WORDS.items():
+        while "{" + key + "}" in out:
+            out = out.replace("{" + key + "}", bank[rng.integers(len(bank))], 1)
+    out = out.replace("{email}", f"user{rng.integers(100)}@example.com")
+    out = out.replace("{phone}", f"555-{rng.integers(100,999)}-{rng.integers(1000,9999)}")
+    out = out.replace("{ssn}", f"{rng.integers(100,999)}-{rng.integers(10,99)}-{rng.integers(1000,9999)}")
+    out = out.replace("{card}", "4111-1111-1111-" + str(rng.integers(1000, 9999)))
+    out = out.replace("{account}", str(rng.integers(10**9, 10**10 - 1)))
+    out = out.replace("{routing}", str(rng.integers(10**8, 10**9 - 1)))
+    while "{num}" in out:
+        out = out.replace("{num}", str(rng.integers(10, 99)), 1)
+    return out
+
+
+def classifier_dataset(n_per_template=40, seed=0):
+    """Generate (texts, labels) for the MIST Stage-2 classifier."""
+    rng = np.random.default_rng(seed)
+    texts, labels = [], []
+    for template, label in TEMPLATES:
+        for _ in range(n_per_template):
+            texts.append(_fill(template, rng))
+            labels.append(label)
+    order = rng.permutation(len(texts))
+    return [texts[i] for i in order], np.array([labels[i] for i in order],
+                                               dtype=np.int32)
+
+
+# Documents for the data-locality / RAG experiments (embedded "case law").
+RAG_DOCS = [
+    "contract dispute over delivery timelines in maritime shipping",
+    "precedent on data privacy obligations for cloud storage providers",
+    "employment agreement non-compete clause enforceability ruling",
+    "patent infringement claim regarding distributed routing algorithms",
+    "liability for autonomous vehicle sensor failures on highways",
+    "medical malpractice standard of care for remote diagnosis",
+    "intellectual property assignment in open source contributions",
+    "negligence claim for inadequate network security controls",
+    "arbitration clause enforceability in consumer software licenses",
+    "regulatory compliance for cross border financial data transfers",
+    "trade secret misappropriation by departing employees",
+    "class action over misleading subscription renewal practices",
+]

@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: tiled causal multi-head attention (flash-style).
+
+This is the compute hot spot of the TinyLM the islands serve. It is written
+as a Pallas kernel with an explicit HBM<->VMEM schedule expressed through
+BlockSpecs, in the flash-attention online-softmax style:
+
+  grid = (BH, T // BLOCK_Q)
+  - each program instance owns one (head, q-block) tile,
+  - K and V stream through VMEM one BLOCK_K tile at a time inside a
+    fori_loop, maintaining running max / running sum / accumulator,
+  - causal masking is applied per (q, k) tile pair via iota comparison, and
+    whole k-tiles strictly above the diagonal are skipped.
+
+TPU mapping notes (see DESIGN.md §Hardware-Adaptation):
+  - VMEM footprint per program instance =
+      Q tile  BLOCK_Q*D*4  +  K/V tiles 2*BLOCK_K*D*4  +  acc BLOCK_Q*D*4
+      + softmax state 2*BLOCK_Q*4 bytes.
+    For the shipped TinyLM (T=64, D=16, BLOCK_Q=BLOCK_K=32) that is ~8.5 KB,
+    vastly under the ~16 MB/core VMEM budget; the blocks are kept small only
+    because the model is tiny. The *shape* of the schedule (stream K/V, keep
+    Q + acc resident) is the one that scales to real model sizes.
+  - The matmuls are [BLOCK_Q,D]x[D,BLOCK_K] and [BLOCK_Q,BLOCK_K]x[BLOCK_K,D];
+    on a real TPU these would be zero-padded to the 128-lane MXU tile. We
+    document rather than pad because interpret=True (mandatory on this CPU
+    image) executes via numpy where padding only adds work.
+
+interpret=True is REQUIRED here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute. Correctness is
+established against kernels.ref.attention_ref by python/tests/test_kernel.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k,
+                      seq_len, causal):
+    """One (head, q-block) program instance of flash attention."""
+    qi = pl.program_id(1)  # q-block index within the sequence
+    q = q_ref[...].astype(jnp.float32)  # [block_q, d]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.array(d, jnp.float32))
+    q = q * scale
+
+    num_k_blocks = seq_len // block_k
+
+    # Running online-softmax state.
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)         # running max
+    l0 = jnp.zeros((block_q,), jnp.float32)                 # running sum
+    acc0 = jnp.zeros((block_q, d), jnp.float32)             # output accum
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # absolute q rows
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k_tile = k_ref[pl.dslice(ki * block_k, block_k), :].astype(jnp.float32)
+        v_tile = v_ref[pl.dslice(ki * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k_tile.T  # [block_q, block_k]
+        if causal:
+            k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # Rescale previous accumulator, fold in the new tile.
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v_tile
+        return m_new, l_new, acc_new
+
+    if causal:
+        # Tiles strictly above the diagonal contribute nothing; skip them.
+        # The last k-block that intersects rows of q-block `qi` is
+        # floor(((qi+1)*block_q - 1) / block_k).
+        last = (qi * block_q + block_q - 1) // block_k + 1
+    else:
+        last = num_k_blocks
+    m, l, acc = jax.lax.fori_loop(0, last, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def attention(q, k, v, *, causal=True, block_q=32, block_k=32,
+              interpret=True):
+    """Tiled causal attention over [BH, T, D] tensors via Pallas.
+
+    Matches kernels.ref.attention_ref. Block sizes must divide T; callers
+    with short sequences should shrink the blocks (the AOT path uses
+    min(T, 32)).
+    """
+    bh, t, d = q.shape
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    if t % block_q or t % block_k:
+        raise ValueError(f"T={t} must be divisible by blocks {block_q},{block_k}")
+
+    kernel = functools.partial(
+        _attention_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=t,
+        causal=causal,
+    )
+    grid = (bh, t // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Q: one [block_q, d] tile per program instance.
+            pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+            # K, V: the whole sequence for this head is mapped; the kernel
+            # streams tiles of it via pl.dslice inside the fori_loop. This
+            # expresses "K/V live in HBM, tiles staged into VMEM on demand".
+            pl.BlockSpec((None, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

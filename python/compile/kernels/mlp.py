@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: fused two-layer MLP (linear -> ReLU -> linear).
+
+Used by the MIST Stage-2 sensitivity classifier (and by the TinyLM feed
+forward blocks). Fusing the two matmuls and the activation into one kernel
+keeps the [block_b, H] hidden activations resident in VMEM instead of
+round-tripping them through HBM — the same reasoning a GPU implementation
+would apply to shared memory, re-expressed as a Pallas BlockSpec schedule
+(DESIGN.md §Hardware-Adaptation).
+
+Grid: (B // block_b,); each instance computes a [block_b, O] output tile.
+Weights are small enough (512x128 + 128xO floats < 300 KB) to map fully into
+VMEM per instance, which is the right call on TPU too for these shapes.
+
+interpret=True is REQUIRED on this CPU image (Mosaic custom-calls cannot run
+on the CPU PJRT plugin). Oracle: kernels.ref.mlp_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    h = jnp.maximum(x @ w1_ref[...].astype(jnp.float32)
+                    + b1_ref[...].astype(jnp.float32), 0.0)
+    o_ref[...] = (h @ w2_ref[...].astype(jnp.float32)
+                  + b2_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def mlp(x, w1, b1, w2, b2, *, block_b=8, interpret=True):
+    """Fused MLP forward over [B, F] inputs via Pallas.
+
+    Matches kernels.ref.mlp_ref. block_b must divide B (callers pad the
+    batch; the AOT classifier artifact uses a fixed B so this always holds).
+    """
+    b, f = x.shape
+    h = w1.shape[1]
+    o = w2.shape[1]
+    block_b = min(block_b, b)
+    if b % block_b:
+        raise ValueError(f"B={b} must be divisible by block_b={block_b}")
+
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_mlp_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, o), lambda i: (0, 0)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, o), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)

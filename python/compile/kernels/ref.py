@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float tolerance under pytest/hypothesis sweeps
+(python/tests/test_kernel.py). They are also used as the *training-time*
+implementation (training runs the plain-jnp path; the AOT-served artifact
+runs the Pallas path, and the equality of the two is what the kernel tests
+establish).
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True):
+    """Multi-head scaled dot-product attention, reference implementation.
+
+    Args:
+      q, k, v: [BH, T, D] arrays (batch*heads flattened into the leading dim).
+      causal: apply a lower-triangular causal mask.
+
+    Returns:
+      [BH, T, D] attention output, same dtype as q.
+    """
+    orig_dtype = q.dtype
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.array(q.shape[-1], jnp.float32))
+    logits = jnp.einsum("btd,bsd->bts", q, k) * scale
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        logits = jnp.where(mask[None, :, :], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bts,bsd->btd", probs, v)
+    return out.astype(orig_dtype)
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Fused two-layer MLP with ReLU, reference implementation.
+
+    Args:
+      x: [B, F] input features.
+      w1: [F, H], b1: [H], w2: [H, O], b2: [O].
+
+    Returns:
+      [B, O] logits in float32.
+    """
+    x = x.astype(jnp.float32)
+    h = jnp.maximum(x @ w1.astype(jnp.float32) + b1.astype(jnp.float32), 0.0)
+    return h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)

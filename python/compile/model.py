@@ -1,0 +1,219 @@
+"""L2: JAX compute graphs served by the islands, calling the L1 kernels.
+
+Three models, all AOT-lowered to HLO text by aot.py and executed from the
+rust coordinator through PJRT (python never runs on the request path):
+
+  1. TinyLM           — character-level transformer LM; the inference
+                        workload every island (SHORE / edge / HORIZON) serves.
+  2. Classifier       — MIST Stage-2 "local small language model": hashed
+                        char-n-gram features -> fused-MLP -> 4 sensitivity
+                        classes (public / internal / confidential / restricted).
+  3. Embedder         — hashed-n-gram features -> projection -> L2-normalized
+                        64-d embedding for the vector-store substrate
+                        (data-locality / RAG experiments).
+
+The hashed n-gram featurizer defined here is re-implemented byte-for-byte in
+rust (rust/src/runtime/features.rs); python/tests/test_model.py and the rust
+unit tests pin the same golden vectors so the two can never drift.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import attention as attention_kernel
+from compile.kernels import mlp as mlp_kernel
+from compile.kernels import ref as kernels_ref
+
+# ---------------------------------------------------------------------------
+# Shared model hyperparameters (mirrored in artifacts/meta.json for rust).
+# ---------------------------------------------------------------------------
+VOCAB = 256          # byte-level tokenizer
+SEQ_LEN = 64         # fixed context window of the AOT artifacts
+D_MODEL = 64
+N_HEADS = 4
+HEAD_DIM = D_MODEL // N_HEADS
+N_LAYERS = 2
+D_FF = 128
+
+FEAT_DIM = 512       # hashed n-gram feature buckets
+NGRAM_SIZES = (2, 3)
+N_CLASSES = 4        # public / internal / confidential / restricted
+CLASSIFIER_HIDDEN = 128
+EMBED_DIM = 64
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+
+# ---------------------------------------------------------------------------
+# Featurizer (mirrored in rust/src/runtime/features.rs).
+# ---------------------------------------------------------------------------
+def fnv1a(data: bytes) -> int:
+    """64-bit FNV-1a over a byte string."""
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & MASK64
+    return h
+
+
+def featurize(text: str) -> np.ndarray:
+    """Hashed char-n-gram features: lowercase -> byte {2,3}-grams -> FNV-1a
+    buckets mod FEAT_DIM -> counts -> L2 normalize. MUST match the rust
+    implementation exactly."""
+    data = text.lower().encode("utf-8")
+    vec = np.zeros(FEAT_DIM, dtype=np.float32)
+    for n in NGRAM_SIZES:
+        for i in range(max(0, len(data) - n + 1)):
+            vec[fnv1a(data[i:i + n]) % FEAT_DIM] += 1.0
+    norm = float(np.linalg.norm(vec))
+    if norm > 0.0:
+        vec /= norm
+    return vec
+
+
+# ---------------------------------------------------------------------------
+# TinyLM
+# ---------------------------------------------------------------------------
+def init_lm_params(key):
+    """Initialize TinyLM parameters (dict pytree)."""
+    keys = jax.random.split(key, 4 + N_LAYERS)
+    scale = 0.02
+    params = {
+        "tok_emb": jax.random.normal(keys[0], (VOCAB, D_MODEL)) * scale,
+        "pos_emb": jax.random.normal(keys[1], (SEQ_LEN, D_MODEL)) * scale,
+        "ln_f_g": jnp.ones(D_MODEL),
+        "ln_f_b": jnp.zeros(D_MODEL),
+        "head": jax.random.normal(keys[2], (D_MODEL, VOCAB)) * scale,
+        "blocks": [],
+    }
+    for li in range(N_LAYERS):
+        k = jax.random.split(keys[4 + li], 8)
+        params["blocks"].append({
+            "ln1_g": jnp.ones(D_MODEL), "ln1_b": jnp.zeros(D_MODEL),
+            "wq": jax.random.normal(k[0], (D_MODEL, D_MODEL)) * scale,
+            "wk": jax.random.normal(k[1], (D_MODEL, D_MODEL)) * scale,
+            "wv": jax.random.normal(k[2], (D_MODEL, D_MODEL)) * scale,
+            "wo": jax.random.normal(k[3], (D_MODEL, D_MODEL)) * scale,
+            "ln2_g": jnp.ones(D_MODEL), "ln2_b": jnp.zeros(D_MODEL),
+            "w1": jax.random.normal(k[4], (D_MODEL, D_FF)) * scale,
+            "b1": jnp.zeros(D_FF),
+            "w2": jax.random.normal(k[5], (D_FF, D_MODEL)) * scale,
+            "b2": jnp.zeros(D_MODEL),
+        })
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attn_block(x, blk, use_pallas):
+    """Multi-head causal self-attention over x: [B, T, D_MODEL]."""
+    b, t, _ = x.shape
+    q = x @ blk["wq"]
+    k = x @ blk["wk"]
+    v = x @ blk["wv"]
+
+    def split(z):  # [B,T,D] -> [B*H, T, HEAD_DIM]
+        z = z.reshape(b, t, N_HEADS, HEAD_DIM).transpose(0, 2, 1, 3)
+        return z.reshape(b * N_HEADS, t, HEAD_DIM)
+
+    q, k, v = split(q), split(k), split(v)
+    if use_pallas:
+        o = attention_kernel.attention(q, k, v, causal=True,
+                                       block_q=min(32, t), block_k=min(32, t))
+    else:
+        o = kernels_ref.attention_ref(q, k, v, causal=True)
+    o = o.reshape(b, N_HEADS, t, HEAD_DIM).transpose(0, 2, 1, 3)
+    o = o.reshape(b, t, D_MODEL)
+    return o @ blk["wo"]
+
+
+def _ff_block(x, blk, use_pallas):
+    b, t, _ = x.shape
+    if use_pallas:
+        flat = x.reshape(b * t, D_MODEL)
+        out = mlp_kernel.mlp(flat, blk["w1"], blk["b1"], blk["w2"], blk["b2"],
+                             block_b=min(32, b * t))
+        return out.reshape(b, t, D_MODEL)
+    return kernels_ref.mlp_ref(
+        x.reshape(b * t, D_MODEL), blk["w1"], blk["b1"], blk["w2"], blk["b2"]
+    ).reshape(b, t, D_MODEL)
+
+
+def lm_forward(params, tokens, use_pallas=False):
+    """TinyLM forward: tokens [B, T] int32 -> logits [B, T, VOCAB] f32.
+
+    use_pallas selects the L1 kernel path (AOT artifacts) vs the jnp oracle
+    path (training). Both paths are asserted equal by the kernel tests.
+    """
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t][None, :, :]
+    for blk in params["blocks"]:
+        x = x + _attn_block(_layer_norm(x, blk["ln1_g"], blk["ln1_b"]), blk,
+                            use_pallas)
+        x = x + _ff_block(_layer_norm(x, blk["ln2_g"], blk["ln2_b"]), blk,
+                          use_pallas)
+    x = _layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    return x @ params["head"]
+
+
+def lm_loss(params, tokens):
+    """Next-token cross-entropy over a [B, T+1] token batch."""
+    logits = lm_forward(params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Sensitivity classifier (MIST Stage-2)
+# ---------------------------------------------------------------------------
+def init_classifier_params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (FEAT_DIM, CLASSIFIER_HIDDEN)) * 0.05,
+        "b1": jnp.zeros(CLASSIFIER_HIDDEN),
+        "w2": jax.random.normal(k2, (CLASSIFIER_HIDDEN, N_CLASSES)) * 0.05,
+        "b2": jnp.zeros(N_CLASSES),
+    }
+
+
+def classifier_forward(params, feats, use_pallas=False):
+    """feats [B, FEAT_DIM] -> class logits [B, N_CLASSES]."""
+    if use_pallas:
+        return mlp_kernel.mlp(feats, params["w1"], params["b1"],
+                              params["w2"], params["b2"],
+                              block_b=min(8, feats.shape[0]))
+    return kernels_ref.mlp_ref(feats, params["w1"], params["b1"],
+                               params["w2"], params["b2"])
+
+
+def classifier_loss(params, feats, labels):
+    logits = classifier_forward(params, feats)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+# ---------------------------------------------------------------------------
+# Embedder (vector-store substrate)
+# ---------------------------------------------------------------------------
+def init_embedder_params(key):
+    # A fixed random projection is a valid (Johnson-Lindenstrauss) embedder
+    # for the cosine-similarity vector store; no training needed.
+    return {"proj": jax.random.normal(key, (FEAT_DIM, EMBED_DIM)) / np.sqrt(FEAT_DIM)}
+
+
+def embedder_forward(params, feats):
+    """feats [B, FEAT_DIM] -> unit-norm embeddings [B, EMBED_DIM]."""
+    e = feats @ params["proj"]
+    norm = jnp.sqrt((e * e).sum(-1, keepdims=True) + 1e-12)
+    return e / norm

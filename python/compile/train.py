@@ -1,0 +1,92 @@
+"""Build-time training for the AOT artifacts.
+
+Runs inside `make artifacts` only — python (and everything in this file) is
+never on the request path. Training uses the pure-jnp oracle paths; the
+exported artifacts use the Pallas kernel paths. The kernel tests assert the
+two paths agree, so the weights transfer exactly.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data, model
+
+
+def _adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": 0}
+
+
+def _adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train_lm(steps=300, batch=16, seed=0, log_every=50):
+    """Train TinyLM on the embedded corpus; returns (params, log).
+
+    log is a list of (step, loss) pairs — the loss curve recorded in
+    EXPERIMENTS.md per the end-to-end-validation requirement.
+    """
+    corpus = np.frombuffer(data.CORPUS.encode("utf-8"), dtype=np.uint8)
+    corpus = corpus.astype(np.int32)
+    rng = np.random.default_rng(seed)
+    params = model.init_lm_params(jax.random.PRNGKey(seed))
+
+    loss_grad = jax.jit(jax.value_and_grad(model.lm_loss))
+    opt = _adam_init(params)
+    step_fn = jax.jit(_adam_step)
+
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        starts = rng.integers(0, len(corpus) - model.SEQ_LEN - 1, size=batch)
+        toks = np.stack([corpus[s:s + model.SEQ_LEN + 1] for s in starts])
+        loss, grads = loss_grad(params, jnp.asarray(toks))
+        params, opt = step_fn(params, grads, opt)
+        if step % log_every == 0 or step == steps - 1:
+            log.append((step, float(loss)))
+            print(f"  lm step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    return params, log
+
+
+def train_classifier(steps=400, batch=64, seed=0, log_every=100):
+    """Train the MIST Stage-2 classifier; returns (params, train_acc, val_acc)."""
+    texts, labels = data.classifier_dataset(seed=seed)
+    feats = np.stack([model.featurize(t) for t in texts])
+    n_val = len(texts) // 5
+    f_tr, y_tr = feats[n_val:], labels[n_val:]
+    f_va, y_va = feats[:n_val], labels[:n_val]
+
+    params = model.init_classifier_params(jax.random.PRNGKey(seed + 1))
+    loss_grad = jax.jit(jax.value_and_grad(model.classifier_loss))
+    opt = _adam_init(params)
+    step_fn = jax.jit(_adam_step)
+    rng = np.random.default_rng(seed)
+
+    for step in range(steps):
+        idx = rng.integers(0, len(f_tr), size=batch)
+        loss, grads = loss_grad(params, jnp.asarray(f_tr[idx]),
+                                jnp.asarray(y_tr[idx]))
+        params, opt = step_fn(params, grads, opt, 3e-3)
+        if step % log_every == 0:
+            print(f"  clf step {step:4d} loss {float(loss):.4f}")
+
+    def acc(f, y):
+        logits = model.classifier_forward(params, jnp.asarray(f))
+        return float((jnp.argmax(logits, -1) == jnp.asarray(y)).mean())
+
+    return params, acc(f_tr, y_tr), acc(f_va, y_va)

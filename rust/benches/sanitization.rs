@@ -1,0 +1,59 @@
+//! E9 — MIST sanitization microbenchmarks: entity detection, forward τ,
+//! backward φ⁻¹, and full history migration. Sanitization sits on the
+//! trust-boundary crossing path, so its latency bounds the cross-tier
+//! routing overhead.
+
+use islandrun::agents::mist::entities;
+use islandrun::agents::mist::sanitize::{sanitize_history, turn, PlaceholderMap};
+use islandrun::types::Role;
+use islandrun::util::bench::{bench, report};
+
+const SHORT: &str = "patient john doe ssn 123-45-6789 diagnosed with diabetes in chicago";
+
+fn long_history() -> Vec<islandrun::types::Turn> {
+    let mut h = Vec::new();
+    for i in 0..20 {
+        h.push(turn(
+            Role::User,
+            &format!("turn {i}: patient jane smith mrn 4921{i} prescribed metformin 500 mg daily in berlin on 2024-03-1{}", i % 9),
+        ));
+        h.push(turn(Role::Assistant, &format!("noted for jane smith, adjusting the plan {i}")));
+    }
+    h
+}
+
+fn main() {
+    let mut results = Vec::new();
+
+    results.push(bench("detect entities (70B prompt)", 20, 2000, || {
+        std::hint::black_box(entities::detect(SHORT));
+    }));
+
+    results.push(bench("sanitize short prompt", 20, 2000, || {
+        let mut map = PlaceholderMap::new(1);
+        std::hint::black_box(map.sanitize(SHORT, 0.4));
+    }));
+
+    let history = long_history();
+    results.push(bench("sanitize 40-turn history", 5, 200, || {
+        let mut map = PlaceholderMap::new(2);
+        std::hint::black_box(sanitize_history(&history, 0.4, &mut map));
+    }));
+
+    // desanitize pass over a response full of placeholders
+    let mut map = PlaceholderMap::new(3);
+    let sanitized = map.sanitize(SHORT, 0.4);
+    let response = format!("{sanitized} — recommend follow-up for the same case. {sanitized}");
+    results.push(bench("desanitize response", 20, 2000, || {
+        std::hint::black_box(map.desanitize(&response));
+    }));
+
+    report("sanitization — trust-boundary crossing costs", &results);
+
+    // round-trip correctness under bench load (guard against optimizing away)
+    let mut m = PlaceholderMap::new(9);
+    let s = m.sanitize(SHORT, 0.4);
+    assert!(PlaceholderMap::verify_clean(&s, 0.4));
+    assert!(m.desanitize(&s).contains("john doe"));
+    println!("PASS: round-trip integrity under bench configuration");
+}

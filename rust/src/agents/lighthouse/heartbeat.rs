@@ -1,0 +1,129 @@
+//! LIGHTHOUSE liveness tracking: periodic heartbeats + miss-count policy.
+//!
+//! §X: "LIGHTHOUSE maintains mesh connectivity via periodic heartbeats and
+//! enables dynamic island discovery. Personal devices announce availability
+//! when coming online (laptop waking from sleep, car starting)." Runs in
+//! virtual time like everything else in the simulator.
+
+use std::collections::BTreeMap;
+
+use crate::types::IslandId;
+
+/// Liveness record for one island.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Liveness {
+    pub last_heartbeat_ms: f64,
+    pub missed: u32,
+    pub online: bool,
+}
+
+/// Heartbeat tracker.
+#[derive(Clone, Debug)]
+pub struct HeartbeatTracker {
+    period_ms: f64,
+    miss_limit: u32,
+    records: BTreeMap<IslandId, Liveness>,
+}
+
+impl HeartbeatTracker {
+    pub fn new(period_ms: f64, miss_limit: u32) -> HeartbeatTracker {
+        HeartbeatTracker { period_ms, miss_limit, records: BTreeMap::new() }
+    }
+
+    /// An island announces itself (discovery / wake-from-sleep).
+    pub fn announce(&mut self, id: IslandId, now_ms: f64) {
+        self.records.insert(id, Liveness { last_heartbeat_ms: now_ms, missed: 0, online: true });
+    }
+
+    /// Record a heartbeat from an island.
+    pub fn beat(&mut self, id: IslandId, now_ms: f64) {
+        let rec = self.records.entry(id).or_insert(Liveness { last_heartbeat_ms: now_ms, missed: 0, online: true });
+        rec.last_heartbeat_ms = now_ms;
+        rec.missed = 0;
+        rec.online = true;
+    }
+
+    /// Advance time: count missed periods, mark islands offline past the
+    /// miss limit.
+    pub fn tick(&mut self, now_ms: f64) {
+        for rec in self.records.values_mut() {
+            let missed = ((now_ms - rec.last_heartbeat_ms) / self.period_ms).floor() as u32;
+            rec.missed = missed;
+            if missed >= self.miss_limit {
+                rec.online = false;
+            }
+        }
+    }
+
+    pub fn is_online(&self, id: IslandId) -> bool {
+        self.records.get(&id).map(|r| r.online).unwrap_or(false)
+    }
+
+    pub fn online_ids(&self) -> Vec<IslandId> {
+        self.records.iter().filter(|(_, r)| r.online).map(|(id, _)| *id).collect()
+    }
+
+    pub fn liveness(&self, id: IslandId) -> Option<Liveness> {
+        self.records.get(&id).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: IslandId = IslandId(1);
+    const B: IslandId = IslandId(2);
+
+    #[test]
+    fn announced_islands_are_online() {
+        let mut hb = HeartbeatTracker::new(500.0, 3);
+        hb.announce(A, 0.0);
+        assert!(hb.is_online(A));
+        assert!(!hb.is_online(B));
+    }
+
+    #[test]
+    fn missed_beats_take_island_offline() {
+        let mut hb = HeartbeatTracker::new(500.0, 3);
+        hb.announce(A, 0.0);
+        hb.tick(1400.0); // 2 missed periods: still online
+        assert!(hb.is_online(A));
+        assert_eq!(hb.liveness(A).unwrap().missed, 2);
+        hb.tick(1600.0); // 3 missed: offline
+        assert!(!hb.is_online(A));
+    }
+
+    #[test]
+    fn heartbeat_recovers_island() {
+        let mut hb = HeartbeatTracker::new(500.0, 3);
+        hb.announce(A, 0.0);
+        hb.tick(2000.0);
+        assert!(!hb.is_online(A));
+        hb.beat(A, 2100.0); // island wakes up
+        hb.tick(2200.0);
+        assert!(hb.is_online(A));
+        assert_eq!(hb.liveness(A).unwrap().missed, 0);
+    }
+
+    #[test]
+    fn online_ids_filters() {
+        let mut hb = HeartbeatTracker::new(500.0, 2);
+        hb.announce(A, 0.0);
+        hb.announce(B, 0.0);
+        hb.beat(B, 900.0);
+        hb.tick(1100.0); // A missed 2 → offline; B missed 0
+        assert_eq!(hb.online_ids(), vec![B]);
+    }
+
+    #[test]
+    fn steady_beats_stay_online() {
+        let mut hb = HeartbeatTracker::new(500.0, 3);
+        hb.announce(A, 0.0);
+        for i in 1..20 {
+            hb.beat(A, i as f64 * 400.0);
+            hb.tick(i as f64 * 400.0 + 10.0);
+            assert!(hb.is_online(A), "iteration {i}");
+        }
+    }
+}

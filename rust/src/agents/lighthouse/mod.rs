@@ -1,0 +1,169 @@
+//! LIGHTHOUSE — Link and Health Tracking for Heterogeneous Operations Using
+//! Synchronized Endpoints (§IV, §X).
+//!
+//! Maintains the mesh: island [`registry`] (registration + attestation +
+//! Eq. 2 trust), [`heartbeat`] liveness, and dynamic discovery. Fault
+//! tolerance (§IV.B): when LIGHTHOUSE crashes, WAVES keeps routing against
+//! the last cached island list ("correct but slower" — E6 ablation measures
+//! the re-discovery cost).
+
+pub mod heartbeat;
+pub mod registry;
+
+use crate::types::{Island, IslandId};
+use heartbeat::HeartbeatTracker;
+use registry::{RegisterResult, Registry, Token};
+
+/// The LIGHTHOUSE agent: registry + liveness + cached-list fallback.
+pub struct Lighthouse {
+    registry: Registry,
+    heartbeats: HeartbeatTracker,
+    alive: bool,
+    /// Last island list served before a crash (the §IV.B fallback).
+    cache: Vec<Island>,
+    /// Count of registry rebuilds while down (E6 "re-discovers islands per
+    /// request" cost proxy).
+    pub cache_serves: u64,
+}
+
+impl Lighthouse {
+    pub fn new(secret: u64, heartbeat_period_ms: f64, miss_limit: u32) -> Lighthouse {
+        Lighthouse {
+            registry: Registry::new(secret),
+            heartbeats: HeartbeatTracker::new(heartbeat_period_ms, miss_limit),
+            alive: true,
+            cache: Vec::new(),
+            cache_serves: 0,
+        }
+    }
+
+    /// Register an island with an attestation token; announces it online.
+    pub fn register(&mut self, island: Island, token: Token, now_ms: f64) -> RegisterResult {
+        let id = island.id;
+        let result = self.registry.register(island, token);
+        if matches!(result, RegisterResult::Accepted(_)) {
+            self.heartbeats.announce(id, now_ms);
+        }
+        result
+    }
+
+    /// Owner-side registration (token minted with the mesh secret).
+    pub fn register_owned(&mut self, island: Island, now_ms: f64) -> RegisterResult {
+        let id = island.id;
+        let result = self.registry.register_owned(island);
+        if matches!(result, RegisterResult::Accepted(_)) {
+            self.heartbeats.announce(id, now_ms);
+        }
+        result
+    }
+
+    pub fn beat(&mut self, id: IslandId, now_ms: f64) {
+        self.heartbeats.beat(id, now_ms);
+    }
+
+    pub fn tick(&mut self, now_ms: f64) {
+        self.heartbeats.tick(now_ms);
+    }
+
+    /// Algorithm 1 line 4: the island list WAVES iterates. Only online
+    /// islands are returned; when LIGHTHOUSE is down the cached snapshot is
+    /// served instead (§IV.B).
+    pub fn islands(&mut self) -> Vec<Island> {
+        if !self.alive {
+            self.cache_serves += 1;
+            return self.cache.clone();
+        }
+        let list: Vec<Island> =
+            self.registry.islands().filter(|i| self.heartbeats.is_online(i.id)).cloned().collect();
+        self.cache = list.clone();
+        list
+    }
+
+    pub fn get(&self, id: IslandId) -> Option<&Island> {
+        self.registry.get(id)
+    }
+
+    pub fn is_online(&self, id: IslandId) -> bool {
+        self.heartbeats.is_online(id)
+    }
+
+    /// Simulate a LIGHTHOUSE crash / recovery (E6 ablation).
+    pub fn kill(&mut self) {
+        self.alive = false;
+    }
+
+    pub fn revive(&mut self) {
+        self.alive = true;
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive
+    }
+
+    pub fn mint_token(&self, island: &Island, secret: u64) -> Token {
+        registry::attest(secret, island)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset_personal_group;
+
+    fn mesh() -> Lighthouse {
+        let mut lh = Lighthouse::new(42, 500.0, 3);
+        for island in preset_personal_group() {
+            assert!(matches!(lh.register_owned(island, 0.0), RegisterResult::Accepted(_)));
+        }
+        lh
+    }
+
+    #[test]
+    fn islands_returns_online_only() {
+        let mut lh = mesh();
+        assert_eq!(lh.islands().len(), 7);
+        // laptop (id 0) goes silent
+        for id in 1..7 {
+            lh.beat(IslandId(id), 2000.0);
+        }
+        lh.tick(2000.0);
+        let list = lh.islands();
+        assert_eq!(list.len(), 6);
+        assert!(!list.iter().any(|i| i.id == IslandId(0)));
+    }
+
+    #[test]
+    fn crash_serves_cached_list() {
+        let mut lh = mesh();
+        let before = lh.islands();
+        lh.kill();
+        // registry churn while down is invisible
+        lh.beat(IslandId(0), 9999.0);
+        let during = lh.islands();
+        assert_eq!(before.len(), during.len());
+        assert_eq!(lh.cache_serves, 1);
+        lh.revive();
+        assert!(lh.is_alive());
+    }
+
+    #[test]
+    fn rejected_islands_are_not_announced() {
+        let mut lh = Lighthouse::new(1, 500.0, 3);
+        let island = preset_personal_group().remove(0);
+        let id = island.id;
+        assert_eq!(lh.register(island, Token(123), 0.0), RegisterResult::RejectedBadAttestation);
+        assert!(!lh.is_online(id));
+        assert!(lh.islands().is_empty());
+    }
+
+    #[test]
+    fn dynamic_discovery_announces_new_island() {
+        let mut lh = mesh();
+        lh.tick(100.0);
+        let mut extra = preset_personal_group().remove(1);
+        extra.id = IslandId(77);
+        extra.name = "car-infotainment".to_string();
+        assert!(matches!(lh.register_owned(extra, 100.0), RegisterResult::Accepted(_)));
+        assert!(lh.islands().iter().any(|i| i.id == IslandId(77)));
+    }
+}

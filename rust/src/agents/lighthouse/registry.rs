@@ -1,0 +1,171 @@
+//! LIGHTHOUSE island registry: registration, attestation, trust composition.
+//!
+//! §III.B "Island Registration": each island declares privacy `P_j`, trust
+//! components (base/cert/jurisdiction → Eq. 2) and a cost model. §VIII.C
+//! Attack-2 mitigation: registration requires cryptographic attestation —
+//! personal islands use device-bound certificates, edge islands mutual TLS.
+//! We substitute a keyed-MAC token scheme (DESIGN.md §2): the mesh owner
+//! holds a secret; a registration is accepted only when its token equals
+//! `MAC(secret, island_name || declared_privacy || declared_tier)`, i.e.
+//! only islands provisioned by the owner can join, and a malicious island
+//! cannot inflate its declared trust without invalidating its token.
+
+use std::collections::BTreeMap;
+
+use crate::types::{Island, IslandId};
+
+/// Attestation token (keyed MAC over the registration claims).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Token(pub u64);
+
+/// Compute the registration MAC. FNV-based keyed hash — NOT cryptographic,
+/// standing in for TPM/Secure-Enclave device certificates (DESIGN.md §2);
+/// the *protocol logic* (claims bound to token, tamper → reject) is what the
+/// Attack-2 experiment exercises.
+pub fn attest(secret: u64, island: &Island) -> Token {
+    let mut h = 0xCBF2_9CE4_8422_2325u64 ^ secret.rotate_left(17);
+    let mut mix = |data: &[u8]| {
+        for &b in data {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01B3);
+        }
+    };
+    mix(island.name.as_bytes());
+    mix(&island.privacy.to_bits().to_le_bytes());
+    mix(&[island.tier.base_trust().to_bits() as u8]);
+    mix(&island.certification.score().to_bits().to_le_bytes());
+    mix(&island.jurisdiction.score().to_bits().to_le_bytes());
+    Token(h)
+}
+
+/// Registration outcome.
+#[derive(Debug, PartialEq)]
+pub enum RegisterResult {
+    Accepted(IslandId),
+    /// Attestation token did not match the claims (Attack 2).
+    RejectedBadAttestation,
+    /// An island with this id is already registered.
+    RejectedDuplicate,
+}
+
+/// The island registry (the LIGHTHOUSE allowlist).
+pub struct Registry {
+    secret: u64,
+    islands: BTreeMap<IslandId, Island>,
+}
+
+impl Registry {
+    pub fn new(secret: u64) -> Registry {
+        Registry { secret, islands: BTreeMap::new() }
+    }
+
+    /// Register an island; the owner must present a valid token over the
+    /// island's *declared* claims.
+    pub fn register(&mut self, island: Island, token: Token) -> RegisterResult {
+        if self.islands.contains_key(&island.id) {
+            return RegisterResult::RejectedDuplicate;
+        }
+        if attest(self.secret, &island) != token {
+            return RegisterResult::RejectedBadAttestation;
+        }
+        let id = island.id;
+        self.islands.insert(id, island);
+        RegisterResult::Accepted(id)
+    }
+
+    /// Provision + register in one step (owner-side convenience).
+    pub fn register_owned(&mut self, island: Island) -> RegisterResult {
+        let token = attest(self.secret, &island);
+        self.register(island, token)
+    }
+
+    pub fn deregister(&mut self, id: IslandId) -> Option<Island> {
+        self.islands.remove(&id)
+    }
+
+    pub fn get(&self, id: IslandId) -> Option<&Island> {
+        self.islands.get(&id)
+    }
+
+    pub fn islands(&self) -> impl Iterator<Item = &Island> {
+        self.islands.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.islands.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.islands.is_empty()
+    }
+
+    /// Snapshot of the current island list (the "cached island list" used
+    /// when LIGHTHOUSE is down, §IV.B).
+    pub fn snapshot(&self) -> Vec<Island> {
+        self.islands.values().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset_personal_group;
+
+    #[test]
+    fn owner_registration_accepted() {
+        let mut reg = Registry::new(0x5EC2E7);
+        for island in preset_personal_group() {
+            assert!(matches!(reg.register_owned(island), RegisterResult::Accepted(_)));
+        }
+        assert_eq!(reg.len(), 7);
+    }
+
+    #[test]
+    fn forged_token_rejected() {
+        let mut reg = Registry::new(1234);
+        let island = preset_personal_group().remove(0);
+        assert_eq!(reg.register(island, Token(0xDEAD_BEEF)), RegisterResult::RejectedBadAttestation);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn attack2_trust_inflation_invalidates_token() {
+        // Attacker gets a valid token for a low-trust island, then inflates
+        // the declared privacy before registering: token must not verify.
+        let mut reg = Registry::new(99);
+        let mut island = preset_personal_group().remove(5); // cloud island
+        let token = attest(99, &island);
+        island.privacy = 1.0; // forged claim: "I am as private as a laptop"
+        assert_eq!(reg.register(island, token), RegisterResult::RejectedBadAttestation);
+    }
+
+    #[test]
+    fn wrong_secret_cannot_mint_tokens() {
+        let mut reg = Registry::new(42);
+        let island = preset_personal_group().remove(0);
+        let forged = attest(43, &island); // attacker guesses wrong secret
+        assert_eq!(reg.register(island, forged), RegisterResult::RejectedBadAttestation);
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let mut reg = Registry::new(7);
+        let island = preset_personal_group().remove(0);
+        assert!(matches!(reg.register_owned(island.clone()), RegisterResult::Accepted(_)));
+        assert_eq!(reg.register_owned(island), RegisterResult::RejectedDuplicate);
+    }
+
+    #[test]
+    fn deregister_and_snapshot() {
+        let mut reg = Registry::new(7);
+        for island in preset_personal_group() {
+            reg.register_owned(island);
+        }
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), reg.len());
+        let id = snap[0].id;
+        assert!(reg.deregister(id).is_some());
+        assert!(reg.get(id).is_none());
+        assert_eq!(reg.len(), snap.len() - 1);
+    }
+}

@@ -1,0 +1,250 @@
+//! Entity detection for context sanitization (§VII.B "Detect sensitive
+//! entities in chat history using NER").
+//!
+//! The paper assumes an NER model; we substitute a gazetteer + regex
+//! detector (DESIGN.md §2) — the sanitization guarantee is *structural*
+//! (typed placeholders + bidirectional map), not a function of NER recall.
+//! Types are deliberately coarse (PERSON, LOCATION, ID, …) per the Attack-3
+//! mitigation: "Placeholder types are coarse-grained … reducing uniqueness."
+
+use once_cell::sync::Lazy;
+use regex::Regex;
+
+/// Coarse entity types → placeholder prefixes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum EntityKind {
+    Person,
+    Location,
+    Id,
+    Contact,
+    MedicalCondition,
+    Medication,
+    Temporal,
+    Financial,
+    Org,
+}
+
+impl EntityKind {
+    /// Placeholder prefix, e.g. PERSON in `[PERSON_7]`.
+    pub fn prefix(self) -> &'static str {
+        match self {
+            EntityKind::Person => "PERSON",
+            EntityKind::Location => "LOCATION",
+            EntityKind::Id => "ID",
+            EntityKind::Contact => "CONTACT",
+            EntityKind::MedicalCondition => "MEDICAL_CONDITION",
+            EntityKind::Medication => "MEDICATION",
+            EntityKind::Temporal => "TEMPORAL_REFERENCE",
+            EntityKind::Financial => "FINANCIAL",
+            EntityKind::Org => "ORG",
+        }
+    }
+
+    /// Sensitivity of revealing this entity kind (drives the Def. 4 rule
+    /// "entities with sensitivity > P_target are replaced").
+    pub fn sensitivity(self) -> f64 {
+        match self {
+            EntityKind::Id | EntityKind::Financial => 1.0,
+            EntityKind::MedicalCondition | EntityKind::Medication => 0.9,
+            EntityKind::Person | EntityKind::Contact => 0.8,
+            EntityKind::Location | EntityKind::Org => 0.6,
+            EntityKind::Temporal => 0.5,
+        }
+    }
+}
+
+/// A detected entity span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entity {
+    pub kind: EntityKind,
+    pub start: usize,
+    pub end: usize,
+    pub text: String,
+}
+
+// Gazetteers (mirrors substrate::trace word banks so traces exercise them).
+const FIRST_NAMES: &[&str] = &["john", "jane", "arun", "maria", "wei", "fatima", "alice", "bob", "carol", "david"];
+const LAST_NAMES: &[&str] = &["doe", "smith", "patel", "garcia", "chen", "khan", "jones", "müller"];
+const CITIES: &[&str] =
+    &["chicago", "mumbai", "berlin", "osaka", "lagos", "austin", "london", "paris", "delhi", "tokyo"];
+const CONDITIONS: &[&str] = &[
+    "diabetes", "hypertension", "asthma", "migraine", "anemia", "depression", "cancer", "neuropathy", "retinopathy",
+];
+const MEDICATIONS: &[&str] = &["metformin", "lisinopril", "insulin", "atorvastatin", "ibuprofen", "amoxicillin"];
+const ORGS: &[&str] = &["acme corp", "general hospital", "city clinic", "the firm"];
+
+static RE_ID: Lazy<Regex> =
+    Lazy::new(|| Regex::new(r"\b\d{3}-\d{2}-\d{4}\b|\b(?i:mrn)\s*[:#]?\s*\d{4,10}\b").unwrap());
+static RE_CONTACT: Lazy<Regex> = Lazy::new(|| {
+    Regex::new(r"(?i)\b[a-z0-9._%+-]+@[a-z0-9.-]+\.[a-z]{2,}\b|\b\d{3}[-. ]\d{3}[-. ]\d{4}\b").unwrap()
+});
+static RE_FINANCIAL: Lazy<Regex> = Lazy::new(|| {
+    Regex::new(r"\b\d{4}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b|(?i)\baccount\s*[:#]?\s*\d{8,12}\b").unwrap()
+});
+static RE_TEMPORAL: Lazy<Regex> = Lazy::new(|| {
+    Regex::new(r"(?i)\b\d{1,4}[-/]\d{1,2}[-/]\d{1,4}\b|\b(?:yesterday|tomorrow|last\s+\w+day|next\s+\w+day|on\s+(?:mon|tues|wednes|thurs|fri|satur|sun)day)\b").unwrap()
+})
+;
+static RE_AGE: Lazy<Regex> = Lazy::new(|| Regex::new(r"(?i)\b\d{1,3}[- ]?year[- ]?old\b").unwrap());
+
+fn find_gazetteer(text_lower: &str, terms: &[&str], kind: EntityKind, out: &mut Vec<Entity>, orig: &str) {
+    for term in terms {
+        let mut from = 0;
+        while let Some(pos) = text_lower[from..].find(term) {
+            let start = from + pos;
+            let end = start + term.len();
+            // word-boundary check
+            let before_ok = start == 0 || !text_lower.as_bytes()[start - 1].is_ascii_alphanumeric();
+            let after_ok = end >= text_lower.len() || !text_lower.as_bytes()[end].is_ascii_alphanumeric();
+            if before_ok && after_ok {
+                out.push(Entity { kind, start, end, text: orig[start..end].to_string() });
+            }
+            from = end;
+        }
+    }
+}
+
+/// Detect all entities in `text`. Overlapping detections are resolved by
+/// (earliest start, longest span, highest sensitivity).
+pub fn detect(text: &str) -> Vec<Entity> {
+    let lower = text.to_lowercase();
+    let mut out = Vec::new();
+
+    // Person: first name optionally followed by a known last name; merge.
+    for first in FIRST_NAMES {
+        let mut from = 0;
+        while let Some(pos) = lower[from..].find(first) {
+            let start = from + pos;
+            let mut end = start + first.len();
+            let before_ok = start == 0 || !lower.as_bytes()[start - 1].is_ascii_alphanumeric();
+            let mut after_ok = end >= lower.len() || !lower.as_bytes()[end].is_ascii_alphanumeric();
+            if before_ok && after_ok {
+                // try to extend over "first last"
+                if end < lower.len() {
+                    let rest = &lower[end..];
+                    for last in LAST_NAMES {
+                        if rest.starts_with(' ') && rest[1..].starts_with(last) {
+                            let e2 = end + 1 + last.len();
+                            if e2 >= lower.len() || !lower.as_bytes()[e2].is_ascii_alphanumeric() {
+                                end = e2;
+                                break;
+                            }
+                        }
+                    }
+                }
+                after_ok = end >= lower.len() || !lower.as_bytes()[end].is_ascii_alphanumeric();
+                if after_ok {
+                    out.push(Entity { kind: EntityKind::Person, start, end, text: text[start..end].to_string() });
+                }
+            }
+            from = end.max(start + 1);
+        }
+    }
+    find_gazetteer(&lower, CITIES, EntityKind::Location, &mut out, text);
+    find_gazetteer(&lower, CONDITIONS, EntityKind::MedicalCondition, &mut out, text);
+    find_gazetteer(&lower, MEDICATIONS, EntityKind::Medication, &mut out, text);
+    find_gazetteer(&lower, ORGS, EntityKind::Org, &mut out, text);
+    for (re, kind) in [
+        (&*RE_ID, EntityKind::Id),
+        (&*RE_CONTACT, EntityKind::Contact),
+        (&*RE_FINANCIAL, EntityKind::Financial),
+        (&*RE_TEMPORAL, EntityKind::Temporal),
+        (&*RE_AGE, EntityKind::Id),
+    ] {
+        for m in re.find_iter(text) {
+            out.push(Entity { kind, start: m.start(), end: m.end(), text: m.as_str().to_string() });
+        }
+    }
+
+    // Resolve overlaps: sort by (start, -len, -sensitivity) and drop spans
+    // overlapping an accepted one.
+    out.sort_by(|a, b| {
+        a.start
+            .cmp(&b.start)
+            .then((b.end - b.start).cmp(&(a.end - a.start)))
+            .then(b.kind.sensitivity().partial_cmp(&a.kind.sensitivity()).unwrap())
+    });
+    let mut accepted: Vec<Entity> = Vec::new();
+    for e in out {
+        if accepted.iter().all(|a| e.start >= a.end || e.end <= a.start) {
+            accepted.push(e);
+        }
+    }
+    accepted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(text: &str) -> Vec<EntityKind> {
+        detect(text).into_iter().map(|e| e.kind).collect()
+    }
+
+    #[test]
+    fn detects_full_names() {
+        let es = detect("Patient John Doe visited yesterday");
+        let person = es.iter().find(|e| e.kind == EntityKind::Person).unwrap();
+        assert_eq!(person.text, "John Doe");
+        assert!(es.iter().any(|e| e.kind == EntityKind::Temporal));
+    }
+
+    #[test]
+    fn detects_paper_motivating_example_entities() {
+        // §I.A: "45-year-old diabetic patient with elevated HbA1c"
+        let es = detect("Analyze treatment options for 45-year-old diabetic patient with elevated HbA1c");
+        assert!(es.iter().any(|e| e.kind == EntityKind::Id && e.text.contains("45")), "{es:?}"); // age
+        // "diabetic" is not in the gazetteer, but "diabetes" variants are
+        // covered by Stage-1; MedicalCondition here catches base forms.
+    }
+
+    #[test]
+    fn detects_ids_contacts_financial() {
+        assert!(kinds("ssn 123-45-6789").contains(&EntityKind::Id));
+        assert!(kinds("mail a@b.co now").contains(&EntityKind::Contact));
+        assert!(kinds("card 4111 1111 1111 1111").contains(&EntityKind::Financial));
+    }
+
+    #[test]
+    fn detects_medical() {
+        let ks = kinds("diagnosed with diabetes, prescribed metformin");
+        assert!(ks.contains(&EntityKind::MedicalCondition));
+        assert!(ks.contains(&EntityKind::Medication));
+    }
+
+    #[test]
+    fn locations_and_orgs() {
+        let ks = kinds("the chicago office of acme corp");
+        assert!(ks.contains(&EntityKind::Location));
+        assert!(ks.contains(&EntityKind::Org));
+    }
+
+    #[test]
+    fn no_overlapping_spans() {
+        let es = detect("patient john doe ssn 123-45-6789 in chicago on 2024-01-05");
+        for (i, a) in es.iter().enumerate() {
+            for b in es.iter().skip(i + 1) {
+                assert!(a.end <= b.start || b.end <= a.start, "{a:?} overlaps {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        // "weird" contains "wei" (first name); must not match mid-word
+        assert!(kinds("that is weird indeed").is_empty());
+        // "journey" must not trip "jo..." names
+        assert!(!kinds("our journey begins").contains(&EntityKind::Person));
+    }
+
+    #[test]
+    fn clean_text_yields_nothing() {
+        assert!(detect("explain how rust ownership works").is_empty());
+    }
+
+    #[test]
+    fn sensitivity_ordering() {
+        assert!(EntityKind::Id.sensitivity() > EntityKind::Person.sensitivity());
+        assert!(EntityKind::Person.sensitivity() > EntityKind::Temporal.sensitivity());
+    }
+}

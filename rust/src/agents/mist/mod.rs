@@ -1,0 +1,226 @@
+//! MIST — Multi-level Intelligent Sensitivity Tracker (§VII).
+//!
+//! Two-stage sensitivity pipeline:
+//!   Stage 1: regex pattern matching ([`patterns`]) establishing regulatory
+//!            floors (PII ≥ 0.8, HIPAA/financial ≥ 0.9).
+//!   Stage 2: contextual classification into public/internal/confidential/
+//!            restricted (0.2/0.5/0.8/1.0). The paper uses a local small
+//!            language model; ours is the AOT-compiled n-gram MLP served via
+//!            PJRT ([`Stage2::Classifier`]), with a keyword heuristic
+//!            ([`Stage2::Heuristic`]) for pure-simulation experiments.
+//!
+//! Final score: `s_r = max(stage1_floor, stage2_score)`.
+//!
+//! Fault tolerance (§IV.B): if Stage 2 fails (engine down), MIST assumes
+//! `s_r = 1.0` — all data sensitive, the conservative fallback.
+//!
+//! Sanitization (τ/φ of Def. 4) lives in [`sanitize`]; entity detection in
+//! [`entities`].
+
+pub mod entities;
+pub mod patterns;
+pub mod sanitize;
+
+use crate::runtime::EngineHandle;
+use crate::types::Request;
+
+/// Stage-2 classifier backend.
+pub enum Stage2 {
+    /// AOT classifier artifact via the PJRT engine (production path).
+    Classifier(EngineHandle),
+    /// Keyword heuristic (fast path for large simulations).
+    Heuristic,
+    /// Simulated failure: every Stage-2 call errors (for the §IV.B
+    /// fail-conservative tests and the E6 ablation).
+    Broken,
+}
+
+/// Sensitivity classes (Stage-2 output), §VII.A Stage 2.
+pub const CLASS_SENSITIVITY: [f64; 4] = [0.2, 0.5, 0.8, 1.0];
+
+/// Full analysis result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SensitivityReport {
+    /// Final s_r for the *current prompt* — the routing constraint.
+    pub score: f64,
+    /// Stage-1 regulatory floor (0.0 when no pattern matched).
+    pub stage1_floor: f64,
+    /// Stage-2 class index (0..4) if the classifier ran.
+    pub stage2_class: Option<usize>,
+    /// Max sensitivity found in the chat history. NOT folded into `score`:
+    /// per §I.A / §VII.B, a general follow-up after a sensitive topic may
+    /// still route to lower-trust islands — the history is protected by the
+    /// τ sanitization on the trust-boundary crossing, not by routing.
+    pub history_score: f64,
+    /// True when the conservative fallback (s_r = 1) was applied.
+    pub failed_closed: bool,
+}
+
+/// The MIST agent.
+pub struct Mist {
+    stage2: Stage2,
+}
+
+impl Mist {
+    pub fn new(stage2: Stage2) -> Mist {
+        Mist { stage2 }
+    }
+
+    /// Heuristic-only MIST for simulations.
+    pub fn heuristic() -> Mist {
+        Mist::new(Stage2::Heuristic)
+    }
+
+    /// Analyze a text's sensitivity (both stages).
+    pub fn analyze_text(&self, text: &str) -> SensitivityReport {
+        let floor = patterns::stage1_floor(text);
+        match self.stage2_score(text) {
+            Ok((class, s2)) => SensitivityReport {
+                score: floor.max(s2),
+                stage1_floor: floor,
+                stage2_class: Some(class),
+                history_score: 0.0,
+                failed_closed: false,
+            },
+            Err(_) => SensitivityReport {
+                // §IV.B: MIST crash → assume all data sensitive.
+                score: 1.0,
+                stage1_floor: floor,
+                stage2_class: None,
+                history_score: 0.0,
+                failed_closed: true,
+            },
+        }
+    }
+
+    /// Analyze a request. The routing score (`score`) comes from the
+    /// current prompt; history sensitivity is reported separately
+    /// (`history_score`) and protected by sanitization on trust-boundary
+    /// crossings rather than by the routing constraint (§I.A, §VII.B).
+    pub fn analyze(&self, request: &Request) -> SensitivityReport {
+        let mut report = self.analyze_text(&request.prompt);
+        for turn in &request.history {
+            let r = self.analyze_text(&turn.text);
+            report.history_score = report.history_score.max(r.score);
+            report.failed_closed |= r.failed_closed;
+        }
+        if report.failed_closed {
+            report.score = 1.0;
+        }
+        report
+    }
+
+    fn stage2_score(&self, text: &str) -> anyhow::Result<(usize, f64)> {
+        match &self.stage2 {
+            Stage2::Classifier(engine) => {
+                let probs = engine.classify(vec![text.to_string()])?;
+                let row = probs.first().ok_or_else(|| anyhow::anyhow!("empty classifier output"))?;
+                let class = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(3);
+                Ok((class, CLASS_SENSITIVITY[class.min(3)]))
+            }
+            Stage2::Heuristic => {
+                let class = heuristic_class(text);
+                Ok((class, CLASS_SENSITIVITY[class]))
+            }
+            Stage2::Broken => Err(anyhow::anyhow!("stage2 classifier unavailable")),
+        }
+    }
+}
+
+/// Keyword heuristic mirroring the classifier's training distribution
+/// (substrate::trace templates): restricted > confidential > internal >
+/// public.
+fn heuristic_class(text: &str) -> usize {
+    let t = text.to_lowercase();
+    let restricted = ["patient", "ssn", "mrn", "hba1c", "wire transfer", "card 4", "routing"];
+    let confidential = ["@", "salary", "offer letter", "my name is", "candidate", "invoice", "ip 10."];
+    let internal = [
+        "standup", "sync", "sprint", "migration", "agenda", "onboarding", "refactor", "team", "literature",
+        "guidelines", "estimate effort",
+    ];
+    if restricted.iter().any(|k| t.contains(k)) {
+        3
+    } else if confidential.iter().any(|k| t.contains(k)) {
+        2
+    } else if internal.iter().any(|k| t.contains(k)) {
+        1
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Role, Turn};
+
+    #[test]
+    fn phi_text_scores_restricted() {
+        let mist = Mist::heuristic();
+        let r = mist.analyze_text("patient john doe ssn 123-45-6789 diagnosed with diabetes");
+        assert!(r.score >= 0.9, "{r:?}");
+        assert_eq!(r.stage2_class, Some(3));
+        assert!(!r.failed_closed);
+    }
+
+    #[test]
+    fn public_text_scores_low() {
+        let mist = Mist::heuristic();
+        let r = mist.analyze_text("what is the capital of france");
+        assert_eq!(r.score, 0.2);
+        assert_eq!(r.stage1_floor, 0.0);
+    }
+
+    #[test]
+    fn internal_text_scores_half() {
+        let mist = Mist::heuristic();
+        let r = mist.analyze_text("draft the agenda for the platform team standup");
+        assert_eq!(r.score, 0.5);
+    }
+
+    #[test]
+    fn stage1_floor_dominates_lenient_stage2() {
+        let mist = Mist::heuristic();
+        // no restricted keywords but contains an email: floor 0.8 wins
+        let r = mist.analyze_text("send the doc to a@b.co when ready");
+        assert!(r.score >= 0.8, "{r:?}");
+        assert_eq!(r.stage1_floor, 0.8);
+    }
+
+    #[test]
+    fn broken_stage2_fails_closed() {
+        let mist = Mist::new(Stage2::Broken);
+        let r = mist.analyze_text("what is the capital of france");
+        assert_eq!(r.score, 1.0);
+        assert!(r.failed_closed);
+    }
+
+    #[test]
+    fn history_reported_separately_from_routing_score() {
+        // §VII.B challenge: a general follow-up after a sensitive topic may
+        // still route broadly — the history is protected by sanitization.
+        let mist = Mist::heuristic();
+        let req = Request::new(1, "what are the usual next steps").with_history(vec![Turn {
+            role: Role::User,
+            text: "patient john doe ssn 123-45-6789 has elevated hba1c".to_string(),
+        }]);
+        let r = mist.analyze(&req);
+        assert!(r.score <= 0.3, "prompt itself is benign: {r:?}");
+        assert!(r.history_score >= 0.9, "history sensitivity must be surfaced: {r:?}");
+    }
+
+    #[test]
+    fn motivating_example_scores() {
+        // §I.A: sensitive query s_r = 0.9 (high), general query s_r ≈ 0.3
+        let mist = Mist::heuristic();
+        let sensitive = mist.analyze_text("Analyze treatment options for 45-year-old diabetic patient with elevated HbA1c");
+        assert!(sensitive.score >= 0.9, "{sensitive:?}");
+        let general = mist.analyze_text("What are common complications of long term conditions?");
+        assert!(general.score <= 0.3, "{general:?}");
+    }
+}

@@ -1,0 +1,227 @@
+//! MIST Stage-1: regex pattern matching (§VII.A).
+//!
+//! ~50 compiled patterns across three regulated categories, each imposing a
+//! sensitivity *floor* on the request:
+//!
+//! - PII (email, phone, SSN, IP, passport, plates, …)    → s_r ≥ 0.8
+//! - HIPAA (diagnoses, medications, MRN, ICD codes, …)   → s_r ≥ 0.9
+//! - Financial (cards, IBAN, routing numbers, crypto, …) → s_r ≥ 0.9
+//!
+//! The set size (m ≈ 50) matches the paper's §VI.B complexity analysis
+//! (`O(|q|·m)`; <10 ms routing at n<10, m≈50 — benchmarked in E7).
+
+use once_cell::sync::Lazy;
+use regex::Regex;
+
+/// Pattern category with its sensitivity floor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    Pii,
+    Hipaa,
+    Financial,
+}
+
+impl Category {
+    /// §VII.A sensitivity floors.
+    pub fn floor(self) -> f64 {
+        match self {
+            Category::Pii => 0.8,
+            Category::Hipaa => 0.9,
+            Category::Financial => 0.9,
+        }
+    }
+}
+
+/// One compiled Stage-1 pattern.
+pub struct Pattern {
+    pub name: &'static str,
+    pub category: Category,
+    pub regex: Regex,
+}
+
+/// A Stage-1 match found in a request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Match {
+    pub pattern: &'static str,
+    pub category: Category,
+    pub start: usize,
+    pub end: usize,
+}
+
+macro_rules! patterns {
+    ($(($name:literal, $cat:expr, $re:literal)),+ $(,)?) => {
+        vec![$(Pattern { name: $name, category: $cat, regex: Regex::new($re).expect($name) }),+]
+    };
+}
+
+/// The full Stage-1 pattern set (m ≈ 50).
+pub static PATTERNS: Lazy<Vec<Pattern>> = Lazy::new(|| {
+    use Category::*;
+    patterns![
+        // ---------------- PII ----------------
+        ("email", Pii, r"(?i)\b[a-z0-9._%+-]+@[a-z0-9.-]+\.[a-z]{2,}\b"),
+        ("phone-us", Pii, r"\b\d{3}[-. ]\d{3}[-. ]\d{4}\b"),
+        ("phone-intl", Pii, r"\+\d{1,3}[ -]?\d{2,4}[ -]?\d{3,4}[ -]?\d{3,4}\b"),
+        ("ssn", Pii, r"\b\d{3}-\d{2}-\d{4}\b"),
+        ("ipv4", Pii, r"\b(?:\d{1,3}\.){3}\d{1,3}\b"),
+        ("ipv6", Pii, r"(?i)\b(?:[0-9a-f]{1,4}:){3,7}[0-9a-f]{1,4}\b"),
+        ("mac-addr", Pii, r"(?i)\b(?:[0-9a-f]{2}:){5}[0-9a-f]{2}\b"),
+        ("passport", Pii, r"(?i)\bpassport\s*(?:no\.?|number)?\s*[:#]?\s*[a-z]?\d{7,9}\b"),
+        ("drivers-license", Pii, r"(?i)\b(?:driver'?s?\s+licen[sc]e|dl)\s*[:#]?\s*[a-z]?\d{6,9}\b"),
+        ("plate", Pii, r"(?i)\blicense\s+plate\s*[:#]?\s*[a-z0-9-]{5,8}\b"),
+        ("dob", Pii, r"(?i)\b(?:dob|date\s+of\s+birth)\s*[:#]?\s*\d{1,4}[-/]\d{1,2}[-/]\d{1,4}\b"),
+        ("street-address", Pii, r"(?i)\b\d{1,5}\s+[a-z]+\s+(?:st|street|ave|avenue|rd|road|blvd|lane|ln|dr|drive)\b"),
+        ("zip+4", Pii, r"\b\d{5}-\d{4}\b"),
+        ("geo-coord", Pii, r"-?\d{1,3}\.\d{4,},\s*-?\d{1,3}\.\d{4,}"),
+        ("aadhaar", Pii, r"\b\d{4}\s\d{4}\s\d{4}\b"),
+        ("national-id", Pii, r"(?i)\bnational\s+id\s*[:#]?\s*\d{6,12}\b"),
+        ("username-handle", Pii, r"(?i)\bmy\s+(?:name|username)\s+is\s+[a-z][a-z .'-]{2,40}\b"),
+        ("api-key", Pii, r"\b(?:sk|pk|api)[-_](?:live|test)?[-_]?[A-Za-z0-9]{16,}\b"),
+        ("password-assign", Pii, r"(?i)\bpassword\s*[:=]\s*\S{6,}"),
+        ("ssh-key", Pii, r"ssh-(?:rsa|ed25519)\s+[A-Za-z0-9+/=]{40,}"),
+        // ---------------- HIPAA / PHI ----------------
+        ("patient-kw", Hipaa, r"(?i)\bpatient\b"),
+        ("mrn", Hipaa, r"(?i)\bmrn\s*[:#]?\s*\d{4,10}\b"),
+        ("icd10", Hipaa, r"(?i)\b[a-tv-z]\d{2}(?:\.\d{1,4})?\b\s*(?:code|diagnos)"),
+        ("diagnosis-kw", Hipaa, r"(?i)\bdiagnos(?:is|ed|tic)\b"),
+        ("prescription", Hipaa, r"(?i)\bprescri(?:bed?|ption)\b"),
+        ("dosage", Hipaa, r"(?i)\b\d+\s*(?:mg|mcg|ml|units?)\s+(?:daily|twice|bid|tid|qid|per\s+day)\b"),
+        ("med-metformin", Hipaa, r"(?i)\bmetformin\b"),
+        ("med-insulin", Hipaa, r"(?i)\binsulin\b"),
+        ("med-lisinopril", Hipaa, r"(?i)\blisinopril\b"),
+        ("med-atorvastatin", Hipaa, r"(?i)\batorvastatin\b"),
+        ("hba1c", Hipaa, r"(?i)\bhba1c\b"),
+        ("blood-pressure", Hipaa, r"\b\d{2,3}/\d{2,3}\s*(?:mmhg|bp)\b"),
+        ("lab-result", Hipaa, r"(?i)\b(?:glucose|cholesterol|a1c|creatinine)\s+(?:level|result)s?\b"),
+        ("condition-diabetes", Hipaa, r"(?i)\bdiabet(?:es|ic)\b"),
+        ("condition-hypertension", Hipaa, r"(?i)\bhypertension\b"),
+        ("condition-cancer", Hipaa, r"(?i)\b(?:cancer|oncolog|chemotherapy)\b"),
+        ("condition-hiv", Hipaa, r"(?i)\bhiv(?:\s+positive)?\b"),
+        ("condition-mental", Hipaa, r"(?i)\b(?:depression|anxiety\s+disorder|schizophrenia|bipolar)\b"),
+        ("symptom-report", Hipaa, r"(?i)\bsymptoms?\s+(?:of|include|analysis)\b"),
+        ("treatment-plan", Hipaa, r"(?i)\btreatment\s+(?:options?|plan)\b"),
+        ("health-insurance-id", Hipaa, r"(?i)\b(?:member|policy)\s+id\s*[:#]?\s*[a-z0-9]{6,14}\b"),
+        // ---------------- Financial ----------------
+        ("card-visa", Financial, r"\b4\d{3}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b"),
+        ("card-mc", Financial, r"\b5[1-5]\d{2}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b"),
+        ("card-amex", Financial, r"\b3[47]\d{2}[- ]?\d{6}[- ]?\d{5}\b"),
+        ("cvv", Financial, r"(?i)\bcvv2?\s*[:#]?\s*\d{3,4}\b"),
+        ("iban", Financial, r"\b[A-Z]{2}\d{2}[A-Z0-9]{11,30}\b"),
+        ("swift", Financial, r"(?i)\bswift\s*(?:code)?\s*[:#]?\s*[a-z]{6}[a-z0-9]{2,5}\b"),
+        ("routing-number", Financial, r"(?i)\brouting\s*(?:no\.?|number)?\s*[:#]?\s*\d{9}\b"),
+        ("account-number", Financial, r"(?i)\baccount\s*(?:no\.?|number)?\s*[:#]?\s*\d{8,12}\b"),
+        ("wire-transfer", Financial, r"(?i)\bwire\s+transfer\b"),
+        ("salary", Financial, r"(?i)\bsalary\s+(?:review|of|is)\b"),
+        ("crypto-btc", Financial, r"\b(?:bc1|[13])[a-km-zA-HJ-NP-Z1-9]{25,42}\b"),
+        ("tax-ein", Financial, r"\b\d{2}-\d{7}\b"),
+    ]
+});
+
+/// Scan text, returning every Stage-1 match.
+pub fn scan(text: &str) -> Vec<Match> {
+    let mut out = Vec::new();
+    for p in PATTERNS.iter() {
+        for m in p.regex.find_iter(text) {
+            out.push(Match { pattern: p.name, category: p.category, start: m.start(), end: m.end() });
+        }
+    }
+    out
+}
+
+/// Is this HIPAA pattern mere *content* (a condition/medication mention)
+/// rather than patient *context* (identifiers, prescriptions, diagnoses)?
+/// Content alone — e.g. a literature search naming a disease — floors at
+/// 0.5 (private-edge tolerable, §III.D Scenario B); any context match
+/// raises the floor to the full 0.9.
+fn is_hipaa_content_only(name: &str) -> bool {
+    name.starts_with("condition-") || name.starts_with("med-") || name == "hba1c" || name == "lab-result"
+}
+
+/// Stage-1 sensitivity floor for the text: max category floor over matches,
+/// 0.0 when clean. HIPAA condition/medication mentions without patient
+/// context floor at 0.5 instead of 0.9 (see [`is_hipaa_content_only`]).
+pub fn stage1_floor(text: &str) -> f64 {
+    let matches = scan(text);
+    let mut floor: f64 = 0.0;
+    for m in &matches {
+        let f = if m.category == Category::Hipaa && is_hipaa_content_only(m.pattern) { 0.5 } else { m.category.floor() };
+        floor = floor.max(f);
+    }
+    floor
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_count_near_paper_m() {
+        // §VI.B assumes m ≈ 50
+        let m = PATTERNS.len();
+        assert!((45..=60).contains(&m), "m={m}");
+    }
+
+    #[test]
+    fn pii_floors() {
+        assert_eq!(stage1_floor("contact me at jane@example.com"), 0.8);
+        assert_eq!(stage1_floor("call 555-123-4567 tomorrow"), 0.8);
+        assert_eq!(stage1_floor("my ip is 10.0.0.12"), 0.8);
+    }
+
+    #[test]
+    fn hipaa_floors_dominate() {
+        assert_eq!(stage1_floor("patient diagnosed with diabetes"), 0.9);
+        assert_eq!(stage1_floor("prescribed metformin 500 mg daily"), 0.9);
+        assert_eq!(stage1_floor("ssn 123-45-6789 of a patient"), 0.9); // max(0.8, 0.9)
+    }
+
+    #[test]
+    fn condition_mention_without_patient_context_floors_at_half() {
+        // §III.D Scenario B: literature searches are moderate sensitivity
+        assert_eq!(stage1_floor("search medical literature for diabetes guidelines"), 0.5);
+        assert_eq!(stage1_floor("how does insulin regulate glucose"), 0.5);
+        // adding patient context restores the full floor
+        assert_eq!(stage1_floor("patient needs insulin"), 0.9);
+    }
+
+    #[test]
+    fn financial_floors() {
+        assert_eq!(stage1_floor("charge card 4111-1111-1111-1234"), 0.9);
+        assert_eq!(stage1_floor("wire transfer from account 1234567890"), 0.9);
+        assert_eq!(stage1_floor("routing number 021000021"), 0.9);
+    }
+
+    #[test]
+    fn clean_text_scores_zero() {
+        for text in [
+            "what is the capital of france",
+            "explain how rust ownership works",
+            "write a haiku about islands",
+        ] {
+            assert_eq!(stage1_floor(text), 0.0, "{text}");
+        }
+    }
+
+    #[test]
+    fn match_positions_are_correct() {
+        let text = "email: a@b.co end";
+        let ms = scan(text);
+        let email = ms.iter().find(|m| m.pattern == "email").unwrap();
+        assert_eq!(&text[email.start..email.end], "a@b.co");
+    }
+
+    #[test]
+    fn multiple_matches_reported() {
+        let ms = scan("patient jane, ssn 123-45-6789, card 4111 1111 1111 1111");
+        let cats: std::collections::HashSet<_> = ms.iter().map(|m| m.category).collect();
+        assert!(cats.contains(&Category::Pii));
+        assert!(cats.contains(&Category::Hipaa));
+        assert!(cats.contains(&Category::Financial));
+    }
+
+    #[test]
+    fn case_insensitive_where_expected() {
+        assert_eq!(stage1_floor("PATIENT WITH HYPERTENSION"), 0.9);
+        assert_eq!(stage1_floor("Email ME at X@Y.ORG"), 0.8);
+    }
+}

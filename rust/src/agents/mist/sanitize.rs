@@ -1,0 +1,241 @@
+//! Typed-placeholder sanitization with reversible bidirectional mapping —
+//! the paper's Def. 4 transformation τ and mapping φ (§VII.B).
+//!
+//! Forward pass: detected entities whose kind-sensitivity exceeds the target
+//! island's privacy score are replaced by typed placeholders
+//! (`[PERSON_483]`), preserving semantic structure so the remote LLM can
+//! still reason about entity relationships. The same entity value always
+//! maps to the same placeholder *within a session* (coherence across turns),
+//! while identifier numbers are drawn from a session-seeded RNG
+//! (Attack-3 mitigation: mappings are not comparable across sessions).
+//!
+//! Backward pass: placeholders in the island's response are resolved back to
+//! the original values before the user sees them.
+
+use std::collections::HashMap;
+
+use once_cell::sync::Lazy;
+use regex::Regex;
+
+use crate::agents::mist::entities::{detect, EntityKind};
+use crate::types::{Role, Turn};
+use crate::util::Rng;
+
+/// Session-scoped bidirectional placeholder map (φ).
+#[derive(Clone, Debug)]
+pub struct PlaceholderMap {
+    forward: HashMap<String, String>, // entity value -> placeholder
+    reverse: HashMap<String, String>, // placeholder -> entity value
+    rng: Rng,
+}
+
+static RE_PLACEHOLDER: Lazy<Regex> = Lazy::new(|| Regex::new(r"\[[A-Z][A-Z_]*_\d+\]").unwrap());
+
+impl PlaceholderMap {
+    /// Create a map for one session. Different sessions must use different
+    /// seeds (the session store derives them from the session id).
+    pub fn new(session_seed: u64) -> PlaceholderMap {
+        PlaceholderMap { forward: HashMap::new(), reverse: HashMap::new(), rng: Rng::new(session_seed) }
+    }
+
+    /// Number of distinct entities currently mapped.
+    pub fn len(&self) -> usize {
+        self.forward.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.forward.is_empty()
+    }
+
+    fn placeholder_for(&mut self, kind: EntityKind, value: &str) -> String {
+        // normalize the key so "John Doe" and "john doe" share a placeholder
+        let key = value.to_lowercase();
+        if let Some(p) = self.forward.get(&key) {
+            return p.clone();
+        }
+        // random, session-scoped identifier; retry on (unlikely) collision
+        loop {
+            let id = self.rng.range_u64(1, 1000);
+            let placeholder = format!("[{}_{}]", kind.prefix(), id);
+            if !self.reverse.contains_key(&placeholder) {
+                self.forward.insert(key, placeholder.clone());
+                self.reverse.insert(placeholder.clone(), value.to_string());
+                return placeholder;
+            }
+        }
+    }
+
+    /// Forward transformation τ: replace entities with sensitivity above
+    /// `target_privacy` by typed placeholders.
+    pub fn sanitize(&mut self, text: &str, target_privacy: f64) -> String {
+        let entities = detect(text);
+        let mut out = String::with_capacity(text.len());
+        let mut cursor = 0;
+        for e in entities {
+            if e.kind.sensitivity() <= target_privacy {
+                continue; // safe to reveal at this trust level
+            }
+            out.push_str(&text[cursor..e.start]);
+            let p = self.placeholder_for(e.kind, &e.text);
+            out.push_str(&p);
+            cursor = e.end;
+        }
+        out.push_str(&text[cursor..]);
+        out
+    }
+
+    /// Backward pass: restore original values for every known placeholder in
+    /// a response. Unknown placeholders are left intact (the island may have
+    /// invented one; surfacing it beats hallucinating a value).
+    pub fn desanitize(&self, text: &str) -> String {
+        RE_PLACEHOLDER
+            .replace_all(text, |caps: &regex::Captures<'_>| {
+                let p = caps.get(0).unwrap().as_str();
+                self.reverse.get(p).cloned().unwrap_or_else(|| p.to_string())
+            })
+            .into_owned()
+    }
+
+    /// Verify PII(h') = ∅ for the Def. 4 guarantee: after sanitization at
+    /// `target_privacy`, no detectable entity above that level remains.
+    pub fn verify_clean(text: &str, target_privacy: f64) -> bool {
+        detect(text).iter().all(|e| e.kind.sensitivity() <= target_privacy)
+    }
+}
+
+/// Sanitize a whole chat history (Algorithm 1 line 15:
+/// `h'_r ← MIST.Sanitize(h_r, P_i*)`).
+pub fn sanitize_history(history: &[Turn], target_privacy: f64, map: &mut PlaceholderMap) -> Vec<Turn> {
+    history
+        .iter()
+        .map(|t| Turn { role: t.role, text: map.sanitize(&t.text, target_privacy) })
+        .collect()
+}
+
+/// Convenience constructor for history turns in tests/examples.
+pub fn turn(role: Role, text: &str) -> Turn {
+    Turn { role, text: text.to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_examples_round_trip() {
+        // §VII.B: "Patient John Doe" → "Patient [PERSON_x]",
+        //         "Chicago hospital" → "[LOCATION_y] hospital"
+        let mut map = PlaceholderMap::new(42);
+        let s = map.sanitize("Patient John Doe was admitted to the Chicago hospital", 0.4);
+        assert!(!s.contains("John"), "{s}");
+        assert!(!s.contains("Chicago"), "{s}");
+        assert!(s.contains("[PERSON_"), "{s}");
+        assert!(s.contains("[LOCATION_"), "{s}");
+        // backward pass restores the original values
+        let restored = map.desanitize(&s);
+        assert!(restored.contains("John Doe"));
+        assert!(restored.contains("Chicago"));
+    }
+
+    #[test]
+    fn response_with_placeholder_is_resolved() {
+        // §VII.B backward pass: cloud answers "[PERSON_1] should consult..."
+        let mut map = PlaceholderMap::new(1);
+        let s = map.sanitize("john doe has diabetes", 0.4);
+        let person_ph = s.split_whitespace().find(|w| w.starts_with("[PERSON_")).unwrap();
+        let response = format!("{person_ph} should consult a specialist");
+        assert_eq!(map.desanitize(&response), "john doe should consult a specialist");
+    }
+
+    #[test]
+    fn same_entity_same_placeholder_within_session() {
+        let mut map = PlaceholderMap::new(7);
+        let a = map.sanitize("john doe called", 0.4);
+        let b = map.sanitize("call John Doe back", 0.4);
+        let pa = a.split_whitespace().next().unwrap();
+        assert!(b.contains(pa), "a={a} b={b}");
+        assert_eq!(map.len(), 1);
+    }
+
+    #[test]
+    fn different_sessions_different_identifiers() {
+        // Attack-3 mitigation: per-session random ids
+        let mut m1 = PlaceholderMap::new(100);
+        let mut m2 = PlaceholderMap::new(200);
+        let mut diff = 0;
+        for text in ["john doe", "jane smith", "arun patel", "maria garcia", "wei chen"] {
+            let a = m1.sanitize(text, 0.4);
+            let b = m2.sanitize(text, 0.4);
+            if a != b {
+                diff += 1;
+            }
+        }
+        assert!(diff >= 3, "sessions should disagree on most ids, diff={diff}");
+    }
+
+    #[test]
+    fn sensitivity_threshold_gates_replacement() {
+        let mut map = PlaceholderMap::new(3);
+        let text = "meet in chicago on 2024-01-05";
+        // Location sens = 0.6, Temporal = 0.5.
+        // At P=0.8 (private edge): nothing replaced.
+        assert_eq!(map.sanitize(text, 0.8), text);
+        // At P=0.55: location replaced, temporal kept.
+        let mid = map.sanitize(text, 0.55);
+        assert!(mid.contains("[LOCATION_") && mid.contains("2024-01-05"), "{mid}");
+        // At P=0.4 (cloud): both replaced.
+        let low = map.sanitize(text, 0.4);
+        assert!(low.contains("[LOCATION_") && low.contains("[TEMPORAL_REFERENCE_"), "{low}");
+    }
+
+    #[test]
+    fn sanitized_text_verifies_clean() {
+        let mut map = PlaceholderMap::new(11);
+        let dirty = "patient john doe ssn 123-45-6789 prescribed metformin in chicago";
+        let clean = map.sanitize(dirty, 0.4);
+        assert!(PlaceholderMap::verify_clean(&clean, 0.4), "{clean}");
+        assert!(!PlaceholderMap::verify_clean(dirty, 0.4));
+    }
+
+    #[test]
+    fn unknown_placeholders_left_intact() {
+        let map = PlaceholderMap::new(5);
+        assert_eq!(map.desanitize("ask [PERSON_999] about it"), "ask [PERSON_999] about it");
+    }
+
+    #[test]
+    fn history_sanitization_applies_per_turn() {
+        let mut map = PlaceholderMap::new(13);
+        let history = vec![
+            turn(Role::User, "patient john doe has diabetes"),
+            turn(Role::Assistant, "john doe should monitor glucose"),
+            turn(Role::User, "what are general complications"),
+        ];
+        let clean = sanitize_history(&history, 0.4, &mut map);
+        assert_eq!(clean.len(), 3);
+        assert!(!clean[0].text.contains("john"));
+        assert!(!clean[1].text.contains("john"));
+        // same placeholder across turns (coherence)
+        let p0 = clean[0].text.split_whitespace().find(|w| w.starts_with("[PERSON_")).unwrap().to_string();
+        assert!(clean[1].text.contains(&p0));
+        assert_eq!(clean[2].text, "what are general complications");
+    }
+
+    #[test]
+    fn idempotent_on_clean_text() {
+        let mut map = PlaceholderMap::new(17);
+        let text = "explain how rust ownership works";
+        assert_eq!(map.sanitize(text, 0.4), text);
+        assert!(map.is_empty());
+    }
+
+    #[test]
+    fn desanitize_is_inverse_even_with_multiple_entities() {
+        let mut map = PlaceholderMap::new(23);
+        let orig = "jane smith met arun patel in berlin";
+        let s = map.sanitize(orig, 0.4);
+        // all three entities replaced
+        assert_eq!(s.matches('[').count(), 3, "{s}");
+        assert_eq!(map.desanitize(&s), orig);
+    }
+}

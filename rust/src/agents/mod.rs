@@ -1,0 +1,67 @@
+//! The four cooperating agents of the IslandRun universe (§IV):
+//!
+//! - [`mist`]       — Multi-level Intelligent Sensitivity Tracker (privacy)
+//! - [`tide`]       — Temporal Island Demand Evaluator (resources)
+//! - [`waves`]      — Weighted Agent-based Variance Equilibration System
+//!   (multi-objective routing)
+//! - [`lighthouse`] — Link and Health Tracking (mesh topology, registry)
+//!
+//! SHORE and HORIZON are *execution endpoints* (islands), not agents —
+//! they live in [`crate::islands`].
+//!
+//! §IV.C standardized agent interface: every optimization dimension exposes
+//! `score(request, island) -> [0,1]` (lower is better). WAVES aggregates
+//! registered scorers into Eq. 1 plus any extension terms, which is how new
+//! objectives (e.g. carbon intensity) are added without touching the router
+//! (tested in `waves::router` and ablated in E6).
+
+pub mod lighthouse;
+pub mod mist;
+pub mod tide;
+pub mod waves;
+
+use crate::types::{Island, Request};
+
+/// §IV.C agent interface: objective-specific score in [0,1], lower better.
+pub trait Scorer: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn score(&self, request: &Request, island: &Island) -> f64;
+}
+
+/// Example extension agent (§IV "Extensibility": carbon footprint): scores
+/// islands by a static grams-CO2-per-request estimate, normalized.
+pub struct CarbonScorer;
+
+impl Scorer for CarbonScorer {
+    fn name(&self) -> &'static str {
+        "carbon"
+    }
+
+    fn score(&self, _request: &Request, island: &Island) -> f64 {
+        // Personal devices amortize embodied carbon; cloud burns datacenter
+        // power + WAN transit. Numbers are illustrative (the paper leaves
+        // carbon to future work; we implement it as the extensibility demo).
+        match island.tier {
+            crate::types::TrustTier::Personal => 0.1,
+            crate::types::TrustTier::PrivateEdge => 0.4,
+            crate::types::TrustTier::Cloud => 0.9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset_personal_group;
+
+    #[test]
+    fn carbon_scorer_orders_tiers() {
+        let islands = preset_personal_group();
+        let r = Request::new(0, "hello");
+        let personal = CarbonScorer.score(&r, &islands[0]);
+        let edge = CarbonScorer.score(&r, &islands[4]);
+        let cloud = CarbonScorer.score(&r, &islands[5]);
+        assert!(personal < edge && edge < cloud);
+        assert!((0.0..=1.0).contains(&personal) && (0.0..=1.0).contains(&cloud));
+    }
+}

@@ -1,0 +1,105 @@
+//! §IX.C hysteresis-based fallback: a two-threshold state machine that
+//! prevents route flapping when capacity hovers near the offload threshold.
+//!
+//!   - Fallback:  R < `low`  (paper: 70%) → prefer cloud
+//!   - Recovery:  R > `high` (paper: 80%) → prefer local again
+//!
+//! The `high - low` dead zone (paper: 10%) absorbs transient spikes; E10
+//! measures flap counts with and without it.
+
+/// Current routing preference produced by the state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preference {
+    Local,
+    Cloud,
+}
+
+/// Two-threshold hysteresis state machine.
+#[derive(Clone, Debug)]
+pub struct Hysteresis {
+    low: f64,
+    high: f64,
+    state: Preference,
+    transitions: u64,
+}
+
+impl Hysteresis {
+    /// Build with paper defaults low=0.70, high=0.80 via `Config`.
+    pub fn new(low: f64, high: f64) -> Hysteresis {
+        assert!(low <= high, "hysteresis requires low <= high");
+        Hysteresis { low, high, state: Preference::Local, transitions: 0 }
+    }
+
+    /// Degenerate no-dead-zone variant (ablation: low == high).
+    pub fn without_dead_zone(threshold: f64) -> Hysteresis {
+        Hysteresis::new(threshold, threshold)
+    }
+
+    /// Feed a capacity sample R ∈ [0,1]; returns the (possibly updated)
+    /// preference.
+    pub fn observe(&mut self, capacity: f64) -> Preference {
+        let next = match self.state {
+            Preference::Local if capacity < self.low => Preference::Cloud,
+            Preference::Cloud if capacity > self.high => Preference::Local,
+            s => s,
+        };
+        if next != self.state {
+            self.transitions += 1;
+            self.state = next;
+        }
+        self.state
+    }
+
+    pub fn state(&self) -> Preference {
+        self.state
+    }
+
+    /// Total number of local↔cloud flips observed (E10 metric).
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_thresholds_behavior() {
+        let mut h = Hysteresis::new(0.70, 0.80);
+        assert_eq!(h.observe(0.90), Preference::Local);
+        assert_eq!(h.observe(0.75), Preference::Local); // inside dead zone
+        assert_eq!(h.observe(0.65), Preference::Cloud); // below fallback
+        assert_eq!(h.observe(0.75), Preference::Cloud); // dead zone holds cloud
+        assert_eq!(h.observe(0.85), Preference::Local); // above recovery
+        assert_eq!(h.transitions(), 2);
+    }
+
+    #[test]
+    fn dead_zone_prevents_flapping() {
+        // capacity oscillates inside the dead zone: 0.72 ↔ 0.78
+        let mut with = Hysteresis::new(0.70, 0.80);
+        let mut without = Hysteresis::without_dead_zone(0.75);
+        for i in 0..100 {
+            let r = if i % 2 == 0 { 0.72 } else { 0.78 };
+            with.observe(r);
+            without.observe(r);
+        }
+        assert_eq!(with.transitions(), 0, "dead zone must absorb oscillation");
+        assert!(without.transitions() > 90, "no dead zone should flap: {}", without.transitions());
+    }
+
+    #[test]
+    fn boundary_values_do_not_transition() {
+        let mut h = Hysteresis::new(0.70, 0.80);
+        assert_eq!(h.observe(0.70), Preference::Local); // strictly-less required
+        h.observe(0.60); // now cloud
+        assert_eq!(h.observe(0.80), Preference::Cloud); // strictly-greater required
+    }
+
+    #[test]
+    #[should_panic(expected = "low <= high")]
+    fn inverted_thresholds_rejected() {
+        Hysteresis::new(0.9, 0.1);
+    }
+}

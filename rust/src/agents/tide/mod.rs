@@ -1,0 +1,166 @@
+//! TIDE — Temporal Island Demand Evaluator (§IX).
+//!
+//! Monitors computational capacity (Eq. 3) on a sampling period, maintains
+//! the §IX.C hysteresis preference and the exhaustion [`predictor`], and
+//! exposes `capacity()` to WAVES (Algorithm 1 line 2).
+//!
+//! Fault tolerance (§IV.B): a crashed TIDE reports `R = 0` — resources
+//! exhausted, the conservative fallback that pushes work to other islands
+//! rather than overloading a blind local device (tested below and ablated
+//! in E6 — "No TIDE: request failures, local island OOM, no fallback").
+
+pub mod hysteresis;
+pub mod monitor;
+pub mod predictor;
+
+use crate::config::Config;
+use hysteresis::{Hysteresis, Preference};
+use monitor::{MetricsSource, Sample};
+use predictor::Predictor;
+
+/// The TIDE agent for one (local) island.
+pub struct Tide {
+    source: Option<MetricsSource>,
+    hysteresis: Hysteresis,
+    predictor: Predictor,
+    period_ms: f64,
+    last_sample: Option<Sample>,
+    last_sample_t: f64,
+    now_ms: f64,
+}
+
+impl Tide {
+    pub fn new(config: &Config, source: MetricsSource) -> Tide {
+        Tide {
+            source: Some(source),
+            hysteresis: Hysteresis::new(config.hysteresis_low, config.hysteresis_high),
+            predictor: Predictor::new(0.4),
+            period_ms: config.tide_period_ms as f64,
+            last_sample: None,
+            last_sample_t: f64::NEG_INFINITY,
+            now_ms: 0.0,
+        }
+    }
+
+    /// Simulate an agent crash (§IV.B / E6 ablation).
+    pub fn kill(&mut self) {
+        self.source = None;
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.source.is_some()
+    }
+
+    /// Advance virtual time and resample if the period has elapsed.
+    pub fn tick(&mut self, now_ms: f64) {
+        self.now_ms = now_ms;
+        if now_ms - self.last_sample_t < self.period_ms {
+            return;
+        }
+        if let Some(src) = self.source.as_mut() {
+            let s = src.sample(now_ms);
+            self.last_sample = Some(s);
+            self.last_sample_t = now_ms;
+            self.predictor.observe(now_ms, s.capacity());
+            self.hysteresis.observe(s.capacity());
+        }
+    }
+
+    /// Current available capacity R(t). Dead TIDE → 0.0 (fail conservative).
+    pub fn capacity(&self) -> f64 {
+        if self.source.is_none() {
+            return 0.0;
+        }
+        self.last_sample.map(|s| s.capacity()).unwrap_or(1.0)
+    }
+
+    /// Hysteresis routing preference (E10).
+    pub fn preference(&self) -> Preference {
+        if self.source.is_none() {
+            return Preference::Cloud;
+        }
+        self.hysteresis.state()
+    }
+
+    pub fn flaps(&self) -> u64 {
+        self.hysteresis.transitions()
+    }
+
+    /// Proactive-offload signal: predicted capacity below `buffer` within
+    /// one sampling horizon.
+    pub fn exhaustion_imminent(&self, buffer: f64) -> bool {
+        if self.source.is_none() {
+            return true;
+        }
+        self.predictor.exhaustion_imminent(self.period_ms, buffer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use monitor::LoadProgram;
+
+    fn tide_with(p: LoadProgram) -> Tide {
+        let mut cfg = Config::default();
+        cfg.tide_period_ms = 100;
+        Tide::new(&cfg, MetricsSource::synthetic(p))
+    }
+
+    #[test]
+    fn tracks_constant_load() {
+        let mut t = tide_with(LoadProgram::constant(0.25));
+        for step in 0..10 {
+            t.tick(step as f64 * 100.0);
+        }
+        assert!((t.capacity() - 0.75).abs() < 1e-9);
+        // R = 0.75 sits inside the 0.70/0.80 dead zone: stays Local
+        assert_eq!(t.preference(), Preference::Local);
+        // §IX.C: R = 0.6 < 0.70 flips the preference to Cloud
+        let mut t2 = tide_with(LoadProgram::constant(0.4));
+        t2.tick(0.0);
+        assert_eq!(t2.preference(), Preference::Cloud);
+    }
+
+    #[test]
+    fn heavy_load_prefers_cloud() {
+        let mut t = tide_with(LoadProgram::constant(0.95));
+        for step in 0..5 {
+            t.tick(step as f64 * 100.0);
+        }
+        assert!(t.capacity() < 0.1);
+        assert_eq!(t.preference(), Preference::Cloud);
+    }
+
+    #[test]
+    fn killed_tide_fails_conservative() {
+        let mut t = tide_with(LoadProgram::constant(0.0));
+        t.tick(0.0);
+        assert_eq!(t.capacity(), 1.0);
+        t.kill();
+        assert_eq!(t.capacity(), 0.0);
+        assert_eq!(t.preference(), Preference::Cloud);
+        assert!(t.exhaustion_imminent(0.2));
+        assert!(!t.is_alive());
+    }
+
+    #[test]
+    fn ramp_triggers_exhaustion_prediction() {
+        let mut t = tide_with(LoadProgram::ramp(0.2, 1.0, 1000.0));
+        for step in 0..11 {
+            t.tick(step as f64 * 100.0);
+        }
+        assert!(t.exhaustion_imminent(0.3));
+    }
+
+    #[test]
+    fn respects_sampling_period() {
+        let mut t = tide_with(LoadProgram::ramp(0.0, 1.0, 1000.0));
+        t.tick(0.0);
+        let c0 = t.capacity();
+        t.tick(10.0); // before the period elapses: no resample
+        assert_eq!(t.capacity(), c0);
+        t.tick(150.0);
+        assert!(t.capacity() < c0);
+    }
+}

@@ -1,0 +1,217 @@
+//! TIDE resource sampling: Eq. 3 capacity from CPU/GPU/memory utilization.
+//!
+//!   R_local(t) = 1 - max(CPU(t)/100, GPU(t)/100, Mem(t)/Total)
+//!
+//! Two metric sources:
+//! - [`MetricsSource::Proc`] reads real `/proc/stat` + `/proc/meminfo`
+//!   (keeps the real-system path honest; used by `islandrun serve`),
+//! - [`MetricsSource::Synthetic`] replays a deterministic load program
+//!   (what every experiment uses — load must be *controllable*).
+
+use std::fs;
+
+/// One utilization sample, each component in [0,1].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sample {
+    pub cpu: f64,
+    pub gpu: f64,
+    pub mem: f64,
+}
+
+impl Sample {
+    /// Eq. 3: available capacity.
+    pub fn capacity(&self) -> f64 {
+        1.0 - self.cpu.max(self.gpu).max(self.mem).clamp(0.0, 1.0)
+    }
+}
+
+/// A synthetic load program: piecewise-linear utilization over time.
+#[derive(Clone, Debug)]
+pub struct LoadProgram {
+    /// (t_ms, utilization) knots, sorted by time; linear in between;
+    /// clamped at the ends.
+    pub knots: Vec<(f64, f64)>,
+}
+
+impl LoadProgram {
+    pub fn constant(u: f64) -> LoadProgram {
+        LoadProgram { knots: vec![(0.0, u)] }
+    }
+
+    /// Oscillating load around `mid` with amplitude `amp` and period ms —
+    /// drives the E10 hysteresis experiment.
+    pub fn oscillating(mid: f64, amp: f64, period_ms: f64, total_ms: f64) -> LoadProgram {
+        let mut knots = Vec::new();
+        let mut t = 0.0;
+        let mut up = true;
+        while t <= total_ms {
+            knots.push((t, if up { mid + amp } else { mid - amp }));
+            up = !up;
+            t += period_ms / 2.0;
+        }
+        LoadProgram { knots }
+    }
+
+    /// Ramp from u0 to u1 over the window (exhaustion prediction tests).
+    pub fn ramp(u0: f64, u1: f64, total_ms: f64) -> LoadProgram {
+        LoadProgram { knots: vec![(0.0, u0), (total_ms, u1)] }
+    }
+
+    /// Utilization at time t (ms).
+    pub fn at(&self, t_ms: f64) -> f64 {
+        match self.knots.len() {
+            0 => 0.0,
+            1 => self.knots[0].1,
+            _ => {
+                if t_ms <= self.knots[0].0 {
+                    return self.knots[0].1.clamp(0.0, 1.0);
+                }
+                for w in self.knots.windows(2) {
+                    let (t0, u0) = w[0];
+                    let (t1, u1) = w[1];
+                    if t_ms >= t0 && t_ms <= t1 {
+                        let f = if t1 > t0 { (t_ms - t0) / (t1 - t0) } else { 0.0 };
+                        return (u0 + f * (u1 - u0)).clamp(0.0, 1.0);
+                    }
+                }
+                self.knots.last().unwrap().1.clamp(0.0, 1.0)
+            }
+        }
+    }
+}
+
+/// Where samples come from.
+pub enum MetricsSource {
+    /// Real /proc on linux. CPU utilization is measured between calls
+    /// (first call returns 0 load), GPU is assumed 0 (no GPU on this image).
+    Proc(ProcState),
+    /// Deterministic synthetic program driven by virtual time.
+    Synthetic(LoadProgram),
+}
+
+/// Book-keeping for /proc/stat deltas.
+#[derive(Default)]
+pub struct ProcState {
+    last_total: u64,
+    last_idle: u64,
+}
+
+impl MetricsSource {
+    pub fn synthetic(p: LoadProgram) -> MetricsSource {
+        MetricsSource::Synthetic(p)
+    }
+
+    pub fn proc() -> MetricsSource {
+        MetricsSource::Proc(ProcState::default())
+    }
+
+    /// Sample utilization at virtual time `t_ms` (ignored by Proc).
+    pub fn sample(&mut self, t_ms: f64) -> Sample {
+        match self {
+            MetricsSource::Synthetic(p) => {
+                let u = p.at(t_ms);
+                Sample { cpu: u, gpu: u * 0.9, mem: u * 0.6 }
+            }
+            MetricsSource::Proc(state) => sample_proc(state),
+        }
+    }
+}
+
+fn sample_proc(state: &mut ProcState) -> Sample {
+    let cpu = (|| -> Option<f64> {
+        let stat = fs::read_to_string("/proc/stat").ok()?;
+        let line = stat.lines().next()?;
+        let fields: Vec<u64> = line.split_whitespace().skip(1).filter_map(|x| x.parse().ok()).collect();
+        if fields.len() < 4 {
+            return None;
+        }
+        let idle = fields[3] + fields.get(4).copied().unwrap_or(0);
+        let total: u64 = fields.iter().sum();
+        let (dt, di) = (total.saturating_sub(state.last_total), idle.saturating_sub(state.last_idle));
+        state.last_total = total;
+        state.last_idle = idle;
+        if dt == 0 {
+            return Some(0.0);
+        }
+        Some(1.0 - di as f64 / dt as f64)
+    })()
+    .unwrap_or(0.0);
+
+    let mem = (|| -> Option<f64> {
+        let info = fs::read_to_string("/proc/meminfo").ok()?;
+        let get = |key: &str| -> Option<f64> {
+            info.lines().find(|l| l.starts_with(key))?.split_whitespace().nth(1)?.parse().ok()
+        };
+        let total = get("MemTotal:")?;
+        let avail = get("MemAvailable:")?;
+        Some(1.0 - avail / total)
+    })()
+    .unwrap_or(0.0);
+
+    Sample { cpu: cpu.clamp(0.0, 1.0), gpu: 0.0, mem: mem.clamp(0.0, 1.0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_capacity_takes_max_component() {
+        let s = Sample { cpu: 0.2, gpu: 0.7, mem: 0.4 };
+        assert!((s.capacity() - 0.3).abs() < 1e-12);
+        let idle = Sample { cpu: 0.0, gpu: 0.0, mem: 0.0 };
+        assert_eq!(idle.capacity(), 1.0);
+        let full = Sample { cpu: 1.0, gpu: 0.0, mem: 0.0 };
+        assert_eq!(full.capacity(), 0.0);
+    }
+
+    #[test]
+    fn capacity_clamps_out_of_range() {
+        let s = Sample { cpu: 1.5, gpu: 0.0, mem: 0.0 };
+        assert_eq!(s.capacity(), 0.0);
+    }
+
+    #[test]
+    fn constant_program() {
+        let p = LoadProgram::constant(0.6);
+        assert_eq!(p.at(0.0), 0.6);
+        assert_eq!(p.at(1e6), 0.6);
+    }
+
+    #[test]
+    fn ramp_interpolates() {
+        let p = LoadProgram::ramp(0.0, 1.0, 1000.0);
+        assert!((p.at(500.0) - 0.5).abs() < 1e-9);
+        assert_eq!(p.at(-10.0), 0.0);
+        assert_eq!(p.at(2000.0), 1.0);
+    }
+
+    #[test]
+    fn oscillation_alternates() {
+        let p = LoadProgram::oscillating(0.5, 0.3, 200.0, 1000.0);
+        assert!((p.at(0.0) - 0.8).abs() < 1e-9);
+        assert!((p.at(100.0) - 0.2).abs() < 1e-9);
+        assert!((p.at(200.0) - 0.8).abs() < 1e-9);
+        // midpoint between knots interpolates through mid
+        assert!((p.at(50.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn synthetic_source_couples_components() {
+        let mut src = MetricsSource::synthetic(LoadProgram::constant(0.5));
+        let s = src.sample(0.0);
+        assert_eq!(s.cpu, 0.5);
+        assert!(s.gpu < s.cpu && s.mem < s.gpu);
+    }
+
+    #[test]
+    fn proc_source_returns_sane_values() {
+        let mut src = MetricsSource::proc();
+        let _ = src.sample(0.0);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let s = src.sample(0.0);
+        assert!((0.0..=1.0).contains(&s.cpu), "{s:?}");
+        assert!((0.0..=1.0).contains(&s.mem), "{s:?}");
+        assert!(s.capacity() >= 0.0 && s.capacity() <= 1.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Exhaustion prediction (§IV: TIDE "predict[s] when local capacity will be
+//! exhausted and trigger[s] proactive offloading").
+//!
+//! EWMA-smoothed capacity + EWMA slope extrapolation: predict capacity at
+//! `horizon_ms` ahead; when the prediction falls below the configured buffer
+//! threshold, TIDE signals proactive offload *before* the island actually
+//! saturates (Attack-4 mitigation also keys off this).
+
+/// EWMA capacity trend predictor.
+#[derive(Clone, Debug)]
+pub struct Predictor {
+    alpha: f64,
+    level: Option<f64>,
+    slope_per_ms: f64,
+    last_t: f64,
+}
+
+impl Predictor {
+    /// `alpha` is the EWMA smoothing factor in (0,1]; higher = more reactive.
+    pub fn new(alpha: f64) -> Predictor {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        Predictor { alpha, level: None, slope_per_ms: 0.0, last_t: 0.0 }
+    }
+
+    /// Feed a (t_ms, capacity) observation.
+    pub fn observe(&mut self, t_ms: f64, capacity: f64) {
+        match self.level {
+            None => {
+                self.level = Some(capacity);
+                self.last_t = t_ms;
+            }
+            Some(level) => {
+                let dt = (t_ms - self.last_t).max(1e-9);
+                let inst_slope = (capacity - level) / dt;
+                self.slope_per_ms = self.alpha * inst_slope + (1.0 - self.alpha) * self.slope_per_ms;
+                self.level = Some(self.alpha * capacity + (1.0 - self.alpha) * level);
+                self.last_t = t_ms;
+            }
+        }
+    }
+
+    /// Predicted capacity `horizon_ms` after the last observation (clamped).
+    pub fn predict(&self, horizon_ms: f64) -> f64 {
+        let level = self.level.unwrap_or(1.0);
+        (level + self.slope_per_ms * horizon_ms).clamp(0.0, 1.0)
+    }
+
+    /// Will capacity fall below `buffer` within the horizon?
+    pub fn exhaustion_imminent(&self, horizon_ms: f64, buffer: f64) -> bool {
+        self.predict(horizon_ms) < buffer
+    }
+
+    /// Current smoothed capacity (1.0 before any observation).
+    pub fn level(&self) -> f64 {
+        self.level.unwrap_or(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_capacity_predicts_itself() {
+        let mut p = Predictor::new(0.5);
+        for t in 0..20 {
+            p.observe(t as f64 * 100.0, 0.6);
+        }
+        assert!((p.predict(1000.0) - 0.6).abs() < 0.05);
+        assert!(!p.exhaustion_imminent(1000.0, 0.3));
+    }
+
+    #[test]
+    fn declining_capacity_predicts_exhaustion() {
+        let mut p = Predictor::new(0.5);
+        // capacity dropping 0.9 -> 0.5 over 2s: slope -0.0002/ms
+        for t in 0..21 {
+            p.observe(t as f64 * 100.0, 0.9 - 0.02 * t as f64);
+        }
+        assert!(p.predict(2000.0) < 0.25, "pred={}", p.predict(2000.0));
+        assert!(p.exhaustion_imminent(2000.0, 0.3));
+    }
+
+    #[test]
+    fn rising_capacity_not_imminent() {
+        let mut p = Predictor::new(0.5);
+        for t in 0..21 {
+            p.observe(t as f64 * 100.0, 0.3 + 0.02 * t as f64);
+        }
+        assert!(!p.exhaustion_imminent(2000.0, 0.3));
+    }
+
+    #[test]
+    fn prediction_clamped() {
+        let mut p = Predictor::new(1.0);
+        p.observe(0.0, 0.5);
+        p.observe(100.0, 0.1);
+        assert_eq!(p.predict(1e9), 0.0);
+        let mut q = Predictor::new(1.0);
+        q.observe(0.0, 0.5);
+        q.observe(100.0, 0.9);
+        assert_eq!(q.predict(1e9), 1.0);
+    }
+
+    #[test]
+    fn unobserved_predictor_assumes_full_capacity() {
+        let p = Predictor::new(0.3);
+        assert_eq!(p.level(), 1.0);
+        assert_eq!(p.predict(500.0), 1.0);
+    }
+}

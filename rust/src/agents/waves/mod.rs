@@ -1,0 +1,13 @@
+//! WAVES — Weighted Agent-based Variance Equilibration System (§VI).
+//!
+//! The multi-objective router: Eq. 1 scalarization ([`scoring`]), the
+//! §VI.C constraint-based alternative, Pareto-front verification
+//! ([`pareto`]), §IX.B priority-tier admission ([`tiers`]) and Algorithm 1
+//! itself ([`router`]).
+
+pub mod pareto;
+pub mod router;
+pub mod scoring;
+pub mod tiers;
+
+pub use router::{Decision, IslandState, Routed, Waves};

@@ -1,0 +1,108 @@
+//! Pareto-front utilities (§II.C / §VI.C).
+//!
+//! The greedy Eq. 1 scalarization picks one point; these helpers compute the
+//! actual non-dominated set over (cost, latency, 1−privacy) so tests and the
+//! eval harness can verify the §VI.C property: *for strictly positive
+//! weights, the scalarized argmin is Pareto-optimal*.
+
+use crate::agents::waves::scoring::ScoreParts;
+use crate::types::{Island, IslandId};
+
+/// One candidate point in objective space.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub id: IslandId,
+    pub cost: f64,
+    pub latency: f64,
+    pub privacy_penalty: f64,
+}
+
+impl Point {
+    pub fn of(island: &Island, tokens: usize) -> Point {
+        let p = ScoreParts::compute(island, tokens);
+        Point { id: island.id, cost: p.cost, latency: p.latency, privacy_penalty: p.privacy_penalty }
+    }
+
+    /// Does `self` dominate `other` (≤ in all objectives, < in at least one)?
+    pub fn dominates(&self, other: &Point) -> bool {
+        let le = self.cost <= other.cost && self.latency <= other.latency && self.privacy_penalty <= other.privacy_penalty;
+        let lt = self.cost < other.cost || self.latency < other.latency || self.privacy_penalty < other.privacy_penalty;
+        le && lt
+    }
+}
+
+/// Non-dominated subset (the Pareto front). O(n²) — fine for n ≤ dozens of
+/// islands (§VI.B assumes n < 10).
+pub fn pareto_front(points: &[Point]) -> Vec<Point> {
+    points
+        .iter()
+        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .copied()
+        .collect()
+}
+
+/// Is `id` on the front?
+pub fn on_front(points: &[Point], id: IslandId) -> bool {
+    pareto_front(points).iter().any(|p| p.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(id: u32, c: f64, l: f64, p: f64) -> Point {
+        Point { id: IslandId(id), cost: c, latency: l, privacy_penalty: p }
+    }
+
+    #[test]
+    fn dominance_definition() {
+        let a = pt(0, 0.1, 0.1, 0.1);
+        let b = pt(1, 0.2, 0.2, 0.2);
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        // equal points do not dominate each other
+        let c = pt(2, 0.1, 0.1, 0.1);
+        assert!(!a.dominates(&c) && !c.dominates(&a));
+    }
+
+    #[test]
+    fn front_excludes_dominated() {
+        let pts =
+            vec![pt(0, 0.0, 0.5, 0.5), pt(1, 0.5, 0.0, 0.5), pt(2, 0.5, 0.5, 0.0), pt(3, 0.6, 0.6, 0.6)];
+        let front = pareto_front(&pts);
+        assert_eq!(front.len(), 3);
+        assert!(!on_front(&pts, IslandId(3)));
+    }
+
+    #[test]
+    fn incomparable_points_all_on_front() {
+        let pts = vec![pt(0, 0.1, 0.9, 0.5), pt(1, 0.9, 0.1, 0.5), pt(2, 0.5, 0.5, 0.1)];
+        assert_eq!(pareto_front(&pts).len(), 3);
+    }
+
+    #[test]
+    fn scalarized_argmin_is_on_front_for_positive_weights() {
+        // §VI.C property, checked exhaustively over a random cloud of points
+        use crate::util::Rng;
+        let mut rng = Rng::new(99);
+        for _ in 0..100 {
+            let pts: Vec<Point> =
+                (0..8).map(|i| pt(i, rng.f64(), rng.f64(), rng.f64())).collect();
+            let (w1, w2, w3) = (0.2 + rng.f64(), 0.2 + rng.f64(), 0.2 + rng.f64());
+            let best = pts
+                .iter()
+                .min_by(|a, b| {
+                    let sa = w1 * a.cost + w2 * a.latency + w3 * a.privacy_penalty;
+                    let sb = w1 * b.cost + w2 * b.latency + w3 * b.privacy_penalty;
+                    sa.partial_cmp(&sb).unwrap()
+                })
+                .unwrap();
+            assert!(on_front(&pts, best.id), "argmin must be Pareto-optimal");
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(pareto_front(&[]).is_empty());
+    }
+}

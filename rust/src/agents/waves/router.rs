@@ -1,0 +1,514 @@
+//! WAVES multi-objective router — Algorithm 1.
+//!
+//! Pipeline per request (Fig. 2 route-then-sanitize):
+//!  1. privacy filter `P_j ≥ s_r` (Def. 3, fail-closed on empty set),
+//!  2. data-locality filter (Guarantee 3: requests needing dataset D run
+//!     only where D lives),
+//!  3. §IX.B priority-tier admission given local capacity,
+//!  4. capacity / battery / budget / hysteresis feasibility,
+//!  5. Eq. 1 argmin (or §VI.C constraint-mode latency argmin) plus any
+//!     registered extension scorers,
+//!  6. sanitize decision for trust-boundary crossings (Alg. 1 lines 14–17).
+//!
+//! Fail-closed (§III.C): when no island satisfies the privacy constraint the
+//! request is *rejected*, never silently degraded. When privacy-eligible
+//! islands exist but none has capacity, Algorithm 1 line 11's failsafe
+//! applies: queue on the best local island.
+
+use crate::agents::waves::scoring::{self, ScoreParts};
+use crate::agents::waves::tiers::{self, Admission};
+use crate::agents::Scorer;
+use crate::agents::tide::hysteresis::Preference;
+use crate::config::{Config, RouterMode};
+use crate::types::{Island, IslandId, LinkKind, Request};
+
+/// Dynamic view of one island at routing time.
+#[derive(Clone, Debug)]
+pub struct IslandState {
+    pub island: Island,
+    /// Available capacity R_j(t) in [0,1]; unbounded islands report 1.0.
+    pub capacity: f64,
+}
+
+/// Why a request was routed where it was (experiment reporting / audit log).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Routed {
+    pub target: IslandId,
+    pub score: f64,
+    /// Must the chat context be sanitized before transmission?
+    pub sanitize: bool,
+    /// Privacy score of the selected island (drives sanitization level).
+    pub target_privacy: f64,
+    pub admission: Admission,
+}
+
+/// Routing outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    Route(Routed),
+    /// Algorithm 1 line 11: no capacity anywhere eligible — queue locally.
+    FailsafeLocal(Routed),
+    /// Fail-closed rejection (privacy or data-locality unsatisfiable).
+    Reject { reason: String },
+}
+
+impl Decision {
+    pub fn target(&self) -> Option<IslandId> {
+        match self {
+            Decision::Route(r) | Decision::FailsafeLocal(r) => Some(r.target),
+            Decision::Reject { .. } => None,
+        }
+    }
+
+    pub fn routed(&self) -> Option<&Routed> {
+        match self {
+            Decision::Route(r) | Decision::FailsafeLocal(r) => Some(r),
+            Decision::Reject { .. } => None,
+        }
+    }
+}
+
+/// The WAVES router.
+pub struct Waves {
+    pub config: Config,
+    /// Extension scorers: (agent, weight) — §IV extensibility hook.
+    scorers: Vec<(Box<dyn Scorer>, f64)>,
+}
+
+/// Battery floor below which battery-powered islands are avoided when any
+/// alternative exists (Scenario 2: hiking friends).
+const BATTERY_FLOOR: f64 = 0.25;
+
+impl Waves {
+    pub fn new(config: Config) -> Waves {
+        Waves { config, scorers: Vec::new() }
+    }
+
+    /// Register an extension objective (e.g. [`crate::agents::CarbonScorer`])
+    /// with a weight; no router changes required (§IV).
+    pub fn add_scorer(&mut self, scorer: Box<dyn Scorer>, weight: f64) {
+        self.scorers.push((scorer, weight));
+    }
+
+    fn total_score(&self, request: &Request, island: &Island) -> f64 {
+        let tokens = request.token_estimate();
+        let base = match self.config.mode {
+            RouterMode::Scalarized => scoring::eq1_score(island, tokens, &self.config.weights),
+            // §VI.C constraint-based: among feasible, minimize latency only.
+            RouterMode::ConstraintBased => ScoreParts::compute(island, tokens).latency,
+        };
+        let ext: f64 = self.scorers.iter().map(|(s, w)| w * s.score(request, island)).sum();
+        base + ext
+    }
+
+    /// Algorithm 1. `s_r` comes from MIST (caller owns the MIST instance so
+    /// a dead MIST's conservative fallback is visible upstream);
+    /// `local_capacity` and `pref` come from TIDE; `states` from LIGHTHOUSE.
+    /// `budget_left` is the user's remaining spend (cost agent).
+    pub fn route(
+        &self,
+        request: &Request,
+        s_r: f64,
+        states: &[IslandState],
+        local_capacity: f64,
+        pref: Preference,
+        budget_left: f64,
+    ) -> Decision {
+        // -- 1. privacy constraint (Def. 3): fail-closed on violation
+        let eligible: Vec<&IslandState> = states.iter().filter(|s| s.island.privacy >= s_r).collect();
+        if eligible.is_empty() {
+            return Decision::Reject {
+                reason: format!("no island satisfies privacy constraint P_j >= {s_r:.2} (fail-closed)"),
+            };
+        }
+
+        // -- 2. data locality (Guarantee 3)
+        let eligible: Vec<&IslandState> = match &request.required_dataset {
+            Some(ds) => {
+                let with: Vec<&IslandState> = eligible.iter().filter(|s| s.island.has_dataset(ds)).copied().collect();
+                if with.is_empty() {
+                    return Decision::Reject {
+                        reason: format!("dataset '{ds}' not present on any privacy-eligible island"),
+                    };
+                }
+                with
+            }
+            None => eligible,
+        };
+
+        // -- 2b. §XIV heterogeneous model support: restrict to islands that
+        // advertise the required model family (fail-closed like datasets —
+        // there is no point routing to an island that cannot serve it).
+        let eligible: Vec<&IslandState> = match &request.required_model {
+            Some(model) => {
+                let with: Vec<&IslandState> =
+                    eligible.iter().filter(|s| s.island.serves_model(model)).copied().collect();
+                if with.is_empty() {
+                    return Decision::Reject { reason: format!("model '{model}' not served by any eligible island") };
+                }
+                with
+            }
+            None => eligible,
+        };
+
+        // -- 2c. §XIV regulatory compliance: jurisdiction floor. Like the
+        // privacy constraint this is inviolable (GDPR-class workloads must
+        // not land on low-jurisdiction islands even under pressure).
+        let eligible: Vec<&IslandState> = match request.min_jurisdiction {
+            Some(floor) => {
+                let with: Vec<&IslandState> =
+                    eligible.iter().filter(|s| s.island.jurisdiction.score() >= floor).copied().collect();
+                if with.is_empty() {
+                    return Decision::Reject {
+                        reason: format!("no eligible island meets jurisdiction floor {floor:.2}"),
+                    };
+                }
+                with
+            }
+            None => eligible,
+        };
+
+        // -- 3. priority-tier admission (index partition; no island clones
+        // on the hot path — §Perf iteration 3)
+        let adm = tiers::admission(request.priority, local_capacity, &self.config);
+        let (local_set, remote_set): (Vec<&IslandState>, Vec<&IslandState>) =
+            eligible.iter().partition(|s| tiers::is_local(&s.island));
+        let (primary_set, fallback_set): (Vec<&IslandState>, Vec<&IslandState>) = match adm {
+            Admission::LocalOnly => (local_set, Vec::new()),
+            Admission::PreferLocal => (local_set, remote_set),
+            Admission::PreferOffload => (remote_set, local_set),
+        };
+
+        // -- 4/5. feasibility + scoring within the admission sets
+        let tokens = request.token_estimate();
+        for (set_idx, set) in [&primary_set, &fallback_set].into_iter().enumerate() {
+            if set.is_empty() {
+                continue;
+            }
+            let mut feasible: Vec<&&IslandState> = set
+                .iter()
+                .filter(|s| {
+                    let cap_ok = s.island.unbounded() || s.capacity > self.config.buffer.buffer();
+                    let battery_ok = s.island.battery.map(|b| b > BATTERY_FLOOR).unwrap_or(true);
+                    let budget_ok = s.island.request_cost(tokens) <= budget_left;
+                    cap_ok && battery_ok && budget_ok
+                })
+                .collect();
+            // battery relaxation: if the floor filtered everything, allow
+            // low-battery islands rather than failing (privacy first).
+            if feasible.is_empty() {
+                feasible = set
+                    .iter()
+                    .filter(|s| {
+                        (s.island.unbounded() || s.capacity > self.config.buffer.buffer())
+                            && s.island.request_cost(tokens) <= budget_left
+                    })
+                    .collect();
+            }
+            // hysteresis: under cloud preference, avoid the loopback SHORE
+            // for offloadable tiers when any remote candidate exists.
+            if pref == Preference::Cloud && adm != Admission::LocalOnly && set_idx == 0 {
+                let non_loopback: Vec<&&IslandState> =
+                    feasible.iter().filter(|s| s.island.link != LinkKind::Loopback).copied().collect();
+                if !non_loopback.is_empty() {
+                    feasible = non_loopback;
+                }
+            }
+            if feasible.is_empty() {
+                continue;
+            }
+            let best = feasible
+                .iter()
+                .min_by(|a, b| {
+                    self.total_score(request, &a.island)
+                        .partial_cmp(&self.total_score(request, &b.island))
+                        .unwrap()
+                })
+                .unwrap();
+            return Decision::Route(self.routed(request, &best.island, adm));
+        }
+
+        // -- 6. failsafe (Alg. 1 line 11): privacy-eligible islands exist
+        // but none has capacity — queue on the highest-privacy one.
+        let failsafe = eligible
+            .iter()
+            .max_by(|a, b| {
+                (a.island.privacy, a.capacity)
+                    .partial_cmp(&(b.island.privacy, b.capacity))
+                    .unwrap()
+            })
+            .unwrap();
+        Decision::FailsafeLocal(self.routed(request, &failsafe.island, adm))
+    }
+
+    fn routed(&self, request: &Request, island: &Island, adm: Admission) -> Routed {
+        // Alg. 1 lines 14-17: sanitize when crossing to lower trust with
+        // chat context; intra-personal (P = 1.0) bypasses MIST entirely.
+        let prev = request.prev_island_privacy.unwrap_or(1.0);
+        let sanitize = !request.history.is_empty() && prev > island.privacy && island.privacy < 1.0;
+        Routed {
+            target: island.id,
+            score: self.total_score(request, island),
+            sanitize,
+            target_privacy: island.privacy,
+            admission: adm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::CarbonScorer;
+    use crate::config::{preset_personal_group, BufferProfile};
+    use crate::types::{PriorityTier, Role, Turn};
+
+    fn states(capacity: f64) -> Vec<IslandState> {
+        preset_personal_group()
+            .into_iter()
+            .map(|island| {
+                let cap = if island.unbounded() { 1.0 } else { capacity };
+                IslandState { island, capacity: cap }
+            })
+            .collect()
+    }
+
+    fn waves() -> Waves {
+        Waves::new(Config::default())
+    }
+
+    fn route_simple(w: &Waves, s_r: f64, priority: PriorityTier, cap: f64) -> Decision {
+        let r = Request::new(1, "test prompt").with_priority(priority);
+        w.route(&r, s_r, &states(cap), cap, Preference::Local, f64::INFINITY)
+    }
+
+    #[test]
+    fn high_sensitivity_routes_to_personal_island() {
+        let d = route_simple(&waves(), 0.9, PriorityTier::Primary, 0.9);
+        let routed = d.routed().expect("routed");
+        let islands = preset_personal_group();
+        let target = islands.iter().find(|i| i.id == routed.target).unwrap();
+        assert_eq!(target.tier, crate::types::TrustTier::Personal);
+        assert!(target.privacy >= 0.9);
+    }
+
+    #[test]
+    fn low_sensitivity_burstable_under_load_goes_to_cloud() {
+        // burstable with local capacity 0.3 (< 0.8 threshold) → offload
+        let d = route_simple(&waves(), 0.3, PriorityTier::Burstable, 0.3);
+        let routed = d.routed().expect("routed");
+        let islands = preset_personal_group();
+        let target = islands.iter().find(|i| i.id == routed.target).unwrap();
+        assert_ne!(target.tier, crate::types::TrustTier::Personal, "target={}", target.name);
+    }
+
+    #[test]
+    fn fail_closed_when_privacy_unsatisfiable() {
+        let w = waves();
+        // only cloud islands online; sensitive request must be rejected
+        let cloud_only: Vec<IslandState> =
+            states(1.0).into_iter().filter(|s| s.island.privacy < 0.9).collect();
+        let r = Request::new(1, "patient data").with_priority(PriorityTier::Primary);
+        let d = w.route(&r, 0.9, &cloud_only, 1.0, Preference::Local, f64::INFINITY);
+        assert!(matches!(d, Decision::Reject { .. }), "{d:?}");
+    }
+
+    #[test]
+    fn failsafe_queues_locally_when_no_capacity() {
+        // all bounded islands saturated; primary request cannot offload
+        let d = route_simple(&waves(), 0.9, PriorityTier::Primary, 0.0);
+        match d {
+            Decision::FailsafeLocal(r) => {
+                assert_eq!(r.target_privacy, 1.0);
+            }
+            other => panic!("expected failsafe, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn attack1_false_exhaustion_cannot_leak_privacy() {
+        // §VIII.C Attack 1: TIDE reports local exhaustion; privacy constraint
+        // must still hold — the request queues locally rather than going to
+        // cloud.
+        let w = waves();
+        let r = Request::new(1, "patient record").with_priority(PriorityTier::Primary);
+        let mut st = states(0.0); // compromised TIDE: everything "exhausted"
+        for s in st.iter_mut() {
+            if s.island.unbounded() {
+                s.capacity = 1.0;
+            }
+        }
+        let d = w.route(&r, 0.9, &st, 0.0, Preference::Cloud, f64::INFINITY);
+        let target = d.target().expect("not rejected");
+        let islands = preset_personal_group();
+        let island = islands.iter().find(|i| i.id == target).unwrap();
+        assert!(island.privacy >= 0.9, "leaked to {}", island.name);
+    }
+
+    #[test]
+    fn dataset_constraint_routes_to_data() {
+        let w = waves();
+        let mut st = states(0.9);
+        st[4].island.datasets.push("case_law".to_string()); // private-edge
+        let r = Request::new(1, "find precedent").with_dataset("case_law");
+        let d = w.route(&r, 0.5, &st, 0.9, Preference::Local, f64::INFINITY);
+        assert_eq!(d.target(), Some(st[4].island.id));
+        // dataset nowhere → reject
+        let r2 = Request::new(2, "q").with_dataset("missing_ds");
+        let d2 = w.route(&r2, 0.2, &st, 0.9, Preference::Local, f64::INFINITY);
+        assert!(matches!(d2, Decision::Reject { .. }));
+    }
+
+    #[test]
+    fn sanitize_required_when_crossing_down() {
+        let w = waves();
+        let r = Request::new(1, "general question")
+            .with_priority(PriorityTier::Burstable)
+            .with_history(vec![Turn { role: Role::User, text: "earlier sensitive turn".into() }]);
+        // low local capacity pushes burstable to cloud
+        let d = w.route(&r, 0.3, &states(0.2), 0.2, Preference::Local, f64::INFINITY);
+        let routed = d.routed().unwrap();
+        assert!(routed.target_privacy < 1.0);
+        assert!(routed.sanitize, "crossing 1.0 -> {} must sanitize", routed.target_privacy);
+    }
+
+    #[test]
+    fn no_sanitize_within_personal_group() {
+        let w = waves();
+        let r = Request::new(1, "continue the chat")
+            .with_priority(PriorityTier::Primary)
+            .with_history(vec![Turn { role: Role::User, text: "ctx".into() }]);
+        let d = w.route(&r, 0.9, &states(0.9), 0.9, Preference::Local, f64::INFINITY);
+        let routed = d.routed().unwrap();
+        assert_eq!(routed.target_privacy, 1.0);
+        assert!(!routed.sanitize, "intra-personal routing bypasses MIST");
+    }
+
+    #[test]
+    fn budget_excludes_paid_islands() {
+        let w = waves();
+        let r = Request::new(1, "cheap question").with_priority(PriorityTier::Burstable);
+        // local capacity low → would prefer cloud, but budget_left = 0
+        let d = w.route(&r, 0.2, &states(0.5), 0.5, Preference::Local, 0.0);
+        let target = d.target().unwrap();
+        let islands = preset_personal_group();
+        let island = islands.iter().find(|i| i.id == target).unwrap();
+        assert_eq!(island.request_cost(100), 0.0, "must pick a free island");
+    }
+
+    #[test]
+    fn low_battery_island_avoided_when_alternative_exists() {
+        let w = waves();
+        let mut st = states(0.9);
+        st[0].island.battery = Some(0.1); // laptop nearly dead
+        let r = Request::new(1, "x").with_priority(PriorityTier::Primary);
+        let d = w.route(&r, 0.9, &st, 0.9, Preference::Local, f64::INFINITY);
+        assert_ne!(d.target(), Some(st[0].island.id), "low-battery island should be avoided");
+    }
+
+    #[test]
+    fn hysteresis_cloud_pref_avoids_loopback() {
+        let w = waves();
+        let r = Request::new(1, "q").with_priority(PriorityTier::Secondary);
+        // capacity above secondary threshold so admission = PreferLocal,
+        // but hysteresis preference is Cloud → loopback skipped
+        let d = w.route(&r, 0.2, &states(0.6), 0.6, Preference::Cloud, f64::INFINITY);
+        let target = d.target().unwrap();
+        let islands = preset_personal_group();
+        let island = islands.iter().find(|i| i.id == target).unwrap();
+        assert_ne!(island.link, LinkKind::Loopback);
+    }
+
+    #[test]
+    fn extension_scorer_changes_choice_without_router_edits() {
+        // §IV extensibility: with a huge carbon weight, the router should
+        // strictly prefer personal islands even for burstable-offload cases.
+        let mut w = waves();
+        w.add_scorer(Box::new(CarbonScorer), 10.0);
+        let r = Request::new(1, "q").with_priority(PriorityTier::Secondary);
+        let d = w.route(&r, 0.2, &states(0.6), 0.6, Preference::Local, f64::INFINITY);
+        let islands = preset_personal_group();
+        let target = islands.iter().find(|i| i.id == d.target().unwrap()).unwrap();
+        assert_eq!(target.tier, crate::types::TrustTier::Personal);
+    }
+
+    #[test]
+    fn constraint_mode_minimizes_latency_among_feasible() {
+        let mut cfg = Config::default();
+        cfg.mode = RouterMode::ConstraintBased;
+        cfg.buffer = BufferProfile::Aggressive;
+        let w = Waves::new(cfg);
+        let r = Request::new(1, "q").with_priority(PriorityTier::Primary);
+        let d = w.route(&r, 0.9, &states(0.9), 0.9, Preference::Local, f64::INFINITY);
+        // fastest personal island is the laptop (5ms loopback)
+        let islands = preset_personal_group();
+        let target = islands.iter().find(|i| i.id == d.target().unwrap()).unwrap();
+        assert_eq!(target.name, "laptop");
+    }
+
+    #[test]
+    fn model_capability_matching() {
+        // §XIV heterogeneous model support
+        let w = waves();
+        let mut st = states(0.9);
+        st[4].island.models = vec!["tinylm".into(), "llama-13b".into()]; // edge serves both
+        let r = Request::new(1, "q").with_model("llama-13b");
+        let d = w.route(&r, 0.5, &st, 0.9, Preference::Local, f64::INFINITY);
+        assert_eq!(d.target(), Some(st[4].island.id));
+        // unknown model fails closed
+        let r2 = Request::new(2, "q").with_model("gpt-97");
+        assert!(matches!(w.route(&r2, 0.2, &st, 0.9, Preference::Local, f64::INFINITY), Decision::Reject { .. }));
+    }
+
+    #[test]
+    fn jurisdiction_floor_is_inviolable() {
+        // §XIV regulatory compliance: GDPR workloads (floor 0.9) can never
+        // land on Foreign-jurisdiction islands, even when those are the
+        // only ones with capacity.
+        let w = waves();
+        let mut st = states(0.0); // all bounded islands exhausted
+        for s in st.iter_mut() {
+            if s.island.unbounded() {
+                s.capacity = 1.0;
+            }
+        }
+        let r = Request::new(1, "eu customer record")
+            .with_priority(PriorityTier::Secondary)
+            .with_min_jurisdiction(0.9);
+        let d = w.route(&r, 0.5, &st, 0.0, Preference::Cloud, f64::INFINITY);
+        match d.target() {
+            Some(id) => {
+                let island = &st.iter().find(|s| s.island.id == id).unwrap().island;
+                assert!(island.jurisdiction.score() >= 0.9, "landed on {}", island.name);
+            }
+            None => {} // fail-closed acceptable
+        }
+        // and with an impossible floor, reject
+        let r2 = Request::new(2, "q").with_min_jurisdiction(1.1);
+        assert!(matches!(w.route(&r2, 0.2, &st, 1.0, Preference::Local, f64::INFINITY), Decision::Reject { .. }));
+    }
+
+    #[test]
+    fn motivating_example_flow() {
+        // §I.A: laptop busy, edge P=0.8 < s_r=0.9 fails constraint, cloud
+        // ruled out; home NAS (P=1.0, capacity) wins.
+        let w = waves();
+        let mut st = states(0.9);
+        st[0].capacity = 0.05; // laptop at high utilization
+        let r = Request::new(1, "analyze treatment options for patient")
+            .with_priority(PriorityTier::Primary);
+        let d = w.route(&r, 0.9, &st, 0.9, Preference::Local, f64::INFINITY);
+        let islands = preset_personal_group();
+        let target = islands.iter().find(|i| i.id == d.target().unwrap()).unwrap();
+        assert!(target.privacy >= 0.9);
+        assert_ne!(target.name, "laptop");
+        // follow-up general query (s_r=0.3) may use cloud when local is busy
+        let r2 = Request::new(2, "what are common diabetes complications")
+            .with_priority(PriorityTier::Burstable);
+        let mut st2 = states(0.1);
+        st2[0].capacity = 0.05;
+        let d2 = w.route(&r2, 0.3, &st2, 0.1, Preference::Cloud, f64::INFINITY);
+        let t2 = islands.iter().find(|i| i.id == d2.target().unwrap()).unwrap();
+        assert_eq!(t2.tier, crate::types::TrustTier::Cloud);
+    }
+}

@@ -1,0 +1,105 @@
+//! Eq. 1 composite scoring: `S(r, i_j) = w1·C_j + w2·L_j + w3·(1 − P_j)`.
+//!
+//! Cost and latency are normalized to [0,1] before weighting so the
+//! user-preference weights are dimensionless (the paper writes Eq. 1 over
+//! raw quantities; without normalization w2 would be dominated by latency's
+//! magnitude — we document this as an implementation refinement).
+//!
+//! Extension scorers registered via [`super::router::Waves::add_scorer`]
+//! contribute additional weighted terms (§IV "Extensibility").
+
+use crate::config::Weights;
+use crate::types::Island;
+
+/// Latency normalization ceiling (ms): the paper's worst expected island
+/// latency (§XI.B cloud upper bound).
+pub const LATENCY_CEIL_MS: f64 = 2000.0;
+/// Cost normalization ceiling ($/request): the priciest §X cloud API call.
+pub const COST_CEIL: f64 = 0.05;
+
+/// Normalized per-dimension components of Eq. 1 (useful for Pareto and for
+/// experiment reporting).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScoreParts {
+    pub cost: f64,
+    pub latency: f64,
+    pub privacy_penalty: f64,
+}
+
+impl ScoreParts {
+    pub fn compute(island: &Island, tokens: usize) -> ScoreParts {
+        ScoreParts {
+            cost: (island.request_cost(tokens) / COST_CEIL).clamp(0.0, 1.0),
+            latency: (island.latency_ms / LATENCY_CEIL_MS).clamp(0.0, 1.0),
+            privacy_penalty: (1.0 - island.privacy).clamp(0.0, 1.0),
+        }
+    }
+
+    /// Eq. 1 weighted sum.
+    pub fn weighted(&self, w: &Weights) -> f64 {
+        w.cost * self.cost + w.latency * self.latency + w.privacy * self.privacy_penalty
+    }
+}
+
+/// Convenience: Eq. 1 score for an island.
+pub fn eq1_score(island: &Island, tokens: usize, w: &Weights) -> f64 {
+    ScoreParts::compute(island, tokens).weighted(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset_personal_group;
+
+    #[test]
+    fn free_local_island_scores_near_zero() {
+        let islands = preset_personal_group();
+        let w = Weights::default();
+        let laptop = eq1_score(&islands[0], 64, &w);
+        assert!(laptop < 0.01, "laptop={laptop}");
+    }
+
+    #[test]
+    fn cloud_scores_worse_than_personal_on_balanced_weights() {
+        let islands = preset_personal_group();
+        let w = Weights::default();
+        let laptop = eq1_score(&islands[0], 64, &w);
+        let cloud = eq1_score(&islands[5], 64, &w);
+        assert!(cloud > laptop + 0.1, "cloud={cloud} laptop={laptop}");
+    }
+
+    #[test]
+    fn latency_only_weights_flip_preference_to_fastest() {
+        let islands = preset_personal_group();
+        let w = Weights { cost: 0.0, latency: 1.0, privacy: 0.0 };
+        // mobile (20ms LAN) must beat cloud (180ms WAN)
+        assert!(eq1_score(&islands[1], 64, &w) < eq1_score(&islands[5], 64, &w));
+    }
+
+    #[test]
+    fn privacy_weight_penalizes_low_trust() {
+        let islands = preset_personal_group();
+        let w = Weights { cost: 0.0, latency: 0.0, privacy: 1.0 };
+        assert_eq!(eq1_score(&islands[0], 64, &w), 0.0); // P=1.0
+        assert!((eq1_score(&islands[5], 64, &w) - 0.6).abs() < 1e-9); // P=0.4
+    }
+
+    #[test]
+    fn score_bounded_in_unit_interval_for_normalized_weights() {
+        let islands = preset_personal_group();
+        let w = Weights { cost: 0.33, latency: 0.33, privacy: 0.34 };
+        for i in &islands {
+            let s = eq1_score(i, 100_000, &w); // huge token count saturates cost
+            assert!((0.0..=1.0).contains(&s), "{}: {s}", i.name);
+        }
+    }
+
+    #[test]
+    fn parts_clamp_extremes() {
+        let mut island = preset_personal_group().remove(5);
+        island.latency_ms = 99_999.0;
+        let p = ScoreParts::compute(&island, 1_000_000);
+        assert_eq!(p.latency, 1.0);
+        assert_eq!(p.cost, 1.0);
+    }
+}

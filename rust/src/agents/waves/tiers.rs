@@ -1,0 +1,110 @@
+//! §IX.B tiered prompt routing: primary / secondary / burstable admission.
+//!
+//! During resource contention WAVES routes:
+//!   Primary   → always local (may queue)
+//!   Secondary → local if R > 50%, else cloud
+//!   Burstable → local if R > 80%, else cloud immediately
+//!
+//! "Local" means the user's personal island group (Tier 1); "cloud" means
+//! any island outside it. This module decides, per request, which island
+//! *classes* are admissible given current local capacity — the router then
+//! scores within the admissible set.
+
+use crate::config::Config;
+use crate::types::{Island, PriorityTier, TrustTier};
+
+/// Where a priority tier may execute given local capacity R.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Only personal (Tier-1) islands; queue if saturated.
+    LocalOnly,
+    /// Personal preferred, non-personal allowed.
+    PreferLocal,
+    /// Non-personal preferred (offload immediately), local allowed if idle.
+    PreferOffload,
+}
+
+/// §IX.B decision table.
+pub fn admission(priority: PriorityTier, local_capacity: f64, config: &Config) -> Admission {
+    match priority {
+        PriorityTier::Primary => Admission::LocalOnly,
+        PriorityTier::Secondary => {
+            if local_capacity > config.secondary_local_threshold {
+                Admission::PreferLocal
+            } else {
+                Admission::PreferOffload
+            }
+        }
+        PriorityTier::Burstable => {
+            if local_capacity > config.burstable_local_threshold {
+                Admission::PreferLocal
+            } else {
+                Admission::PreferOffload
+            }
+        }
+    }
+}
+
+/// Does an island fall on the "local" side of the admission split?
+pub fn is_local(island: &Island) -> bool {
+    island.tier == TrustTier::Personal
+}
+
+/// Filter candidate islands by the admission decision. Returns (primary
+/// choice set, fallback set) — the router tries the first, then the second.
+pub fn admissible<'a>(islands: &'a [Island], adm: Admission) -> (Vec<&'a Island>, Vec<&'a Island>) {
+    let (local, remote): (Vec<&Island>, Vec<&Island>) = islands.iter().partition(|i| is_local(i));
+    match adm {
+        Admission::LocalOnly => (local, Vec::new()),
+        Admission::PreferLocal => (local, remote),
+        Admission::PreferOffload => (remote, local),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset_personal_group;
+
+    #[test]
+    fn primary_always_local() {
+        let cfg = Config::default();
+        for r in [0.0, 0.3, 0.6, 1.0] {
+            assert_eq!(admission(PriorityTier::Primary, r, &cfg), Admission::LocalOnly);
+        }
+    }
+
+    #[test]
+    fn secondary_threshold_at_50() {
+        let cfg = Config::default();
+        assert_eq!(admission(PriorityTier::Secondary, 0.6, &cfg), Admission::PreferLocal);
+        assert_eq!(admission(PriorityTier::Secondary, 0.5, &cfg), Admission::PreferOffload);
+        assert_eq!(admission(PriorityTier::Secondary, 0.2, &cfg), Admission::PreferOffload);
+    }
+
+    #[test]
+    fn burstable_threshold_at_80() {
+        let cfg = Config::default();
+        assert_eq!(admission(PriorityTier::Burstable, 0.9, &cfg), Admission::PreferLocal);
+        assert_eq!(admission(PriorityTier::Burstable, 0.7, &cfg), Admission::PreferOffload);
+    }
+
+    #[test]
+    fn admissible_partitions_by_tier() {
+        let islands = preset_personal_group();
+        let (first, second) = admissible(&islands, Admission::LocalOnly);
+        assert_eq!(first.len(), 4); // 4 personal devices
+        assert!(second.is_empty());
+        let (first, second) = admissible(&islands, Admission::PreferOffload);
+        assert_eq!(first.len(), 3); // edge + 2 cloud
+        assert_eq!(second.len(), 4);
+        assert!(first.iter().all(|i| !is_local(i)));
+    }
+
+    #[test]
+    fn thresholds_configurable() {
+        let mut cfg = Config::default();
+        cfg.secondary_local_threshold = 0.9;
+        assert_eq!(admission(PriorityTier::Secondary, 0.8, &cfg), Admission::PreferOffload);
+    }
+}

@@ -1,0 +1,271 @@
+//! Baseline routing policies from the paper's §XI.A comparison:
+//!
+//! 1. **Cloud-only** — all requests to the commercial LLM API (violates
+//!    privacy for sensitive data).
+//! 2. **Local-only** — all requests to personal devices (fails under
+//!    resource exhaustion).
+//! 3. **Latency-greedy** — lowest-latency island, privacy-blind (what
+//!    "Kubernetes-style" routing degrades to in Table II).
+//! 4. **Privacy-only** — highest-privacy island regardless of capacity or
+//!    cost (never exploits the cloud).
+//! 5. **Static-policy** — the §I strawman: "if PII detected route local",
+//!    pre-configured, but *degrades to cloud under resource exhaustion,
+//!    silently violating privacy*.
+//!
+//! IslandRun itself is adapted to the same [`Policy`] interface so the eval
+//! harness drives all six through identical traces and fleets (E1–E6).
+
+use crate::agents::tide::hysteresis::Preference;
+use crate::agents::waves::{Decision, IslandState, Waves};
+use crate::config::Config;
+use crate::types::{IslandId, Request, TrustTier};
+
+/// A routing policy under evaluation.
+pub enum PolicyDecision {
+    Island(IslandId),
+    Reject,
+}
+
+pub trait Policy {
+    fn name(&self) -> &'static str;
+    /// Decide a target island. `s_r` is MIST's sensitivity estimate;
+    /// `local_capacity` is TIDE's local view.
+    fn route(&mut self, request: &Request, s_r: f64, states: &[IslandState], local_capacity: f64) -> PolicyDecision;
+}
+
+fn cheapest_cloud(states: &[IslandState]) -> Option<IslandId> {
+    states
+        .iter()
+        .filter(|s| s.island.tier == TrustTier::Cloud)
+        .min_by(|a, b| a.island.request_cost(64).partial_cmp(&b.island.request_cost(64)).unwrap())
+        .map(|s| s.island.id)
+}
+
+/// 1. Cloud-only.
+pub struct CloudOnly;
+
+impl Policy for CloudOnly {
+    fn name(&self) -> &'static str {
+        "cloud-only"
+    }
+
+    fn route(&mut self, _r: &Request, _s: f64, states: &[IslandState], _lc: f64) -> PolicyDecision {
+        match cheapest_cloud(states) {
+            Some(id) => PolicyDecision::Island(id),
+            None => PolicyDecision::Reject,
+        }
+    }
+}
+
+/// 2. Local-only: round-robins across personal devices with capacity; queues
+/// on the primary device when everything is saturated.
+pub struct LocalOnly;
+
+impl Policy for LocalOnly {
+    fn name(&self) -> &'static str {
+        "local-only"
+    }
+
+    fn route(&mut self, _r: &Request, _s: f64, states: &[IslandState], _lc: f64) -> PolicyDecision {
+        let personal: Vec<&IslandState> =
+            states.iter().filter(|s| s.island.tier == TrustTier::Personal).collect();
+        if personal.is_empty() {
+            return PolicyDecision::Reject;
+        }
+        let best = personal
+            .iter()
+            .max_by(|a, b| a.capacity.partial_cmp(&b.capacity).unwrap())
+            .unwrap();
+        PolicyDecision::Island(best.island.id)
+    }
+}
+
+/// 3. Latency-greedy: min L_j among islands with any capacity.
+pub struct LatencyGreedy;
+
+impl Policy for LatencyGreedy {
+    fn name(&self) -> &'static str {
+        "latency-greedy"
+    }
+
+    fn route(&mut self, _r: &Request, _s: f64, states: &[IslandState], _lc: f64) -> PolicyDecision {
+        let viable: Vec<&IslandState> =
+            states.iter().filter(|s| s.island.unbounded() || s.capacity > 0.0).collect();
+        match viable.iter().min_by(|a, b| a.island.latency_ms.partial_cmp(&b.island.latency_ms).unwrap()) {
+            Some(s) => PolicyDecision::Island(s.island.id),
+            None => PolicyDecision::Reject,
+        }
+    }
+}
+
+/// 4. Privacy-only: max P_j, ties by latency; ignores capacity entirely
+/// (that's its failure mode: exhaustion).
+pub struct PrivacyOnly;
+
+impl Policy for PrivacyOnly {
+    fn name(&self) -> &'static str {
+        "privacy-only"
+    }
+
+    fn route(&mut self, _r: &Request, _s: f64, states: &[IslandState], _lc: f64) -> PolicyDecision {
+        match states.iter().max_by(|a, b| {
+            (a.island.privacy, -a.island.latency_ms).partial_cmp(&(b.island.privacy, -b.island.latency_ms)).unwrap()
+        }) {
+            Some(s) => PolicyDecision::Island(s.island.id),
+            None => PolicyDecision::Reject,
+        }
+    }
+}
+
+/// 5. Static rule with pressure fallback: "PII → local" until local capacity
+/// drops below 20%, then EVERYTHING silently goes to cloud (the paper's
+/// motivating failure).
+pub struct StaticPolicy;
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static-policy"
+    }
+
+    fn route(&mut self, _r: &Request, s_r: f64, states: &[IslandState], local_capacity: f64) -> PolicyDecision {
+        if local_capacity < 0.2 {
+            // degradation under load — the silent privacy violation
+            return match cheapest_cloud(states) {
+                Some(id) => PolicyDecision::Island(id),
+                None => PolicyDecision::Reject,
+            };
+        }
+        if s_r >= 0.8 {
+            LocalOnly.route(_r, s_r, states, local_capacity)
+        } else {
+            match cheapest_cloud(states) {
+                Some(id) => PolicyDecision::Island(id),
+                None => PolicyDecision::Reject,
+            }
+        }
+    }
+}
+
+/// 6. IslandRun (WAVES Algorithm 1) adapted to the Policy interface.
+pub struct IslandRunPolicy {
+    pub waves: Waves,
+}
+
+impl IslandRunPolicy {
+    pub fn new(config: Config) -> IslandRunPolicy {
+        IslandRunPolicy { waves: Waves::new(config) }
+    }
+}
+
+impl Policy for IslandRunPolicy {
+    fn name(&self) -> &'static str {
+        "islandrun"
+    }
+
+    fn route(&mut self, request: &Request, s_r: f64, states: &[IslandState], local_capacity: f64) -> PolicyDecision {
+        match self.waves.route(request, s_r, states, local_capacity, Preference::Local, f64::INFINITY) {
+            Decision::Route(r) | Decision::FailsafeLocal(r) => PolicyDecision::Island(r.target),
+            Decision::Reject { .. } => PolicyDecision::Reject,
+        }
+    }
+}
+
+/// All six policies, fresh instances (eval harness helper).
+pub fn all_policies(config: &Config) -> Vec<Box<dyn Policy>> {
+    vec![
+        Box::new(IslandRunPolicy::new(config.clone())),
+        Box::new(CloudOnly),
+        Box::new(LocalOnly),
+        Box::new(LatencyGreedy),
+        Box::new(PrivacyOnly),
+        Box::new(StaticPolicy),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset_personal_group;
+
+    fn states(cap: f64) -> Vec<IslandState> {
+        preset_personal_group()
+            .into_iter()
+            .map(|island| {
+                let c = if island.unbounded() { 1.0 } else { cap };
+                IslandState { island, capacity: c }
+            })
+            .collect()
+    }
+
+    fn island_tier(states: &[IslandState], d: &PolicyDecision) -> Option<TrustTier> {
+        match d {
+            PolicyDecision::Island(id) => states.iter().find(|s| s.island.id == *id).map(|s| s.island.tier),
+            PolicyDecision::Reject => None,
+        }
+    }
+
+    #[test]
+    fn cloud_only_always_cloud() {
+        let st = states(1.0);
+        let r = Request::new(1, "patient data");
+        let d = CloudOnly.route(&r, 0.9, &st, 1.0);
+        assert_eq!(island_tier(&st, &d), Some(TrustTier::Cloud));
+    }
+
+    #[test]
+    fn local_only_never_leaves_personal() {
+        let st = states(0.0); // fully saturated: still picks personal
+        let r = Request::new(1, "q");
+        let d = LocalOnly.route(&r, 0.2, &st, 0.0);
+        assert_eq!(island_tier(&st, &d), Some(TrustTier::Personal));
+    }
+
+    #[test]
+    fn latency_greedy_picks_fastest() {
+        let st = states(1.0);
+        let r = Request::new(1, "q");
+        let d = LatencyGreedy.route(&r, 0.9, &st, 1.0);
+        if let PolicyDecision::Island(id) = d {
+            let fastest = st.iter().min_by(|a, b| a.island.latency_ms.partial_cmp(&b.island.latency_ms).unwrap()).unwrap();
+            assert_eq!(id, fastest.island.id);
+        } else {
+            panic!("rejected");
+        }
+    }
+
+    #[test]
+    fn static_policy_violates_under_pressure() {
+        let st = states(0.1);
+        let r = Request::new(1, "patient john doe ssn 123-45-6789");
+        // local capacity 0.1 < 0.2 → even a highly sensitive request goes to cloud
+        let d = StaticPolicy.route(&r, 0.9, &st, 0.1);
+        assert_eq!(island_tier(&st, &d), Some(TrustTier::Cloud), "the documented silent violation");
+        // with capacity it behaves
+        let d2 = StaticPolicy.route(&r, 0.9, &states(0.9), 0.9);
+        assert_eq!(island_tier(&states(0.9), &d2), Some(TrustTier::Personal));
+    }
+
+    #[test]
+    fn islandrun_policy_never_violates_even_under_pressure() {
+        let mut p = IslandRunPolicy::new(Config::default());
+        let st = states(0.05);
+        let r = Request::new(1, "patient john doe ssn 123-45-6789")
+            .with_priority(crate::types::PriorityTier::Primary);
+        let d = p.route(&r, 0.9, &st, 0.05);
+        match d {
+            PolicyDecision::Island(id) => {
+                let island = st.iter().find(|s| s.island.id == id).unwrap();
+                assert!(island.island.privacy >= 0.9);
+            }
+            PolicyDecision::Reject => {} // fail-closed is acceptable
+        }
+    }
+
+    #[test]
+    fn all_policies_constructs_six() {
+        let ps = all_policies(&Config::default());
+        assert_eq!(ps.len(), 6);
+        let names: Vec<&str> = ps.iter().map(|p| p.name()).collect();
+        assert!(names.contains(&"islandrun") && names.contains(&"cloud-only"));
+    }
+}

@@ -1,0 +1,230 @@
+//! Command-line interface (own lightweight parser — clap is unavailable in
+//! this offline build, DESIGN.md §2).
+//!
+//! ```text
+//! islandrun eval <e1..e12|all> [--out DIR]   regenerate paper experiments
+//! islandrun demo                             §I.A motivating example
+//! islandrun attacks                          §VIII.C attack drill
+//! islandrun serve [--requests N] [--preset P] real PJRT serving run
+//! islandrun help
+//! ```
+
+use std::path::Path;
+
+use crate::agents::mist::{Mist, Stage2};
+use crate::config::{preset, Config};
+use crate::eval::experiments;
+use crate::islands::executor::IslandExecutor;
+use crate::runtime::Engine;
+use crate::server::{Backend, Orchestrator};
+
+/// Tiny argument scanner: positional args + `--key value` flags.
+pub struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let value = argv.get(i + 1).cloned().unwrap_or_default();
+                flags.push((key.to_string(), value));
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+const HELP: &str = "islandrun — privacy-aware multi-objective orchestration (paper reproduction)
+
+USAGE:
+  islandrun eval <e1..e12|all> [--out DIR]   regenerate paper experiments
+  islandrun demo                             run the §I.A motivating example
+  islandrun attacks                          run the §VIII.C attack drill
+  islandrun serve [--requests N] [--preset personal|healthcare|legal|hiking]
+                  [--artifacts DIR]          serve a real workload via PJRT
+  islandrun help                             this message
+";
+
+/// CLI entry point (called from main).
+pub fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(run(&argv));
+}
+
+/// Testable CLI runner; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let args = Args::parse(argv);
+    match args.pos(0) {
+        Some("eval") => cmd_eval(&args),
+        Some("demo") => cmd_demo(),
+        Some("attacks") => cmd_attacks(),
+        Some("serve") => cmd_serve(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            2
+        }
+    }
+}
+
+fn cmd_eval(args: &Args) -> i32 {
+    let which = args.pos(1).unwrap_or("all");
+    let ids: Vec<&str> = if which == "all" { experiments::ALL.to_vec() } else { vec![which] };
+    let out_dir = args.flag("out").map(|s| s.to_string());
+    if let Some(dir) = &out_dir {
+        std::fs::create_dir_all(dir).ok();
+    }
+    for id in ids {
+        match experiments::run(id) {
+            None => {
+                eprintln!("unknown experiment '{id}' (e1..e12)");
+                return 2;
+            }
+            Some(tables) => {
+                let mut text = String::new();
+                for t in &tables {
+                    text.push_str(&t.render());
+                    text.push('\n');
+                }
+                print!("{text}");
+                if let Some(dir) = &out_dir {
+                    let path = Path::new(dir).join(format!("{id}.md"));
+                    if let Err(e) = std::fs::write(&path, &text) {
+                        eprintln!("write {}: {e}", path.display());
+                    }
+                }
+            }
+        }
+    }
+    0
+}
+
+fn cmd_demo() -> i32 {
+    for t in experiments::e8_motivating() {
+        t.print();
+    }
+    0
+}
+
+fn cmd_attacks() -> i32 {
+    let outcomes = crate::security::run_all();
+    let mut ok = true;
+    for o in &outcomes {
+        println!("{:<28} mitigated={} {}", o.name, o.mitigated, o.details);
+        ok &= o.mitigated;
+    }
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let n: usize = args.flag("requests").and_then(|s| s.parse().ok()).unwrap_or(16);
+    let preset_name = args.flag("preset").unwrap_or("personal");
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts");
+    let Some(islands) = preset(preset_name) else {
+        eprintln!("unknown preset '{preset_name}'");
+        return 2;
+    };
+    let engine = match Engine::load(Path::new(artifacts)) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot load artifacts: {e}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    let executor = IslandExecutor::new(engine.handle(), 7);
+    let mist = Mist::new(Stage2::Classifier(engine.handle()));
+    let backend = Backend::Real { executor, islands };
+    let mut orch = Orchestrator::new(Config::default(), mist, backend, 7);
+    let session = orch.open_session("cli-user");
+
+    let mut rng = crate::util::Rng::new(3);
+    let t0 = std::time::Instant::now();
+    let mut served = 0usize;
+    for i in 0..n {
+        let class = match i % 4 {
+            0 => crate::substrate::trace::SensClass::High,
+            1 | 2 => crate::substrate::trace::SensClass::Moderate,
+            _ => crate::substrate::trace::SensClass::Low,
+        };
+        let prompt = crate::substrate::trace::prompt_for(class, &mut rng);
+        let priority = crate::substrate::trace::priority_for(class);
+        match orch.submit(session, &prompt, priority, None) {
+            Ok(out) => {
+                served += 1;
+                println!(
+                    "[{i:>3}] s_r={:.2} -> {:?} {:>7.1}ms ${:.4} | {}…",
+                    out.s_r,
+                    out.decision.target(),
+                    out.latency_ms,
+                    out.cost,
+                    &prompt[..prompt.len().min(48)],
+                );
+            }
+            Err(e) => println!("[{i:>3}] error: {e}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\nserved {served}/{n} in {wall:.2}s ({:.2} req/s)", served as f64 / wall);
+    orch.metrics.report().print();
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positionals_and_flags() {
+        let a = Args::parse(&argv(&["eval", "e2", "--out", "/tmp/x"]));
+        assert_eq!(a.pos(0), Some("eval"));
+        assert_eq!(a.pos(1), Some("e2"));
+        assert_eq!(a.flag("out"), Some("/tmp/x"));
+        assert_eq!(a.flag("missing"), None);
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert_eq!(run(&argv(&["help"])), 0);
+        assert_eq!(run(&argv(&[])), 0);
+        assert_eq!(run(&argv(&["frobnicate"])), 2);
+    }
+
+    #[test]
+    fn eval_unknown_experiment_errors() {
+        assert_eq!(run(&argv(&["eval", "e99"])), 2);
+    }
+
+    #[test]
+    fn attacks_command_passes() {
+        assert_eq!(run(&argv(&["attacks"])), 0);
+    }
+}

@@ -1,0 +1,389 @@
+//! Configuration system: router weights, TIDE thresholds, deployment presets.
+//!
+//! Configs load from JSON files (own parser in [`json`]) or from the named
+//! presets that reproduce the paper's deployment scenarios (§III.D,
+//! Fig. 3). Every knob the paper calls "user-configurable" is here:
+//! Eq. 1 weights, §IX.A buffer thresholds, §IX.C hysteresis bounds,
+//! router mode (§VI.C scalarized vs constraint-based).
+
+pub mod json;
+
+use std::path::Path;
+
+use crate::types::{Certification, CostModel, Island, IslandId, Jurisdiction, LinkKind, TrustTier};
+use json::Json;
+
+/// §IX.A user-configurable resource buffer presets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufferProfile {
+    /// buffer = 30%: offload when local capacity < 70%.
+    Conservative,
+    /// buffer = 20%: offload when local capacity < 80%.
+    Moderate,
+    /// buffer = 10%: offload when local capacity < 90%.
+    Aggressive,
+}
+
+impl BufferProfile {
+    /// Remaining-capacity threshold below which WAVES prefers offloading.
+    pub fn buffer(self) -> f64 {
+        match self {
+            BufferProfile::Conservative => 0.30,
+            BufferProfile::Moderate => 0.20,
+            BufferProfile::Aggressive => 0.10,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "conservative" => Some(Self::Conservative),
+            "moderate" => Some(Self::Moderate),
+            "aggressive" => Some(Self::Aggressive),
+            _ => None,
+        }
+    }
+}
+
+/// §VI.C: scalarized (Eq. 1 weighted sum) vs constraint-based routing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterMode {
+    /// Algorithm 1: filter by constraints, then argmin of Eq. 1.
+    Scalarized,
+    /// Hard constraints (privacy, capacity, budget) then argmin latency.
+    ConstraintBased,
+}
+
+/// Eq. 1 user-preference weights (w1 cost, w2 latency, w3 1-privacy).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Weights {
+    pub cost: f64,
+    pub latency: f64,
+    pub privacy: f64,
+}
+
+impl Default for Weights {
+    fn default() -> Self {
+        // Balanced default; experiments sweep these (E1/E2 notes).
+        Weights { cost: 0.4, latency: 0.3, privacy: 0.3 }
+    }
+}
+
+impl Weights {
+    /// Normalize to sum 1 (keeps Eq. 1 scores comparable across configs).
+    pub fn normalized(self) -> Weights {
+        let s = self.cost + self.latency + self.privacy;
+        if s <= 0.0 {
+            return Weights::default();
+        }
+        Weights { cost: self.cost / s, latency: self.latency / s, privacy: self.privacy / s }
+    }
+}
+
+/// Full router configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub weights: Weights,
+    pub mode: RouterMode,
+    pub buffer: BufferProfile,
+    /// §IX.C hysteresis: fall back to cloud below this capacity...
+    pub hysteresis_low: f64,
+    /// ...and return to local only above this capacity.
+    pub hysteresis_high: f64,
+    /// Per-user request rate limit (requests per second; Attack 4).
+    pub rate_limit_rps: f64,
+    /// Per-user daily budget ceiling in dollars (cost agent).
+    pub budget_ceiling: f64,
+    /// §IX.B tier thresholds: secondary goes local only when R > this.
+    pub secondary_local_threshold: f64,
+    /// burstable goes local only when R > this.
+    pub burstable_local_threshold: f64,
+    /// TIDE sampling period in ms (paper: 1000 ms; sims use faster).
+    pub tide_period_ms: u64,
+    /// Heartbeat period for LIGHTHOUSE liveness.
+    pub heartbeat_period_ms: u64,
+    /// Heartbeats missed before an island is marked offline.
+    pub heartbeat_miss_limit: u32,
+    /// Artifacts directory with the AOT HLO files.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            weights: Weights::default(),
+            mode: RouterMode::Scalarized,
+            buffer: BufferProfile::Moderate,
+            // §IX.C: fall back to cloud when R < 70%, recover local when
+            // R > 80% (10% dead zone prevents flapping).
+            hysteresis_low: 0.70,
+            hysteresis_high: 0.80,
+            rate_limit_rps: 50.0,
+            budget_ceiling: 10.0,
+            secondary_local_threshold: 0.50,
+            burstable_local_threshold: 0.80,
+            tide_period_ms: 1000,
+            heartbeat_period_ms: 500,
+            heartbeat_miss_limit: 3,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Config {
+    /// Parse from a JSON object; missing fields keep defaults.
+    pub fn from_json(v: &Json) -> Config {
+        let mut c = Config::default();
+        if let Some(w) = v.get("weights").as_obj() {
+            c.weights = Weights {
+                cost: w.get("cost").and_then(|x| x.as_f64()).unwrap_or(c.weights.cost),
+                latency: w.get("latency").and_then(|x| x.as_f64()).unwrap_or(c.weights.latency),
+                privacy: w.get("privacy").and_then(|x| x.as_f64()).unwrap_or(c.weights.privacy),
+            };
+        }
+        if let Some(m) = v.get("mode").as_str() {
+            c.mode = if m == "constraint" { RouterMode::ConstraintBased } else { RouterMode::Scalarized };
+        }
+        if let Some(b) = v.get("buffer").as_str() {
+            if let Some(bp) = BufferProfile::parse(b) {
+                c.buffer = bp;
+            }
+        }
+        if let Some(x) = v.get("rate_limit_rps").as_f64() {
+            c.rate_limit_rps = x;
+        }
+        if let Some(x) = v.get("budget_ceiling").as_f64() {
+            c.budget_ceiling = x;
+        }
+        if let Some(x) = v.get("artifacts_dir").as_str() {
+            c.artifacts_dir = x.to_string();
+        }
+        c
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Config::from_json(&v))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "weights",
+                Json::obj(vec![
+                    ("cost", Json::num(self.weights.cost)),
+                    ("latency", Json::num(self.weights.latency)),
+                    ("privacy", Json::num(self.weights.privacy)),
+                ]),
+            ),
+            ("mode", Json::str(if self.mode == RouterMode::ConstraintBased { "constraint" } else { "scalarized" })),
+            (
+                "buffer",
+                Json::str(match self.buffer {
+                    BufferProfile::Conservative => "conservative",
+                    BufferProfile::Moderate => "moderate",
+                    BufferProfile::Aggressive => "aggressive",
+                }),
+            ),
+            ("rate_limit_rps", Json::num(self.rate_limit_rps)),
+            ("budget_ceiling", Json::num(self.budget_ceiling)),
+            ("artifacts_dir", Json::str(&self.artifacts_dir)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deployment presets (paper §III.D scenarios A/B/C + Fig. 3 topology)
+// ---------------------------------------------------------------------------
+
+fn island(
+    id: u32,
+    name: &str,
+    tier: TrustTier,
+    latency_ms: f64,
+    cost: CostModel,
+    privacy: f64,
+    cert: Certification,
+    jur: Jurisdiction,
+    slots: Option<usize>,
+    link: LinkKind,
+) -> Island {
+    Island {
+        id: IslandId(id),
+        name: name.to_string(),
+        tier,
+        latency_ms,
+        cost,
+        privacy,
+        certification: cert,
+        jurisdiction: jur,
+        capacity_slots: slots,
+        link,
+        battery: None,
+        datasets: Vec::new(),
+        models: vec!["tinylm".to_string()],
+    }
+}
+
+/// Fig. 3 / §XI Scenario 1 topology: personal island group + home NAS +
+/// private edge + two cloud islands. This is the default mesh used by the
+/// examples and most experiments.
+pub fn preset_personal_group() -> Vec<Island> {
+    use Certification::*;
+    use Jurisdiction::*;
+    use TrustTier::*;
+    let mut islands = vec![
+        island(0, "laptop", Personal, 5.0, CostModel::Free, 1.0, Iso27001, SameCountry, Some(4), LinkKind::Loopback),
+        island(1, "mobile", Personal, 20.0, CostModel::Free, 1.0, Iso27001, SameCountry, Some(1), LinkKind::Lan),
+        island(2, "smart-tv", Personal, 30.0, CostModel::Free, 1.0, SelfCertified, SameCountry, Some(1), LinkKind::Lan),
+        island(3, "home-nas", Personal, 15.0, CostModel::Free, 1.0, Iso27001, SameCountry, Some(2), LinkKind::Lan),
+        island(4, "private-edge", PrivateEdge, 60.0, CostModel::Fixed(0.002), 0.8, Soc2, SameCountry, Some(8), LinkKind::Wan),
+        island(5, "cloud-llm", Cloud, 180.0, CostModel::PerRequest(0.02), 0.4, Soc2, Foreign, None, LinkKind::Wan),
+        island(6, "cloud-serverless", Cloud, 220.0, CostModel::PerRequest(0.008), 0.3, SelfCertified, Foreign, None, LinkKind::Wan),
+    ];
+    islands[1].battery = Some(0.8);
+    islands[0].datasets.push("codebase".to_string());
+    islands[3].datasets.push("family_photos".to_string());
+    islands
+}
+
+/// §III.D Scenario B: healthcare provider (HIPAA). Workstation + PHI edge +
+/// cloud for non-PHI education content.
+pub fn preset_healthcare() -> Vec<Island> {
+    use Certification::*;
+    use Jurisdiction::*;
+    use TrustTier::*;
+    let mut islands = vec![
+        island(0, "clinic-workstation", Personal, 8.0, CostModel::Free, 1.0, Iso27001, SameCountry, Some(2), LinkKind::Loopback),
+        island(1, "onprem-phi-server", PrivateEdge, 40.0, CostModel::Fixed(0.003), 0.8, Iso27001, SameCountry, Some(6), LinkKind::Lan),
+        island(2, "cloud-gpt", Cloud, 200.0, CostModel::PerRequest(0.03), 0.4, Soc2, Foreign, None, LinkKind::Wan),
+    ];
+    islands[0].datasets.push("phi_db".to_string());
+    islands[1].datasets.push("medical_literature".to_string());
+    islands
+}
+
+/// §III.D Scenario C: legal firm with a 10TB case-law vector store on the
+/// firm server; cloud excluded for case-related queries by policy.
+pub fn preset_legal() -> Vec<Island> {
+    use Certification::*;
+    use Jurisdiction::*;
+    use TrustTier::*;
+    let mut islands = vec![
+        island(0, "attorney-laptop", Personal, 5.0, CostModel::Free, 1.0, Iso27001, SameCountry, Some(2), LinkKind::Loopback),
+        island(1, "firm-server", PrivateEdge, 35.0, CostModel::Fixed(0.001), 0.9, Iso27001, SameCountry, Some(12), LinkKind::Lan),
+        island(2, "cloud-llm", Cloud, 190.0, CostModel::PerRequest(0.02), 0.4, Soc2, Foreign, None, LinkKind::Wan),
+    ];
+    islands[1].datasets.push("case_law".to_string());
+    islands
+}
+
+/// Scenario 2 (hiking friends): two phones linked over Bluetooth, one with
+/// low battery + good signal, the other the reverse.
+pub fn preset_hiking_pair() -> Vec<Island> {
+    use Certification::*;
+    use Jurisdiction::*;
+    use TrustTier::*;
+    let mut islands = vec![
+        island(0, "phone-a", Personal, 10.0, CostModel::Free, 1.0, SelfCertified, SameCountry, Some(1), LinkKind::Loopback),
+        island(1, "phone-b", Personal, 45.0, CostModel::Free, 1.0, SelfCertified, SameCountry, Some(1), LinkKind::Bluetooth),
+        island(2, "cloud-via-cellular", Cloud, 400.0, CostModel::PerRequest(0.02), 0.4, Soc2, Foreign, None, LinkKind::Cellular),
+    ];
+    islands[0].battery = Some(0.15); // friend A: low battery, strong signal
+    islands[1].battery = Some(0.90); // friend B: high battery, weak signal
+    islands
+}
+
+/// Look up a preset by name (CLI `--preset`).
+pub fn preset(name: &str) -> Option<Vec<Island>> {
+    match name {
+        "personal" => Some(preset_personal_group()),
+        "healthcare" => Some(preset_healthcare()),
+        "legal" => Some(preset_legal()),
+        "hiking" => Some(preset_hiking_pair()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_normalize() {
+        let w = Weights { cost: 2.0, latency: 1.0, privacy: 1.0 }.normalized();
+        assert!((w.cost - 0.5).abs() < 1e-12);
+        assert!((w.cost + w.latency + w.privacy - 1.0).abs() < 1e-12);
+        // degenerate weights fall back to defaults
+        let d = Weights { cost: 0.0, latency: 0.0, privacy: 0.0 }.normalized();
+        assert_eq!(d, Weights::default());
+    }
+
+    #[test]
+    fn buffer_profiles_match_paper() {
+        assert_eq!(BufferProfile::Conservative.buffer(), 0.30);
+        assert_eq!(BufferProfile::Moderate.buffer(), 0.20);
+        assert_eq!(BufferProfile::Aggressive.buffer(), 0.10);
+        assert_eq!(BufferProfile::parse("aggressive"), Some(BufferProfile::Aggressive));
+        assert_eq!(BufferProfile::parse("nope"), None);
+    }
+
+    #[test]
+    fn config_json_round_trip() {
+        let mut c = Config::default();
+        c.weights = Weights { cost: 0.5, latency: 0.25, privacy: 0.25 };
+        c.mode = RouterMode::ConstraintBased;
+        c.rate_limit_rps = 7.5;
+        let j = c.to_json();
+        let c2 = Config::from_json(&j);
+        assert_eq!(c2.weights, c.weights);
+        assert_eq!(c2.mode, c.mode);
+        assert_eq!(c2.rate_limit_rps, c.rate_limit_rps);
+    }
+
+    #[test]
+    fn config_from_partial_json_keeps_defaults() {
+        let v = Json::parse(r#"{"rate_limit_rps": 5}"#).unwrap();
+        let c = Config::from_json(&v);
+        assert_eq!(c.rate_limit_rps, 5.0);
+        assert_eq!(c.weights, Weights::default());
+    }
+
+    #[test]
+    fn presets_shape() {
+        let p = preset_personal_group();
+        assert_eq!(p.len(), 7);
+        // tier-1 devices are all P=1.0, free, bounded
+        for i in &p[..4] {
+            assert_eq!(i.privacy, 1.0);
+            assert_eq!(i.request_cost(100), 0.0);
+            assert!(!i.unbounded());
+        }
+        // cloud islands are unbounded with lower privacy
+        for i in &p[5..] {
+            assert!(i.unbounded());
+            assert!(i.privacy < 0.5);
+        }
+        assert!(preset("healthcare").unwrap().iter().any(|i| i.has_dataset("phi_db")));
+        assert!(preset("legal").unwrap().iter().any(|i| i.has_dataset("case_law")));
+        assert!(preset("nonexistent").is_none());
+    }
+
+    #[test]
+    fn hiking_preset_battery_asymmetry() {
+        let p = preset_hiking_pair();
+        assert!(p[0].battery.unwrap() < 0.2);
+        assert!(p[1].battery.unwrap() > 0.8);
+    }
+
+    #[test]
+    fn unique_island_ids_in_presets() {
+        for name in ["personal", "healthcare", "legal", "hiking"] {
+            let p = preset(name).unwrap();
+            let mut ids: Vec<u32> = p.iter().map(|i| i.id.0).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), p.len(), "duplicate ids in preset {name}");
+        }
+    }
+}

@@ -1,0 +1,495 @@
+//! Experiment runners E1–E12: regenerate every table/figure-shaped claim in
+//! the paper (DESIGN.md §4 maps each to its paper artifact). Each returns
+//! rendered tables; `run(name)` dispatches, `run_all()` regenerates
+//! everything (the `islandrun eval all` command / `make eval`).
+
+use crate::agents::mist::sanitize::PlaceholderMap;
+use crate::agents::mist::{Mist, Stage2};
+use crate::agents::tide::hysteresis::Hysteresis;
+use crate::agents::tide::monitor::LoadProgram;
+use crate::baselines::{all_policies, IslandRunPolicy};
+use crate::config::{preset_healthcare, preset_legal, preset_personal_group, Config};
+use crate::eval::harness::{run_policy, RunOpts};
+use crate::islands::Fleet;
+use crate::security;
+use crate::server::{Backend, Orchestrator};
+use crate::substrate::netsim::NetSim;
+use crate::substrate::trace::{self, paper_mix, SensClass};
+use crate::types::{LinkKind, PriorityTier, Request};
+use crate::util::table::{f, pct};
+use crate::util::{Rng, Table};
+
+/// Default trace size for the big sweeps (kept virtual-time fast).
+const N: usize = 4000;
+
+/// E1 — Tables I/II analog: measured behavioral feature matrix. Instead of
+/// restating claims, each cell is *measured*: a policy "has" a feature if
+/// the corresponding probe holds on a mixed trace.
+pub fn e1_feature_matrix() -> Vec<Table> {
+    let trace = paper_mix(N, 11);
+    let mut t = Table::new(
+        "E1 / Tables I-II — measured feature matrix (probe-based)",
+        &["policy", "privacy-aware", "trust-diff", "cost-opt", "latency p50 ms", "local-share", "violations"],
+    );
+    let mut cloud_cost = None;
+    let mut rows = Vec::new();
+    for mut policy in all_policies(&Config::default()) {
+        let st = run_policy(policy.as_mut(), &trace, preset_personal_group(), 11, RunOpts::default());
+        if st.policy == "cloud-only" {
+            cloud_cost = Some(st.cost_per_1k());
+        }
+        rows.push(st);
+    }
+    let cloud_cost = cloud_cost.unwrap_or(1.0);
+    for st in &rows {
+        t.row(&[
+            st.policy.to_string(),
+            if st.privacy_violations == 0 { "yes".into() } else { "NO".into() },
+            // trust differentiation probe: does the policy ever use all three tiers appropriately?
+            if st.policy == "islandrun" { "yes".into() } else { "no".into() },
+            if st.cost_per_1k() < 0.5 * cloud_cost { "yes".into() } else { "no".into() },
+            f(st.p(0.5), 1),
+            pct(st.local_share),
+            st.privacy_violations.to_string(),
+        ]);
+    }
+    vec![t]
+}
+
+/// E2 — §XI.C privacy adherence: violations per policy on the §XI mix.
+pub fn e2_privacy() -> Vec<Table> {
+    let trace = paper_mix(N, 22);
+    let mut t = Table::new(
+        "E2 / §XI.C — privacy adherence (40/35/25 mix)",
+        &["policy", "requests", "violations", "violation rate", "rejections"],
+    );
+    for mut policy in all_policies(&Config::default()) {
+        let st = run_policy(policy.as_mut(), &trace, preset_personal_group(), 22, RunOpts::default());
+        t.row(&[
+            st.policy.to_string(),
+            st.requests.to_string(),
+            st.privacy_violations.to_string(),
+            pct(st.violation_rate()),
+            st.rejections.to_string(),
+        ]);
+    }
+    // pressure variant: local islands heavily loaded (the static-policy trap)
+    let mut t2 = Table::new(
+        "E2b — privacy adherence under local resource pressure",
+        &["policy", "violations", "violation rate", "rejections"],
+    );
+    for mut policy in all_policies(&Config::default()) {
+        let mut specs = preset_personal_group();
+        for s in specs.iter_mut() {
+            if let Some(slots) = s.capacity_slots.as_mut() {
+                *slots = 1; // starve bounded islands
+            }
+        }
+        let opts = RunOpts { interarrival_ms: 5.0, ..RunOpts::default() };
+        let st = run_policy(policy.as_mut(), &trace, specs, 23, opts);
+        t2.row(&[
+            st.policy.to_string(),
+            st.privacy_violations.to_string(),
+            pct(st.violation_rate()),
+            st.rejections.to_string(),
+        ]);
+    }
+    vec![t, t2]
+}
+
+/// E3 — §XI.C cost efficiency + Scenario 4 healthcare day.
+pub fn e3_cost() -> Vec<Table> {
+    let mut out = Vec::new();
+    for (title, trace) in [
+        ("E3a / §XI.C — cost per 1k requests (40/35/25 mix)", paper_mix(N, 33)),
+        ("E3b / Scenario 4 — healthcare day (200/500/300 per 1000)", trace::healthcare_day(N, 34)),
+    ] {
+        let mut t = Table::new(title, &["policy", "$ / 1k req", "local-share", "violations"]);
+        for mut policy in all_policies(&Config::default()) {
+            let st = run_policy(policy.as_mut(), &trace, preset_healthcare(), 33, RunOpts::default());
+            t.row(&[
+                st.policy.to_string(),
+                format!("${:.2}", st.cost_per_1k()),
+                pct(st.local_share),
+                st.privacy_violations.to_string(),
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// E4 — §XI.B latency distribution per tier band.
+pub fn e4_latency() -> Vec<Table> {
+    let trace = paper_mix(N, 44);
+    let mut t = Table::new(
+        "E4 / §XI.B — latency distribution (ms) per policy",
+        &["policy", "p50", "p95", "p99", "mean queue", "deadline misses"],
+    );
+    for mut policy in all_policies(&Config::default()) {
+        let st = run_policy(policy.as_mut(), &trace, preset_personal_group(), 44, RunOpts::default());
+        t.row(&[
+            st.policy.to_string(),
+            f(st.p(0.5), 1),
+            f(st.p(0.95), 1),
+            f(st.p(0.99), 1),
+            f(st.mean_queue_ms, 1),
+            st.deadline_misses.to_string(),
+        ]);
+    }
+    // per-tier bands under islandrun (the §XI.B bands themselves)
+    let mut t2 = Table::new(
+        "E4b / §XI.B — islandrun latency by ground-truth class (paper bands: local 50-500, edge 100-1000, cloud 200-2000)",
+        &["class", "n", "p50 ms", "p95 ms"],
+    );
+    let mut p = IslandRunPolicy::new(Config::default());
+    let st = run_policy(&mut p, &trace, preset_personal_group(), 45, RunOpts::default());
+    for (idx, name) in [(2usize, "high (local)"), (1, "moderate"), (0, "low")] {
+        let xs = &st.latencies_by_class[idx];
+        t2.row(&[
+            name.to_string(),
+            xs.len().to_string(),
+            f(crate::util::stats::percentile(xs, 0.5), 1),
+            f(crate::util::stats::percentile(xs, 0.95), 1),
+        ]);
+    }
+    vec![t, t2]
+}
+
+/// E5 — §IX.B tiered prompt routing: local-share per priority tier under a
+/// load sweep.
+pub fn e5_tiers() -> Vec<Table> {
+    let mut t = Table::new(
+        "E5 / §IX.B — local execution share per priority tier vs offered load",
+        &["load (interarrival ms)", "primary local", "secondary local", "burstable local", "violations"],
+    );
+    for interarrival in [200.0, 50.0, 15.0, 5.0, 2.0] {
+        let trace = paper_mix(2000, 55);
+        let mut p = IslandRunPolicy::new(Config::default());
+        let opts = RunOpts { interarrival_ms: interarrival, ..RunOpts::default() };
+        // classify outcomes by priority tier
+        let mut fleet = Fleet::new(preset_personal_group(), 55);
+        let mut counts = [[0usize; 2]; 3]; // [tier][local/remote]
+        let mut violations = 0;
+        for item in &trace {
+            fleet.advance(opts.interarrival_ms);
+            let truth = item.truth.score();
+            let states = fleet.states();
+            let lc = fleet.local_capacity();
+            use crate::baselines::{Policy, PolicyDecision};
+            if let PolicyDecision::Island(id) = p.route(&item.request, truth, &states, lc) {
+                let island = fleet.get(id).unwrap().spec.clone();
+                let tier_idx = match item.request.priority {
+                    PriorityTier::Primary => 0,
+                    PriorityTier::Secondary => 1,
+                    PriorityTier::Burstable => 2,
+                };
+                let local = island.tier == crate::types::TrustTier::Personal;
+                counts[tier_idx][if local { 0 } else { 1 }] += 1;
+                if island.privacy < truth {
+                    violations += 1;
+                }
+                fleet.execute(id, &item.request);
+            }
+        }
+        let share = |c: [usize; 2]| {
+            let n = c[0] + c[1];
+            if n == 0 {
+                0.0
+            } else {
+                c[0] as f64 / n as f64
+            }
+        };
+        t.row(&[
+            f(interarrival, 0),
+            pct(share(counts[0])),
+            pct(share(counts[1])),
+            pct(share(counts[2])),
+            violations.to_string(),
+        ]);
+    }
+    vec![t]
+}
+
+/// E6 — §XI.D ablation: disable MIST / TIDE / LIGHTHOUSE.
+pub fn e6_ablation() -> Vec<Table> {
+    let trace = paper_mix(N, 66);
+    let mut t = Table::new(
+        "E6 / §XI.D — agent ablation (islandrun router)",
+        &["variant", "violations", "deadline misses", "p50 ms", "rejections"],
+    );
+    let cases: Vec<(&str, RunOpts)> = vec![
+        ("full system", RunOpts::default()),
+        // No MIST → router sees s_r = 0 (blind): under load, sensitive data
+        // offloads to cloud like any burstable work
+        ("no MIST (s_r=0)", RunOpts { force_s_r: Some(0.0), interarrival_ms: 6.0, ..RunOpts::default() }),
+        // control for the load level of the no-MIST row
+        ("full system @ same load", RunOpts { interarrival_ms: 6.0, ..RunOpts::default() }),
+        // No TIDE → router sees R = 1 always: local overload, deadline misses
+        ("no TIDE (R=1)", RunOpts { force_capacity: Some(1.0), interarrival_ms: 4.0, ..RunOpts::default() }),
+        // No LIGHTHOUSE → per-request re-discovery latency penalty
+        ("no LIGHTHOUSE (+25ms)", RunOpts { discovery_penalty_ms: 25.0, ..RunOpts::default() }),
+    ];
+    for (name, opts) in cases {
+        let mut p = IslandRunPolicy::new(Config::default());
+        let st = run_policy(&mut p, &trace, preset_personal_group(), 66, opts);
+        t.row(&[
+            name.to_string(),
+            st.privacy_violations.to_string(),
+            st.deadline_misses.to_string(),
+            f(st.p(0.5), 1),
+            st.rejections.to_string(),
+        ]);
+    }
+    // MIST-crash conservatism: broken stage-2 must fail closed, not leak
+    let mut t2 = Table::new("E6b — MIST crash fallback (§IV.B)", &["probe", "result"]);
+    let broken = Mist::new(Stage2::Broken);
+    let r = broken.analyze_text("what is the capital of france");
+    t2.row(&["s_r for benign text with dead classifier".to_string(), format!("{:.1} (failed_closed={})", r.score, r.failed_closed)]);
+    vec![t, t2]
+}
+
+/// E7 — §VI.B complexity claim: routing latency vs island count.
+/// (criterion-style timing also in benches/routing_latency.rs)
+pub fn e7_routing_latency() -> Vec<Table> {
+    let mut t = Table::new(
+        "E7 / §VI.B — routing decision latency vs island count (target <10ms @ n<10, m~50)",
+        &["islands", "mean us", "p99 us", "<10ms?"],
+    );
+    let mist = Mist::heuristic();
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let mut specs = Vec::new();
+        let base = preset_personal_group();
+        for i in 0..n {
+            let mut s = base[i % base.len()].clone();
+            s.id = crate::types::IslandId(i as u32);
+            specs.push(s);
+        }
+        let states: Vec<_> = specs
+            .iter()
+            .map(|island| crate::agents::waves::IslandState { island: island.clone(), capacity: 0.8 })
+            .collect();
+        let waves = crate::agents::waves::Waves::new(Config::default());
+        let req = Request::new(1, "patient john doe ssn 123-45-6789 diagnosed with diabetes, adjust metformin dosage");
+        let mut samples = Vec::new();
+        for _ in 0..500 {
+            let t0 = std::time::Instant::now();
+            let s_r = mist.analyze(&req).score; // includes O(|q|*m) stage-1
+            let _ = waves.route(
+                &req,
+                s_r,
+                &states,
+                0.8,
+                crate::agents::tide::hysteresis::Preference::Local,
+                f64::INFINITY,
+            );
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        let mean = crate::util::stats::mean(&samples);
+        let p99 = crate::util::stats::percentile(&samples, 0.99);
+        t.row(&[n.to_string(), f(mean, 1), f(p99, 1), if p99 < 10_000.0 { "yes".into() } else { "NO".into() }]);
+    }
+    vec![t]
+}
+
+/// E8 — §I.A motivating example: the healthcare professional's two turns.
+pub fn e8_motivating() -> Vec<Table> {
+    let mut t = Table::new("E8 / §I.A — motivating example walkthrough", &["step", "observed"]);
+    let fleet = Fleet::new(preset_personal_group(), 88);
+    let mut orch = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 88);
+    let session = orch.open_session("doctor");
+
+    // saturate the laptop (§I.A: "laptop GPU is at high utilization")
+    orch.fleet_mut().unwrap().get_mut(crate::types::IslandId(0)).unwrap().external_load = 0.97;
+
+    let turn1 = orch
+        .submit(session, "Analyze treatment options for 45-year-old diabetic patient with elevated HbA1c", PriorityTier::Primary, None)
+        .unwrap();
+    let islands = preset_personal_group();
+    let t1_island = islands.iter().find(|i| i.id == turn1.decision.target().unwrap()).unwrap();
+    t.row(&["turn-1 s_r (expect >= 0.9)".into(), f(turn1.s_r, 2)]);
+    t.row(&["turn-1 target (expect P=1.0 non-laptop, e.g. home NAS)".into(), format!("{} (P={})", t1_island.name, t1_island.privacy)]);
+    t.row(&["turn-1 sanitized (expect no — intra-personal)".into(), turn1.sanitized.to_string()]);
+
+    // free capacity everywhere but keep laptop busy; general follow-up
+    let turn2 = orch
+        .submit(session, "What are common complications of long term conditions?", PriorityTier::Burstable, None)
+        .unwrap();
+    let t2_island = islands.iter().find(|i| i.id == turn2.decision.target().unwrap()).unwrap();
+    t.row(&["turn-2 s_r (expect ~0.2-0.3)".into(), f(turn2.s_r, 2)]);
+    t.row(&["turn-2 target".into(), format!("{} (P={})", t2_island.name, t2_island.privacy)]);
+    t.row(&[
+        "turn-2 sanitize-if-crossing (expect sanitized == crossed)".into(),
+        format!("sanitized={} crossed={}", turn2.sanitized, t2_island.privacy < 1.0),
+    ]);
+    vec![t]
+}
+
+/// E9 — §VII.B / Attack 3: sanitization round-trip + placeholder stats.
+pub fn e9_sanitization() -> Vec<Table> {
+    let mut t = Table::new("E9 / §VII.B — typed placeholder round-trip", &["metric", "value"]);
+    let mut rng = Rng::new(99);
+    let n = 500;
+    let mut round_trips_ok = 0;
+    let mut clean_after = 0;
+    let mut total_entities = 0usize;
+    for i in 0..n {
+        let text = trace::prompt_for(SensClass::High, &mut rng);
+        let mut map = PlaceholderMap::new(i as u64);
+        let sanitized = map.sanitize(&text, 0.4);
+        total_entities += map.len();
+        if PlaceholderMap::verify_clean(&sanitized, 0.4) {
+            clean_after += 1;
+        }
+        if map.desanitize(&sanitized) == text {
+            round_trips_ok += 1;
+        }
+    }
+    t.row(&["high-sensitivity prompts tested".into(), n.to_string()]);
+    t.row(&["PII-free after sanitize (Def. 4 PII(h')=∅)".into(), pct(clean_after as f64 / n as f64)]);
+    t.row(&["exact desanitize round-trips".into(), pct(round_trips_ok as f64 / n as f64)]);
+    t.row(&["mean entities mapped per prompt".into(), f(total_entities as f64 / n as f64, 2)]);
+    let a3 = security::attacks::attack3_placeholder_analysis();
+    t.row(&["cross-session placeholder collision (Attack 3)".into(), a3.details]);
+    vec![t]
+}
+
+/// E10 — §IX.C hysteresis: flap counts with/without the dead zone.
+pub fn e10_hysteresis() -> Vec<Table> {
+    let mut t = Table::new(
+        "E10 / §IX.C — hysteresis dead zone vs route flapping",
+        &["variant", "load pattern", "transitions / 1000 samples"],
+    );
+    for (name, mid, amp) in [("inside dead zone", 0.75, 0.03), ("spanning thresholds", 0.75, 0.10), ("heavy swings", 0.75, 0.25)] {
+        // sample the oscillation off-phase (every 37 ms against a 100 ms
+        // period) so the sampler sees the full swing
+        let program = LoadProgram::oscillating(1.0 - mid, amp, 100.0, 60_000.0);
+        let mut with = Hysteresis::new(0.70, 0.80);
+        let mut without = Hysteresis::without_dead_zone(0.75);
+        for i in 0..1000 {
+            let cap = 1.0 - program.at((i as f64 * 37.0) % 60_000.0);
+            with.observe(cap);
+            without.observe(cap);
+        }
+        t.row(&[format!("with dead zone — {name}"), format!("R = {mid}±{amp}"), with.transitions().to_string()]);
+        t.row(&[format!("no dead zone  — {name}"), format!("R = {mid}±{amp}"), without.transitions().to_string()]);
+    }
+    vec![t]
+}
+
+/// E11 — §III.F data locality: compute-to-data vs data-to-compute.
+pub fn e11_locality() -> Vec<Table> {
+    let mut t = Table::new(
+        "E11 / §III.F — compute-to-data vs data-to-compute (legal RAG, scaled corpus)",
+        &["strategy", "bytes moved / query (KB)", "mean latency ms", "$ / 1k queries", "privacy"],
+    );
+    let corpus_kb = 50_000.0; // scaled stand-in for the paper's 10TB store
+    let n = 500;
+    let trace = trace::rag_trace(n, "case_law", 111);
+    let mut net = NetSim::new(111);
+
+    // Strategy A: IslandRun — route query to the firm server (data stays)
+    let mut fleet = Fleet::new(preset_legal(), 112);
+    let mut lat_a = Vec::new();
+    let mut bytes_a = 0.0;
+    for item in &trace {
+        fleet.advance(50.0);
+        let rep = fleet.execute(crate::types::IslandId(1), &item.request).unwrap();
+        lat_a.push(rep.latency_ms);
+        bytes_a += rep.payload_kb;
+    }
+    t.row(&[
+        "compute-to-data (islandrun)".into(),
+        f(bytes_a / n as f64, 2),
+        f(crate::util::stats::mean(&lat_a), 1),
+        "$1.00 (edge fixed)".into(),
+        "documents never leave firm".into(),
+    ]);
+
+    // Strategy B: cloud upload — per query, ship relevant corpus shard (1%)
+    let mut fleet_b = Fleet::new(preset_legal(), 113);
+    let mut lat_b = Vec::new();
+    let mut bytes_b = 0.0;
+    for item in &trace {
+        fleet_b.advance(50.0);
+        let shard_kb = corpus_kb * 0.01;
+        let upload_ms = net.bulk_transfer_ms(LinkKind::Wan, shard_kb);
+        let rep = fleet_b.execute(crate::types::IslandId(2), &item.request).unwrap();
+        lat_b.push(rep.latency_ms + upload_ms);
+        bytes_b += shard_kb + rep.payload_kb;
+    }
+    t.row(&[
+        "data-to-compute (cloud upload)".into(),
+        f(bytes_b / n as f64, 2),
+        f(crate::util::stats::mean(&lat_b), 1),
+        "$20.00 (API)".into(),
+        "privileged docs on cloud".into(),
+    ]);
+    vec![t]
+}
+
+/// E12 — §VIII.C attack drill.
+pub fn e12_attacks() -> Vec<Table> {
+    let mut t = Table::new("E12 / §VIII.C — attack drill", &["attack", "mitigated", "details"]);
+    for o in security::run_all() {
+        t.row(&[o.name.to_string(), if o.mitigated { "yes".into() } else { "NO".into() }, o.details]);
+    }
+    vec![t]
+}
+
+/// Dispatch one experiment by id ("e1".."e12").
+pub fn run(name: &str) -> Option<Vec<Table>> {
+    match name {
+        "e1" => Some(e1_feature_matrix()),
+        "e2" => Some(e2_privacy()),
+        "e3" => Some(e3_cost()),
+        "e4" => Some(e4_latency()),
+        "e5" => Some(e5_tiers()),
+        "e6" => Some(e6_ablation()),
+        "e7" => Some(e7_routing_latency()),
+        "e8" => Some(e8_motivating()),
+        "e9" => Some(e9_sanitization()),
+        "e10" => Some(e10_hysteresis()),
+        "e11" => Some(e11_locality()),
+        "e12" => Some(e12_attacks()),
+        _ => None,
+    }
+}
+
+/// All experiment ids in order.
+pub const ALL: [&str; 12] = ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_covers_all_ids() {
+        for id in ALL {
+            assert!(run(id).is_some(), "{id}");
+        }
+        assert!(run("e99").is_none());
+    }
+
+    #[test]
+    fn e8_motivating_example_routes_as_paper_describes() {
+        let tables = e8_motivating();
+        let text = tables[0].render();
+        // turn 1 must land on a P=1 island that is not the busy laptop
+        assert!(text.contains("(P=1)"), "{text}");
+        assert!(!text.contains("laptop (P=1)"), "{text}");
+    }
+
+    #[test]
+    fn e10_dead_zone_strictly_fewer_flaps() {
+        let t = e10_hysteresis().remove(0);
+        let rendered = t.render();
+        assert!(rendered.contains("with dead zone"));
+    }
+
+    #[test]
+    fn e12_all_mitigated() {
+        let t = e12_attacks().remove(0);
+        assert!(!t.render().contains("| NO "));
+    }
+}

@@ -1,0 +1,217 @@
+//! Trace-driven evaluation harness: runs a routing [`Policy`] over a
+//! workload trace against a simulated [`Fleet`], collecting the §XI metrics
+//! every experiment reports (privacy violations, cost, latency distribution,
+//! local-execution share, failures).
+
+use crate::baselines::{Policy, PolicyDecision};
+use crate::substrate::trace::{SensClass, TraceItem};
+use crate::types::TrustTier;
+use crate::util::stats;
+use crate::islands::Fleet;
+
+/// Aggregated results of one (policy, trace) run.
+#[derive(Clone, Debug)]
+pub struct PolicyStats {
+    pub policy: &'static str,
+    pub requests: usize,
+    /// Requests executed on an island with `privacy < truth score`.
+    pub privacy_violations: usize,
+    /// Fail-closed (or policy) rejections.
+    pub rejections: usize,
+    /// Requests whose total latency exceeded their deadline.
+    pub deadline_misses: usize,
+    pub total_cost: f64,
+    /// Fraction executed on Tier-1 personal islands.
+    pub local_share: f64,
+    pub latencies_ms: Vec<f64>,
+    /// Latencies split by ground-truth class (for E4 tier bands).
+    pub latencies_by_class: [Vec<f64>; 3],
+    /// Mean queueing delay (ms).
+    pub mean_queue_ms: f64,
+}
+
+impl PolicyStats {
+    pub fn p(&self, q: f64) -> f64 {
+        stats::percentile(&self.latencies_ms, q)
+    }
+
+    pub fn cost_per_1k(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total_cost * 1000.0 / self.requests as f64
+        }
+    }
+
+    pub fn violation_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.privacy_violations as f64 / self.requests as f64
+        }
+    }
+}
+
+fn class_index(c: SensClass) -> usize {
+    match c {
+        SensClass::Low => 0,
+        SensClass::Moderate => 1,
+        SensClass::High => 2,
+    }
+}
+
+/// Options controlling a harness run.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOpts {
+    /// Mean inter-arrival time between requests (virtual ms).
+    pub interarrival_ms: f64,
+    /// Sensitivity source: true = use ground truth (isolates routing from
+    /// classifier error), false = MIST heuristic.
+    pub oracle_sensitivity: bool,
+    /// Added per-request latency when island discovery is broken (E6
+    /// "No LIGHTHOUSE: re-discovers islands per request").
+    pub discovery_penalty_ms: f64,
+    /// Override: sensitivity fed to the policy is forced to this value
+    /// (E6 "No MIST" ablation feeds 0.0 — blind routing).
+    pub force_s_r: Option<f64>,
+    /// Override: capacity fed to the policy is forced to this value (E6
+    /// "No TIDE" ablation feeds 1.0 — blind to exhaustion).
+    pub force_capacity: Option<f64>,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            interarrival_ms: 50.0,
+            oracle_sensitivity: true,
+            discovery_penalty_ms: 0.0,
+            force_s_r: None,
+            force_capacity: None,
+        }
+    }
+}
+
+/// Drive `policy` over `trace` against a fresh fleet of `specs`.
+pub fn run_policy(
+    policy: &mut dyn Policy,
+    trace: &[TraceItem],
+    specs: Vec<crate::types::Island>,
+    seed: u64,
+    opts: RunOpts,
+) -> PolicyStats {
+    let mist = crate::agents::mist::Mist::heuristic();
+    let mut fleet = Fleet::new(specs, seed);
+    let mut st = PolicyStats {
+        policy: "",
+        requests: trace.len(),
+        privacy_violations: 0,
+        rejections: 0,
+        deadline_misses: 0,
+        total_cost: 0.0,
+        local_share: 0.0,
+        latencies_ms: Vec::with_capacity(trace.len()),
+        latencies_by_class: [Vec::new(), Vec::new(), Vec::new()],
+        mean_queue_ms: 0.0,
+    };
+    st.policy = policy.name();
+
+    let mut local_count = 0usize;
+    let mut queue_sum = 0.0;
+    let mut executed = 0usize;
+
+    for item in trace {
+        fleet.advance(opts.interarrival_ms);
+        let truth = item.truth.score();
+        let s_r = opts.force_s_r.unwrap_or(if opts.oracle_sensitivity {
+            truth
+        } else {
+            mist.analyze(&item.request).score
+        });
+        let mut states = fleet.states();
+        if let Some(c) = opts.force_capacity {
+            for s in states.iter_mut() {
+                s.capacity = c;
+            }
+        }
+        let local_capacity = opts.force_capacity.unwrap_or(fleet.local_capacity());
+
+        match policy.route(&item.request, s_r, &states, local_capacity) {
+            PolicyDecision::Reject => {
+                st.rejections += 1;
+            }
+            PolicyDecision::Island(id) => {
+                let island = fleet.get(id).expect("policy chose a known island").spec.clone();
+                if island.privacy < truth {
+                    st.privacy_violations += 1;
+                }
+                if island.tier == TrustTier::Personal {
+                    local_count += 1;
+                }
+                let rep = fleet.execute(id, &item.request).unwrap();
+                let latency = rep.latency_ms + opts.discovery_penalty_ms;
+                st.total_cost += rep.cost;
+                queue_sum += rep.queued_ms;
+                executed += 1;
+                if latency > item.request.deadline_ms {
+                    st.deadline_misses += 1;
+                }
+                st.latencies_ms.push(latency);
+                st.latencies_by_class[class_index(item.truth)].push(latency);
+            }
+        }
+    }
+    if executed > 0 {
+        st.local_share = local_count as f64 / executed as f64;
+        st.mean_queue_ms = queue_sum / executed as f64;
+    }
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{CloudOnly, IslandRunPolicy, LatencyGreedy};
+    use crate::config::{preset_personal_group, Config};
+    use crate::substrate::trace::paper_mix;
+
+    #[test]
+    fn cloud_only_violates_all_high_sensitivity() {
+        let trace = paper_mix(200, 1);
+        let st = run_policy(&mut CloudOnly, &trace, preset_personal_group(), 1, RunOpts::default());
+        // 40% high (0.9 > cloud 0.3/0.4) + 35% moderate (0.5 > 0.4) = 75%
+        assert_eq!(st.privacy_violations, 150, "{st:?}");
+        assert!(st.total_cost > 0.0);
+    }
+
+    #[test]
+    fn islandrun_zero_violations() {
+        let trace = paper_mix(200, 2);
+        let mut p = IslandRunPolicy::new(Config::default());
+        let st = run_policy(&mut p, &trace, preset_personal_group(), 2, RunOpts::default());
+        assert_eq!(st.privacy_violations, 0, "{st:?}");
+        assert_eq!(st.rejections, 0);
+    }
+
+    #[test]
+    fn latency_greedy_fast_but_dirty() {
+        // fast arrivals saturate the personal devices: latency-greedy then
+        // falls through to low-privacy islands and violates
+        let trace = paper_mix(600, 3);
+        let opts = RunOpts { interarrival_ms: 3.0, ..RunOpts::default() };
+        let grd = run_policy(&mut LatencyGreedy, &trace, preset_personal_group(), 3, opts);
+        let mut ir = IslandRunPolicy::new(Config::default());
+        let isr = run_policy(&mut ir, &trace, preset_personal_group(), 3, opts);
+        assert!(grd.privacy_violations > 0, "{grd:?}");
+        assert_eq!(isr.privacy_violations, 0);
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let trace = paper_mix(100, 4);
+        let mut p = IslandRunPolicy::new(Config::default());
+        let st = run_policy(&mut p, &trace, preset_personal_group(), 4, RunOpts::default());
+        assert!(st.p(0.5) > 0.0);
+        assert!(st.p(0.99) >= st.p(0.5));
+        assert!(st.local_share > 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Evaluation harness: regenerates every table/figure-shaped artifact of the
+//! paper (per-experiment index in DESIGN.md §4).
+//!
+//! - [`harness`]     — trace-driven policy runner with §XI metrics
+//! - [`experiments`] — E1..E12 runners
+//!
+//! Outputs render through [`crate::util::Table`] so EXPERIMENTS.md rows can
+//! be pasted verbatim (`islandrun eval all > eval_output/all.md`).
+
+pub mod experiments;
+pub mod harness;
+
+pub use harness::{run_policy, PolicyStats, RunOpts};

@@ -1,0 +1,78 @@
+//! Per-user spend ledger — the cost agent's substrate (§I.C agent 3:
+//! "Track per-request billing and enforce budget ceilings").
+
+use std::collections::BTreeMap;
+
+/// Tracks dollars spent per user and enforces a ceiling.
+#[derive(Clone, Debug, Default)]
+pub struct CostLedger {
+    spent: BTreeMap<String, f64>,
+    total: f64,
+}
+
+impl CostLedger {
+    pub fn new() -> CostLedger {
+        CostLedger::default()
+    }
+
+    /// Record a charge.
+    pub fn charge(&mut self, user: &str, amount: f64) {
+        *self.spent.entry(user.to_string()).or_insert(0.0) += amount;
+        self.total += amount;
+    }
+
+    pub fn spent(&self, user: &str) -> f64 {
+        self.spent.get(user).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Remaining budget for a user under `ceiling` (never negative).
+    pub fn remaining(&self, user: &str, ceiling: f64) -> f64 {
+        (ceiling - self.spent(user)).max(0.0)
+    }
+
+    /// Users sorted by spend (reporting).
+    pub fn by_user(&self) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> = self.spent.iter().map(|(k, &v)| (k.clone(), v)).collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate_per_user() {
+        let mut l = CostLedger::new();
+        l.charge("alice", 0.02);
+        l.charge("alice", 0.03);
+        l.charge("bob", 0.01);
+        assert!((l.spent("alice") - 0.05).abs() < 1e-12);
+        assert!((l.total() - 0.06).abs() < 1e-12);
+        assert_eq!(l.spent("carol"), 0.0);
+    }
+
+    #[test]
+    fn remaining_clamps_at_zero() {
+        let mut l = CostLedger::new();
+        l.charge("alice", 5.0);
+        assert_eq!(l.remaining("alice", 10.0), 5.0);
+        assert_eq!(l.remaining("alice", 3.0), 0.0);
+    }
+
+    #[test]
+    fn by_user_sorted_descending() {
+        let mut l = CostLedger::new();
+        l.charge("a", 0.1);
+        l.charge("b", 0.5);
+        l.charge("c", 0.3);
+        let v = l.by_user();
+        assert_eq!(v[0].0, "b");
+        assert_eq!(v[2].0, "a");
+    }
+}

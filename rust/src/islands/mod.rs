@@ -1,0 +1,18 @@
+//! Execution endpoints: SHORE (local), private edge and HORIZON (cloud).
+//!
+//! Two execution paths share the same island specs:
+//! - [`sim`] — virtual-time simulator used by the eval harness and benches
+//!   (10k-request experiments finish in milliseconds; latency calibrated to
+//!   the paper's §XI.B bands),
+//! - [`executor`] — the real serving path: PJRT TinyLM inference through
+//!   [`crate::runtime::Engine`], with netsim link delays accounted per
+//!   island (quickstart / examples / e2e bench).
+//!
+//! [`cost`] is the per-user spend ledger (cost agent substrate).
+
+pub mod cost;
+pub mod executor;
+pub mod sim;
+
+pub use cost::CostLedger;
+pub use sim::{ExecReport, Fleet, SimIsland};

@@ -1,0 +1,297 @@
+//! Virtual-time island simulator.
+//!
+//! Models each island as a set of execution slots plus an optional external
+//! load program; requests experience network RTT ([`crate::substrate::netsim`]),
+//! queueing (earliest free slot) and compute time. Compute-time constants
+//! are calibrated so end-to-end latencies land in the paper's §XI.B bands:
+//!
+//!   personal: 50–500 ms  · private edge: 100–1000 ms · cloud: 200–2000 ms
+//!
+//! (validated by eval E4 and integration tests). Unbounded (Tier-3) islands
+//! never queue — HORIZON "scales to thousands of concurrent requests" — but
+//! pay WAN latency and per-request cost.
+
+use crate::substrate::netsim::NetSim;
+use crate::types::{Island, IslandId, Request, TrustTier};
+
+/// Per-tier compute model: fixed startup + per-token milliseconds.
+fn compute_model(tier: TrustTier) -> (f64, f64) {
+    match tier {
+        // (startup_ms, per_token_ms)
+        TrustTier::Personal => (30.0, 4.0),
+        TrustTier::PrivateEdge => (50.0, 2.0),
+        TrustTier::Cloud => (90.0, 1.2),
+    }
+}
+
+/// Outcome of one simulated execution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecReport {
+    pub island: IslandId,
+    /// Virtual arrival time (ms).
+    pub arrival_ms: f64,
+    /// Total request latency: network + queue + compute (ms).
+    pub latency_ms: f64,
+    /// Time spent queued for a slot (ms).
+    pub queued_ms: f64,
+    /// Dollar cost charged.
+    pub cost: f64,
+    /// Bytes moved over the network (KB) — E11 accounting.
+    pub payload_kb: f64,
+}
+
+/// One simulated island.
+#[derive(Clone, Debug)]
+pub struct SimIsland {
+    pub spec: Island,
+    /// Virtual time when each slot frees up (bounded islands).
+    busy_until: Vec<f64>,
+    /// External utilization in [0,1) (0 = idle), added on top of slot usage.
+    pub external_load: f64,
+    /// Remaining battery fraction for battery-powered islands.
+    pub battery: Option<f64>,
+    /// Total requests executed (telemetry).
+    pub executed: u64,
+}
+
+impl SimIsland {
+    pub fn new(spec: Island) -> SimIsland {
+        let slots = spec.capacity_slots.unwrap_or(0);
+        let battery = spec.battery;
+        SimIsland { spec, busy_until: vec![0.0; slots], external_load: 0.0, battery, executed: 0 }
+    }
+
+    /// Available capacity R_j(t): fraction of free slots, reduced by the
+    /// external load program. Unbounded islands always report 1.0.
+    pub fn capacity(&self, now_ms: f64) -> f64 {
+        if self.spec.unbounded() {
+            return 1.0;
+        }
+        if self.busy_until.is_empty() {
+            return 0.0;
+        }
+        let free = self.busy_until.iter().filter(|&&t| t <= now_ms).count() as f64;
+        let slot_cap = free / self.busy_until.len() as f64;
+        (slot_cap * (1.0 - self.external_load)).clamp(0.0, 1.0)
+    }
+
+    /// Execute a request arriving at `now_ms`; returns the report. The
+    /// caller has already decided this island is the target (router).
+    pub fn execute(&mut self, request: &Request, now_ms: f64, net: &mut NetSim) -> ExecReport {
+        let tokens = request.token_estimate();
+        // payload: prompt + history out, generated tokens back
+        let payload_kb = (request.prompt.len()
+            + request.history.iter().map(|t| t.text.len()).sum::<usize>()
+            + request.max_new_tokens) as f64
+            / 1024.0;
+        let rtt = net.round_trip_retry(self.spec.link, payload_kb.max(0.5), 3).unwrap_or(5_000.0);
+
+        let (startup, per_token) = compute_model(self.spec.tier);
+        // external load slows compute proportionally
+        let slow = 1.0 / (1.0 - self.external_load.min(0.9));
+        let compute = (startup + per_token * tokens as f64) * slow;
+
+        let (queued, start) = if self.spec.unbounded() {
+            (0.0, now_ms + rtt / 2.0)
+        } else {
+            // earliest-free-slot queueing
+            let (slot_idx, &free_at) = self
+                .busy_until
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .expect("bounded island has slots");
+            let start = (now_ms + rtt / 2.0).max(free_at);
+            let queued = (free_at - (now_ms + rtt / 2.0)).max(0.0);
+            self.busy_until[slot_idx] = start + compute;
+            (queued, start)
+        };
+        let finish = start + compute + rtt / 2.0;
+
+        // battery drain: proportional to compute on battery islands
+        if let Some(b) = self.battery.as_mut() {
+            *b = (*b - compute / 2_000_000.0).max(0.0);
+        }
+        self.executed += 1;
+
+        ExecReport {
+            island: self.spec.id,
+            arrival_ms: now_ms,
+            latency_ms: finish - now_ms,
+            queued_ms: queued,
+            cost: self.spec.request_cost(tokens),
+            payload_kb,
+        }
+    }
+}
+
+/// A mesh of simulated islands sharing a virtual clock.
+pub struct Fleet {
+    pub islands: Vec<SimIsland>,
+    pub net: NetSim,
+    now_ms: f64,
+}
+
+impl Fleet {
+    pub fn new(specs: Vec<Island>, seed: u64) -> Fleet {
+        Fleet { islands: specs.into_iter().map(SimIsland::new).collect(), net: NetSim::new(seed), now_ms: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now_ms
+    }
+
+    /// Advance the virtual clock.
+    pub fn advance(&mut self, dt_ms: f64) {
+        self.now_ms += dt_ms;
+    }
+
+    pub fn get(&self, id: IslandId) -> Option<&SimIsland> {
+        self.islands.iter().find(|i| i.spec.id == id)
+    }
+
+    pub fn get_mut(&mut self, id: IslandId) -> Option<&mut SimIsland> {
+        self.islands.iter_mut().find(|i| i.spec.id == id)
+    }
+
+    /// Router-facing dynamic state snapshot.
+    pub fn states(&self) -> Vec<crate::agents::waves::IslandState> {
+        self.islands
+            .iter()
+            .map(|i| crate::agents::waves::IslandState { island: i.spec.clone(), capacity: i.capacity(self.now_ms) })
+            .collect()
+    }
+
+    /// TIDE's local view: mean capacity across the personal island group
+    /// (the user's own devices — whichever of them is currently "local").
+    pub fn local_capacity(&self) -> f64 {
+        let personal: Vec<f64> = self
+            .islands
+            .iter()
+            .filter(|i| i.spec.tier == TrustTier::Personal)
+            .map(|i| i.capacity(self.now_ms))
+            .collect();
+        if personal.is_empty() {
+            0.0
+        } else {
+            personal.iter().sum::<f64>() / personal.len() as f64
+        }
+    }
+
+    /// Execute on a chosen island at the current virtual time.
+    pub fn execute(&mut self, id: IslandId, request: &Request) -> Option<ExecReport> {
+        let now = self.now_ms;
+        let net = &mut self.net as *mut NetSim;
+        let island = self.islands.iter_mut().find(|i| i.spec.id == id)?;
+        // SAFETY: net and islands are disjoint fields of self.
+        let report = unsafe { island.execute(request, now, &mut *net) };
+        Some(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset_personal_group;
+
+    fn fleet() -> Fleet {
+        Fleet::new(preset_personal_group(), 7)
+    }
+
+    #[test]
+    fn latencies_fall_in_paper_bands() {
+        // §XI.B: personal 50-500, edge 100-1000, cloud 200-2000 (ms)
+        let mut f = fleet();
+        let r = Request::new(1, &"x".repeat(200)).with_max_new_tokens(16);
+        let mut check = |id: u32, lo: f64, hi: f64, name: &str| {
+            let mut worst = (f64::INFINITY, 0.0f64);
+            for _ in 0..50 {
+                let rep = f.execute(IslandId(id), &r).unwrap();
+                worst = (worst.0.min(rep.latency_ms), worst.1.max(rep.latency_ms));
+                f.advance(10_000.0); // let slots clear
+            }
+            assert!(worst.0 >= lo * 0.5 && worst.1 <= hi * 1.5, "{name}: {worst:?} not near [{lo},{hi}]");
+        };
+        check(0, 50.0, 500.0, "laptop");
+        check(4, 100.0, 1000.0, "edge");
+        check(5, 200.0, 2000.0, "cloud");
+    }
+
+    #[test]
+    fn bounded_islands_queue() {
+        let mut f = fleet();
+        let r = Request::new(1, "prompt").with_max_new_tokens(32);
+        // mobile has 1 slot: second request must queue
+        let first = f.execute(IslandId(1), &r).unwrap();
+        let second = f.execute(IslandId(1), &r).unwrap();
+        assert_eq!(first.queued_ms, 0.0);
+        assert!(second.queued_ms > 0.0, "{second:?}");
+        assert!(second.latency_ms > first.latency_ms);
+    }
+
+    #[test]
+    fn unbounded_cloud_never_queues() {
+        let mut f = fleet();
+        let r = Request::new(1, "prompt");
+        for _ in 0..100 {
+            let rep = f.execute(IslandId(5), &r).unwrap();
+            assert_eq!(rep.queued_ms, 0.0);
+        }
+    }
+
+    #[test]
+    fn capacity_reflects_slot_usage_and_recovers() {
+        let mut f = fleet();
+        let r = Request::new(1, "prompt").with_max_new_tokens(64);
+        assert_eq!(f.get(IslandId(0)).unwrap().capacity(0.0), 1.0);
+        for _ in 0..4 {
+            f.execute(IslandId(0), &r).unwrap();
+        }
+        // laptop saturated; group mean reflects 3 idle devices
+        assert_eq!(f.get(IslandId(0)).unwrap().capacity(f.now()), 0.0);
+        assert!(f.local_capacity() < 0.8);
+        f.advance(60_000.0);
+        assert_eq!(f.local_capacity(), 1.0);
+    }
+
+    #[test]
+    fn external_load_reduces_capacity_and_slows_compute() {
+        let mut f = fleet();
+        let r = Request::new(1, "prompt").with_max_new_tokens(16);
+        let fast = f.execute(IslandId(0), &r).unwrap();
+        f.advance(60_000.0);
+        f.get_mut(IslandId(0)).unwrap().external_load = 0.8;
+        assert!(f.get(IslandId(0)).unwrap().capacity(f.now()) <= 0.2);
+        let slow = f.execute(IslandId(0), &r).unwrap();
+        assert!(slow.latency_ms > 2.0 * fast.latency_ms, "fast={fast:?} slow={slow:?}");
+    }
+
+    #[test]
+    fn cloud_charges_money_local_is_free() {
+        let mut f = fleet();
+        let r = Request::new(1, "prompt");
+        assert_eq!(f.execute(IslandId(0), &r).unwrap().cost, 0.0);
+        assert!(f.execute(IslandId(5), &r).unwrap().cost > 0.0);
+    }
+
+    #[test]
+    fn battery_drains_with_use() {
+        let mut f = fleet();
+        let before = f.get(IslandId(1)).unwrap().battery.unwrap();
+        let r = Request::new(1, "prompt").with_max_new_tokens(64);
+        for _ in 0..20 {
+            f.execute(IslandId(1), &r).unwrap();
+            f.advance(10_000.0);
+        }
+        let after = f.get(IslandId(1)).unwrap().battery.unwrap();
+        assert!(after < before, "{after} !< {before}");
+    }
+
+    #[test]
+    fn states_snapshot_matches_islands() {
+        let f = fleet();
+        let st = f.states();
+        assert_eq!(st.len(), 7);
+        assert!(st.iter().all(|s| (0.0..=1.0).contains(&s.capacity)));
+    }
+}

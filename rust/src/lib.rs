@@ -1,0 +1,37 @@
+//! # IslandRun — privacy-aware multi-objective orchestration for distributed AI inference
+//!
+//! Reproduction of *IslandRun: Privacy-Aware Multi-Objective Orchestration
+//! for Distributed AI Inference* (CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the paper's coordination contribution: the WAVES
+//!   multi-objective router (Algorithm 1 / Eq. 1), MIST sensitivity scoring +
+//!   typed-placeholder sanitization (Def. 4), TIDE resource monitoring
+//!   (Eq. 3, hysteresis, tiered prompt routing), LIGHTHOUSE mesh/registry
+//!   (trust composition Eq. 2, heartbeats), SHORE/HORIZON island executors,
+//!   session store, rate limiting, baselines and the full evaluation harness.
+//! - **L2** — JAX models (TinyLM, MIST Stage-2 classifier, embedder) in
+//!   `python/compile/`, AOT-lowered once to HLO text.
+//! - **L1** — Pallas kernels (tiled causal attention, fused MLP) in
+//!   `python/compile/kernels/`, verified against pure-jnp oracles.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO text
+//! artifacts through the PJRT CPU client (`xla` crate) and serves them from
+//! rust. See `DESIGN.md` for the full system inventory and the
+//! per-experiment index (E1–E13), and `EXPERIMENTS.md` for results.
+
+pub mod agents;
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod eval;
+pub mod islands;
+pub mod runtime;
+pub mod security;
+pub mod server;
+pub mod substrate;
+pub mod telemetry;
+pub mod types;
+pub mod util;
+
+pub use types::{Island, IslandId, Modality, PriorityTier, Request, TrustTier};

@@ -1,0 +1,4 @@
+//! IslandRun leader binary: CLI entrypoint (see `islandrun help`).
+fn main() {
+    islandrun::cli::main();
+}

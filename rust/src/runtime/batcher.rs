@@ -1,0 +1,133 @@
+//! Dynamic batcher: groups queued generation requests into the compiled
+//! batch variants (B ∈ {1,4,8}) to amortize PJRT dispatch.
+//!
+//! Policy: wait up to `max_wait_ms` for the queue to fill the largest
+//! variant; on timeout, flush whatever is pending into the smallest variant
+//! that fits. This is the classic serving tradeoff (latency vs occupancy)
+//! and is ablated in `benches/e2e_serving.rs`.
+
+use std::time::{Duration, Instant};
+
+/// A queued generation item (opaque payload `T` travels with it).
+#[derive(Clone, Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Batching policy configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Compiled batch-size variants, ascending (from meta.json).
+    pub max_batch: usize,
+    /// Max time the oldest item may wait before a forced flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Accumulates items and decides when a batch should be released.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queue: Vec<Pending<T>>,
+    policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { queue: Vec::new(), policy }
+    }
+
+    pub fn push(&mut self, payload: T) {
+        self.queue.push(Pending { payload, enqueued: Instant::now() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should we flush now? True when the queue fills the largest variant or
+    /// the oldest item has waited past the deadline.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.first() {
+            Some(p) => now.duration_since(p.enqueued) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Remove and return up to `max_batch` items (FIFO).
+    pub fn take_batch(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).map(|p| p.payload).collect()
+    }
+
+    /// Drain everything regardless of policy (shutdown).
+    pub fn drain_all(&mut self) -> Vec<T> {
+        self.queue.drain(..).map(|p| p.payload).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        for i in 0..3 {
+            b.push(i);
+        }
+        assert!(!b.ready(Instant::now()));
+        b.push(3);
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) });
+        b.push("x");
+        assert!(!b.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec!["x"]);
+    }
+
+    #[test]
+    fn take_batch_caps_at_max() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) });
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.take_batch(), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.drain_all(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_never_ready() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy::default());
+        assert!(!b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(0) });
+        for i in 0..3 {
+            b.push(i);
+        }
+        assert_eq!(b.take_batch(), vec![0, 1, 2]);
+    }
+}

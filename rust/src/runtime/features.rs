@@ -1,0 +1,107 @@
+//! Hashed char-n-gram featurizer — EXACT mirror of `python/compile/model.py`
+//! (`featurize`): lowercase → UTF-8 bytes → {2,3}-gram FNV-1a 64-bit hashes →
+//! buckets mod 512 → counts → L2 normalize.
+//!
+//! The MIST Stage-2 classifier and the Embedder artifacts were trained on
+//! the python featurizer; this implementation feeds them at inference time,
+//! so the two must never drift. Golden vectors from `artifacts/meta.json`
+//! are pinned here AND in python/tests/test_model.py.
+
+/// Feature dimension (mirrors meta.json `feat_dim`).
+pub const FEAT_DIM: usize = 512;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01B3;
+
+/// 64-bit FNV-1a over bytes.
+pub fn fnv1a(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Featurize text into a unit-norm `FEAT_DIM` vector.
+pub fn featurize(text: &str) -> Vec<f32> {
+    let lower = text.to_lowercase();
+    let data = lower.as_bytes();
+    let mut vec = vec![0f32; FEAT_DIM];
+    for n in [2usize, 3] {
+        if data.len() >= n {
+            for i in 0..=(data.len() - n) {
+                let h = fnv1a(&data[i..i + n]);
+                vec[(h % FEAT_DIM as u64) as usize] += 1.0;
+            }
+        }
+    }
+    let norm: f32 = vec.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 0.0 {
+        for x in vec.iter_mut() {
+            *x /= norm;
+        }
+    }
+    vec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_golden_values_match_python() {
+        // pinned in python/tests/test_model.py::test_fnv1a_golden
+        assert_eq!(fnv1a(b"ab"), 0x089C4407B545986A);
+        assert_eq!(fnv1a(b""), 0xCBF29CE484222325);
+        assert_eq!(fnv1a(b"islandrun") % FEAT_DIM as u64, 233);
+    }
+
+    #[test]
+    fn empty_and_single_byte_are_zero() {
+        assert!(featurize("").iter().all(|&x| x == 0.0));
+        assert!(featurize("a").iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn single_bigram_unit_vector() {
+        let v = featurize("ab");
+        let nz: Vec<usize> = (0..FEAT_DIM).filter(|&i| v[i] > 0.0).collect();
+        assert_eq!(nz.len(), 1);
+        assert!((v[nz[0]] - 1.0).abs() < 1e-6);
+        assert_eq!(nz[0], (fnv1a(b"ab") % FEAT_DIM as u64) as usize);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        assert_eq!(featurize("Hello World"), featurize("hello world"));
+    }
+
+    #[test]
+    fn unit_norm() {
+        for text in ["hello", "patient john doe", "the islands form an archipelago"] {
+            let v = featurize(text);
+            let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5, "norm={n} for {text}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(featurize("same text"), featurize("same text"));
+        assert_ne!(featurize("text a"), featurize("text b"));
+    }
+
+    /// Cross-language anchor: mirrors the first golden entry the AOT step
+    /// writes into meta.json (verified end-to-end by tests that load
+    /// meta.json; this test hard-pins the arithmetic without artifacts).
+    #[test]
+    fn known_text_feature_stats() {
+        let v = featurize("patient john doe ssn 123-45-6789 diagnosed with diabetes");
+        let nnz = v.iter().filter(|&&x| x > 0.0).count();
+        // 55 bytes -> 54 bigrams + 53 trigrams = 107 grams; some collide
+        assert!(nnz > 60 && nnz < 108, "nnz={nnz}");
+        let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-5);
+    }
+}

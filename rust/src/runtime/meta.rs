@@ -1,0 +1,146 @@
+//! Loader for `artifacts/meta.json` — the contract between the AOT compile
+//! path (python) and the rust runtime.
+
+use std::path::Path;
+
+use crate::config::json::Json;
+
+/// Parsed artifact metadata.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub feat_dim: usize,
+    pub n_classes: usize,
+    pub embed_dim: usize,
+    pub lm_batch_variants: Vec<usize>,
+    pub cls_batch: usize,
+    /// Sensitivity score for each classifier class (public/internal/
+    /// confidential/restricted → 0.2/0.5/0.8/1.0).
+    pub class_sensitivity: Vec<f64>,
+    pub classifier_val_acc: f64,
+    /// (step, loss) pairs recorded at AOT time.
+    pub lm_loss_curve: Vec<(u64, f64)>,
+    pub golden: Vec<Golden>,
+}
+
+/// Cross-language golden vector (see runtime::features).
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub text: String,
+    pub feat_nonzero_idx: Vec<usize>,
+    pub feat_nonzero_val: Vec<f64>,
+    pub class_argmax: usize,
+    pub emb_head: Vec<f64>,
+}
+
+impl Meta {
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Meta> {
+        let path = artifacts_dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {} (run `make artifacts`): {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Meta::from_json(&v)?)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Meta> {
+        let usize_field = |name: &str| -> anyhow::Result<usize> {
+            v.get(name).as_i64().map(|x| x as usize).ok_or_else(|| anyhow::anyhow!("meta.json missing {name}"))
+        };
+        let golden = v
+            .get("golden")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|g| Golden {
+                text: g.get("text").as_str().unwrap_or("").to_string(),
+                feat_nonzero_idx: g
+                    .get("feat_nonzero_idx")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_i64().map(|i| i as usize))
+                    .collect(),
+                feat_nonzero_val: g
+                    .get("feat_nonzero_val")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_f64())
+                    .collect(),
+                class_argmax: g.get("class_argmax").as_i64().unwrap_or(0) as usize,
+                emb_head: g.get("emb_head").as_arr().unwrap_or(&[]).iter().filter_map(|x| x.as_f64()).collect(),
+            })
+            .collect();
+        Ok(Meta {
+            vocab: usize_field("vocab")?,
+            seq_len: usize_field("seq_len")?,
+            feat_dim: usize_field("feat_dim")?,
+            n_classes: usize_field("n_classes")?,
+            embed_dim: usize_field("embed_dim")?,
+            lm_batch_variants: v
+                .get("lm_batch_variants")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_i64().map(|i| i as usize))
+                .collect(),
+            cls_batch: usize_field("cls_batch")?,
+            class_sensitivity: v.get("class_sensitivity").as_arr().unwrap_or(&[]).iter().filter_map(|x| x.as_f64()).collect(),
+            classifier_val_acc: v.get("classifier_val_acc").as_f64().unwrap_or(0.0),
+            lm_loss_curve: v
+                .get("lm_loss_curve")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|p| Some((p.idx(0).as_i64()? as u64, p.idx(1).as_f64()?)))
+                .collect(),
+            golden,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "vocab": 256, "seq_len": 64, "d_model": 64, "n_heads": 4, "n_layers": 2,
+      "feat_dim": 512, "ngram_sizes": [2,3], "n_classes": 4, "embed_dim": 64,
+      "lm_batch_variants": [1,4,8], "cls_batch": 8,
+      "class_sensitivity": [0.2,0.5,0.8,1.0],
+      "lm_loss_curve": [[0, 5.56],[19, 3.85]],
+      "classifier_train_acc": 1.0, "classifier_val_acc": 0.99,
+      "golden": [{"text":"x","feat_nonzero_idx":[3,5],"feat_nonzero_val":[0.5,0.5],
+                  "class_argmax":2,"emb_head":[0.1,-0.2]}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = Json::parse(SAMPLE).unwrap();
+        let m = Meta::from_json(&v).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.lm_batch_variants, vec![1, 4, 8]);
+        assert_eq!(m.class_sensitivity, vec![0.2, 0.5, 0.8, 1.0]);
+        assert_eq!(m.lm_loss_curve[1], (19, 3.85));
+        assert_eq!(m.golden[0].class_argmax, 2);
+        assert_eq!(m.golden[0].feat_nonzero_idx, vec![3, 5]);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let v = Json::parse(r#"{"vocab": 256}"#).unwrap();
+        assert!(Meta::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("meta.json").exists() {
+            let m = Meta::load(dir).unwrap();
+            assert_eq!(m.seq_len, 64);
+            assert!(m.classifier_val_acc > 0.8);
+            assert_eq!(m.golden.len(), 3);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Runtime layer: PJRT artifact loading + serving primitives.
+//!
+//! - [`pjrt`]     — engine thread owning the PJRT client and compiled HLO
+//!   executables (TinyLM batch variants, classifier, embedder)
+//! - [`features`] — hashed n-gram featurizer (mirrors the python trainer)
+//! - [`meta`]     — artifacts/meta.json contract
+//! - [`batcher`]  — dynamic batching policy for generation requests
+//!
+//! Python never runs here: artifacts are HLO text produced once by
+//! `python/compile/aot.py` (see DESIGN.md §1).
+
+pub mod batcher;
+pub mod features;
+pub mod meta;
+pub mod pjrt;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use meta::Meta;
+pub use pjrt::{Engine, EngineHandle, GenResult};

@@ -1,0 +1,193 @@
+//! §VIII.C attack scenarios 1–5, scripted against the real components.
+//!
+//! | # | Attack                               | Expected mitigation          |
+//! |---|--------------------------------------|------------------------------|
+//! | 1 | routing manipulation (fake TIDE)     | hard privacy constraint      |
+//! | 2 | island impersonation                 | attestation at registration  |
+//! | 3 | placeholder frequency analysis       | per-session random ids       |
+//! | 4 | DoS island flooding                  | rate limit + tiered routing  |
+//! | 5 | LIGHTHOUSE byzantine coordinator     | cached list (full BFT = FW)  |
+
+use crate::agents::lighthouse::registry::{RegisterResult, Token};
+use crate::agents::lighthouse::Lighthouse;
+use crate::agents::mist::sanitize::PlaceholderMap;
+use crate::agents::mist::Mist;
+use crate::agents::tide::hysteresis::Preference;
+use crate::agents::waves::Waves;
+use crate::config::{preset_personal_group, Config};
+use crate::islands::Fleet;
+use crate::server::{Backend, Orchestrator};
+use crate::types::{IslandId, PriorityTier, Request};
+
+/// Result of one attack drill.
+#[derive(Clone, Debug)]
+pub struct AttackOutcome {
+    pub name: &'static str,
+    pub mitigated: bool,
+    pub details: String,
+}
+
+/// Attack 1: compromised TIDE reports false local exhaustion, hoping to
+/// force a sensitive request onto the cloud.
+pub fn attack1_routing_manipulation() -> AttackOutcome {
+    let waves = Waves::new(Config::default());
+    let states: Vec<_> = preset_personal_group()
+        .into_iter()
+        .map(|island| {
+            let cap = if island.unbounded() { 1.0 } else { 0.0 }; // forged exhaustion
+            crate::agents::waves::IslandState { island, capacity: cap }
+        })
+        .collect();
+    let request = Request::new(1, "patient john doe ssn 123-45-6789").with_priority(PriorityTier::Primary);
+    let decision = waves.route(&request, 0.9, &states, 0.0, Preference::Cloud, f64::INFINITY);
+    let mitigated = match decision.target() {
+        Some(id) => {
+            let island = states.iter().find(|s| s.island.id == id).unwrap();
+            island.island.privacy >= 0.9
+        }
+        None => true, // fail-closed rejection also preserves privacy
+    };
+    AttackOutcome {
+        name: "A1 routing-manipulation",
+        mitigated,
+        details: format!("decision under forged exhaustion: {decision:?}"),
+    }
+}
+
+/// Attack 2: adversary advertises a fake island claiming T=1.0 / P=1.0.
+pub fn attack2_island_impersonation() -> AttackOutcome {
+    let mut lighthouse = Lighthouse::new(0xA77E57, 500.0, 3);
+    for island in preset_personal_group() {
+        lighthouse.register_owned(island, 0.0);
+    }
+    let mut evil = preset_personal_group().remove(5); // a cloud island…
+    evil.id = IslandId(99);
+    evil.name = "free-gpu-totally-legit".to_string();
+    evil.privacy = 1.0; // …claiming personal-tier privacy
+    // attacker has no mesh secret; tries a guessed token
+    let result = lighthouse.register(evil, Token(0x1337), 0.0);
+    let mitigated = result == RegisterResult::RejectedBadAttestation
+        && !lighthouse.islands().iter().any(|i| i.id == IslandId(99));
+    AttackOutcome { name: "A2 island-impersonation", mitigated, details: format!("registration -> {result:?}") }
+}
+
+/// Attack 3: cloud provider correlates placeholders across sessions to
+/// de-anonymize entities by frequency analysis.
+pub fn attack3_placeholder_analysis() -> AttackOutcome {
+    // The adversary observes the same entity sanitized in many sessions.
+    // Mitigation: per-session random identifiers → cross-session join keys
+    // don't exist. We measure: does the same entity map to the same
+    // placeholder in more than a trivial fraction of session pairs?
+    let entity_text = "john doe has diabetes";
+    let n = 40;
+    let mut ids: Vec<String> = Vec::new();
+    for session in 0..n {
+        let mut map = PlaceholderMap::new(0xC0FFEE ^ (session as u64 * 0x9E3779B9));
+        let s = map.sanitize(entity_text, 0.4);
+        ids.push(s.split_whitespace().next().unwrap_or("").to_string());
+    }
+    let mut collisions = 0;
+    for i in 0..n as usize {
+        for j in (i + 1)..n as usize {
+            if ids[i] == ids[j] {
+                collisions += 1;
+            }
+        }
+    }
+    let pairs = n as usize * (n as usize - 1) / 2;
+    // With ids drawn from ~1000 values, expected collision rate ≈ 0.1%.
+    let rate = collisions as f64 / pairs as f64;
+    AttackOutcome {
+        name: "A3 placeholder-analysis",
+        mitigated: rate < 0.02,
+        details: format!("cross-session placeholder collision rate {:.4} ({collisions}/{pairs})", rate),
+    }
+}
+
+/// Attack 4: flood SHORE with junk to exhaust local resources and push the
+/// victim's sensitive work to the cloud (cost + privacy pressure).
+pub fn attack4_island_flooding() -> AttackOutcome {
+    let mut cfg = Config::default();
+    cfg.rate_limit_rps = 5.0;
+    let fleet = Fleet::new(preset_personal_group(), 3);
+    let mut orch = Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 9);
+    let attacker = orch.open_session("mallory");
+    let victim = orch.open_session("alice");
+
+    let mut flood_admitted = 0;
+    for _ in 0..200 {
+        if orch.submit(attacker, "junk junk junk", PriorityTier::Burstable, None).is_ok() {
+            flood_admitted += 1;
+        }
+    }
+    // victim's primary (sensitive) request must still run on a P=1.0 island
+    let out = orch
+        .submit(victim, "patient john doe ssn 123-45-6789 needs dosage review", PriorityTier::Primary, None)
+        .expect("victim admitted");
+    let victim_private = match out.decision.target() {
+        Some(id) => preset_personal_group().iter().find(|i| i.id == id).map(|i| i.privacy >= 0.9).unwrap_or(false),
+        None => true,
+    };
+    let mitigated = flood_admitted <= 10 && victim_private;
+    AttackOutcome {
+        name: "A4 island-flooding",
+        mitigated,
+        details: format!("flood admitted {flood_admitted}/200; victim on private island: {victim_private}"),
+    }
+}
+
+/// Attack 5: LIGHTHOUSE goes byzantine (crashes / lies); routing must
+/// continue off the cached island list (full BFT is future work, §VIII.C).
+pub fn attack5_lighthouse_byzantine() -> AttackOutcome {
+    let mut lighthouse = Lighthouse::new(5, 500.0, 3);
+    for island in preset_personal_group() {
+        lighthouse.register_owned(island, 0.0);
+    }
+    let before = lighthouse.islands();
+    lighthouse.kill();
+    let cached = lighthouse.islands();
+    let usable = !cached.is_empty() && cached.len() == before.len();
+    // and routing still succeeds against the cached view
+    let waves = Waves::new(Config::default());
+    let states: Vec<_> = cached
+        .iter()
+        .map(|i| crate::agents::waves::IslandState { island: i.clone(), capacity: 1.0 })
+        .collect();
+    let d = waves.route(&Request::new(1, "hello"), 0.2, &states, 1.0, Preference::Local, f64::INFINITY);
+    let mitigated = usable && d.target().is_some();
+    AttackOutcome {
+        name: "A5 lighthouse-byzantine",
+        mitigated,
+        details: format!("cached islands {} / routing ok: {}", cached.len(), d.target().is_some()),
+    }
+}
+
+/// Run the full §VIII.C drill.
+pub fn run_all() -> Vec<AttackOutcome> {
+    vec![
+        attack1_routing_manipulation(),
+        attack2_island_impersonation(),
+        attack3_placeholder_analysis(),
+        attack4_island_flooding(),
+        attack5_lighthouse_byzantine(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_five_attacks_mitigated() {
+        for outcome in run_all() {
+            assert!(outcome.mitigated, "{}: {}", outcome.name, outcome.details);
+        }
+    }
+
+    #[test]
+    fn attack1_details_show_no_cloud_target() {
+        let o = attack1_routing_manipulation();
+        assert!(o.mitigated);
+        assert!(!o.details.contains("island-5") && !o.details.contains("island-6"), "{}", o.details);
+    }
+}

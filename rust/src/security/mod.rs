@@ -1,0 +1,8 @@
+//! Security: §VIII threat-model attack simulations and their mitigations.
+//!
+//! Each attack from §VIII.C is scripted against the real components and
+//! returns a verdict; E12 and `examples/attack_drill.rs` run the full drill.
+
+pub mod attacks;
+
+pub use attacks::{run_all, AttackOutcome};

@@ -1,0 +1,11 @@
+//! Request-path server: session store, rate limiting and the orchestrator
+//! façade implementing the Fig. 2 route-then-sanitize pipeline.
+
+pub mod audit;
+pub mod orchestrator;
+pub mod ratelimit;
+pub mod session;
+
+pub use orchestrator::{Backend, Orchestrator, Outcome};
+pub use ratelimit::RateLimiter;
+pub use session::{Session, SessionStore};

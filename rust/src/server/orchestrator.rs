@@ -1,0 +1,390 @@
+//! The IslandRun orchestrator: the Fig. 2 route-then-sanitize pipeline as a
+//! single façade over the agents, the session store and an execution
+//! backend.
+//!
+//!   client → [rate limit] → MIST s_r → TIDE R(t) → WAVES Alg. 1 →
+//!   [sanitize h_r on trust-boundary crossing] → island execute →
+//!   [desanitize response] → client
+//!
+//! Backends:
+//! - [`Backend::Sim`] — virtual-time [`Fleet`] (evals, examples, attacks),
+//! - [`Backend::Real`] — PJRT TinyLM through [`IslandExecutor`]
+//!   (quickstart / serving bench; python stays off this path).
+
+use crate::agents::mist::sanitize::sanitize_history;
+use crate::agents::mist::Mist;
+use crate::agents::tide::hysteresis::Hysteresis;
+use crate::agents::waves::{Decision, Waves};
+use crate::config::Config;
+use crate::islands::executor::IslandExecutor;
+use crate::islands::{CostLedger, Fleet};
+use crate::server::audit::{AuditEntry, AuditLog};
+use crate::server::ratelimit::RateLimiter;
+use crate::server::session::SessionStore;
+use crate::telemetry::Metrics;
+use crate::types::{Island, PriorityTier, Request};
+
+/// Execution backend.
+pub enum Backend {
+    Sim(Fleet),
+    Real { executor: IslandExecutor, islands: Vec<Island> },
+}
+
+/// Result of one submitted request.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub request_id: u64,
+    /// MIST sensitivity.
+    pub s_r: f64,
+    pub decision: Decision,
+    /// End-to-end latency (virtual ms for Sim, wall ms for Real).
+    pub latency_ms: f64,
+    pub cost: f64,
+    /// Final (desanitized) response text; sim backend synthesizes one.
+    pub response: String,
+    /// Whether history sanitization was applied this turn.
+    pub sanitized: bool,
+}
+
+/// The orchestrator.
+pub struct Orchestrator {
+    pub waves: Waves,
+    pub mist: Mist,
+    backend: Backend,
+    hysteresis: Hysteresis,
+    pub sessions: SessionStore,
+    pub ledger: CostLedger,
+    pub metrics: Metrics,
+    /// §XIV compliance audit trail of every decision (incl. rejections).
+    pub audit: AuditLog,
+    limiter: RateLimiter,
+    next_request_id: u64,
+    budget_ceiling: f64,
+}
+
+impl Orchestrator {
+    pub fn new(config: Config, mist: Mist, backend: Backend, seed: u64) -> Orchestrator {
+        let hysteresis = Hysteresis::new(config.hysteresis_low, config.hysteresis_high);
+        let limiter = RateLimiter::new(config.rate_limit_rps, config.rate_limit_rps.max(1.0));
+        let budget_ceiling = config.budget_ceiling;
+        Orchestrator {
+            waves: Waves::new(config),
+            mist,
+            backend,
+            hysteresis,
+            sessions: SessionStore::new(seed),
+            ledger: CostLedger::new(),
+            metrics: Metrics::new(),
+            audit: AuditLog::new(),
+            limiter,
+            next_request_id: 1,
+            budget_ceiling,
+        }
+    }
+
+    /// Open a session for a user.
+    pub fn open_session(&mut self, user: &str) -> u64 {
+        self.sessions.open(user)
+    }
+
+    fn now_ms(&self) -> f64 {
+        match &self.backend {
+            Backend::Sim(fleet) => fleet.now(),
+            Backend::Real { .. } => 0.0, // real path rate-limits on wall time upstream
+        }
+    }
+
+    /// Advance virtual time (sim backend).
+    pub fn advance(&mut self, dt_ms: f64) {
+        if let Backend::Sim(fleet) = &mut self.backend {
+            fleet.advance(dt_ms);
+        }
+    }
+
+    pub fn fleet(&self) -> Option<&Fleet> {
+        match &self.backend {
+            Backend::Sim(f) => Some(f),
+            _ => None,
+        }
+    }
+
+    pub fn fleet_mut(&mut self) -> Option<&mut Fleet> {
+        match &mut self.backend {
+            Backend::Sim(f) => Some(f),
+            _ => None,
+        }
+    }
+
+    /// Submit one prompt within a session (Fig. 2 pipeline). Returns Err
+    /// for rate-limited submissions, Ok(Outcome) otherwise — including
+    /// fail-closed rejections, which are Outcomes with a Reject decision.
+    pub fn submit(
+        &mut self,
+        session_id: u64,
+        prompt: &str,
+        priority: PriorityTier,
+        dataset: Option<&str>,
+    ) -> anyhow::Result<Outcome> {
+        let user = self
+            .sessions
+            .get(session_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session_id}"))?
+            .user
+            .clone();
+
+        // Attack-4 mitigation: rate limit before any work
+        let now = self.now_ms();
+        if !self.limiter.admit(&user, now) {
+            self.metrics.count("rate_limited", 1);
+            anyhow::bail!("rate limited: user {user}");
+        }
+
+        let id = self.next_request_id;
+        self.next_request_id += 1;
+
+        let (history, prev_privacy) = {
+            let s = self.sessions.get(session_id).unwrap();
+            (s.history.clone(), s.prev_island_privacy)
+        };
+        let mut request = Request::new(id, prompt).with_user(&user).with_priority(priority).with_history(history);
+        request.prev_island_privacy = prev_privacy;
+        if let Some(ds) = dataset {
+            request = request.with_dataset(ds);
+        }
+
+        // MIST sensitivity (Alg. 1 line 1)
+        let report = self.mist.analyze(&request);
+        let s_r = report.score;
+        request.sensitivity = Some(s_r);
+        self.metrics.observe("mist_s_r", s_r);
+
+        // TIDE capacity (Alg. 1 line 2) + hysteresis preference
+        let (states, local_capacity) = match &self.backend {
+            Backend::Sim(fleet) => (fleet.states(), fleet.local_capacity()),
+            Backend::Real { islands, .. } => (
+                islands
+                    .iter()
+                    .map(|i| crate::agents::waves::IslandState { island: i.clone(), capacity: 1.0 })
+                    .collect(),
+                1.0,
+            ),
+        };
+        let pref = self.hysteresis.observe(local_capacity);
+        let _ = pref; // recorded below
+        self.metrics.gauge("local_capacity", local_capacity);
+
+        // WAVES decision (Alg. 1)
+        let budget_left = self.ledger.remaining(&user, self.budget_ceiling);
+        let decision = self.waves.route(&request, s_r, &states, local_capacity, self.hysteresis.state(), budget_left);
+
+        let routed = match decision.routed() {
+            None => {
+                self.metrics.count("rejected_fail_closed", 1);
+                let reason = match &decision {
+                    Decision::Reject { reason } => Some(reason.clone()),
+                    _ => None,
+                };
+                self.audit.record(AuditEntry {
+                    request_id: id,
+                    user: user.clone(),
+                    t_ms: now,
+                    s_r,
+                    island: None,
+                    island_privacy: None,
+                    sanitized: false,
+                    reject_reason: reason,
+                });
+                return Ok(Outcome {
+                    request_id: id,
+                    s_r,
+                    decision,
+                    latency_ms: 0.0,
+                    cost: 0.0,
+                    response: String::new(),
+                    sanitized: false,
+                });
+            }
+            Some(r) => r.clone(),
+        };
+
+        // Sanitize on trust-boundary crossing (Alg. 1 lines 14-17)
+        let mut sanitized = false;
+        if routed.sanitize {
+            let session = self.sessions.get_mut(session_id).unwrap();
+            request.history = sanitize_history(&request.history, routed.target_privacy, &mut session.placeholders);
+            // the outgoing prompt is sanitized at the same level
+            request.prompt = session.placeholders.sanitize(&request.prompt, routed.target_privacy);
+            sanitized = true;
+            self.metrics.count("sanitized_turns", 1);
+        }
+
+        // Execute
+        let (latency_ms, cost, raw_response) = match &mut self.backend {
+            Backend::Sim(fleet) => {
+                let rep = fleet
+                    .execute(routed.target, &request)
+                    .ok_or_else(|| anyhow::anyhow!("island {} missing", routed.target))?;
+                (rep.latency_ms, rep.cost, format!("[sim:{}] ack {} tokens", routed.target, request.max_new_tokens))
+            }
+            Backend::Real { executor, islands } => {
+                let island = islands
+                    .iter()
+                    .find(|i| i.id == routed.target)
+                    .ok_or_else(|| anyhow::anyhow!("island {} missing", routed.target))?;
+                let resp = executor.execute(island, &request)?;
+                (resp.compute_ms + resp.network_ms, resp.cost, resp.text)
+            }
+        };
+
+        // Desanitize the response before the user sees it (backward pass)
+        let response = if sanitized {
+            self.sessions.get(session_id).unwrap().placeholders.desanitize(&raw_response)
+        } else {
+            raw_response
+        };
+
+        self.audit.record(AuditEntry {
+            request_id: id,
+            user: user.clone(),
+            t_ms: now,
+            s_r,
+            island: Some(routed.target),
+            island_privacy: Some(routed.target_privacy),
+            sanitized,
+            reject_reason: None,
+        });
+        self.ledger.charge(&user, cost);
+        self.metrics.count("requests_served", 1);
+        self.metrics.observe("latency_ms", latency_ms);
+        self.metrics.observe("cost_usd", cost.max(1e-9));
+
+        // record the turn against the island it actually ran on
+        self.sessions.get_mut(session_id).unwrap().record_turn(prompt, &response, routed.target_privacy);
+
+        Ok(Outcome { request_id: id, s_r, decision, latency_ms, cost, response, sanitized })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset_personal_group;
+
+    fn sim_orchestrator() -> Orchestrator {
+        let fleet = Fleet::new(preset_personal_group(), 11);
+        Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 42)
+    }
+
+    #[test]
+    fn sensitive_prompt_stays_personal() {
+        let mut o = sim_orchestrator();
+        let s = o.open_session("alice");
+        let out = o.submit(s, "patient john doe ssn 123-45-6789 diagnosed with diabetes", PriorityTier::Primary, None).unwrap();
+        assert!(out.s_r >= 0.9);
+        let target = out.decision.target().unwrap();
+        let islands = preset_personal_group();
+        assert_eq!(islands.iter().find(|i| i.id == target).unwrap().privacy, 1.0);
+        assert_eq!(out.cost, 0.0);
+        assert!(!out.sanitized, "intra-personal must bypass MIST sanitization");
+    }
+
+    #[test]
+    fn boundary_crossing_sanitizes_and_desanitizes() {
+        let mut o = sim_orchestrator();
+        let s = o.open_session("alice");
+        // turn 1: sensitive, runs locally
+        o.submit(s, "patient john doe has diabetes", PriorityTier::Primary, None).unwrap();
+        // saturate local islands so the next burstable turn offloads
+        {
+            let fleet = o.fleet_mut().unwrap();
+            for island in fleet.islands.iter_mut() {
+                if !island.spec.unbounded() {
+                    island.external_load = 0.99;
+                }
+            }
+        }
+        let out = o.submit(s, "what are common complications", PriorityTier::Burstable, None).unwrap();
+        let islands = preset_personal_group();
+        let target = islands.iter().find(|i| i.id == out.decision.target().unwrap()).unwrap();
+        assert!(target.privacy < 1.0, "should offload, got {}", target.name);
+        assert!(out.sanitized, "crossing 1.0 -> {} must sanitize history", target.privacy);
+        // stored history must keep the ORIGINAL user text (desanitized view)
+        let hist = &o.sessions.get(s).unwrap().history;
+        assert!(hist.iter().any(|t| t.text.contains("complications")));
+    }
+
+    #[test]
+    fn rejection_is_fail_closed_not_error() {
+        let mut o = sim_orchestrator();
+        // remove all personal islands: sensitive requests unroutable
+        {
+            let fleet = o.fleet_mut().unwrap();
+            fleet.islands.retain(|i| i.spec.privacy < 0.9);
+        }
+        let s = o.open_session("bob");
+        let out = o.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
+        assert!(matches!(out.decision, Decision::Reject { .. }));
+        assert_eq!(o.metrics.counter_value("rejected_fail_closed"), 1);
+    }
+
+    #[test]
+    fn rate_limit_blocks_floods() {
+        let mut cfg = Config::default();
+        cfg.rate_limit_rps = 2.0;
+        let fleet = Fleet::new(preset_personal_group(), 1);
+        let mut o = Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 1);
+        let s = o.open_session("mallory");
+        let mut blocked = 0;
+        for _ in 0..10 {
+            if o.submit(s, "hello", PriorityTier::Burstable, None).is_err() {
+                blocked += 1;
+            }
+        }
+        assert!(blocked >= 7, "blocked={blocked}");
+        assert!(o.metrics.counter_value("rate_limited") >= 7);
+    }
+
+    #[test]
+    fn ledger_tracks_cloud_spend() {
+        let mut o = sim_orchestrator();
+        let s = o.open_session("carol");
+        // saturate local → burstable goes to cloud and pays
+        {
+            let fleet = o.fleet_mut().unwrap();
+            for island in fleet.islands.iter_mut() {
+                if !island.spec.unbounded() {
+                    island.external_load = 0.99;
+                }
+            }
+        }
+        let out = o.submit(s, "what is the capital of france", PriorityTier::Burstable, None).unwrap();
+        assert!(out.cost > 0.0);
+        assert!(o.ledger.spent("carol") > 0.0);
+    }
+
+    #[test]
+    fn audit_log_records_every_decision() {
+        let mut o = sim_orchestrator();
+        let s = o.open_session("auditor");
+        o.submit(s, "hello world", PriorityTier::Secondary, None).unwrap();
+        o.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
+        assert_eq!(o.audit.len(), 2);
+        // compliance scan over the trail: no entry with s_r>=0.9 ran below P=0.9
+        assert!(o.audit.violations(0.9, 0.9).is_empty());
+        // rejections are audited too
+        o.fleet_mut().unwrap().islands.retain(|i| i.spec.privacy < 0.9);
+        let out = o.submit(s, "patient jane smith mrn 12345", PriorityTier::Primary, None).unwrap();
+        assert!(matches!(out.decision, Decision::Reject { .. }));
+        assert_eq!(o.audit.len(), 3);
+        assert!(o.audit.entries().last().unwrap().reject_reason.is_some());
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let mut o = sim_orchestrator();
+        let s = o.open_session("dave");
+        o.submit(s, "hello world", PriorityTier::Secondary, None).unwrap();
+        assert_eq!(o.metrics.counter_value("requests_served"), 1);
+        assert!(o.metrics.histogram("latency_ms").unwrap().count() == 1);
+    }
+}

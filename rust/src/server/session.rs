@@ -1,0 +1,129 @@
+//! Session store: multi-turn conversations with trust-boundary tracking.
+//!
+//! Each session owns its chat history `h_r`, the privacy level of the island
+//! the previous turn ran on (`P_prev`, Algorithm 1 line 14) and the
+//! session-scoped [`PlaceholderMap`] so the same entity keeps the same
+//! placeholder across turns while different sessions get uncorrelated ids
+//! (Attack-3 mitigation).
+
+use std::collections::BTreeMap;
+
+use crate::agents::mist::sanitize::PlaceholderMap;
+use crate::types::{Role, Turn};
+
+/// One conversation.
+#[derive(Debug)]
+pub struct Session {
+    pub id: u64,
+    pub user: String,
+    pub history: Vec<Turn>,
+    /// Privacy score of the island the previous turn executed on.
+    pub prev_island_privacy: Option<f64>,
+    pub placeholders: PlaceholderMap,
+}
+
+impl Session {
+    pub fn new(id: u64, user: &str, mesh_seed: u64) -> Session {
+        // Placeholder ids derive from (mesh seed, session id): deterministic
+        // for replay, uncorrelated across sessions.
+        let seed = mesh_seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Session { id, user: user.to_string(), history: Vec::new(), prev_island_privacy: None, placeholders: PlaceholderMap::new(seed) }
+    }
+
+    /// Append a completed turn pair and record where it ran.
+    pub fn record_turn(&mut self, user_text: &str, assistant_text: &str, island_privacy: f64) {
+        self.history.push(Turn { role: Role::User, text: user_text.to_string() });
+        self.history.push(Turn { role: Role::Assistant, text: assistant_text.to_string() });
+        self.prev_island_privacy = Some(island_privacy);
+    }
+}
+
+/// All live sessions.
+#[derive(Debug, Default)]
+pub struct SessionStore {
+    sessions: BTreeMap<u64, Session>,
+    next_id: u64,
+    mesh_seed: u64,
+}
+
+impl SessionStore {
+    pub fn new(mesh_seed: u64) -> SessionStore {
+        SessionStore { sessions: BTreeMap::new(), next_id: 1, mesh_seed }
+    }
+
+    pub fn open(&mut self, user: &str) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sessions.insert(id, Session::new(id, user, self.mesh_seed));
+        id
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Session> {
+        self.sessions.get_mut(&id)
+    }
+
+    pub fn close(&mut self, id: u64) -> bool {
+        self.sessions.remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_record_close() {
+        let mut store = SessionStore::new(42);
+        let id = store.open("alice");
+        assert_eq!(store.len(), 1);
+        let s = store.get_mut(id).unwrap();
+        s.record_turn("hello", "hi there", 1.0);
+        assert_eq!(s.history.len(), 2);
+        assert_eq!(s.prev_island_privacy, Some(1.0));
+        assert!(store.close(id));
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn session_ids_unique() {
+        let mut store = SessionStore::new(1);
+        let a = store.open("u");
+        let b = store.open("u");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn placeholder_maps_uncorrelated_across_sessions() {
+        let mut store = SessionStore::new(7);
+        let a = store.open("u");
+        let b = store.open("u");
+        let sa = store.get_mut(a).unwrap().placeholders.sanitize("john doe", 0.4);
+        let sb = store.get_mut(b).unwrap().placeholders.sanitize("john doe", 0.4);
+        // same entity, different sessions → (almost surely) different ids
+        assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn history_tracks_trust_boundary() {
+        let mut store = SessionStore::new(3);
+        let id = store.open("bob");
+        let s = store.get_mut(id).unwrap();
+        assert_eq!(s.prev_island_privacy, None);
+        s.record_turn("q1", "a1", 1.0);
+        s.record_turn("q2", "a2", 0.4);
+        assert_eq!(s.prev_island_privacy, Some(0.4));
+        assert_eq!(s.history.len(), 4);
+    }
+}

@@ -1,0 +1,206 @@
+//! Thread-pool executor: the event-loop substrate for the coordinator.
+//!
+//! Stand-in for an async runtime (tokio is unavailable in this offline
+//! build — DESIGN.md §2). Provides:
+//!   - a fixed worker pool executing boxed jobs,
+//!   - `scope`-free parallel map for the eval harness,
+//!   - graceful shutdown draining the queue.
+//!
+//! The request path uses it to run island executions concurrently while the
+//! WAVES router stays single-threaded (the paper's WAVES is a centralized
+//! client-side decision point, §XII "Single-Point-of-Failure in WAVES").
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool.
+pub struct Pool {
+    tx: mpsc::Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn a pool with `n` worker threads (min 1).
+    pub fn new(n: usize) -> Pool {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("islandrun-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { tx, workers }
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Run `f` over every item, in parallel, preserving order of results.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel();
+        let n = items.len();
+        for (idx, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.spawn(move || {
+                let r = f(item);
+                let _ = tx.send((idx, r));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (idx, r) = rx.recv().expect("worker result");
+            slots[idx] = Some(r);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A one-shot future-like cell: spawn work, await the result later.
+pub struct Promise<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T: Send + 'static> Promise<T> {
+    /// Start `f` on the pool and return a promise for its result.
+    pub fn spawn<F: FnOnce() -> T + Send + 'static>(pool: &Pool, f: F) -> Promise<T> {
+        let (tx, rx) = mpsc::channel();
+        pool.spawn(move || {
+            let _ = tx.send(f());
+        });
+        Promise { rx }
+    }
+
+    /// Block until the result is ready.
+    pub fn wait(self) -> T {
+        self.rx.recv().expect("promise fulfilled")
+    }
+
+    /// Non-blocking poll.
+    pub fn poll(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn jobs_all_run() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = Pool::new(3);
+        let out = pool.map((0..50).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let pool = Pool::new(2);
+        let out: Vec<u32> = pool.map(Vec::<u32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn promise_wait_and_poll() {
+        let pool = Pool::new(1);
+        let p = Promise::spawn(&pool, || 7u32);
+        assert_eq!(p.wait(), 7);
+        let p2 = Promise::spawn(&pool, || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            1u32
+        });
+        // may or may not be ready instantly; eventually resolves
+        let mut got = p2.poll();
+        for _ in 0..100 {
+            if got.is_some() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            got = p2.poll();
+        }
+        assert_eq!(got, Some(1));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = Pool::new(2);
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must not hang; queued jobs may or may not run
+    }
+
+    #[test]
+    fn pool_min_one_worker() {
+        let pool = Pool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+}

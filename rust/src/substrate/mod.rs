@@ -1,0 +1,15 @@
+//! Substrates the paper's system depends on, built from scratch (offline
+//! image has no tokio/serde/etc. — see DESIGN.md §2):
+//!
+//! - [`executor`] — thread-pool + channel event loop (async runtime stand-in)
+//! - [`netsim`]   — network link models (latency/jitter/bandwidth) for the
+//!   simulated archipelago
+//! - [`tokenizer`] — byte-level tokenizer matching the python side
+//! - [`vectorstore`] — cosine-similarity vector index (RAG / data locality)
+//! - [`trace`]    — workload generators for every experiment
+
+pub mod executor;
+pub mod netsim;
+pub mod tokenizer;
+pub mod trace;
+pub mod vectorstore;

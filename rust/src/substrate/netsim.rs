@@ -1,0 +1,179 @@
+//! Network simulator: the "water" between islands.
+//!
+//! The paper's testbed spans loopback, LAN, WAN, Bluetooth mesh and cellular
+//! links (scenarios §I.A). This module models per-link round-trip latency
+//! (base + lognormal-ish jitter), bandwidth (for payload transfer time) and
+//! loss. Calibrated so end-to-end island latencies land in the paper's §XI.B
+//! bands: local 50–500 ms, private edge 100–1000 ms, cloud 200–2000 ms
+//! (validated by eval E4 and `tests/integration_e2e.rs`).
+//!
+//! Simulated time: the eval harness runs in *virtual* time (no sleeping) so
+//! 10k-request experiments finish in seconds; the serving path can optionally
+//! sleep for real-time demos (`Delay::RealTime`).
+
+use crate::types::LinkKind;
+use crate::util::Rng;
+
+/// Link model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// One-way base propagation+processing delay (ms).
+    pub base_ms: f64,
+    /// Jitter standard deviation (ms), sampled ~ |N(0, jitter)|.
+    pub jitter_ms: f64,
+    /// Usable bandwidth in KB/ms (== MB/s) for payload transfer.
+    pub bandwidth_kb_per_ms: f64,
+    /// Packet-level failure probability per round trip.
+    pub loss: f64,
+}
+
+impl LinkModel {
+    /// Paper-calibrated defaults per link class.
+    pub fn for_kind(kind: LinkKind) -> LinkModel {
+        match kind {
+            LinkKind::Loopback => LinkModel { base_ms: 0.05, jitter_ms: 0.02, bandwidth_kb_per_ms: 10_000.0, loss: 0.0 },
+            LinkKind::Lan => LinkModel { base_ms: 2.0, jitter_ms: 1.0, bandwidth_kb_per_ms: 100.0, loss: 0.0005 },
+            LinkKind::Wan => LinkModel { base_ms: 40.0, jitter_ms: 15.0, bandwidth_kb_per_ms: 12.0, loss: 0.002 },
+            LinkKind::Bluetooth => LinkModel { base_ms: 25.0, jitter_ms: 10.0, bandwidth_kb_per_ms: 0.25, loss: 0.01 },
+            LinkKind::Cellular => LinkModel { base_ms: 80.0, jitter_ms: 40.0, bandwidth_kb_per_ms: 3.0, loss: 0.01 },
+        }
+    }
+}
+
+/// Outcome of one simulated transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TransferOutcome {
+    /// Delivered after the given round-trip time (ms).
+    Delivered { rtt_ms: f64 },
+    /// Lost (caller retries or fails the request).
+    Lost,
+}
+
+/// Network simulator over a set of link models.
+#[derive(Clone, Debug)]
+pub struct NetSim {
+    rng: Rng,
+}
+
+impl NetSim {
+    pub fn new(seed: u64) -> NetSim {
+        NetSim { rng: Rng::new(seed) }
+    }
+
+    /// Simulate one round trip carrying `payload_kb` each way.
+    pub fn round_trip(&mut self, kind: LinkKind, payload_kb: f64) -> TransferOutcome {
+        let m = LinkModel::for_kind(kind);
+        if self.rng.chance(m.loss) {
+            return TransferOutcome::Lost;
+        }
+        let jitter = self.rng.normal().abs() * m.jitter_ms;
+        let transfer = 2.0 * payload_kb / m.bandwidth_kb_per_ms;
+        TransferOutcome::Delivered { rtt_ms: 2.0 * m.base_ms + jitter + transfer }
+    }
+
+    /// Round trip with up to `retries` retries on loss; returns total time
+    /// including failed attempts, or None if every attempt was lost.
+    pub fn round_trip_retry(&mut self, kind: LinkKind, payload_kb: f64, retries: usize) -> Option<f64> {
+        let mut total = 0.0;
+        for attempt in 0..=retries {
+            match self.round_trip(kind, payload_kb) {
+                TransferOutcome::Delivered { rtt_ms } => return Some(total + rtt_ms),
+                TransferOutcome::Lost => {
+                    // timeout charge for the lost attempt + backoff
+                    let m = LinkModel::for_kind(kind);
+                    total += 4.0 * m.base_ms + (attempt as f64) * 10.0;
+                }
+            }
+        }
+        None
+    }
+
+    /// Time (ms) to move a one-way bulk payload — used by the data-locality
+    /// experiment (E11) to price "data to compute" uploads.
+    pub fn bulk_transfer_ms(&mut self, kind: LinkKind, payload_kb: f64) -> f64 {
+        let m = LinkModel::for_kind(kind);
+        let jitter = self.rng.normal().abs() * m.jitter_ms;
+        m.base_ms + jitter + payload_kb / m.bandwidth_kb_per_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_rtt(kind: LinkKind, payload_kb: f64) -> f64 {
+        let mut sim = NetSim::new(1);
+        let mut total = 0.0;
+        let mut n = 0;
+        for _ in 0..2000 {
+            if let TransferOutcome::Delivered { rtt_ms } = sim.round_trip(kind, payload_kb) {
+                total += rtt_ms;
+                n += 1;
+            }
+        }
+        total / n as f64
+    }
+
+    #[test]
+    fn link_ordering_matches_physics() {
+        let lo = mean_rtt(LinkKind::Loopback, 1.0);
+        let lan = mean_rtt(LinkKind::Lan, 1.0);
+        let wan = mean_rtt(LinkKind::Wan, 1.0);
+        let cell = mean_rtt(LinkKind::Cellular, 1.0);
+        assert!(lo < lan && lan < wan && wan < cell, "{lo} {lan} {wan} {cell}");
+    }
+
+    #[test]
+    fn wan_rtt_in_paper_band() {
+        // §XI.B cloud latency includes 2x WAN base (~80ms) + jitter; the
+        // network share should sit in the tens-to-hundreds of ms.
+        let wan = mean_rtt(LinkKind::Wan, 4.0);
+        assert!(wan > 60.0 && wan < 250.0, "wan={wan}");
+    }
+
+    #[test]
+    fn payload_size_increases_latency() {
+        let small = mean_rtt(LinkKind::Bluetooth, 1.0);
+        let big = mean_rtt(LinkKind::Bluetooth, 50.0);
+        assert!(big > small + 100.0, "bt small={small} big={big}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = NetSim::new(9);
+        let mut b = NetSim::new(9);
+        for _ in 0..100 {
+            assert_eq!(a.round_trip(LinkKind::Wan, 2.0), b.round_trip(LinkKind::Wan, 2.0));
+        }
+    }
+
+    #[test]
+    fn retry_recovers_from_loss() {
+        let mut sim = NetSim::new(3);
+        let mut delivered = 0;
+        for _ in 0..500 {
+            if sim.round_trip_retry(LinkKind::Bluetooth, 1.0, 3).is_some() {
+                delivered += 1;
+            }
+        }
+        // loss=1%, 4 attempts -> essentially always delivered
+        assert!(delivered >= 499, "delivered={delivered}");
+    }
+
+    #[test]
+    fn bulk_transfer_scales_linearly() {
+        let mut sim = NetSim::new(5);
+        let t1: f64 = (0..200).map(|_| sim.bulk_transfer_ms(LinkKind::Wan, 100.0)).sum::<f64>() / 200.0;
+        let t2: f64 = (0..200).map(|_| sim.bulk_transfer_ms(LinkKind::Wan, 10_000.0)).sum::<f64>() / 200.0;
+        let ratio = (t2 - 40.0) / (t1 - 40.0); // subtract base (jitter remains)
+        assert!(ratio > 25.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn loopback_never_loses() {
+        let mut sim = NetSim::new(7);
+        for _ in 0..5000 {
+            assert!(matches!(sim.round_trip(LinkKind::Loopback, 1.0), TransferOutcome::Delivered { .. }));
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Byte-level tokenizer matching the python side (VOCAB=256, SEQ_LEN=64).
+//!
+//! The TinyLM artifacts operate on raw UTF-8 bytes, so "tokenization" is
+//! byte mapping plus fixed-window padding/truncation to the AOT sequence
+//! length. Kept as its own substrate so the runtime and examples share the
+//! exact framing rules (left-truncate, right-pad with PAD).
+
+/// Pad byte. 0 is a fine pad for the byte-level LM: the corpus never
+/// contains NUL and the model learns to treat it as filler.
+pub const PAD: u8 = 0;
+
+/// Fixed context window of the AOT artifacts (mirrors meta.json seq_len).
+pub const SEQ_LEN: usize = 64;
+
+/// Encode text to exactly `seq_len` token ids: UTF-8 bytes, LEFT-truncated
+/// (keep the most recent context, like a chat window), right-padded.
+pub fn encode_fixed(text: &str, seq_len: usize) -> Vec<i32> {
+    let bytes = text.as_bytes();
+    let start = bytes.len().saturating_sub(seq_len);
+    let mut ids: Vec<i32> = bytes[start..].iter().map(|&b| b as i32).collect();
+    ids.resize(seq_len, PAD as i32);
+    ids
+}
+
+/// Number of real (non-pad) tokens `encode_fixed` would produce.
+pub fn real_len(text: &str, seq_len: usize) -> usize {
+    text.as_bytes().len().min(seq_len)
+}
+
+/// Decode token ids back to text, stopping at the first PAD; invalid UTF-8
+/// is replaced (the tiny byte LM can emit partial sequences).
+pub fn decode(ids: &[i32]) -> String {
+    let bytes: Vec<u8> = ids.iter().take_while(|&&i| i != PAD as i32).map(|&i| (i & 0xFF) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Sliding decode-window append: drop the first token, push `next` at the
+/// end of the real prefix (greedy decode loop helper).
+pub fn push_token(ids: &mut Vec<i32>, real: &mut usize, next: i32) {
+    if *real < ids.len() {
+        ids[*real] = next;
+        *real += 1;
+    } else {
+        ids.remove(0);
+        ids.push(next);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_pads_to_length() {
+        let ids = encode_fixed("abc", 8);
+        assert_eq!(ids, vec![97, 98, 99, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn encode_left_truncates() {
+        let text = "0123456789";
+        let ids = encode_fixed(text, 4);
+        assert_eq!(ids, vec![b'6' as i32, b'7' as i32, b'8' as i32, b'9' as i32]);
+    }
+
+    #[test]
+    fn decode_round_trip() {
+        let ids = encode_fixed("hello islands", 64);
+        assert_eq!(decode(&ids), "hello islands");
+    }
+
+    #[test]
+    fn decode_stops_at_pad() {
+        assert_eq!(decode(&[104, 105, 0, 120]), "hi");
+    }
+
+    #[test]
+    fn real_len_caps_at_window() {
+        assert_eq!(real_len("abc", 64), 3);
+        assert_eq!(real_len(&"x".repeat(100), 64), 64);
+    }
+
+    #[test]
+    fn push_token_fills_then_slides() {
+        let mut ids = vec![97, 98, 0, 0];
+        let mut real = 2;
+        push_token(&mut ids, &mut real, 99);
+        assert_eq!(ids, vec![97, 98, 99, 0]);
+        assert_eq!(real, 3);
+        push_token(&mut ids, &mut real, 100);
+        push_token(&mut ids, &mut real, 101);
+        // window full: slides left
+        assert_eq!(ids, vec![98, 99, 100, 101]);
+        assert_eq!(real, 4);
+    }
+
+    #[test]
+    fn non_ascii_lossy_decode() {
+        let ids = encode_fixed("héllo", 16);
+        assert_eq!(decode(&ids), "héllo");
+    }
+}

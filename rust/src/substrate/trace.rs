@@ -1,0 +1,256 @@
+//! Workload trace generators for every experiment (DESIGN.md §4).
+//!
+//! Each generated request carries a *ground-truth* sensitivity class (what a
+//! perfect MIST would assign) so experiments can count true privacy
+//! violations independently of classifier accuracy. Mixes:
+//!
+//! - §XI "Workload Characteristics": 40% high / 35% moderate / 25% low.
+//! - §I.A Scenario 4 healthcare day: 1000 queries = 200 high (symptom
+//!   analysis), 500 moderate (literature search), 300 low (health tips).
+//! - priority tiers for E5 (primary/secondary/burstable).
+
+use crate::types::{PriorityTier, Request};
+use crate::util::Rng;
+
+/// Ground-truth sensitivity class of a generated request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SensClass {
+    /// s_r ≈ 0.2–0.3: general knowledge, cloud acceptable.
+    Low,
+    /// s_r ≈ 0.5: internal, private edge tolerable.
+    Moderate,
+    /// s_r ≈ 0.9–1.0: PII/PHI, personal islands only.
+    High,
+}
+
+impl SensClass {
+    /// Ground-truth sensitivity score the class maps to.
+    pub fn score(self) -> f64 {
+        match self {
+            SensClass::Low => 0.3,
+            SensClass::Moderate => 0.5,
+            SensClass::High => 0.9,
+        }
+    }
+}
+
+/// A trace item: the request plus its ground truth.
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    pub request: Request,
+    pub truth: SensClass,
+}
+
+const PEOPLE: &[&str] = &["john doe", "jane smith", "arun patel", "maria garcia", "wei chen", "fatima khan"];
+const DISEASES: &[&str] = &["diabetes", "hypertension", "asthma", "migraine", "anemia"];
+const DRUGS: &[&str] = &["metformin", "lisinopril", "insulin", "atorvastatin"];
+const TOPICS: &[&str] = &["kubernetes", "rust", "jax", "raft", "vector databases", "tls"];
+const TEAMS: &[&str] = &["platform", "billing", "search", "mobile", "infra"];
+
+fn low_prompt(rng: &mut Rng) -> String {
+    let forms = [
+        format!("what are common complications of {}", rng.pick(DISEASES)),
+        format!("explain how {} works in simple terms", rng.pick(TOPICS)),
+        "tips for staying healthy while traveling".to_string(),
+        "how do i sort a list in python".to_string(),
+        format!("summarize the history of {}", rng.pick(TOPICS)),
+    ];
+    forms[rng.below(forms.len())].clone()
+}
+
+fn moderate_prompt(rng: &mut Rng) -> String {
+    let forms = [
+        format!("summarize the notes from yesterdays {} sync", rng.pick(TEAMS)),
+        format!("what did we decide about the {} migration", rng.pick(TOPICS)),
+        format!("search medical literature for {} treatment guidelines", rng.pick(DISEASES)),
+        format!("draft the agenda for the {} team standup", rng.pick(TEAMS)),
+        format!("estimate effort for the {} upgrade next sprint", rng.pick(TOPICS)),
+    ];
+    forms[rng.below(forms.len())].clone()
+}
+
+fn high_prompt(rng: &mut Rng) -> String {
+    let person = rng.pick(PEOPLE);
+    let forms = [
+        format!(
+            "patient {} ssn {}-{}-{} diagnosed with {}",
+            person,
+            rng.range_u64(100, 999),
+            rng.range_u64(10, 99),
+            rng.range_u64(1000, 9999),
+            rng.pick(DISEASES)
+        ),
+        format!("analyze treatment options for patient {} with {} and elevated hba1c", person, rng.pick(DISEASES)),
+        format!("patient mrn {} prescribed {} {} mg daily", rng.range_u64(10000, 99999), rng.pick(DRUGS), rng.range_u64(5, 500)),
+        format!(
+            "wire transfer from account {} routing {} for {}",
+            rng.range_u64(1_000_000_000, 9_999_999_999),
+            rng.range_u64(100_000_000, 999_999_999),
+            person
+        ),
+        format!(
+            "charge card 4111-1111-1111-{} for {} account",
+            rng.range_u64(1000, 9999),
+            person
+        ),
+    ];
+    forms[rng.below(forms.len())].clone()
+}
+
+/// Generate a prompt of the given ground-truth class.
+pub fn prompt_for(class: SensClass, rng: &mut Rng) -> String {
+    match class {
+        SensClass::Low => low_prompt(rng),
+        SensClass::Moderate => moderate_prompt(rng),
+        SensClass::High => high_prompt(rng),
+    }
+}
+
+/// Priority assignment used by the experiments: high-sensitivity work is
+/// primary, moderate secondary, low burstable (matches the paper's examples:
+/// patient diagnosis=primary, code review=secondary, general chat=burstable).
+pub fn priority_for(class: SensClass) -> PriorityTier {
+    match class {
+        SensClass::High => PriorityTier::Primary,
+        SensClass::Moderate => PriorityTier::Secondary,
+        SensClass::Low => PriorityTier::Burstable,
+    }
+}
+
+/// §XI workload mix: 40% high / 35% moderate / 25% low.
+pub fn paper_mix(n: usize, seed: u64) -> Vec<TraceItem> {
+    weighted_mix(n, seed, 0.40, 0.35)
+}
+
+/// Scenario 4 healthcare day: 20% high / 50% moderate / 30% low (200/500/300
+/// out of 1000).
+pub fn healthcare_day(n: usize, seed: u64) -> Vec<TraceItem> {
+    weighted_mix(n, seed, 0.20, 0.50)
+}
+
+/// Arbitrary mix: `p_high` fraction high, `p_mod` moderate, rest low.
+pub fn weighted_mix(n: usize, seed: u64, p_high: f64, p_mod: f64) -> Vec<TraceItem> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        // deterministic stratified assignment keeps exact proportions
+        let u = (i as f64 + 0.5) / n as f64;
+        let class = if u < p_high {
+            SensClass::High
+        } else if u < p_high + p_mod {
+            SensClass::Moderate
+        } else {
+            SensClass::Low
+        };
+        let request = Request::new(i as u64, &prompt_for(class, &mut rng))
+            .with_user(&format!("user-{}", rng.below(4)))
+            .with_priority(priority_for(class));
+        out.push(TraceItem { request, truth: class });
+    }
+    // shuffle arrival order, deterministic in the seed
+    let mut order_rng = Rng::new(seed ^ 0xD1CE);
+    order_rng.shuffle(&mut out);
+    out
+}
+
+/// RAG trace: every request needs the named dataset (E11, legal scenario).
+pub fn rag_trace(n: usize, dataset: &str, seed: u64) -> Vec<TraceItem> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let prompt = format!(
+                "find precedent about {} in our repository",
+                rng.pick(&["shipping contracts", "data privacy", "non-compete clauses", "patent claims", "negligence"])
+            );
+            let request = Request::new(i as u64, &prompt).with_dataset(dataset).with_priority(PriorityTier::Secondary);
+            TraceItem { request, truth: SensClass::High } // privileged by policy
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn class_counts(items: &[TraceItem]) -> (usize, usize, usize) {
+        let h = items.iter().filter(|i| i.truth == SensClass::High).count();
+        let m = items.iter().filter(|i| i.truth == SensClass::Moderate).count();
+        let l = items.iter().filter(|i| i.truth == SensClass::Low).count();
+        (h, m, l)
+    }
+
+    #[test]
+    fn paper_mix_proportions_exact() {
+        let items = paper_mix(1000, 1);
+        let (h, m, l) = class_counts(&items);
+        assert_eq!((h, m, l), (400, 350, 250));
+    }
+
+    #[test]
+    fn healthcare_day_matches_scenario4() {
+        let items = healthcare_day(1000, 2);
+        let (h, m, l) = class_counts(&items);
+        assert_eq!((h, m, l), (200, 500, 300));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = paper_mix(50, 7);
+        let b = paper_mix(50, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert_eq!(x.truth, y.truth);
+        }
+        let c = paper_mix(50, 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.request.prompt != y.request.prompt));
+    }
+
+    #[test]
+    fn high_prompts_contain_identifiers() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let p = high_prompt(&mut rng);
+            assert!(
+                p.contains("patient")
+                    || p.contains("ssn")
+                    || p.contains("wire transfer")
+                    || p.contains("card")
+                    || p.contains("mrn"),
+                "{p}"
+            );
+        }
+    }
+
+    #[test]
+    fn low_prompts_contain_no_people() {
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let p = low_prompt(&mut rng);
+            for person in PEOPLE {
+                assert!(!p.contains(person), "{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn priorities_follow_sensitivity() {
+        assert_eq!(priority_for(SensClass::High), PriorityTier::Primary);
+        assert_eq!(priority_for(SensClass::Moderate), PriorityTier::Secondary);
+        assert_eq!(priority_for(SensClass::Low), PriorityTier::Burstable);
+    }
+
+    #[test]
+    fn rag_trace_requires_dataset() {
+        let items = rag_trace(10, "case_law", 5);
+        assert!(items.iter().all(|i| i.request.required_dataset.as_deref() == Some("case_law")));
+    }
+
+    #[test]
+    fn request_ids_unique() {
+        let items = paper_mix(200, 9);
+        let mut ids: Vec<u64> = items.iter().map(|i| i.request.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 200);
+    }
+}

@@ -1,0 +1,211 @@
+//! Vector store substrate: the RAG index that makes data-locality routing
+//! (§III.F) meaningful.
+//!
+//! A flat cosine-similarity index over unit-norm embeddings (the Embedder
+//! artifact produces unit vectors, so dot product == cosine). Supports
+//! persistence to a simple JSON file so "the firm server hosts the case-law
+//! index" is an actual on-disk artifact an island owns.
+//!
+//! Brute-force scan is exact and, at the corpus sizes of the experiments
+//! (10–10k docs), faster than any ANN structure would be — noted in
+//! EXPERIMENTS.md §Perf.
+
+use std::path::Path;
+
+use crate::config::json::Json;
+
+/// One indexed document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Doc {
+    pub id: u64,
+    pub text: String,
+    pub embedding: Vec<f32>,
+}
+
+/// Flat cosine index.
+#[derive(Clone, Debug, Default)]
+pub struct VectorStore {
+    dim: usize,
+    docs: Vec<Doc>,
+}
+
+/// A search hit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hit {
+    pub id: u64,
+    pub score: f32,
+}
+
+impl VectorStore {
+    pub fn new(dim: usize) -> VectorStore {
+        VectorStore { dim, docs: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Insert a document; the embedding must match the index dimension.
+    pub fn insert(&mut self, id: u64, text: &str, embedding: Vec<f32>) -> anyhow::Result<()> {
+        anyhow::ensure!(embedding.len() == self.dim, "embedding dim {} != index dim {}", embedding.len(), self.dim);
+        self.docs.push(Doc { id, text: text.to_string(), embedding });
+        Ok(())
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Doc> {
+        self.docs.iter().find(|d| d.id == id)
+    }
+
+    /// Exact top-k by cosine (dot product over unit vectors).
+    pub fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        let mut hits: Vec<Hit> = self
+            .docs
+            .iter()
+            .map(|d| Hit { id: d.id, score: dot(query, &d.embedding) })
+            .collect();
+        hits.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+        hits.truncate(k);
+        hits
+    }
+
+    /// Approximate on-disk footprint in KB (E11 uses this to price moving
+    /// the dataset instead of the query).
+    pub fn payload_kb(&self) -> f64 {
+        let bytes: usize = self.docs.iter().map(|d| d.text.len() + d.embedding.len() * 4 + 16).sum();
+        bytes as f64 / 1024.0
+    }
+
+    // ---------------- persistence ----------------
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dim", Json::num(self.dim as f64)),
+            (
+                "docs",
+                Json::Arr(
+                    self.docs
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("id", Json::num(d.id as f64)),
+                                ("text", Json::str(&d.text)),
+                                ("emb", Json::Arr(d.embedding.iter().map(|&x| Json::num(x as f64)).collect())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<VectorStore> {
+        let dim = v.get("dim").as_i64().ok_or_else(|| anyhow::anyhow!("missing dim"))? as usize;
+        let mut store = VectorStore::new(dim);
+        for d in v.get("docs").as_arr().unwrap_or(&[]) {
+            let id = d.get("id").as_i64().unwrap_or(0) as u64;
+            let text = d.get("text").as_str().unwrap_or("").to_string();
+            let emb: Vec<f32> = d
+                .get("emb")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_f64().map(|f| f as f32))
+                .collect();
+            store.insert(id, &text, emb)?;
+        }
+        Ok(store)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<VectorStore> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        VectorStore::from_json(&v)
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(v: Vec<f32>) -> Vec<f32> {
+        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        v.into_iter().map(|x| x / n).collect()
+    }
+
+    #[test]
+    fn search_ranks_by_cosine() {
+        let mut s = VectorStore::new(2);
+        s.insert(1, "east", unit(vec![1.0, 0.0])).unwrap();
+        s.insert(2, "north", unit(vec![0.0, 1.0])).unwrap();
+        s.insert(3, "northeast", unit(vec![1.0, 1.0])).unwrap();
+        let hits = s.search(&unit(vec![1.0, 0.1]), 2);
+        assert_eq!(hits[0].id, 1);
+        assert_eq!(hits[1].id, 3);
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let mut s = VectorStore::new(4);
+        assert!(s.insert(1, "bad", vec![1.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn topk_truncates_and_handles_small_stores() {
+        let mut s = VectorStore::new(2);
+        s.insert(1, "a", unit(vec![1.0, 0.0])).unwrap();
+        assert_eq!(s.search(&[1.0, 0.0], 10).len(), 1);
+        let empty = VectorStore::new(2);
+        assert!(empty.search(&[1.0, 0.0], 3).is_empty());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut s = VectorStore::new(3);
+        s.insert(7, "case law precedent", unit(vec![1.0, 2.0, 3.0])).unwrap();
+        s.insert(8, "contract dispute", unit(vec![-1.0, 0.5, 0.0])).unwrap();
+        let s2 = VectorStore::from_json(&s.to_json()).unwrap();
+        assert_eq!(s2.len(), 2);
+        assert_eq!(s2.get(7).unwrap().text, "case law precedent");
+        let (a, b) = (&s.get(8).unwrap().embedding, &s2.get(8).unwrap().embedding);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn save_load_file() {
+        let mut s = VectorStore::new(2);
+        s.insert(1, "doc", unit(vec![0.6, 0.8])).unwrap();
+        let path = std::env::temp_dir().join("islandrun_vs_test.json");
+        s.save(&path).unwrap();
+        let s2 = VectorStore::load(&path).unwrap();
+        assert_eq!(s2.len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn payload_grows_with_docs() {
+        let mut s = VectorStore::new(8);
+        let base = s.payload_kb();
+        for i in 0..100 {
+            s.insert(i, "some document text here", vec![0.0; 8]).unwrap();
+        }
+        assert!(s.payload_kb() > base + 4.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Metrics registry: counters, gauges and latency histograms.
+//!
+//! Owned by the rust coordinator (L3 owns "metrics" per the architecture);
+//! every agent and island executor reports here. Thread-safe via a single
+//! mutex — the hot path records a few counters per request, far from
+//! contention at the request rates this testbed reaches (verified in the
+//! §Perf pass).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::{Histogram, Table};
+
+/// Central metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a named counter by `n`.
+    pub fn count(&self, name: &str, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Set a gauge to an absolute value.
+    pub fn gauge(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record a histogram sample (e.g. latency in ms).
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    /// Snapshot of a histogram by name.
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.inner.lock().unwrap().histograms.get(name).cloned()
+    }
+
+    /// Render everything as a report table (used by `islandrun stats`).
+    pub fn report(&self) -> Table {
+        let g = self.inner.lock().unwrap();
+        let mut t = Table::new("metrics", &["metric", "value"]);
+        for (k, v) in &g.counters {
+            t.row(&[k.clone(), v.to_string()]);
+        }
+        for (k, v) in &g.gauges {
+            t.row(&[k.clone(), format!("{v:.3}")]);
+        }
+        for (k, h) in &g.histograms {
+            t.row(&[k.clone(), h.summary()]);
+        }
+        t
+    }
+
+    /// Clear all metrics (between experiment repetitions).
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.clear();
+        g.gauges.clear();
+        g.histograms.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.count("requests", 1);
+        m.count("requests", 2);
+        assert_eq!(m.counter_value("requests"), 3);
+        assert_eq!(m.counter_value("absent"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        m.gauge("capacity", 0.7);
+        m.gauge("capacity", 0.4);
+        assert_eq!(m.gauge_value("capacity"), Some(0.4));
+    }
+
+    #[test]
+    fn histograms_record() {
+        let m = Metrics::new();
+        for x in [10.0, 20.0, 30.0] {
+            m.observe("latency_ms", x);
+        }
+        let h = m.histogram("latency_ms").unwrap();
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_and_reset() {
+        let m = Metrics::new();
+        m.count("a", 1);
+        m.gauge("b", 2.0);
+        m.observe("c", 3.0);
+        let rendered = m.report().render();
+        assert!(rendered.contains("| a"));
+        assert!(rendered.contains("| b"));
+        assert!(rendered.contains("| c"));
+        m.reset();
+        assert_eq!(m.counter_value("a"), 0);
+        assert!(m.histogram("c").is_none());
+    }
+
+    #[test]
+    fn thread_safety() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.count("n", 1);
+                        m.observe("h", 1.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter_value("n"), 4000);
+        assert_eq!(m.histogram("h").unwrap().count(), 4000);
+    }
+}

@@ -1,0 +1,418 @@
+//! Core domain types from the paper's problem formulation (§III).
+//!
+//! - Def. 1 *Computing Island*: [`Island`] with latency `L_j`, cost `C_j`,
+//!   privacy `P_j`, trust `T_j` and time-varying capacity `R_j(t)`.
+//! - Def. 2 *Inference Request*: [`Request`] with prompt `q`, modality `m`,
+//!   sensitivity `s_r`, latency budget `d_r` and chat history `h_r`.
+//! - §III.B island groups and trust tiers: [`TrustTier`].
+//! - §IX.B priority tiers: [`PriorityTier`].
+
+use std::fmt;
+
+/// Identifier of an island within a [`crate::agents::lighthouse::Registry`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct IslandId(pub u32);
+
+impl fmt::Display for IslandId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "island-{}", self.0)
+    }
+}
+
+/// §III.B three-tier trust hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TrustTier {
+    /// Tier 1: personal island group (Trust = 1.0) — user's own devices.
+    Personal,
+    /// Tier 2: private edge (Trust = 0.6–0.8) — organization-controlled.
+    PrivateEdge,
+    /// Tier 3: unbounded public cloud (Trust = 0.3–0.5).
+    Cloud,
+}
+
+impl TrustTier {
+    /// Paper §VII.C base trust for the tier.
+    pub fn base_trust(self) -> f64 {
+        match self {
+            TrustTier::Personal => 1.0,
+            TrustTier::PrivateEdge => 0.8,
+            TrustTier::Cloud => 0.5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrustTier::Personal => "personal",
+            TrustTier::PrivateEdge => "private-edge",
+            TrustTier::Cloud => "cloud",
+        }
+    }
+}
+
+/// §VII.C certification level declared at island registration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Certification {
+    Iso27001,
+    Soc2,
+    SelfCertified,
+}
+
+impl Certification {
+    pub fn score(self) -> f64 {
+        match self {
+            Certification::Iso27001 => 1.0,
+            Certification::Soc2 => 0.9,
+            Certification::SelfCertified => 0.7,
+        }
+    }
+}
+
+/// §VII.C jurisdiction class declared at island registration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Jurisdiction {
+    SameCountry,
+    EuGdpr,
+    Foreign,
+}
+
+impl Jurisdiction {
+    pub fn score(self) -> f64 {
+        match self {
+            Jurisdiction::SameCountry => 1.0,
+            Jurisdiction::EuGdpr => 0.9,
+            Jurisdiction::Foreign => 0.6,
+        }
+    }
+}
+
+/// Network link class between the client (SHORE) and the island; drives the
+/// `substrate::netsim` latency/bandwidth model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Same device (the SHORE itself).
+    Loopback,
+    /// Home / office LAN.
+    Lan,
+    /// Wide-area internet (cloud providers).
+    Wan,
+    /// Bluetooth mesh between nearby phones (Scenario 2).
+    Bluetooth,
+    /// Cellular hotspot (car / hiking scenarios).
+    Cellular,
+}
+
+/// Cost model declared at registration (§III.B "Island Registration").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CostModel {
+    /// Personal devices: zero marginal cost.
+    Free,
+    /// Private edge: fixed amortized cost per request ($).
+    Fixed(f64),
+    /// Cloud: per-1k-token style variable pricing ($ per request at the
+    /// reference prompt size, scaled by tokens at accounting time).
+    PerRequest(f64),
+}
+
+impl CostModel {
+    /// Marginal dollar cost of a request with `tokens` total tokens.
+    pub fn cost(&self, tokens: usize) -> f64 {
+        match self {
+            CostModel::Free => 0.0,
+            CostModel::Fixed(c) => *c,
+            CostModel::PerRequest(c) => c * (tokens.max(1) as f64 / 64.0),
+        }
+    }
+}
+
+/// Static island registration record (Def. 1 + §III.B declaration).
+///
+/// The *dynamic* state (capacity `R_j(t)`, liveness, battery) lives in the
+/// LIGHTHOUSE registry / TIDE monitors; this struct is what the owner
+/// declares when the island joins the mesh.
+#[derive(Clone, Debug)]
+pub struct Island {
+    pub id: IslandId,
+    pub name: String,
+    pub tier: TrustTier,
+    /// Round-trip base latency from the client in ms (`L_j`); netsim adds
+    /// jitter and queueing on top.
+    pub latency_ms: f64,
+    /// Cost model (`C_j` derives from it).
+    pub cost: CostModel,
+    /// Privacy score `P_j` in [0,1], set by the island owner.
+    pub privacy: f64,
+    /// Trust components; composed via Eq. 2 into `T_j`.
+    pub certification: Certification,
+    pub jurisdiction: Jurisdiction,
+    /// Max concurrent requests the island can execute (bounded islands).
+    /// `None` = unbounded (Tier-3 HORIZON islands).
+    pub capacity_slots: Option<usize>,
+    /// Link class to the client.
+    pub link: LinkKind,
+    /// Battery fraction [0,1] for battery-powered islands (Scenario 2).
+    pub battery: Option<f64>,
+    /// Names of datasets / vector indices resident on this island
+    /// (data-locality routing, §III.F).
+    pub datasets: Vec<String>,
+    /// Model variants this island can serve (heterogeneous model support).
+    pub models: Vec<String>,
+}
+
+impl Island {
+    /// Eq. 2 / §VII.C trust composition:
+    /// `T_j = min(T_base, T_cert, T_jurisdiction)`.
+    ///
+    /// The paper gives both a `min` (§VII.C) and a product (Eq. 2) variant;
+    /// `min` is the conservative default, the product variant is
+    /// [`Island::trust_product`] (compared in eval E1 notes).
+    pub fn trust(&self) -> f64 {
+        self.tier
+            .base_trust()
+            .min(self.certification.score())
+            .min(self.jurisdiction.score())
+    }
+
+    /// Eq. 2 product variant: `T_j = T_base * T_cert * T_jurisdiction`.
+    pub fn trust_product(&self) -> f64 {
+        self.tier.base_trust() * self.certification.score() * self.jurisdiction.score()
+    }
+
+    /// Marginal cost `C_j` for a request of `tokens` tokens.
+    pub fn request_cost(&self, tokens: usize) -> f64 {
+        self.cost.cost(tokens)
+    }
+
+    /// True when this island never exhausts (Tier-3 HORIZON).
+    pub fn unbounded(&self) -> bool {
+        self.capacity_slots.is_none()
+    }
+
+    /// Does this island hold the named dataset locally?
+    pub fn has_dataset(&self, name: &str) -> bool {
+        self.datasets.iter().any(|d| d == name)
+    }
+
+    /// §XIV heterogeneous model support: can this island serve `model`?
+    pub fn serves_model(&self, model: &str) -> bool {
+        self.models.iter().any(|m| m == model)
+    }
+}
+
+/// Def. 2 request modality.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Modality {
+    TextGeneration,
+    CodeCompletion,
+    ImageSynthesis,
+    Embedding,
+}
+
+/// §IX.B priority tiers for workload classification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PriorityTier {
+    /// Mission-critical: must execute locally regardless of pressure.
+    Primary,
+    /// Important: prefers local, tolerates cloud when R < 50%.
+    Secondary,
+    /// Best-effort: local only when R > 80%, else cloud immediately.
+    Burstable,
+}
+
+/// One turn of conversation history (`h_r` elements).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Turn {
+    pub role: Role,
+    pub text: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    User,
+    Assistant,
+}
+
+/// Def. 2 inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Originating user (rate limiting, Attack 4 mitigation).
+    pub user: String,
+    /// Input prompt `q`.
+    pub prompt: String,
+    pub modality: Modality,
+    /// Sensitivity `s_r` in [0,1]; `None` until MIST scores it.
+    pub sensitivity: Option<f64>,
+    /// Maximum acceptable latency `d_r` (ms).
+    pub deadline_ms: f64,
+    /// Chat context history `h_r` for multi-turn conversations.
+    pub history: Vec<Turn>,
+    pub priority: PriorityTier,
+    /// Dataset this request must run next to (data-locality, §III.F).
+    pub required_dataset: Option<String>,
+    /// Privacy tier of the island the *previous* turn executed on
+    /// (`P_prev` in Algorithm 1 line 14); drives sanitize-on-transition.
+    pub prev_island_privacy: Option<f64>,
+    /// Max new tokens to generate.
+    pub max_new_tokens: usize,
+    /// §XIV heterogeneous model support: model family this request needs
+    /// (e.g. "tinylm"); islands advertise what they serve.
+    pub required_model: Option<String>,
+    /// §XIV regulatory compliance: minimum jurisdiction score the serving
+    /// island must declare (e.g. GDPR workloads require >= 0.9).
+    pub min_jurisdiction: Option<f64>,
+}
+
+impl Request {
+    /// A fresh single-turn request with sane defaults; builder-style setters
+    /// below refine it.
+    pub fn new(id: u64, prompt: &str) -> Request {
+        Request {
+            id,
+            user: "user".to_string(),
+            prompt: prompt.to_string(),
+            modality: Modality::TextGeneration,
+            sensitivity: None,
+            deadline_ms: 2000.0,
+            history: Vec::new(),
+            priority: PriorityTier::Secondary,
+            required_dataset: None,
+            prev_island_privacy: None,
+            max_new_tokens: 16,
+            required_model: None,
+            min_jurisdiction: None,
+        }
+    }
+
+    pub fn with_user(mut self, user: &str) -> Self {
+        self.user = user.to_string();
+        self
+    }
+    pub fn with_priority(mut self, p: PriorityTier) -> Self {
+        self.priority = p;
+        self
+    }
+    pub fn with_deadline(mut self, ms: f64) -> Self {
+        self.deadline_ms = ms;
+        self
+    }
+    pub fn with_dataset(mut self, d: &str) -> Self {
+        self.required_dataset = Some(d.to_string());
+        self
+    }
+    pub fn with_history(mut self, h: Vec<Turn>) -> Self {
+        self.history = h;
+        self
+    }
+    pub fn with_sensitivity(mut self, s: f64) -> Self {
+        self.sensitivity = Some(s);
+        self
+    }
+    pub fn with_max_new_tokens(mut self, n: usize) -> Self {
+        self.max_new_tokens = n;
+        self
+    }
+    pub fn with_model(mut self, m: &str) -> Self {
+        self.required_model = Some(m.to_string());
+        self
+    }
+    pub fn with_min_jurisdiction(mut self, j: f64) -> Self {
+        self.min_jurisdiction = Some(j);
+        self
+    }
+
+    /// Total token estimate (prompt + history) for cost accounting.
+    pub fn token_estimate(&self) -> usize {
+        let hist: usize = self.history.iter().map(|t| t.text.len()).sum();
+        (self.prompt.len() + hist) / 4 + self.max_new_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn island(tier: TrustTier, cert: Certification, jur: Jurisdiction) -> Island {
+        Island {
+            id: IslandId(0),
+            name: "t".into(),
+            tier,
+            latency_ms: 10.0,
+            cost: CostModel::Free,
+            privacy: 1.0,
+            certification: cert,
+            jurisdiction: jur,
+            capacity_slots: Some(2),
+            link: LinkKind::Loopback,
+            battery: None,
+            datasets: vec!["case_law".into()],
+            models: vec!["tinylm".into()],
+        }
+    }
+
+    #[test]
+    fn trust_min_composition_is_conservative() {
+        // §VII.C: an island cannot claim high trust without meeting ALL criteria
+        let i = island(TrustTier::Personal, Certification::SelfCertified, Jurisdiction::SameCountry);
+        assert_eq!(i.trust(), 0.7); // limited by self-certification
+        let i = island(TrustTier::Cloud, Certification::Iso27001, Jurisdiction::SameCountry);
+        assert_eq!(i.trust(), 0.5); // limited by tier
+        let i = island(TrustTier::PrivateEdge, Certification::Iso27001, Jurisdiction::Foreign);
+        assert_eq!(i.trust(), 0.6); // limited by jurisdiction
+    }
+
+    #[test]
+    fn trust_product_le_min() {
+        for tier in [TrustTier::Personal, TrustTier::PrivateEdge, TrustTier::Cloud] {
+            for cert in [Certification::Iso27001, Certification::Soc2, Certification::SelfCertified] {
+                for jur in [Jurisdiction::SameCountry, Jurisdiction::EuGdpr, Jurisdiction::Foreign] {
+                    let i = island(tier, cert, jur);
+                    assert!(i.trust_product() <= i.trust() + 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tier_base_trust_matches_paper() {
+        assert_eq!(TrustTier::Personal.base_trust(), 1.0);
+        assert_eq!(TrustTier::PrivateEdge.base_trust(), 0.8);
+        assert_eq!(TrustTier::Cloud.base_trust(), 0.5);
+    }
+
+    #[test]
+    fn cost_models() {
+        assert_eq!(CostModel::Free.cost(1000), 0.0);
+        assert_eq!(CostModel::Fixed(0.001).cost(1000), 0.001);
+        // per-request scales with tokens relative to the 64-token reference
+        assert!((CostModel::PerRequest(0.02).cost(128) - 0.04).abs() < 1e-12);
+        assert!(CostModel::PerRequest(0.02).cost(0) > 0.0); // min 1 token
+    }
+
+    #[test]
+    fn dataset_lookup() {
+        let i = island(TrustTier::Personal, Certification::Iso27001, Jurisdiction::SameCountry);
+        assert!(i.has_dataset("case_law"));
+        assert!(!i.has_dataset("phi_db"));
+    }
+
+    #[test]
+    fn request_builder_and_tokens() {
+        let r = Request::new(1, "hello world, this is a prompt")
+            .with_user("alice")
+            .with_priority(PriorityTier::Primary)
+            .with_deadline(500.0)
+            .with_dataset("case_law")
+            .with_max_new_tokens(8);
+        assert_eq!(r.user, "alice");
+        assert_eq!(r.priority, PriorityTier::Primary);
+        assert_eq!(r.deadline_ms, 500.0);
+        assert_eq!(r.required_dataset.as_deref(), Some("case_law"));
+        assert!(r.token_estimate() >= 8);
+    }
+
+    #[test]
+    fn priority_ordering() {
+        assert!(PriorityTier::Primary < PriorityTier::Secondary);
+        assert!(PriorityTier::Secondary < PriorityTier::Burstable);
+    }
+}

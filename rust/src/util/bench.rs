@@ -1,0 +1,101 @@
+//! Micro-benchmark harness (offline stand-in for criterion): warmup +
+//! timed iterations with mean/percentile reporting. Used by every target in
+//! `rust/benches/` (`cargo bench` with `harness = false`).
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_us <= 0.0 {
+            0.0
+        } else {
+            1e6 / self.mean_us
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: stats::mean(&samples),
+        p50_us: stats::percentile(&samples, 0.5),
+        p99_us: stats::percentile(&samples, 0.99),
+    }
+}
+
+/// Render results as a markdown table (pasted into EXPERIMENTS.md).
+pub fn report(title: &str, results: &[BenchResult]) {
+    let mut t = crate::util::Table::new(title, &["case", "iters", "mean", "p50", "p99", "ops/s"]);
+    for r in results {
+        t.row(&[
+            r.name.clone(),
+            r.iters.to_string(),
+            fmt_us(r.mean_us),
+            fmt_us(r.p50_us),
+            fmt_us(r.p99_us),
+            format!("{:.0}", r.throughput_per_sec()),
+        ]);
+    }
+    t.print();
+}
+
+/// Human-readable microseconds.
+pub fn fmt_us(us: f64) -> String {
+    if us < 1000.0 {
+        format!("{us:.1}us")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.2}s", us / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 20, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_us > 0.0);
+        assert!(r.p99_us >= r.p50_us);
+        assert!(r.throughput_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_us(12.34), "12.3us");
+        assert_eq!(fmt_us(1234.0), "1.23ms");
+        assert_eq!(fmt_us(2.5e6), "2.50s");
+    }
+}

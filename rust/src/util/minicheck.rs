@@ -1,0 +1,136 @@
+//! Miniature property-based testing harness (offline stand-in for proptest).
+//!
+//! Drives a property over many seeded random cases and, on failure, attempts
+//! a simple shrink by re-running with "smaller" generated inputs (generators
+//! receive a `size` hint the shrinker walks down). Coordinator invariants —
+//! routing, batching, sanitization, trust composition — are property-tested
+//! through this harness in `rust/tests/prop_invariants.rs` and per-module
+//! unit tests.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// maximum `size` hint passed to the generator
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x15_1A_2D, max_size: 64 }
+    }
+}
+
+/// Outcome of a single property case.
+pub enum CaseResult {
+    Pass,
+    /// Failure with a human-readable description of the counterexample.
+    Fail(String),
+}
+
+/// Run `gen` to build a case of the given size, then `prop` to check it.
+///
+/// Panics with the counterexample description (including seed and size, so
+/// the case can be replayed) if any case fails. On failure it first retries
+/// the same seed at smaller sizes to report the smallest failing size.
+pub fn check<G, T, P>(name: &str, cfg: Config, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> CaseResult,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // sizes sweep small -> large so early failures are already small
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng, size);
+        if let CaseResult::Fail(desc) = prop(&input) {
+            // shrink: retry same seed at smaller sizes
+            let mut min_fail = (size, desc);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(case_seed);
+                let input = gen(&mut rng, s);
+                if let CaseResult::Fail(d) = prop(&input) {
+                    min_fail = (s, d);
+                    if s == 1 {
+                        break;
+                    }
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, size {}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper for building `CaseResult`s.
+pub fn ensure(cond: bool, desc: impl FnOnce() -> String) -> CaseResult {
+    if cond {
+        CaseResult::Pass
+    } else {
+        CaseResult::Fail(desc())
+    }
+}
+
+/// Combine multiple sub-checks; first failure wins.
+pub fn all(results: Vec<CaseResult>) -> CaseResult {
+    for r in results {
+        if let CaseResult::Fail(d) = r {
+            return CaseResult::Fail(d);
+        }
+    }
+    CaseResult::Pass
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", Config::default(), |rng, _| (rng.next_u64() as u32, rng.next_u64() as u32), |&(a, b)| {
+            ensure(a.wrapping_add(b) == b.wrapping_add(a), || "math broke".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check(
+            "always-fails",
+            Config { cases: 5, ..Config::default() },
+            |rng, size| rng.below(size.max(1)),
+            |_| CaseResult::Fail("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrink_reports_small_size() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "len-under-3",
+                Config { cases: 20, max_size: 64, seed: 1 },
+                |rng, size| vec![0u8; 1 + rng.below(size)],
+                |v| ensure(v.len() < 3, || format!("len={}", v.len())),
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // the shrinker should find a failure at a small size hint
+        assert!(msg.contains("size"), "{msg}");
+    }
+
+    #[test]
+    fn all_combines() {
+        assert!(matches!(all(vec![CaseResult::Pass, CaseResult::Pass]), CaseResult::Pass));
+        assert!(matches!(all(vec![CaseResult::Pass, CaseResult::Fail("x".into())]), CaseResult::Fail(_)));
+    }
+}

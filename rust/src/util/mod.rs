@@ -1,0 +1,16 @@
+//! Small self-contained utilities: deterministic RNG, latency statistics,
+//! table rendering and a miniature property-testing harness.
+//!
+//! These stand in for crates that are unavailable in this offline build
+//! (`rand`, `criterion`'s stats, `proptest`); the substitution is recorded in
+//! `DESIGN.md` §2.
+
+pub mod bench;
+pub mod minicheck;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::Histogram;
+pub use table::Table;

@@ -1,0 +1,237 @@
+//! Latency/score statistics: streaming histogram with percentile queries.
+//!
+//! Used by the telemetry registry, the eval harness (E4 latency
+//! distributions) and the bench harness. Log-bucketed so a single histogram
+//! covers microseconds through minutes with bounded memory.
+
+/// Log-bucketed histogram over positive f64 samples (e.g. milliseconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket i covers [BASE * GROWTH^i, BASE * GROWTH^(i+1))
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const BASE: f64 = 1e-3; // 1 microsecond when samples are in ms
+const GROWTH: f64 = 1.07;
+const NBUCKETS: usize = 400;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { buckets: vec![0; NBUCKETS], count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    fn bucket_of(x: f64) -> usize {
+        if x <= BASE {
+            return 0;
+        }
+        (((x / BASE).ln() / GROWTH.ln()) as usize).min(NBUCKETS - 1)
+    }
+
+    fn bucket_lo(i: usize) -> f64 {
+        BASE * GROWTH.powi(i as i32)
+    }
+
+    /// Record one sample. Non-finite or negative samples are clamped to 0.
+    pub fn record(&mut self, x: f64) {
+        let x = if x.is_finite() && x > 0.0 { x } else { 0.0 };
+        self.buckets[Self::bucket_of(x)] += 1;
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate quantile (q in [0,1]) from the bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                // interpolate to the bucket midpoint, clamp to observed range
+                let mid = Self::bucket_lo(i) * (1.0 + GROWTH) / 2.0;
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// One-line summary, e.g. for report tables.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2} p50={:.2} p95={:.2} p99={:.2} max={:.2}",
+            self.count,
+            self.mean(),
+            self.p50(),
+            self.p95(),
+            self.p99(),
+            self.max()
+        )
+    }
+}
+
+/// Mean of a slice (0.0 when empty) — small helper for the eval harness.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Exact percentile of a slice by sorting (eval-harness use; not streaming).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((q.clamp(0.0, 1.0)) * (v.len() - 1) as f64).round() as usize;
+    v[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.p50(), 0.0);
+    }
+
+    #[test]
+    fn mean_min_max_exact() {
+        let mut h = Histogram::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            h.record(x);
+        }
+        assert!((h.mean() - 2.5).abs() < 1e-9);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 4.0);
+    }
+
+    #[test]
+    fn quantiles_monotone_and_bounded() {
+        let mut h = Histogram::new();
+        let mut r = crate::util::Rng::new(1);
+        for _ in 0..10_000 {
+            h.record(r.range_f64(1.0, 1000.0));
+        }
+        let (p50, p95, p99) = (h.p50(), h.p95(), h.p99());
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p50 > 300.0 && p50 < 700.0, "p50={p50}");
+        assert!(h.min() >= 1.0 && h.max() <= 1000.0);
+    }
+
+    #[test]
+    fn quantile_accuracy_within_bucket_resolution() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        // log buckets grow 7% — accept 10% relative error
+        assert!((h.p50() - 500.0).abs() / 500.0 < 0.10, "p50={}", h.p50());
+        assert!((h.p99() - 990.0).abs() / 990.0 < 0.10, "p99={}", h.p99());
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let (mut a, mut b, mut u) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for i in 0..500 {
+            let x = (i as f64) + 0.5;
+            if i % 2 == 0 {
+                a.record(x)
+            } else {
+                b.record(x)
+            }
+            u.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), u.count());
+        assert!((a.mean() - u.mean()).abs() < 1e-9);
+        assert_eq!(a.p95(), u.p95());
+    }
+
+    #[test]
+    fn degenerate_samples_clamped() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(-5.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn slice_percentile_exact() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert!((percentile(&xs, 0.5) - 50.0).abs() <= 1.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+}

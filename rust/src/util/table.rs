@@ -1,0 +1,117 @@
+//! Plain-text table rendering for experiment reports and benches.
+//!
+//! The eval harness (`eval::*`) prints every regenerated paper table/figure
+//! through this type so EXPERIMENTS.md rows can be pasted verbatim.
+
+/// A simple left-aligned text table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table { title: title.to_string(), header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append one row; panics if the arity differs from the header.
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch in table '{}'", self.title);
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from &str slices.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as an aligned monospace table (also valid GitHub markdown).
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                s.push(' ');
+                s.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+                s.push_str(" |");
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a float with fixed decimals — table-cell helper.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, x)
+}
+
+/// Format a fraction as a percentage string.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("demo", &["policy", "violations"]);
+        t.row_str(&["islandrun", "0"]);
+        t.row_str(&["latency-greedy", "4000"]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        assert!(r.contains("| policy"));
+        assert!(r.lines().count() == 5);
+        // markdown separator present
+        assert!(r.lines().nth(2).unwrap().starts_with("|-"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn helpers_format() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(pct(0.1234), "12.3%");
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration: the privacy pipeline end to end — MIST scoring, typed
+//! placeholder sanitization across trust boundaries, session coherence and
+//! the paper's three §VIII.D guarantees.
+
+use islandrun::agents::mist::sanitize::PlaceholderMap;
+use islandrun::agents::mist::{Mist, Stage2};
+use islandrun::config::{preset_healthcare, preset_personal_group, Config};
+use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator};
+use islandrun::types::PriorityTier;
+
+fn sim(islands: Vec<islandrun::types::Island>, seed: u64) -> Orchestrator {
+    Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(Fleet::new(islands, seed)), seed)
+}
+
+#[test]
+fn guarantee1_privacy_preservation_over_long_session() {
+    // Guarantee 1: selected island always satisfies P >= s_r.
+    let islands = preset_personal_group();
+    let mut orch = sim(islands.clone(), 31);
+    let s = orch.open_session("alice");
+    let mut rng = islandrun::util::Rng::new(5);
+    for i in 0..120 {
+        let class = match i % 3 {
+            0 => islandrun::substrate::trace::SensClass::High,
+            1 => islandrun::substrate::trace::SensClass::Moderate,
+            _ => islandrun::substrate::trace::SensClass::Low,
+        };
+        let prompt = islandrun::substrate::trace::prompt_for(class, &mut rng);
+        let out = orch
+            .submit(s, &prompt, islandrun::substrate::trace::priority_for(class), None)
+            .expect("admitted");
+        if let Some(id) = out.decision.target() {
+            let island = islands.iter().find(|x| x.id == id).unwrap();
+            assert!(island.privacy >= out.s_r, "req {i}: P={} < s_r={}", island.privacy, out.s_r);
+        }
+        orch.advance(300.0);
+    }
+}
+
+#[test]
+fn guarantee2_context_sanitization_on_every_downward_crossing() {
+    let islands = preset_healthcare();
+    let mut orch = sim(islands.clone(), 32);
+    let s = orch.open_session("dr");
+    // sensitive turn on the workstation
+    let t1 = orch.submit(s, "patient john doe ssn 123-45-6789 with diabetes", PriorityTier::Primary, None).unwrap();
+    assert!(!t1.sanitized);
+    // push follow-ups off the workstation
+    for island in orch.fleet_mut().unwrap().islands.iter_mut() {
+        if !island.spec.unbounded() {
+            island.external_load = 0.99;
+        }
+    }
+    let t2 = orch.submit(s, "suggest general wellness resources", PriorityTier::Burstable, None).unwrap();
+    let target = islands.iter().find(|i| Some(i.id) == t2.decision.target()).unwrap();
+    assert!(target.privacy < 1.0);
+    assert!(t2.sanitized, "downward crossing must sanitize");
+    // sanitized view must not contain the identifiers
+    let sess = orch.sessions.get_mut(s).unwrap();
+    let visible = sess.placeholders.sanitize("patient john doe ssn 123-45-6789 with diabetes", target.privacy);
+    assert!(!visible.contains("john doe") && !visible.contains("123-45-6789"), "{visible}");
+    assert!(PlaceholderMap::verify_clean(&visible, target.privacy), "{visible}");
+}
+
+#[test]
+fn guarantee3_data_locality_never_exfiltrates() {
+    let mut islands = preset_personal_group();
+    islands[3].datasets.push("phi_db".to_string()); // home NAS holds the data
+    let mut orch = sim(islands.clone(), 33);
+    let s = orch.open_session("nurse");
+    for _ in 0..30 {
+        let out = orch.submit(s, "query the phi records for trends", PriorityTier::Secondary, Some("phi_db")).unwrap();
+        let target = out.decision.target().expect("dataset exists on an island");
+        assert_eq!(target, islands[3].id, "requests must follow the data");
+        orch.advance(2_000.0);
+    }
+}
+
+#[test]
+fn desanitized_responses_keep_conversation_coherent() {
+    let islands = preset_personal_group();
+    let mut orch = sim(islands, 34);
+    let s = orch.open_session("alice");
+    orch.submit(s, "patient jane smith has hypertension", PriorityTier::Primary, None).unwrap();
+    // force offload; the sim response echoes placeholders back
+    for island in orch.fleet_mut().unwrap().islands.iter_mut() {
+        if !island.spec.unbounded() {
+            island.external_load = 0.99;
+        }
+    }
+    let out = orch.submit(s, "thanks, anything else to monitor", PriorityTier::Burstable, None).unwrap();
+    assert!(out.sanitized);
+    // stored history view (what the user sees) contains original entities,
+    // never placeholder tokens
+    let hist = &orch.sessions.get(s).unwrap().history;
+    for turn in hist {
+        if turn.role == islandrun::types::Role::User {
+            assert!(!turn.text.contains("[PERSON_"), "{}", turn.text);
+        }
+    }
+}
+
+#[test]
+fn mist_engine_and_heuristic_agree_on_extremes() {
+    // when artifacts exist, the real classifier and the heuristic must agree
+    // on clearly-restricted and clearly-public prompts (the classes the
+    // router's constraints hinge on)
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = islandrun::runtime::Engine::load(dir).unwrap();
+    let real = Mist::new(Stage2::Classifier(engine.handle()));
+    let heur = Mist::heuristic();
+    for (text, min, max) in [
+        ("patient john doe ssn 123-45-6789 diagnosed with diabetes", 0.9, 1.0),
+        ("what is the capital of france", 0.0, 0.3),
+    ] {
+        for (name, mist) in [("real", &real), ("heuristic", &heur)] {
+            let s = mist.analyze_text(text).score;
+            assert!((min..=max).contains(&s), "{name} scored {s} for '{text}'");
+        }
+    }
+}
+
+#[test]
+fn fail_closed_beats_availability_everywhere() {
+    // remove every island that could satisfy a restricted request: ALL
+    // submissions must reject; none may fall through to cloud
+    let islands: Vec<_> = preset_personal_group().into_iter().filter(|i| i.privacy < 0.9).collect();
+    let mut orch = sim(islands, 35);
+    let s = orch.open_session("alice");
+    for _ in 0..10 {
+        let out = orch.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
+        assert!(matches!(out.decision, islandrun::agents::waves::Decision::Reject { .. }));
+        orch.advance(100.0);
+    }
+    assert_eq!(orch.metrics.counter_value("rejected_fail_closed"), 10);
+}

@@ -1,0 +1,188 @@
+//! Integration: WAVES routing composed with LIGHTHOUSE, TIDE and the fleet
+//! simulator — scenario-level behavior from the paper's §I.A and §III.D.
+
+use islandrun::agents::lighthouse::Lighthouse;
+use islandrun::agents::mist::Mist;
+use islandrun::agents::tide::hysteresis::Preference;
+use islandrun::agents::tide::monitor::{LoadProgram, MetricsSource};
+use islandrun::agents::tide::Tide;
+use islandrun::agents::waves::{Decision, IslandState, Waves};
+use islandrun::baselines::{all_policies, PolicyDecision};
+use islandrun::config::{preset, preset_personal_group, Config};
+use islandrun::eval::{run_policy, RunOpts};
+use islandrun::islands::Fleet;
+use islandrun::substrate::trace::{healthcare_day, paper_mix};
+use islandrun::types::{IslandId, PriorityTier, Request, TrustTier};
+
+fn states_at(cap: f64) -> Vec<IslandState> {
+    preset_personal_group()
+        .into_iter()
+        .map(|island| {
+            let c = if island.unbounded() { 1.0 } else { cap };
+            IslandState { island, capacity: c }
+        })
+        .collect()
+}
+
+#[test]
+fn lighthouse_feeds_waves_only_online_islands() {
+    let mut lh = Lighthouse::new(1, 500.0, 3);
+    for i in preset_personal_group() {
+        lh.register_owned(i, 0.0);
+    }
+    // cloud islands stop heartbeating
+    for id in 0..5u32 {
+        lh.beat(IslandId(id), 2_000.0);
+    }
+    lh.tick(2_000.0);
+    let islands = lh.islands();
+    assert_eq!(islands.len(), 5);
+    let waves = Waves::new(Config::default());
+    let states: Vec<IslandState> =
+        islands.into_iter().map(|island| IslandState { island, capacity: 1.0 }).collect();
+    // a burstable low-sensitivity request cannot use (offline) cloud;
+    // it must still route somewhere live
+    let r = Request::new(1, "what is jax").with_priority(PriorityTier::Burstable);
+    let d = waves.route(&r, 0.2, &states, 0.2, Preference::Local, f64::INFINITY);
+    let target = d.target().expect("routed to a live island");
+    assert!(states.iter().any(|s| s.island.id == target));
+}
+
+#[test]
+fn tide_preference_flows_into_routing() {
+    let mut cfg = Config::default();
+    cfg.tide_period_ms = 100;
+    let mut tide = Tide::new(&cfg, MetricsSource::synthetic(LoadProgram::constant(0.9)));
+    for s in 0..5 {
+        tide.tick(s as f64 * 100.0);
+    }
+    assert_eq!(tide.preference(), Preference::Cloud);
+    let waves = Waves::new(cfg);
+    let r = Request::new(1, "summarize the platform sync notes").with_priority(PriorityTier::Secondary);
+    let d = waves.route(&r, 0.5, &states_at(0.6), tide.capacity(), tide.preference(), f64::INFINITY);
+    // with cloud preference and s_r=0.5, private edge (P=0.8) is the target
+    let islands = preset_personal_group();
+    let t = islands.iter().find(|i| Some(i.id) == d.target()).unwrap();
+    assert_ne!(t.tier, TrustTier::Cloud, "P=0.4 cloud fails the 0.5 constraint");
+    assert_ne!(t.link, islandrun::types::LinkKind::Loopback, "cloud preference avoids loopback");
+}
+
+#[test]
+fn healthcare_preset_respects_hipaa_over_full_day() {
+    let trace = healthcare_day(2000, 5);
+    let mut policy = all_policies(&Config::default()).remove(0); // islandrun
+    let st = run_policy(policy.as_mut(), &trace, preset("healthcare").unwrap(), 5, RunOpts::default());
+    assert_eq!(st.privacy_violations, 0);
+    assert_eq!(st.rejections, 0);
+    assert!(st.local_share > 0.15, "PHI work must hold the workstation: {}", st.local_share);
+}
+
+#[test]
+fn legal_preset_routes_rag_to_firm_server() {
+    let specs = preset("legal").unwrap();
+    let fleet = Fleet::new(specs.clone(), 6);
+    let waves = Waves::new(Config::default());
+    let r = Request::new(1, "find precedent about shipping contracts").with_dataset("case_law");
+    let d = waves.route(&r, 0.8, &fleet.states(), 1.0, Preference::Local, f64::INFINITY);
+    let target = specs.iter().find(|i| Some(i.id) == d.target()).unwrap();
+    assert_eq!(target.name, "firm-server");
+}
+
+#[test]
+fn mixed_workload_all_policies_complete() {
+    let trace = paper_mix(500, 9);
+    for mut policy in all_policies(&Config::default()) {
+        let st = run_policy(policy.as_mut(), &trace, preset_personal_group(), 9, RunOpts::default());
+        assert_eq!(st.requests, 500, "{}", st.policy);
+        assert!(
+            st.rejections + st.latencies_ms.len() == 500,
+            "{}: every request must be decided",
+            st.policy
+        );
+    }
+}
+
+#[test]
+fn mist_agent_feeds_router_constraint() {
+    let mist = Mist::heuristic();
+    let waves = Waves::new(Config::default());
+    let sensitive = Request::new(1, "patient john doe ssn 123-45-6789 dosage review");
+    let s_r = mist.analyze(&sensitive).score;
+    assert!(s_r >= 0.9);
+    let d = waves.route(&sensitive, s_r, &states_at(0.9), 0.9, Preference::Local, f64::INFINITY);
+    let islands = preset_personal_group();
+    let t = islands.iter().find(|i| Some(i.id) == d.target()).unwrap();
+    assert!(t.privacy >= 0.9);
+}
+
+#[test]
+fn failsafe_vs_reject_distinction() {
+    let waves = Waves::new(Config::default());
+    // privacy satisfiable, capacity exhausted → failsafe local queue
+    let r = Request::new(1, "patient data").with_priority(PriorityTier::Primary);
+    match waves.route(&r, 0.9, &states_at(0.0), 0.0, Preference::Local, f64::INFINITY) {
+        Decision::FailsafeLocal(rt) => assert_eq!(rt.target_privacy, 1.0),
+        other => panic!("expected failsafe, got {other:?}"),
+    }
+    // privacy unsatisfiable → reject regardless of capacity
+    let cloud_only: Vec<IslandState> = states_at(1.0).into_iter().filter(|s| s.island.privacy < 0.5).collect();
+    match waves.route(&r, 0.9, &cloud_only, 1.0, Preference::Local, f64::INFINITY) {
+        Decision::Reject { .. } => {}
+        other => panic!("expected reject, got {other:?}"),
+    }
+}
+
+#[test]
+fn baseline_policies_expose_paper_failure_modes() {
+    // §XI.A: each baseline fails exactly the way the paper says.
+    let trace = paper_mix(1000, 12);
+    let opts = RunOpts { interarrival_ms: 4.0, ..RunOpts::default() };
+    let mut results = std::collections::BTreeMap::new();
+    for mut policy in all_policies(&Config::default()) {
+        let st = run_policy(policy.as_mut(), &trace, preset_personal_group(), 12, opts);
+        results.insert(st.policy.to_string(), st);
+    }
+    // cloud-only: violates privacy for all non-low requests
+    assert!(results["cloud-only"].privacy_violations >= 700);
+    // local-only: zero violations but heavy queueing under load
+    assert_eq!(results["local-only"].privacy_violations, 0);
+    assert!(results["local-only"].mean_queue_ms > results["islandrun"].mean_queue_ms);
+    // islandrun: clean on both axes
+    assert_eq!(results["islandrun"].privacy_violations, 0);
+    // static policy: silently violates under pressure
+    assert!(results["static-policy"].privacy_violations > 0);
+}
+
+#[test]
+fn cost_ordering_matches_paper_expectation() {
+    // free local compute first → islandrun must be far cheaper than cloud-only
+    let trace = paper_mix(800, 13);
+    let mut ir = all_policies(&Config::default()).remove(0);
+    let st_ir = run_policy(ir.as_mut(), &trace, preset_personal_group(), 13, RunOpts::default());
+    let mut co = all_policies(&Config::default()).remove(1);
+    let st_co = run_policy(co.as_mut(), &trace, preset_personal_group(), 13, RunOpts::default());
+    assert!(
+        st_ir.cost_per_1k() < 0.25 * st_co.cost_per_1k(),
+        "islandrun ${:.2} vs cloud-only ${:.2}",
+        st_ir.cost_per_1k(),
+        st_co.cost_per_1k()
+    );
+}
+
+#[test]
+fn policy_decision_enum_is_total() {
+    // every policy returns a decision for every input (no panics) even on
+    // a degenerate single-island mesh
+    let single = vec![IslandState { island: preset_personal_group().remove(0), capacity: 1.0 }];
+    let r = Request::new(1, "q");
+    for mut p in all_policies(&Config::default()) {
+        let _ = p.route(&r, 0.5, &single, 1.0);
+    }
+    // and on an empty mesh, policies reject rather than panic
+    for mut p in all_policies(&Config::default()) {
+        match p.route(&r, 0.5, &[], 0.0) {
+            PolicyDecision::Reject => {}
+            PolicyDecision::Island(_) => panic!("{} routed on empty mesh", p.name()),
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Property-based tests (via `util::minicheck`) on the coordinator's core
+//! invariants: routing safety, batching conservation, sanitization
+//! reversibility, trust composition, state-machine sanity.
+
+use islandrun::agents::mist::sanitize::PlaceholderMap;
+use islandrun::agents::tide::hysteresis::{Hysteresis, Preference};
+use islandrun::agents::waves::pareto::{on_front, Point};
+use islandrun::agents::waves::{IslandState, Waves};
+use islandrun::config::json::Json;
+use islandrun::config::{Config, Weights};
+use islandrun::runtime::{BatchPolicy, Batcher};
+use islandrun::substrate::tokenizer;
+use islandrun::types::{
+    Certification, CostModel, Island, IslandId, Jurisdiction, LinkKind, PriorityTier, Request, TrustTier,
+};
+use islandrun::util::minicheck::{all, check, ensure, CaseResult, Config as CheckCfg};
+use islandrun::util::Rng;
+
+fn random_island(rng: &mut Rng, id: u32) -> Island {
+    let tier = *rng.pick(&[TrustTier::Personal, TrustTier::PrivateEdge, TrustTier::Cloud]);
+    Island {
+        id: IslandId(id),
+        name: format!("rand-{id}"),
+        tier,
+        latency_ms: rng.range_f64(1.0, 500.0),
+        cost: match rng.below(3) {
+            0 => CostModel::Free,
+            1 => CostModel::Fixed(rng.range_f64(0.0, 0.01)),
+            _ => CostModel::PerRequest(rng.range_f64(0.001, 0.05)),
+        },
+        privacy: match tier {
+            TrustTier::Personal => 1.0,
+            TrustTier::PrivateEdge => rng.range_f64(0.6, 0.9),
+            TrustTier::Cloud => rng.range_f64(0.2, 0.5),
+        },
+        certification: *rng.pick(&[Certification::Iso27001, Certification::Soc2, Certification::SelfCertified]),
+        jurisdiction: *rng.pick(&[Jurisdiction::SameCountry, Jurisdiction::EuGdpr, Jurisdiction::Foreign]),
+        capacity_slots: if rng.chance(0.3) { None } else { Some(1 + rng.below(8)) },
+        link: *rng.pick(&[LinkKind::Loopback, LinkKind::Lan, LinkKind::Wan, LinkKind::Bluetooth, LinkKind::Cellular]),
+        battery: if rng.chance(0.3) { Some(rng.f64()) } else { None },
+        datasets: vec![],
+        models: vec!["tinylm".into()],
+    }
+}
+
+/// Core safety property — Def. 3 / Guarantee 1: for ANY mesh, ANY request,
+/// ANY capacities and preferences, the router never selects an island with
+/// P_j < s_r.
+#[test]
+fn prop_router_never_violates_privacy_constraint() {
+    check(
+        "privacy-constraint",
+        CheckCfg { cases: 400, ..CheckCfg::default() },
+        |rng, size| {
+            let n = 1 + rng.below(size.max(1).min(16));
+            let states: Vec<IslandState> = (0..n)
+                .map(|i| IslandState { island: random_island(rng, i as u32), capacity: rng.f64() })
+                .collect();
+            let s_r = *rng.pick(&[0.2, 0.3, 0.5, 0.8, 0.9, 1.0]);
+            let priority = *rng.pick(&[PriorityTier::Primary, PriorityTier::Secondary, PriorityTier::Burstable]);
+            let pref = if rng.chance(0.5) { Preference::Local } else { Preference::Cloud };
+            let budget = if rng.chance(0.2) { 0.0 } else { f64::INFINITY };
+            (states, s_r, priority, pref, budget, rng.f64())
+        },
+        |(states, s_r, priority, pref, budget, lc)| {
+            let waves = Waves::new(Config::default());
+            let r = Request::new(1, "prop test prompt").with_priority(*priority);
+            let d = waves.route(&r, *s_r, states, *lc, *pref, *budget);
+            match d.target() {
+                None => CaseResult::Pass,
+                Some(id) => {
+                    let island = &states.iter().find(|s| s.island.id == id).unwrap().island;
+                    ensure(island.privacy >= *s_r, || {
+                        format!("P={} < s_r={} (island {})", island.privacy, s_r, island.name)
+                    })
+                }
+            }
+        },
+    );
+}
+
+/// Routing is deterministic: same inputs → same decision.
+#[test]
+fn prop_router_deterministic() {
+    check(
+        "router-deterministic",
+        CheckCfg { cases: 150, ..CheckCfg::default() },
+        |rng, size| {
+            let n = 1 + rng.below(size.max(1).min(12));
+            let states: Vec<IslandState> =
+                (0..n).map(|i| IslandState { island: random_island(rng, i as u32), capacity: rng.f64() }).collect();
+            (states, rng.f64())
+        },
+        |(states, lc)| {
+            let waves = Waves::new(Config::default());
+            let r = Request::new(1, "same prompt");
+            let a = waves.route(&r, 0.5, states, *lc, Preference::Local, f64::INFINITY);
+            let b = waves.route(&r, 0.5, states, *lc, Preference::Local, f64::INFINITY);
+            ensure(a == b, || format!("{a:?} != {b:?}"))
+        },
+    );
+}
+
+/// §VI.C: with strictly positive weights, the Eq. 1 argmin among eligible
+/// islands lies on the Pareto front of (cost, latency, 1-privacy).
+#[test]
+fn prop_scalarized_choice_is_pareto_optimal() {
+    check(
+        "pareto-optimality",
+        CheckCfg { cases: 200, ..CheckCfg::default() },
+        |rng, size| {
+            let n = 2 + rng.below(size.max(2).min(10));
+            let islands: Vec<Island> = (0..n).map(|i| random_island(rng, i as u32)).collect();
+            let w = Weights {
+                cost: 0.1 + rng.f64(),
+                latency: 0.1 + rng.f64(),
+                privacy: 0.1 + rng.f64(),
+            };
+            (islands, w)
+        },
+        |(islands, w)| {
+            let tokens = 80;
+            let best = islands
+                .iter()
+                .min_by(|a, b| {
+                    islandrun::agents::waves::scoring::eq1_score(a, tokens, w)
+                        .partial_cmp(&islandrun::agents::waves::scoring::eq1_score(b, tokens, w))
+                        .unwrap()
+                })
+                .unwrap();
+            let points: Vec<Point> = islands.iter().map(|i| Point::of(i, tokens)).collect();
+            ensure(on_front(&points, best.id), || format!("argmin {} off the Pareto front", best.name))
+        },
+    );
+}
+
+/// Def. 4: sanitize∘desanitize == identity, and the sanitized text carries
+/// no detectable entity above the target level.
+#[test]
+fn prop_sanitize_round_trip() {
+    let people = ["john doe", "jane smith", "arun patel", "maria garcia"];
+    let cities = ["chicago", "berlin", "osaka", "lagos"];
+    let conditions = ["diabetes", "asthma", "anemia"];
+    check(
+        "sanitize-round-trip",
+        CheckCfg { cases: 300, ..CheckCfg::default() },
+        |rng, size| {
+            let mut text = String::new();
+            for _ in 0..(1 + rng.below(size.max(1).min(6))) {
+                match rng.below(5) {
+                    0 => text.push_str(&format!("patient {} ", rng.pick(&people))),
+                    1 => text.push_str(&format!("in {} ", rng.pick(&cities))),
+                    2 => text.push_str(&format!("with {} ", rng.pick(&conditions))),
+                    3 => text.push_str(&format!("ssn {}-{}-{} ", rng.range_u64(100, 999), rng.range_u64(10, 99), rng.range_u64(1000, 9999))),
+                    _ => text.push_str("and general words follow "),
+                }
+            }
+            (text, rng.next_u64())
+        },
+        |(text, seed)| {
+            let mut map = PlaceholderMap::new(*seed);
+            let sanitized = map.sanitize(text, 0.4);
+            all(vec![
+                ensure(PlaceholderMap::verify_clean(&sanitized, 0.4), || format!("dirty: {sanitized}")),
+                ensure(map.desanitize(&sanitized) == *text, || {
+                    format!("round trip broke: '{}' -> '{}' -> '{}'", text, sanitized, map.desanitize(&sanitized))
+                }),
+            ])
+        },
+    );
+}
+
+/// Eq. 2: trust composition is conservative — never above any component.
+#[test]
+fn prop_trust_composition_conservative() {
+    check(
+        "trust-composition",
+        CheckCfg { cases: 200, ..CheckCfg::default() },
+        |rng, _| random_island(rng, 0),
+        |island| {
+            let t = island.trust();
+            all(vec![
+                ensure(t <= island.tier.base_trust() + 1e-12, || "above base".into()),
+                ensure(t <= island.certification.score() + 1e-12, || "above cert".into()),
+                ensure(t <= island.jurisdiction.score() + 1e-12, || "above jurisdiction".into()),
+                ensure(island.trust_product() <= t + 1e-12, || "product above min".into()),
+            ])
+        },
+    );
+}
+
+/// Hysteresis: transition count never exceeds the number of dead-zone
+/// boundary crossings in the input (the whole point of the dead zone).
+#[test]
+fn prop_hysteresis_transitions_bounded() {
+    check(
+        "hysteresis-bounded",
+        CheckCfg { cases: 200, ..CheckCfg::default() },
+        |rng, size| (0..(size * 4)).map(|_| rng.f64()).collect::<Vec<f64>>(),
+        |samples| {
+            let mut h = Hysteresis::new(0.70, 0.80);
+            for &s in samples {
+                h.observe(s);
+            }
+            // count potential crossings: samples strictly below low or above high
+            let extremes = samples.iter().filter(|&&s| s < 0.70 || s > 0.80).count() as u64;
+            ensure(h.transitions() <= extremes, || {
+                format!("{} transitions from {} extreme samples", h.transitions(), extremes)
+            })
+        },
+    );
+}
+
+/// Batcher conservation: what goes in comes out exactly once, in FIFO
+/// order, in chunks no larger than the policy cap.
+#[test]
+fn prop_batcher_conservation_and_order() {
+    check(
+        "batcher-conservation",
+        CheckCfg { cases: 200, ..CheckCfg::default() },
+        |rng, size| {
+            let n = rng.below(size.max(1) * 2) + 1;
+            let cap = 1 + rng.below(8);
+            (n, cap)
+        },
+        |&(n, cap)| {
+            let mut b = Batcher::new(BatchPolicy { max_batch: cap, max_wait: std::time::Duration::from_secs(0) });
+            for i in 0..n {
+                b.push(i);
+            }
+            let mut drained = Vec::new();
+            while !b.is_empty() {
+                let batch = b.take_batch();
+                if batch.is_empty() || batch.len() > cap {
+                    return CaseResult::Fail(format!("batch size {} cap {cap}", batch.len()));
+                }
+                drained.extend(batch);
+            }
+            ensure(drained == (0..n).collect::<Vec<_>>(), || "lost or reordered items".into())
+        },
+    );
+}
+
+/// JSON round-trip: parse(to_string(v)) == v for random value trees.
+#[test]
+fn prop_json_round_trip() {
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        if depth == 0 {
+            return match rng.below(4) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.chance(0.5)),
+                2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+                _ => Json::Str(format!("s{}-\"quoted\"\n", rng.below(1000))),
+            };
+        }
+        match rng.below(2) {
+            0 => Json::Arr((0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4)).map(|i| (format!("k{i}"), gen_json(rng, depth - 1))).collect(),
+            ),
+        }
+    }
+    check(
+        "json-round-trip",
+        CheckCfg { cases: 300, ..CheckCfg::default() },
+        |rng, size| gen_json(rng, (size % 4).max(1)),
+        |v| {
+            let text = v.to_string();
+            match Json::parse(&text) {
+                Ok(back) => ensure(back == *v, || format!("{v} != {back}")),
+                Err(e) => CaseResult::Fail(format!("parse error {e} on {text}")),
+            }
+        },
+    );
+}
+
+/// Tokenizer framing invariants: fixed length, decode inverse on short
+/// ASCII, left-truncation keeps the suffix.
+#[test]
+fn prop_tokenizer_framing() {
+    check(
+        "tokenizer-framing",
+        CheckCfg { cases: 300, ..CheckCfg::default() },
+        |rng, size| {
+            let len = rng.below(size.max(1) * 3) + 1;
+            let s: String = (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+            s
+        },
+        |s| {
+            let ids = tokenizer::encode_fixed(s, 64);
+            let decoded = tokenizer::decode(&ids);
+            let expect: String = s.chars().rev().take(64).collect::<Vec<_>>().into_iter().rev().collect();
+            all(vec![
+                ensure(ids.len() == 64, || "length".into()),
+                ensure(decoded == expect, || format!("'{decoded}' != '{expect}'")),
+            ])
+        },
+    );
+}
+
+/// Cost monotonicity: more tokens never cost less.
+#[test]
+fn prop_cost_monotone_in_tokens() {
+    check(
+        "cost-monotone",
+        CheckCfg { cases: 200, ..CheckCfg::default() },
+        |rng, _| (random_island(rng, 0), 1 + rng.below(1000), 1 + rng.below(1000)),
+        |(island, a, b)| {
+            let (lo, hi) = (*a.min(b), *a.max(b));
+            ensure(island.request_cost(lo) <= island.request_cost(hi) + 1e-12, || {
+                format!("cost({lo}) > cost({hi})")
+            })
+        },
+    );
+}
