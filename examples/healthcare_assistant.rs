@@ -15,7 +15,7 @@ use islandrun::util::Table;
 fn main() -> anyhow::Result<()> {
     let islands = preset_healthcare();
     let fleet = Fleet::new(islands.clone(), 4);
-    let mut orch = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 4);
+    let orch = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 4);
 
     // ---- the 1000-query day -------------------------------------------
     let day = healthcare_day(1000, 2026);
@@ -62,10 +62,10 @@ fn main() -> anyhow::Result<()> {
     println!("  turn 1 (PHI): s_r={:.2} -> {:?}, sanitized={}", turn1.s_r, turn1.decision.target(), turn1.sanitized);
 
     // saturate the clinic + edge so the general follow-up must use cloud
-    if let Some(fleet) = orch.fleet_mut() {
-        for island in fleet.islands.iter_mut() {
+    if let Some(fleet) = orch.fleet() {
+        for island in fleet.islands.iter() {
             if !island.spec.unbounded() {
-                island.external_load = 0.99;
+                island.set_external_load(0.99);
             }
         }
     }
@@ -78,8 +78,12 @@ fn main() -> anyhow::Result<()> {
     assert!(turn2.sanitized, "crossing the trust boundary must sanitize chat history");
 
     // show what the cloud actually saw
-    let sess = orch.sessions.get_mut(s).unwrap();
-    let leaked = sess.placeholders.sanitize("patient john doe ssn 123-45-6789 diagnosed with diabetes", island.privacy);
+    let leaked = orch
+        .sessions
+        .with_mut(s, |sess| {
+            sess.placeholders.sanitize("patient john doe ssn 123-45-6789 diagnosed with diabetes", island.privacy)
+        })
+        .unwrap();
     println!("  cloud-visible history example: \"{leaked}\"");
     assert!(!leaked.contains("john doe") && !leaked.contains("123-45-6789"));
 

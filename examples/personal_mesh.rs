@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     println!("\nhiking pair (battery-aware Bluetooth sharing):");
     let pair = preset_hiking_pair();
     let fleet = Fleet::new(pair.clone(), 22);
-    let mut orch2 = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 22);
+    let orch2 = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 22);
     let s2 = orch2.open_session("friend-a");
 
     let mut t = Table::new("photo-enhancement requests from friend A (phone at 15% battery)", &["request", "executed on", "battery rule"]);
@@ -62,8 +62,8 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     // the low-battery phone must not serve while a charged peer exists
-    let served_on_a = orch2.fleet().unwrap().get(IslandId(0)).unwrap().executed;
-    let served_on_b = orch2.fleet().unwrap().get(IslandId(1)).unwrap().executed;
+    let served_on_a = orch2.fleet().unwrap().get(IslandId(0)).unwrap().executed();
+    let served_on_b = orch2.fleet().unwrap().get(IslandId(1)).unwrap().executed();
     println!("phone-a executed {served_on_a}, phone-b executed {served_on_b}");
     assert!(served_on_b > served_on_a, "battery-aware rebalancing must favor friend B");
 

@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     let mist = Mist::new(Stage2::Classifier(engine.handle()));
     let executor = IslandExecutor::new(engine.handle(), 7);
     let islands = preset_personal_group();
-    let mut orch = Orchestrator::new(Config::default(), mist, Backend::Real { executor, islands: islands.clone() }, 7);
+    let orch = Orchestrator::new(Config::default(), mist, Backend::Real { executor, islands: islands.clone() }, 7);
     let session = orch.open_session("quickstart");
 
     let n = 48;

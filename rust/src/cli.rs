@@ -159,7 +159,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let executor = IslandExecutor::new(engine.handle(), 7);
     let mist = Mist::new(Stage2::Classifier(engine.handle()));
     let backend = Backend::Real { executor, islands };
-    let mut orch = Orchestrator::new(Config::default(), mist, backend, 7);
+    let orch = Orchestrator::new(Config::default(), mist, backend, 7);
     let session = orch.open_session("cli-user");
 
     let mut rng = crate::util::Rng::new(3);

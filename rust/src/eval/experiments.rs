@@ -168,7 +168,7 @@ pub fn e5_tiers() -> Vec<Table> {
         let mut p = IslandRunPolicy::new(Config::default());
         let opts = RunOpts { interarrival_ms: interarrival, ..RunOpts::default() };
         // classify outcomes by priority tier
-        let mut fleet = Fleet::new(preset_personal_group(), 55);
+        let fleet = Fleet::new(preset_personal_group(), 55);
         let mut counts = [[0usize; 2]; 3]; // [tier][local/remote]
         let mut violations = 0;
         for item in &trace {
@@ -189,7 +189,7 @@ pub fn e5_tiers() -> Vec<Table> {
                 if island.privacy < truth {
                     violations += 1;
                 }
-                fleet.execute(id, &item.request);
+                let _ = fleet.execute(id, &item.request);
             }
         }
         let share = |c: [usize; 2]| {
@@ -296,11 +296,11 @@ pub fn e7_routing_latency() -> Vec<Table> {
 pub fn e8_motivating() -> Vec<Table> {
     let mut t = Table::new("E8 / §I.A — motivating example walkthrough", &["step", "observed"]);
     let fleet = Fleet::new(preset_personal_group(), 88);
-    let mut orch = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 88);
+    let orch = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 88);
     let session = orch.open_session("doctor");
 
     // saturate the laptop (§I.A: "laptop GPU is at high utilization")
-    orch.fleet_mut().unwrap().get_mut(crate::types::IslandId(0)).unwrap().external_load = 0.97;
+    orch.fleet().unwrap().get(crate::types::IslandId(0)).unwrap().set_external_load(0.97);
 
     let turn1 = orch
         .submit(session, "Analyze treatment options for 45-year-old diabetic patient with elevated HbA1c", PriorityTier::Primary, None)
@@ -389,7 +389,7 @@ pub fn e11_locality() -> Vec<Table> {
     let mut net = NetSim::new(111);
 
     // Strategy A: IslandRun — route query to the firm server (data stays)
-    let mut fleet = Fleet::new(preset_legal(), 112);
+    let fleet = Fleet::new(preset_legal(), 112);
     let mut lat_a = Vec::new();
     let mut bytes_a = 0.0;
     for item in &trace {
@@ -407,7 +407,7 @@ pub fn e11_locality() -> Vec<Table> {
     ]);
 
     // Strategy B: cloud upload — per query, ship relevant corpus shard (1%)
-    let mut fleet_b = Fleet::new(preset_legal(), 113);
+    let fleet_b = Fleet::new(preset_legal(), 113);
     let mut lat_b = Vec::new();
     let mut bytes_b = 0.0;
     for item in &trace {

@@ -100,7 +100,7 @@ pub fn run_policy(
     opts: RunOpts,
 ) -> PolicyStats {
     let mist = crate::agents::mist::Mist::heuristic();
-    let mut fleet = Fleet::new(specs, seed);
+    let fleet = Fleet::new(specs, seed);
     let mut st = PolicyStats {
         policy: "",
         requests: trace.len(),

@@ -1,0 +1,148 @@
+//! Closed-loop multi-threaded load generator for the concurrent submit path.
+//!
+//! Each worker owns a session and drives the orchestrator in a closed loop
+//! (next request issues as soon as the previous one returns), submitting a
+//! seeded mixed-sensitivity workload and nudging the virtual clock so the
+//! Sim fleet's slots keep clearing. Used by `benches/throughput.rs` and the
+//! concurrency stress test; returns the per-request outcomes so callers can
+//! cross-check ids, audit entries and ledger totals.
+
+use std::sync::{Arc, Mutex};
+
+use crate::server::{Orchestrator, Outcome};
+use crate::substrate::trace::{priority_for, prompt_for, SensClass};
+use crate::util::Rng;
+
+/// Aggregate result of one closed-loop run.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub threads: usize,
+    /// Requests attempted (threads × per_thread).
+    pub attempted: usize,
+    /// Outcomes of admitted requests (served or fail-closed rejections).
+    pub outcomes: Vec<Outcome>,
+    /// Submissions refused before routing (rate limit / session errors).
+    pub errors: usize,
+    pub wall_s: f64,
+}
+
+impl LoadReport {
+    pub fn served(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.decision.target().is_some()).count()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.outcomes.len() - self.served()
+    }
+
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.attempted as f64 / self.wall_s
+        }
+    }
+}
+
+fn class_for(i: usize) -> SensClass {
+    match i % 4 {
+        0 => SensClass::High,
+        1 | 2 => SensClass::Moderate,
+        _ => SensClass::Low,
+    }
+}
+
+/// Turns per conversation before a worker opens a fresh session. Keeps the
+/// workload realistic (short chats) and bounds the per-submit history that
+/// MIST re-analyzes — one endless session would make the closed loop
+/// quadratic in requests.
+const SESSION_TURNS: usize = 8;
+
+/// Drive `threads` workers × `per_thread` closed-loop submissions through a
+/// shared orchestrator. Deterministic prompt streams per (seed, worker).
+pub fn run_closed_loop(orch: &Arc<Orchestrator>, threads: usize, per_thread: usize, seed: u64) -> LoadReport {
+    let outcomes = Arc::new(Mutex::new(Vec::with_capacity(threads * per_thread)));
+    let errors = Arc::new(Mutex::new(0usize));
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let orch = Arc::clone(orch);
+            let outcomes = Arc::clone(&outcomes);
+            let errors = Arc::clone(&errors);
+            std::thread::spawn(move || {
+                let user = format!("loadgen-{t}");
+                let mut session = orch.open_session(&user);
+                let mut rng = Rng::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut local = Vec::with_capacity(per_thread);
+                let mut local_errors = 0usize;
+                for i in 0..per_thread {
+                    if i > 0 && i % SESSION_TURNS == 0 {
+                        session = orch.open_session(&user);
+                    }
+                    let class = class_for(i);
+                    let prompt = prompt_for(class, &mut rng);
+                    match orch.submit(session, &prompt, priority_for(class), None) {
+                        Ok(out) => local.push(out),
+                        Err(_) => local_errors += 1,
+                    }
+                    // keep virtual time moving so slots clear and token
+                    // buckets refill; atomic, so safe from every worker
+                    orch.advance(5.0);
+                }
+                outcomes.lock().unwrap().extend(local);
+                *errors.lock().unwrap() += local_errors;
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let outcomes = Arc::try_unwrap(outcomes).expect("workers joined").into_inner().unwrap();
+    let errors = *errors.lock().unwrap();
+    LoadReport { threads, attempted: threads * per_thread, outcomes, errors, wall_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::mist::Mist;
+    use crate::config::{preset_personal_group, Config};
+    use crate::islands::Fleet;
+    use crate::server::Backend;
+
+    fn orchestrator() -> Arc<Orchestrator> {
+        let mut cfg = Config::default();
+        cfg.rate_limit_rps = 1e9;
+        cfg.budget_ceiling = 1e9;
+        let fleet = Fleet::new(preset_personal_group(), 77);
+        Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 77))
+    }
+
+    #[test]
+    fn single_thread_closed_loop_accounts_everything() {
+        let orch = orchestrator();
+        let report = run_closed_loop(&orch, 1, 40, 1);
+        assert_eq!(report.attempted, 40);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.outcomes.len(), 40);
+        assert_eq!(orch.audit.len(), 40);
+        assert!(report.requests_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn multi_thread_closed_loop_is_lossless() {
+        let orch = orchestrator();
+        let report = run_closed_loop(&orch, 4, 25, 2);
+        assert_eq!(report.attempted, 100);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.outcomes.len(), 100);
+        assert_eq!(report.served() + report.rejected(), 100);
+        // one audit entry per admitted submission
+        assert_eq!(orch.audit.len(), 100);
+        let mut ids: Vec<u64> = report.outcomes.iter().map(|o| o.request_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 100);
+    }
+}

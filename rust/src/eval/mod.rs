@@ -9,5 +9,7 @@
 
 pub mod experiments;
 pub mod harness;
+pub mod loadgen;
 
 pub use harness::{run_policy, PolicyStats, RunOpts};
+pub use loadgen::{run_closed_loop, LoadReport};

@@ -1,13 +1,27 @@
 //! Per-user spend ledger — the cost agent's substrate (§I.C agent 3:
 //! "Track per-request billing and enforce budget ceilings").
+//!
+//! Thread-safe: the running total is an atomic `f64`, per-user balances are
+//! sharded by user-name hash so concurrent submitters on different users
+//! rarely contend on the same lock.
 
 use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+use crate::runtime::features::fnv1a;
+use crate::util::AtomicF64;
+
+const SHARDS: usize = 8;
+
+fn shard_of(user: &str) -> usize {
+    (fnv1a(user.as_bytes()) % SHARDS as u64) as usize
+}
 
 /// Tracks dollars spent per user and enforces a ceiling.
-#[derive(Clone, Debug, Default)]
+#[derive(Debug, Default)]
 pub struct CostLedger {
-    spent: BTreeMap<String, f64>,
-    total: f64,
+    shards: [RwLock<BTreeMap<String, f64>>; SHARDS],
+    total: AtomicF64,
 }
 
 impl CostLedger {
@@ -16,17 +30,18 @@ impl CostLedger {
     }
 
     /// Record a charge.
-    pub fn charge(&mut self, user: &str, amount: f64) {
-        *self.spent.entry(user.to_string()).or_insert(0.0) += amount;
-        self.total += amount;
+    pub fn charge(&self, user: &str, amount: f64) {
+        let mut shard = self.shards[shard_of(user)].write().unwrap();
+        *shard.entry(user.to_string()).or_insert(0.0) += amount;
+        self.total.fetch_add(amount);
     }
 
     pub fn spent(&self, user: &str) -> f64 {
-        self.spent.get(user).copied().unwrap_or(0.0)
+        self.shards[shard_of(user)].read().unwrap().get(user).copied().unwrap_or(0.0)
     }
 
     pub fn total(&self) -> f64 {
-        self.total
+        self.total.load()
     }
 
     /// Remaining budget for a user under `ceiling` (never negative).
@@ -36,7 +51,10 @@ impl CostLedger {
 
     /// Users sorted by spend (reporting).
     pub fn by_user(&self) -> Vec<(String, f64)> {
-        let mut v: Vec<(String, f64)> = self.spent.iter().map(|(k, &v)| (k.clone(), v)).collect();
+        let mut v: Vec<(String, f64)> = Vec::new();
+        for shard in &self.shards {
+            v.extend(shard.read().unwrap().iter().map(|(k, &x)| (k.clone(), x)));
+        }
         v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         v
     }
@@ -48,7 +66,7 @@ mod tests {
 
     #[test]
     fn charges_accumulate_per_user() {
-        let mut l = CostLedger::new();
+        let l = CostLedger::new();
         l.charge("alice", 0.02);
         l.charge("alice", 0.03);
         l.charge("bob", 0.01);
@@ -59,7 +77,7 @@ mod tests {
 
     #[test]
     fn remaining_clamps_at_zero() {
-        let mut l = CostLedger::new();
+        let l = CostLedger::new();
         l.charge("alice", 5.0);
         assert_eq!(l.remaining("alice", 10.0), 5.0);
         assert_eq!(l.remaining("alice", 3.0), 0.0);
@@ -67,12 +85,36 @@ mod tests {
 
     #[test]
     fn by_user_sorted_descending() {
-        let mut l = CostLedger::new();
+        let l = CostLedger::new();
         l.charge("a", 0.1);
         l.charge("b", 0.5);
         l.charge("c", 0.3);
         let v = l.by_user();
         assert_eq!(v[0].0, "b");
         assert_eq!(v[2].0, "a");
+    }
+
+    #[test]
+    fn concurrent_charges_are_not_lost() {
+        use std::sync::Arc;
+        let l = Arc::new(CostLedger::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let l = Arc::clone(&l);
+                std::thread::spawn(move || {
+                    let user = format!("user-{t}");
+                    for _ in 0..500 {
+                        l.charge(&user, 0.25); // exact in f64
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for t in 0..8 {
+            assert_eq!(l.spent(&format!("user-{t}")), 125.0);
+        }
+        assert_eq!(l.total(), 1000.0);
     }
 }

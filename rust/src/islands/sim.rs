@@ -10,9 +10,18 @@
 //! (validated by eval E4 and integration tests). Unbounded (Tier-3) islands
 //! never queue — HORIZON "scales to thousands of concurrent requests" — but
 //! pay WAN latency and per-request cost.
+//!
+//! Concurrency: the fleet is shared behind `Arc<Orchestrator>`, so the
+//! virtual clock is an atomic f64 and each island's runtime state (slots,
+//! battery, external load) sits behind its own mutex — submitters routed to
+//! different islands never contend, and WAVES admission reads capacity
+//! without blocking writers for long.
+
+use std::sync::Mutex;
 
 use crate::substrate::netsim::NetSim;
 use crate::types::{Island, IslandId, Request, TrustTier};
+use crate::util::AtomicF64;
 
 /// Per-tier compute model: fixed startup + per-token milliseconds.
 fn compute_model(tier: TrustTier) -> (f64, f64) {
@@ -22,6 +31,14 @@ fn compute_model(tier: TrustTier) -> (f64, f64) {
         TrustTier::PrivateEdge => (50.0, 2.0),
         TrustTier::Cloud => (90.0, 1.2),
     }
+}
+
+/// Payload a request moves over the network: prompt + history out, generated
+/// tokens back (KB) — E11 accounting.
+fn payload_kb(request: &Request) -> f64 {
+    (request.prompt.len() + request.history.iter().map(|t| t.text.len()).sum::<usize>() + request.max_new_tokens)
+        as f64
+        / 1024.0
 }
 
 /// Outcome of one simulated execution.
@@ -40,25 +57,34 @@ pub struct ExecReport {
     pub payload_kb: f64,
 }
 
-/// One simulated island.
-#[derive(Clone, Debug)]
-pub struct SimIsland {
-    pub spec: Island,
+/// Mutable runtime state of one island, guarded per island.
+#[derive(Debug)]
+struct IslandRt {
     /// Virtual time when each slot frees up (bounded islands).
     busy_until: Vec<f64>,
     /// External utilization in [0,1) (0 = idle), added on top of slot usage.
-    pub external_load: f64,
+    external_load: f64,
     /// Remaining battery fraction for battery-powered islands.
-    pub battery: Option<f64>,
+    battery: Option<f64>,
     /// Total requests executed (telemetry).
-    pub executed: u64,
+    executed: u64,
+}
+
+/// One simulated island.
+#[derive(Debug)]
+pub struct SimIsland {
+    pub spec: Island,
+    rt: Mutex<IslandRt>,
 }
 
 impl SimIsland {
     pub fn new(spec: Island) -> SimIsland {
         let slots = spec.capacity_slots.unwrap_or(0);
         let battery = spec.battery;
-        SimIsland { spec, busy_until: vec![0.0; slots], external_load: 0.0, battery, executed: 0 }
+        SimIsland {
+            spec,
+            rt: Mutex::new(IslandRt { busy_until: vec![0.0; slots], external_load: 0.0, battery, executed: 0 }),
+        }
     }
 
     /// Available capacity R_j(t): fraction of free slots, reduced by the
@@ -67,35 +93,51 @@ impl SimIsland {
         if self.spec.unbounded() {
             return 1.0;
         }
-        if self.busy_until.is_empty() {
+        let rt = self.rt.lock().unwrap();
+        if rt.busy_until.is_empty() {
             return 0.0;
         }
-        let free = self.busy_until.iter().filter(|&&t| t <= now_ms).count() as f64;
-        let slot_cap = free / self.busy_until.len() as f64;
-        (slot_cap * (1.0 - self.external_load)).clamp(0.0, 1.0)
+        let free = rt.busy_until.iter().filter(|&&t| t <= now_ms).count() as f64;
+        let slot_cap = free / rt.busy_until.len() as f64;
+        (slot_cap * (1.0 - rt.external_load)).clamp(0.0, 1.0)
     }
 
-    /// Execute a request arriving at `now_ms`; returns the report. The
-    /// caller has already decided this island is the target (router).
-    pub fn execute(&mut self, request: &Request, now_ms: f64, net: &mut NetSim) -> ExecReport {
-        let tokens = request.token_estimate();
-        // payload: prompt + history out, generated tokens back
-        let payload_kb = (request.prompt.len()
-            + request.history.iter().map(|t| t.text.len()).sum::<usize>()
-            + request.max_new_tokens) as f64
-            / 1024.0;
-        let rtt = net.round_trip_retry(self.spec.link, payload_kb.max(0.5), 3).unwrap_or(5_000.0);
+    /// Set the external utilization knob (load programs / test scaffolding).
+    pub fn set_external_load(&self, load: f64) {
+        self.rt.lock().unwrap().external_load = load;
+    }
 
+    pub fn external_load(&self) -> f64 {
+        self.rt.lock().unwrap().external_load
+    }
+
+    /// Current battery fraction, if battery-powered.
+    pub fn battery(&self) -> Option<f64> {
+        self.rt.lock().unwrap().battery
+    }
+
+    /// Total requests this island has executed.
+    pub fn executed(&self) -> u64 {
+        self.rt.lock().unwrap().executed
+    }
+
+    /// Execute a request arriving at `now_ms` with a pre-sampled network
+    /// round trip; returns the report. The caller has already decided this
+    /// island is the target (router) and sampled the link
+    /// ([`Fleet::execute`] does both).
+    pub fn execute(&self, request: &Request, now_ms: f64, rtt: f64, payload_kb: f64) -> ExecReport {
+        let tokens = request.token_estimate();
+        let mut rt = self.rt.lock().unwrap();
         let (startup, per_token) = compute_model(self.spec.tier);
         // external load slows compute proportionally
-        let slow = 1.0 / (1.0 - self.external_load.min(0.9));
+        let slow = 1.0 / (1.0 - rt.external_load.min(0.9));
         let compute = (startup + per_token * tokens as f64) * slow;
 
         let (queued, start) = if self.spec.unbounded() {
             (0.0, now_ms + rtt / 2.0)
         } else {
             // earliest-free-slot queueing
-            let (slot_idx, &free_at) = self
+            let (slot_idx, &free_at) = rt
                 .busy_until
                 .iter()
                 .enumerate()
@@ -103,16 +145,16 @@ impl SimIsland {
                 .expect("bounded island has slots");
             let start = (now_ms + rtt / 2.0).max(free_at);
             let queued = (free_at - (now_ms + rtt / 2.0)).max(0.0);
-            self.busy_until[slot_idx] = start + compute;
+            rt.busy_until[slot_idx] = start + compute;
             (queued, start)
         };
         let finish = start + compute + rtt / 2.0;
 
         // battery drain: proportional to compute on battery islands
-        if let Some(b) = self.battery.as_mut() {
+        if let Some(b) = rt.battery.as_mut() {
             *b = (*b - compute / 2_000_000.0).max(0.0);
         }
-        self.executed += 1;
+        rt.executed += 1;
 
         ExecReport {
             island: self.spec.id,
@@ -126,24 +168,29 @@ impl SimIsland {
 }
 
 /// A mesh of simulated islands sharing a virtual clock.
+#[derive(Debug)]
 pub struct Fleet {
     pub islands: Vec<SimIsland>,
-    pub net: NetSim,
-    now_ms: f64,
+    net: Mutex<NetSim>,
+    now_ms: AtomicF64,
 }
 
 impl Fleet {
     pub fn new(specs: Vec<Island>, seed: u64) -> Fleet {
-        Fleet { islands: specs.into_iter().map(SimIsland::new).collect(), net: NetSim::new(seed), now_ms: 0.0 }
+        Fleet {
+            islands: specs.into_iter().map(SimIsland::new).collect(),
+            net: Mutex::new(NetSim::new(seed)),
+            now_ms: AtomicF64::new(0.0),
+        }
     }
 
     pub fn now(&self) -> f64 {
-        self.now_ms
+        self.now_ms.load()
     }
 
-    /// Advance the virtual clock.
-    pub fn advance(&mut self, dt_ms: f64) {
-        self.now_ms += dt_ms;
+    /// Advance the virtual clock (atomic; callable from any thread).
+    pub fn advance(&self, dt_ms: f64) {
+        self.now_ms.fetch_add(dt_ms);
     }
 
     pub fn get(&self, id: IslandId) -> Option<&SimIsland> {
@@ -156,20 +203,22 @@ impl Fleet {
 
     /// Router-facing dynamic state snapshot.
     pub fn states(&self) -> Vec<crate::agents::waves::IslandState> {
+        let now = self.now();
         self.islands
             .iter()
-            .map(|i| crate::agents::waves::IslandState { island: i.spec.clone(), capacity: i.capacity(self.now_ms) })
+            .map(|i| crate::agents::waves::IslandState { island: i.spec.clone(), capacity: i.capacity(now) })
             .collect()
     }
 
     /// TIDE's local view: mean capacity across the personal island group
     /// (the user's own devices — whichever of them is currently "local").
     pub fn local_capacity(&self) -> f64 {
+        let now = self.now();
         let personal: Vec<f64> = self
             .islands
             .iter()
             .filter(|i| i.spec.tier == TrustTier::Personal)
-            .map(|i| i.capacity(self.now_ms))
+            .map(|i| i.capacity(now))
             .collect();
         if personal.is_empty() {
             0.0
@@ -178,14 +227,19 @@ impl Fleet {
         }
     }
 
-    /// Execute on a chosen island at the current virtual time.
-    pub fn execute(&mut self, id: IslandId, request: &Request) -> Option<ExecReport> {
-        let now = self.now_ms;
-        let net = &mut self.net as *mut NetSim;
-        let island = self.islands.iter_mut().find(|i| i.spec.id == id)?;
-        // SAFETY: net and islands are disjoint fields of self.
-        let report = unsafe { island.execute(request, now, &mut *net) };
-        Some(report)
+    /// Execute on a chosen island at the current virtual time. Only the RTT
+    /// sample holds the shared NetSim lock; slot booking and accounting run
+    /// under the target island's own mutex, so executions on different
+    /// islands overlap.
+    pub fn execute(&self, id: IslandId, request: &Request) -> Option<ExecReport> {
+        let now = self.now();
+        let island = self.islands.iter().find(|i| i.spec.id == id)?;
+        let payload_kb = payload_kb(request);
+        let rtt = {
+            let mut net = self.net.lock().unwrap();
+            net.round_trip_retry(island.spec.link, payload_kb.max(0.5), 3).unwrap_or(5_000.0)
+        };
+        Some(island.execute(request, now, rtt, payload_kb))
     }
 }
 
@@ -201,7 +255,7 @@ mod tests {
     #[test]
     fn latencies_fall_in_paper_bands() {
         // §XI.B: personal 50-500, edge 100-1000, cloud 200-2000 (ms)
-        let mut f = fleet();
+        let f = fleet();
         let r = Request::new(1, &"x".repeat(200)).with_max_new_tokens(16);
         let mut check = |id: u32, lo: f64, hi: f64, name: &str| {
             let mut worst = (f64::INFINITY, 0.0f64);
@@ -219,7 +273,7 @@ mod tests {
 
     #[test]
     fn bounded_islands_queue() {
-        let mut f = fleet();
+        let f = fleet();
         let r = Request::new(1, "prompt").with_max_new_tokens(32);
         // mobile has 1 slot: second request must queue
         let first = f.execute(IslandId(1), &r).unwrap();
@@ -231,7 +285,7 @@ mod tests {
 
     #[test]
     fn unbounded_cloud_never_queues() {
-        let mut f = fleet();
+        let f = fleet();
         let r = Request::new(1, "prompt");
         for _ in 0..100 {
             let rep = f.execute(IslandId(5), &r).unwrap();
@@ -241,7 +295,7 @@ mod tests {
 
     #[test]
     fn capacity_reflects_slot_usage_and_recovers() {
-        let mut f = fleet();
+        let f = fleet();
         let r = Request::new(1, "prompt").with_max_new_tokens(64);
         assert_eq!(f.get(IslandId(0)).unwrap().capacity(0.0), 1.0);
         for _ in 0..4 {
@@ -256,11 +310,11 @@ mod tests {
 
     #[test]
     fn external_load_reduces_capacity_and_slows_compute() {
-        let mut f = fleet();
+        let f = fleet();
         let r = Request::new(1, "prompt").with_max_new_tokens(16);
         let fast = f.execute(IslandId(0), &r).unwrap();
         f.advance(60_000.0);
-        f.get_mut(IslandId(0)).unwrap().external_load = 0.8;
+        f.get(IslandId(0)).unwrap().set_external_load(0.8);
         assert!(f.get(IslandId(0)).unwrap().capacity(f.now()) <= 0.2);
         let slow = f.execute(IslandId(0), &r).unwrap();
         assert!(slow.latency_ms > 2.0 * fast.latency_ms, "fast={fast:?} slow={slow:?}");
@@ -268,7 +322,7 @@ mod tests {
 
     #[test]
     fn cloud_charges_money_local_is_free() {
-        let mut f = fleet();
+        let f = fleet();
         let r = Request::new(1, "prompt");
         assert_eq!(f.execute(IslandId(0), &r).unwrap().cost, 0.0);
         assert!(f.execute(IslandId(5), &r).unwrap().cost > 0.0);
@@ -276,14 +330,14 @@ mod tests {
 
     #[test]
     fn battery_drains_with_use() {
-        let mut f = fleet();
-        let before = f.get(IslandId(1)).unwrap().battery.unwrap();
+        let f = fleet();
+        let before = f.get(IslandId(1)).unwrap().battery().unwrap();
         let r = Request::new(1, "prompt").with_max_new_tokens(64);
         for _ in 0..20 {
             f.execute(IslandId(1), &r).unwrap();
             f.advance(10_000.0);
         }
-        let after = f.get(IslandId(1)).unwrap().battery.unwrap();
+        let after = f.get(IslandId(1)).unwrap().battery().unwrap();
         assert!(after < before, "{after} !< {before}");
     }
 
@@ -293,5 +347,30 @@ mod tests {
         let st = f.states();
         assert_eq!(st.len(), 7);
         assert!(st.iter().all(|s| (0.0..=1.0).contains(&s.capacity)));
+    }
+
+    #[test]
+    fn concurrent_executes_account_every_request() {
+        use std::sync::Arc;
+        let f = Arc::new(fleet());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    let r = Request::new(t, "prompt");
+                    for _ in 0..50 {
+                        // mix a bounded and an unbounded island
+                        f.execute(IslandId((t % 2 * 5) as u32), &r).unwrap();
+                        f.advance(100.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total: u64 = f.islands.iter().map(|i| i.executed()).sum();
+        assert_eq!(total, 400);
+        assert!((f.now() - 40_000.0).abs() < 1e-6);
     }
 }

@@ -8,17 +8,22 @@
 //! the deployment model: one compiled executable per model variant, shared
 //! by every in-process island executor.
 //!
+//! Offline builds: the engine-thread internals need the external `xla`
+//! crate, which this image does not ship. They compile only under
+//! `--cfg islandrun_pjrt` (add the `xla` dependency to Cargo.toml when
+//! enabling it). Without the cfg, [`Engine::load`] fails fast with a clear
+//! error and every caller falls back to the Sim backend — the handle types,
+//! the job protocol and the batch-variant picker stay compiled and tested
+//! either way.
+//!
 //! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`, with
 //! `to_tuple1()` unwrapping (artifacts are lowered with return_tuple=True).
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::mpsc;
-use std::time::Instant;
 
 use crate::runtime::meta::Meta;
-use crate::substrate::tokenizer;
 
 /// Result of generating for one prompt.
 #[derive(Clone, Debug)]
@@ -56,19 +61,20 @@ pub struct Engine {
 
 impl Engine {
     /// Load all artifacts from `dir` and spin up the engine thread.
-    /// Fails fast if artifacts are missing (run `make artifacts`).
+    /// Fails fast if artifacts are missing (run `make artifacts`) or when
+    /// the crate was built without `--cfg islandrun_pjrt`.
     pub fn load(dir: &Path) -> anyhow::Result<Engine> {
-        let meta = Meta::load(dir)?;
-        let dir = dir.to_path_buf();
-        let (tx, rx) = mpsc::channel::<Job>();
-        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
-        let meta2 = meta.clone();
-        let join = std::thread::Builder::new()
-            .name("islandrun-pjrt".to_string())
-            .spawn(move || engine_main(dir, meta2, rx, ready_tx))
-            .expect("spawn engine thread");
-        ready_rx.recv().expect("engine init reply")?;
-        Ok(Engine { handle: EngineHandle { tx, meta }, join: Some(join) })
+        #[cfg(islandrun_pjrt)]
+        {
+            real::load(dir)
+        }
+        #[cfg(not(islandrun_pjrt))]
+        {
+            anyhow::bail!(
+                "built without the PJRT engine (--cfg islandrun_pjrt); cannot serve artifacts from {}",
+                dir.display()
+            )
+        }
     }
 
     pub fn handle(&self) -> EngineHandle {
@@ -125,76 +131,10 @@ impl EngineHandle {
     }
 }
 
-// ---------------------------------------------------------------------------
-// Engine thread internals
-// ---------------------------------------------------------------------------
-
-struct Loaded {
-    meta: Meta,
-    lm: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-    classifier: xla::PjRtLoadedExecutable,
-    embedder: xla::PjRtLoadedExecutable,
-    /// Calibrated per-forward wall ms for each compiled batch variant.
-    /// On multi-core backends larger variants amortize; on a 1-vCPU CPU
-    /// client they can be *slower per row* — the adaptive picker uses the
-    /// measured costs instead of assuming (§Perf iteration log).
-    variant_ms: BTreeMap<usize, f64>,
-}
-
-fn compile_one(client: &xla::PjRtClient, path: &PathBuf) -> anyhow::Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path)
-        .map_err(|e| anyhow::anyhow!("load {}: {e:?}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client.compile(&comp).map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))
-}
-
-fn engine_main(dir: PathBuf, meta: Meta, rx: mpsc::Receiver<Job>, ready: mpsc::Sender<anyhow::Result<()>>) {
-    let loaded = (|| -> anyhow::Result<(xla::PjRtClient, Loaded)> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
-        let mut lm = BTreeMap::new();
-        for &b in &meta.lm_batch_variants {
-            lm.insert(b, compile_one(&client, &dir.join(format!("lm_b{b}.hlo.txt")))?);
-        }
-        let classifier = compile_one(&client, &dir.join("classifier.hlo.txt"))?;
-        let embedder = compile_one(&client, &dir.join("embedder.hlo.txt"))?;
-        let mut loaded = Loaded { meta, lm, classifier, embedder, variant_ms: BTreeMap::new() };
-        loaded.variant_ms = calibrate_variants(&loaded)?;
-        Ok((client, loaded))
-    })();
-
-    let (_client, loaded) = match loaded {
-        Ok(x) => {
-            let _ = ready.send(Ok(()));
-            x
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-
-    while let Ok(job) = rx.recv() {
-        match job {
-            Job::Shutdown => break,
-            Job::Generate { prompts, max_new_tokens, reply } => {
-                let _ = reply.send(generate(&loaded, &prompts, max_new_tokens));
-            }
-            Job::Classify { texts, reply } => {
-                let _ = reply.send(classify(&loaded, &texts));
-            }
-            Job::Embed { texts, reply } => {
-                let _ = reply.send(embed(&loaded, &texts));
-            }
-            Job::RawForward { batch, reply } => {
-                let _ = reply.send(raw_forward(&loaded, batch));
-            }
-        }
-    }
-}
-
 /// Pick the smallest compiled batch variant that fits `n` rows, or the
 /// largest variant for chunking when n exceeds it. (Shape-based fallback
 /// when no calibration data exists.)
+#[cfg_attr(not(islandrun_pjrt), allow(dead_code))]
 fn pick_variant(variants: &[usize], n: usize) -> usize {
     let max = *variants.iter().max().expect("variants nonempty");
     for &v in variants {
@@ -205,179 +145,272 @@ fn pick_variant(variants: &[usize], n: usize) -> usize {
     max
 }
 
-/// Measure per-forward wall time of every compiled variant (2 warmup + 3
-/// timed). Runs once at engine startup; total cost ~100 ms.
-fn calibrate_variants(loaded: &Loaded) -> anyhow::Result<BTreeMap<usize, f64>> {
-    let mut out = BTreeMap::new();
-    for (&b, _) in &loaded.lm {
-        let tokens = vec![65i32; b * loaded.meta.seq_len];
-        for _ in 0..2 {
-            run_lm(loaded, &tokens, b)?;
-        }
-        let t0 = Instant::now();
-        for _ in 0..3 {
-            run_lm(loaded, &tokens, b)?;
-        }
-        out.insert(b, t0.elapsed().as_secs_f64() * 1e3 / 3.0);
+// ---------------------------------------------------------------------------
+// Engine thread internals (compiled only with --cfg islandrun_pjrt)
+// ---------------------------------------------------------------------------
+
+#[cfg(islandrun_pjrt)]
+mod real {
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    use super::{pick_variant, ClassProbs, Engine, EngineHandle, GenResult, Job};
+    use crate::runtime::meta::Meta;
+    use crate::substrate::tokenizer;
+
+    pub(super) fn load(dir: &Path) -> anyhow::Result<Engine> {
+        let meta = Meta::load(dir)?;
+        let dir = dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let meta2 = meta.clone();
+        let join = std::thread::Builder::new()
+            .name("islandrun-pjrt".to_string())
+            .spawn(move || engine_main(dir, meta2, rx, ready_tx))
+            .expect("spawn engine thread");
+        ready_rx.recv().expect("engine init reply")?;
+        Ok(Engine { handle: EngineHandle { tx, meta }, join: Some(join) })
     }
-    Ok(out)
-}
 
-/// Adaptive variant choice: minimize measured ms per *useful* row for the
-/// next chunk of `n_remaining` prompts. Falls back to shape-based picking
-/// without calibration data.
-fn pick_variant_adaptive(loaded: &Loaded, n_remaining: usize) -> usize {
-    if loaded.variant_ms.is_empty() {
-        return pick_variant(&loaded.meta.lm_batch_variants, n_remaining);
+    struct Loaded {
+        meta: Meta,
+        lm: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        classifier: xla::PjRtLoadedExecutable,
+        embedder: xla::PjRtLoadedExecutable,
+        /// Calibrated per-forward wall ms for each compiled batch variant.
+        /// On multi-core backends larger variants amortize; on a 1-vCPU CPU
+        /// client they can be *slower per row* — the adaptive picker uses the
+        /// measured costs instead of assuming (§Perf iteration log).
+        variant_ms: BTreeMap<usize, f64>,
     }
-    loaded
-        .variant_ms
-        .iter()
-        .min_by(|(va, ca), (vb, cb)| {
-            let ea = *ca / (n_remaining.min(**va) as f64);
-            let eb = *cb / (n_remaining.min(**vb) as f64);
-            ea.partial_cmp(&eb).unwrap()
-        })
-        .map(|(&v, _)| v)
-        .expect("variants nonempty")
-}
 
-fn run_lm(loaded: &Loaded, tokens: &[i32], batch: usize) -> anyhow::Result<Vec<f32>> {
-    let exe = loaded.lm.get(&batch).ok_or_else(|| anyhow::anyhow!("no lm variant b{batch}"))?;
-    let lit = xla::Literal::vec1(tokens)
-        .reshape(&[batch as i64, loaded.meta.seq_len as i64])
-        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
-    let result = exe.execute::<xla::Literal>(&[lit]).map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
-    let out = result[0][0].to_literal_sync().map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
-    let logits = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
-    logits.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
-}
+    fn compile_one(client: &xla::PjRtClient, path: &PathBuf) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("load {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))
+    }
 
-fn generate(loaded: &Loaded, prompts: &[String], max_new_tokens: usize) -> anyhow::Result<Vec<GenResult>> {
-    let seq = loaded.meta.seq_len;
-    let vocab = loaded.meta.vocab;
-    let mut results = Vec::with_capacity(prompts.len());
+    fn engine_main(dir: PathBuf, meta: Meta, rx: mpsc::Receiver<Job>, ready: mpsc::Sender<anyhow::Result<()>>) {
+        let loaded = (|| -> anyhow::Result<(xla::PjRtClient, Loaded)> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+            let mut lm = BTreeMap::new();
+            for &b in &meta.lm_batch_variants {
+                lm.insert(b, compile_one(&client, &dir.join(format!("lm_b{b}.hlo.txt")))?);
+            }
+            let classifier = compile_one(&client, &dir.join("classifier.hlo.txt"))?;
+            let embedder = compile_one(&client, &dir.join("embedder.hlo.txt"))?;
+            let mut loaded = Loaded { meta, lm, classifier, embedder, variant_ms: BTreeMap::new() };
+            loaded.variant_ms = calibrate_variants(&loaded)?;
+            Ok((client, loaded))
+        })();
 
-    // process prompts in chunks sized by the adaptive variant picker:
-    // measured ms-per-useful-row, not assumed batching gains (§Perf)
-    let mut remaining: &[String] = prompts;
-    while !remaining.is_empty() {
-        let b = pick_variant_adaptive(loaded, remaining.len());
-        let chunk = &remaining[..remaining.len().min(b)];
-        remaining = &remaining[chunk.len()..];
-        let mut windows: Vec<Vec<i32>> = Vec::with_capacity(b);
-        let mut reals: Vec<usize> = Vec::with_capacity(b);
-        for p in chunk {
-            windows.push(tokenizer::encode_fixed(p, seq));
-            reals.push(tokenizer::real_len(p, seq));
-        }
-        // pad rows up to the variant size
-        while windows.len() < b {
-            windows.push(vec![tokenizer::PAD as i32; seq]);
-            reals.push(1);
-        }
-        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b];
-        let t0 = Instant::now();
-        for _ in 0..max_new_tokens {
-            let flat: Vec<i32> = windows.iter().flatten().copied().collect();
-            let logits = run_lm(loaded, &flat, b)?;
-            for row in 0..chunk.len() {
-                let pos = reals[row].saturating_sub(1).min(seq - 1);
-                let base = row * seq * vocab + pos * vocab;
-                let slice = &logits[base..base + vocab];
-                // greedy argmax, skipping PAD so decode never stalls on filler
-                let mut best = 1usize;
-                let mut best_v = f32::NEG_INFINITY;
-                for (i, &v) in slice.iter().enumerate() {
-                    if i == tokenizer::PAD as usize {
-                        continue;
-                    }
-                    if v > best_v {
-                        best_v = v;
-                        best = i;
-                    }
+        let (_client, loaded) = match loaded {
+            Ok(x) => {
+                let _ = ready.send(Ok(()));
+                x
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
+        };
+
+        while let Ok(job) = rx.recv() {
+            match job {
+                Job::Shutdown => break,
+                Job::Generate { prompts, max_new_tokens, reply } => {
+                    let _ = reply.send(generate(&loaded, &prompts, max_new_tokens));
                 }
-                generated[row].push(best as i32);
-                let mut real = reals[row];
-                tokenizer::push_token(&mut windows[row], &mut real, best as i32);
-                reals[row] = real;
+                Job::Classify { texts, reply } => {
+                    let _ = reply.send(classify(&loaded, &texts));
+                }
+                Job::Embed { texts, reply } => {
+                    let _ = reply.send(embed(&loaded, &texts));
+                }
+                Job::RawForward { batch, reply } => {
+                    let _ = reply.send(raw_forward(&loaded, batch));
+                }
             }
         }
-        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let per_prompt = total_ms / chunk.len() as f64;
-        for row in 0..chunk.len() {
-            results.push(GenResult {
-                text: tokenizer::decode(&generated[row]),
-                tokens_generated: generated[row].len(),
-                compute_ms: per_prompt,
-            });
-        }
     }
-    Ok(results)
-}
 
-fn run_feat_model(
-    exe: &xla::PjRtLoadedExecutable,
-    feats: &[f32],
-    batch: usize,
-    feat_dim: usize,
-) -> anyhow::Result<Vec<f32>> {
-    let lit = xla::Literal::vec1(feats)
-        .reshape(&[batch as i64, feat_dim as i64])
-        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
-    let result = exe.execute::<xla::Literal>(&[lit]).map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
-    let out = result[0][0].to_literal_sync().map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
-    let t = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
-    t.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
-}
-
-fn batched_feat_pass(
-    loaded: &Loaded,
-    texts: &[String],
-    exe: &xla::PjRtLoadedExecutable,
-    out_dim: usize,
-) -> anyhow::Result<Vec<Vec<f32>>> {
-    let fb = loaded.meta.cls_batch;
-    let fd = loaded.meta.feat_dim;
-    let mut out = Vec::with_capacity(texts.len());
-    for chunk in texts.chunks(fb) {
-        let mut feats = Vec::with_capacity(fb * fd);
-        for t in chunk {
-            feats.extend(crate::runtime::features::featurize(t));
+    /// Measure per-forward wall time of every compiled variant (2 warmup + 3
+    /// timed). Runs once at engine startup; total cost ~100 ms.
+    fn calibrate_variants(loaded: &Loaded) -> anyhow::Result<BTreeMap<usize, f64>> {
+        let mut out = BTreeMap::new();
+        for (&b, _) in &loaded.lm {
+            let tokens = vec![65i32; b * loaded.meta.seq_len];
+            for _ in 0..2 {
+                run_lm(loaded, &tokens, b)?;
+            }
+            let t0 = Instant::now();
+            for _ in 0..3 {
+                run_lm(loaded, &tokens, b)?;
+            }
+            out.insert(b, t0.elapsed().as_secs_f64() * 1e3 / 3.0);
         }
-        feats.resize(fb * fd, 0.0);
-        let res = run_feat_model(exe, &feats, fb, fd)?;
-        for row in 0..chunk.len() {
-            out.push(res[row * out_dim..(row + 1) * out_dim].to_vec());
-        }
+        Ok(out)
     }
-    Ok(out)
-}
 
-fn classify(loaded: &Loaded, texts: &[String]) -> anyhow::Result<Vec<ClassProbs>> {
-    let logits = batched_feat_pass(loaded, texts, &loaded.classifier, loaded.meta.n_classes)?;
-    // softmax over logits (artifact emits raw logits)
-    Ok(logits
-        .into_iter()
-        .map(|row| {
-            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let exps: Vec<f32> = row.iter().map(|x| (x - m).exp()).collect();
-            let s: f32 = exps.iter().sum();
-            exps.into_iter().map(|x| x / s).collect()
-        })
-        .collect())
-}
+    /// Adaptive variant choice: minimize measured ms per *useful* row for the
+    /// next chunk of `n_remaining` prompts. Falls back to shape-based picking
+    /// without calibration data.
+    fn pick_variant_adaptive(loaded: &Loaded, n_remaining: usize) -> usize {
+        if loaded.variant_ms.is_empty() {
+            return pick_variant(&loaded.meta.lm_batch_variants, n_remaining);
+        }
+        loaded
+            .variant_ms
+            .iter()
+            .min_by(|(va, ca), (vb, cb)| {
+                let ea = *ca / (n_remaining.min(**va) as f64);
+                let eb = *cb / (n_remaining.min(**vb) as f64);
+                ea.partial_cmp(&eb).unwrap()
+            })
+            .map(|(&v, _)| v)
+            .expect("variants nonempty")
+    }
 
-fn embed(loaded: &Loaded, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
-    batched_feat_pass(loaded, texts, &loaded.embedder, loaded.meta.embed_dim)
-}
+    fn run_lm(loaded: &Loaded, tokens: &[i32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        let exe = loaded.lm.get(&batch).ok_or_else(|| anyhow::anyhow!("no lm variant b{batch}"))?;
+        let lit = xla::Literal::vec1(tokens)
+            .reshape(&[batch as i64, loaded.meta.seq_len as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let result = exe.execute::<xla::Literal>(&[lit]).map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
+        let logits = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        logits.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
 
-fn raw_forward(loaded: &Loaded, batch: usize) -> anyhow::Result<f64> {
-    let b = pick_variant(&loaded.meta.lm_batch_variants, batch);
-    let tokens = vec![65i32; b * loaded.meta.seq_len];
-    let t0 = Instant::now();
-    run_lm(loaded, &tokens, b)?;
-    Ok(t0.elapsed().as_secs_f64() * 1e3)
+    fn generate(loaded: &Loaded, prompts: &[String], max_new_tokens: usize) -> anyhow::Result<Vec<GenResult>> {
+        let seq = loaded.meta.seq_len;
+        let vocab = loaded.meta.vocab;
+        let mut results = Vec::with_capacity(prompts.len());
+
+        // process prompts in chunks sized by the adaptive variant picker:
+        // measured ms-per-useful-row, not assumed batching gains (§Perf)
+        let mut remaining: &[String] = prompts;
+        while !remaining.is_empty() {
+            let b = pick_variant_adaptive(loaded, remaining.len());
+            let chunk = &remaining[..remaining.len().min(b)];
+            remaining = &remaining[chunk.len()..];
+            let mut windows: Vec<Vec<i32>> = Vec::with_capacity(b);
+            let mut reals: Vec<usize> = Vec::with_capacity(b);
+            for p in chunk {
+                windows.push(tokenizer::encode_fixed(p, seq));
+                reals.push(tokenizer::real_len(p, seq));
+            }
+            // pad rows up to the variant size
+            while windows.len() < b {
+                windows.push(vec![tokenizer::PAD as i32; seq]);
+                reals.push(1);
+            }
+            let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b];
+            let t0 = Instant::now();
+            for _ in 0..max_new_tokens {
+                let flat: Vec<i32> = windows.iter().flatten().copied().collect();
+                let logits = run_lm(loaded, &flat, b)?;
+                for row in 0..chunk.len() {
+                    let pos = reals[row].saturating_sub(1).min(seq - 1);
+                    let base = row * seq * vocab + pos * vocab;
+                    let slice = &logits[base..base + vocab];
+                    // greedy argmax, skipping PAD so decode never stalls on filler
+                    let mut best = 1usize;
+                    let mut best_v = f32::NEG_INFINITY;
+                    for (i, &v) in slice.iter().enumerate() {
+                        if i == tokenizer::PAD as usize {
+                            continue;
+                        }
+                        if v > best_v {
+                            best_v = v;
+                            best = i;
+                        }
+                    }
+                    generated[row].push(best as i32);
+                    let mut real = reals[row];
+                    tokenizer::push_token(&mut windows[row], &mut real, best as i32);
+                    reals[row] = real;
+                }
+            }
+            let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let per_prompt = total_ms / chunk.len() as f64;
+            for row in 0..chunk.len() {
+                results.push(GenResult {
+                    text: tokenizer::decode(&generated[row]),
+                    tokens_generated: generated[row].len(),
+                    compute_ms: per_prompt,
+                });
+            }
+        }
+        Ok(results)
+    }
+
+    fn run_feat_model(
+        exe: &xla::PjRtLoadedExecutable,
+        feats: &[f32],
+        batch: usize,
+        feat_dim: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        let lit = xla::Literal::vec1(feats)
+            .reshape(&[batch as i64, feat_dim as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let result = exe.execute::<xla::Literal>(&[lit]).map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
+        let t = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        t.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+
+    fn batched_feat_pass(
+        loaded: &Loaded,
+        texts: &[String],
+        exe: &xla::PjRtLoadedExecutable,
+        out_dim: usize,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let fb = loaded.meta.cls_batch;
+        let fd = loaded.meta.feat_dim;
+        let mut out = Vec::with_capacity(texts.len());
+        for chunk in texts.chunks(fb) {
+            let mut feats = Vec::with_capacity(fb * fd);
+            for t in chunk {
+                feats.extend(crate::runtime::features::featurize(t));
+            }
+            feats.resize(fb * fd, 0.0);
+            let res = run_feat_model(exe, &feats, fb, fd)?;
+            for row in 0..chunk.len() {
+                out.push(res[row * out_dim..(row + 1) * out_dim].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    fn classify(loaded: &Loaded, texts: &[String]) -> anyhow::Result<Vec<ClassProbs>> {
+        let logits = batched_feat_pass(loaded, texts, &loaded.classifier, loaded.meta.n_classes)?;
+        // softmax over logits (artifact emits raw logits)
+        Ok(logits
+            .into_iter()
+            .map(|row| {
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f32> = row.iter().map(|x| (x - m).exp()).collect();
+                let s: f32 = exps.iter().sum();
+                exps.into_iter().map(|x| x / s).collect()
+            })
+            .collect())
+    }
+
+    fn embed(loaded: &Loaded, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        batched_feat_pass(loaded, texts, &loaded.embedder, loaded.meta.embed_dim)
+    }
+
+    fn raw_forward(loaded: &Loaded, batch: usize) -> anyhow::Result<f64> {
+        let b = pick_variant(&loaded.meta.lm_batch_variants, batch);
+        let tokens = vec![65i32; b * loaded.meta.seq_len];
+        let t0 = Instant::now();
+        run_lm(loaded, &tokens, b)?;
+        Ok(t0.elapsed().as_secs_f64() * 1e3)
+    }
 }
 
 #[cfg(test)]
@@ -392,6 +425,13 @@ mod tests {
         assert_eq!(pick_variant(&v, 4), 4);
         assert_eq!(pick_variant(&v, 5), 8);
         assert_eq!(pick_variant(&v, 100), 8); // chunking case
+    }
+
+    #[cfg(not(islandrun_pjrt))]
+    #[test]
+    fn load_without_engine_fails_fast_with_clear_error() {
+        let err = Engine::load(std::path::Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("islandrun_pjrt"), "{err}");
     }
 
     // Engine integration tests live in rust/tests/integration_e2e.rs (they

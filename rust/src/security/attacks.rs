@@ -110,7 +110,7 @@ pub fn attack4_island_flooding() -> AttackOutcome {
     let mut cfg = Config::default();
     cfg.rate_limit_rps = 5.0;
     let fleet = Fleet::new(preset_personal_group(), 3);
-    let mut orch = Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 9);
+    let orch = Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 9);
     let attacker = orch.open_session("mallory");
     let victim = orch.open_session("alice");
 

@@ -6,6 +6,13 @@
 //! evidence a compliance reviewer needs: sensitivity, the constraint set
 //! that was active, where the request ran, and whether sanitization was
 //! applied. Exportable as JSON.
+//!
+//! Append-only and thread-safe: submitters on `Arc<Orchestrator>` append
+//! under one short mutex; queries take a snapshot. The invariant the
+//! concurrency stress test pins down: exactly one entry per admitted
+//! submission, no matter how many threads race.
+
+use std::sync::Mutex;
 
 use crate::config::json::Json;
 use crate::types::IslandId;
@@ -24,10 +31,10 @@ pub struct AuditEntry {
     pub reject_reason: Option<String>,
 }
 
-/// Append-only audit log.
+/// Append-only concurrent audit log.
 #[derive(Debug, Default)]
 pub struct AuditLog {
-    entries: Vec<AuditEntry>,
+    entries: Mutex<Vec<AuditEntry>>,
 }
 
 impl AuditLog {
@@ -35,31 +42,34 @@ impl AuditLog {
         AuditLog::default()
     }
 
-    pub fn record(&mut self, entry: AuditEntry) {
-        self.entries.push(entry);
+    pub fn record(&self, entry: AuditEntry) {
+        self.entries.lock().unwrap().push(entry);
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.entries.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries.lock().unwrap().is_empty()
     }
 
-    pub fn entries(&self) -> &[AuditEntry] {
-        &self.entries
+    /// Snapshot of the whole trail (clone; the log itself stays append-only).
+    pub fn entries(&self) -> Vec<AuditEntry> {
+        self.entries.lock().unwrap().clone()
     }
 
     /// All entries for one user (compliance review scope).
-    pub fn for_user(&self, user: &str) -> Vec<&AuditEntry> {
-        self.entries.iter().filter(|e| e.user == user).collect()
+    pub fn for_user(&self, user: &str) -> Vec<AuditEntry> {
+        self.entries.lock().unwrap().iter().filter(|e| e.user == user).cloned().collect()
     }
 
     /// Compliance check: were any requests with sensitivity above `s` ever
     /// executed on an island with privacy below `p`? Returns offending ids.
     pub fn violations(&self, s: f64, p: f64) -> Vec<u64> {
         self.entries
+            .lock()
+            .unwrap()
             .iter()
             .filter(|e| e.s_r >= s && e.island_privacy.map(|ip| ip < p).unwrap_or(false))
             .map(|e| e.request_id)
@@ -70,6 +80,8 @@ impl AuditLog {
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.entries
+                .lock()
+                .unwrap()
                 .iter()
                 .map(|e| {
                     Json::obj(vec![
@@ -107,7 +119,7 @@ mod tests {
 
     #[test]
     fn append_and_query() {
-        let mut log = AuditLog::new();
+        let log = AuditLog::new();
         log.record(entry(1, 0.9, Some((0, 1.0))));
         log.record(entry(2, 0.2, Some((5, 0.4))));
         log.record(entry(3, 0.9, None));
@@ -118,7 +130,7 @@ mod tests {
 
     #[test]
     fn violation_scan_finds_offenders() {
-        let mut log = AuditLog::new();
+        let log = AuditLog::new();
         log.record(entry(1, 0.9, Some((0, 1.0)))); // fine
         log.record(entry(2, 0.9, Some((5, 0.4)))); // violation!
         log.record(entry(3, 0.9, None)); // rejected — not a violation
@@ -128,7 +140,7 @@ mod tests {
 
     #[test]
     fn json_export_parses_back() {
-        let mut log = AuditLog::new();
+        let log = AuditLog::new();
         log.record(entry(1, 0.5, Some((3, 0.8))));
         log.record(entry(2, 0.9, None));
         let j = log.to_json();
@@ -137,5 +149,29 @@ mod tests {
         assert_eq!(back.idx(0).get("request_id").as_i64(), Some(1));
         assert_eq!(back.idx(1).get("island"), &Json::Null);
         assert_eq!(back.idx(1).get("reject_reason").as_str(), Some("fail-closed"));
+    }
+
+    #[test]
+    fn concurrent_appends_all_land() {
+        use std::sync::Arc;
+        let log = Arc::new(AuditLog::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let log = Arc::clone(&log);
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        log.record(entry(t * 1000 + i, 0.5, Some((0, 1.0))));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(log.len(), 1600);
+        let mut ids: Vec<u64> = log.entries().iter().map(|e| e.request_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 1600, "no entry lost or duplicated");
     }
 }

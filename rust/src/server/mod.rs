@@ -6,6 +6,6 @@ pub mod orchestrator;
 pub mod ratelimit;
 pub mod session;
 
-pub use orchestrator::{Backend, Orchestrator, Outcome};
+pub use orchestrator::{Backend, BatchItem, Orchestrator, Outcome};
 pub use ratelimit::RateLimiter;
 pub use session::{Session, SessionStore};

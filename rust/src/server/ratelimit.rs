@@ -20,14 +20,20 @@ impl RateLimiter {
     }
 
     /// Try to admit one request from `user` at virtual time `now_ms`.
+    ///
+    /// Timestamps are clamped monotonic: concurrent submitters read the
+    /// clock outside the limiter lock, so a stale `now_ms` may arrive after
+    /// a newer one was recorded — storing the smaller value back would
+    /// rewind the bucket and double-credit refill.
     pub fn admit(&mut self, user: &str, now_ms: f64) -> bool {
         let (tokens, last) = self.buckets.get(user).copied().unwrap_or((self.burst, now_ms));
         let refilled = (tokens + (now_ms - last).max(0.0) * self.rate_per_ms).min(self.burst);
+        let stamp = now_ms.max(last);
         if refilled >= 1.0 {
-            self.buckets.insert(user.to_string(), (refilled - 1.0, now_ms));
+            self.buckets.insert(user.to_string(), (refilled - 1.0, stamp));
             true
         } else {
-            self.buckets.insert(user.to_string(), (refilled, now_ms));
+            self.buckets.insert(user.to_string(), (refilled, stamp));
             false
         }
     }
@@ -64,6 +70,19 @@ mod tests {
         // 10 rps → one token every 100ms
         assert!(rl.admit("u", 150.0));
         assert!(!rl.admit("u", 160.0));
+    }
+
+    #[test]
+    fn stale_timestamps_do_not_rewind_the_bucket() {
+        // concurrent submitters can present time out of order; an old
+        // now_ms must not re-credit refill that was already granted
+        let mut rl = RateLimiter::new(10.0, 1.0);
+        assert!(rl.admit("u", 1000.0)); // bucket empty, last=1000
+        assert!(!rl.admit("u", 0.0), "stale clock must not admit");
+        // had the stamp rewound to 0, this would see 100ms of refill;
+        // monotonic clamping means only 10ms elapsed since 1000
+        assert!(!rl.admit("u", 1010.0));
+        assert!(rl.admit("u", 1150.0), "real elapsed time still refills");
     }
 
     #[test]

@@ -5,11 +5,22 @@
 //! session-scoped [`PlaceholderMap`] so the same entity keeps the same
 //! placeholder across turns while different sessions get uncorrelated ids
 //! (Attack-3 mitigation).
+//!
+//! The store is sharded for concurrent serving: session ids are allocated
+//! from an atomic counter and sessions live in `RwLock`-guarded shards keyed
+//! by `id % SHARDS`, so submitters working different sessions take different
+//! locks. Access goes through closures ([`SessionStore::with`] /
+//! [`SessionStore::with_mut`]) rather than returned references, keeping lock
+//! scopes explicit and minimal.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 
 use crate::agents::mist::sanitize::PlaceholderMap;
 use crate::types::{Role, Turn};
+
+const SHARDS: usize = 16;
 
 /// One conversation.
 #[derive(Debug)]
@@ -38,44 +49,59 @@ impl Session {
     }
 }
 
-/// All live sessions.
-#[derive(Debug, Default)]
+/// All live sessions, sharded for concurrent access.
+#[derive(Debug)]
 pub struct SessionStore {
-    sessions: BTreeMap<u64, Session>,
-    next_id: u64,
+    shards: Vec<RwLock<BTreeMap<u64, Session>>>,
+    next_id: AtomicU64,
     mesh_seed: u64,
 }
 
 impl SessionStore {
     pub fn new(mesh_seed: u64) -> SessionStore {
-        SessionStore { sessions: BTreeMap::new(), next_id: 1, mesh_seed }
+        SessionStore {
+            shards: (0..SHARDS).map(|_| RwLock::new(BTreeMap::new())).collect(),
+            next_id: AtomicU64::new(1),
+            mesh_seed,
+        }
     }
 
-    pub fn open(&mut self, user: &str) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
-        self.sessions.insert(id, Session::new(id, user, self.mesh_seed));
+    fn shard(&self, id: u64) -> &RwLock<BTreeMap<u64, Session>> {
+        &self.shards[(id % SHARDS as u64) as usize]
+    }
+
+    /// Open a session for a user; ids are unique even under concurrent opens.
+    pub fn open(&self, user: &str) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.shard(id).write().unwrap().insert(id, Session::new(id, user, self.mesh_seed));
         id
     }
 
-    pub fn get(&self, id: u64) -> Option<&Session> {
-        self.sessions.get(&id)
+    /// Run `f` against the session under a read lock.
+    pub fn with<R>(&self, id: u64, f: impl FnOnce(&Session) -> R) -> Option<R> {
+        self.shard(id).read().unwrap().get(&id).map(f)
     }
 
-    pub fn get_mut(&mut self, id: u64) -> Option<&mut Session> {
-        self.sessions.get_mut(&id)
+    /// Run `f` against the session under a write lock.
+    pub fn with_mut<R>(&self, id: u64, f: impl FnOnce(&mut Session) -> R) -> Option<R> {
+        self.shard(id).write().unwrap().get_mut(&id).map(f)
     }
 
-    pub fn close(&mut self, id: u64) -> bool {
-        self.sessions.remove(&id).is_some()
+    /// The user who owns a session.
+    pub fn user_of(&self, id: u64) -> Option<String> {
+        self.with(id, |s| s.user.clone())
+    }
+
+    pub fn close(&self, id: u64) -> bool {
+        self.shard(id).write().unwrap().remove(&id).is_some()
     }
 
     pub fn len(&self) -> usize {
-        self.sessions.len()
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.sessions.is_empty()
+        self.len() == 0
     }
 }
 
@@ -85,45 +111,81 @@ mod tests {
 
     #[test]
     fn open_record_close() {
-        let mut store = SessionStore::new(42);
+        let store = SessionStore::new(42);
         let id = store.open("alice");
         assert_eq!(store.len(), 1);
-        let s = store.get_mut(id).unwrap();
-        s.record_turn("hello", "hi there", 1.0);
-        assert_eq!(s.history.len(), 2);
-        assert_eq!(s.prev_island_privacy, Some(1.0));
+        store.with_mut(id, |s| s.record_turn("hello", "hi there", 1.0)).unwrap();
+        store
+            .with(id, |s| {
+                assert_eq!(s.history.len(), 2);
+                assert_eq!(s.prev_island_privacy, Some(1.0));
+            })
+            .unwrap();
         assert!(store.close(id));
         assert!(store.is_empty());
+        assert!(store.with(id, |_| ()).is_none());
     }
 
     #[test]
     fn session_ids_unique() {
-        let mut store = SessionStore::new(1);
+        let store = SessionStore::new(1);
         let a = store.open("u");
         let b = store.open("u");
         assert_ne!(a, b);
+        assert_eq!(store.user_of(a).as_deref(), Some("u"));
     }
 
     #[test]
     fn placeholder_maps_uncorrelated_across_sessions() {
-        let mut store = SessionStore::new(7);
+        let store = SessionStore::new(7);
         let a = store.open("u");
         let b = store.open("u");
-        let sa = store.get_mut(a).unwrap().placeholders.sanitize("john doe", 0.4);
-        let sb = store.get_mut(b).unwrap().placeholders.sanitize("john doe", 0.4);
+        let sa = store.with_mut(a, |s| s.placeholders.sanitize("john doe", 0.4)).unwrap();
+        let sb = store.with_mut(b, |s| s.placeholders.sanitize("john doe", 0.4)).unwrap();
         // same entity, different sessions → (almost surely) different ids
         assert_ne!(sa, sb);
     }
 
     #[test]
     fn history_tracks_trust_boundary() {
-        let mut store = SessionStore::new(3);
+        let store = SessionStore::new(3);
         let id = store.open("bob");
-        let s = store.get_mut(id).unwrap();
-        assert_eq!(s.prev_island_privacy, None);
-        s.record_turn("q1", "a1", 1.0);
-        s.record_turn("q2", "a2", 0.4);
-        assert_eq!(s.prev_island_privacy, Some(0.4));
-        assert_eq!(s.history.len(), 4);
+        assert_eq!(store.with(id, |s| s.prev_island_privacy).unwrap(), None);
+        store
+            .with_mut(id, |s| {
+                s.record_turn("q1", "a1", 1.0);
+                s.record_turn("q2", "a2", 0.4);
+            })
+            .unwrap();
+        assert_eq!(store.with(id, |s| s.prev_island_privacy).unwrap(), Some(0.4));
+        assert_eq!(store.with(id, |s| s.history.len()).unwrap(), 4);
+    }
+
+    #[test]
+    fn concurrent_opens_yield_unique_ids() {
+        use std::sync::{Arc, Mutex};
+        let store = Arc::new(SessionStore::new(9));
+        let ids = Arc::new(Mutex::new(Vec::new()));
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let store = Arc::clone(&store);
+                let ids = Arc::clone(&ids);
+                std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    for _ in 0..100 {
+                        mine.push(store.open(&format!("user-{t}")));
+                    }
+                    ids.lock().unwrap().extend(mine);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all = ids.lock().unwrap().clone();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 800);
+        assert_eq!(store.len(), 800);
     }
 }

@@ -1,27 +1,26 @@
 //! Metrics registry: counters, gauges and latency histograms.
 //!
 //! Owned by the rust coordinator (L3 owns "metrics" per the architecture);
-//! every agent and island executor reports here. Thread-safe via a single
-//! mutex — the hot path records a few counters per request, far from
-//! contention at the request rates this testbed reaches (verified in the
-//! §Perf pass).
+//! every agent and island executor reports here. Thread-safe and
+//! lock-minimal: counters and gauges are atomics reached through an
+//! `RwLock`-ed name table (read-locked on the hot path, write-locked only
+//! the first time a name appears), histograms keep a single mutex because
+//! recording mutates bucket arrays. Many threads submit through
+//! `Arc<Orchestrator>` concurrently; the per-request cost here is a few
+//! atomic adds plus one short histogram lock.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
-use crate::util::{Histogram, Table};
+use crate::util::{AtomicF64, Histogram, Table};
 
 /// Central metrics registry.
 #[derive(Default)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
-}
-
-#[derive(Default)]
-struct Inner {
-    counters: BTreeMap<String, u64>,
-    gauges: BTreeMap<String, f64>,
-    histograms: BTreeMap<String, Histogram>,
+    counters: RwLock<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: RwLock<BTreeMap<String, Arc<AtomicF64>>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
 }
 
 impl Metrics {
@@ -29,59 +28,78 @@ impl Metrics {
         Self::default()
     }
 
+    fn counter_cell(&self, name: &str) -> Arc<AtomicU64> {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            return Arc::clone(c);
+        }
+        let mut w = self.counters.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_default())
+    }
+
+    fn gauge_cell(&self, name: &str) -> Arc<AtomicF64> {
+        if let Some(g) = self.gauges.read().unwrap().get(name) {
+            return Arc::clone(g);
+        }
+        let mut w = self.gauges.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_default())
+    }
+
     /// Increment a named counter by `n`.
     pub fn count(&self, name: &str, n: u64) {
-        let mut g = self.inner.lock().unwrap();
-        *g.counters.entry(name.to_string()).or_insert(0) += n;
+        self.counter_cell(name).fetch_add(n, Ordering::SeqCst);
     }
 
     /// Set a gauge to an absolute value.
     pub fn gauge(&self, name: &str, v: f64) {
-        let mut g = self.inner.lock().unwrap();
-        g.gauges.insert(name.to_string(), v);
+        self.gauge_cell(name).store(v);
     }
 
     /// Record a histogram sample (e.g. latency in ms).
     pub fn observe(&self, name: &str, v: f64) {
-        let mut g = self.inner.lock().unwrap();
-        g.histograms.entry(name.to_string()).or_default().record(v);
+        let mut g = self.histograms.lock().unwrap();
+        g.entry(name.to_string()).or_default().record(v);
     }
 
     pub fn counter_value(&self, name: &str) -> u64 {
-        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+        self.counters.read().unwrap().get(name).map(|c| c.load(Ordering::SeqCst)).unwrap_or(0)
     }
 
     pub fn gauge_value(&self, name: &str) -> Option<f64> {
-        self.inner.lock().unwrap().gauges.get(name).copied()
+        self.gauges.read().unwrap().get(name).map(|g| g.load())
     }
 
     /// Snapshot of a histogram by name.
     pub fn histogram(&self, name: &str) -> Option<Histogram> {
-        self.inner.lock().unwrap().histograms.get(name).cloned()
+        self.histograms.lock().unwrap().get(name).cloned()
     }
 
     /// Render everything as a report table (used by `islandrun stats`).
     pub fn report(&self) -> Table {
-        let g = self.inner.lock().unwrap();
         let mut t = Table::new("metrics", &["metric", "value"]);
-        for (k, v) in &g.counters {
-            t.row(&[k.clone(), v.to_string()]);
+        for (k, v) in self.counters.read().unwrap().iter() {
+            t.row(&[k.clone(), v.load(Ordering::SeqCst).to_string()]);
         }
-        for (k, v) in &g.gauges {
-            t.row(&[k.clone(), format!("{v:.3}")]);
+        for (k, v) in self.gauges.read().unwrap().iter() {
+            t.row(&[k.clone(), format!("{:.3}", v.load())]);
         }
-        for (k, h) in &g.histograms {
+        for (k, h) in self.histograms.lock().unwrap().iter() {
             t.row(&[k.clone(), h.summary()]);
         }
         t
     }
 
-    /// Clear all metrics (between experiment repetitions).
+    /// Clear all metrics (between experiment repetitions). Counter and gauge
+    /// cells are zeroed in place rather than dropped so a racing `count()`
+    /// that already fetched a cell still lands its increment in a live
+    /// counter instead of an orphaned one.
     pub fn reset(&self) {
-        let mut g = self.inner.lock().unwrap();
-        g.counters.clear();
-        g.gauges.clear();
-        g.histograms.clear();
+        for c in self.counters.read().unwrap().values() {
+            c.store(0, Ordering::SeqCst);
+        }
+        for g in self.gauges.read().unwrap().values() {
+            g.store(0.0);
+        }
+        self.histograms.lock().unwrap().clear();
     }
 }
 
@@ -143,6 +161,7 @@ mod tests {
                     for _ in 0..1000 {
                         m.count("n", 1);
                         m.observe("h", 1.0);
+                        m.gauge("g", 0.5);
                     }
                 })
             })
@@ -152,5 +171,6 @@ mod tests {
         }
         assert_eq!(m.counter_value("n"), 4000);
         assert_eq!(m.histogram("h").unwrap().count(), 4000);
+        assert_eq!(m.gauge_value("g"), Some(0.5));
     }
 }

@@ -1,0 +1,80 @@
+//! Lock-free `f64` cell over `AtomicU64` bit transmutation — the building
+//! block for the concurrent metrics registry, the cost ledger totals and the
+//! fleet's virtual clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// An `f64` with atomic load/store/add. Add uses a CAS loop; all operations
+/// are `SeqCst` (these sit on accounting paths, not hot inner loops).
+#[derive(Debug, Default)]
+pub struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    pub fn new(value: f64) -> AtomicF64 {
+        AtomicF64 { bits: AtomicU64::new(value.to_bits()) }
+    }
+
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::SeqCst))
+    }
+
+    pub fn store(&self, value: f64) {
+        self.bits.store(value.to_bits(), Ordering::SeqCst);
+    }
+
+    /// Atomically add `delta`, returning the previous value.
+    pub fn fetch_add(&self, delta: f64) -> f64 {
+        let mut current = self.bits.load(Ordering::SeqCst);
+        loop {
+            let next = (f64::from_bits(current) + delta).to_bits();
+            match self.bits.compare_exchange(current, next, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => return f64::from_bits(current),
+                Err(actual) => current = actual,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn load_store_round_trip() {
+        let a = AtomicF64::new(1.5);
+        assert_eq!(a.load(), 1.5);
+        a.store(-2.25);
+        assert_eq!(a.load(), -2.25);
+        assert_eq!(AtomicF64::default().load(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_adds_sum_exactly() {
+        // powers of two add exactly in f64 regardless of interleaving
+        let a = Arc::new(AtomicF64::new(0.0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        a.fetch_add(0.25);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load(), 2000.0);
+    }
+
+    #[test]
+    fn fetch_add_returns_previous() {
+        let a = AtomicF64::new(1.0);
+        assert_eq!(a.fetch_add(2.0), 1.0);
+        assert_eq!(a.load(), 3.0);
+    }
+}

@@ -5,12 +5,14 @@
 //! (`rand`, `criterion`'s stats, `proptest`); the substitution is recorded in
 //! `DESIGN.md` §2.
 
+pub mod atomic;
 pub mod bench;
 pub mod minicheck;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use atomic::AtomicF64;
 pub use rng::Rng;
 pub use stats::Histogram;
 pub use table::Table;

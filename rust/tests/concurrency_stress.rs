@@ -1,0 +1,106 @@
+//! Concurrency stress: 16 threads x 100 requests through `Arc<Orchestrator>`.
+//!
+//! Pins the serving-core invariants that must hold under contention,
+//! independent of interleaving:
+//! - request ids are globally unique (atomic allocation),
+//! - the audit log holds exactly one entry per admitted submission,
+//! - ledger totals equal the sum of per-request costs (per user and global),
+//! - the metrics counters partition admitted work into served + rejected.
+
+use std::sync::Arc;
+
+use islandrun::agents::mist::Mist;
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::eval::loadgen::run_closed_loop;
+use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator};
+
+const THREADS: usize = 16;
+const PER_THREAD: usize = 100;
+
+fn stress_orchestrator(seed: u64) -> Arc<Orchestrator> {
+    let mut cfg = Config::default();
+    // the stress test exercises the pipeline, not admission policy: a
+    // saturating rate limit or budget would turn submissions away and hide
+    // the invariants under test
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    let fleet = Fleet::new(preset_personal_group(), seed);
+    Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), seed))
+}
+
+#[test]
+fn sixteen_threads_hundred_requests_invariants() {
+    let orch = stress_orchestrator(101);
+    let report = run_closed_loop(&orch, THREADS, PER_THREAD, 3);
+    let total = THREADS * PER_THREAD;
+
+    // nothing refused: with the limiter and budget out of the way every
+    // submission must come back as an Outcome
+    assert_eq!(report.errors, 0, "unexpected submit errors");
+    assert_eq!(report.outcomes.len(), total);
+
+    // 1. request ids unique
+    let mut ids: Vec<u64> = report.outcomes.iter().map(|o| o.request_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), total, "request ids must be unique under contention");
+
+    // 2. exactly one audit entry per submitted request, ids matching
+    assert_eq!(orch.audit.len(), total);
+    let mut audit_ids: Vec<u64> = orch.audit.entries().iter().map(|e| e.request_id).collect();
+    audit_ids.sort_unstable();
+    audit_ids.dedup();
+    assert_eq!(audit_ids, ids, "audit trail must cover exactly the submitted ids");
+
+    // 3. ledger totals match the sum of per-request costs
+    let expected_total: f64 = report.outcomes.iter().map(|o| o.cost).sum();
+    let tolerance = 1e-9 * (1.0 + expected_total.abs());
+    assert!(
+        (orch.ledger.total() - expected_total).abs() < tolerance,
+        "ledger total {} != outcome sum {}",
+        orch.ledger.total(),
+        expected_total
+    );
+    let user_of: std::collections::HashMap<u64, String> =
+        orch.audit.entries().into_iter().map(|e| (e.request_id, e.user)).collect();
+    for t in 0..THREADS {
+        let user = format!("loadgen-{t}");
+        let expected_user: f64 = report
+            .outcomes
+            .iter()
+            .filter(|o| user_of.get(&o.request_id) == Some(&user))
+            .map(|o| o.cost)
+            .sum();
+        assert!(
+            (orch.ledger.spent(&user) - expected_user).abs() < tolerance,
+            "user {user}: ledger {} != outcome sum {}",
+            orch.ledger.spent(&user),
+            expected_user
+        );
+    }
+
+    // 4. metrics partition admitted work
+    let served = orch.metrics.counter_value("requests_served");
+    let rejected = orch.metrics.counter_value("rejected_fail_closed");
+    assert_eq!(served as usize, report.served());
+    assert_eq!(rejected as usize, report.rejected());
+    assert_eq!((served + rejected) as usize, total);
+    assert_eq!(orch.metrics.counter_value("rate_limited"), 0);
+
+    // 5. the trail stays compliance-clean even under contention
+    assert!(orch.audit.violations(0.9, 0.9).is_empty(), "privacy constraint violated under load");
+}
+
+#[test]
+fn stress_run_is_repeatable() {
+    // two runs with the same seeds produce the same id SET sizes and the
+    // same audit cardinality (interleavings differ; the invariants do not)
+    for _ in 0..2 {
+        let orch = stress_orchestrator(202);
+        let report = run_closed_loop(&orch, 8, 50, 9);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.outcomes.len(), 400);
+        assert_eq!(orch.audit.len(), 400);
+    }
+}

@@ -17,7 +17,7 @@ fn sim(islands: Vec<islandrun::types::Island>, seed: u64) -> Orchestrator {
 fn guarantee1_privacy_preservation_over_long_session() {
     // Guarantee 1: selected island always satisfies P >= s_r.
     let islands = preset_personal_group();
-    let mut orch = sim(islands.clone(), 31);
+    let orch = sim(islands.clone(), 31);
     let s = orch.open_session("alice");
     let mut rng = islandrun::util::Rng::new(5);
     for i in 0..120 {
@@ -41,15 +41,15 @@ fn guarantee1_privacy_preservation_over_long_session() {
 #[test]
 fn guarantee2_context_sanitization_on_every_downward_crossing() {
     let islands = preset_healthcare();
-    let mut orch = sim(islands.clone(), 32);
+    let orch = sim(islands.clone(), 32);
     let s = orch.open_session("dr");
     // sensitive turn on the workstation
     let t1 = orch.submit(s, "patient john doe ssn 123-45-6789 with diabetes", PriorityTier::Primary, None).unwrap();
     assert!(!t1.sanitized);
     // push follow-ups off the workstation
-    for island in orch.fleet_mut().unwrap().islands.iter_mut() {
+    for island in orch.fleet().unwrap().islands.iter() {
         if !island.spec.unbounded() {
-            island.external_load = 0.99;
+            island.set_external_load(0.99);
         }
     }
     let t2 = orch.submit(s, "suggest general wellness resources", PriorityTier::Burstable, None).unwrap();
@@ -57,8 +57,10 @@ fn guarantee2_context_sanitization_on_every_downward_crossing() {
     assert!(target.privacy < 1.0);
     assert!(t2.sanitized, "downward crossing must sanitize");
     // sanitized view must not contain the identifiers
-    let sess = orch.sessions.get_mut(s).unwrap();
-    let visible = sess.placeholders.sanitize("patient john doe ssn 123-45-6789 with diabetes", target.privacy);
+    let visible = orch
+        .sessions
+        .with_mut(s, |sess| sess.placeholders.sanitize("patient john doe ssn 123-45-6789 with diabetes", target.privacy))
+        .unwrap();
     assert!(!visible.contains("john doe") && !visible.contains("123-45-6789"), "{visible}");
     assert!(PlaceholderMap::verify_clean(&visible, target.privacy), "{visible}");
 }
@@ -67,7 +69,7 @@ fn guarantee2_context_sanitization_on_every_downward_crossing() {
 fn guarantee3_data_locality_never_exfiltrates() {
     let mut islands = preset_personal_group();
     islands[3].datasets.push("phi_db".to_string()); // home NAS holds the data
-    let mut orch = sim(islands.clone(), 33);
+    let orch = sim(islands.clone(), 33);
     let s = orch.open_session("nurse");
     for _ in 0..30 {
         let out = orch.submit(s, "query the phi records for trends", PriorityTier::Secondary, Some("phi_db")).unwrap();
@@ -80,25 +82,28 @@ fn guarantee3_data_locality_never_exfiltrates() {
 #[test]
 fn desanitized_responses_keep_conversation_coherent() {
     let islands = preset_personal_group();
-    let mut orch = sim(islands, 34);
+    let orch = sim(islands, 34);
     let s = orch.open_session("alice");
     orch.submit(s, "patient jane smith has hypertension", PriorityTier::Primary, None).unwrap();
     // force offload; the sim response echoes placeholders back
-    for island in orch.fleet_mut().unwrap().islands.iter_mut() {
+    for island in orch.fleet().unwrap().islands.iter() {
         if !island.spec.unbounded() {
-            island.external_load = 0.99;
+            island.set_external_load(0.99);
         }
     }
     let out = orch.submit(s, "thanks, anything else to monitor", PriorityTier::Burstable, None).unwrap();
     assert!(out.sanitized);
     // stored history view (what the user sees) contains original entities,
     // never placeholder tokens
-    let hist = &orch.sessions.get(s).unwrap().history;
-    for turn in hist {
-        if turn.role == islandrun::types::Role::User {
-            assert!(!turn.text.contains("[PERSON_"), "{}", turn.text);
-        }
-    }
+    orch.sessions
+        .with(s, |sess| {
+            for turn in &sess.history {
+                if turn.role == islandrun::types::Role::User {
+                    assert!(!turn.text.contains("[PERSON_"), "{}", turn.text);
+                }
+            }
+        })
+        .unwrap();
 }
 
 #[test]
@@ -130,7 +135,7 @@ fn fail_closed_beats_availability_everywhere() {
     // remove every island that could satisfy a restricted request: ALL
     // submissions must reject; none may fall through to cloud
     let islands: Vec<_> = preset_personal_group().into_iter().filter(|i| i.privacy < 0.9).collect();
-    let mut orch = sim(islands, 35);
+    let orch = sim(islands, 35);
     let s = orch.open_session("alice");
     for _ in 0..10 {
         let out = orch.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();

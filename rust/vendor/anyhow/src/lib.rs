@@ -1,0 +1,159 @@
+//! Minimal, offline, API-compatible subset of the `anyhow` crate.
+//!
+//! Implements exactly what this workspace uses: [`Error`], [`Result`], the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros, and `?`-conversion from any
+//! `std::error::Error + Send + Sync + 'static`. No backtraces, no context
+//! chains, no downcasting.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A boxed dynamic error with a `Display`-first presentation.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// `anyhow::Result<T>` — second parameter defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Create an error from any boxed std error.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { inner: Box::new(error) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket conversion below coherent (same trick as upstream
+// anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error { inner: Box::new(error) }
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(s)
+    }
+
+    fn fails_fmt(id: u64) -> Result<()> {
+        bail!("unknown session {id}")
+    }
+
+    fn fails_args(name: &str, n: usize) -> Result<()> {
+        bail!("{} missing {n} items", name)
+    }
+
+    fn checks(n: usize) -> Result<usize> {
+        ensure!(n > 0, "empty batch");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails_io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        let _dbg = format!("{e:?}");
+    }
+
+    #[test]
+    fn macros_format() {
+        assert_eq!(fails_fmt(7).unwrap_err().to_string(), "unknown session 7");
+        assert_eq!(fails_args("batch", 3).unwrap_err().to_string(), "batch missing 3 items");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn ensure_returns_ok_or_err() {
+        assert_eq!(checks(2).unwrap(), 2);
+        assert_eq!(checks(0).unwrap_err().to_string(), "empty batch");
+    }
+
+    #[test]
+    fn error_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+
+    #[test]
+    fn expr_form_accepts_display() {
+        let e = anyhow!(std::io::Error::other("boom"));
+        assert_eq!(e.to_string(), "boom");
+    }
+}

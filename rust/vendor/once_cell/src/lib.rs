@@ -1,0 +1,59 @@
+//! Minimal, offline, API-compatible subset of the `once_cell` crate:
+//! just `once_cell::sync::Lazy`, backed by `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access. The default `F = fn() -> T`
+    /// lets non-capturing closures coerce in `static` initializers, exactly
+    /// like upstream once_cell.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static CALLS: AtomicUsize = AtomicUsize::new(0);
+    static VALUE: Lazy<Vec<u32>> = Lazy::new(|| {
+        CALLS.fetch_add(1, Ordering::SeqCst);
+        vec![1, 2, 3]
+    });
+
+    #[test]
+    fn initializes_once_under_threads() {
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(|| VALUE.iter().sum::<u32>()))
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 6);
+        }
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+        assert_eq!(VALUE.len(), 3);
+    }
+}

@@ -1,0 +1,989 @@
+//! Minimal, offline, API-compatible subset of the `regex` crate.
+//!
+//! A recursive-descent parser plus a backtracking matcher with leftmost-first
+//! semantics (the same observable match semantics as the real crate for the
+//! feature subset below). Supported syntax — the union of everything the
+//! IslandRun MIST patterns use:
+//!
+//! - literals, `.` (any char but `\n`), alternation `|`
+//! - non-capturing groups `(?:...)`, inline flag groups `(?i:...)`, flag
+//!   directives `(?i)` (scoped to the rest of the enclosing group), and
+//!   plain `(...)` groups (treated as non-capturing; only group 0 exists)
+//! - character classes `[...]` with ranges, negation `[^...]`, literal `-`
+//!   at either end, and `\d \s \w` inside classes
+//! - escapes `\d \D \s \S \w \W \b` and escaped metacharacters
+//! - quantifiers `? * + {n} {n,} {n,m}` (greedy only)
+//!
+//! Offsets returned by [`Match::start`]/[`Match::end`] are byte offsets into
+//! the original text, always on UTF-8 boundaries. A first-character bitmap
+//! prunes scan positions so the O(|q|·m) MIST stage-1 sweep stays well under
+//! the paper's 10 ms routing budget.
+
+use std::borrow::Cow;
+use std::fmt;
+
+/// Pattern compilation error.
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "regex parse error: {}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "regex parse error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+// ---------------------------------------------------------------------------
+// AST
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Named {
+    Digit,
+    NotDigit,
+    Space,
+    NotSpace,
+    Word,
+    NotWord,
+}
+
+impl Named {
+    fn test(self, c: char) -> bool {
+        match self {
+            Named::Digit => c.is_ascii_digit(),
+            Named::NotDigit => !c.is_ascii_digit(),
+            Named::Space => c.is_whitespace(),
+            Named::NotSpace => !c.is_whitespace(),
+            Named::Word => is_word(c),
+            Named::NotWord => !is_word(c),
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct ClassSet {
+    negated: bool,
+    ranges: Vec<(char, char)>,
+    named: Vec<Named>,
+}
+
+impl ClassSet {
+    fn raw(&self, c: char) -> bool {
+        self.ranges.iter().any(|&(lo, hi)| lo <= c && c <= hi) || self.named.iter().any(|n| n.test(c))
+    }
+
+    fn contains(&self, c: char, icase: bool) -> bool {
+        let mut hit = self.raw(c);
+        if !hit && icase && c.is_ascii_alphabetic() {
+            hit = self.raw(c.to_ascii_lowercase()) || self.raw(c.to_ascii_uppercase());
+        }
+        hit != self.negated
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Empty,
+    Char { c: char, icase: bool },
+    Class { set: ClassSet, icase: bool },
+    Dot,
+    WordBoundary,
+    Concat(Vec<Node>),
+    Alt(Vec<Node>),
+    Repeat { node: Box<Node>, min: u32, max: Option<u32> },
+}
+
+fn is_word(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+    icase: bool,
+}
+
+impl Parser {
+    fn err(&self, msg: &str) -> Error {
+        Error { msg: format!("{} at pattern offset {}", msg, self.pos) }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn peek2(&self) -> Option<char> {
+        self.chars.get(self.pos + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn alt(&mut self) -> Result<Node, Error> {
+        let mut branches = vec![self.concat()?];
+        while self.peek() == Some('|') {
+            self.pos += 1;
+            branches.push(self.concat()?);
+        }
+        if branches.len() == 1 {
+            Ok(branches.pop().expect("one branch"))
+        } else {
+            Ok(Node::Alt(branches))
+        }
+    }
+
+    fn concat(&mut self) -> Result<Node, Error> {
+        let mut items = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == '|' || c == ')' {
+                break;
+            }
+            let item = self.repeat_atom()?;
+            if !matches!(item, Node::Empty) {
+                items.push(item);
+            }
+        }
+        match items.len() {
+            0 => Ok(Node::Empty),
+            1 => Ok(items.pop().expect("one item")),
+            _ => Ok(Node::Concat(items)),
+        }
+    }
+
+    fn repeat_atom(&mut self) -> Result<Node, Error> {
+        let mut node = self.atom()?;
+        loop {
+            match self.peek() {
+                Some('?') => {
+                    self.pos += 1;
+                    node = Node::Repeat { node: Box::new(node), min: 0, max: Some(1) };
+                }
+                Some('*') => {
+                    self.pos += 1;
+                    node = Node::Repeat { node: Box::new(node), min: 0, max: None };
+                }
+                Some('+') => {
+                    self.pos += 1;
+                    node = Node::Repeat { node: Box::new(node), min: 1, max: None };
+                }
+                Some('{') if self.peek2().map(|c| c.is_ascii_digit()).unwrap_or(false) => {
+                    self.pos += 1;
+                    let (min, max) = self.bounds()?;
+                    node = Node::Repeat { node: Box::new(node), min, max };
+                }
+                _ => return Ok(node),
+            }
+        }
+    }
+
+    fn bounds(&mut self) -> Result<(u32, Option<u32>), Error> {
+        let min = self.number()?;
+        match self.bump() {
+            Some('}') => Ok((min, Some(min))),
+            Some(',') => {
+                if self.peek() == Some('}') {
+                    self.pos += 1;
+                    Ok((min, None))
+                } else {
+                    let max = self.number()?;
+                    if self.bump() != Some('}') {
+                        return Err(self.err("expected '}' after repetition bounds"));
+                    }
+                    if max < min {
+                        return Err(self.err("repetition max < min"));
+                    }
+                    Ok((min, Some(max)))
+                }
+            }
+            _ => Err(self.err("malformed repetition bounds")),
+        }
+    }
+
+    fn number(&mut self) -> Result<u32, Error> {
+        let start = self.pos;
+        while self.peek().map(|c| c.is_ascii_digit()).unwrap_or(false) {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err("expected number"));
+        }
+        let text: String = self.chars[start..self.pos].iter().collect();
+        text.parse().map_err(|_| self.err("repetition count too large"))
+    }
+
+    fn atom(&mut self) -> Result<Node, Error> {
+        match self.bump() {
+            Some('(') => self.group(),
+            Some('[') => self.class(),
+            Some('\\') => self.escape(),
+            Some('.') => Ok(Node::Dot),
+            Some('^') | Some('$') => Err(self.err("anchors ^ and $ are not supported")),
+            Some(c) => Ok(Node::Char { c, icase: self.icase }),
+            None => Err(self.err("unexpected end of pattern")),
+        }
+    }
+
+    fn group(&mut self) -> Result<Node, Error> {
+        if self.peek() == Some('?') {
+            self.pos += 1;
+            // flag chars until ':' (scoped group) or ')' (directive)
+            let mut icase_on = false;
+            loop {
+                match self.peek() {
+                    Some('i') => {
+                        icase_on = true;
+                        self.pos += 1;
+                    }
+                    Some(':') => {
+                        self.pos += 1;
+                        let saved = self.icase;
+                        if icase_on {
+                            self.icase = true;
+                        }
+                        let inner = self.alt()?;
+                        self.icase = saved;
+                        if self.bump() != Some(')') {
+                            return Err(self.err("unclosed group"));
+                        }
+                        return Ok(inner);
+                    }
+                    Some(')') => {
+                        self.pos += 1;
+                        // directive: flags apply to the rest of the
+                        // enclosing group / pattern
+                        if icase_on {
+                            self.icase = true;
+                        }
+                        return Ok(Node::Empty);
+                    }
+                    _ => return Err(self.err("unsupported group flags (only (?i), (?i:), (?:) )")),
+                }
+            }
+        }
+        // plain group, treated as non-capturing; a (?i) directive inside is
+        // scoped to this group, as in the real regex crate
+        let saved = self.icase;
+        let inner = self.alt()?;
+        self.icase = saved;
+        if self.bump() != Some(')') {
+            return Err(self.err("unclosed group"));
+        }
+        Ok(inner)
+    }
+
+    fn escape(&mut self) -> Result<Node, Error> {
+        let icase = self.icase;
+        match self.bump() {
+            Some('d') => Ok(class_node(Named::Digit, icase)),
+            Some('D') => Ok(class_node(Named::NotDigit, icase)),
+            Some('s') => Ok(class_node(Named::Space, icase)),
+            Some('S') => Ok(class_node(Named::NotSpace, icase)),
+            Some('w') => Ok(class_node(Named::Word, icase)),
+            Some('W') => Ok(class_node(Named::NotWord, icase)),
+            Some('b') => Ok(Node::WordBoundary),
+            Some('n') => Ok(Node::Char { c: '\n', icase }),
+            Some('t') => Ok(Node::Char { c: '\t', icase }),
+            Some('r') => Ok(Node::Char { c: '\r', icase }),
+            Some(c) if !c.is_alphanumeric() => Ok(Node::Char { c, icase }),
+            Some(c) => Err(self.err(&format!("unsupported escape \\{c}"))),
+            None => Err(self.err("dangling backslash")),
+        }
+    }
+
+    fn class(&mut self) -> Result<Node, Error> {
+        let mut set = ClassSet::default();
+        if self.peek() == Some('^') {
+            set.negated = true;
+            self.pos += 1;
+        }
+        if self.peek() == Some(']') {
+            set.ranges.push((']', ']'));
+            self.pos += 1;
+        }
+        loop {
+            let c = match self.bump() {
+                None => return Err(self.err("unclosed character class")),
+                Some(']') => break,
+                Some('\\') => match self.bump() {
+                    Some('d') => {
+                        set.named.push(Named::Digit);
+                        continue;
+                    }
+                    Some('s') => {
+                        set.named.push(Named::Space);
+                        continue;
+                    }
+                    Some('w') => {
+                        set.named.push(Named::Word);
+                        continue;
+                    }
+                    Some('n') => '\n',
+                    Some('t') => '\t',
+                    Some('r') => '\r',
+                    Some(c) if !c.is_alphanumeric() => c,
+                    Some(c) => return Err(self.err(&format!("unsupported class escape \\{c}"))),
+                    None => return Err(self.err("dangling backslash in class")),
+                },
+                Some(c) => c,
+            };
+            // range if followed by '-' and a closing element that is not ']'
+            if self.peek() == Some('-') && self.peek2().is_some() && self.peek2() != Some(']') {
+                self.pos += 1; // consume '-'
+                let hi = match self.bump() {
+                    Some('\\') => self.bump().ok_or_else(|| self.err("dangling backslash in class"))?,
+                    Some(h) => h,
+                    None => return Err(self.err("unclosed character class")),
+                };
+                if hi < c {
+                    return Err(self.err("invalid class range"));
+                }
+                set.ranges.push((c, hi));
+            } else {
+                set.ranges.push((c, c));
+            }
+        }
+        Ok(Node::Class { set, icase: self.icase })
+    }
+}
+
+fn class_node(named: Named, icase: bool) -> Node {
+    Node::Class { set: ClassSet { negated: false, ranges: Vec::new(), named: vec![named] }, icase }
+}
+
+// ---------------------------------------------------------------------------
+// First-character filter
+// ---------------------------------------------------------------------------
+
+/// Conservative over-approximation of the characters a match can start with.
+#[derive(Clone, Debug)]
+struct FirstSet {
+    ascii: [bool; 128],
+    /// true => any non-ASCII char may start a match
+    non_ascii: bool,
+}
+
+impl FirstSet {
+    fn all() -> FirstSet {
+        FirstSet { ascii: [true; 128], non_ascii: true }
+    }
+
+    fn none() -> FirstSet {
+        FirstSet { ascii: [false; 128], non_ascii: false }
+    }
+
+    fn add_char(&mut self, c: char, icase: bool) {
+        if (c as u32) < 128 {
+            self.ascii[c as usize] = true;
+            if icase {
+                self.ascii[c.to_ascii_lowercase() as usize] = true;
+                self.ascii[c.to_ascii_uppercase() as usize] = true;
+            }
+        } else {
+            self.non_ascii = true;
+        }
+    }
+
+    fn add_named(&mut self, n: Named) {
+        match n {
+            Named::Digit => {
+                for c in b'0'..=b'9' {
+                    self.ascii[c as usize] = true;
+                }
+            }
+            Named::Space => {
+                for c in [b' ', b'\t', b'\n', b'\r', 0x0B, 0x0C] {
+                    self.ascii[c as usize] = true;
+                }
+                self.non_ascii = true; // unicode spaces
+            }
+            Named::Word => {
+                for c in 0..128u8 {
+                    if (c as char).is_ascii_alphanumeric() || c == b'_' {
+                        self.ascii[c as usize] = true;
+                    }
+                }
+                self.non_ascii = true; // unicode word chars
+            }
+            // negated classes match almost everything
+            Named::NotDigit | Named::NotSpace | Named::NotWord => {
+                *self = FirstSet::all();
+            }
+        }
+    }
+
+    fn test(&self, c: char) -> bool {
+        if (c as u32) < 128 {
+            self.ascii[c as usize]
+        } else {
+            self.non_ascii
+        }
+    }
+}
+
+/// Accumulate the first set of `node` into `fs`; returns true when `node`
+/// can match the empty string (so scanning must continue to the next item).
+fn first_of(node: &Node, fs: &mut FirstSet) -> bool {
+    match node {
+        Node::Empty | Node::WordBoundary => true,
+        Node::Char { c, icase } => {
+            fs.add_char(*c, *icase);
+            false
+        }
+        Node::Dot => {
+            *fs = FirstSet::all();
+            false
+        }
+        Node::Class { set, icase } => {
+            if set.negated {
+                *fs = FirstSet::all();
+            } else {
+                for &(lo, hi) in &set.ranges {
+                    let mut c = lo;
+                    loop {
+                        fs.add_char(c, *icase);
+                        if c >= hi || (c as u32) >= 128 {
+                            if (hi as u32) >= 128 {
+                                fs.non_ascii = true;
+                            }
+                            break;
+                        }
+                        c = char::from_u32(c as u32 + 1).unwrap_or(hi);
+                    }
+                }
+                for &n in &set.named {
+                    fs.add_named(n);
+                }
+            }
+            false
+        }
+        Node::Concat(items) => {
+            for item in items {
+                if !first_of(item, fs) {
+                    return false;
+                }
+            }
+            true
+        }
+        Node::Alt(branches) => {
+            let mut nullable = false;
+            for b in branches {
+                nullable |= first_of(b, fs);
+            }
+            nullable
+        }
+        Node::Repeat { node, min, .. } => {
+            let inner_nullable = first_of(node, fs);
+            *min == 0 || inner_nullable
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matcher
+// ---------------------------------------------------------------------------
+
+struct Input<'t> {
+    text: &'t str,
+    chars: Vec<char>,
+    /// byte offset of each char, plus a final entry == text.len()
+    byte_pos: Vec<usize>,
+}
+
+impl<'t> Input<'t> {
+    fn decode(text: &'t str) -> Input<'t> {
+        let mut chars = Vec::with_capacity(text.len());
+        let mut byte_pos = Vec::with_capacity(text.len() + 1);
+        for (i, c) in text.char_indices() {
+            byte_pos.push(i);
+            chars.push(c);
+        }
+        byte_pos.push(text.len());
+        Input { text, chars, byte_pos }
+    }
+}
+
+fn m_node(node: &Node, inp: &Input<'_>, pos: usize, cont: &mut dyn FnMut(usize) -> bool) -> bool {
+    match node {
+        Node::Empty => cont(pos),
+        Node::Char { c, icase } => match inp.chars.get(pos) {
+            Some(&t) if t == *c || (*icase && t.eq_ignore_ascii_case(c)) => cont(pos + 1),
+            _ => false,
+        },
+        Node::Class { set, icase } => match inp.chars.get(pos) {
+            Some(&t) if set.contains(t, *icase) => cont(pos + 1),
+            _ => false,
+        },
+        Node::Dot => match inp.chars.get(pos) {
+            Some(&t) if t != '\n' => cont(pos + 1),
+            _ => false,
+        },
+        Node::WordBoundary => {
+            let before = pos > 0 && is_word(inp.chars[pos - 1]);
+            let after = pos < inp.chars.len() && is_word(inp.chars[pos]);
+            if before != after {
+                cont(pos)
+            } else {
+                false
+            }
+        }
+        Node::Concat(nodes) => m_seq(nodes, inp, pos, cont),
+        Node::Alt(branches) => {
+            for b in branches {
+                if m_node(b, inp, pos, &mut *cont) {
+                    return true;
+                }
+            }
+            false
+        }
+        Node::Repeat { node, min, max } => m_repeat(node, *min, *max, inp, pos, 0, cont),
+    }
+}
+
+fn m_seq(nodes: &[Node], inp: &Input<'_>, pos: usize, cont: &mut dyn FnMut(usize) -> bool) -> bool {
+    match nodes.split_first() {
+        None => cont(pos),
+        Some((first, rest)) => m_node(first, inp, pos, &mut |p| m_seq(rest, inp, p, &mut *cont)),
+    }
+}
+
+fn m_repeat(
+    node: &Node,
+    min: u32,
+    max: Option<u32>,
+    inp: &Input<'_>,
+    pos: usize,
+    count: u32,
+    cont: &mut dyn FnMut(usize) -> bool,
+) -> bool {
+    // greedy: try one more iteration first, then fall back to the rest
+    if max.map_or(true, |m| count < m) {
+        let more = m_node(node, inp, pos, &mut |p| {
+            // guard against zero-width repetition loops
+            if p == pos {
+                false
+            } else {
+                m_repeat(node, min, max, inp, p, count + 1, &mut *cont)
+            }
+        });
+        if more {
+            return true;
+        }
+    }
+    if count >= min {
+        cont(pos)
+    } else {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API
+// ---------------------------------------------------------------------------
+
+/// A compiled pattern.
+#[derive(Clone, Debug)]
+pub struct Regex {
+    pattern: String,
+    node: Node,
+    first: FirstSet,
+    can_match_empty: bool,
+}
+
+/// A single match: byte offsets into the searched text.
+#[derive(Clone, Copy, Debug)]
+pub struct Match<'t> {
+    text: &'t str,
+    start: usize,
+    end: usize,
+}
+
+impl<'t> Match<'t> {
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    pub fn end(&self) -> usize {
+        self.end
+    }
+
+    pub fn as_str(&self) -> &'t str {
+        &self.text[self.start..self.end]
+    }
+}
+
+/// Capture groups of a match. Only group 0 (the whole match) exists in this
+/// subset.
+pub struct Captures<'t> {
+    m: Match<'t>,
+}
+
+impl<'t> Captures<'t> {
+    pub fn get(&self, i: usize) -> Option<Match<'t>> {
+        if i == 0 {
+            Some(self.m)
+        } else {
+            None
+        }
+    }
+}
+
+/// Iterator over non-overlapping matches.
+pub struct Matches<'r, 't> {
+    re: &'r Regex,
+    inp: Input<'t>,
+    next_char: usize,
+}
+
+impl<'r, 't> Iterator for Matches<'r, 't> {
+    type Item = Match<'t>;
+
+    fn next(&mut self) -> Option<Match<'t>> {
+        if self.next_char > self.inp.chars.len() {
+            return None;
+        }
+        let (s, e) = self.re.find_in(&self.inp, self.next_char)?;
+        self.next_char = if e > s { e } else { s + 1 };
+        Some(Match { text: self.inp.text, start: self.inp.byte_pos[s], end: self.inp.byte_pos[e] })
+    }
+}
+
+impl Regex {
+    pub fn new(pattern: &str) -> Result<Regex, Error> {
+        let mut parser = Parser { chars: pattern.chars().collect(), pos: 0, icase: false };
+        let node = parser.alt()?;
+        if parser.pos != parser.chars.len() {
+            return Err(parser.err("unexpected ')'"));
+        }
+        let mut first = FirstSet::none();
+        let can_match_empty = first_of(&node, &mut first);
+        if can_match_empty {
+            first = FirstSet::all();
+        }
+        Ok(Regex { pattern: pattern.to_string(), node, first, can_match_empty })
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.pattern
+    }
+
+    /// Leftmost match end for an anchored attempt at `start`, if any.
+    fn match_at(&self, inp: &Input<'_>, start: usize) -> Option<usize> {
+        let mut end = None;
+        m_node(&self.node, inp, start, &mut |p| {
+            end = Some(p);
+            true
+        });
+        end
+    }
+
+    fn find_in(&self, inp: &Input<'_>, from: usize) -> Option<(usize, usize)> {
+        for s in from..=inp.chars.len() {
+            if s < inp.chars.len() {
+                if !self.first.test(inp.chars[s]) {
+                    continue;
+                }
+            } else if !self.can_match_empty {
+                break;
+            }
+            if let Some(e) = self.match_at(inp, s) {
+                return Some((s, e));
+            }
+        }
+        None
+    }
+
+    pub fn is_match(&self, text: &str) -> bool {
+        self.find(text).is_some()
+    }
+
+    pub fn find<'t>(&self, text: &'t str) -> Option<Match<'t>> {
+        let inp = Input::decode(text);
+        let (s, e) = self.find_in(&inp, 0)?;
+        Some(Match { text, start: inp.byte_pos[s], end: inp.byte_pos[e] })
+    }
+
+    pub fn find_iter<'r, 't>(&'r self, text: &'t str) -> Matches<'r, 't> {
+        Matches { re: self, inp: Input::decode(text), next_char: 0 }
+    }
+
+    /// Replace every match using the replacement closure. Returns borrowed
+    /// text unchanged when nothing matched.
+    pub fn replace_all<'t, F, S>(&self, text: &'t str, mut rep: F) -> Cow<'t, str>
+    where
+        F: FnMut(&Captures<'t>) -> S,
+        S: AsRef<str>,
+    {
+        let inp = Input::decode(text);
+        let mut out = String::new();
+        let mut last_byte = 0usize;
+        let mut from = 0usize;
+        let mut any = false;
+        while from <= inp.chars.len() {
+            let Some((s, e)) = self.find_in(&inp, from) else { break };
+            any = true;
+            let (bs, be) = (inp.byte_pos[s], inp.byte_pos[e]);
+            out.push_str(&text[last_byte..bs]);
+            let caps = Captures { m: Match { text, start: bs, end: be } };
+            out.push_str(rep(&caps).as_ref());
+            last_byte = be;
+            from = if e > s { e } else { s + 1 };
+        }
+        if !any {
+            return Cow::Borrowed(text);
+        }
+        out.push_str(&text[last_byte..]);
+        Cow::Owned(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spans(re: &str, text: &str) -> Vec<(usize, usize)> {
+        let re = Regex::new(re).unwrap();
+        re.find_iter(text).map(|m| (m.start(), m.end())).collect()
+    }
+
+    fn first_match(re: &str, text: &str) -> Option<String> {
+        let re = Regex::new(re).unwrap();
+        re.find(text).map(|m| m.as_str().to_string())
+    }
+
+    #[test]
+    fn literals_and_leftmost() {
+        assert_eq!(first_match("abc", "xxabcyy"), Some("abc".into()));
+        assert_eq!(first_match("abc", "ab"), None);
+        assert_eq!(spans("a", "banana"), vec![(1, 2), (3, 4), (5, 6)]);
+    }
+
+    #[test]
+    fn classes_ranges_and_negation() {
+        assert_eq!(first_match("[a-c]+", "zzabccq"), Some("abcc".into()));
+        assert_eq!(first_match("[^0-9]+", "12ab34"), Some("ab".into()));
+        // literal '-' at either end, ']' first
+        assert_eq!(first_match("[-. ]", "a-b"), Some("-".into()));
+        assert_eq!(first_match("[a-z .'-]+", "o'neil-smith jr"), Some("o'neil-smith jr".into()));
+        assert_eq!(first_match("[]a]+", "]a]"), Some("]a]".into()));
+    }
+
+    #[test]
+    fn escapes() {
+        assert_eq!(first_match(r"\d{3}", "ab1234"), Some("123".into()));
+        assert_eq!(first_match(r"\s+", "a \t b"), Some(" \t ".into()));
+        assert_eq!(first_match(r"\S{2,}", "a bc!d e"), Some("bc!d".into()));
+        assert_eq!(first_match(r"\w+", "!hi_9!"), Some("hi_9".into()));
+        assert_eq!(first_match(r"\.", "a.b"), Some(".".into()));
+        assert_eq!(first_match(r"\+\d{1,3}", "+442"), Some("+442".into()));
+    }
+
+    #[test]
+    fn quantifiers_greedy_with_backtracking() {
+        assert_eq!(first_match(r"a{2,3}", "aaaa"), Some("aaa".into()));
+        assert_eq!(first_match(r"ab?c", "ac"), Some("ac".into()));
+        assert_eq!(first_match(r"ab?c", "abc"), Some("abc".into()));
+        // backtracking through a greedy class
+        assert_eq!(first_match(r"[a-z0-9.-]+\.[a-z]{2,}", "host.example.com!"), Some("host.example.com".into()));
+        assert_eq!(first_match(r"\d{4}[- ]?\d{4}", "4111 1111"), Some("4111 1111".into()));
+        assert_eq!(first_match(r"\d{4}[- ]?\d{4}", "41111111"), Some("41111111".into()));
+    }
+
+    #[test]
+    fn alternation_prefers_left_then_backtracks() {
+        // "st" preferred, but \b forces backtracking into "street"
+        assert_eq!(first_match(r"(?:st|street)\b", "street"), Some("street".into()));
+        assert_eq!(first_match(r"(?:st|street)\b", "st "), Some("st".into()));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert_eq!(first_match(r"\bcat\b", "a cat sat"), Some("cat".into()));
+        assert_eq!(first_match(r"\bcat\b", "concatenate"), None);
+        assert_eq!(first_match(r"\bcat\b", "cat"), Some("cat".into()));
+        assert_eq!(first_match(r"\b\d{3}-\d{2}-\d{4}\b", "ssn 123-45-6789."), Some("123-45-6789".into()));
+        assert_eq!(first_match(r"\b\d{3}-\d{2}-\d{4}\b", "x123-45-6789"), None);
+    }
+
+    #[test]
+    fn case_insensitive_flag_forms() {
+        assert_eq!(first_match(r"(?i)patient", "The PATIENT file"), Some("PATIENT".into()));
+        assert_eq!(first_match(r"(?i)\b[a-z]+\b", "HELLO"), Some("HELLO".into()));
+        // group-scoped
+        assert_eq!(first_match(r"(?i:mrn)\s*\d+", "MRN 123"), Some("MRN 123".into()));
+        // directive scoped to rest of pattern after an alternation branch
+        let re = Regex::new(r"\bAAA\b|(?i)\baccount\b").unwrap();
+        assert!(re.is_match("my ACCOUNT here"));
+        assert!(!re.is_match("my aaa here"), "first branch stays case-sensitive");
+        // a directive inside a plain group must not leak past the group
+        let re2 = Regex::new(r"(a(?i)b)c").unwrap();
+        assert!(re2.is_match("aBc"));
+        assert!(!re2.is_match("abC"), "(?i) is scoped to its enclosing group");
+    }
+
+    #[test]
+    fn groups_and_nesting() {
+        assert_eq!(first_match(r"(?:ab)+", "ababab!"), Some("ababab".into()));
+        assert_eq!(first_match(r"(?:[0-9a-f]{1,4}:){3,7}[0-9a-f]{1,4}", "fe80:0:0:1"), Some("fe80:0:0:1".into()));
+        assert_eq!(
+            first_match(r"\b(?:last\s+\w+day|on\s+(?:mon|fri)day)\b", "see you on friday ok"),
+            Some("on friday".into())
+        );
+    }
+
+    #[test]
+    fn byte_offsets_are_utf8_safe() {
+        let text = "müller met JOHN";
+        let re = Regex::new(r"(?i)\bjohn\b").unwrap();
+        let m = re.find(text).unwrap();
+        assert_eq!(m.as_str(), "JOHN");
+        assert_eq!(&text[m.start()..m.end()], "JOHN");
+        // non-ASCII word chars count for \b
+        assert_eq!(first_match(r"\bller\b", "müller"), None);
+    }
+
+    #[test]
+    fn replace_all_with_closure() {
+        let re = Regex::new(r"\[[A-Z][A-Z_]*_\d+\]").unwrap();
+        let out = re.replace_all("ask [PERSON_7] and [MEDICAL_CONDITION_123] now", |caps: &Captures<'_>| {
+            let p = caps.get(0).unwrap().as_str();
+            format!("<{p}>")
+        });
+        assert_eq!(out.into_owned(), "ask <[PERSON_7]> and <[MEDICAL_CONDITION_123]> now");
+        // no match => borrowed passthrough
+        let re2 = Regex::new(r"zzz").unwrap();
+        assert!(matches!(re2.replace_all("nothing here", |_| "x"), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn find_iter_non_overlapping() {
+        assert_eq!(spans(r"\d{2}", "123456"), vec![(0, 2), (2, 4), (4, 6)]);
+        let text = "a@b.co and c@d.org";
+        let re = Regex::new(r"(?i)\b[a-z0-9._%+-]+@[a-z0-9.-]+\.[a-z]{2,}\b").unwrap();
+        let found: Vec<&str> = re.find_iter(text).map(|m| m.as_str()).collect();
+        assert_eq!(found, vec!["a@b.co", "c@d.org"]);
+    }
+
+    #[test]
+    fn rejects_unsupported_syntax() {
+        assert!(Regex::new(r"a(").is_err());
+        assert!(Regex::new(r"[a-").is_err());
+        assert!(Regex::new(r"^start").is_err());
+        assert!(Regex::new(r"a{3,1}").is_err());
+        assert!(Regex::new(r"\q").is_err());
+    }
+
+    /// Every production pattern used by the MIST stage-1 sweep, the entity
+    /// detector and the sanitizer must compile here and agree on canonical
+    /// positive/negative examples.
+    #[test]
+    fn islandrun_pattern_corpus() {
+        let cases: &[(&str, &str, Option<&str>)] = &[
+            (r"(?i)\b[a-z0-9._%+-]+@[a-z0-9.-]+\.[a-z]{2,}\b", "mail X@Y.ORG now", Some("X@Y.ORG")),
+            (r"\b\d{3}[-. ]\d{3}[-. ]\d{4}\b", "call 555-123-4567 soon", Some("555-123-4567")),
+            (r"\+\d{1,3}[ -]?\d{2,4}[ -]?\d{3,4}[ -]?\d{3,4}\b", "+1 415 555 0199", Some("+1 415 555 0199")),
+            (r"\b\d{3}-\d{2}-\d{4}\b", "ssn 123-45-6789 x", Some("123-45-6789")),
+            (r"\b(?:\d{1,3}\.){3}\d{1,3}\b", "ip 10.0.0.12 up", Some("10.0.0.12")),
+            (r"(?i)\b(?:[0-9a-f]{1,4}:){3,7}[0-9a-f]{1,4}\b", "fe80:1:2:3:4", Some("fe80:1:2:3:4")),
+            (r"(?i)\b(?:[0-9a-f]{2}:){5}[0-9a-f]{2}\b", "mac 0A:1b:2c:3d:4e:5f!", Some("0A:1b:2c:3d:4e:5f")),
+            (r"(?i)\bpassport\s*(?:no\.?|number)?\s*[:#]?\s*[a-z]?\d{7,9}\b", "passport no: X1234567", Some("passport no: X1234567")),
+            (r"(?i)\b(?:driver'?s?\s+licen[sc]e|dl)\s*[:#]?\s*[a-z]?\d{6,9}\b", "driver's license 1234567", Some("driver's license 1234567")),
+            (r"(?i)\blicense\s+plate\s*[:#]?\s*[a-z0-9-]{5,8}\b", "license plate AB-123C", Some("license plate AB-123C")),
+            (r"(?i)\b(?:dob|date\s+of\s+birth)\s*[:#]?\s*\d{1,4}[-/]\d{1,2}[-/]\d{1,4}\b", "dob 1990/01/02", Some("dob 1990/01/02")),
+            (r"(?i)\b\d{1,5}\s+[a-z]+\s+(?:st|street|ave|avenue|rd|road|blvd|lane|ln|dr|drive)\b", "at 10 main street,", Some("10 main street")),
+            (r"\b\d{5}-\d{4}\b", "zip 94110-1234", Some("94110-1234")),
+            (r"-?\d{1,3}\.\d{4,},\s*-?\d{1,3}\.\d{4,}", "at 37.7749,-122.4194", Some("37.7749,-122.4194")),
+            (r"\b\d{4}\s\d{4}\s\d{4}\b", "id 1234 5678 9012.", Some("1234 5678 9012")),
+            (r"(?i)\bnational\s+id\s*[:#]?\s*\d{6,12}\b", "national id 123456789", Some("national id 123456789")),
+            (r"(?i)\bmy\s+(?:name|username)\s+is\s+[a-z][a-z .'-]{2,40}\b", "my name is jane doe", Some("my name is jane doe")),
+            (r"\b(?:sk|pk|api)[-_](?:live|test)?[-_]?[A-Za-z0-9]{16,}\b", "key sk-live_ABCDEF0123456789xyz", Some("sk-live_ABCDEF0123456789xyz")),
+            (r"(?i)\bpassword\s*[:=]\s*\S{6,}", "password: hunter2secret", Some("password: hunter2secret")),
+            (r"ssh-(?:rsa|ed25519)\s+[A-Za-z0-9+/=]{40,}", "ssh-rsa AAAAB3NzaC1yc2EAAAADAQABAAABAQClongkeydata00", None),
+            (r"(?i)\bpatient\b", "The Patient waits", Some("Patient")),
+            (r"(?i)\bmrn\s*[:#]?\s*\d{4,10}\b", "MRN: 482910", Some("MRN: 482910")),
+            (r"(?i)\b[a-tv-z]\d{2}(?:\.\d{1,4})?\b\s*(?:code|diagnos)", "E11.9 code", Some("E11.9 code")),
+            (r"(?i)\bdiagnos(?:is|ed|tic)\b", "was diagnosed with", Some("diagnosed")),
+            (r"(?i)\bprescri(?:bed?|ption)\b", "prescribed rest", Some("prescribed")),
+            (r"(?i)\b\d+\s*(?:mg|mcg|ml|units?)\s+(?:daily|twice|bid|tid|qid|per\s+day)\b", "500 mg daily dose", Some("500 mg daily")),
+            (r"\b\d{2,3}/\d{2,3}\s*(?:mmhg|bp)\b", "at 120/80 bp today", Some("120/80 bp")),
+            (r"(?i)\b(?:glucose|cholesterol|a1c|creatinine)\s+(?:level|result)s?\b", "glucose levels high", Some("glucose levels")),
+            (r"(?i)\bdiabet(?:es|ic)\b", "diabetic patient", Some("diabetic")),
+            (r"(?i)\b(?:cancer|oncolog|chemotherapy)\b", "chemotherapy ward", Some("chemotherapy")),
+            (r"(?i)\bhiv(?:\s+positive)?\b", "hiv positive result", Some("hiv positive")),
+            (r"(?i)\b(?:depression|anxiety\s+disorder|schizophrenia|bipolar)\b", "anxiety disorder care", Some("anxiety disorder")),
+            (r"(?i)\bsymptoms?\s+(?:of|include|analysis)\b", "symptoms of flu", Some("symptoms of")),
+            (r"(?i)\btreatment\s+(?:options?|plan)\b", "Treatment options for", Some("Treatment options")),
+            (r"(?i)\b(?:member|policy)\s+id\s*[:#]?\s*[a-z0-9]{6,14}\b", "member id AB12345", Some("member id AB12345")),
+            (r"\b4\d{3}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b", "card 4111-1111-1111-1234 ok", Some("4111-1111-1111-1234")),
+            (r"\b5[1-5]\d{2}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b", "mc 5500 0000 0000 0004", Some("5500 0000 0000 0004")),
+            (r"\b3[47]\d{2}[- ]?\d{6}[- ]?\d{5}\b", "amex 3782 822463 10005", Some("3782 822463 10005")),
+            (r"(?i)\bcvv2?\s*[:#]?\s*\d{3,4}\b", "cvv: 123", Some("cvv: 123")),
+            (r"\b[A-Z]{2}\d{2}[A-Z0-9]{11,30}\b", "iban DE89370400440532013000", Some("DE89370400440532013000")),
+            (r"(?i)\bswift\s*(?:code)?\s*[:#]?\s*[a-z]{6}[a-z0-9]{2,5}\b", "swift code DEUTDEFF", Some("swift code DEUTDEFF")),
+            (r"(?i)\brouting\s*(?:no\.?|number)?\s*[:#]?\s*\d{9}\b", "routing number 021000021", Some("routing number 021000021")),
+            (r"(?i)\baccount\s*(?:no\.?|number)?\s*[:#]?\s*\d{8,12}\b", "account 1234567890", Some("account 1234567890")),
+            (r"(?i)\bwire\s+transfer\b", "a Wire Transfer now", Some("Wire Transfer")),
+            (r"(?i)\bsalary\s+(?:review|of|is)\b", "salary of 100k", Some("salary of")),
+            (r"\b(?:bc1|[13])[a-km-zA-HJ-NP-Z1-9]{25,42}\b", "pay 1A1zP1eP5QGefi2DMPTfTL5SLmv7DivfNa now", Some("1A1zP1eP5QGefi2DMPTfTL5SLmv7DivfNa")),
+            (r"\b\d{2}-\d{7}\b", "ein 12-3456789.", Some("12-3456789")),
+            (r"(?i)\b\d{1,3}[- ]?year[- ]?old\b", "a 45-year-old man", Some("45-year-old")),
+            (r"(?i)\b\d{1,4}[-/]\d{1,2}[-/]\d{1,4}\b", "on 2024-01-05 we", Some("2024-01-05")),
+            (r"\[[A-Z][A-Z_]*_\d+\]", "see [LOCATION_42] there", Some("[LOCATION_42]")),
+        ];
+        for (pattern, text, want) in cases {
+            let re = Regex::new(pattern).unwrap_or_else(|e| panic!("pattern {pattern}: {e}"));
+            let got = re.find(text).map(|m| m.as_str().to_string());
+            match want {
+                Some(w) => assert_eq!(got.as_deref(), Some(*w), "pattern {pattern} on {text:?}"),
+                None => assert!(got.is_some(), "pattern {pattern} should match somewhere in {text:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn clean_text_matches_nothing_sensitive() {
+        let patterns = [
+            r"(?i)\b[a-z0-9._%+-]+@[a-z0-9.-]+\.[a-z]{2,}\b",
+            r"\b\d{3}-\d{2}-\d{4}\b",
+            r"(?i)\bpatient\b",
+            r"\b4\d{3}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b",
+            r"(?i)\b\d{1,5}\s+[a-z]+\s+(?:st|street|ave|avenue|rd|road|blvd|lane|ln|dr|drive)\b",
+        ];
+        for p in patterns {
+            let re = Regex::new(p).unwrap();
+            for text in ["what is the capital of france", "explain how rust ownership works", "write a haiku about islands"] {
+                assert!(!re.is_match(text), "{p} wrongly matched {text:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn long_input_performance_smoke() {
+        // the MIST bench scans ~4 KB prompts through ~50 patterns; one
+        // pattern over 16 KB must finish fast (and not blow the stack)
+        let text = "patient data ".repeat(1300);
+        let re = Regex::new(r"(?i)\b[a-z0-9._%+-]+@[a-z0-9.-]+\.[a-z]{2,}\b").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(!re.is_match(&text));
+        assert!(t0.elapsed().as_millis() < 500, "too slow: {:?}", t0.elapsed());
+        let re2 = Regex::new(r"[A-Za-z0-9+/=]{40,}").unwrap();
+        let b64 = "Ab9".repeat(400);
+        assert!(re2.is_match(&b64));
+    }
+}
