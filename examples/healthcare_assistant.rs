@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
 
     // saturate the clinic + edge so the general follow-up must use cloud
     if let Some(fleet) = orch.fleet() {
-        for island in fleet.islands.iter() {
+        for island in fleet.islands().iter() {
             if !island.spec.unbounded() {
                 island.set_external_load(0.99);
             }

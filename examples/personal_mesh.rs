@@ -15,14 +15,14 @@ use islandrun::util::Table;
 fn main() -> anyhow::Result<()> {
     // ---- Scenario 1: conversation follows the user across devices -------
     let islands = preset_personal_group();
-    let mut lighthouse = Lighthouse::new(0x5EED, 500.0, 3);
+    let lighthouse = Lighthouse::new(0x5EED, 500.0, 3);
     for i in islands.clone() {
         lighthouse.register_owned(i, 0.0);
     }
     println!("mesh registered: {} islands online", lighthouse.islands().len());
 
     let fleet = Fleet::new(islands.clone(), 21);
-    let mut orch = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 21);
+    let orch = Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 21);
     let session = orch.open_session("commuter");
 
     // at the desk: laptop serves
@@ -30,17 +30,23 @@ fn main() -> anyhow::Result<()> {
     let t1 = islands.iter().find(|i| Some(i.id) == turn1.decision.target()).unwrap();
     println!("at the desk    -> {} (sanitized={})", t1.name, turn1.sanitized);
 
-    // driving: laptop disappears from the mesh (missed heartbeats);
-    // the same conversation continues on another trusted island
+    // driving: the laptop leaves the mesh (lid closed — LIGHTHOUSE
+    // deregisters it); the same conversation continues on another trusted
+    // island without losing a request
     lighthouse.tick(10_000.0);
-    if let Some(fleet) = orch.fleet_mut() {
-        fleet.islands.retain(|i| i.spec.id != IslandId(0));
-    }
+    orch.leave_island(IslandId(0));
     let turn2 = orch.submit(session, "continue: also update the unit tests", PriorityTier::Secondary, None)?;
     let t2 = islands.iter().find(|i| Some(i.id) == turn2.decision.target()).unwrap();
     println!("in the car     -> {} (intra-group, sanitized={})", t2.name, turn2.sanitized);
     assert_ne!(t1.id, t2.id);
     assert!(!turn2.sanitized, "intra-personal-group continuation never sanitizes");
+
+    // back home: the laptop rejoins (dynamic discovery) and serves again
+    let laptop = islands.iter().find(|i| i.id == IslandId(0)).unwrap().clone();
+    assert!(orch.join_island(laptop));
+    let turn3 = orch.submit(session, "now write the changelog entry", PriorityTier::Secondary, None)?;
+    let t3 = islands.iter().find(|i| Some(i.id) == turn3.decision.target()).unwrap();
+    println!("back at desk   -> {} (rejoined mesh)", t3.name);
 
     // ---- Scenario 2: hiking friends, battery-aware sharing --------------
     println!("\nhiking pair (battery-aware Bluetooth sharing):");

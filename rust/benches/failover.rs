@@ -1,0 +1,102 @@
+//! Failover bench: routed throughput and p99 added latency when a fraction
+//! of the fleet is down.
+//!
+//! Three phases on identical workloads (8 closed-loop workers): 0%, 10% and
+//! 30% of islands crashed *silently* before the run — the liveness view has
+//! to discover each death through failed executions or heartbeat timeouts,
+//! so the measured overhead includes the failover re-routes, not just the
+//! smaller fleet. Reported per phase: req/s, p99 latency of served
+//! requests, served/rejected split, failover count and failover rate.
+//!
+//! CI hooks: `ISLANDRUN_BENCH_REQUESTS` overrides the total request count,
+//! `ISLANDRUN_BENCH_JSON=<path>` writes the rows as a JSON artifact
+//! (uploaded as `BENCH_failover.json`).
+
+use std::sync::Arc;
+
+use islandrun::agents::mist::Mist;
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::eval::loadgen::run_closed_loop;
+use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator};
+use islandrun::util::bench::write_json_artifact;
+use islandrun::util::{stats, Table};
+
+const THREADS: usize = 8;
+
+fn total_requests() -> usize {
+    std::env::var("ISLANDRUN_BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4000)
+}
+
+fn orchestrator(seed: u64) -> Arc<Orchestrator> {
+    let mut cfg = Config::default();
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    let fleet = Fleet::new(preset_personal_group(), seed);
+    Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), seed))
+}
+
+fn main() {
+    let total = total_requests();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("failover — throughput/p99 vs island-down rate ({THREADS} workers, {total} requests, {cores} cores)\n");
+
+    let mut t = Table::new(
+        "failover — routed throughput and p99 latency vs fraction of islands down",
+        &["down", "req/s", "p99 ms", "served", "rejected", "failovers", "failover rate", "Δp99 vs 0%"],
+    );
+    let mut json_rows = Vec::new();
+    let mut baseline_p99 = 0.0f64;
+    let mut baseline_rate = 0.0f64;
+    for (phase, down_rate) in [0.0f64, 0.1, 0.3].into_iter().enumerate() {
+        let orch = orchestrator(1000 + phase as u64);
+        // silently crash the first ceil(down_rate * n) islands: the
+        // liveness view must *discover* each death mid-run
+        let fleet = orch.fleet().unwrap();
+        let specs = fleet.specs();
+        let down_count = (down_rate * specs.len() as f64).ceil() as usize;
+        for spec in specs.iter().take(down_count) {
+            fleet.crash(spec.id);
+        }
+        let report = run_closed_loop(&orch, THREADS, total / THREADS, 7);
+        assert_eq!(report.outcomes.len() + report.errors, report.attempted, "lost submissions");
+        assert_eq!(orch.audit.len(), report.outcomes.len(), "audit trail must cover every admitted request");
+
+        let rate = report.requests_per_sec();
+        let latencies: Vec<f64> =
+            report.outcomes.iter().filter(|o| o.latency_ms > 0.0).map(|o| o.latency_ms).collect();
+        let p99 = stats::percentile(&latencies, 0.99);
+        let failovers = orch.metrics.counter_value("failovers");
+        let failover_rate = failovers as f64 / report.attempted as f64;
+        if phase == 0 {
+            baseline_p99 = p99;
+            baseline_rate = rate;
+        }
+        t.row(&[
+            format!("{:.0}%", down_rate * 100.0),
+            format!("{rate:.0}"),
+            format!("{p99:.1}"),
+            report.served().to_string(),
+            report.rejected().to_string(),
+            failovers.to_string(),
+            format!("{failover_rate:.3}"),
+            format!("{:+.1}", p99 - baseline_p99),
+        ]);
+        json_rows.push(vec![
+            ("down_rate".to_string(), down_rate),
+            ("req_per_s".to_string(), rate),
+            ("p99_ms".to_string(), p99),
+            ("served".to_string(), report.served() as f64),
+            ("rejected".to_string(), report.rejected() as f64),
+            ("failovers".to_string(), failovers as f64),
+            ("failover_rate".to_string(), failover_rate),
+            ("added_p99_ms".to_string(), p99 - baseline_p99),
+        ]);
+    }
+    t.print();
+    write_json_artifact("failover", &json_rows);
+
+    println!(
+        "\nbaseline: {baseline_rate:.0} req/s, p99 {baseline_p99:.1} ms — degraded phases measured above"
+    );
+}

@@ -15,7 +15,7 @@ fn states_of(n: usize) -> Vec<IslandState> {
         .map(|i| {
             let mut s = base[i % base.len()].clone();
             s.id = IslandId(i as u32);
-            IslandState { island: s, capacity: 0.8 }
+            IslandState { island: s, capacity: 0.8, online: true, degraded: false }
         })
         .collect()
 }

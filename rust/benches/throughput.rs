@@ -8,6 +8,12 @@
 //! each island's slot table. On a multi-core host 16 workers must clear at
 //! least 2x the single-worker rate (asserted below when >= 4 cores are
 //! available).
+//!
+//! CI hooks: `ISLANDRUN_BENCH_REQUESTS` overrides the total request count
+//! (the bench-smoke job uses a short run), `ISLANDRUN_BENCH_GATE=off`
+//! disables the speedup assertions (smoke runs measure, they do not gate),
+//! and `ISLANDRUN_BENCH_JSON=<path>` writes the measured rows as a JSON
+//! artifact (uploaded as `BENCH_throughput.json`).
 
 use std::sync::Arc;
 
@@ -16,9 +22,16 @@ use islandrun::config::{preset_personal_group, Config};
 use islandrun::eval::loadgen::run_closed_loop;
 use islandrun::islands::Fleet;
 use islandrun::server::{Backend, Orchestrator};
-use islandrun::util::Table;
+use islandrun::util::bench::write_json_artifact;
+use islandrun::util::{stats, Table};
 
-const TOTAL_REQUESTS: usize = 4000;
+fn total_requests() -> usize {
+    std::env::var("ISLANDRUN_BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4000)
+}
+
+fn gate_enabled() -> bool {
+    std::env::var("ISLANDRUN_BENCH_GATE").map(|v| v != "off").unwrap_or(true)
+}
 
 fn orchestrator(seed: u64) -> Arc<Orchestrator> {
     let mut cfg = Config::default();
@@ -32,37 +45,53 @@ fn orchestrator(seed: u64) -> Arc<Orchestrator> {
 
 fn main() {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    println!("throughput — closed-loop concurrent submit (Sim backend), {cores} cores\n");
+    let total = total_requests();
+    println!("throughput — closed-loop concurrent submit (Sim backend), {cores} cores, {total} requests\n");
 
     let mut t = Table::new(
-        "throughput — requests/sec vs worker threads (4000 requests total)",
-        &["threads", "req/s", "served", "fail-closed", "errors", "wall s", "speedup vs 1"],
+        "throughput — requests/sec vs worker threads",
+        &["threads", "req/s", "p99 ms", "served", "fail-closed", "errors", "wall s", "speedup vs 1"],
     );
     let mut rates = Vec::new();
+    let mut json_rows = Vec::new();
     for &threads in &[1usize, 4, 16] {
         let orch = orchestrator(42 + threads as u64);
-        let report = run_closed_loop(&orch, threads, TOTAL_REQUESTS / threads, 7);
+        let report = run_closed_loop(&orch, threads, total / threads, 7);
         assert_eq!(report.outcomes.len() + report.errors, report.attempted, "lost submissions");
         assert_eq!(orch.audit.len(), report.outcomes.len(), "audit trail must cover every admitted request");
         let rate = report.requests_per_sec();
+        let latencies: Vec<f64> = report.outcomes.iter().filter(|o| o.latency_ms > 0.0).map(|o| o.latency_ms).collect();
+        let p99 = stats::percentile(&latencies, 0.99);
         rates.push((threads, rate));
         let speedup = rate / rates[0].1;
         t.row(&[
             threads.to_string(),
             format!("{rate:.0}"),
+            format!("{p99:.1}"),
             report.served().to_string(),
             report.rejected().to_string(),
             report.errors.to_string(),
             format!("{:.2}", report.wall_s),
             format!("{speedup:.2}x"),
         ]);
+        json_rows.push(vec![
+            ("threads".to_string(), threads as f64),
+            ("req_per_s".to_string(), rate),
+            ("p99_ms".to_string(), p99),
+            ("served".to_string(), report.served() as f64),
+            ("rejected".to_string(), report.rejected() as f64),
+            ("speedup".to_string(), speedup),
+        ]);
     }
     t.print();
+    write_json_artifact("throughput", &json_rows);
 
     let r1 = rates[0].1;
     let r16 = rates[2].1;
     let speedup = r16 / r1;
-    if cores >= 4 {
+    if !gate_enabled() {
+        println!("GATE OFF: measured {speedup:.2}x at 16 workers on {cores} cores (smoke run, not asserted)");
+    } else if cores >= 4 {
         assert!(speedup >= 2.0, "expected >= 2x at 16 workers vs 1, measured {speedup:.2}x on {cores} cores");
         println!("PASS: 16-thread speedup {speedup:.2}x >= 2x (acceptance criterion)");
     } else if cores >= 2 {

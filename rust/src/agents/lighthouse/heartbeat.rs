@@ -30,29 +30,59 @@ impl HeartbeatTracker {
         HeartbeatTracker { period_ms, miss_limit, records: BTreeMap::new() }
     }
 
-    /// An island announces itself (discovery / wake-from-sleep).
+    /// An island announces itself (discovery / wake-from-sleep). An explicit
+    /// announcement always brings the island online, but never moves its
+    /// heartbeat timestamp backwards.
     pub fn announce(&mut self, id: IslandId, now_ms: f64) {
-        self.records.insert(id, Liveness { last_heartbeat_ms: now_ms, missed: 0, online: true });
+        let rec = self.records.entry(id).or_insert(Liveness { last_heartbeat_ms: now_ms, missed: 0, online: true });
+        rec.last_heartbeat_ms = rec.last_heartbeat_ms.max(now_ms);
+        rec.missed = 0;
+        rec.online = true;
     }
 
-    /// Record a heartbeat from an island.
+    /// Record a heartbeat from an island. Heartbeats can arrive out of
+    /// order (network reordering, clock skew between islands): a beat older
+    /// than the freshest one we have seen is stale evidence and is dropped —
+    /// it must neither move `last_heartbeat_ms` backwards nor resurrect an
+    /// island that timed out after the stale beat was sent.
     pub fn beat(&mut self, id: IslandId, now_ms: f64) {
         let rec = self.records.entry(id).or_insert(Liveness { last_heartbeat_ms: now_ms, missed: 0, online: true });
+        if now_ms < rec.last_heartbeat_ms {
+            return;
+        }
         rec.last_heartbeat_ms = now_ms;
         rec.missed = 0;
         rec.online = true;
     }
 
     /// Advance time: count missed periods, mark islands offline past the
-    /// miss limit.
+    /// miss limit. `now_ms` is not required to be monotonic (callers race on
+    /// a shared clock): negative elapsed time is clamped to zero rather than
+    /// flowing through the f64 → u32 cast, and a backwards tick never
+    /// resurrects an offline island (only a fresh beat/announce does).
     pub fn tick(&mut self, now_ms: f64) {
         for rec in self.records.values_mut() {
-            let missed = ((now_ms - rec.last_heartbeat_ms) / self.period_ms).floor() as u32;
-            rec.missed = missed;
-            if missed >= self.miss_limit {
+            let elapsed = (now_ms - rec.last_heartbeat_ms).max(0.0);
+            let missed_f = (elapsed / self.period_ms).floor();
+            rec.missed = if missed_f >= u32::MAX as f64 { u32::MAX } else { missed_f as u32 };
+            if rec.missed >= self.miss_limit {
                 rec.online = false;
             }
         }
+    }
+
+    /// Force an island offline immediately (failed execution observed by
+    /// the orchestrator, or an announced clean shutdown). The island comes
+    /// back only through a fresh `beat`/`announce`.
+    pub fn force_offline(&mut self, id: IslandId) {
+        if let Some(rec) = self.records.get_mut(&id) {
+            rec.online = false;
+        }
+    }
+
+    /// Drop an island's liveness record entirely (deregistration).
+    pub fn forget(&mut self, id: IslandId) {
+        self.records.remove(&id);
     }
 
     pub fn is_online(&self, id: IslandId) -> bool {
@@ -114,6 +144,91 @@ mod tests {
         hb.beat(B, 900.0);
         hb.tick(1100.0); // A missed 2 → offline; B missed 0
         assert_eq!(hb.online_ids(), vec![B]);
+    }
+
+    #[test]
+    fn stale_beat_never_moves_heartbeat_backwards() {
+        let mut hb = HeartbeatTracker::new(500.0, 3);
+        hb.announce(A, 0.0);
+        hb.beat(A, 1000.0);
+        // a reordered packet from t=400 arrives late: must be dropped
+        hb.beat(A, 400.0);
+        assert_eq!(hb.liveness(A).unwrap().last_heartbeat_ms, 1000.0);
+        hb.tick(2600.0); // 3 periods past t=1000 → offline
+        assert!(!hb.is_online(A));
+    }
+
+    #[test]
+    fn stale_beat_cannot_resurrect_timed_out_island() {
+        let mut hb = HeartbeatTracker::new(500.0, 3);
+        hb.announce(A, 0.0);
+        hb.beat(A, 5000.0);
+        hb.tick(99_000.0);
+        assert!(!hb.is_online(A));
+        hb.beat(A, 4000.0); // pre-timeout packet finally delivered
+        assert!(!hb.is_online(A), "stale beat must not bring the island back");
+        hb.beat(A, 99_500.0); // a genuinely fresh beat does
+        assert!(hb.is_online(A));
+    }
+
+    #[test]
+    fn backwards_tick_clamps_negative_elapsed() {
+        let mut hb = HeartbeatTracker::new(500.0, 3);
+        hb.announce(A, 10_000.0);
+        // clock observed out of order: tick with now < last_heartbeat
+        hb.tick(3_000.0);
+        let rec = hb.liveness(A).unwrap();
+        assert_eq!(rec.missed, 0, "negative elapsed must clamp to 0 missed");
+        assert!(rec.online);
+    }
+
+    #[test]
+    fn backwards_tick_never_resurrects() {
+        let mut hb = HeartbeatTracker::new(500.0, 2);
+        hb.announce(A, 0.0);
+        hb.tick(2_000.0);
+        assert!(!hb.is_online(A));
+        // an earlier tick arrives out of order: missed shrinks, but the
+        // island stays offline until a fresh beat
+        hb.tick(100.0);
+        assert!(!hb.is_online(A));
+    }
+
+    #[test]
+    fn announce_is_explicit_revival_but_keeps_freshest_timestamp() {
+        let mut hb = HeartbeatTracker::new(500.0, 2);
+        hb.announce(A, 0.0);
+        hb.beat(A, 3000.0);
+        hb.tick(99_000.0);
+        assert!(!hb.is_online(A));
+        // a re-announcement (wake from sleep) with an older local clock:
+        // online again, but the freshest heartbeat timestamp is kept
+        hb.announce(A, 2000.0);
+        assert!(hb.is_online(A));
+        assert_eq!(hb.liveness(A).unwrap().last_heartbeat_ms, 3000.0);
+    }
+
+    #[test]
+    fn force_offline_until_fresh_beat() {
+        let mut hb = HeartbeatTracker::new(500.0, 3);
+        hb.announce(A, 0.0);
+        hb.force_offline(A);
+        assert!(!hb.is_online(A));
+        hb.tick(10.0); // ticking alone never revives
+        assert!(!hb.is_online(A));
+        hb.beat(A, 20.0);
+        assert!(hb.is_online(A));
+        hb.forget(A);
+        assert!(hb.liveness(A).is_none());
+    }
+
+    #[test]
+    fn huge_elapsed_saturates_missed_count() {
+        let mut hb = HeartbeatTracker::new(0.001, 3);
+        hb.announce(A, 0.0);
+        hb.tick(1e18); // would overflow u32 without saturation
+        assert_eq!(hb.liveness(A).unwrap().missed, u32::MAX);
+        assert!(!hb.is_online(A));
     }
 
     #[test]

@@ -6,98 +6,219 @@
 //! tolerance (§IV.B): when LIGHTHOUSE crashes, WAVES keeps routing against
 //! the last cached island list ("correct but slower" — E6 ablation measures
 //! the re-discovery cost).
+//!
+//! Concurrency: LIGHTHOUSE is embedded in the orchestrator and consulted on
+//! every `submit` from every serving thread, so the whole API takes `&self`
+//! (matching the `Arc<Orchestrator>` design). The hot-path read —
+//! [`Lighthouse::is_online`] — is a read-locked map lookup plus two atomic
+//! loads; the heartbeat tracker sits behind its own mutex touched only on
+//! beats/ticks, and the registry behind an `RwLock` touched only on
+//! (de)registration.
+//!
+//! Two signals per island: *online* (heartbeat liveness — a dead island is
+//! no routing candidate at all) and *degraded*, fed by TIDE's monitor
+//! ([`crate::agents::tide::monitor::DegradeDetector`]): the island is
+//! reachable but has served zero capacity for a full detection window.
+//! WAVES deprioritizes degraded islands (last pick for the failsafe) but
+//! never treats them as dead — saturation must queue, not reject.
 
 pub mod heartbeat;
 pub mod registry;
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
 use crate::types::{Island, IslandId};
-use heartbeat::HeartbeatTracker;
+use heartbeat::{HeartbeatTracker, Liveness};
 use registry::{RegisterResult, Registry, Token};
+
+/// Lock-free health flags for one island (hot-path view).
+#[derive(Debug, Default)]
+struct IslandHealth {
+    /// Heartbeat-derived liveness (mirrors the tracker's `online` bit).
+    online: AtomicBool,
+    /// TIDE-derived capacity-degradation signal.
+    degraded: AtomicBool,
+}
 
 /// The LIGHTHOUSE agent: registry + liveness + cached-list fallback.
 pub struct Lighthouse {
-    registry: Registry,
-    heartbeats: HeartbeatTracker,
-    alive: bool,
+    registry: RwLock<Registry>,
+    heartbeats: Mutex<HeartbeatTracker>,
+    /// Atomic per-island flags mirrored from the tracker + degrade signals,
+    /// so `is_online` on the routing hot path never touches a mutex.
+    health: RwLock<BTreeMap<IslandId, Arc<IslandHealth>>>,
+    alive: AtomicBool,
     /// Last island list served before a crash (the §IV.B fallback).
-    cache: Vec<Island>,
-    /// Count of registry rebuilds while down (E6 "re-discovers islands per
+    cache: Mutex<Vec<Island>>,
+    /// Count of cached-list serves while down (E6 "re-discovers islands per
     /// request" cost proxy).
-    pub cache_serves: u64,
+    cache_serves: AtomicU64,
 }
 
 impl Lighthouse {
     pub fn new(secret: u64, heartbeat_period_ms: f64, miss_limit: u32) -> Lighthouse {
         Lighthouse {
-            registry: Registry::new(secret),
-            heartbeats: HeartbeatTracker::new(heartbeat_period_ms, miss_limit),
-            alive: true,
-            cache: Vec::new(),
-            cache_serves: 0,
+            registry: RwLock::new(Registry::new(secret)),
+            heartbeats: Mutex::new(HeartbeatTracker::new(heartbeat_period_ms, miss_limit)),
+            health: RwLock::new(BTreeMap::new()),
+            alive: AtomicBool::new(true),
+            cache: Mutex::new(Vec::new()),
+            cache_serves: AtomicU64::new(0),
         }
     }
 
+    fn health_cell(&self, id: IslandId) -> Arc<IslandHealth> {
+        if let Some(h) = self.health.read().unwrap().get(&id) {
+            return Arc::clone(h);
+        }
+        let mut w = self.health.write().unwrap();
+        Arc::clone(w.entry(id).or_default())
+    }
+
+    fn announce_online(&self, id: IslandId, now_ms: f64) {
+        self.heartbeats.lock().unwrap().announce(id, now_ms);
+        let cell = self.health_cell(id);
+        cell.online.store(true, Ordering::SeqCst);
+        cell.degraded.store(false, Ordering::SeqCst);
+    }
+
     /// Register an island with an attestation token; announces it online.
-    pub fn register(&mut self, island: Island, token: Token, now_ms: f64) -> RegisterResult {
+    pub fn register(&self, island: Island, token: Token, now_ms: f64) -> RegisterResult {
         let id = island.id;
-        let result = self.registry.register(island, token);
+        let result = self.registry.write().unwrap().register(island, token);
         if matches!(result, RegisterResult::Accepted(_)) {
-            self.heartbeats.announce(id, now_ms);
+            self.announce_online(id, now_ms);
         }
         result
     }
 
     /// Owner-side registration (token minted with the mesh secret).
-    pub fn register_owned(&mut self, island: Island, now_ms: f64) -> RegisterResult {
+    pub fn register_owned(&self, island: Island, now_ms: f64) -> RegisterResult {
         let id = island.id;
-        let result = self.registry.register_owned(island);
+        let result = self.registry.write().unwrap().register_owned(island);
         if matches!(result, RegisterResult::Accepted(_)) {
-            self.heartbeats.announce(id, now_ms);
+            self.announce_online(id, now_ms);
         }
         result
     }
 
-    pub fn beat(&mut self, id: IslandId, now_ms: f64) {
-        self.heartbeats.beat(id, now_ms);
+    /// Remove an island from the mesh (clean leave). Its liveness record and
+    /// health flags are dropped with it.
+    pub fn deregister(&self, id: IslandId) -> Option<Island> {
+        let island = self.registry.write().unwrap().deregister(id);
+        if island.is_some() {
+            self.heartbeats.lock().unwrap().forget(id);
+            self.health.write().unwrap().remove(&id);
+        }
+        island
     }
 
-    pub fn tick(&mut self, now_ms: f64) {
-        self.heartbeats.tick(now_ms);
+    pub fn beat(&self, id: IslandId, now_ms: f64) {
+        if !self.is_alive() {
+            return;
+        }
+        let mut hb = self.heartbeats.lock().unwrap();
+        hb.beat(id, now_ms);
+        let online = hb.is_online(id);
+        drop(hb);
+        self.health_cell(id).online.store(online, Ordering::SeqCst);
     }
 
-    /// Algorithm 1 line 4: the island list WAVES iterates. Only online
-    /// islands are returned; when LIGHTHOUSE is down the cached snapshot is
-    /// served instead (§IV.B).
-    pub fn islands(&mut self) -> Vec<Island> {
-        if !self.alive {
-            self.cache_serves += 1;
-            return self.cache.clone();
+    /// Record heartbeats for a batch of islands under one tracker lock
+    /// (the orchestrator relays sim-fleet liveness at heartbeat cadence).
+    pub fn beat_many<I: IntoIterator<Item = IslandId>>(&self, ids: I, now_ms: f64) {
+        if !self.is_alive() {
+            return;
+        }
+        let mut hb = self.heartbeats.lock().unwrap();
+        for id in ids {
+            hb.beat(id, now_ms);
+        }
+        drop(hb);
+        self.sync_flags();
+    }
+
+    /// Advance liveness time: islands past the miss limit go offline.
+    pub fn tick(&self, now_ms: f64) {
+        if !self.is_alive() {
+            return;
+        }
+        self.heartbeats.lock().unwrap().tick(now_ms);
+        self.sync_flags();
+    }
+
+    /// Mirror the tracker's online bits into the atomic hot-path flags.
+    fn sync_flags(&self) {
+        let hb = self.heartbeats.lock().unwrap();
+        let health = self.health.read().unwrap();
+        for (id, cell) in health.iter() {
+            cell.online.store(hb.is_online(*id), Ordering::SeqCst);
+        }
+    }
+
+    /// Force an island offline immediately — the orchestrator observed a
+    /// failed execution (island died between routing and execute). The
+    /// island returns only through a fresh beat / announce / revive.
+    pub fn mark_offline(&self, id: IslandId) {
+        self.heartbeats.lock().unwrap().force_offline(id);
+        self.health_cell(id).online.store(false, Ordering::SeqCst);
+    }
+
+    /// Set/clear the TIDE-fed capacity-degradation signal for an island.
+    pub fn set_degraded(&self, id: IslandId, degraded: bool) {
+        self.health_cell(id).degraded.store(degraded, Ordering::SeqCst);
+    }
+
+    pub fn is_degraded(&self, id: IslandId) -> bool {
+        self.health.read().unwrap().get(&id).map(|h| h.degraded.load(Ordering::SeqCst)).unwrap_or(false)
+    }
+
+    /// Algorithm 1 line 4: the island list WAVES iterates. Only
+    /// heartbeat-online islands are returned; when LIGHTHOUSE is down the
+    /// cached snapshot is served instead (§IV.B).
+    pub fn islands(&self) -> Vec<Island> {
+        if !self.is_alive() {
+            self.cache_serves.fetch_add(1, Ordering::SeqCst);
+            return self.cache.lock().unwrap().clone();
         }
         let list: Vec<Island> =
-            self.registry.islands().filter(|i| self.heartbeats.is_online(i.id)).cloned().collect();
-        self.cache = list.clone();
+            self.registry.read().unwrap().islands().filter(|i| self.is_online(i.id)).cloned().collect();
+        *self.cache.lock().unwrap() = list.clone();
         list
     }
 
-    pub fn get(&self, id: IslandId) -> Option<&Island> {
-        self.registry.get(id)
+    pub fn get(&self, id: IslandId) -> Option<Island> {
+        self.registry.read().unwrap().get(id).cloned()
     }
 
+    /// Hot-path heartbeat-liveness check. Capacity degradation is a
+    /// separate signal ([`Lighthouse::is_degraded`]): degraded islands are
+    /// deprioritized by WAVES, offline ones are excluded outright.
     pub fn is_online(&self, id: IslandId) -> bool {
-        self.heartbeats.is_online(id)
+        self.health.read().unwrap().get(&id).map(|h| h.online.load(Ordering::SeqCst)).unwrap_or(false)
+    }
+
+    pub fn liveness(&self, id: IslandId) -> Option<Liveness> {
+        self.heartbeats.lock().unwrap().liveness(id)
     }
 
     /// Simulate a LIGHTHOUSE crash / recovery (E6 ablation).
-    pub fn kill(&mut self) {
-        self.alive = false;
+    pub fn kill(&self) {
+        self.alive.store(false, Ordering::SeqCst);
     }
 
-    pub fn revive(&mut self) {
-        self.alive = true;
+    pub fn revive(&self) {
+        self.alive.store(true, Ordering::SeqCst);
     }
 
     pub fn is_alive(&self) -> bool {
-        self.alive
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    pub fn cache_serves(&self) -> u64 {
+        self.cache_serves.load(Ordering::SeqCst)
     }
 
     pub fn mint_token(&self, island: &Island, secret: u64) -> Token {
@@ -111,7 +232,7 @@ mod tests {
     use crate::config::preset_personal_group;
 
     fn mesh() -> Lighthouse {
-        let mut lh = Lighthouse::new(42, 500.0, 3);
+        let lh = Lighthouse::new(42, 500.0, 3);
         for island in preset_personal_group() {
             assert!(matches!(lh.register_owned(island, 0.0), RegisterResult::Accepted(_)));
         }
@@ -120,7 +241,7 @@ mod tests {
 
     #[test]
     fn islands_returns_online_only() {
-        let mut lh = mesh();
+        let lh = mesh();
         assert_eq!(lh.islands().len(), 7);
         // laptop (id 0) goes silent
         for id in 1..7 {
@@ -134,21 +255,21 @@ mod tests {
 
     #[test]
     fn crash_serves_cached_list() {
-        let mut lh = mesh();
+        let lh = mesh();
         let before = lh.islands();
         lh.kill();
         // registry churn while down is invisible
         lh.beat(IslandId(0), 9999.0);
         let during = lh.islands();
         assert_eq!(before.len(), during.len());
-        assert_eq!(lh.cache_serves, 1);
+        assert_eq!(lh.cache_serves(), 1);
         lh.revive();
         assert!(lh.is_alive());
     }
 
     #[test]
     fn rejected_islands_are_not_announced() {
-        let mut lh = Lighthouse::new(1, 500.0, 3);
+        let lh = Lighthouse::new(1, 500.0, 3);
         let island = preset_personal_group().remove(0);
         let id = island.id;
         assert_eq!(lh.register(island, Token(123), 0.0), RegisterResult::RejectedBadAttestation);
@@ -158,12 +279,80 @@ mod tests {
 
     #[test]
     fn dynamic_discovery_announces_new_island() {
-        let mut lh = mesh();
+        let lh = mesh();
         lh.tick(100.0);
         let mut extra = preset_personal_group().remove(1);
         extra.id = IslandId(77);
         extra.name = "car-infotainment".to_string();
         assert!(matches!(lh.register_owned(extra, 100.0), RegisterResult::Accepted(_)));
         assert!(lh.islands().iter().any(|i| i.id == IslandId(77)));
+    }
+
+    #[test]
+    fn deregistered_island_leaves_the_mesh() {
+        let lh = mesh();
+        assert!(lh.deregister(IslandId(0)).is_some());
+        assert!(!lh.is_online(IslandId(0)));
+        assert!(!lh.islands().iter().any(|i| i.id == IslandId(0)));
+        assert!(lh.liveness(IslandId(0)).is_none());
+        // rejoin: registration works again and announces online
+        let island = preset_personal_group().remove(0);
+        assert!(matches!(lh.register_owned(island, 50.0), RegisterResult::Accepted(_)));
+        assert!(lh.is_online(IslandId(0)));
+    }
+
+    #[test]
+    fn mark_offline_is_immediate_and_sticky() {
+        let lh = mesh();
+        lh.mark_offline(IslandId(2));
+        assert!(!lh.is_online(IslandId(2)));
+        lh.tick(1.0); // ticking never resurrects
+        assert!(!lh.is_online(IslandId(2)));
+        lh.beat(IslandId(2), 10.0); // a fresh heartbeat does
+        assert!(lh.is_online(IslandId(2)));
+    }
+
+    #[test]
+    fn degraded_is_a_separate_signal_from_liveness() {
+        let lh = mesh();
+        assert!(lh.is_online(IslandId(1)));
+        lh.set_degraded(IslandId(1), true);
+        // degraded != dead: the island stays heartbeat-online (WAVES
+        // deprioritizes it but may still queue on it under saturation)
+        assert!(lh.is_online(IslandId(1)));
+        assert!(lh.is_degraded(IslandId(1)));
+        lh.set_degraded(IslandId(1), false);
+        assert!(!lh.is_degraded(IslandId(1)));
+        // while heartbeat loss takes it out of the mesh entirely
+        lh.mark_offline(IslandId(1));
+        assert!(!lh.is_online(IslandId(1)));
+    }
+
+    #[test]
+    fn concurrent_beats_and_liveness_reads() {
+        use std::sync::Arc;
+        let lh = Arc::new(mesh());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let lh = Arc::clone(&lh);
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        let id = IslandId((t % 7) as u32);
+                        lh.beat(id, i as f64 * 10.0);
+                        let _ = lh.is_online(id);
+                        if i % 100 == 0 {
+                            lh.tick(i as f64 * 10.0);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // every island beaten recently is online
+        for id in 0..7u32 {
+            assert!(lh.is_online(IslandId(id)), "island {id}");
+        }
     }
 }

@@ -80,6 +80,45 @@ impl LoadProgram {
     }
 }
 
+/// Degraded-island detector: folds a stream of Eq. 3 capacity samples for
+/// one island into a binary degraded/healthy signal that LIGHTHOUSE carries
+/// alongside heartbeat liveness. An island is *degraded* after `limit`
+/// consecutive zero-capacity samples — it is reachable (heartbeats still
+/// arrive) but has served no capacity for a full detection window, so WAVES
+/// deprioritizes it (last pick for the Algorithm-1 failsafe). Unlike an
+/// offline island it is never excluded outright: saturation must queue,
+/// not reject. One non-zero sample clears the signal (capacity recovered).
+#[derive(Clone, Copy, Debug)]
+pub struct DegradeDetector {
+    limit: u32,
+    zeros: u32,
+    degraded: bool,
+}
+
+impl DegradeDetector {
+    pub fn new(limit: u32) -> DegradeDetector {
+        DegradeDetector { limit: limit.max(1), zeros: 0, degraded: false }
+    }
+
+    /// Feed one capacity sample; returns the current degraded verdict.
+    pub fn observe(&mut self, capacity: f64) -> bool {
+        if capacity <= 0.0 {
+            self.zeros = self.zeros.saturating_add(1);
+            if self.zeros >= self.limit {
+                self.degraded = true;
+            }
+        } else {
+            self.zeros = 0;
+            self.degraded = false;
+        }
+        self.degraded
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degraded
+    }
+}
+
 /// Where samples come from.
 pub enum MetricsSource {
     /// Real /proc on linux. CPU utilization is measured between calls
@@ -202,6 +241,33 @@ mod tests {
         let s = src.sample(0.0);
         assert_eq!(s.cpu, 0.5);
         assert!(s.gpu < s.cpu && s.mem < s.gpu);
+    }
+
+    #[test]
+    fn degrade_detector_needs_consecutive_zeros() {
+        let mut d = DegradeDetector::new(3);
+        assert!(!d.observe(0.0));
+        assert!(!d.observe(0.0));
+        assert!(d.observe(0.0), "third consecutive zero trips the signal");
+        assert!(d.is_degraded());
+        // one healthy sample clears it and resets the streak
+        assert!(!d.observe(0.4));
+        assert!(!d.observe(0.0));
+        assert!(!d.observe(0.0));
+        assert!(!d.is_degraded());
+        assert!(d.observe(0.0));
+    }
+
+    #[test]
+    fn degrade_detector_interrupted_streak_never_trips() {
+        let mut d = DegradeDetector::new(4);
+        for _ in 0..10 {
+            d.observe(0.0);
+            d.observe(0.0);
+            d.observe(0.0);
+            d.observe(0.5); // recovery one sample before the limit
+        }
+        assert!(!d.is_degraded());
     }
 
     #[test]

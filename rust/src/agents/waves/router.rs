@@ -28,6 +28,17 @@ pub struct IslandState {
     pub island: Island,
     /// Available capacity R_j(t) in [0,1]; unbounded islands report 1.0.
     pub capacity: f64,
+    /// LIGHTHOUSE heartbeat liveness. Offline islands are dropped before
+    /// any other constraint is evaluated — a dead island is never a routing
+    /// candidate, however Pareto-optimal its static profile looks.
+    pub online: bool,
+    /// TIDE capacity-degradation signal: the island is reachable but has
+    /// served zero capacity for a full detection window. Degraded islands
+    /// are already infeasible for the scored sets (capacity ≈ 0); the flag
+    /// additionally deprioritizes them as the failsafe pick — but never
+    /// converts saturation into a rejection (a degraded island still beats
+    /// rejecting when it is the only privacy-eligible one left).
+    pub degraded: bool,
 }
 
 /// Why a request was routed where it was (experiment reporting / audit log).
@@ -114,11 +125,20 @@ impl Waves {
         pref: Preference,
         budget_left: f64,
     ) -> Decision {
+        // -- 0. liveness filter (LIGHTHOUSE view): heartbeat-offline
+        // islands are not candidates for anything — not even the failsafe.
+        // (Degraded islands stay in: they are deprioritized in step 6, not
+        // excluded — saturation must queue, never reject.)
+        let online: Vec<&IslandState> = states.iter().filter(|s| s.online).collect();
+        if online.is_empty() {
+            return Decision::Reject { reason: "no online island (fleet unreachable, fail-closed)".to_string() };
+        }
+
         // -- 1. privacy constraint (Def. 3): fail-closed on violation
-        let eligible: Vec<&IslandState> = states.iter().filter(|s| s.island.privacy >= s_r).collect();
+        let eligible: Vec<&IslandState> = online.into_iter().filter(|s| s.island.privacy >= s_r).collect();
         if eligible.is_empty() {
             return Decision::Reject {
-                reason: format!("no island satisfies privacy constraint P_j >= {s_r:.2} (fail-closed)"),
+                reason: format!("no online island satisfies privacy constraint P_j >= {s_r:.2} (fail-closed)"),
             };
         }
 
@@ -229,12 +249,13 @@ impl Waves {
         }
 
         // -- 6. failsafe (Alg. 1 line 11): privacy-eligible islands exist
-        // but none has capacity — queue on the highest-privacy one.
+        // but none has capacity — queue on the highest-privacy one,
+        // preferring islands TIDE has not flagged as degraded.
         let failsafe = eligible
             .iter()
             .max_by(|a, b| {
-                (a.island.privacy, a.capacity)
-                    .partial_cmp(&(b.island.privacy, b.capacity))
+                (!a.degraded, a.island.privacy, a.capacity)
+                    .partial_cmp(&(!b.degraded, b.island.privacy, b.capacity))
                     .unwrap()
             })
             .unwrap();
@@ -268,7 +289,7 @@ mod tests {
             .into_iter()
             .map(|island| {
                 let cap = if island.unbounded() { 1.0 } else { capacity };
-                IslandState { island, capacity: cap }
+                IslandState { island, capacity: cap, online: true, degraded: false }
             })
             .collect()
     }
@@ -486,6 +507,115 @@ mod tests {
         // and with an impossible floor, reject
         let r2 = Request::new(2, "q").with_min_jurisdiction(1.1);
         assert!(matches!(w.route(&r2, 0.2, &st, 1.0, Preference::Local, f64::INFINITY), Decision::Reject { .. }));
+    }
+
+    #[test]
+    fn offline_island_never_selected_even_when_pareto_optimal() {
+        let w = waves();
+        let r = Request::new(1, "sensitive patient record").with_priority(PriorityTier::Primary);
+        // find where the router sends this when everything is online …
+        let healthy = w.route(&r, 0.9, &states(0.9), 0.9, Preference::Local, f64::INFINITY);
+        let best = healthy.target().expect("routes when healthy");
+        // … then take exactly that island offline: it must never be chosen
+        // again, even though it is still the Pareto-optimal candidate.
+        let mut st = states(0.9);
+        st.iter_mut().find(|s| s.island.id == best).unwrap().online = false;
+        let d = w.route(&r, 0.9, &st, 0.9, Preference::Local, f64::INFINITY);
+        let target = d.target().expect("fails over to another eligible island");
+        assert_ne!(target, best, "offline island selected");
+        let island = &st.iter().find(|s| s.island.id == target).unwrap().island;
+        assert!(island.privacy >= 0.9, "failover must keep the privacy constraint");
+    }
+
+    #[test]
+    fn all_offline_rejects_with_liveness_reason() {
+        let w = waves();
+        let mut st = states(1.0);
+        for s in st.iter_mut() {
+            s.online = false;
+        }
+        let r = Request::new(1, "q").with_priority(PriorityTier::Secondary);
+        match w.route(&r, 0.2, &st, 1.0, Preference::Local, f64::INFINITY) {
+            Decision::Reject { reason } => {
+                assert!(reason.contains("no online island"), "reason: {reason}");
+            }
+            other => panic!("expected liveness reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn offline_local_tier_falls_through_to_remote_tier() {
+        let w = waves();
+        let mut st = states(0.9);
+        // the whole personal tier dies; a low-sensitivity secondary request
+        // must fall through to the remote admission set instead of failing
+        for s in st.iter_mut() {
+            if tiers::is_local(&s.island) {
+                s.online = false;
+            }
+        }
+        let r = Request::new(1, "what is rust").with_priority(PriorityTier::Secondary);
+        let d = w.route(&r, 0.2, &st, 0.9, Preference::Local, f64::INFINITY);
+        let target = d.target().expect("remote tier must pick it up");
+        let island = &st.iter().find(|s| s.island.id == target).unwrap().island;
+        assert!(!tiers::is_local(island), "picked dead-local tier island {}", island.name);
+    }
+
+    #[test]
+    fn offline_islands_excluded_from_failsafe() {
+        let w = waves();
+        // zero capacity everywhere → failsafe path; the highest-privacy
+        // island is offline, so the failsafe must queue on the best *online*
+        // privacy-eligible island instead.
+        let mut st = states(0.0);
+        for s in st.iter_mut() {
+            if s.island.unbounded() {
+                s.capacity = 0.0; // force failsafe even past unbounded islands
+            }
+        }
+        let best_privacy = st
+            .iter()
+            .filter(|s| s.island.privacy >= 0.9)
+            .max_by(|a, b| a.island.privacy.partial_cmp(&b.island.privacy).unwrap())
+            .unwrap()
+            .island
+            .id;
+        st.iter_mut().find(|s| s.island.id == best_privacy).unwrap().online = false;
+        let r = Request::new(1, "patient ssn data").with_priority(PriorityTier::Primary);
+        let d = w.route(&r, 0.9, &st, 0.0, Preference::Local, f64::INFINITY);
+        match d {
+            Decision::FailsafeLocal(routed) => assert_ne!(routed.target, best_privacy),
+            Decision::Route(routed) => assert_ne!(routed.target, best_privacy),
+            Decision::Reject { .. } => {} // acceptable only if no online island was eligible
+        }
+    }
+
+    #[test]
+    fn failsafe_prefers_non_degraded_but_never_rejects_for_saturation() {
+        let w = waves();
+        // every privacy-eligible island saturated (failsafe territory); the
+        // ones TIDE flagged degraded must lose the failsafe pick...
+        let mut st = states(0.0);
+        let eligible_ids: Vec<_> =
+            st.iter().filter(|s| s.island.privacy >= 0.9).map(|s| s.island.id).collect();
+        let survivor = eligible_ids[0];
+        for s in st.iter_mut() {
+            if s.island.privacy >= 0.9 && s.island.id != survivor {
+                s.degraded = true;
+            }
+        }
+        let r = Request::new(1, "patient ssn record").with_priority(PriorityTier::Primary);
+        let d = w.route(&r, 0.9, &st, 0.0, Preference::Local, f64::INFINITY);
+        assert_eq!(d.target(), Some(survivor), "{d:?}");
+        // ...but when every eligible island is degraded, saturation still
+        // queues (FailsafeLocal) instead of rejecting
+        for s in st.iter_mut() {
+            if s.island.privacy >= 0.9 {
+                s.degraded = true;
+            }
+        }
+        let d2 = w.route(&r, 0.9, &st, 0.0, Preference::Local, f64::INFINITY);
+        assert!(d2.target().is_some(), "all-degraded must queue, not reject: {d2:?}");
     }
 
     #[test]

@@ -192,7 +192,7 @@ mod tests {
             .into_iter()
             .map(|island| {
                 let c = if island.unbounded() { 1.0 } else { cap };
-                IslandState { island, capacity: c }
+                IslandState { island, capacity: c, online: true, degraded: false }
             })
             .collect()
     }

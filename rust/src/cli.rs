@@ -2,7 +2,7 @@
 //! this offline build, DESIGN.md §2).
 //!
 //! ```text
-//! islandrun eval <e1..e12|all> [--out DIR]   regenerate paper experiments
+//! islandrun eval <e1..e13|all> [--out DIR]   regenerate paper experiments
 //! islandrun demo                             §I.A motivating example
 //! islandrun attacks                          §VIII.C attack drill
 //! islandrun serve [--requests N] [--preset P] real PJRT serving run
@@ -55,7 +55,7 @@ impl Args {
 const HELP: &str = "islandrun — privacy-aware multi-objective orchestration (paper reproduction)
 
 USAGE:
-  islandrun eval <e1..e12|all> [--out DIR]   regenerate paper experiments
+  islandrun eval <e1..e13|all> [--out DIR]   regenerate paper experiments
   islandrun demo                             run the §I.A motivating example
   islandrun attacks                          run the §VIII.C attack drill
   islandrun serve [--requests N] [--preset personal|healthcare|legal|hiking]
@@ -98,7 +98,7 @@ fn cmd_eval(args: &Args) -> i32 {
     for id in ids {
         match experiments::run(id) {
             None => {
-                eprintln!("unknown experiment '{id}' (e1..e12)");
+                eprintln!("unknown experiment '{id}' (e1..e13)");
                 return 2;
             }
             Some(tables) => {

@@ -103,6 +103,14 @@ pub struct Config {
     pub heartbeat_period_ms: u64,
     /// Heartbeats missed before an island is marked offline.
     pub heartbeat_miss_limit: u32,
+    /// Failure-aware execution: how many times a request may be re-routed
+    /// to the next Pareto candidate after its routed island dies between
+    /// routing and execute. Past the budget the request is rejected
+    /// (audited as exhausted-retries, never silently lost).
+    pub failover_retry_budget: u32,
+    /// TIDE degraded-island signal: consecutive zero-capacity samples (at
+    /// heartbeat cadence) before an island is treated as offline by WAVES.
+    pub degrade_zero_samples: u32,
     /// Artifacts directory with the AOT HLO files.
     pub artifacts_dir: String,
 }
@@ -124,6 +132,8 @@ impl Default for Config {
             tide_period_ms: 1000,
             heartbeat_period_ms: 500,
             heartbeat_miss_limit: 3,
+            failover_retry_budget: 2,
+            degrade_zero_samples: 8,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -153,6 +163,12 @@ impl Config {
         }
         if let Some(x) = v.get("budget_ceiling").as_f64() {
             c.budget_ceiling = x;
+        }
+        if let Some(x) = v.get("failover_retry_budget").as_f64() {
+            c.failover_retry_budget = x.max(0.0) as u32;
+        }
+        if let Some(x) = v.get("degrade_zero_samples").as_f64() {
+            c.degrade_zero_samples = x.max(1.0) as u32;
         }
         if let Some(x) = v.get("artifacts_dir").as_str() {
             c.artifacts_dir = x.to_string();
@@ -187,6 +203,8 @@ impl Config {
             ),
             ("rate_limit_rps", Json::num(self.rate_limit_rps)),
             ("budget_ceiling", Json::num(self.budget_ceiling)),
+            ("failover_retry_budget", Json::num(self.failover_retry_budget as f64)),
+            ("degrade_zero_samples", Json::num(self.degrade_zero_samples as f64)),
             ("artifacts_dir", Json::str(&self.artifacts_dir)),
         ])
     }

@@ -1,7 +1,8 @@
-//! Experiment runners E1–E12: regenerate every table/figure-shaped claim in
-//! the paper (DESIGN.md §4 maps each to its paper artifact). Each returns
-//! rendered tables; `run(name)` dispatches, `run_all()` regenerates
-//! everything (the `islandrun eval all` command / `make eval`).
+//! Experiment runners E1–E13: regenerate every table/figure-shaped claim in
+//! the paper (DESIGN.md §4 maps each to its paper artifact), plus E13's
+//! island-churn-under-load scenario from the ROADMAP. Each returns rendered
+//! tables; `run(name)` dispatches, `run_all()` regenerates everything (the
+//! `islandrun eval all` command / `make eval`).
 
 use crate::agents::mist::sanitize::PlaceholderMap;
 use crate::agents::mist::{Mist, Stage2};
@@ -267,7 +268,7 @@ pub fn e7_routing_latency() -> Vec<Table> {
         }
         let states: Vec<_> = specs
             .iter()
-            .map(|island| crate::agents::waves::IslandState { island: island.clone(), capacity: 0.8 })
+            .map(|island| crate::agents::waves::IslandState { island: island.clone(), capacity: 0.8, online: true, degraded: false })
             .collect();
         let waves = crate::agents::waves::Waves::new(Config::default());
         let req = Request::new(1, "patient john doe ssn 123-45-6789 diagnosed with diabetes, adjust metformin dosage");
@@ -437,7 +438,46 @@ pub fn e12_attacks() -> Vec<Table> {
     vec![t]
 }
 
-/// Dispatch one experiment by id ("e1".."e12").
+/// E13 — island churn under load: islands crash/revive/leave/rejoin while
+/// 8 worker threads submit; every admitted request must end in exactly one
+/// audited outcome (served, failover-success, or exhausted-retries reject)
+/// and the ledger must equal the sum of per-outcome costs.
+pub fn e13_churn() -> Vec<Table> {
+    use crate::eval::loadgen::{run_closed_loop_churn, Churn};
+    use std::sync::Arc;
+
+    let mut t = Table::new(
+        "E13 — dynamic fleet membership: churn under concurrent load (8 workers x 150 reqs)",
+        &["churn (crash/revive per step)", "served", "failover wins", "rejected", "failovers", "crashes", "lossless"],
+    );
+    for (label, churn) in [
+        ("none", None),
+        ("mild (0.1 / 0.8)", Some(Churn { crash_prob: 0.1, revive_prob: 0.8, ..Churn::default() })),
+        ("harsh (0.4 / 0.4)", Some(Churn { crash_prob: 0.4, revive_prob: 0.4, ..Churn::default() })),
+    ] {
+        let mut cfg = Config::default();
+        cfg.rate_limit_rps = 1e9;
+        cfg.budget_ceiling = 1e9;
+        let fleet = Fleet::new(preset_personal_group(), 131);
+        let orch = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 131));
+        let (report, churn_stats) = run_closed_loop_churn(&orch, 8, 150, 131, churn);
+        let lossless = report.errors == 0
+            && report.outcomes.len() == report.attempted
+            && orch.audit.len() == report.attempted;
+        t.row(&[
+            label.to_string(),
+            report.served().to_string(),
+            orch.metrics.counter_value("failover_successes").to_string(),
+            report.rejected().to_string(),
+            orch.metrics.counter_value("failovers").to_string(),
+            churn_stats.crashes.to_string(),
+            if lossless { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    vec![t]
+}
+
+/// Dispatch one experiment by id ("e1".."e13").
 pub fn run(name: &str) -> Option<Vec<Table>> {
     match name {
         "e1" => Some(e1_feature_matrix()),
@@ -452,12 +492,14 @@ pub fn run(name: &str) -> Option<Vec<Table>> {
         "e10" => Some(e10_hysteresis()),
         "e11" => Some(e11_locality()),
         "e12" => Some(e12_attacks()),
+        "e13" => Some(e13_churn()),
         _ => None,
     }
 }
 
 /// All experiment ids in order.
-pub const ALL: [&str; 12] = ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12"];
+pub const ALL: [&str; 13] =
+    ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13"];
 
 #[cfg(test)]
 mod tests {
@@ -491,5 +533,11 @@ mod tests {
     fn e12_all_mitigated() {
         let t = e12_attacks().remove(0);
         assert!(!t.render().contains("| NO "));
+    }
+
+    #[test]
+    fn e13_churn_is_lossless() {
+        let t = e13_churn().remove(0);
+        assert!(!t.render().contains("| NO "), "{}", t.render());
     }
 }

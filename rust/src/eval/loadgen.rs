@@ -3,14 +3,22 @@
 //! Each worker owns a session and drives the orchestrator in a closed loop
 //! (next request issues as soon as the previous one returns), submitting a
 //! seeded mixed-sensitivity workload and nudging the virtual clock so the
-//! Sim fleet's slots keep clearing. Used by `benches/throughput.rs` and the
-//! concurrency stress test; returns the per-request outcomes so callers can
-//! cross-check ids, audit entries and ledger totals.
+//! Sim fleet's slots keep clearing. Used by `benches/throughput.rs`,
+//! `benches/failover.rs` and the stress tests; returns the per-request
+//! outcomes so callers can cross-check ids, audit entries and ledger totals.
+//!
+//! Churn mode ([`run_closed_loop_churn`]) adds a driver thread that
+//! crashes/revives/leaves/rejoins islands *while the workers submit*: a mix
+//! of announced crashes (the liveness view learns immediately) and silent
+//! ones (detected only by heartbeat timeout or a failed execution, which
+//! exercises the orchestrator's failover path).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::server::{Orchestrator, Outcome};
 use crate::substrate::trace::{priority_for, prompt_for, SensClass};
+use crate::types::Island;
 use crate::util::Rng;
 
 /// Aggregate result of one closed-loop run.
@@ -58,12 +66,63 @@ fn class_for(i: usize) -> SensClass {
 /// quadratic in requests.
 const SESSION_TURNS: usize = 8;
 
+/// Island-churn program driven alongside the closed loop: per step, each
+/// online island crashes with `crash_prob` and each crashed island revives
+/// with `revive_prob`; occasionally an island leaves the mesh entirely and
+/// rejoins later. Rates are per churn step (`step_ms` wall-clock apart).
+#[derive(Clone, Copy, Debug)]
+pub struct Churn {
+    pub crash_prob: f64,
+    pub revive_prob: f64,
+    /// Probability an online island *leaves* the mesh for a while.
+    pub leave_prob: f64,
+    /// Wall-clock milliseconds between churn steps.
+    pub step_ms: u64,
+    /// Fraction of crashes that are announced (liveness view learns
+    /// immediately); the rest are silent and must be *detected*.
+    pub announced_fraction: f64,
+}
+
+impl Default for Churn {
+    fn default() -> Self {
+        Churn { crash_prob: 0.25, revive_prob: 0.6, leave_prob: 0.05, step_ms: 2, announced_fraction: 0.5 }
+    }
+}
+
+/// What the churn driver did during a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChurnStats {
+    pub crashes: u64,
+    pub revives: u64,
+    pub leaves: u64,
+    pub joins: u64,
+}
+
 /// Drive `threads` workers × `per_thread` closed-loop submissions through a
 /// shared orchestrator. Deterministic prompt streams per (seed, worker).
 pub fn run_closed_loop(orch: &Arc<Orchestrator>, threads: usize, per_thread: usize, seed: u64) -> LoadReport {
+    run_closed_loop_churn(orch, threads, per_thread, seed, None).0
+}
+
+/// Closed-loop run with an optional churn program. The fleet is restored
+/// (every island revived / rejoined) before the report is returned, so
+/// callers can run repeated phases against one orchestrator.
+pub fn run_closed_loop_churn(
+    orch: &Arc<Orchestrator>,
+    threads: usize,
+    per_thread: usize,
+    seed: u64,
+    churn: Option<Churn>,
+) -> (LoadReport, ChurnStats) {
     let outcomes = Arc::new(Mutex::new(Vec::with_capacity(threads * per_thread)));
     let errors = Arc::new(Mutex::new(0usize));
+    let done = Arc::new(AtomicBool::new(false));
     let t0 = std::time::Instant::now();
+    let churn_handle = churn.map(|plan| {
+        let orch = Arc::clone(orch);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || drive_churn(&orch, plan, seed, &done))
+    });
     let handles: Vec<_> = (0..threads)
         .map(|t| {
             let orch = Arc::clone(orch);
@@ -97,10 +156,68 @@ pub fn run_closed_loop(orch: &Arc<Orchestrator>, threads: usize, per_thread: usi
     for h in handles {
         h.join().unwrap();
     }
+    done.store(true, Ordering::SeqCst);
+    let churn_stats = churn_handle.map(|h| h.join().unwrap()).unwrap_or_default();
     let wall_s = t0.elapsed().as_secs_f64();
     let outcomes = Arc::try_unwrap(outcomes).expect("workers joined").into_inner().unwrap();
     let errors = *errors.lock().unwrap();
-    LoadReport { threads, attempted: threads * per_thread, outcomes, errors, wall_s }
+    (LoadReport { threads, attempted: threads * per_thread, outcomes, errors, wall_s }, churn_stats)
+}
+
+/// The churn driver loop: mutates fleet membership until `done`, then
+/// restores every island so the orchestrator is reusable.
+fn drive_churn(orch: &Arc<Orchestrator>, plan: Churn, seed: u64, done: &AtomicBool) -> ChurnStats {
+    let mut stats = ChurnStats::default();
+    let mut rng = Rng::new(seed ^ 0xC4_52_11);
+    let mut parked: Vec<Island> = Vec::new();
+    let Some(fleet) = orch.fleet() else { return stats };
+    let ids: Vec<_> = fleet.specs().iter().map(|i| i.id).collect();
+    while !done.load(Ordering::SeqCst) {
+        for &id in &ids {
+            let Some(island) = fleet.get(id) else {
+                // currently left the mesh: maybe rejoin
+                if rng.f64() < plan.revive_prob {
+                    if let Some(pos) = parked.iter().position(|i| i.id == id) {
+                        let spec = parked.swap_remove(pos);
+                        if orch.join_island(spec) {
+                            stats.joins += 1;
+                        }
+                    }
+                }
+                continue;
+            };
+            if island.is_online() {
+                if rng.f64() < plan.leave_prob {
+                    if let Some(spec) = orch.leave_island(id) {
+                        parked.push(spec);
+                        stats.leaves += 1;
+                    }
+                } else if rng.f64() < plan.crash_prob {
+                    let crashed = if rng.f64() < plan.announced_fraction {
+                        orch.crash_island(id) // clean shutdown: liveness view told
+                    } else {
+                        fleet.crash(id) // silent death: must be detected
+                    };
+                    if crashed {
+                        stats.crashes += 1;
+                    }
+                }
+            } else if rng.f64() < plan.revive_prob && orch.revive_island(id) {
+                stats.revives += 1;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(plan.step_ms));
+    }
+    // restore the fleet for subsequent phases
+    for spec in parked {
+        orch.join_island(spec);
+    }
+    for &id in &ids {
+        if fleet.get(id).is_some() {
+            orch.revive_island(id);
+        }
+    }
+    stats
 }
 
 #[cfg(test)]
@@ -128,6 +245,24 @@ mod tests {
         assert_eq!(report.outcomes.len(), 40);
         assert_eq!(orch.audit.len(), 40);
         assert!(report.requests_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn churned_closed_loop_loses_nothing_and_restores_fleet() {
+        let orch = orchestrator();
+        let (report, _churn) = run_closed_loop_churn(&orch, 4, 30, 5, Some(Churn::default()));
+        assert_eq!(report.attempted, 120);
+        assert_eq!(report.errors, 0, "churn must never surface as submit errors");
+        assert_eq!(report.outcomes.len(), 120);
+        // one audit entry per admitted request, even under churn
+        assert_eq!(orch.audit.len(), 120);
+        assert_eq!(report.served() + report.rejected(), 120);
+        // the fleet is restored for follow-up phases
+        let fleet = orch.fleet().unwrap();
+        assert_eq!(fleet.len(), 7, "every island rejoined");
+        for island in fleet.islands() {
+            assert!(island.is_online(), "{} left offline", island.spec.name);
+        }
     }
 
     #[test]

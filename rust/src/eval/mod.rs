@@ -12,4 +12,4 @@ pub mod harness;
 pub mod loadgen;
 
 pub use harness::{run_policy, PolicyStats, RunOpts};
-pub use loadgen::{run_closed_loop, LoadReport};
+pub use loadgen::{run_closed_loop, run_closed_loop_churn, Churn, ChurnStats, LoadReport};

@@ -26,6 +26,22 @@ pub struct Response {
     pub cost: f64,
 }
 
+/// Marker prefix for island-down execution errors. The orchestrator's
+/// failover path matches on this to distinguish "this island is
+/// unreachable, re-route to the next Pareto candidate" from fatal engine
+/// errors that no amount of re-routing fixes.
+const ISLAND_DOWN_PREFIX: &str = "island-down:";
+
+/// Build an island-down error (link dead after retries / island gone).
+pub fn island_down_error(id: IslandId) -> anyhow::Error {
+    anyhow::anyhow!("{ISLAND_DOWN_PREFIX} island {id} unreachable")
+}
+
+/// Does this execution error mean the island itself is down (re-routable)?
+pub fn is_island_down(err: &anyhow::Error) -> bool {
+    err.to_string().starts_with(ISLAND_DOWN_PREFIX)
+}
+
 /// Executes requests on islands through the shared engine.
 pub struct IslandExecutor {
     engine: EngineHandle,
@@ -66,9 +82,12 @@ impl IslandExecutor {
         let mut out = Vec::with_capacity(requests.len());
         for (req, gen) in requests.iter().zip(gens) {
             let payload_kb = (req.prompt.len() + req.max_new_tokens) as f64 / 1024.0;
+            // a link that fails every retry means the island is unreachable:
+            // surface it as an island-down error so the orchestrator fails
+            // over instead of charging the user for a request that never ran
             let network_ms = {
                 let mut net = self.net.lock().unwrap();
-                net.round_trip_retry(island.link, payload_kb.max(0.5), 3).unwrap_or(5_000.0)
+                net.round_trip_retry(island.link, payload_kb.max(0.5), 3).ok_or_else(|| island_down_error(island.id))?
             };
             out.push(Response {
                 island: island.id,
@@ -87,7 +106,16 @@ impl IslandExecutor {
 // examples/quickstart.rs. Unit tests below cover the prompt assembly logic.
 #[cfg(test)]
 mod tests {
+    use super::{is_island_down, island_down_error};
+    use crate::types::IslandId;
     use crate::types::{Role, Turn};
+
+    #[test]
+    fn island_down_errors_are_classifiable() {
+        let e = island_down_error(IslandId(3));
+        assert!(is_island_down(&e), "{e}");
+        assert!(!is_island_down(&anyhow::anyhow!("engine OOM")));
+    }
 
     #[test]
     fn history_precedes_prompt_in_framing() {

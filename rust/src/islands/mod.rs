@@ -15,4 +15,4 @@ pub mod executor;
 pub mod sim;
 
 pub use cost::CostLedger;
-pub use sim::{ExecReport, Fleet, SimIsland};
+pub use sim::{ExecError, ExecReport, Fleet, SimIsland};

@@ -17,7 +17,8 @@
 //! different islands never contend, and WAVES admission reads capacity
 //! without blocking writers for long.
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::substrate::netsim::NetSim;
 use crate::types::{Island, IslandId, Request, TrustTier};
@@ -40,6 +41,29 @@ fn payload_kb(request: &Request) -> f64 {
         as f64
         / 1024.0
 }
+
+/// Why a simulated execution could not run. The distinction matters to the
+/// orchestrator's failover path: both variants mean "this island cannot
+/// serve the request right now" and trigger a re-route, but they are audited
+/// with different reasons.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecError {
+    /// No island with this id is in the fleet (it left, or never joined).
+    UnknownIsland(IslandId),
+    /// The island is present but crashed / powered off.
+    IslandDown(IslandId),
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::UnknownIsland(id) => write!(f, "island {id} not in fleet"),
+            ExecError::IslandDown(id) => write!(f, "island {id} is offline"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
 
 /// Outcome of one simulated execution.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -75,6 +99,10 @@ struct IslandRt {
 pub struct SimIsland {
     pub spec: Island,
     rt: Mutex<IslandRt>,
+    /// Power state: `false` = crashed / powered off. Flipped by
+    /// [`Fleet::crash`] / [`Fleet::revive`] from churn drivers; an offline
+    /// island reports zero capacity and refuses execution.
+    online: AtomicBool,
 }
 
 impl SimIsland {
@@ -84,12 +112,25 @@ impl SimIsland {
         SimIsland {
             spec,
             rt: Mutex::new(IslandRt { busy_until: vec![0.0; slots], external_load: 0.0, battery, executed: 0 }),
+            online: AtomicBool::new(true),
         }
     }
 
+    pub fn is_online(&self) -> bool {
+        self.online.load(Ordering::SeqCst)
+    }
+
+    pub fn set_online(&self, online: bool) {
+        self.online.store(online, Ordering::SeqCst);
+    }
+
     /// Available capacity R_j(t): fraction of free slots, reduced by the
-    /// external load program. Unbounded islands always report 1.0.
+    /// external load program. Unbounded islands always report 1.0; offline
+    /// islands always report 0.0.
     pub fn capacity(&self, now_ms: f64) -> f64 {
+        if !self.is_online() {
+            return 0.0;
+        }
         if self.spec.unbounded() {
             return 1.0;
         }
@@ -125,9 +166,14 @@ impl SimIsland {
     /// round trip; returns the report. The caller has already decided this
     /// island is the target (router) and sampled the link
     /// ([`Fleet::execute`] does both).
-    pub fn execute(&self, request: &Request, now_ms: f64, rtt: f64, payload_kb: f64) -> ExecReport {
+    pub fn execute(&self, request: &Request, now_ms: f64, rtt: f64, payload_kb: f64) -> Result<ExecReport, ExecError> {
         let tokens = request.token_estimate();
         let mut rt = self.rt.lock().unwrap();
+        // checked under the rt lock so a crash() racing this call is seen
+        // before any slot is booked
+        if !self.is_online() {
+            return Err(ExecError::IslandDown(self.spec.id));
+        }
         let (startup, per_token) = compute_model(self.spec.tier);
         // external load slows compute proportionally
         let slow = 1.0 / (1.0 - rt.external_load.min(0.9));
@@ -156,21 +202,29 @@ impl SimIsland {
         }
         rt.executed += 1;
 
-        ExecReport {
+        Ok(ExecReport {
             island: self.spec.id,
             arrival_ms: now_ms,
             latency_ms: finish - now_ms,
             queued_ms: queued,
             cost: self.spec.request_cost(tokens),
             payload_kb,
-        }
+        })
     }
 }
 
 /// A mesh of simulated islands sharing a virtual clock.
+///
+/// Membership is dynamic: islands [`crash`](Fleet::crash) and
+/// [`revive`](Fleet::revive) in place (power state), and
+/// [`join`](Fleet::join) / [`leave`](Fleet::leave) the mesh entirely — all
+/// through `&self`, so churn drivers (tests, the load generator's churn
+/// thread) run concurrently with submitters. The island list sits behind an
+/// `RwLock` of `Arc`s: the hot path takes a read lock just long enough to
+/// clone the target's `Arc`, then executes against the island's own mutex.
 #[derive(Debug)]
 pub struct Fleet {
-    pub islands: Vec<SimIsland>,
+    islands: RwLock<Vec<Arc<SimIsland>>>,
     net: Mutex<NetSim>,
     now_ms: AtomicF64,
 }
@@ -178,7 +232,7 @@ pub struct Fleet {
 impl Fleet {
     pub fn new(specs: Vec<Island>, seed: u64) -> Fleet {
         Fleet {
-            islands: specs.into_iter().map(SimIsland::new).collect(),
+            islands: RwLock::new(specs.into_iter().map(|s| Arc::new(SimIsland::new(s))).collect()),
             net: Mutex::new(NetSim::new(seed)),
             now_ms: AtomicF64::new(0.0),
         }
@@ -193,20 +247,93 @@ impl Fleet {
         self.now_ms.fetch_add(dt_ms);
     }
 
-    pub fn get(&self, id: IslandId) -> Option<&SimIsland> {
-        self.islands.iter().find(|i| i.spec.id == id)
+    /// Snapshot of the current island list (membership may change the
+    /// moment the read lock drops; the `Arc`s stay valid regardless).
+    pub fn islands(&self) -> Vec<Arc<SimIsland>> {
+        self.islands.read().unwrap().clone()
     }
 
-    pub fn get_mut(&mut self, id: IslandId) -> Option<&mut SimIsland> {
-        self.islands.iter_mut().find(|i| i.spec.id == id)
+    /// Current island specs (registration / discovery view).
+    pub fn specs(&self) -> Vec<Island> {
+        self.islands.read().unwrap().iter().map(|i| i.spec.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.islands.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.islands.read().unwrap().is_empty()
+    }
+
+    pub fn get(&self, id: IslandId) -> Option<Arc<SimIsland>> {
+        self.islands.read().unwrap().iter().find(|i| i.spec.id == id).cloned()
+    }
+
+    /// Power an island off in place (it stays a fleet member: heartbeats
+    /// stop, capacity reads 0, execution fails island-down). Returns false
+    /// for unknown ids.
+    pub fn crash(&self, id: IslandId) -> bool {
+        match self.get(id) {
+            Some(island) => {
+                island.set_online(false);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Power a crashed island back on. Returns false for unknown ids.
+    pub fn revive(&self, id: IslandId) -> bool {
+        match self.get(id) {
+            Some(island) => {
+                island.set_online(true);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Add a new island to the mesh (dynamic discovery). Rejects duplicate
+    /// ids; the new island starts online with fresh runtime state.
+    pub fn join(&self, spec: Island) -> bool {
+        let mut islands = self.islands.write().unwrap();
+        if islands.iter().any(|i| i.spec.id == spec.id) {
+            return false;
+        }
+        islands.push(Arc::new(SimIsland::new(spec)));
+        true
+    }
+
+    /// Remove an island from the mesh entirely (clean leave). In-flight
+    /// executions holding the island's `Arc` complete; new requests see
+    /// `UnknownIsland`.
+    pub fn leave(&self, id: IslandId) -> Option<Island> {
+        let mut islands = self.islands.write().unwrap();
+        let pos = islands.iter().position(|i| i.spec.id == id)?;
+        Some(islands.remove(pos).spec.clone())
+    }
+
+    /// Drop every island whose spec fails the predicate (test scaffolding).
+    pub fn retain(&self, pred: impl Fn(&Island) -> bool) {
+        self.islands.write().unwrap().retain(|i| pred(&i.spec));
     }
 
     /// Router-facing dynamic state snapshot.
     pub fn states(&self) -> Vec<crate::agents::waves::IslandState> {
         let now = self.now();
         self.islands
+            .read()
+            .unwrap()
             .iter()
-            .map(|i| crate::agents::waves::IslandState { island: i.spec.clone(), capacity: i.capacity(now) })
+            .map(|i| crate::agents::waves::IslandState {
+                island: i.spec.clone(),
+                capacity: i.capacity(now),
+                online: i.is_online(),
+                // TIDE's degrade view is layered on by the orchestrator;
+                // the raw fleet snapshot only knows power state
+                degraded: false,
+            })
             .collect()
     }
 
@@ -216,6 +343,8 @@ impl Fleet {
         let now = self.now();
         let personal: Vec<f64> = self
             .islands
+            .read()
+            .unwrap()
             .iter()
             .filter(|i| i.spec.tier == TrustTier::Personal)
             .map(|i| i.capacity(now))
@@ -230,16 +359,20 @@ impl Fleet {
     /// Execute on a chosen island at the current virtual time. Only the RTT
     /// sample holds the shared NetSim lock; slot booking and accounting run
     /// under the target island's own mutex, so executions on different
-    /// islands overlap.
-    pub fn execute(&self, id: IslandId, request: &Request) -> Option<ExecReport> {
+    /// islands overlap. Fails island-down when the target crashed between
+    /// routing and execution (the orchestrator's failover path re-routes).
+    pub fn execute(&self, id: IslandId, request: &Request) -> Result<ExecReport, ExecError> {
         let now = self.now();
-        let island = self.islands.iter().find(|i| i.spec.id == id)?;
+        let island = self.get(id).ok_or(ExecError::UnknownIsland(id))?;
+        if !island.is_online() {
+            return Err(ExecError::IslandDown(id));
+        }
         let payload_kb = payload_kb(request);
         let rtt = {
             let mut net = self.net.lock().unwrap();
             net.round_trip_retry(island.spec.link, payload_kb.max(0.5), 3).unwrap_or(5_000.0)
         };
-        Some(island.execute(request, now, rtt, payload_kb))
+        island.execute(request, now, rtt, payload_kb)
     }
 }
 
@@ -369,8 +502,95 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        let total: u64 = f.islands.iter().map(|i| i.executed()).sum();
+        let total: u64 = f.islands().iter().map(|i| i.executed()).sum();
         assert_eq!(total, 400);
         assert!((f.now() - 40_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn crashed_island_refuses_execution_and_reports_zero_capacity() {
+        let f = fleet();
+        let r = Request::new(1, "prompt");
+        assert!(f.crash(IslandId(0)));
+        assert_eq!(f.execute(IslandId(0), &r), Err(ExecError::IslandDown(IslandId(0))));
+        assert_eq!(f.get(IslandId(0)).unwrap().capacity(f.now()), 0.0);
+        let st = f.states();
+        assert!(!st.iter().find(|s| s.island.id == IslandId(0)).unwrap().online);
+        // revive: serves again
+        assert!(f.revive(IslandId(0)));
+        assert!(f.execute(IslandId(0), &r).is_ok());
+        // unknown islands are a different error
+        assert!(!f.crash(IslandId(999)));
+        assert_eq!(f.execute(IslandId(999), &r), Err(ExecError::UnknownIsland(IslandId(999))));
+    }
+
+    #[test]
+    fn crashed_unbounded_island_reports_zero_capacity() {
+        let f = fleet();
+        assert_eq!(f.get(IslandId(5)).unwrap().capacity(0.0), 1.0);
+        f.crash(IslandId(5));
+        assert_eq!(f.get(IslandId(5)).unwrap().capacity(0.0), 0.0);
+    }
+
+    #[test]
+    fn join_and_leave_change_membership() {
+        let f = fleet();
+        let n = f.len();
+        let mut extra = preset_personal_group().remove(1);
+        extra.id = IslandId(42);
+        extra.name = "spare-workstation".to_string();
+        assert!(f.join(extra.clone()));
+        assert!(!f.join(extra.clone()), "duplicate id must be rejected");
+        assert_eq!(f.len(), n + 1);
+        let r = Request::new(1, "prompt");
+        assert!(f.execute(IslandId(42), &r).is_ok());
+        let left = f.leave(IslandId(42)).expect("leaves");
+        assert_eq!(left.id, IslandId(42));
+        assert_eq!(f.len(), n);
+        assert_eq!(f.execute(IslandId(42), &r), Err(ExecError::UnknownIsland(IslandId(42))));
+        assert!(f.leave(IslandId(42)).is_none());
+    }
+
+    #[test]
+    fn concurrent_churn_and_execution_never_panics() {
+        use std::sync::Arc as StdArc;
+        let f = StdArc::new(fleet());
+        let churn = {
+            let f = StdArc::clone(&f);
+            std::thread::spawn(move || {
+                for i in 0..200u32 {
+                    let id = IslandId(i % 5);
+                    f.crash(id);
+                    f.revive(id);
+                    if i % 10 == 0 {
+                        let mut extra = preset_personal_group().remove(1);
+                        extra.id = IslandId(100 + (i % 3));
+                        f.join(extra);
+                        f.leave(IslandId(100 + (i % 3)));
+                    }
+                }
+            })
+        };
+        let workers: Vec<_> = (0..4)
+            .map(|t| {
+                let f = StdArc::clone(&f);
+                std::thread::spawn(move || {
+                    let r = Request::new(t, "prompt");
+                    let mut served = 0usize;
+                    for _ in 0..100 {
+                        if f.execute(IslandId((t % 5) as u32), &r).is_ok() {
+                            served += 1;
+                        }
+                        f.advance(50.0);
+                    }
+                    served
+                })
+            })
+            .collect();
+        churn.join().unwrap();
+        let served: usize = workers.into_iter().map(|h| h.join().unwrap()).sum();
+        // executed accounting matches successes exactly
+        let executed: u64 = f.islands().iter().map(|i| i.executed()).sum();
+        assert_eq!(executed as usize, served);
     }
 }

@@ -35,7 +35,7 @@ pub fn attack1_routing_manipulation() -> AttackOutcome {
         .into_iter()
         .map(|island| {
             let cap = if island.unbounded() { 1.0 } else { 0.0 }; // forged exhaustion
-            crate::agents::waves::IslandState { island, capacity: cap }
+            crate::agents::waves::IslandState { island, capacity: cap, online: true, degraded: false }
         })
         .collect();
     let request = Request::new(1, "patient john doe ssn 123-45-6789").with_priority(PriorityTier::Primary);
@@ -56,7 +56,7 @@ pub fn attack1_routing_manipulation() -> AttackOutcome {
 
 /// Attack 2: adversary advertises a fake island claiming T=1.0 / P=1.0.
 pub fn attack2_island_impersonation() -> AttackOutcome {
-    let mut lighthouse = Lighthouse::new(0xA77E57, 500.0, 3);
+    let lighthouse = Lighthouse::new(0xA77E57, 500.0, 3);
     for island in preset_personal_group() {
         lighthouse.register_owned(island, 0.0);
     }
@@ -139,7 +139,7 @@ pub fn attack4_island_flooding() -> AttackOutcome {
 /// Attack 5: LIGHTHOUSE goes byzantine (crashes / lies); routing must
 /// continue off the cached island list (full BFT is future work, §VIII.C).
 pub fn attack5_lighthouse_byzantine() -> AttackOutcome {
-    let mut lighthouse = Lighthouse::new(5, 500.0, 3);
+    let lighthouse = Lighthouse::new(5, 500.0, 3);
     for island in preset_personal_group() {
         lighthouse.register_owned(island, 0.0);
     }
@@ -151,7 +151,7 @@ pub fn attack5_lighthouse_byzantine() -> AttackOutcome {
     let waves = Waves::new(Config::default());
     let states: Vec<_> = cached
         .iter()
-        .map(|i| crate::agents::waves::IslandState { island: i.clone(), capacity: 1.0 })
+        .map(|i| crate::agents::waves::IslandState { island: i.clone(), capacity: 1.0, online: true, degraded: false })
         .collect();
     let d = waves.route(&Request::new(1, "hello"), 0.2, &states, 1.0, Preference::Local, f64::INFINITY);
     let mitigated = usable && d.target().is_some();

@@ -29,6 +29,12 @@ pub struct AuditEntry {
     pub island_privacy: Option<f64>,
     pub sanitized: bool,
     pub reject_reason: Option<String>,
+    /// How many times the request was re-routed after its island died
+    /// between routing and execution. 0 = first-choice island served it;
+    /// >0 with `island: Some` = failover success; >0 with a reject reason =
+    /// retry budget exhausted. Every admitted request lands in exactly one
+    /// of those buckets — the churn stress test pins this down.
+    pub failovers: u32,
 }
 
 /// Append-only concurrent audit log.
@@ -76,6 +82,12 @@ impl AuditLog {
             .collect()
     }
 
+    /// Total failover re-routes recorded across the trail (cross-checked
+    /// against the `failovers` metric by the churn stress test).
+    pub fn total_failovers(&self) -> u64 {
+        self.entries.lock().unwrap().iter().map(|e| e.failovers as u64).sum()
+    }
+
     /// Export as a JSON array (regulator-facing artifact).
     pub fn to_json(&self) -> Json {
         Json::Arr(
@@ -93,6 +105,7 @@ impl AuditLog {
                         ("island_privacy", e.island_privacy.map(Json::num).unwrap_or(Json::Null)),
                         ("sanitized", Json::Bool(e.sanitized)),
                         ("reject_reason", e.reject_reason.as_deref().map(Json::str).unwrap_or(Json::Null)),
+                        ("failovers", Json::num(e.failovers as f64)),
                     ])
                 })
                 .collect(),
@@ -114,6 +127,7 @@ mod tests {
             island_privacy: island.map(|(_, p)| p),
             sanitized: false,
             reject_reason: if island.is_none() { Some("fail-closed".into()) } else { None },
+            failovers: 0,
         }
     }
 

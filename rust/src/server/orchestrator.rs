@@ -26,22 +26,26 @@
 //! - [`Backend::Real`] — PJRT TinyLM through [`IslandExecutor`]
 //!   (quickstart / serving bench; python stays off this path).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::agents::lighthouse::Lighthouse;
 use crate::agents::mist::sanitize::sanitize_history;
 use crate::agents::mist::Mist;
 use crate::agents::tide::hysteresis::Hysteresis;
-use crate::agents::waves::{Decision, Routed, Waves};
+use crate::agents::tide::monitor::DegradeDetector;
+use crate::agents::waves::{Decision, IslandState, Routed, Waves};
 use crate::config::Config;
-use crate::islands::executor::IslandExecutor;
+use crate::islands::executor::{self, IslandExecutor};
 use crate::islands::{CostLedger, Fleet};
 use crate::runtime::{BatchPolicy, Batcher};
 use crate::server::audit::{AuditEntry, AuditLog};
 use crate::server::ratelimit::RateLimiter;
 use crate::server::session::SessionStore;
 use crate::telemetry::Metrics;
-use crate::types::{Island, PriorityTier, Request};
+use crate::types::{Island, IslandId, PriorityTier, Request};
+use crate::util::AtomicF64;
 
 /// Execution backend.
 pub enum Backend {
@@ -83,7 +87,39 @@ struct Prepared {
     decision: Decision,
     routed: Routed,
     sanitized: bool,
+    /// Privacy level the history/prompt were last sanitized for (`None` =
+    /// never sanitized). A failover hop to a *lower*-privacy island must
+    /// re-sanitize at the new level — over-sanitization is safe, under- is
+    /// a Def. 4 violation.
+    sanitized_at: Option<f64>,
     now: f64,
+    /// Island-down execution failures observed so far (each one is a
+    /// failover hop attempt; lands in the audit entry and must equal the
+    /// per-request contribution to the `failovers` metric).
+    failovers: u32,
+}
+
+/// Terminal state of the failure-aware execution loop.
+enum ExecEnd {
+    /// `(latency_ms, cost, raw_response)` from the island that served it.
+    Done(f64, f64, String),
+    /// Every attempt hit a dead island and the retry budget ran out (or no
+    /// online island remained). Audited as an exhausted-retries reject.
+    Exhausted { reason: String },
+    /// A non-island-down execution error: re-routing cannot fix it.
+    Fatal(anyhow::Error),
+    /// Fatal, but the failure was already audited at its source (e.g. the
+    /// session raced a close() during a failover re-sanitization) — the
+    /// caller must NOT add a second entry for this request id.
+    FatalAudited(anyhow::Error),
+}
+
+/// Why a single execution attempt failed.
+enum AttemptErr {
+    /// The routed island is down / gone / unreachable — re-routable.
+    IslandDown(String),
+    /// Anything else — not re-routable.
+    Fatal(anyhow::Error),
 }
 
 /// The orchestrator.
@@ -91,6 +127,9 @@ pub struct Orchestrator {
     pub waves: Waves,
     pub mist: Mist,
     backend: Backend,
+    /// LIGHTHOUSE embedded on the serving path: every submit routes only
+    /// over islands this liveness view reports online and attested.
+    pub lighthouse: Lighthouse,
     hysteresis: Mutex<Hysteresis>,
     pub sessions: SessionStore,
     pub ledger: CostLedger,
@@ -101,6 +140,14 @@ pub struct Orchestrator {
     next_request_id: AtomicU64,
     budget_ceiling: f64,
     batch_policy: BatchPolicy,
+    /// Failover re-routes allowed per request before exhausted-retries.
+    retry_budget: u32,
+    /// TIDE degrade detectors, one per island, sampled at heartbeat cadence.
+    degrade: Mutex<BTreeMap<IslandId, DegradeDetector>>,
+    degrade_zero_samples: u32,
+    /// Virtual time of the last heartbeat relay / liveness tick.
+    last_liveness_sync: AtomicF64,
+    heartbeat_period_ms: f64,
     /// Wall-clock epoch for the Real backend's rate limiting.
     started: std::time::Instant,
 }
@@ -110,10 +157,24 @@ impl Orchestrator {
         let hysteresis = Hysteresis::new(config.hysteresis_low, config.hysteresis_high);
         let limiter = RateLimiter::new(config.rate_limit_rps, config.rate_limit_rps.max(1.0));
         let budget_ceiling = config.budget_ceiling;
+        let retry_budget = config.failover_retry_budget;
+        let degrade_zero_samples = config.degrade_zero_samples;
+        let heartbeat_period_ms = config.heartbeat_period_ms as f64;
+        let lighthouse = Lighthouse::new(seed ^ 0x11A5_7110_5E0u64, heartbeat_period_ms, config.heartbeat_miss_limit);
+        // register the initial fleet: every backend island is attested and
+        // announced online at t=0 (churn helpers keep the view in sync)
+        let initial: Vec<Island> = match &backend {
+            Backend::Sim(fleet) => fleet.specs(),
+            Backend::Real { islands, .. } => islands.clone(),
+        };
+        for island in initial {
+            let _ = lighthouse.register_owned(island, 0.0);
+        }
         Orchestrator {
             waves: Waves::new(config),
             mist,
             backend,
+            lighthouse,
             hysteresis: Mutex::new(hysteresis),
             sessions: SessionStore::new(seed),
             ledger: CostLedger::new(),
@@ -123,6 +184,11 @@ impl Orchestrator {
             next_request_id: AtomicU64::new(1),
             budget_ceiling,
             batch_policy: BatchPolicy::default(),
+            retry_budget,
+            degrade: Mutex::new(BTreeMap::new()),
+            degrade_zero_samples,
+            last_liveness_sync: AtomicF64::new(f64::NEG_INFINITY),
+            heartbeat_period_ms,
             started: std::time::Instant::now(),
         }
     }
@@ -160,10 +226,140 @@ impl Orchestrator {
         }
     }
 
-    pub fn fleet_mut(&mut self) -> Option<&mut Fleet> {
-        match &mut self.backend {
-            Backend::Sim(f) => Some(f),
-            _ => None,
+    // -- dynamic fleet membership (churn drivers: tests, load generator) ---
+
+    /// Announced crash: the island powers off AND the liveness view learns
+    /// immediately (clean shutdown). For a *silent* crash — detected only by
+    /// missed heartbeats or a failed execution — call `fleet().crash(id)`
+    /// directly. Sim backend only.
+    pub fn crash_island(&self, id: IslandId) -> bool {
+        match self.fleet() {
+            Some(fleet) if fleet.crash(id) => {
+                self.lighthouse.mark_offline(id);
+                self.metrics.count("island_crashes", 1);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Power a crashed island back on and announce it (wake from sleep).
+    pub fn revive_island(&self, id: IslandId) -> bool {
+        match self.fleet() {
+            Some(fleet) if fleet.revive(id) => {
+                self.lighthouse.beat(id, fleet.now());
+                self.lighthouse.set_degraded(id, false);
+                self.degrade.lock().unwrap().remove(&id);
+                self.metrics.count("island_revives", 1);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// A new island joins the mesh mid-run: added to the fleet and
+    /// registered + attested with LIGHTHOUSE (dynamic discovery).
+    pub fn join_island(&self, island: Island) -> bool {
+        match self.fleet() {
+            Some(fleet) if fleet.join(island.clone()) => {
+                // re-joins after a leave are fresh registrations
+                let _ = self.lighthouse.deregister(island.id);
+                let _ = self.lighthouse.register_owned(island, fleet.now());
+                self.metrics.count("island_joins", 1);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// An island leaves the mesh entirely (deprovisioned).
+    pub fn leave_island(&self, id: IslandId) -> Option<Island> {
+        let fleet = self.fleet()?;
+        let island = fleet.leave(id)?;
+        let _ = self.lighthouse.deregister(id);
+        self.degrade.lock().unwrap().remove(&id);
+        self.metrics.count("island_leaves", 1);
+        Some(island)
+    }
+
+    /// Heartbeat-cadence gate: true for exactly one caller per elapsed
+    /// period (CAS on the last-sync timestamp), so concurrent submitters
+    /// cannot double-relay beats or feed the degrade detectors extra
+    /// samples within one period.
+    fn liveness_due(&self, now: f64) -> bool {
+        let last = self.last_liveness_sync.load();
+        if last != f64::NEG_INFINITY && now - last < self.heartbeat_period_ms {
+            return false;
+        }
+        self.last_liveness_sync.compare_exchange(last, now)
+    }
+
+    /// Relay fleet liveness into LIGHTHOUSE at heartbeat cadence: online
+    /// islands beat, the tracker ticks (silently crashed islands time out
+    /// after the miss limit), and TIDE's degrade detectors fold each
+    /// island's Eq. 3 capacity into the same view.
+    fn sync_liveness(&self, now: f64, states: &[IslandState]) {
+        if !self.liveness_due(now) {
+            return;
+        }
+        self.lighthouse.beat_many(states.iter().filter(|s| s.online).map(|s| s.island.id), now);
+        self.lighthouse.tick(now);
+        let mut detectors = self.degrade.lock().unwrap();
+        for s in states {
+            let det = detectors.entry(s.island.id).or_insert_with(|| DegradeDetector::new(self.degrade_zero_samples));
+            let was = det.is_degraded();
+            let is = det.observe(s.capacity);
+            if is != was {
+                self.lighthouse.set_degraded(s.island.id, is);
+                self.metrics.count(if is { "islands_degraded" } else { "islands_recovered" }, 1);
+            }
+        }
+    }
+
+    /// The routing-time view of the fleet: per-island capacity from the
+    /// backend, liveness + degrade signals from LIGHTHOUSE. `submit` and
+    /// the failover path both route over this — a request is never routed
+    /// to an island the liveness view knows is offline, and degraded
+    /// islands are deprioritized.
+    fn routing_view(&self) -> (Vec<IslandState>, f64) {
+        match &self.backend {
+            Backend::Sim(fleet) => {
+                let now = fleet.now();
+                let mut states = fleet.states();
+                self.sync_liveness(now, &states);
+                for s in states.iter_mut() {
+                    // the sim's power flag is ground truth the liveness view
+                    // discovers over time: routing trusts LIGHTHOUSE, so a
+                    // silent crash is invisible until detected (heartbeat
+                    // timeout or a failed execution marks it offline).
+                    s.online = self.lighthouse.is_online(s.island.id);
+                    s.degraded = self.lighthouse.is_degraded(s.island.id);
+                }
+                (states, fleet.local_capacity())
+            }
+            Backend::Real { islands, .. } => {
+                // real islands have no sim power flag: they re-announce at
+                // heartbeat cadence, so an island marked offline by a failed
+                // execution (link dead after retries) is retried after one
+                // period — a circuit-breaker half-open, not a permanent ban.
+                let now = self.now_ms();
+                if self.liveness_due(now) {
+                    self.lighthouse.beat_many(islands.iter().map(|i| i.id), now);
+                    self.lighthouse.tick(now);
+                }
+                (
+                    islands
+                        .iter()
+                        .map(|i| IslandState {
+                            island: i.clone(),
+                            capacity: 1.0,
+                            online: self.lighthouse.is_online(i.id),
+                            degraded: self.lighthouse.is_degraded(i.id),
+                        })
+                        .collect(),
+                    1.0,
+                )
+            }
         }
     }
 
@@ -202,7 +398,7 @@ impl Orchestrator {
         let Some((history, prev_privacy)) =
             self.sessions.with(session_id, |s| (s.history.clone(), s.prev_island_privacy))
         else {
-            self.audit_vanished(id, &user, now, 0.0, "session closed before routing");
+            self.audit_vanished(id, &user, now, 0.0, "session closed before routing", 0);
             anyhow::bail!("unknown session {session_id}");
         };
         let mut request = Request::new(id, prompt).with_user(&user).with_priority(priority).with_history(history);
@@ -217,17 +413,8 @@ impl Orchestrator {
         request.sensitivity = Some(s_r);
         self.metrics.observe("mist_s_r", s_r);
 
-        // TIDE capacity (Alg. 1 line 2) + hysteresis preference
-        let (states, local_capacity) = match &self.backend {
-            Backend::Sim(fleet) => (fleet.states(), fleet.local_capacity()),
-            Backend::Real { islands, .. } => (
-                islands
-                    .iter()
-                    .map(|i| crate::agents::waves::IslandState { island: i.clone(), capacity: 1.0 })
-                    .collect(),
-                1.0,
-            ),
-        };
+        // TIDE capacity (Alg. 1 line 2) + LIGHTHOUSE liveness + hysteresis
+        let (states, local_capacity) = self.routing_view();
         let pref = self.hysteresis.lock().unwrap().observe(local_capacity);
         self.metrics.gauge("local_capacity", local_capacity);
 
@@ -251,6 +438,7 @@ impl Orchestrator {
                     island_privacy: None,
                     sanitized: false,
                     reject_reason: reason,
+                    failovers: 0,
                 });
                 return Ok(Err(Outcome {
                     request_id: id,
@@ -266,29 +454,65 @@ impl Orchestrator {
         };
 
         // Sanitize on trust-boundary crossing (Alg. 1 lines 14-17)
-        let mut sanitized = false;
-        if routed.sanitize {
-            let Some((clean_history, clean_prompt)) = self.sessions.with_mut(session_id, |s| {
-                let h = sanitize_history(&request.history, routed.target_privacy, &mut s.placeholders);
-                // the outgoing prompt is sanitized at the same level
-                let p = s.placeholders.sanitize(&request.prompt, routed.target_privacy);
-                (h, p)
-            }) else {
-                self.audit_vanished(id, &user, now, s_r, "session closed before sanitization");
-                anyhow::bail!("session {session_id} closed mid-request");
-            };
-            request.history = clean_history;
-            request.prompt = clean_prompt;
-            sanitized = true;
+        let mut prepared = Prepared {
+            id,
+            session_id,
+            user,
+            request,
+            s_r,
+            decision,
+            routed,
+            sanitized: false,
+            sanitized_at: None,
+            now,
+            failovers: 0,
+        };
+        self.sanitize_for_target(&mut prepared)?;
+        Ok(Ok(prepared))
+    }
+
+    /// Sanitize the request history + outgoing prompt for the currently
+    /// routed target (Alg. 1 lines 14-17). Runs at prepare time, and again
+    /// on failover re-routes: a hop to a *higher*-privacy island keeps the
+    /// already-sanitized form (over-sanitization is privacy-safe), but a
+    /// hop to a *lower*-privacy island than the one sanitized for must
+    /// re-sanitize at the new level — entities between the two levels were
+    /// left in cleartext by the first pass.
+    fn sanitize_for_target(&self, p: &mut Prepared) -> anyhow::Result<()> {
+        if !p.routed.sanitize {
+            return Ok(());
+        }
+        let target_privacy = p.routed.target_privacy;
+        if let Some(level) = p.sanitized_at {
+            if target_privacy >= level {
+                return Ok(());
+            }
+        }
+        let Some((clean_history, clean_prompt)) = self.sessions.with_mut(p.session_id, |s| {
+            let h = sanitize_history(&p.request.history, target_privacy, &mut s.placeholders);
+            // the outgoing prompt is sanitized at the same level
+            let pr = s.placeholders.sanitize(&p.request.prompt, target_privacy);
+            (h, pr)
+        }) else {
+            self.audit_vanished(p.id, &p.user, p.now, p.s_r, "session closed before sanitization", p.failovers);
+            anyhow::bail!("session {} closed mid-request", p.session_id);
+        };
+        p.request.history = clean_history;
+        p.request.prompt = clean_prompt;
+        if !p.sanitized {
+            // count the turn once, not once per failover re-sanitization
             self.metrics.count("sanitized_turns", 1);
         }
-
-        Ok(Ok(Prepared { id, session_id, user, request, s_r, decision, routed, sanitized, now }))
+        p.sanitized = true;
+        p.sanitized_at = Some(target_privacy);
+        Ok(())
     }
 
     /// Audit trail entry for a request that consumed an id but fell out of
     /// the pipeline before execution (e.g. its session raced a `close()`).
-    fn audit_vanished(&self, id: u64, user: &str, now: f64, s_r: f64, reason: &str) {
+    /// `failovers` carries any hops already counted in the `failovers`
+    /// metric, keeping Σ audit.failovers == the metric even on this path.
+    fn audit_vanished(&self, id: u64, user: &str, now: f64, s_r: f64, reason: &str, failovers: u32) {
         self.audit.record(AuditEntry {
             request_id: id,
             user: user.to_string(),
@@ -298,6 +522,7 @@ impl Orchestrator {
             island_privacy: None,
             sanitized: false,
             reject_reason: Some(reason.to_string()),
+            failovers,
         });
     }
 
@@ -315,7 +540,35 @@ impl Orchestrator {
             island_privacy: Some(p.routed.target_privacy),
             sanitized: p.sanitized,
             reject_reason: Some(format!("execution failed: {err}")),
+            failovers: p.failovers,
         });
+    }
+
+    /// Audit + metrics + fail-closed Outcome for a request whose failover
+    /// retry budget ran out: the request is *rejected*, never silently
+    /// lost — exactly one audit entry, zero cost charged.
+    fn finish_exhausted(&self, p: Prepared, reason: String) -> Outcome {
+        self.metrics.count("rejected_failover_exhausted", 1);
+        self.audit.record(AuditEntry {
+            request_id: p.id,
+            user: p.user,
+            t_ms: p.now,
+            s_r: p.s_r,
+            island: None,
+            island_privacy: None,
+            sanitized: p.sanitized,
+            reject_reason: Some(reason.clone()),
+            failovers: p.failovers,
+        });
+        Outcome {
+            request_id: p.id,
+            s_r: p.s_r,
+            decision: Decision::Reject { reason },
+            latency_ms: 0.0,
+            cost: 0.0,
+            response: String::new(),
+            sanitized: p.sanitized,
+        }
     }
 
     /// Post-execution bookkeeping shared by the single and batched paths.
@@ -338,7 +591,11 @@ impl Orchestrator {
             island_privacy: Some(p.routed.target_privacy),
             sanitized: p.sanitized,
             reject_reason: None,
+            failovers: p.failovers,
         });
+        if p.failovers > 0 {
+            self.metrics.count("failover_successes", 1);
+        }
         self.ledger.charge(&p.user, cost);
         self.metrics.count("requests_served", 1);
         self.metrics.observe("latency_ms", latency_ms);
@@ -355,22 +612,108 @@ impl Orchestrator {
         }
     }
 
-    fn island_spec(&self, p: &Prepared) -> anyhow::Result<Option<Island>> {
+    /// One execution attempt on the currently routed island. Island-down
+    /// failures (crashed / left / unreachable) are separated from fatal
+    /// errors so the caller can fail over.
+    fn execute_once(&self, p: &Prepared) -> Result<(f64, f64, String), AttemptErr> {
         match &self.backend {
-            Backend::Sim(_) => Ok(None),
-            Backend::Real { islands, .. } => Ok(Some(
-                islands
-                    .iter()
-                    .find(|i| i.id == p.routed.target)
-                    .ok_or_else(|| anyhow::anyhow!("island {} missing", p.routed.target))?
-                    .clone(),
-            )),
+            Backend::Sim(fleet) => match fleet.execute(p.routed.target, &p.request) {
+                Ok(rep) => {
+                    let ack = format!("[sim:{}] ack {} tokens", p.routed.target, p.request.max_new_tokens);
+                    Ok((rep.latency_ms, rep.cost, ack))
+                }
+                Err(e) => Err(AttemptErr::IslandDown(e.to_string())),
+            },
+            Backend::Real { executor: island_executor, islands } => {
+                let Some(island) = islands.iter().find(|i| i.id == p.routed.target).cloned() else {
+                    return Err(AttemptErr::IslandDown(format!("island {} missing", p.routed.target)));
+                };
+                match island_executor.execute(&island, &p.request) {
+                    Ok(resp) => Ok((resp.compute_ms + resp.network_ms, resp.cost, resp.text)),
+                    Err(e) if executor::is_island_down(&e) => Err(AttemptErr::IslandDown(e.to_string())),
+                    Err(e) => Err(AttemptErr::Fatal(e)),
+                }
+            }
+        }
+    }
+
+    /// Failure-aware execution (the tentpole of dynamic membership): when
+    /// the routed island died between routing and execute, mark it offline
+    /// in the liveness view and re-route to the next Pareto candidate, up
+    /// to the configured retry budget. Each hop is recorded in per-island
+    /// failover metrics and lands in the request's single audit entry.
+    fn execute_with_failover(&self, p: &mut Prepared) -> ExecEnd {
+        loop {
+            let down_reason = match self.execute_once(p) {
+                Ok((latency, cost, text)) => return ExecEnd::Done(latency, cost, text),
+                Err(AttemptErr::Fatal(e)) => return ExecEnd::Fatal(e),
+                Err(AttemptErr::IslandDown(reason)) => reason,
+            };
+            // the liveness view learns from the failed execution at once.
+            // Every island-down attempt counts in BOTH the metric and the
+            // request's audit field, so Σ audit.failovers == the `failovers`
+            // counter holds even for budget-exhausted requests.
+            let dead = p.routed.target;
+            self.lighthouse.mark_offline(dead);
+            self.metrics.count("failovers", 1);
+            self.metrics.count(&format!("failover_from_island_{}", dead.0), 1);
+            p.failovers += 1;
+            if p.failovers > self.retry_budget {
+                return ExecEnd::Exhausted {
+                    reason: format!(
+                        "retry budget exhausted after {} failed attempts (last: {down_reason})",
+                        p.failovers
+                    ),
+                };
+            }
+            // re-route over the surviving fleet
+            let (states, local_capacity) = self.routing_view();
+            let pref = self.hysteresis.lock().unwrap().observe(local_capacity);
+            let budget_left = self.ledger.remaining(&p.user, self.budget_ceiling);
+            let decision = self.waves.route(&p.request, p.s_r, &states, local_capacity, pref, budget_left);
+            match decision.routed() {
+                Some(r) => {
+                    p.routed = r.clone();
+                    p.decision = decision.clone();
+                    // a failover hop may cross a trust boundary the first
+                    // island did not — sanitize before retrying.
+                    // sanitize_for_target audits its own failure, so this
+                    // request id must not get a second entry downstream.
+                    if let Err(e) = self.sanitize_for_target(p) {
+                        return ExecEnd::FatalAudited(e);
+                    }
+                }
+                None => {
+                    let why = match &decision {
+                        Decision::Reject { reason } => reason.clone(),
+                        _ => "no candidate".to_string(),
+                    };
+                    return ExecEnd::Exhausted {
+                        reason: format!("failover re-route failed after {} attempts: {why}", p.failovers),
+                    };
+                }
+            }
+        }
+    }
+
+    /// Execute a prepared request through the failure-aware path and settle
+    /// its accounting (no conversation-turn recording — callers own that).
+    fn run_prepared(&self, mut p: Prepared) -> anyhow::Result<Outcome> {
+        match self.execute_with_failover(&mut p) {
+            ExecEnd::Done(latency_ms, cost, raw_response) => Ok(self.finish(p, latency_ms, cost, raw_response)),
+            ExecEnd::Exhausted { reason } => Ok(self.finish_exhausted(p, reason)),
+            ExecEnd::Fatal(e) => {
+                self.audit_execution_failure(&p, &e);
+                Err(e)
+            }
+            ExecEnd::FatalAudited(e) => Err(e),
         }
     }
 
     /// Submit one prompt within a session (Fig. 2 pipeline). Returns Err
     /// for rate-limited submissions, Ok(Outcome) otherwise — including
-    /// fail-closed rejections, which are Outcomes with a Reject decision.
+    /// fail-closed rejections, which are Outcomes with a Reject decision
+    /// (routing rejects and exhausted failover retries alike).
     pub fn submit(
         &self,
         session_id: u64,
@@ -383,34 +726,12 @@ impl Orchestrator {
             Ok(p) => p,
         };
 
-        // Execute
-        let exec: anyhow::Result<(f64, f64, String)> = match &self.backend {
-            Backend::Sim(fleet) => match fleet.execute(prepared.routed.target, &prepared.request) {
-                None => Err(anyhow::anyhow!("island {} missing", prepared.routed.target)),
-                Some(rep) => {
-                    let ack =
-                        format!("[sim:{}] ack {} tokens", prepared.routed.target, prepared.request.max_new_tokens);
-                    Ok((rep.latency_ms, rep.cost, ack))
-                }
-            },
-            Backend::Real { executor, .. } => (|| {
-                let island = self.island_spec(&prepared)?.expect("real backend has specs");
-                let resp = executor.execute(&island, &prepared.request)?;
-                Ok((resp.compute_ms + resp.network_ms, resp.cost, resp.text))
-            })(),
-        };
-        let (latency_ms, cost, raw_response) = match exec {
-            Ok(x) => x,
-            Err(e) => {
-                self.audit_execution_failure(&prepared, &e);
-                return Err(e);
-            }
-        };
-
-        let target_privacy = prepared.routed.target_privacy;
-        let outcome = self.finish(prepared, latency_ms, cost, raw_response);
-        // record the turn against the island it actually ran on
-        let _ = self.sessions.with_mut(session_id, |s| s.record_turn(prompt, &outcome.response, target_privacy));
+        let outcome = self.run_prepared(prepared)?;
+        // record the turn against the island it actually ran on (failover
+        // hops update the decision, so this is the final island)
+        if let Some(r) = outcome.decision.routed() {
+            let _ = self.sessions.with_mut(session_id, |s| s.record_turn(prompt, &outcome.response, r.target_privacy));
+        }
         Ok(outcome)
     }
 
@@ -455,56 +776,56 @@ impl Orchestrator {
             by_island[pos].1.push((idx, prepared));
         }
 
-        for (_, mut batcher) in by_island {
+        for (island_id, mut batcher) in by_island {
             while !batcher.is_empty() {
                 let group = batcher.take_batch();
                 self.metrics.observe("batch_group_size", group.len() as f64);
                 match &self.backend {
-                    Backend::Sim(fleet) => {
+                    Backend::Sim(_) => {
+                        // the sim executes per request; co-routed grouping
+                        // only exercises the batching policy. Each item gets
+                        // the full failure-aware path, so a group routed to
+                        // an island that crashed mid-batch fails over
+                        // per-item instead of erroring out wholesale.
                         for (idx, prepared) in group {
-                            let result = match fleet.execute(prepared.routed.target, &prepared.request) {
-                                None => {
-                                    let e = anyhow::anyhow!("island {} missing", prepared.routed.target);
-                                    self.audit_execution_failure(&prepared, &e);
-                                    Err(e)
-                                }
-                                Some(rep) => {
-                                    let ack = format!(
-                                        "[sim:{}] ack {} tokens",
-                                        prepared.routed.target, prepared.request.max_new_tokens
-                                    );
-                                    Ok(self.finish(prepared, rep.latency_ms, rep.cost, ack))
-                                }
-                            };
-                            results[idx] = Some(result);
+                            results[idx] = Some(self.run_prepared(prepared));
                         }
                     }
-                    Backend::Real { executor, .. } => {
-                        let island = match self.island_spec(&group[0].1) {
-                            Ok(spec) => spec.expect("real backend has specs"),
-                            Err(e) => {
-                                for (idx, prepared) in group {
-                                    let err = anyhow::anyhow!("{e}");
-                                    self.audit_execution_failure(&prepared, &err);
-                                    results[idx] = Some(Err(err));
+                    Backend::Real { executor: island_executor, islands } => {
+                        let spec = islands.iter().find(|i| i.id == island_id).cloned();
+                        let batch = spec.and_then(|island| {
+                            let requests: Vec<Request> = group.iter().map(|(_, p)| p.request.clone()).collect();
+                            match island_executor.execute_batch(&island, &requests) {
+                                Ok(responses) => Some(responses),
+                                // batch-level failure (island gone or link
+                                // dead): fall through to per-item failover
+                                Err(e) if executor::is_island_down(&e) => None,
+                                Err(e) => {
+                                    let msg = e.to_string();
+                                    for (idx, prepared) in group.iter() {
+                                        let err = anyhow::anyhow!("batch execute failed: {msg}");
+                                        self.audit_execution_failure(prepared, &err);
+                                        results[*idx] = Some(Err(err));
+                                    }
+                                    None
                                 }
-                                continue;
                             }
-                        };
-                        let requests: Vec<Request> = group.iter().map(|(_, p)| p.request.clone()).collect();
-                        match executor.execute_batch(&island, &requests) {
-                            Ok(responses) => {
+                        });
+                        // a fatal batch error already filled `results`
+                        let fatal = group.iter().any(|(idx, _)| results[*idx].is_some());
+                        if fatal {
+                            continue;
+                        }
+                        match batch {
+                            Some(responses) => {
                                 for ((idx, prepared), resp) in group.into_iter().zip(responses) {
                                     let latency = resp.compute_ms + resp.network_ms;
                                     results[idx] = Some(Ok(self.finish(prepared, latency, resp.cost, resp.text)));
                                 }
                             }
-                            Err(e) => {
-                                let msg = e.to_string();
+                            None => {
                                 for (idx, prepared) in group {
-                                    let err = anyhow::anyhow!("batch execute failed: {msg}");
-                                    self.audit_execution_failure(&prepared, &err);
-                                    results[idx] = Some(Err(err));
+                                    results[idx] = Some(self.run_prepared(prepared));
                                 }
                             }
                         }
@@ -560,7 +881,7 @@ mod tests {
         // turn 1: sensitive, runs locally
         o.submit(s, "patient john doe has diabetes", PriorityTier::Primary, None).unwrap();
         // saturate local islands so the next burstable turn offloads
-        for island in o.fleet().unwrap().islands.iter() {
+        for island in o.fleet().unwrap().islands().iter() {
             if !island.spec.unbounded() {
                 island.set_external_load(0.99);
             }
@@ -577,9 +898,9 @@ mod tests {
 
     #[test]
     fn rejection_is_fail_closed_not_error() {
-        let mut o = sim_orchestrator();
+        let o = sim_orchestrator();
         // remove all personal islands: sensitive requests unroutable
-        o.fleet_mut().unwrap().islands.retain(|i| i.spec.privacy < 0.9);
+        o.fleet().unwrap().retain(|i| i.privacy < 0.9);
         let s = o.open_session("bob");
         let out = o.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
         assert!(matches!(out.decision, Decision::Reject { .. }));
@@ -608,7 +929,7 @@ mod tests {
         let o = sim_orchestrator();
         let s = o.open_session("carol");
         // saturate local → burstable goes to cloud and pays
-        for island in o.fleet().unwrap().islands.iter() {
+        for island in o.fleet().unwrap().islands().iter() {
             if !island.spec.unbounded() {
                 island.set_external_load(0.99);
             }
@@ -620,7 +941,7 @@ mod tests {
 
     #[test]
     fn audit_log_records_every_decision() {
-        let mut o = sim_orchestrator();
+        let o = sim_orchestrator();
         let s = o.open_session("auditor");
         o.submit(s, "hello world", PriorityTier::Secondary, None).unwrap();
         o.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
@@ -628,7 +949,7 @@ mod tests {
         // compliance scan over the trail: no entry with s_r>=0.9 ran below P=0.9
         assert!(o.audit.violations(0.9, 0.9).is_empty());
         // rejections are audited too
-        o.fleet_mut().unwrap().islands.retain(|i| i.spec.privacy < 0.9);
+        o.fleet().unwrap().retain(|i| i.privacy < 0.9);
         let out = o.submit(s, "patient jane smith mrn 12345", PriorityTier::Primary, None).unwrap();
         assert!(matches!(out.decision, Decision::Reject { .. }));
         assert_eq!(o.audit.len(), 3);
@@ -671,6 +992,103 @@ mod tests {
         all.dedup();
         assert_eq!(all.len(), 100, "request ids must be unique across threads");
         assert_eq!(o.audit.len(), 100);
+    }
+
+    #[test]
+    fn churn_helpers_update_fleet_and_liveness_together() {
+        let o = sim_orchestrator();
+        assert!(o.crash_island(IslandId(1)));
+        assert!(!o.lighthouse.is_online(IslandId(1)));
+        assert!(!o.fleet().unwrap().get(IslandId(1)).unwrap().is_online());
+        assert!(o.revive_island(IslandId(1)));
+        assert!(o.lighthouse.is_online(IslandId(1)));
+        let left = o.leave_island(IslandId(2)).expect("island 2 leaves");
+        assert!(o.fleet().unwrap().get(IslandId(2)).is_none());
+        assert!(!o.lighthouse.is_online(IslandId(2)));
+        assert!(o.join_island(left));
+        assert!(o.fleet().unwrap().get(IslandId(2)).is_some());
+        assert!(o.lighthouse.is_online(IslandId(2)));
+        assert!(!o.crash_island(IslandId(99)), "unknown island");
+        assert_eq!(o.metrics.counter_value("island_crashes"), 1);
+        assert_eq!(o.metrics.counter_value("island_joins"), 1);
+    }
+
+    #[test]
+    fn announced_crash_is_never_routed() {
+        let o = sim_orchestrator();
+        let s = o.open_session("erin");
+        o.crash_island(IslandId(0));
+        for _ in 0..20 {
+            let out = o.submit(s, "hello world", PriorityTier::Secondary, None).unwrap();
+            assert_ne!(out.decision.target(), Some(IslandId(0)), "routed to a crashed island");
+            o.advance(100.0);
+        }
+        assert!(!o.audit.entries().iter().any(|e| e.island == Some(IslandId(0))));
+        // after revival it is a candidate again
+        o.revive_island(IslandId(0));
+        assert!(o.lighthouse.is_online(IslandId(0)));
+    }
+
+    #[test]
+    fn silent_crash_fails_over_to_surviving_island_and_audits() {
+        let mut cfg = Config::default();
+        cfg.failover_retry_budget = 8;
+        cfg.rate_limit_rps = 1e9;
+        let fleet = Fleet::new(preset_personal_group(), 9);
+        let o = Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 9);
+        let fleet = o.fleet().unwrap();
+        // all privacy-eligible islands are saturated (capacity 0, so routing
+        // lands in the failsafe) and all but one die *silently* — the
+        // liveness view has no idea until executions start failing
+        let personal: Vec<IslandId> = fleet.specs().iter().filter(|i| i.privacy >= 0.95).map(|i| i.id).collect();
+        assert!(personal.len() >= 2, "preset needs >= 2 personal islands");
+        let survivor = personal[0];
+        for id in &personal {
+            fleet.get(*id).unwrap().set_external_load(1.0);
+            if *id != survivor {
+                fleet.crash(*id);
+            }
+        }
+        let s = o.open_session("alice");
+        let out = o.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
+        assert_eq!(out.decision.target(), Some(survivor), "{:?}", out.decision);
+        // exactly one audit entry carrying the failover trail
+        assert_eq!(o.audit.len(), 1);
+        let entry = o.audit.entries().pop().unwrap();
+        assert_eq!(entry.island, Some(survivor));
+        assert!(entry.failovers >= 1, "expected failovers recorded, got {entry:?}");
+        assert!(o.metrics.counter_value("failovers") >= 1);
+        assert_eq!(o.metrics.counter_value("failover_successes"), 1);
+        // the dead islands were marked offline in the liveness view
+        assert!(personal.iter().filter(|id| **id != survivor).any(|id| !o.lighthouse.is_online(*id)));
+    }
+
+    #[test]
+    fn exhausted_retries_reject_with_single_audit_entry() {
+        let mut cfg = Config::default();
+        cfg.failover_retry_budget = 1;
+        cfg.rate_limit_rps = 1e9;
+        let fleet = Fleet::new(preset_personal_group(), 10);
+        let o = Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 10);
+        let fleet = o.fleet().unwrap();
+        // every privacy-eligible island dies silently
+        for spec in fleet.specs() {
+            if spec.privacy >= 0.95 {
+                fleet.crash(spec.id);
+            }
+        }
+        let s = o.open_session("bob");
+        let out = o.submit(s, "patient jane roe ssn 987-65-4321", PriorityTier::Primary, None).unwrap();
+        assert!(matches!(out.decision, Decision::Reject { .. }), "{:?}", out.decision);
+        assert_eq!(out.cost, 0.0);
+        assert_eq!(o.ledger.total(), 0.0, "no charge for a request that never ran");
+        assert_eq!(o.audit.len(), 1, "exactly one audit entry for the exhausted request");
+        let entry = o.audit.entries().pop().unwrap();
+        assert!(entry.island.is_none());
+        let reason = entry.reject_reason.as_deref().unwrap_or("");
+        assert!(reason.contains("retry budget") || reason.contains("failover"), "{reason}");
+        assert!(entry.failovers >= 1, "{entry:?}");
+        assert_eq!(o.metrics.counter_value("rejected_failover_exhausted"), 1);
     }
 
     #[test]

@@ -24,6 +24,13 @@ impl AtomicF64 {
         self.bits.store(value.to_bits(), Ordering::SeqCst);
     }
 
+    /// Atomically replace `current` with `new` iff the cell still holds
+    /// `current` (bitwise comparison). Returns true on success — the caller
+    /// won the exchange; racing callers observing the same `current` lose.
+    pub fn compare_exchange(&self, current: f64, new: f64) -> bool {
+        self.bits.compare_exchange(current.to_bits(), new.to_bits(), Ordering::SeqCst, Ordering::SeqCst).is_ok()
+    }
+
     /// Atomically add `delta`, returning the previous value.
     pub fn fetch_add(&self, delta: f64) -> f64 {
         let mut current = self.bits.load(Ordering::SeqCst);
@@ -76,5 +83,17 @@ mod tests {
         let a = AtomicF64::new(1.0);
         assert_eq!(a.fetch_add(2.0), 1.0);
         assert_eq!(a.load(), 3.0);
+    }
+
+    #[test]
+    fn compare_exchange_single_winner() {
+        let a = AtomicF64::new(1.0);
+        assert!(a.compare_exchange(1.0, 2.0));
+        assert!(!a.compare_exchange(1.0, 3.0), "stale current must lose");
+        assert_eq!(a.load(), 2.0);
+        // works for the NEG_INFINITY sentinel too (bitwise compare)
+        let b = AtomicF64::new(f64::NEG_INFINITY);
+        assert!(b.compare_exchange(f64::NEG_INFINITY, 0.0));
+        assert_eq!(b.load(), 0.0);
     }
 }

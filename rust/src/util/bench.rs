@@ -62,6 +62,28 @@ pub fn report(title: &str, results: &[BenchResult]) {
     t.print();
 }
 
+/// Write a bench's result rows as a JSON artifact when the
+/// `ISLANDRUN_BENCH_JSON` env var names a path (the CI bench-smoke job sets
+/// it and uploads the file, seeding the bench trajectory). Rows are
+/// `(key, value)` pairs per result; the file holds
+/// `{"bench": name, "results": [{...}, ...]}`.
+pub fn write_json_artifact(bench_name: &str, rows: &[Vec<(String, f64)>]) {
+    let Ok(path) = std::env::var("ISLANDRUN_BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    use crate::config::json::Json;
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|row| Json::obj(row.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect()))
+        .collect();
+    let doc = Json::obj(vec![("bench", Json::str(bench_name)), ("results", Json::Arr(results))]);
+    match std::fs::write(&path, doc.to_string()) {
+        Ok(()) => println!("\nwrote bench artifact: {path}"),
+        Err(e) => eprintln!("\nfailed to write bench artifact {path}: {e}"),
+    }
+}
+
 /// Human-readable microseconds.
 pub fn fmt_us(us: f64) -> String {
     if us < 1000.0 {
@@ -90,6 +112,22 @@ mod tests {
         assert!(r.mean_us > 0.0);
         assert!(r.p99_us >= r.p50_us);
         assert!(r.throughput_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn json_artifact_round_trips() {
+        let path = std::env::temp_dir().join("islandrun_bench_artifact_test.json");
+        std::env::set_var("ISLANDRUN_BENCH_JSON", &path);
+        write_json_artifact(
+            "unit",
+            &[vec![("threads".to_string(), 4.0), ("req_per_s".to_string(), 123.5)]],
+        );
+        std::env::remove_var("ISLANDRUN_BENCH_JSON");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::config::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("unit"));
+        assert_eq!(j.get("results").idx(0).get("threads").as_i64(), Some(4));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

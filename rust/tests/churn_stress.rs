@@ -1,0 +1,168 @@
+//! Churn stress: islands crash / revive / leave / rejoin while 16 threads
+//! submit through `Arc<Orchestrator>`.
+//!
+//! Pins the dynamic-membership invariants that must hold under contention,
+//! independent of interleaving:
+//! - no request is silently lost: every admitted request ends in exactly
+//!   one audit entry — success, failover-success, or exhausted-retries
+//!   reject — and `submit` never errors because of churn,
+//! - request ids stay globally unique,
+//! - the cost ledger equals the sum of per-outcome costs (per user and
+//!   global): dead islands never charge,
+//! - failover accounting is consistent: the `failovers` metric equals the
+//!   sum of per-entry failover counts, and per-island failover counters sum
+//!   to the same total,
+//! - no outcome claims an island that was never part of the mesh.
+//!
+//! Thread count is overridable via `ISLANDRUN_STRESS_THREADS` so the CI
+//! release-mode stress job can push harder than the debug test job.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use islandrun::agents::mist::Mist;
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::eval::loadgen::{run_closed_loop_churn, Churn};
+use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator};
+use islandrun::types::IslandId;
+
+const PER_THREAD: usize = 60;
+
+fn threads() -> usize {
+    std::env::var("ISLANDRUN_STRESS_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(16)
+}
+
+fn stress_orchestrator(seed: u64) -> Arc<Orchestrator> {
+    let mut cfg = Config::default();
+    // the stress test exercises the pipeline under churn, not admission
+    // policy: a saturating rate limit or budget would turn submissions away
+    // and hide the invariants under test
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    let fleet = Fleet::new(preset_personal_group(), seed);
+    Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), seed))
+}
+
+#[test]
+fn churn_under_load_loses_no_request() {
+    let threads = threads();
+    let orch = stress_orchestrator(303);
+    let churn = Churn { crash_prob: 0.35, revive_prob: 0.5, leave_prob: 0.08, step_ms: 1, announced_fraction: 0.5 };
+    let (report, churn_stats) = run_closed_loop_churn(&orch, threads, PER_THREAD, 7, Some(churn));
+    let total = threads * PER_THREAD;
+
+    // churn must never surface as submit errors: with the limiter and
+    // budget out of the way, every submission comes back as an Outcome
+    // (served, fail-closed reject, or exhausted-retries reject)
+    assert_eq!(report.errors, 0, "churn leaked as submit errors");
+    assert_eq!(report.outcomes.len(), total);
+    assert_eq!(report.served() + report.rejected(), total);
+
+    // the run actually churned (step 1ms over a multi-hundred-request run)
+    assert!(churn_stats.crashes > 0, "churn driver never crashed an island: {churn_stats:?}");
+
+    // 1. request ids unique under contention + churn
+    let mut ids: Vec<u64> = report.outcomes.iter().map(|o| o.request_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), total, "request ids must be unique");
+
+    // 2. exactly one audit entry per admitted request, ids matching
+    assert_eq!(orch.audit.len(), total, "audit trail must have exactly one entry per request");
+    let mut audit_ids: Vec<u64> = orch.audit.entries().iter().map(|e| e.request_id).collect();
+    audit_ids.sort_unstable();
+    audit_ids.dedup();
+    assert_eq!(audit_ids, ids, "audit trail must cover exactly the submitted ids");
+
+    // 3. every outcome is in exactly one bucket, and the audit entry agrees
+    let entries: HashMap<u64, _> = orch.audit.entries().into_iter().map(|e| (e.request_id, e)).collect();
+    for out in &report.outcomes {
+        let e = &entries[&out.request_id];
+        match out.decision.target() {
+            Some(island) => {
+                assert_eq!(e.island, Some(island), "audit island mismatch for {}", out.request_id);
+                assert!(e.reject_reason.is_none());
+            }
+            None => {
+                assert!(e.island.is_none());
+                assert!(e.reject_reason.is_some(), "reject without reason for {}", out.request_id);
+                assert_eq!(out.cost, 0.0, "rejected request was charged");
+            }
+        }
+    }
+
+    // 4. ledger equals Σ costs, per user and global — dead islands never
+    // charge and failed attempts are free
+    let expected_total: f64 = report.outcomes.iter().map(|o| o.cost).sum();
+    let tolerance = 1e-9 * (1.0 + expected_total.abs());
+    assert!(
+        (orch.ledger.total() - expected_total).abs() < tolerance,
+        "ledger total {} != outcome sum {}",
+        orch.ledger.total(),
+        expected_total
+    );
+    for t in 0..threads {
+        let user = format!("loadgen-{t}");
+        let expected_user: f64 = report
+            .outcomes
+            .iter()
+            .filter(|o| entries.get(&o.request_id).map(|e| e.user == user).unwrap_or(false))
+            .map(|o| o.cost)
+            .sum();
+        assert!(
+            (orch.ledger.spent(&user) - expected_user).abs() < tolerance,
+            "user {user}: ledger {} != outcome sum {}",
+            orch.ledger.spent(&user),
+            expected_user
+        );
+    }
+
+    // 5. failover accounting is internally consistent
+    let failovers_metric = orch.metrics.counter_value("failovers");
+    assert_eq!(orch.audit.total_failovers(), failovers_metric, "audit failovers != failovers metric");
+    let per_island: u64 = preset_personal_group()
+        .iter()
+        .map(|i| orch.metrics.counter_value(&format!("failover_from_island_{}", i.id.0)))
+        .sum();
+    assert_eq!(per_island, failovers_metric, "per-island failover counters must sum to the total");
+
+    // 6. no outcome claims an island outside the original mesh
+    let known: Vec<IslandId> = preset_personal_group().iter().map(|i| i.id).collect();
+    for e in entries.values() {
+        if let Some(island) = e.island {
+            assert!(known.contains(&island), "unknown island {island:?} in audit trail");
+        }
+    }
+
+    // 7. the trail stays compliance-clean even under churn: failover hops
+    // never land sensitive requests on low-privacy islands
+    assert!(orch.audit.violations(0.9, 0.9).is_empty(), "privacy constraint violated under churn");
+}
+
+#[test]
+fn harsh_churn_with_slow_revival_still_accounts_everything() {
+    // islands die fast and come back slowly: a large fraction of requests
+    // must take the reject path, and accounting still balances
+    let orch = stress_orchestrator(404);
+    let churn = Churn { crash_prob: 0.6, revive_prob: 0.2, leave_prob: 0.0, step_ms: 1, announced_fraction: 0.0 };
+    let (report, _) = run_closed_loop_churn(&orch, 8, 40, 11, Some(churn));
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.outcomes.len(), 320);
+    assert_eq!(orch.audit.len(), 320);
+    let expected: f64 = report.outcomes.iter().map(|o| o.cost).sum();
+    assert!((orch.ledger.total() - expected).abs() < 1e-9 * (1.0 + expected.abs()));
+}
+
+#[test]
+fn churn_run_is_repeatable() {
+    // same seeds → same id-set sizes and audit cardinality (interleavings
+    // and churn timing differ; the invariants do not)
+    for _ in 0..2 {
+        let orch = stress_orchestrator(505);
+        let (report, _) = run_closed_loop_churn(&orch, 8, 30, 13, Some(Churn::default()));
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.outcomes.len(), 240);
+        assert_eq!(orch.audit.len(), 240);
+    }
+}

@@ -6,6 +6,10 @@
 //! - the audit log holds exactly one entry per admitted submission,
 //! - ledger totals equal the sum of per-request costs (per user and global),
 //! - the metrics counters partition admitted work into served + rejected.
+//!
+//! Thread count is overridable via `ISLANDRUN_STRESS_THREADS` so the CI
+//! release-mode stress job can push harder than the debug test job (liveness
+//! races sometimes only reproduce under optimized timing).
 
 use std::sync::Arc;
 
@@ -15,8 +19,11 @@ use islandrun::eval::loadgen::run_closed_loop;
 use islandrun::islands::Fleet;
 use islandrun::server::{Backend, Orchestrator};
 
-const THREADS: usize = 16;
 const PER_THREAD: usize = 100;
+
+fn threads() -> usize {
+    std::env::var("ISLANDRUN_STRESS_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(16)
+}
 
 fn stress_orchestrator(seed: u64) -> Arc<Orchestrator> {
     let mut cfg = Config::default();
@@ -31,9 +38,10 @@ fn stress_orchestrator(seed: u64) -> Arc<Orchestrator> {
 
 #[test]
 fn sixteen_threads_hundred_requests_invariants() {
+    let threads = threads();
     let orch = stress_orchestrator(101);
-    let report = run_closed_loop(&orch, THREADS, PER_THREAD, 3);
-    let total = THREADS * PER_THREAD;
+    let report = run_closed_loop(&orch, threads, PER_THREAD, 3);
+    let total = threads * PER_THREAD;
 
     // nothing refused: with the limiter and budget out of the way every
     // submission must come back as an Outcome
@@ -64,7 +72,7 @@ fn sixteen_threads_hundred_requests_invariants() {
     );
     let user_of: std::collections::HashMap<u64, String> =
         orch.audit.entries().into_iter().map(|e| (e.request_id, e.user)).collect();
-    for t in 0..THREADS {
+    for t in 0..threads {
         let user = format!("loadgen-{t}");
         let expected_user: f64 = report
             .outcomes

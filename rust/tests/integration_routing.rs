@@ -19,14 +19,14 @@ fn states_at(cap: f64) -> Vec<IslandState> {
         .into_iter()
         .map(|island| {
             let c = if island.unbounded() { 1.0 } else { cap };
-            IslandState { island, capacity: c }
+            IslandState { island, capacity: c, online: true, degraded: false }
         })
         .collect()
 }
 
 #[test]
 fn lighthouse_feeds_waves_only_online_islands() {
-    let mut lh = Lighthouse::new(1, 500.0, 3);
+    let lh = Lighthouse::new(1, 500.0, 3);
     for i in preset_personal_group() {
         lh.register_owned(i, 0.0);
     }
@@ -39,7 +39,7 @@ fn lighthouse_feeds_waves_only_online_islands() {
     assert_eq!(islands.len(), 5);
     let waves = Waves::new(Config::default());
     let states: Vec<IslandState> =
-        islands.into_iter().map(|island| IslandState { island, capacity: 1.0 }).collect();
+        islands.into_iter().map(|island| IslandState { island, capacity: 1.0, online: true, degraded: false }).collect();
     // a burstable low-sensitivity request cannot use (offline) cloud;
     // it must still route somewhere live
     let r = Request::new(1, "what is jax").with_priority(PriorityTier::Burstable);
@@ -173,7 +173,7 @@ fn cost_ordering_matches_paper_expectation() {
 fn policy_decision_enum_is_total() {
     // every policy returns a decision for every input (no panics) even on
     // a degenerate single-island mesh
-    let single = vec![IslandState { island: preset_personal_group().remove(0), capacity: 1.0 }];
+    let single = vec![IslandState { island: preset_personal_group().remove(0), capacity: 1.0, online: true, degraded: false }];
     let r = Request::new(1, "q");
     for mut p in all_policies(&Config::default()) {
         let _ = p.route(&r, 0.5, &single, 1.0);

@@ -54,7 +54,7 @@ fn prop_router_never_violates_privacy_constraint() {
         |rng, size| {
             let n = 1 + rng.below(size.max(1).min(16));
             let states: Vec<IslandState> = (0..n)
-                .map(|i| IslandState { island: random_island(rng, i as u32), capacity: rng.f64() })
+                .map(|i| IslandState { island: random_island(rng, i as u32), capacity: rng.f64(), online: true, degraded: false })
                 .collect();
             let s_r = *rng.pick(&[0.2, 0.3, 0.5, 0.8, 0.9, 1.0]);
             let priority = *rng.pick(&[PriorityTier::Primary, PriorityTier::Secondary, PriorityTier::Burstable]);
@@ -88,7 +88,7 @@ fn prop_router_deterministic() {
         |rng, size| {
             let n = 1 + rng.below(size.max(1).min(12));
             let states: Vec<IslandState> =
-                (0..n).map(|i| IslandState { island: random_island(rng, i as u32), capacity: rng.f64() }).collect();
+                (0..n).map(|i| IslandState { island: random_island(rng, i as u32), capacity: rng.f64(), online: true, degraded: false }).collect();
             (states, rng.f64())
         },
         |(states, lc)| {
