@@ -62,13 +62,7 @@ fn main() -> anyhow::Result<()> {
     println!("  turn 1 (PHI): s_r={:.2} -> {:?}, sanitized={}", turn1.s_r, turn1.decision.target(), turn1.sanitized);
 
     // saturate the clinic + edge so the general follow-up must use cloud
-    if let Some(fleet) = orch.fleet() {
-        for island in fleet.islands().iter() {
-            if !island.spec.unbounded() {
-                island.set_external_load(0.99);
-            }
-        }
-    }
+    orch.saturate_bounded_islands(0.99);
     let turn2 = orch.submit(s, "what lifestyle changes are usually recommended", PriorityTier::Burstable, None)?;
     let island = islands.iter().find(|i| Some(i.id) == turn2.decision.target()).unwrap();
     println!(

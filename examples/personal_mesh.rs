@@ -68,8 +68,8 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     // the low-battery phone must not serve while a charged peer exists
-    let served_on_a = orch2.fleet().unwrap().get(IslandId(0)).unwrap().executed();
-    let served_on_b = orch2.fleet().unwrap().get(IslandId(1)).unwrap().executed();
+    let served_on_a = orch2.island_snapshot(IslandId(0)).unwrap().executed;
+    let served_on_b = orch2.island_snapshot(IslandId(1)).unwrap().executed;
     println!("phone-a executed {served_on_a}, phone-b executed {served_on_b}");
     assert!(served_on_b > served_on_a, "battery-aware rebalancing must favor friend B");
 

@@ -52,11 +52,10 @@ fn main() {
         let orch = orchestrator(1000 + phase as u64);
         // silently crash the first ceil(down_rate * n) islands: the
         // liveness view must *discover* each death mid-run
-        let fleet = orch.fleet().unwrap();
-        let specs = fleet.specs();
-        let down_count = (down_rate * specs.len() as f64).ceil() as usize;
-        for spec in specs.iter().take(down_count) {
-            fleet.crash(spec.id);
+        let ids = orch.island_ids();
+        let down_count = (down_rate * ids.len() as f64).ceil() as usize;
+        for id in ids.iter().take(down_count) {
+            orch.silent_crash_island(*id);
         }
         let report = run_closed_loop(&orch, THREADS, total / THREADS, 7);
         assert_eq!(report.outcomes.len() + report.errors, report.attempted, "lost submissions");

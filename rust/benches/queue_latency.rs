@@ -1,0 +1,134 @@
+//! Queue-path latency: enqueue→resolve wall time through the admission
+//! queue + worker pool (Sim backend) at 1, 4 and 16 producers.
+//!
+//! Each producer runs a closed loop over the non-blocking surface: enqueue
+//! one request, wait its Ticket, record the elapsed wall time, repeat. That
+//! measures the full lifecycle overhead a caller of `enqueue` observes —
+//! admission, queue wait, routing, coalesced execution and ticket
+//! resolution — under increasing producer concurrency against a fixed
+//! 4-thread worker pool.
+//!
+//! CI hooks: `ISLANDRUN_BENCH_REQUESTS` overrides the total request count
+//! (the bench-smoke job uses a short run) and `ISLANDRUN_BENCH_JSON=<path>`
+//! writes the measured rows as a JSON artifact (uploaded as
+//! `BENCH_queue.json`).
+
+use std::sync::Arc;
+
+use islandrun::agents::mist::Mist;
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::eval::loadgen::class_for;
+use islandrun::islands::Fleet;
+use islandrun::runtime::BatchPolicy;
+use islandrun::server::{Backend, Orchestrator, SubmitRequest};
+use islandrun::substrate::trace::{priority_for, prompt_for};
+use islandrun::util::bench::write_json_artifact;
+use islandrun::util::{stats, Rng, Table};
+
+fn total_requests() -> usize {
+    std::env::var("ISLANDRUN_BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4000)
+}
+
+fn orchestrator(seed: u64) -> Arc<Orchestrator> {
+    let mut cfg = Config::default();
+    // the bench measures lifecycle latency, not admission policy
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    cfg.serve_workers = 4;
+    let fleet = Fleet::new(preset_personal_group(), seed);
+    let orch = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), seed));
+    // zero batch linger: measure queue + pipeline overhead, not the
+    // deliberate latency-for-occupancy wait of the default policy
+    orch.set_batch_policy(BatchPolicy { max_batch: 8, max_wait: std::time::Duration::ZERO });
+    orch
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let total = total_requests();
+    println!("queue_latency — enqueue→resolve via the admission queue (Sim), {cores} cores, {total} requests\n");
+
+    let mut t = Table::new(
+        "queue_latency — enqueue→resolve wall time vs producer count (4 workers)",
+        &["producers", "req/s", "p50 ms", "p99 ms", "served", "rejected", "errors"],
+    );
+    let mut json_rows = Vec::new();
+    for &producers in &[1usize, 4, 16] {
+        let orch = orchestrator(900 + producers as u64);
+        Arc::clone(&orch).start_queue();
+        let per = (total / producers).max(1);
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let orch = Arc::clone(&orch);
+                std::thread::spawn(move || {
+                    let session = orch.open_session(&format!("qbench-{p}"));
+                    let mut rng = Rng::new(41 ^ (p as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    let mut samples = Vec::with_capacity(per);
+                    let mut served = 0usize;
+                    let mut rejected = 0usize;
+                    let mut errors = 0usize;
+                    for i in 0..per {
+                        let class = class_for(i);
+                        let submit = SubmitRequest::new(prompt_for(class, &mut rng))
+                            .priority(priority_for(class))
+                            .deadline_ms(1e12);
+                        let start = std::time::Instant::now();
+                        let ticket = orch.enqueue(session, submit);
+                        match ticket.wait() {
+                            Ok(out) => {
+                                samples.push(start.elapsed().as_secs_f64() * 1e3);
+                                if out.decision.target().is_some() {
+                                    served += 1;
+                                } else {
+                                    rejected += 1;
+                                }
+                            }
+                            Err(_) => errors += 1,
+                        }
+                        orch.advance(5.0);
+                    }
+                    (samples, served, rejected, errors)
+                })
+            })
+            .collect();
+        let mut samples = Vec::with_capacity(producers * per);
+        let (mut served, mut rejected, mut errors) = (0usize, 0usize, 0usize);
+        for h in handles {
+            let (s, sv, rj, er) = h.join().unwrap();
+            samples.extend(s);
+            served += sv;
+            rejected += rj;
+            errors += er;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let attempted = producers * per;
+        assert_eq!(served + rejected + errors, attempted, "lost tickets");
+        assert_eq!(errors, 0, "no ticket may resolve with an error");
+        assert_eq!(orch.audit.len(), attempted, "audit trail must cover every enqueued request");
+        assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+
+        let rate = attempted as f64 / wall.max(1e-9);
+        let p50 = stats::percentile(&samples, 0.5);
+        let p99 = stats::percentile(&samples, 0.99);
+        t.row(&[
+            producers.to_string(),
+            format!("{rate:.0}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+            served.to_string(),
+            rejected.to_string(),
+            errors.to_string(),
+        ]);
+        json_rows.push(vec![
+            ("producers".to_string(), producers as f64),
+            ("req_per_s".to_string(), rate),
+            ("p50_ms".to_string(), p50),
+            ("p99_ms".to_string(), p99),
+            ("served".to_string(), served as f64),
+            ("rejected".to_string(), rejected as f64),
+        ]);
+    }
+    t.print();
+    write_json_artifact("queue", &json_rows);
+}

@@ -211,17 +211,26 @@ impl Waves {
                     let cap_ok = s.island.unbounded() || s.capacity > self.config.buffer.buffer();
                     let battery_ok = s.island.battery.map(|b| b > BATTERY_FLOOR).unwrap_or(true);
                     let budget_ok = s.island.request_cost(tokens) <= budget_left;
-                    cap_ok && battery_ok && budget_ok
+                    // deadline feasibility (Def. 2 d_r): an island whose
+                    // declared base RTT already exceeds the latency budget
+                    // cannot possibly meet it, whatever its score. Soft
+                    // overall — if no island anywhere satisfies it, the
+                    // Alg. 1 failsafe still queues (served late beats lost).
+                    let deadline_ok = s.island.latency_ms <= request.deadline_ms;
+                    cap_ok && battery_ok && budget_ok && deadline_ok
                 })
                 .collect();
             // battery relaxation: if the floor filtered everything, allow
-            // low-battery islands rather than failing (privacy first).
+            // low-battery islands rather than failing (privacy first). The
+            // deadline stays enforced here so a too-slow primary set falls
+            // through to the fallback set (which may hold faster islands).
             if feasible.is_empty() {
                 feasible = set
                     .iter()
                     .filter(|s| {
                         (s.island.unbounded() || s.capacity > self.config.buffer.buffer())
                             && s.island.request_cost(tokens) <= budget_left
+                            && s.island.latency_ms <= request.deadline_ms
                     })
                     .collect();
             }
@@ -616,6 +625,31 @@ mod tests {
         }
         let d2 = w.route(&r, 0.9, &st, 0.0, Preference::Local, f64::INFINITY);
         assert!(d2.target().is_some(), "all-degraded must queue, not reject: {d2:?}");
+    }
+
+    #[test]
+    fn deadline_excludes_high_rtt_islands_softly() {
+        let w = waves();
+        // burstable under pressure with the private edge saturated normally
+        // offloads to cloud (180/220 ms base RTT); a 150 ms latency budget
+        // must keep it off those islands
+        let mut st = states(0.3);
+        st[4].capacity = 0.0; // private edge saturated → infeasible
+        let r = Request::new(1, "quick question").with_priority(PriorityTier::Burstable).with_deadline(150.0);
+        let d = w.route(&r, 0.2, &st, 0.3, Preference::Local, f64::INFINITY);
+        let islands = preset_personal_group();
+        let target = islands.iter().find(|i| Some(i.id) == d.target()).unwrap();
+        assert!(target.latency_ms <= 150.0, "picked {} at {} ms", target.name, target.latency_ms);
+        // the same request without the deadline goes remote past 150 ms
+        let r2 = Request::new(2, "quick question").with_priority(PriorityTier::Burstable);
+        let d2 = w.route(&r2, 0.2, &st, 0.3, Preference::Local, f64::INFINITY);
+        let t2 = islands.iter().find(|i| Some(i.id) == d2.target()).unwrap();
+        assert!(t2.latency_ms > 150.0, "without a deadline the cheap cloud wins ({})", t2.name);
+        // an impossible deadline is soft: the failsafe still queues the
+        // request (late beats lost), it is never rejected for slowness
+        let r3 = Request::new(3, "q").with_priority(PriorityTier::Secondary).with_deadline(1.0);
+        let d3 = w.route(&r3, 0.2, &states(0.9), 0.9, Preference::Local, f64::INFINITY);
+        assert!(d3.target().is_some(), "deadline must never fail-closed: {d3:?}");
     }
 
     #[test]

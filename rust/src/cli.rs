@@ -6,17 +6,23 @@
 //! islandrun demo                             §I.A motivating example
 //! islandrun attacks                          §VIII.C attack drill
 //! islandrun serve [--requests N] [--preset P] real PJRT serving run
+//! islandrun loadgen [--requests N] [--producers P] [--workers W] [--preset P]
+//!                                            open-loop run over the
+//!                                            enqueue/Ticket queue path (Sim)
 //! islandrun help
 //! ```
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::agents::mist::{Mist, Stage2};
 use crate::config::{preset, Config};
 use crate::eval::experiments;
+use crate::eval::loadgen::run_open_loop;
 use crate::islands::executor::IslandExecutor;
+use crate::islands::Fleet;
 use crate::runtime::Engine;
-use crate::server::{Backend, Orchestrator};
+use crate::server::{Backend, Orchestrator, SubmitRequest};
 
 /// Tiny argument scanner: positional args + `--key value` flags.
 pub struct Args {
@@ -60,6 +66,10 @@ USAGE:
   islandrun attacks                          run the §VIII.C attack drill
   islandrun serve [--requests N] [--preset personal|healthcare|legal|hiking]
                   [--artifacts DIR]          serve a real workload via PJRT
+  islandrun loadgen [--requests N] [--producers P] [--workers W]
+                  [--preset personal|healthcare|legal|hiking]
+                                             open-loop run over the non-blocking
+                                             enqueue/Ticket path (Sim backend)
   islandrun help                             this message
 ";
 
@@ -77,6 +87,7 @@ pub fn run(argv: &[String]) -> i32 {
         Some("demo") => cmd_demo(),
         Some("attacks") => cmd_attacks(),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("help") | None => {
             print!("{HELP}");
             0
@@ -173,7 +184,7 @@ fn cmd_serve(args: &Args) -> i32 {
         };
         let prompt = crate::substrate::trace::prompt_for(class, &mut rng);
         let priority = crate::substrate::trace::priority_for(class);
-        match orch.submit(session, &prompt, priority, None) {
+        match orch.submit_request(session, SubmitRequest::new(prompt.as_str()).priority(priority)) {
             Ok(out) => {
                 served += 1;
                 println!(
@@ -191,6 +202,54 @@ fn cmd_serve(args: &Args) -> i32 {
     let wall = t0.elapsed().as_secs_f64();
     println!("\nserved {served}/{n} in {wall:.2}s ({:.2} req/s)", served as f64 / wall);
     orch.metrics.report().print();
+    0
+}
+
+/// Open-loop load generation over the non-blocking request lifecycle
+/// (enqueue → admit → queue → route → batch → execute → resolve) on the
+/// Sim backend: producers push the whole arrival stream through
+/// `Orchestrator::enqueue`, the worker pool drains and coalesces it, and
+/// every `Ticket` is awaited. Prints the lifecycle metrics (queue waits,
+/// sheds, batch grouping) that the blocking path cannot exhibit.
+fn cmd_loadgen(args: &Args) -> i32 {
+    let total: usize = args.flag("requests").and_then(|s| s.parse().ok()).unwrap_or(400);
+    let producers: usize = args.flag("producers").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let workers: usize = args.flag("workers").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let preset_name = args.flag("preset").unwrap_or("personal");
+    let Some(islands) = preset(preset_name) else {
+        eprintln!("unknown preset '{preset_name}'");
+        return 2;
+    };
+    let mut cfg = Config::default();
+    // the generator measures the queue pipeline, not admission policy
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    cfg.serve_workers = workers;
+    let orch = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(Fleet::new(islands, 7)), 7));
+    // round per-producer UP so at least the requested count actually runs
+    let per_producer = ((total + producers - 1) / producers).max(1);
+    let report = run_open_loop(&orch, producers, per_producer, 11);
+
+    let mut t = crate::util::Table::new("loadgen — open-loop enqueue/Ticket lifecycle (Sim)", &["metric", "value"]);
+    t.row(&["producers x per-producer".into(), format!("{} x {per_producer}", report.threads)]);
+    t.row(&["attempted".into(), report.attempted.to_string()]);
+    t.row(&["served".into(), report.served().to_string()]);
+    t.row(&["rejected (fail-closed + shed)".into(), report.rejected().to_string()]);
+    t.row(&["ticket errors".into(), report.errors.to_string()]);
+    t.row(&["shed: queue full".into(), orch.metrics.counter_value("rejected_queue_full").to_string()]);
+    t.row(&["shed: deadline expired".into(), orch.metrics.counter_value("shed_deadline_expired").to_string()]);
+    t.row(&["throughput".into(), format!("{:.0} req/s", report.requests_per_sec())]);
+    if let Some(h) = orch.metrics.histogram("queue_wait_ms") {
+        t.row(&["queue wait p50 / p99 (virtual ms)".into(), format!("{:.1} / {:.1}", h.p50(), h.p99())]);
+    }
+    if let Some(h) = orch.metrics.histogram("batch_group_size") {
+        t.row(&["batch groups (mean size)".into(), format!("{} ({:.2})", h.count(), h.mean())]);
+    }
+    t.print();
+    if report.errors != 0 {
+        eprintln!("{} tickets resolved with an error — no ticket may be lost", report.errors);
+        return 1;
+    }
     0
 }
 
@@ -226,5 +285,11 @@ mod tests {
     #[test]
     fn attacks_command_passes() {
         assert_eq!(run(&argv(&["attacks"])), 0);
+    }
+
+    #[test]
+    fn loadgen_command_drives_the_queue_path() {
+        assert_eq!(run(&argv(&["loadgen", "--requests", "32", "--producers", "2", "--workers", "2"])), 0);
+        assert_eq!(run(&argv(&["loadgen", "--preset", "nonexistent"])), 2);
     }
 }

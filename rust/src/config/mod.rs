@@ -111,6 +111,13 @@ pub struct Config {
     /// TIDE degraded-island signal: consecutive zero-capacity samples (at
     /// heartbeat cadence) before an island is treated as offline by WAVES.
     pub degrade_zero_samples: u32,
+    /// Bounded admission-queue capacity for the non-blocking `enqueue`
+    /// path. A full queue sheds the incoming request fail-closed (audited,
+    /// `rejected_queue_full` metric) — backpressure, not unbounded memory.
+    pub queue_capacity: usize,
+    /// Worker threads draining the admission queue
+    /// (`Orchestrator::start_queue`).
+    pub serve_workers: usize,
     /// Artifacts directory with the AOT HLO files.
     pub artifacts_dir: String,
 }
@@ -134,6 +141,8 @@ impl Default for Config {
             heartbeat_miss_limit: 3,
             failover_retry_budget: 2,
             degrade_zero_samples: 8,
+            queue_capacity: 1024,
+            serve_workers: 4,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -170,6 +179,12 @@ impl Config {
         if let Some(x) = v.get("degrade_zero_samples").as_f64() {
             c.degrade_zero_samples = x.max(1.0) as u32;
         }
+        if let Some(x) = v.get("queue_capacity").as_f64() {
+            c.queue_capacity = x.max(1.0) as usize;
+        }
+        if let Some(x) = v.get("serve_workers").as_f64() {
+            c.serve_workers = x.max(1.0) as usize;
+        }
         if let Some(x) = v.get("artifacts_dir").as_str() {
             c.artifacts_dir = x.to_string();
         }
@@ -205,6 +220,8 @@ impl Config {
             ("budget_ceiling", Json::num(self.budget_ceiling)),
             ("failover_retry_budget", Json::num(self.failover_retry_budget as f64)),
             ("degrade_zero_samples", Json::num(self.degrade_zero_samples as f64)),
+            ("queue_capacity", Json::num(self.queue_capacity as f64)),
+            ("serve_workers", Json::num(self.serve_workers as f64)),
             ("artifacts_dir", Json::str(&self.artifacts_dir)),
         ])
     }
@@ -352,11 +369,15 @@ mod tests {
         c.weights = Weights { cost: 0.5, latency: 0.25, privacy: 0.25 };
         c.mode = RouterMode::ConstraintBased;
         c.rate_limit_rps = 7.5;
+        c.queue_capacity = 64;
+        c.serve_workers = 2;
         let j = c.to_json();
         let c2 = Config::from_json(&j);
         assert_eq!(c2.weights, c.weights);
         assert_eq!(c2.mode, c.mode);
         assert_eq!(c2.rate_limit_rps, c.rate_limit_rps);
+        assert_eq!(c2.queue_capacity, 64);
+        assert_eq!(c2.serve_workers, 2);
     }
 
     #[test]

@@ -301,7 +301,7 @@ pub fn e8_motivating() -> Vec<Table> {
     let session = orch.open_session("doctor");
 
     // saturate the laptop (§I.A: "laptop GPU is at high utilization")
-    orch.fleet().unwrap().get(crate::types::IslandId(0)).unwrap().set_external_load(0.97);
+    orch.set_island_load(crate::types::IslandId(0), 0.97);
 
     let turn1 = orch
         .submit(session, "Analyze treatment options for 45-year-old diabetic patient with elevated HbA1c", PriorityTier::Primary, None)

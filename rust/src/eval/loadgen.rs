@@ -1,11 +1,19 @@
-//! Closed-loop multi-threaded load generator for the concurrent submit path.
+//! Multi-threaded load generators for the concurrent serving surface.
 //!
-//! Each worker owns a session and drives the orchestrator in a closed loop
-//! (next request issues as soon as the previous one returns), submitting a
-//! seeded mixed-sensitivity workload and nudging the virtual clock so the
-//! Sim fleet's slots keep clearing. Used by `benches/throughput.rs`,
-//! `benches/failover.rs` and the stress tests; returns the per-request
-//! outcomes so callers can cross-check ids, audit entries and ledger totals.
+//! Closed loop ([`run_closed_loop`]): each worker owns a session and drives
+//! the blocking `submit` path (next request issues as soon as the previous
+//! one returns), submitting a seeded mixed-sensitivity workload and nudging
+//! the virtual clock so the Sim fleet's slots keep clearing. Used by
+//! `benches/throughput.rs`, `benches/failover.rs` and the stress tests;
+//! returns the per-request outcomes so callers can cross-check ids, audit
+//! entries and ledger totals.
+//!
+//! Open loop ([`run_open_loop`]): producers drive the non-blocking
+//! `enqueue` path — the whole arrival stream is pushed without waiting for
+//! completions (arrivals are independent of service times, the
+//! backpressure regime the admission queue exists for), then every
+//! [`Ticket`] is awaited. Used by `benches/queue_latency.rs`, the
+//! `loadgen` CLI command and the queue stress test.
 //!
 //! Churn mode ([`run_closed_loop_churn`]) adds a driver thread that
 //! crashes/revives/leaves/rejoins islands *while the workers submit*: a mix
@@ -16,7 +24,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::server::{Orchestrator, Outcome};
+use crate::server::{Orchestrator, Outcome, SubmitRequest, Ticket};
 use crate::substrate::trace::{priority_for, prompt_for, SensClass};
 use crate::types::Island;
 use crate::util::Rng;
@@ -52,7 +60,11 @@ impl LoadReport {
     }
 }
 
-fn class_for(i: usize) -> SensClass {
+/// The canonical generator workload mix, by request index: 25% high /
+/// 50% moderate / 25% low sensitivity. Shared by both loop drivers here and
+/// by the queue stress test and queue-latency bench, so the mix is tuned in
+/// exactly one place.
+pub fn class_for(i: usize) -> SensClass {
     match i % 4 {
         0 => SensClass::High,
         1 | 2 => SensClass::Moderate,
@@ -165,16 +177,21 @@ pub fn run_closed_loop_churn(
 }
 
 /// The churn driver loop: mutates fleet membership until `done`, then
-/// restores every island so the orchestrator is reusable.
+/// restores every island so the orchestrator is reusable. Observes the
+/// fleet only through the orchestrator's narrow island accessors.
 fn drive_churn(orch: &Arc<Orchestrator>, plan: Churn, seed: u64, done: &AtomicBool) -> ChurnStats {
     let mut stats = ChurnStats::default();
+    if !orch.sim_backed() {
+        return stats; // churn scaffolding only exists on the simulator
+    }
     let mut rng = Rng::new(seed ^ 0xC4_52_11);
     let mut parked: Vec<Island> = Vec::new();
-    let Some(fleet) = orch.fleet() else { return stats };
-    let ids: Vec<_> = fleet.specs().iter().map(|i| i.id).collect();
+    let ids = orch.island_ids();
     while !done.load(Ordering::SeqCst) {
         for &id in &ids {
-            let Some(island) = fleet.get(id) else {
+            // liveness-only probe: this loop runs hot alongside the
+            // serving path, so it must not clone specs per step
+            let Some(online) = orch.island_online(id) else {
                 // currently left the mesh: maybe rejoin
                 if rng.f64() < plan.revive_prob {
                     if let Some(pos) = parked.iter().position(|i| i.id == id) {
@@ -186,7 +203,7 @@ fn drive_churn(orch: &Arc<Orchestrator>, plan: Churn, seed: u64, done: &AtomicBo
                 }
                 continue;
             };
-            if island.is_online() {
+            if online {
                 if rng.f64() < plan.leave_prob {
                     if let Some(spec) = orch.leave_island(id) {
                         parked.push(spec);
@@ -196,7 +213,7 @@ fn drive_churn(orch: &Arc<Orchestrator>, plan: Churn, seed: u64, done: &AtomicBo
                     let crashed = if rng.f64() < plan.announced_fraction {
                         orch.crash_island(id) // clean shutdown: liveness view told
                     } else {
-                        fleet.crash(id) // silent death: must be detected
+                        orch.silent_crash_island(id) // silent death: must be detected
                     };
                     if crashed {
                         stats.crashes += 1;
@@ -213,11 +230,68 @@ fn drive_churn(orch: &Arc<Orchestrator>, plan: Churn, seed: u64, done: &AtomicBo
         orch.join_island(spec);
     }
     for &id in &ids {
-        if fleet.get(id).is_some() {
+        if orch.island_online(id).is_some() {
             orch.revive_island(id);
         }
     }
     stats
+}
+
+/// Drive `producers` threads × `per_producer` arrivals through the
+/// non-blocking [`Orchestrator::enqueue`] path: each producer pushes its
+/// whole stream without waiting for completions (open loop — arrivals are
+/// independent of service times), then awaits every [`Ticket`]. Starts the
+/// worker pool if it is not running. Arrivals carry an effectively
+/// unbounded deadline so the driver measures queue/serve behavior, not
+/// deadline shedding (callers wanting sheds enqueue directly). The returned
+/// [`LoadReport`] counts producers as `threads`; `outcomes` covers every
+/// request that consumed an id (served, fail-closed rejects and queue
+/// sheds alike) and `errors` counts tickets that resolved with an error.
+pub fn run_open_loop(orch: &Arc<Orchestrator>, producers: usize, per_producer: usize, seed: u64) -> LoadReport {
+    Arc::clone(orch).start_queue();
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..producers)
+        .map(|t| {
+            let orch = Arc::clone(orch);
+            std::thread::spawn(move || {
+                let user = format!("openloop-{t}");
+                let mut session = orch.open_session(&user);
+                let mut rng = Rng::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut tickets: Vec<Ticket> = Vec::with_capacity(per_producer);
+                for i in 0..per_producer {
+                    if i > 0 && i % SESSION_TURNS == 0 {
+                        session = orch.open_session(&user);
+                    }
+                    let class = class_for(i);
+                    let submit = SubmitRequest::new(prompt_for(class, &mut rng))
+                        .priority(priority_for(class))
+                        .deadline_ms(1e12);
+                    tickets.push(orch.enqueue(session, submit));
+                    // keep virtual time moving so slots clear and token
+                    // buckets refill; atomic, so safe from every producer
+                    orch.advance(5.0);
+                }
+                let mut outcomes = Vec::with_capacity(per_producer);
+                let mut errors = 0usize;
+                for ticket in tickets {
+                    match ticket.wait() {
+                        Ok(out) => outcomes.push(out),
+                        Err(_) => errors += 1,
+                    }
+                }
+                (outcomes, errors)
+            })
+        })
+        .collect();
+    let mut outcomes = Vec::with_capacity(producers * per_producer);
+    let mut errors = 0usize;
+    for h in handles {
+        let (outs, errs) = h.join().unwrap();
+        outcomes.extend(outs);
+        errors += errs;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    LoadReport { threads: producers, attempted: producers * per_producer, outcomes, errors, wall_s }
 }
 
 #[cfg(test)]
@@ -258,11 +332,30 @@ mod tests {
         assert_eq!(orch.audit.len(), 120);
         assert_eq!(report.served() + report.rejected(), 120);
         // the fleet is restored for follow-up phases
-        let fleet = orch.fleet().unwrap();
-        assert_eq!(fleet.len(), 7, "every island rejoined");
-        for island in fleet.islands() {
-            assert!(island.is_online(), "{} left offline", island.spec.name);
+        let ids = orch.island_ids();
+        assert_eq!(ids.len(), 7, "every island rejoined");
+        for id in ids {
+            let snapshot = orch.island_snapshot(id).unwrap();
+            assert!(snapshot.online, "{} left offline", snapshot.spec.name);
         }
+    }
+
+    #[test]
+    fn open_loop_accounts_every_ticket() {
+        let orch = orchestrator();
+        let report = run_open_loop(&orch, 4, 24, 3);
+        assert_eq!(report.attempted, 96);
+        assert_eq!(report.errors, 0, "no ticket may resolve with an error");
+        assert_eq!(report.outcomes.len(), 96);
+        assert_eq!(report.served() + report.rejected(), 96);
+        // exactly one audit entry per enqueued request
+        assert_eq!(orch.audit.len(), 96);
+        let mut ids: Vec<u64> = report.outcomes.iter().map(|o| o.request_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 96);
+        assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+        assert!(report.requests_per_sec() > 0.0);
     }
 
     #[test]

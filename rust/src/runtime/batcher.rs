@@ -78,6 +78,27 @@ impl<T> Batcher<T> {
     }
 }
 
+/// Split an already-collected group into policy-sized FIFO chunks
+/// (`<= max_batch` each) without standing up a live queue. The
+/// orchestrator's coalescing paths — `submit_many` and the admission-queue
+/// drain — group co-routed requests per island and chunk each group this
+/// way before dispatching one `execute_batch` per chunk.
+pub fn chunk_by_policy<T>(items: Vec<T>, policy: BatchPolicy) -> Vec<Vec<T>> {
+    let max = policy.max_batch.max(1);
+    let mut out = Vec::with_capacity((items.len() + max - 1) / max);
+    let mut cur: Vec<T> = Vec::with_capacity(max.min(items.len()));
+    for item in items {
+        cur.push(item);
+        if cur.len() == max {
+            out.push(std::mem::replace(&mut cur, Vec::with_capacity(max)));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +150,17 @@ mod tests {
             b.push(i);
         }
         assert_eq!(b.take_batch(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn chunk_by_policy_splits_fifo_groups() {
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1) };
+        let chunks = chunk_by_policy((0..7).collect(), policy);
+        assert_eq!(chunks, vec![vec![0, 1, 2], vec![3, 4, 5], vec![6]]);
+        let empty: Vec<Vec<u32>> = chunk_by_policy(Vec::new(), policy);
+        assert!(empty.is_empty());
+        // degenerate max_batch=0 is clamped to 1 rather than looping forever
+        let ones = chunk_by_policy(vec![1, 2], BatchPolicy { max_batch: 0, max_wait: Duration::from_millis(1) });
+        assert_eq!(ones, vec![vec![1], vec![2]]);
     }
 }

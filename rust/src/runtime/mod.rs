@@ -14,6 +14,6 @@ pub mod features;
 pub mod meta;
 pub mod pjrt;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{chunk_by_policy, BatchPolicy, Batcher};
 pub use meta::Meta;
 pub use pjrt::{Engine, EngineHandle, GenResult};

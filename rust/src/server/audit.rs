@@ -37,6 +37,27 @@ pub struct AuditEntry {
     pub failovers: u32,
 }
 
+impl AuditEntry {
+    /// Entry for a request shed at the admission queue (queue full or
+    /// deadline expired while queued): it consumed a request id but was
+    /// never routed, so there is no island and MIST never ran (`s_r` is
+    /// recorded as 0.0). `reason` should carry the `"shed: "` prefix so
+    /// [`AuditLog::sheds`] can scope compliance queries to shed traffic.
+    pub fn shed(request_id: u64, user: &str, t_ms: f64, reason: &str) -> AuditEntry {
+        AuditEntry {
+            request_id,
+            user: user.to_string(),
+            t_ms,
+            s_r: 0.0,
+            island: None,
+            island_privacy: None,
+            sanitized: false,
+            reject_reason: Some(reason.to_string()),
+            failovers: 0,
+        }
+    }
+}
+
 /// Append-only concurrent audit log.
 #[derive(Debug, Default)]
 pub struct AuditLog {
@@ -54,6 +75,14 @@ impl AuditLog {
 
     pub fn len(&self) -> usize {
         self.entries.lock().unwrap().len()
+    }
+
+    /// Is there already an entry for this request id? Used by the queue
+    /// worker's panic recovery to keep "exactly one entry per consumed id":
+    /// a straggler whose execution already landed on the trail must not get
+    /// a second (shed) entry. Linear scan — recovery paths only.
+    pub fn contains(&self, request_id: u64) -> bool {
+        self.entries.lock().unwrap().iter().any(|e| e.request_id == request_id)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -86,6 +115,20 @@ impl AuditLog {
     /// against the `failovers` metric by the churn stress test).
     pub fn total_failovers(&self) -> u64 {
         self.entries.lock().unwrap().iter().map(|e| e.failovers as u64).sum()
+    }
+
+    /// Entries for requests shed at the admission queue (queue-full and
+    /// deadline-expired rejects; see [`AuditEntry::shed`]). The queue stress
+    /// test pins "every shed request leaves exactly one audit entry" on this
+    /// view.
+    pub fn sheds(&self) -> Vec<AuditEntry> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| e.reject_reason.as_deref().map(|r| r.starts_with("shed:")).unwrap_or(false))
+            .cloned()
+            .collect()
     }
 
     /// Export as a JSON array (regulator-facing artifact).
@@ -163,6 +206,20 @@ mod tests {
         assert_eq!(back.idx(0).get("request_id").as_i64(), Some(1));
         assert_eq!(back.idx(1).get("island"), &Json::Null);
         assert_eq!(back.idx(1).get("reject_reason").as_str(), Some("fail-closed"));
+    }
+
+    #[test]
+    fn shed_entries_are_scoped_by_prefix() {
+        let log = AuditLog::new();
+        log.record(entry(1, 0.5, Some((0, 1.0))));
+        log.record(AuditEntry::shed(2, "alice", 10.0, "shed: admission queue full (8 queued, fail-closed)"));
+        log.record(entry(3, 0.9, None)); // plain fail-closed reject, not a shed
+        log.record(AuditEntry::shed(4, "bob", 20.0, "shed: deadline expired after 512 ms in queue"));
+        let sheds = log.sheds();
+        assert_eq!(sheds.iter().map(|e| e.request_id).collect::<Vec<_>>(), vec![2, 4]);
+        assert!(sheds.iter().all(|e| e.island.is_none() && e.s_r == 0.0 && e.failovers == 0));
+        // sheds never count as privacy violations (no island executed them)
+        assert!(log.violations(0.0, 1.0).iter().all(|id| *id != 2 && *id != 4));
     }
 
     #[test]

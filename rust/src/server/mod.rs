@@ -1,11 +1,18 @@
-//! Request-path server: session store, rate limiting and the orchestrator
-//! façade implementing the Fig. 2 route-then-sanitize pipeline.
+//! Request-path server: session store, rate limiting, the typed submission
+//! surface ([`SubmitRequest`] / [`Ticket`] / the admission queue in
+//! [`queue`]) and the orchestrator façade implementing the Fig. 2
+//! route-then-sanitize pipeline as an explicit request lifecycle
+//! (enqueue → admit → route → batch → execute → resolve).
 
 pub mod audit;
 pub mod orchestrator;
+pub mod queue;
 pub mod ratelimit;
 pub mod session;
+pub mod ticket;
 
-pub use orchestrator::{Backend, BatchItem, Orchestrator, Outcome};
+pub use orchestrator::{Backend, BatchItem, IslandSnapshot, Orchestrator, Outcome};
+pub use queue::SubmitRequest;
 pub use ratelimit::RateLimiter;
 pub use session::{Session, SessionStore};
+pub use ticket::Ticket;

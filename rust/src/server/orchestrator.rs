@@ -6,20 +6,39 @@
 //!   [sanitize h_r on trust-boundary crossing] → island execute →
 //!   [desanitize response] → client
 //!
-//! Concurrency model: [`Orchestrator::submit`] takes `&self`, so any number
-//! of threads can drive the pipeline through `Arc<Orchestrator>`. Request
-//! ids come from an atomic counter; sessions live in an `RwLock`-sharded
-//! store; metrics, the cost ledger and the audit log are internally
-//! synchronized; the hysteresis state machine and the per-user rate limiter
-//! sit behind short mutexes (they are tiny state updates, far from the
-//! heavy MIST/route work which runs lock-free).
+//! Request lifecycle (the serving surface):
 //!
-//! Batching: [`Orchestrator::submit_many`] routes a whole batch first, then
-//! coalesces requests that landed on the same island through the
-//! [`Batcher`] policy — on the Real backend each group becomes one
+//!   enqueue → admit → [queue] → route → batch → execute → resolve
+//!
+//! The primary entry point is the non-blocking path:
+//! [`Orchestrator::enqueue`] takes a typed [`SubmitRequest`] (every
+//! routing-relevant knob — priority, deadline, sensitivity floor,
+//! jurisdiction floor, model pin, dataset), admits it (rate limit), and
+//! parks it in a bounded priority+deadline-ordered admission queue,
+//! returning a [`Ticket`] immediately. A configurable worker pool
+//! ([`Orchestrator::start_queue`], `Config::serve_workers`) drains the
+//! queue in batches so co-routed requests coalesce *across sessions and
+//! submitters*; each ticket resolves exactly once (`Ticket::wait` /
+//! `Ticket::try_poll`). A full queue sheds the incoming request fail-closed
+//! (`rejected_queue_full`), and requests whose deadline expired while
+//! queued are shed at drain time (`shed_deadline_expired`) — both audited.
+//!
+//! The blocking [`Orchestrator::submit`] / [`Orchestrator::submit_many`]
+//! shims remain for compatibility and delegate to the same pipeline; both
+//! take `&self`, so any number of threads can drive the orchestrator
+//! through `Arc<Orchestrator>`. Request ids come from an atomic counter;
+//! sessions live in an `RwLock`-sharded store; metrics, the cost ledger and
+//! the audit log are internally synchronized; the hysteresis state machine
+//! and the per-user rate limiter sit behind short mutexes.
+//!
+//! Batching: both the queue drain and `submit_many` route first, then group
+//! co-routed requests per island and chunk each group by the live
+//! [`BatchPolicy`] — on the Real backend each chunk becomes one
 //! `execute_batch` call, filling the compiled PJRT batch variants instead
 //! of dispatching row by row (Fig. 2's island-execute stage is where the
-//! batcher sits).
+//! batcher sits). Because the queue drain batches whatever is parked,
+//! coalescing happens across sessions — the fleet-scale batching story, not
+//! per-call-scale.
 //!
 //! Backends:
 //! - [`Backend::Sim`] — virtual-time [`Fleet`] (evals, examples, attacks),
@@ -27,8 +46,8 @@
 //!   (quickstart / serving bench; python stays off this path).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 
 use crate::agents::lighthouse::Lighthouse;
 use crate::agents::mist::sanitize::sanitize_history;
@@ -39,10 +58,12 @@ use crate::agents::waves::{Decision, IslandState, Routed, Waves};
 use crate::config::Config;
 use crate::islands::executor::{self, IslandExecutor};
 use crate::islands::{CostLedger, Fleet};
-use crate::runtime::{BatchPolicy, Batcher};
+use crate::runtime::{chunk_by_policy, BatchPolicy};
 use crate::server::audit::{AuditEntry, AuditLog};
+use crate::server::queue::{AdmissionQueue, QueueItem, SubmitRequest};
 use crate::server::ratelimit::RateLimiter;
 use crate::server::session::SessionStore;
+use crate::server::ticket::{Ticket, TicketCell};
 use crate::telemetry::Metrics;
 use crate::types::{Island, IslandId, PriorityTier, Request};
 use crate::util::AtomicF64;
@@ -75,6 +96,28 @@ pub struct BatchItem<'a> {
     pub prompt: &'a str,
     pub priority: PriorityTier,
     pub dataset: Option<&'a str>,
+}
+
+/// Point-in-time public view of one island: the narrow read surface that
+/// replaced leaking the whole `Fleet` out of the orchestrator (fleet
+/// internals can now evolve without breaking callers).
+#[derive(Clone, Debug)]
+pub struct IslandSnapshot {
+    /// Static registration record.
+    pub spec: Island,
+    /// Power/reachability state (ground truth on the Sim backend; the
+    /// LIGHTHOUSE liveness view on Real).
+    pub online: bool,
+    /// Available capacity R_j(t) in [0,1] at snapshot time. Sim backend
+    /// only: real islands do not report capacity through this accessor
+    /// (TIDE owns that signal), so the Real backend returns a constant 1.0.
+    pub capacity: f64,
+    /// Total requests this island has executed. Sim backend telemetry
+    /// only; always 0 on the Real backend.
+    pub executed: u64,
+    /// Remaining battery fraction for battery-powered islands (the declared
+    /// registration value on the Real backend).
+    pub battery: Option<f64>,
 }
 
 /// A request that cleared admission + routing and awaits execution.
@@ -135,11 +178,23 @@ pub struct Orchestrator {
     pub ledger: CostLedger,
     pub metrics: Metrics,
     /// §XIV compliance audit trail of every decision (incl. rejections).
-    pub audit: AuditLog,
+    /// Behind an `Arc` so queue workers can still audit sheds for batches
+    /// they popped even if the orchestrator is dropped mid-drain (no id may
+    /// vanish from the trail, even at shutdown).
+    pub audit: Arc<AuditLog>,
     limiter: Mutex<RateLimiter>,
     next_request_id: AtomicU64,
     budget_ceiling: f64,
-    batch_policy: BatchPolicy,
+    /// Island-execute batching policy; interior-mutable so `Arc` holders
+    /// can retune batching live ([`Orchestrator::set_batch_policy`]).
+    batch_policy: RwLock<BatchPolicy>,
+    /// Bounded admission queue behind [`Orchestrator::enqueue`]; shared
+    /// with the worker pool, which holds the `Arc` (plus a `Weak` to the
+    /// orchestrator so workers never keep it alive).
+    queue: Arc<AdmissionQueue>,
+    /// Worker threads [`Orchestrator::start_queue`] spawns to drain it.
+    serve_workers: usize,
+    workers_started: AtomicBool,
     /// Failover re-routes allowed per request before exhausted-retries.
     retry_budget: u32,
     /// TIDE degrade detectors, one per island, sampled at heartbeat cadence.
@@ -160,6 +215,8 @@ impl Orchestrator {
         let retry_budget = config.failover_retry_budget;
         let degrade_zero_samples = config.degrade_zero_samples;
         let heartbeat_period_ms = config.heartbeat_period_ms as f64;
+        let queue = Arc::new(AdmissionQueue::new(config.queue_capacity));
+        let serve_workers = config.serve_workers.max(1);
         let lighthouse = Lighthouse::new(seed ^ 0x11A5_7110_5E0u64, heartbeat_period_ms, config.heartbeat_miss_limit);
         // register the initial fleet: every backend island is attested and
         // announced online at t=0 (churn helpers keep the view in sync)
@@ -179,11 +236,14 @@ impl Orchestrator {
             sessions: SessionStore::new(seed),
             ledger: CostLedger::new(),
             metrics: Metrics::new(),
-            audit: AuditLog::new(),
+            audit: Arc::new(AuditLog::new()),
             limiter: Mutex::new(limiter),
             next_request_id: AtomicU64::new(1),
             budget_ceiling,
-            batch_policy: BatchPolicy::default(),
+            batch_policy: RwLock::new(BatchPolicy::default()),
+            queue,
+            serve_workers,
+            workers_started: AtomicBool::new(false),
             retry_budget,
             degrade: Mutex::new(BTreeMap::new()),
             degrade_zero_samples,
@@ -193,9 +253,17 @@ impl Orchestrator {
         }
     }
 
-    /// Override the island-execute batching policy (see [`Batcher`]).
-    pub fn set_batch_policy(&mut self, policy: BatchPolicy) {
-        self.batch_policy = policy;
+    /// Retune the island-execute batching policy live (interior-mutable, so
+    /// `Arc<Orchestrator>` holders can adjust `max_batch`/`max_wait` while
+    /// submitters and queue workers are running; the next coalescing pass
+    /// picks it up).
+    pub fn set_batch_policy(&self, policy: BatchPolicy) {
+        *self.batch_policy.write().unwrap() = policy;
+    }
+
+    /// The batching policy currently applied by the coalescing paths.
+    pub fn batch_policy(&self) -> BatchPolicy {
+        *self.batch_policy.read().unwrap()
     }
 
     /// Open a session for a user.
@@ -219,10 +287,94 @@ impl Orchestrator {
         }
     }
 
-    pub fn fleet(&self) -> Option<&Fleet> {
+    /// The simulated fleet, when this orchestrator is Sim-backed. Private:
+    /// callers observe islands through the narrow accessors below
+    /// ([`island_ids`](Orchestrator::island_ids),
+    /// [`island_snapshot`](Orchestrator::island_snapshot)) so fleet
+    /// internals can evolve without public API breaks.
+    fn sim_fleet(&self) -> Option<&Fleet> {
         match &self.backend {
             Backend::Sim(f) => Some(f),
             _ => None,
+        }
+    }
+
+    /// Is this orchestrator backed by the virtual-time simulator? (Churn
+    /// scaffolding — crash/load knobs — only exists there.)
+    pub fn sim_backed(&self) -> bool {
+        matches!(self.backend, Backend::Sim(_))
+    }
+
+    /// Ids of every island currently in the mesh (either backend).
+    pub fn island_ids(&self) -> Vec<IslandId> {
+        match &self.backend {
+            Backend::Sim(f) => f.specs().iter().map(|i| i.id).collect(),
+            Backend::Real { islands, .. } => islands.iter().map(|i| i.id).collect(),
+        }
+    }
+
+    /// Point-in-time view of one island; `None` when no island with this id
+    /// is in the mesh (it left, or never joined).
+    pub fn island_snapshot(&self, id: IslandId) -> Option<IslandSnapshot> {
+        match &self.backend {
+            Backend::Sim(f) => f.get(id).map(|island| IslandSnapshot {
+                spec: island.spec.clone(),
+                online: island.is_online(),
+                capacity: island.capacity(f.now()),
+                executed: island.executed(),
+                battery: island.battery(),
+            }),
+            Backend::Real { islands, .. } => islands.iter().find(|i| i.id == id).map(|i| IslandSnapshot {
+                spec: i.clone(),
+                online: self.lighthouse.is_online(id),
+                capacity: 1.0,
+                executed: 0,
+                battery: i.battery,
+            }),
+        }
+    }
+
+    /// Liveness-only view of one island — the cheap membership/online probe
+    /// for hot loops (the churn driver polls this every step; the full
+    /// [`island_snapshot`](Orchestrator::island_snapshot) clones the spec).
+    /// `None` when no island with this id is in the mesh.
+    pub fn island_online(&self, id: IslandId) -> Option<bool> {
+        match &self.backend {
+            Backend::Sim(f) => f.get(id).map(|island| island.is_online()),
+            Backend::Real { islands, .. } => islands.iter().find(|i| i.id == id).map(|_| self.lighthouse.is_online(id)),
+        }
+    }
+
+    /// Set an island's external utilization knob in [0,1) (Sim backend load
+    /// programs / test scaffolding). Returns false off-sim or for unknown ids.
+    pub fn set_island_load(&self, id: IslandId, load: f64) -> bool {
+        match self.sim_fleet().and_then(|f| f.get(id)) {
+            Some(island) => {
+                island.set_external_load(load);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop every island whose spec fails the predicate (Sim backend test
+    /// scaffolding; mirrors what a mass deprovisioning would do).
+    pub fn retain_islands(&self, pred: impl Fn(&Island) -> bool) {
+        if let Some(fleet) = self.sim_fleet() {
+            fleet.retain(pred);
+        }
+    }
+
+    /// Saturate every bounded island with an external load (Sim backend
+    /// load scaffolding: pushes offloadable tiers toward the unbounded
+    /// cloud; tests and examples use it to force trust-boundary crossings).
+    pub fn saturate_bounded_islands(&self, load: f64) {
+        if let Some(fleet) = self.sim_fleet() {
+            for island in fleet.islands() {
+                if !island.spec.unbounded() {
+                    island.set_external_load(load);
+                }
+            }
         }
     }
 
@@ -230,10 +382,11 @@ impl Orchestrator {
 
     /// Announced crash: the island powers off AND the liveness view learns
     /// immediately (clean shutdown). For a *silent* crash — detected only by
-    /// missed heartbeats or a failed execution — call `fleet().crash(id)`
-    /// directly. Sim backend only.
+    /// missed heartbeats or a failed execution — use
+    /// [`silent_crash_island`](Orchestrator::silent_crash_island). Sim
+    /// backend only.
     pub fn crash_island(&self, id: IslandId) -> bool {
-        match self.fleet() {
+        match self.sim_fleet() {
             Some(fleet) if fleet.crash(id) => {
                 self.lighthouse.mark_offline(id);
                 self.metrics.count("island_crashes", 1);
@@ -243,9 +396,17 @@ impl Orchestrator {
         }
     }
 
+    /// Silent crash: the island powers off but the liveness view is NOT
+    /// told — the death must be *discovered* (heartbeat timeout, or a failed
+    /// execution that triggers the failover path). Sim backend only; churn
+    /// drivers and the failover bench use this to exercise detection.
+    pub fn silent_crash_island(&self, id: IslandId) -> bool {
+        self.sim_fleet().map(|fleet| fleet.crash(id)).unwrap_or(false)
+    }
+
     /// Power a crashed island back on and announce it (wake from sleep).
     pub fn revive_island(&self, id: IslandId) -> bool {
-        match self.fleet() {
+        match self.sim_fleet() {
             Some(fleet) if fleet.revive(id) => {
                 self.lighthouse.beat(id, fleet.now());
                 self.lighthouse.set_degraded(id, false);
@@ -260,7 +421,7 @@ impl Orchestrator {
     /// A new island joins the mesh mid-run: added to the fleet and
     /// registered + attested with LIGHTHOUSE (dynamic discovery).
     pub fn join_island(&self, island: Island) -> bool {
-        match self.fleet() {
+        match self.sim_fleet() {
             Some(fleet) if fleet.join(island.clone()) => {
                 // re-joins after a leave are fresh registrations
                 let _ = self.lighthouse.deregister(island.id);
@@ -274,7 +435,7 @@ impl Orchestrator {
 
     /// An island leaves the mesh entirely (deprovisioned).
     pub fn leave_island(&self, id: IslandId) -> Option<Island> {
-        let fleet = self.fleet()?;
+        let fleet = self.sim_fleet()?;
         let island = fleet.leave(id)?;
         let _ = self.lighthouse.deregister(id);
         self.degrade.lock().unwrap().remove(&id);
@@ -363,53 +524,69 @@ impl Orchestrator {
         }
     }
 
-    /// Admission + MIST + TIDE + WAVES + sanitize for one prompt: everything
-    /// before island execution. `Err` = rate limited / unknown session;
-    /// `Ok(Err(outcome))` = audited fail-closed rejection;
-    /// `Ok(Ok(prepared))` = routed and ready to execute.
-    fn prepare(
-        &self,
-        session_id: u64,
-        prompt: &str,
-        priority: PriorityTier,
-        dataset: Option<&str>,
-    ) -> anyhow::Result<Result<Prepared, Outcome>> {
-        // Deliberately a separate (cheap) lookup from the history fetch
-        // below: admission must run before any per-request work, and the
-        // history clone is attacker-sized — a flooding user should cost us
-        // only this user-name read before the limiter turns them away.
+    /// Admission gate: session lookup + rate limit, before any per-request
+    /// work. Deliberately separate from the history fetch in
+    /// [`prepare_admitted`](Orchestrator::prepare_admitted): the history
+    /// clone is attacker-sized, so a flooding user costs only this
+    /// user-name read before the limiter turns them away (Attack 4). Runs
+    /// at enqueue time on the queue path, so floods are refused at the
+    /// front door, not after occupying queue slots.
+    fn admit(&self, session_id: u64) -> anyhow::Result<String> {
         let user = self
             .sessions
             .user_of(session_id)
             .ok_or_else(|| anyhow::anyhow!("unknown session {session_id}"))?;
-
-        // Attack-4 mitigation: rate limit before any work
         let now = self.now_ms();
         if !self.limiter.lock().unwrap().admit(&user, now) {
             self.metrics.count("rate_limited", 1);
             anyhow::bail!("rate limited: user {user}");
         }
+        Ok(user)
+    }
 
+    /// Admission + MIST + TIDE + WAVES + sanitize for one submission:
+    /// everything before island execution. `Err` = rate limited / unknown
+    /// session; `Ok(Err(outcome))` = audited fail-closed rejection;
+    /// `Ok(Ok(prepared))` = routed and ready to execute.
+    fn prepare(&self, session_id: u64, sr: &SubmitRequest) -> anyhow::Result<Result<Prepared, Outcome>> {
+        let user = self.admit(session_id)?;
         let id = self.next_request_id.fetch_add(1, Ordering::SeqCst);
+        self.prepare_admitted(id, session_id, user, sr)
+    }
 
-        // From here on the request has consumed an id and a rate-limit
-        // token, so every exit — including sessions racing close() — must
-        // leave an audit entry (§XIV: no vanished ids).
+    /// MIST + TIDE + WAVES + sanitize for a request that already cleared
+    /// admission and consumed a request id (the queue drain enters here with
+    /// the id allocated at enqueue time). From here on every exit —
+    /// including sessions racing close() — must leave an audit entry
+    /// (§XIV: no vanished ids).
+    fn prepare_admitted(
+        &self,
+        id: u64,
+        session_id: u64,
+        user: String,
+        sr: &SubmitRequest,
+    ) -> anyhow::Result<Result<Prepared, Outcome>> {
+        let now = self.now_ms();
         let Some((history, prev_privacy)) =
             self.sessions.with(session_id, |s| (s.history.clone(), s.prev_island_privacy))
         else {
             self.audit_vanished(id, &user, now, 0.0, "session closed before routing", 0);
             anyhow::bail!("unknown session {session_id}");
         };
-        let mut request = Request::new(id, prompt).with_user(&user).with_priority(priority).with_history(history);
+        let mut request =
+            Request::new(id, &sr.prompt).with_user(&user).with_priority(sr.priority).with_history(history);
         request.prev_island_privacy = prev_privacy;
-        if let Some(ds) = dataset {
-            request = request.with_dataset(ds);
-        }
+        request.deadline_ms = sr.deadline_ms;
+        request.max_new_tokens = sr.max_new_tokens;
+        request.required_dataset = sr.dataset.clone();
+        request.required_model = sr.model.clone();
+        request.min_jurisdiction = sr.min_jurisdiction;
 
-        // MIST sensitivity (Alg. 1 line 1)
+        // MIST sensitivity (Alg. 1 line 1). A caller-declared floor can
+        // only *raise* s_r — tightening the privacy constraint is allowed
+        // through the public surface, relaxing it below MIST's score is not.
         let report = self.mist.analyze(&request);
-        let s_r = report.score;
+        let s_r = report.score.max(sr.sensitivity_floor.unwrap_or(0.0)).clamp(0.0, 1.0);
         request.sensitivity = Some(s_r);
         self.metrics.observe("mist_s_r", s_r);
 
@@ -710,10 +887,14 @@ impl Orchestrator {
         }
     }
 
-    /// Submit one prompt within a session (Fig. 2 pipeline). Returns Err
-    /// for rate-limited submissions, Ok(Outcome) otherwise — including
-    /// fail-closed rejections, which are Outcomes with a Reject decision
-    /// (routing rejects and exhausted failover retries alike).
+    /// Blocking compatibility shim over [`submit_request`]
+    /// (positional-argument form; cannot express the full
+    /// [`SubmitRequest`] surface — deadline, sensitivity floor,
+    /// jurisdiction floor, model pin, token budget). Prefer
+    /// [`Orchestrator::enqueue`] (non-blocking, queue-scheduled,
+    /// cross-session batching) or [`submit_request`] for new code.
+    ///
+    /// [`submit_request`]: Orchestrator::submit_request
     pub fn submit(
         &self,
         session_id: u64,
@@ -721,7 +902,22 @@ impl Orchestrator {
         priority: PriorityTier,
         dataset: Option<&str>,
     ) -> anyhow::Result<Outcome> {
-        let prepared = match self.prepare(session_id, prompt, priority, dataset)? {
+        let mut sr = SubmitRequest::new(prompt).priority(priority);
+        if let Some(ds) = dataset {
+            sr = sr.dataset(ds);
+        }
+        self.submit_request(session_id, sr)
+    }
+
+    /// Submit one typed request within a session and block until it
+    /// completes (Fig. 2 pipeline, caller's thread). Returns Err for
+    /// rate-limited submissions, Ok(Outcome) otherwise — including
+    /// fail-closed rejections, which are Outcomes with a Reject decision
+    /// (routing rejects and exhausted failover retries alike). For a
+    /// non-blocking submission with queue-level scheduling and
+    /// cross-session batching, use [`Orchestrator::enqueue`].
+    pub fn submit_request(&self, session_id: u64, sr: SubmitRequest) -> anyhow::Result<Outcome> {
+        let prepared = match self.prepare(session_id, &sr)? {
             Err(rejected) => return Ok(rejected),
             Ok(p) => p,
         };
@@ -730,56 +926,100 @@ impl Orchestrator {
         // record the turn against the island it actually ran on (failover
         // hops update the decision, so this is the final island)
         if let Some(r) = outcome.decision.routed() {
-            let _ = self.sessions.with_mut(session_id, |s| s.record_turn(prompt, &outcome.response, r.target_privacy));
+            let _ =
+                self.sessions.with_mut(session_id, |s| s.record_turn(&sr.prompt, &outcome.response, r.target_privacy));
         }
         Ok(outcome)
     }
 
-    /// Submit a batch of prompts for one session. Each item is admitted,
-    /// scored and routed like a [`submit`] call racing the rest of the
-    /// batch: routing and sanitization see the pre-batch session snapshot
-    /// (items do not observe each other's turns), while conversation turns
-    /// are appended in input order once the whole batch has executed.
-    /// Items co-routed to the same island are coalesced through the
-    /// [`Batcher`]'s `max_batch` cap and executed together — on the Real
-    /// backend one `execute_batch` call per group fills the compiled PJRT
-    /// batch variants. (`max_wait` governs streaming accumulation when a
-    /// caller owns a long-lived `Batcher`; this synchronous path always
-    /// flushes immediately.) Per-item results preserve input order.
+    /// Blocking compatibility shim over [`submit_many_requests`]
+    /// (borrowed-item form). Prefer [`Orchestrator::enqueue`] for new code:
+    /// the queue drain coalesces co-routed requests across *all* sessions
+    /// and submitters, not just within one call's batch.
     ///
-    /// [`submit`]: Orchestrator::submit
-    /// [`Batcher`]: crate::runtime::Batcher
+    /// [`submit_many_requests`]: Orchestrator::submit_many_requests
     pub fn submit_many(&self, session_id: u64, items: &[BatchItem<'_>]) -> Vec<anyhow::Result<Outcome>> {
+        let subs: Vec<SubmitRequest> = items
+            .iter()
+            .map(|item| {
+                let mut sr = SubmitRequest::new(item.prompt).priority(item.priority);
+                if let Some(ds) = item.dataset {
+                    sr = sr.dataset(ds);
+                }
+                sr
+            })
+            .collect();
+        self.submit_many_requests(session_id, subs)
+    }
+
+    /// Submit a batch of typed requests for one session. Each item is
+    /// admitted, scored and routed like a [`submit_request`] call racing
+    /// the rest of the batch: routing and sanitization see the pre-batch
+    /// session snapshot (items do not observe each other's turns), while
+    /// conversation turns are appended in input order once the whole batch
+    /// has executed. Items co-routed to the same island are coalesced
+    /// through the live [`BatchPolicy`] and executed together — on the Real
+    /// backend one `execute_batch` call per group fills the compiled PJRT
+    /// batch variants. Per-item results preserve input order.
+    ///
+    /// [`submit_request`]: Orchestrator::submit_request
+    pub fn submit_many_requests(&self, session_id: u64, items: Vec<SubmitRequest>) -> Vec<anyhow::Result<Outcome>> {
         let mut results: Vec<Option<anyhow::Result<Outcome>>> = (0..items.len()).map(|_| None).collect();
         let mut ready: Vec<(usize, Prepared)> = Vec::new();
 
-        for (idx, item) in items.iter().enumerate() {
-            match self.prepare(session_id, item.prompt, item.priority, item.dataset) {
+        for (idx, sr) in items.iter().enumerate() {
+            match self.prepare(session_id, sr) {
                 Err(e) => results[idx] = Some(Err(e)),
                 Ok(Err(rejected)) => results[idx] = Some(Ok(rejected)),
                 Ok(Ok(prepared)) => ready.push((idx, prepared)),
             }
         }
 
-        // Coalesce co-routed requests per target island, FIFO, chunked by
-        // the batching policy.
-        let mut by_island: Vec<(crate::types::IslandId, Batcher<(usize, Prepared)>)> = Vec::new();
-        for (idx, prepared) in ready {
-            let target = prepared.routed.target;
-            let pos = match by_island.iter().position(|(id, _)| *id == target) {
-                Some(p) => p,
-                None => {
-                    by_island.push((target, Batcher::new(self.batch_policy)));
-                    by_island.len() - 1
-                }
-            };
-            by_island[pos].1.push((idx, prepared));
+        for (idx, result) in self.execute_coalesced(ready) {
+            results[idx] = Some(result);
         }
 
-        for (island_id, mut batcher) in by_island {
-            while !batcher.is_empty() {
-                let group = batcher.take_batch();
-                self.metrics.observe("batch_group_size", group.len() as f64);
+        // Append conversation turns in input order (executed items only),
+        // so the stored history reads as the user submitted it even though
+        // island groups completed in arbitrary order.
+        for (idx, sr) in items.iter().enumerate() {
+            if let Some(Ok(out)) = &results[idx] {
+                if let Some(r) = out.decision.routed() {
+                    let _ = self
+                        .sessions
+                        .with_mut(session_id, |s| s.record_turn(&sr.prompt, &out.response, r.target_privacy));
+                }
+            }
+        }
+
+        results.into_iter().map(|r| r.expect("every item decided")).collect()
+    }
+
+    /// The shared coalescing executor behind [`submit_many_requests`] and
+    /// the admission-queue drain: group routed requests per target island
+    /// (whoever submitted them — this is where cross-session batching
+    /// happens on the queue path), chunk each group by the live batching
+    /// policy, and execute chunk by chunk. Each input's opaque key `K`
+    /// travels with it so callers can map results back (a results index, a
+    /// ticket, ...). Returns one entry per input, in no particular order.
+    ///
+    /// [`submit_many_requests`]: Orchestrator::submit_many_requests
+    fn execute_coalesced<K>(&self, ready: Vec<(K, Prepared)>) -> Vec<(K, anyhow::Result<Outcome>)> {
+        let policy = self.batch_policy();
+        let mut by_island: Vec<(IslandId, Vec<(K, Prepared)>)> = Vec::new();
+        for (key, prepared) in ready {
+            let target = prepared.routed.target;
+            match by_island.iter_mut().find(|(id, _)| *id == target) {
+                Some((_, group)) => group.push((key, prepared)),
+                None => by_island.push((target, vec![(key, prepared)])),
+            }
+        }
+
+        let mut done: Vec<(K, anyhow::Result<Outcome>)> = Vec::new();
+        for (island_id, group) in by_island {
+            for chunk in chunk_by_policy(group, policy) {
+                self.metrics.count("batch_groups", 1);
+                self.metrics.observe("batch_group_size", chunk.len() as f64);
                 match &self.backend {
                     Backend::Sim(_) => {
                         // the sim executes per request; co-routed grouping
@@ -787,45 +1027,45 @@ impl Orchestrator {
                         // the full failure-aware path, so a group routed to
                         // an island that crashed mid-batch fails over
                         // per-item instead of erroring out wholesale.
-                        for (idx, prepared) in group {
-                            results[idx] = Some(self.run_prepared(prepared));
+                        for (key, prepared) in chunk {
+                            done.push((key, self.run_prepared(prepared)));
                         }
                     }
                     Backend::Real { executor: island_executor, islands } => {
                         let spec = islands.iter().find(|i| i.id == island_id).cloned();
-                        let batch = spec.and_then(|island| {
-                            let requests: Vec<Request> = group.iter().map(|(_, p)| p.request.clone()).collect();
-                            match island_executor.execute_batch(&island, &requests) {
-                                Ok(responses) => Some(responses),
-                                // batch-level failure (island gone or link
-                                // dead): fall through to per-item failover
-                                Err(e) if executor::is_island_down(&e) => None,
-                                Err(e) => {
-                                    let msg = e.to_string();
-                                    for (idx, prepared) in group.iter() {
-                                        let err = anyhow::anyhow!("batch execute failed: {msg}");
-                                        self.audit_execution_failure(prepared, &err);
-                                        results[*idx] = Some(Err(err));
+                        let responses = match spec {
+                            // island gone from the mesh: per-item failover
+                            None => None,
+                            Some(island) => {
+                                let requests: Vec<Request> = chunk.iter().map(|(_, p)| p.request.clone()).collect();
+                                match island_executor.execute_batch(&island, &requests) {
+                                    Ok(responses) => Some(responses),
+                                    // batch-level failure (island gone or
+                                    // link dead): per-item failover
+                                    Err(e) if executor::is_island_down(&e) => None,
+                                    Err(e) => {
+                                        // fatal for the whole chunk
+                                        let msg = e.to_string();
+                                        for (key, prepared) in chunk {
+                                            let err = anyhow::anyhow!("batch execute failed: {msg}");
+                                            self.audit_execution_failure(&prepared, &err);
+                                            done.push((key, Err(err)));
+                                        }
+                                        continue;
                                     }
-                                    None
                                 }
                             }
-                        });
-                        // a fatal batch error already filled `results`
-                        let fatal = group.iter().any(|(idx, _)| results[*idx].is_some());
-                        if fatal {
-                            continue;
-                        }
-                        match batch {
+                        };
+                        match responses {
                             Some(responses) => {
-                                for ((idx, prepared), resp) in group.into_iter().zip(responses) {
+                                for ((key, prepared), resp) in chunk.into_iter().zip(responses) {
                                     let latency = resp.compute_ms + resp.network_ms;
-                                    results[idx] = Some(Ok(self.finish(prepared, latency, resp.cost, resp.text)));
+                                    done.push((key, Ok(self.finish(prepared, latency, resp.cost, resp.text))));
                                 }
                             }
                             None => {
-                                for (idx, prepared) in group {
-                                    results[idx] = Some(self.run_prepared(prepared));
+                                for (key, prepared) in chunk {
+                                    done.push((key, self.run_prepared(prepared)));
                                 }
                             }
                         }
@@ -833,21 +1073,240 @@ impl Orchestrator {
                 }
             }
         }
+        done
+    }
+}
 
-        // Append conversation turns in input order (executed items only),
-        // so the stored history reads as the user submitted it even though
-        // island groups completed in arbitrary order.
-        for (idx, item) in items.iter().enumerate() {
-            if let Some(Ok(out)) = &results[idx] {
+/// What the queue drain needs, besides the [`Prepared`] request, to resolve
+/// one queued submission: its ticket, and the original (pre-sanitization)
+/// prompt + session for conversation-turn recording.
+struct QueuedKey {
+    ticket: Arc<TicketCell>,
+    session_id: u64,
+    prompt: String,
+}
+
+// --- the non-blocking request lifecycle: enqueue → admit → [queue] →
+// --- route → batch → execute → resolve
+impl Orchestrator {
+    /// Enqueue a typed request and return a [`Ticket`] immediately (the
+    /// non-blocking serving surface). Admission (session lookup + rate
+    /// limit) runs here, so floods are refused at the front door; admitted
+    /// requests park in the bounded priority+deadline-ordered queue until
+    /// the worker pool ([`Orchestrator::start_queue`]) drains them. A full
+    /// queue sheds the incoming request fail-closed — audited, metered
+    /// (`rejected_queue_full`), and the ticket resolves at once with the
+    /// reject outcome. Tickets are never lost: every enqueue resolves
+    /// exactly once (served, rejected, shed, or an error).
+    pub fn enqueue(&self, session_id: u64, submit: SubmitRequest) -> Ticket {
+        let (ticket, cell) = Ticket::new_pair();
+        let user = match self.admit(session_id) {
+            Ok(user) => user,
+            Err(e) => {
+                // rate limited / unknown session: refused before consuming
+                // a request id, mirroring the blocking path's Err return
+                self.resolve_ticket(&cell, Err(e));
+                return ticket;
+            }
+        };
+        let id = self.next_request_id.fetch_add(1, Ordering::SeqCst);
+        let now = self.now_ms();
+        match self.queue.push(id, session_id, user, submit, now, Arc::clone(&cell)) {
+            Ok(depth) => {
+                // counted only for requests that actually entered the queue,
+                // so `enqueued` minus resolutions tracks in-flight depth
+                self.metrics.count("enqueued", 1);
+                self.metrics.gauge("queue_depth", depth as f64);
+            }
+            Err(item) => self.shed_queue_full(item),
+        }
+        ticket
+    }
+
+    /// Requests currently parked in the admission queue.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Spawn the worker pool (`Config::serve_workers` threads) that drains
+    /// the admission queue. Idempotent: the pool starts once per
+    /// orchestrator; later calls return 0. Takes the `Arc` by value (clone
+    /// one in: `Arc::clone(&orch).start_queue()`) because workers hold only
+    /// a `Weak` reference downgraded from it — dropping the last external
+    /// `Arc` shuts the queue down, resolves any still-parked tickets with
+    /// an error, and the workers exit. Requests enqueued before
+    /// `start_queue` stay parked until it is called (the queue-stress tests
+    /// use this to force deep queues).
+    pub fn start_queue(self: Arc<Self>) -> usize {
+        if self.workers_started.swap(true, Ordering::SeqCst) {
+            return 0;
+        }
+        for w in 0..self.serve_workers {
+            let weak = Arc::downgrade(&self);
+            let queue = Arc::clone(&self.queue);
+            let audit = Arc::clone(&self.audit);
+            std::thread::Builder::new()
+                .name(format!("islandrun-serve-{w}"))
+                .spawn(move || queue_worker(weak, queue, audit))
+                .expect("spawn serve worker");
+        }
+        self.serve_workers
+    }
+
+    /// Drain one popped batch: shed expired items, prepare + route the
+    /// rest, coalesce co-routed requests (across sessions — this is the
+    /// fleet-scale batching point) and resolve every ticket exactly once.
+    fn drain_batch(&self, batch: Vec<QueueItem>) {
+        let now = self.now_ms();
+        self.metrics.gauge("queue_depth", self.queue.len() as f64);
+        let mut ready: Vec<(QueuedKey, Prepared)> = Vec::new();
+        for item in batch {
+            let QueueItem { id, session_id, user, mut submit, enqueued_ms, deadline_at_ms, ticket, .. } = item;
+            if now > deadline_at_ms {
+                self.shed_expired(id, &user, &ticket, now - enqueued_ms);
+                continue;
+            }
+            self.metrics.observe("queue_wait_ms", (now - enqueued_ms).max(0.0));
+            // route on the REMAINING latency budget, not the original d_r:
+            // time already burned in the queue is gone, and the deadline
+            // feasibility filter must not pick an island that can only meet
+            // the full budget (soft overall — the failsafe still queues).
+            submit.deadline_ms = deadline_at_ms - now;
+            match self.prepare_admitted(id, session_id, user, &submit) {
+                Err(e) => self.resolve_ticket(&ticket, Err(e)),
+                Ok(Err(rejected)) => self.resolve_ticket(&ticket, Ok(rejected)),
+                Ok(Ok(prepared)) => ready.push((QueuedKey { ticket, session_id, prompt: submit.prompt }, prepared)),
+            }
+        }
+        for (key, result) in self.execute_coalesced(ready) {
+            if let Ok(out) = &result {
                 if let Some(r) = out.decision.routed() {
                     let _ = self
                         .sessions
-                        .with_mut(session_id, |s| s.record_turn(item.prompt, &out.response, r.target_privacy));
+                        .with_mut(key.session_id, |s| s.record_turn(&key.prompt, &out.response, r.target_privacy));
+                }
+            }
+            self.resolve_ticket(&key.ticket, result);
+        }
+    }
+
+    /// Resolve a ticket, folding `anyhow::Error` into the cloneable message
+    /// form and counting any double resolution (the queue-stress invariant:
+    /// `ticket_double_resolved` must stay 0).
+    fn resolve_ticket(&self, cell: &TicketCell, result: anyhow::Result<Outcome>) {
+        let value = result.map_err(|e| e.to_string());
+        if !cell.resolve(value) {
+            self.metrics.count("ticket_double_resolved", 1);
+        }
+    }
+
+    /// Shed an admitted request that found the queue full: fail-closed
+    /// reject with exactly one audit entry, zero cost, and an immediately
+    /// resolved ticket.
+    fn shed_queue_full(&self, item: QueueItem) {
+        self.metrics.count("rejected_queue_full", 1);
+        let reason = format!("shed: admission queue full ({} queued, fail-closed)", self.queue.capacity());
+        self.audit.record(AuditEntry::shed(item.id, &item.user, self.now_ms(), &reason));
+        self.resolve_shed(&item.ticket, item.id, reason);
+    }
+
+    /// Shed a request whose deadline `d_r` expired while it waited in the
+    /// queue: by Def. 2 the answer is already useless, so the drain rejects
+    /// it instead of burning island capacity on it.
+    fn shed_expired(&self, id: u64, user: &str, ticket: &TicketCell, waited_ms: f64) {
+        self.metrics.count("shed_deadline_expired", 1);
+        let reason = format!("shed: deadline expired after {waited_ms:.0} ms in queue");
+        self.audit.record(AuditEntry::shed(id, user, self.now_ms(), &reason));
+        self.resolve_shed(ticket, id, reason);
+    }
+
+    fn resolve_shed(&self, ticket: &TicketCell, id: u64, reason: String) {
+        let outcome = Outcome {
+            request_id: id,
+            s_r: 0.0,
+            decision: Decision::Reject { reason },
+            latency_ms: 0.0,
+            cost: 0.0,
+            response: String::new(),
+            sanitized: false,
+        };
+        self.resolve_ticket(ticket, Ok(outcome));
+    }
+}
+
+/// Worker-pool loop. Holds the queue `Arc` and the audit-log `Arc` but only
+/// a `Weak` orchestrator: the pool must never keep the orchestrator alive,
+/// or `Drop` (which closes the queue) could never run and the workers would
+/// block forever. Each iteration upgrades briefly to read the live batch
+/// policy, releases the `Arc` *before* blocking on the queue, then
+/// re-upgrades to drain. Drains run under `catch_unwind` so a panicking
+/// batch (poisoned lock, a bug in an agent) fails its own tickets with an
+/// error instead of leaking them — the worker survives, and every straggler
+/// this loop resolves is also audited, preserving "one entry per consumed
+/// id" on both the panic and the shutdown path.
+fn queue_worker(orch: Weak<Orchestrator>, queue: Arc<AdmissionQueue>, audit: Arc<AuditLog>) {
+    loop {
+        let policy = match orch.upgrade() {
+            Some(o) => o.batch_policy(),
+            None => return,
+        }; // Arc released here — never hold it across the blocking pop
+        let Some(batch) = queue.pop_batch(policy.max_batch, policy.max_wait) else {
+            return; // queue closed and drained: shutdown
+        };
+        let Some(o) = orch.upgrade() else {
+            // orchestrator dropped between pop and drain: its Drop already
+            // handled everything still queued; these popped items are ours
+            // to fail — resolved AND audited (never drained, so none of
+            // their ids can already be on the trail), so no id vanishes
+            for item in &batch {
+                if item.ticket.resolve(Err("orchestrator shut down before the request was served".into()))
+                    && !audit.contains(item.id)
+                {
+                    let entry =
+                        AuditEntry::shed(item.id, &item.user, item.enqueued_ms, "shed: orchestrator shut down");
+                    audit.record(entry);
+                }
+            }
+            return;
+        };
+        let stragglers: Vec<(u64, String, Arc<TicketCell>)> =
+            batch.iter().map(|i| (i.id, i.user.clone(), Arc::clone(&i.ticket))).collect();
+        let drained = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| o.drain_batch(batch)));
+        if drained.is_err() {
+            // drain_batch resolves (and audits) as it goes; first-one-wins
+            // resolution identifies the stragglers of the panicked batch.
+            // A straggler whose execution already reached the audit trail
+            // (panic between finish() and its ticket resolution) must NOT
+            // get a second entry — the contains() check keeps the §XIV
+            // "exactly one entry per consumed id" invariant through panics.
+            o.metrics.count("queue_drain_panics", 1);
+            let now = o.now_ms();
+            for (id, user, cell) in &stragglers {
+                if cell.resolve(Err("internal error: queue drain panicked".into())) && !o.audit.contains(*id) {
+                    o.audit.record(AuditEntry::shed(*id, user, now, "shed: queue drain panicked"));
                 }
             }
         }
+        drop(o);
+    }
+}
 
-        results.into_iter().map(|r| r.expect("every item decided")).collect()
+impl Drop for Orchestrator {
+    fn drop(&mut self) {
+        // Close the queue: wakes every worker (they exit on the None pop)
+        // and hands back whatever was still parked — those requests
+        // consumed ids, so they are audited and their tickets resolved
+        // rather than silently lost.
+        let leftovers = self.queue.close();
+        if leftovers.is_empty() {
+            return;
+        }
+        let now = self.now_ms();
+        for item in leftovers {
+            self.audit
+                .record(AuditEntry::shed(item.id, &item.user, now, "shed: orchestrator shut down while queued"));
+            let _ = item.ticket.resolve(Err("orchestrator shut down before the request was served".to_string()));
+        }
     }
 }
 
@@ -881,11 +1340,7 @@ mod tests {
         // turn 1: sensitive, runs locally
         o.submit(s, "patient john doe has diabetes", PriorityTier::Primary, None).unwrap();
         // saturate local islands so the next burstable turn offloads
-        for island in o.fleet().unwrap().islands().iter() {
-            if !island.spec.unbounded() {
-                island.set_external_load(0.99);
-            }
-        }
+        o.saturate_bounded_islands(0.99);
         let out = o.submit(s, "what are common complications", PriorityTier::Burstable, None).unwrap();
         let islands = preset_personal_group();
         let target = islands.iter().find(|i| i.id == out.decision.target().unwrap()).unwrap();
@@ -900,7 +1355,7 @@ mod tests {
     fn rejection_is_fail_closed_not_error() {
         let o = sim_orchestrator();
         // remove all personal islands: sensitive requests unroutable
-        o.fleet().unwrap().retain(|i| i.privacy < 0.9);
+        o.retain_islands(|i| i.privacy < 0.9);
         let s = o.open_session("bob");
         let out = o.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
         assert!(matches!(out.decision, Decision::Reject { .. }));
@@ -929,11 +1384,7 @@ mod tests {
         let o = sim_orchestrator();
         let s = o.open_session("carol");
         // saturate local → burstable goes to cloud and pays
-        for island in o.fleet().unwrap().islands().iter() {
-            if !island.spec.unbounded() {
-                island.set_external_load(0.99);
-            }
-        }
+        o.saturate_bounded_islands(0.99);
         let out = o.submit(s, "what is the capital of france", PriorityTier::Burstable, None).unwrap();
         assert!(out.cost > 0.0);
         assert!(o.ledger.spent("carol") > 0.0);
@@ -949,7 +1400,7 @@ mod tests {
         // compliance scan over the trail: no entry with s_r>=0.9 ran below P=0.9
         assert!(o.audit.violations(0.9, 0.9).is_empty());
         // rejections are audited too
-        o.fleet().unwrap().retain(|i| i.privacy < 0.9);
+        o.retain_islands(|i| i.privacy < 0.9);
         let out = o.submit(s, "patient jane smith mrn 12345", PriorityTier::Primary, None).unwrap();
         assert!(matches!(out.decision, Decision::Reject { .. }));
         assert_eq!(o.audit.len(), 3);
@@ -999,14 +1450,14 @@ mod tests {
         let o = sim_orchestrator();
         assert!(o.crash_island(IslandId(1)));
         assert!(!o.lighthouse.is_online(IslandId(1)));
-        assert!(!o.fleet().unwrap().get(IslandId(1)).unwrap().is_online());
+        assert!(!o.island_snapshot(IslandId(1)).unwrap().online);
         assert!(o.revive_island(IslandId(1)));
         assert!(o.lighthouse.is_online(IslandId(1)));
         let left = o.leave_island(IslandId(2)).expect("island 2 leaves");
-        assert!(o.fleet().unwrap().get(IslandId(2)).is_none());
+        assert!(o.island_snapshot(IslandId(2)).is_none());
         assert!(!o.lighthouse.is_online(IslandId(2)));
         assert!(o.join_island(left));
-        assert!(o.fleet().unwrap().get(IslandId(2)).is_some());
+        assert!(o.island_snapshot(IslandId(2)).is_some());
         assert!(o.lighthouse.is_online(IslandId(2)));
         assert!(!o.crash_island(IslandId(99)), "unknown island");
         assert_eq!(o.metrics.counter_value("island_crashes"), 1);
@@ -1036,17 +1487,20 @@ mod tests {
         cfg.rate_limit_rps = 1e9;
         let fleet = Fleet::new(preset_personal_group(), 9);
         let o = Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 9);
-        let fleet = o.fleet().unwrap();
         // all privacy-eligible islands are saturated (capacity 0, so routing
         // lands in the failsafe) and all but one die *silently* — the
         // liveness view has no idea until executions start failing
-        let personal: Vec<IslandId> = fleet.specs().iter().filter(|i| i.privacy >= 0.95).map(|i| i.id).collect();
+        let personal: Vec<IslandId> = o
+            .island_ids()
+            .into_iter()
+            .filter(|id| o.island_snapshot(*id).unwrap().spec.privacy >= 0.95)
+            .collect();
         assert!(personal.len() >= 2, "preset needs >= 2 personal islands");
         let survivor = personal[0];
         for id in &personal {
-            fleet.get(*id).unwrap().set_external_load(1.0);
+            o.set_island_load(*id, 1.0);
             if *id != survivor {
-                fleet.crash(*id);
+                o.silent_crash_island(*id);
             }
         }
         let s = o.open_session("alice");
@@ -1070,11 +1524,10 @@ mod tests {
         cfg.rate_limit_rps = 1e9;
         let fleet = Fleet::new(preset_personal_group(), 10);
         let o = Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 10);
-        let fleet = o.fleet().unwrap();
         // every privacy-eligible island dies silently
-        for spec in fleet.specs() {
-            if spec.privacy >= 0.95 {
-                fleet.crash(spec.id);
+        for id in o.island_ids() {
+            if o.island_snapshot(id).unwrap().spec.privacy >= 0.95 {
+                o.silent_crash_island(id);
             }
         }
         let s = o.open_session("bob");
@@ -1114,5 +1567,125 @@ mod tests {
         assert_eq!(islands.iter().find(|i| i.id == phi_target).unwrap().privacy, 1.0);
         // grouping metric recorded
         assert!(o.metrics.histogram("batch_group_size").unwrap().count() >= 1);
+    }
+
+    #[test]
+    fn enqueue_ticket_end_to_end() {
+        let o = Arc::new(sim_orchestrator());
+        assert_eq!(Arc::clone(&o).start_queue(), Config::default().serve_workers);
+        assert_eq!(Arc::clone(&o).start_queue(), 0, "worker pool starts once");
+        let s = o.open_session("queueing");
+        let t1 = o.enqueue(s, SubmitRequest::new("hello world"));
+        let t2 = o.enqueue(s, SubmitRequest::new("patient john doe ssn 123-45-6789").priority(PriorityTier::Primary));
+        let out1 = t1.wait().unwrap();
+        let out2 = t2.wait().unwrap();
+        assert!(out1.decision.target().is_some());
+        // the PHI request kept the privacy constraint through the queue path
+        let islands = preset_personal_group();
+        let phi = islands.iter().find(|i| Some(i.id) == out2.decision.target()).unwrap();
+        assert_eq!(phi.privacy, 1.0);
+        assert_ne!(out1.request_id, out2.request_id);
+        // terminal reads are repeatable
+        assert_eq!(t1.try_poll().unwrap().unwrap().request_id, out1.request_id);
+        assert_eq!(o.metrics.counter_value("enqueued"), 2);
+        assert_eq!(o.audit.len(), 2);
+        assert_eq!(o.metrics.counter_value("ticket_double_resolved"), 0);
+    }
+
+    #[test]
+    fn enqueue_unknown_session_resolves_err_without_consuming_an_id() {
+        let o = Arc::new(sim_orchestrator());
+        let ticket = o.enqueue(999, SubmitRequest::new("hello"));
+        assert!(ticket.is_resolved(), "admission failures resolve immediately");
+        let err = ticket.wait().unwrap_err().to_string();
+        assert!(err.contains("unknown session"), "{err}");
+        assert_eq!(o.audit.len(), 0, "refused submissions consume no id and leave no entry");
+        assert_eq!(o.metrics.counter_value("enqueued"), 0);
+    }
+
+    #[test]
+    fn queue_full_sheds_fail_closed_with_one_audit_entry_each() {
+        let mut cfg = Config::default();
+        cfg.rate_limit_rps = 1e9;
+        cfg.queue_capacity = 4;
+        cfg.serve_workers = 1;
+        let fleet = Fleet::new(preset_personal_group(), 12);
+        let o = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 12));
+        let s = o.open_session("flooder");
+        // workers not started yet: the 5th..10th enqueues find the queue full
+        let tickets: Vec<Ticket> = (0..10).map(|_| o.enqueue(s, SubmitRequest::new("hello world"))).collect();
+        assert_eq!(o.metrics.counter_value("rejected_queue_full"), 6);
+        assert_eq!(o.queue_depth(), 4);
+        let shed_now: usize = tickets.iter().filter(|t| t.is_resolved()).count();
+        assert_eq!(shed_now, 6, "sheds resolve immediately");
+        Arc::clone(&o).start_queue();
+        let outcomes: Vec<Outcome> = tickets.iter().map(|t| t.wait().unwrap()).collect();
+        let sheds: Vec<&Outcome> = outcomes.iter().filter(|out| out.decision.target().is_none()).collect();
+        assert_eq!(sheds.len(), 6);
+        for shed in &sheds {
+            assert_eq!(shed.cost, 0.0);
+            match &shed.decision {
+                Decision::Reject { reason } => assert!(reason.contains("queue full"), "{reason}"),
+                other => panic!("expected shed reject, got {other:?}"),
+            }
+        }
+        // exactly one audit entry per request — served AND shed
+        assert_eq!(o.audit.len(), 10);
+        assert_eq!(o.audit.sheds().len(), 6);
+        assert_eq!(o.metrics.counter_value("ticket_double_resolved"), 0);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_drain_time() {
+        let mut cfg = Config::default();
+        cfg.rate_limit_rps = 1e9;
+        let fleet = Fleet::new(preset_personal_group(), 13);
+        let o = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 13));
+        let s = o.open_session("latecomer");
+        let tickets: Vec<Ticket> =
+            (0..3).map(|_| o.enqueue(s, SubmitRequest::new("hello world").deadline_ms(50.0))).collect();
+        // virtual time races past every deadline while the requests queue
+        o.advance(10_000.0);
+        Arc::clone(&o).start_queue();
+        for t in &tickets {
+            let out = t.wait().unwrap();
+            match &out.decision {
+                Decision::Reject { reason } => assert!(reason.contains("deadline expired"), "{reason}"),
+                other => panic!("expected deadline shed, got {other:?}"),
+            }
+            assert_eq!(out.cost, 0.0);
+        }
+        assert_eq!(o.metrics.counter_value("shed_deadline_expired"), 3);
+        assert_eq!(o.audit.sheds().len(), 3);
+        assert_eq!(o.audit.len(), 3);
+    }
+
+    #[test]
+    fn set_batch_policy_is_live_through_arc() {
+        let o = Arc::new(sim_orchestrator());
+        o.set_batch_policy(BatchPolicy { max_batch: 2, max_wait: std::time::Duration::from_millis(1) });
+        assert_eq!(o.batch_policy().max_batch, 2);
+        let s = o.open_session("retuner");
+        let items: Vec<BatchItem<'_>> = (0..5)
+            .map(|_| BatchItem { prompt: "hello world", priority: PriorityTier::Secondary, dataset: None })
+            .collect();
+        let results = o.submit_many(s, &items);
+        assert!(results.iter().all(|r| r.is_ok()));
+        // no coalesced group may exceed the retuned cap
+        let h = o.metrics.histogram("batch_group_size").unwrap();
+        assert!(h.max() <= 2.0, "group of {} exceeded max_batch=2", h.max());
+    }
+
+    #[test]
+    fn sensitivity_floor_tightens_routing_from_the_server_surface() {
+        let o = sim_orchestrator();
+        let s = o.open_session("cautious");
+        // a benign prompt, declared sensitive by the caller: routing must
+        // honor the floor even though MIST scores it low
+        let out = o.submit_request(s, SubmitRequest::new("hello world").sensitivity(0.95)).unwrap();
+        assert!(out.s_r >= 0.95);
+        let islands = preset_personal_group();
+        let target = islands.iter().find(|i| Some(i.id) == out.decision.target()).unwrap();
+        assert!(target.privacy >= 0.95, "landed on {} (P={})", target.name, target.privacy);
     }
 }

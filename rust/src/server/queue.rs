@@ -1,0 +1,400 @@
+//! Request-lifecycle frontend: the typed [`SubmitRequest`] builder and the
+//! bounded, priority+deadline-ordered `AdmissionQueue` (crate-internal)
+//! behind [`Orchestrator::enqueue`].
+//!
+//! The queue is the backpressure point of the non-blocking serving surface
+//! (enqueue → admit → route → batch → execute → resolve): producers push
+//! admitted requests and return immediately with a [`Ticket`]; the worker
+//! pool pops *batches* so co-routed requests coalesce across sessions and
+//! submitters. A full queue sheds the incoming request fail-closed — the
+//! shed is audited and metered (`rejected_queue_full`), never silent.
+//!
+//! Ordering: [`PriorityTier`] first (Primary ahead of Secondary ahead of
+//! Burstable), then earliest absolute deadline (enqueue time + `d_r`), then
+//! FIFO sequence as the total-order tiebreak. Requests whose deadline
+//! already expired while queued are shed at pop time by the drain
+//! (`shed_deadline_expired`).
+//!
+//! [`Orchestrator::enqueue`]: crate::server::Orchestrator::enqueue
+//! [`Ticket`]: crate::server::Ticket
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::server::ticket::TicketCell;
+use crate::types::PriorityTier;
+
+/// Typed, builder-style submission: every routing-relevant [`Request`] knob
+/// the serving surface supports, without positional-argument creep.
+///
+/// ```
+/// use islandrun::server::SubmitRequest;
+/// use islandrun::types::PriorityTier;
+///
+/// let sr = SubmitRequest::new("summarize the contract")
+///     .priority(PriorityTier::Secondary)
+///     .deadline_ms(500.0)
+///     .min_jurisdiction(0.9)
+///     .dataset("case_law")
+///     .max_new_tokens(32);
+/// assert_eq!(sr.deadline_ms, 500.0);
+/// ```
+///
+/// [`Request`]: crate::types::Request
+#[derive(Clone, Debug)]
+pub struct SubmitRequest {
+    /// Input prompt `q`.
+    pub prompt: String,
+    /// §IX.B priority tier (drives queue ordering and tier admission).
+    pub priority: PriorityTier,
+    /// Maximum acceptable latency `d_r` in ms. Orders the admission queue,
+    /// sheds expired requests at drain time, and excludes islands whose
+    /// base RTT already exceeds it from the scored routing sets.
+    pub deadline_ms: f64,
+    /// Caller-declared sensitivity floor: routing uses
+    /// `max(MIST score, floor)`, so a caller can only *tighten* the privacy
+    /// constraint, never relax it below what MIST measured.
+    pub sensitivity_floor: Option<f64>,
+    /// §XIV regulatory compliance: minimum jurisdiction score.
+    pub min_jurisdiction: Option<f64>,
+    /// §XIV heterogeneous model support: required model family.
+    pub model: Option<String>,
+    /// Data-locality constraint (§III.F): dataset the request must run next to.
+    pub dataset: Option<String>,
+    /// Max new tokens to generate.
+    pub max_new_tokens: usize,
+}
+
+impl SubmitRequest {
+    /// A single-turn submission with the same defaults as
+    /// [`Request::new`](crate::types::Request::new).
+    pub fn new(prompt: impl Into<String>) -> SubmitRequest {
+        SubmitRequest {
+            prompt: prompt.into(),
+            priority: PriorityTier::Secondary,
+            deadline_ms: 2000.0,
+            sensitivity_floor: None,
+            min_jurisdiction: None,
+            model: None,
+            dataset: None,
+            max_new_tokens: 16,
+        }
+    }
+
+    pub fn priority(mut self, p: PriorityTier) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn deadline_ms(mut self, ms: f64) -> Self {
+        self.deadline_ms = ms;
+        self
+    }
+
+    /// Declare a sensitivity floor in [0,1]; routing uses the max of this
+    /// and the MIST score (callers can tighten privacy, never loosen it).
+    pub fn sensitivity(mut self, floor: f64) -> Self {
+        self.sensitivity_floor = Some(floor.clamp(0.0, 1.0));
+        self
+    }
+
+    pub fn min_jurisdiction(mut self, floor: f64) -> Self {
+        self.min_jurisdiction = Some(floor);
+        self
+    }
+
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = Some(model.to_string());
+        self
+    }
+
+    pub fn dataset(mut self, dataset: &str) -> Self {
+        self.dataset = Some(dataset.to_string());
+        self
+    }
+
+    pub fn max_new_tokens(mut self, n: usize) -> Self {
+        self.max_new_tokens = n;
+        self
+    }
+}
+
+/// One admitted request parked in the queue: everything the drain needs to
+/// finish the lifecycle without touching the producer again.
+#[derive(Debug)]
+pub(crate) struct QueueItem {
+    /// Request id, allocated at enqueue time (sheds are audited under it).
+    pub id: u64,
+    pub session_id: u64,
+    pub user: String,
+    pub submit: SubmitRequest,
+    /// Orchestrator clock (virtual or wall ms) at enqueue.
+    pub enqueued_ms: f64,
+    /// Absolute deadline: `enqueued_ms + submit.deadline_ms`.
+    pub deadline_at_ms: f64,
+    /// FIFO sequence, the final total-order tiebreak.
+    pub seq: u64,
+    pub ticket: Arc<TicketCell>,
+}
+
+impl QueueItem {
+    /// Lexicographic pop key: smallest pops first.
+    fn key_cmp(&self, other: &QueueItem) -> Ordering {
+        self.submit
+            .priority
+            .cmp(&other.submit.priority)
+            .then(self.deadline_at_ms.total_cmp(&other.deadline_at_ms))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+// `BinaryHeap` is a max-heap; reverse the key so the smallest (most urgent)
+// item is the heap maximum.
+impl Ord for QueueItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key_cmp(other).reverse()
+    }
+}
+
+impl PartialOrd for QueueItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for QueueItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.key_cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for QueueItem {}
+
+#[derive(Debug)]
+struct Inner {
+    heap: BinaryHeap<QueueItem>,
+    next_seq: u64,
+    closed: bool,
+}
+
+/// Bounded, priority+deadline-ordered admission queue (see module docs).
+#[derive(Debug)]
+pub(crate) struct AdmissionQueue {
+    inner: Mutex<Inner>,
+    cond: Condvar,
+    capacity: usize,
+}
+
+impl AdmissionQueue {
+    pub(crate) fn new(capacity: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            inner: Mutex::new(Inner { heap: BinaryHeap::new(), next_seq: 0, closed: false }),
+            cond: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub(crate) fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.inner.lock().unwrap().heap.len()
+    }
+
+    /// Push an admitted request. `Ok(depth)` on success; `Err(item)` hands
+    /// the item back when the queue is full (or closed) so the caller can
+    /// shed it fail-closed with an audit entry.
+    pub(crate) fn push(
+        &self,
+        id: u64,
+        session_id: u64,
+        user: String,
+        submit: SubmitRequest,
+        now_ms: f64,
+        ticket: Arc<TicketCell>,
+    ) -> Result<usize, QueueItem> {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        let deadline_at_ms = now_ms + submit.deadline_ms.max(0.0);
+        let item = QueueItem { id, session_id, user, submit, enqueued_ms: now_ms, deadline_at_ms, seq, ticket };
+        if inner.closed || inner.heap.len() >= self.capacity {
+            return Err(item);
+        }
+        inner.heap.push(item);
+        let depth = inner.heap.len();
+        drop(inner);
+        self.cond.notify_one();
+        Ok(depth)
+    }
+
+    /// Pop up to `max` items in priority order, blocking while the queue is
+    /// empty. Once at least one item is available, lingers up to `max_wait`
+    /// (wall time) for the batch to fill toward `max` — the classic
+    /// latency-vs-occupancy tradeoff of `BatchPolicy`, applied at the
+    /// cross-session coalescing point; `Duration::ZERO` disables the
+    /// linger. Returns `None` once the queue is closed and drained (worker
+    /// shutdown signal).
+    pub(crate) fn pop_batch(&self, max: usize, max_wait: Duration) -> Option<Vec<QueueItem>> {
+        let max = max.max(1);
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            inner = self.cond.wait_while(inner, |i| i.heap.is_empty() && !i.closed).unwrap();
+            if inner.heap.is_empty() {
+                return None; // closed and drained
+            }
+            // linger for more arrivals while the batch is below `max`
+            let give_up_at = Instant::now() + max_wait;
+            while inner.heap.len() < max && !inner.closed {
+                let now = Instant::now();
+                if now >= give_up_at {
+                    break;
+                }
+                let (guard, wait) = self.cond.wait_timeout(inner, give_up_at - now).unwrap();
+                inner = guard;
+                if wait.timed_out() {
+                    break;
+                }
+            }
+            if inner.heap.is_empty() {
+                continue; // another worker drained it while we lingered
+            }
+            let n = max.min(inner.heap.len());
+            let mut batch = Vec::with_capacity(n);
+            for _ in 0..n {
+                batch.push(inner.heap.pop().expect("len checked"));
+            }
+            return Some(batch);
+        }
+    }
+
+    /// Close the queue: wake every blocked worker and hand back whatever was
+    /// still parked so the caller can resolve those tickets (no ticket may
+    /// be silently lost, even at shutdown).
+    pub(crate) fn close(&self) -> Vec<QueueItem> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        let leftovers = std::mem::take(&mut inner.heap).into_sorted_vec();
+        drop(inner);
+        self.cond.notify_all();
+        leftovers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::ticket::Ticket;
+
+    fn push(q: &AdmissionQueue, id: u64, sr: SubmitRequest, now: f64) -> Result<usize, QueueItem> {
+        let (_ticket, cell) = Ticket::new_pair();
+        q.push(id, 1, "u".into(), sr, now, cell)
+    }
+
+    #[test]
+    fn pops_priority_then_deadline_then_fifo() {
+        let q = AdmissionQueue::new(16);
+        push(&q, 1, SubmitRequest::new("a").priority(PriorityTier::Burstable), 0.0).unwrap();
+        push(&q, 2, SubmitRequest::new("b").priority(PriorityTier::Secondary).deadline_ms(900.0), 0.0).unwrap();
+        push(&q, 3, SubmitRequest::new("c").priority(PriorityTier::Primary), 0.0).unwrap();
+        push(&q, 4, SubmitRequest::new("d").priority(PriorityTier::Secondary).deadline_ms(100.0), 0.0).unwrap();
+        push(&q, 5, SubmitRequest::new("e").priority(PriorityTier::Secondary).deadline_ms(100.0), 0.0).unwrap();
+        let order: Vec<u64> = q.pop_batch(8, Duration::ZERO).unwrap().iter().map(|i| i.id).collect();
+        // primary first, then secondary by earliest deadline (FIFO tiebreak
+        // between 4 and 5), burstable last
+        assert_eq!(order, vec![3, 4, 5, 2, 1]);
+    }
+
+    #[test]
+    fn bounded_capacity_hands_back_the_overflow_item() {
+        let q = AdmissionQueue::new(2);
+        push(&q, 1, SubmitRequest::new("a"), 0.0).unwrap();
+        push(&q, 2, SubmitRequest::new("b"), 0.0).unwrap();
+        let shed = push(&q, 3, SubmitRequest::new("c"), 0.0).unwrap_err();
+        assert_eq!(shed.id, 3, "the incoming item is shed, queued work is kept");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pop_batch_caps_and_leaves_the_rest() {
+        let q = AdmissionQueue::new(16);
+        for id in 0..5 {
+            push(&q, id, SubmitRequest::new("x"), id as f64).unwrap();
+        }
+        assert_eq!(q.pop_batch(3, Duration::ZERO).unwrap().len(), 3);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_batch(8, Duration::ZERO).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn close_returns_leftovers_and_unblocks_poppers() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(16));
+        let q2 = std::sync::Arc::clone(&q);
+        let popper = std::thread::spawn(move || q2.pop_batch(4, Duration::ZERO));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        push(&q, 1, SubmitRequest::new("a"), 0.0).unwrap();
+        // the blocked popper wakes with the item
+        assert_eq!(popper.join().unwrap().unwrap().len(), 1);
+        push(&q, 2, SubmitRequest::new("b"), 0.0).unwrap();
+        let leftovers = q.close();
+        assert_eq!(leftovers.len(), 1);
+        assert_eq!(leftovers[0].id, 2);
+        // closed + drained: poppers get the shutdown signal, pushes shed
+        assert!(q.pop_batch(4, Duration::ZERO).is_none());
+        assert!(push(&q, 3, SubmitRequest::new("c"), 0.0).is_err());
+    }
+
+    #[test]
+    fn linger_fills_the_batch_from_late_arrivals() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(16));
+        push(&q, 1, SubmitRequest::new("a"), 0.0).unwrap();
+        let q2 = std::sync::Arc::clone(&q);
+        // the popper sees one item, lingers, and the late arrival joins
+        // the same batch instead of becoming its own single-item dispatch
+        let popper = std::thread::spawn(move || q2.pop_batch(2, Duration::from_millis(200)));
+        std::thread::sleep(Duration::from_millis(20));
+        push(&q, 2, SubmitRequest::new("b"), 0.0).unwrap();
+        let batch = popper.join().unwrap().unwrap();
+        assert_eq!(batch.len(), 2, "linger must coalesce the late arrival");
+        // with no further arrivals, the linger gives up after max_wait
+        push(&q, 3, SubmitRequest::new("c"), 0.0).unwrap();
+        let t0 = Instant::now();
+        let batch = q.pop_batch(4, Duration::from_millis(20)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn deadline_is_absolute_from_enqueue_time() {
+        let q = AdmissionQueue::new(16);
+        // enqueued later but with a much shorter relative deadline → pops first
+        push(&q, 1, SubmitRequest::new("a").deadline_ms(5000.0), 0.0).unwrap();
+        push(&q, 2, SubmitRequest::new("b").deadline_ms(100.0), 1000.0).unwrap();
+        let order: Vec<u64> = q.pop_batch(2, Duration::ZERO).unwrap().iter().map(|i| i.id).collect();
+        assert_eq!(order, vec![2, 1]);
+    }
+
+    #[test]
+    fn builder_covers_every_knob() {
+        let sr = SubmitRequest::new("q")
+            .priority(PriorityTier::Primary)
+            .deadline_ms(250.0)
+            .sensitivity(0.95)
+            .min_jurisdiction(0.9)
+            .model("tinylm")
+            .dataset("case_law")
+            .max_new_tokens(64);
+        assert_eq!(sr.priority, PriorityTier::Primary);
+        assert_eq!(sr.deadline_ms, 250.0);
+        assert_eq!(sr.sensitivity_floor, Some(0.95));
+        assert_eq!(sr.min_jurisdiction, Some(0.9));
+        assert_eq!(sr.model.as_deref(), Some("tinylm"));
+        assert_eq!(sr.dataset.as_deref(), Some("case_law"));
+        assert_eq!(sr.max_new_tokens, 64);
+        // the sensitivity floor clamps into [0,1]
+        assert_eq!(SubmitRequest::new("q").sensitivity(7.0).sensitivity_floor, Some(1.0));
+    }
+}

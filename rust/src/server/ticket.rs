@@ -1,0 +1,149 @@
+//! Non-blocking request outcomes: a [`Ticket`] is handed back by
+//! [`Orchestrator::enqueue`] the moment a request clears admission, and
+//! resolves exactly once when the worker pool finishes (or sheds) the
+//! request.
+//!
+//! The cell behind a ticket is a condvar-backed one-shot: the queue drain
+//! resolves it with either a completed [`Outcome`] (served, fail-closed
+//! reject, or shed) or an error message (session raced a close, fatal
+//! execution error, orchestrator shut down). [`Ticket::wait`] blocks;
+//! [`Ticket::try_poll`] never does — both may be called repeatedly and see
+//! the same terminal value. `resolve` returns whether it won the one-shot,
+//! so the queue-stress invariant "no ticket lost or double-resolved" is
+//! checkable: the orchestrator counts any second resolution in the
+//! `ticket_double_resolved` metric (which must stay 0).
+//!
+//! [`Orchestrator::enqueue`]: crate::server::Orchestrator::enqueue
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::server::orchestrator::Outcome;
+
+/// Terminal value of a ticket: a completed outcome, or the error message of
+/// a submission that fell out of the pipeline (`anyhow::Error` is not
+/// `Clone`, and a ticket must serve repeated reads).
+type TicketValue = Result<Outcome, String>;
+
+/// Shared one-shot cell between a [`Ticket`] and the worker that resolves it.
+#[derive(Debug, Default)]
+pub(crate) struct TicketCell {
+    state: Mutex<Option<TicketValue>>,
+    cond: Condvar,
+}
+
+impl TicketCell {
+    /// Resolve the one-shot. Returns `true` when this call installed the
+    /// value, `false` when the ticket was already resolved (the new value is
+    /// dropped — first resolution wins).
+    pub(crate) fn resolve(&self, value: TicketValue) -> bool {
+        let mut state = self.state.lock().unwrap();
+        if state.is_some() {
+            return false;
+        }
+        *state = Some(value);
+        self.cond.notify_all();
+        true
+    }
+}
+
+/// Handle to one enqueued request's eventual [`Outcome`].
+///
+/// Returned by [`crate::server::Orchestrator::enqueue`]. Dropping a ticket
+/// is safe — the request still runs and is still audited; only the caller's
+/// view of the outcome is discarded.
+#[derive(Clone, Debug)]
+pub struct Ticket {
+    cell: Arc<TicketCell>,
+}
+
+impl Ticket {
+    /// A fresh unresolved ticket plus the resolver side for the queue.
+    pub(crate) fn new_pair() -> (Ticket, Arc<TicketCell>) {
+        let cell = Arc::new(TicketCell::default());
+        (Ticket { cell: Arc::clone(&cell) }, cell)
+    }
+
+    /// Block until the request reaches a terminal state and return it.
+    /// Requires a running worker pool ([`crate::server::Orchestrator::start_queue`])
+    /// unless the ticket was shed/rejected at enqueue time.
+    pub fn wait(&self) -> anyhow::Result<Outcome> {
+        let state = self.cell.state.lock().unwrap();
+        let state = self.cell.cond.wait_while(state, |s| s.is_none()).unwrap();
+        match state.as_ref().expect("wait_while guarantees Some") {
+            Ok(outcome) => Ok(outcome.clone()),
+            Err(msg) => Err(anyhow::anyhow!("{msg}")),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the request is still queued or
+    /// executing, `Some` once terminal (repeatable).
+    pub fn try_poll(&self) -> Option<anyhow::Result<Outcome>> {
+        let state = self.cell.state.lock().unwrap();
+        state.as_ref().map(|v| match v {
+            Ok(outcome) => Ok(outcome.clone()),
+            Err(msg) => Err(anyhow::anyhow!("{msg}")),
+        })
+    }
+
+    /// Has the request reached a terminal state yet?
+    pub fn is_resolved(&self) -> bool {
+        self.cell.state.lock().unwrap().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::waves::Decision;
+
+    fn outcome(id: u64) -> Outcome {
+        Outcome {
+            request_id: id,
+            s_r: 0.1,
+            decision: Decision::Reject { reason: "test".into() },
+            latency_ms: 0.0,
+            cost: 0.0,
+            response: String::new(),
+            sanitized: false,
+        }
+    }
+
+    #[test]
+    fn resolve_then_wait_and_poll() {
+        let (ticket, cell) = Ticket::new_pair();
+        assert!(!ticket.is_resolved());
+        assert!(ticket.try_poll().is_none());
+        assert!(cell.resolve(Ok(outcome(7))));
+        assert!(ticket.is_resolved());
+        assert_eq!(ticket.wait().unwrap().request_id, 7);
+        // repeatable reads see the same value
+        assert_eq!(ticket.try_poll().unwrap().unwrap().request_id, 7);
+        assert_eq!(ticket.wait().unwrap().request_id, 7);
+    }
+
+    #[test]
+    fn second_resolution_loses() {
+        let (ticket, cell) = Ticket::new_pair();
+        assert!(cell.resolve(Ok(outcome(1))));
+        assert!(!cell.resolve(Ok(outcome(2))), "double resolution must report false");
+        assert_eq!(ticket.wait().unwrap().request_id, 1, "first resolution wins");
+    }
+
+    #[test]
+    fn error_resolution_surfaces_as_err() {
+        let (ticket, cell) = Ticket::new_pair();
+        assert!(cell.resolve(Err("rate limited: user mallory".into())));
+        let err = ticket.wait().unwrap_err().to_string();
+        assert!(err.contains("rate limited"), "{err}");
+        assert!(ticket.try_poll().unwrap().is_err());
+    }
+
+    #[test]
+    fn wait_blocks_until_resolved_across_threads() {
+        let (ticket, cell) = Ticket::new_pair();
+        let waiter = std::thread::spawn(move || ticket.wait().unwrap().request_id);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(cell.resolve(Ok(outcome(42))));
+        assert_eq!(waiter.join().unwrap(), 42);
+    }
+}

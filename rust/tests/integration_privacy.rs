@@ -47,11 +47,7 @@ fn guarantee2_context_sanitization_on_every_downward_crossing() {
     let t1 = orch.submit(s, "patient john doe ssn 123-45-6789 with diabetes", PriorityTier::Primary, None).unwrap();
     assert!(!t1.sanitized);
     // push follow-ups off the workstation
-    for island in orch.fleet().unwrap().islands().iter() {
-        if !island.spec.unbounded() {
-            island.set_external_load(0.99);
-        }
-    }
+    orch.saturate_bounded_islands(0.99);
     let t2 = orch.submit(s, "suggest general wellness resources", PriorityTier::Burstable, None).unwrap();
     let target = islands.iter().find(|i| Some(i.id) == t2.decision.target()).unwrap();
     assert!(target.privacy < 1.0);
@@ -86,11 +82,7 @@ fn desanitized_responses_keep_conversation_coherent() {
     let s = orch.open_session("alice");
     orch.submit(s, "patient jane smith has hypertension", PriorityTier::Primary, None).unwrap();
     // force offload; the sim response echoes placeholders back
-    for island in orch.fleet().unwrap().islands().iter() {
-        if !island.spec.unbounded() {
-            island.set_external_load(0.99);
-        }
-    }
+    orch.saturate_bounded_islands(0.99);
     let out = orch.submit(s, "thanks, anything else to monitor", PriorityTier::Burstable, None).unwrap();
     assert!(out.sanitized);
     // stored history view (what the user sees) contains original entities,

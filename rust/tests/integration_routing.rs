@@ -1,5 +1,8 @@
 //! Integration: WAVES routing composed with LIGHTHOUSE, TIDE and the fleet
-//! simulator — scenario-level behavior from the paper's §I.A and §III.D.
+//! simulator — scenario-level behavior from the paper's §I.A and §III.D,
+//! plus the policy knobs (deadline, jurisdiction floor, model pin,
+//! sensitivity floor) exercised end-to-end through the server surface
+//! (`SubmitRequest` → orchestrator → outcome).
 
 use islandrun::agents::lighthouse::Lighthouse;
 use islandrun::agents::mist::Mist;
@@ -11,8 +14,9 @@ use islandrun::baselines::{all_policies, PolicyDecision};
 use islandrun::config::{preset, preset_personal_group, Config};
 use islandrun::eval::{run_policy, RunOpts};
 use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator, SubmitRequest};
 use islandrun::substrate::trace::{healthcare_day, paper_mix};
-use islandrun::types::{IslandId, PriorityTier, Request, TrustTier};
+use islandrun::types::{Island, IslandId, PriorityTier, Request, TrustTier};
 
 fn states_at(cap: f64) -> Vec<IslandState> {
     preset_personal_group()
@@ -167,6 +171,114 @@ fn cost_ordering_matches_paper_expectation() {
         st_ir.cost_per_1k(),
         st_co.cost_per_1k()
     );
+}
+
+// --- the policy knobs end-to-end: SubmitRequest → orchestrator → outcome ---
+
+fn orchestrator_over(islands: Vec<Island>, seed: u64) -> Orchestrator {
+    let mut cfg = Config::default();
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(Fleet::new(islands, seed)), seed)
+}
+
+#[test]
+fn deadline_constrained_request_avoids_high_rtt_islands_end_to_end() {
+    let islands = preset_personal_group();
+    // without a deadline, a burstable request under local pressure offloads
+    // to a high-RTT cloud island…
+    let orch = orchestrator_over(islands.clone(), 41);
+    orch.saturate_bounded_islands(0.99);
+    let s = orch.open_session("deadline-free");
+    let free = orch
+        .submit_request(s, SubmitRequest::new("what is the capital of france").priority(PriorityTier::Burstable))
+        .unwrap();
+    let free_island = islands.iter().find(|i| Some(i.id) == free.decision.target()).unwrap();
+    assert!(free_island.latency_ms > 150.0, "expected cloud offload, got {}", free_island.name);
+
+    // …but a 150 ms latency budget keeps it off every island whose base RTT
+    // already breaks the deadline
+    let orch = orchestrator_over(islands.clone(), 42);
+    orch.saturate_bounded_islands(0.99);
+    let s = orch.open_session("deadline-bound");
+    let bound = orch
+        .submit_request(
+            s,
+            SubmitRequest::new("what is the capital of france").priority(PriorityTier::Burstable).deadline_ms(150.0),
+        )
+        .unwrap();
+    let target = islands.iter().find(|i| Some(i.id) == bound.decision.target()).unwrap();
+    assert!(target.latency_ms <= 150.0, "deadline-bound request landed on {} ({} ms)", target.name, target.latency_ms);
+}
+
+#[test]
+fn jurisdiction_floor_excludes_noncompliant_tiers_end_to_end() {
+    let islands = preset_personal_group();
+    let orch = orchestrator_over(islands.clone(), 43);
+    orch.saturate_bounded_islands(0.99);
+    let s = orch.open_session("gdpr");
+    // same pressure as above: the unconstrained request offloads to a
+    // Foreign-jurisdiction cloud island, the constrained one must not
+    let constrained = orch
+        .submit_request(
+            s,
+            SubmitRequest::new("summarize the eu customer record")
+                .priority(PriorityTier::Burstable)
+                .min_jurisdiction(0.9),
+        )
+        .unwrap();
+    let target = islands.iter().find(|i| Some(i.id) == constrained.decision.target()).unwrap();
+    assert!(
+        target.jurisdiction.score() >= 0.9,
+        "jurisdiction floor violated: {} scores {}",
+        target.name,
+        target.jurisdiction.score()
+    );
+
+    // an unsatisfiable floor fails closed instead of degrading
+    let out = orch
+        .submit_request(s, SubmitRequest::new("q").priority(PriorityTier::Secondary).min_jurisdiction(1.1))
+        .unwrap();
+    assert!(matches!(out.decision, Decision::Reject { .. }), "{:?}", out.decision);
+}
+
+#[test]
+fn model_pin_routes_only_to_serving_islands_end_to_end() {
+    let mut islands = preset_personal_group();
+    islands[4].models.push("llama-13b".to_string()); // only the private edge serves it
+    let orch = orchestrator_over(islands.clone(), 44);
+    let s = orch.open_session("pinner");
+    let out = orch
+        .submit_request(s, SubmitRequest::new("run this on the big model").model("llama-13b"))
+        .unwrap();
+    assert_eq!(out.decision.target(), Some(islands[4].id), "{:?}", out.decision);
+
+    // a model nobody serves fails closed and is audited
+    let out = orch.submit_request(s, SubmitRequest::new("q").model("gpt-97")).unwrap();
+    assert!(matches!(out.decision, Decision::Reject { .. }), "{:?}", out.decision);
+    assert!(!orch.audit.entries().is_empty());
+}
+
+#[test]
+fn enqueue_surface_honors_the_same_knobs() {
+    // the non-blocking path exposes the identical constraint surface: a
+    // jurisdiction-floored ticket never lands on a Foreign island
+    let islands = preset_personal_group();
+    let orch = std::sync::Arc::new(orchestrator_over(islands.clone(), 45));
+    std::sync::Arc::clone(&orch).start_queue();
+    orch.saturate_bounded_islands(0.99);
+    let s = orch.open_session("queued-gdpr");
+    let ticket = orch.enqueue(
+        s,
+        SubmitRequest::new("summarize the eu customer record").priority(PriorityTier::Burstable).min_jurisdiction(0.9),
+    );
+    let out = ticket.wait().unwrap();
+    if let Some(id) = out.decision.target() {
+        let target = islands.iter().find(|i| i.id == id).unwrap();
+        assert!(target.jurisdiction.score() >= 0.9, "queued request leaked to {}", target.name);
+    } else {
+        panic!("expected the floor to be satisfiable: {:?}", out.decision);
+    }
 }
 
 #[test]

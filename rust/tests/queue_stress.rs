@@ -1,0 +1,222 @@
+//! Queue stress: N producers race the bounded admission queue while the
+//! worker pool drains it.
+//!
+//! Pins the request-lifecycle invariants that must hold under contention,
+//! independent of interleaving:
+//! - no ticket is lost or double-resolved: every enqueue resolves exactly
+//!   once (served, fail-closed reject, or shed) and the
+//!   `ticket_double_resolved` counter stays 0,
+//! - every request that consumed an id — including queue-full and
+//!   deadline-expired sheds — leaves exactly one audit entry,
+//! - the cost ledger equals Σ per-outcome costs even under shedding (shed
+//!   requests are never charged),
+//! - cross-session co-routed requests demonstrably coalesce into shared
+//!   execute groups (fewer groups than requests; max group size > 1),
+//! - queue ordering is honored: Primary drains ahead of Burstable.
+//!
+//! Producer count is overridable via `ISLANDRUN_STRESS_THREADS` so the CI
+//! release-mode stress job can push harder than the debug test job.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use islandrun::agents::mist::Mist;
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::eval::loadgen::class_for;
+use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator, Outcome, SubmitRequest, Ticket};
+use islandrun::substrate::trace::{priority_for, prompt_for};
+use islandrun::types::PriorityTier;
+use islandrun::util::Rng;
+
+const PER_PRODUCER: usize = 50;
+
+fn producers() -> usize {
+    std::env::var("ISLANDRUN_STRESS_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(8)
+}
+
+fn stress_orchestrator(seed: u64, queue_capacity: usize, serve_workers: usize) -> Arc<Orchestrator> {
+    let mut cfg = Config::default();
+    // the stress test exercises the queue lifecycle, not admission policy:
+    // a saturating rate limit or budget would turn submissions away and
+    // hide the invariants under test
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    cfg.queue_capacity = queue_capacity;
+    cfg.serve_workers = serve_workers;
+    let fleet = Fleet::new(preset_personal_group(), seed);
+    Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), seed))
+}
+
+#[test]
+fn racing_producers_lose_no_ticket_and_account_every_cost() {
+    let producers = producers();
+    let orch = stress_orchestrator(601, 100_000, 4);
+    Arc::clone(&orch).start_queue();
+    let handles: Vec<_> = (0..producers)
+        .map(|t| {
+            let orch = Arc::clone(&orch);
+            std::thread::spawn(move || {
+                let session = orch.open_session(&format!("qstress-{t}"));
+                let mut rng = Rng::new(17 ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let tickets: Vec<Ticket> = (0..PER_PRODUCER)
+                    .map(|i| {
+                        let class = class_for(i);
+                        let submit = SubmitRequest::new(prompt_for(class, &mut rng))
+                            .priority(priority_for(class))
+                            .deadline_ms(1e12); // generous: this test is not about shedding
+                        let ticket = orch.enqueue(session, submit);
+                        orch.advance(5.0);
+                        ticket
+                    })
+                    .collect();
+                tickets.into_iter().map(|t| t.wait().expect("no ticket may error")).collect::<Vec<Outcome>>()
+            })
+        })
+        .collect();
+    let outcomes: Vec<Outcome> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let total = producers * PER_PRODUCER;
+    assert_eq!(outcomes.len(), total);
+
+    // 1. no ticket lost or double-resolved
+    assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+    assert_eq!(orch.metrics.counter_value("enqueued"), total as u64);
+
+    // 2. request ids unique under contention
+    let mut ids: Vec<u64> = outcomes.iter().map(|o| o.request_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), total, "request ids must be unique");
+
+    // 3. exactly one audit entry per enqueued request, ids matching
+    assert_eq!(orch.audit.len(), total);
+    let mut audit_ids: Vec<u64> = orch.audit.entries().iter().map(|e| e.request_id).collect();
+    audit_ids.sort_unstable();
+    audit_ids.dedup();
+    assert_eq!(audit_ids, ids, "audit trail must cover exactly the enqueued ids");
+
+    // 4. ledger equals Σ costs, per user and global
+    let expected_total: f64 = outcomes.iter().map(|o| o.cost).sum();
+    let tolerance = 1e-9 * (1.0 + expected_total.abs());
+    assert!(
+        (orch.ledger.total() - expected_total).abs() < tolerance,
+        "ledger total {} != outcome sum {}",
+        orch.ledger.total(),
+        expected_total
+    );
+    let user_of: HashMap<u64, String> = orch.audit.entries().into_iter().map(|e| (e.request_id, e.user)).collect();
+    for t in 0..producers {
+        let user = format!("qstress-{t}");
+        let expected_user: f64 =
+            outcomes.iter().filter(|o| user_of.get(&o.request_id) == Some(&user)).map(|o| o.cost).sum();
+        assert!(
+            (orch.ledger.spent(&user) - expected_user).abs() < tolerance,
+            "user {user}: ledger {} != outcome sum {}",
+            orch.ledger.spent(&user),
+            expected_user
+        );
+    }
+
+    // 5. rejected requests are never charged and always carry a reason
+    let entries: HashMap<u64, _> = orch.audit.entries().into_iter().map(|e| (e.request_id, e)).collect();
+    for out in &outcomes {
+        if out.decision.target().is_none() {
+            assert_eq!(out.cost, 0.0, "rejected request {} was charged", out.request_id);
+            assert!(entries[&out.request_id].reject_reason.is_some());
+        }
+    }
+
+    // 6. the trail stays compliance-clean under queue-path contention
+    assert!(orch.audit.violations(0.9, 0.9).is_empty(), "privacy constraint violated on the queue path");
+}
+
+#[test]
+fn bounded_queue_sheds_overflow_with_exactly_one_audit_entry_each() {
+    // capacity 8, workers started only after the flood: exactly 24 of the
+    // 32 enqueues find the queue full, deterministically
+    let orch = stress_orchestrator(602, 8, 2);
+    let sessions: Vec<u64> = (0..4).map(|u| orch.open_session(&format!("shedder-{u}"))).collect();
+    let tickets: Vec<Ticket> = (0..32)
+        .map(|i| orch.enqueue(sessions[i % sessions.len()], SubmitRequest::new("hello world").deadline_ms(1e12)))
+        .collect();
+    assert_eq!(orch.metrics.counter_value("rejected_queue_full"), 24);
+    assert_eq!(orch.queue_depth(), 8);
+
+    Arc::clone(&orch).start_queue();
+    let outcomes: Vec<Outcome> = tickets.iter().map(|t| t.wait().unwrap()).collect();
+    let shed = outcomes.iter().filter(|o| o.decision.target().is_none()).count();
+    assert_eq!(shed, 24, "every overflow enqueue resolves as a shed reject");
+    assert_eq!(outcomes.len() - shed, 8, "everything that fit the queue is served");
+
+    // exactly one audit entry per shed request, all flagged as sheds
+    assert_eq!(orch.audit.len(), 32);
+    let sheds = orch.audit.sheds();
+    assert_eq!(sheds.len(), 24);
+    let mut shed_ids: Vec<u64> = sheds.iter().map(|e| e.request_id).collect();
+    shed_ids.sort_unstable();
+    shed_ids.dedup();
+    assert_eq!(shed_ids.len(), 24, "one audit entry per shed request");
+
+    // ledger still equals Σ costs under shedding (sheds are free)
+    let expected: f64 = outcomes.iter().map(|o| o.cost).sum();
+    assert!((orch.ledger.total() - expected).abs() < 1e-9 * (1.0 + expected.abs()));
+    assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+}
+
+#[test]
+fn cross_session_corouted_requests_coalesce_into_shared_groups() {
+    // 64 identical low-sensitivity requests from 8 different sessions are
+    // parked before the (single) worker starts: each drained batch groups
+    // co-routed requests ACROSS sessions into shared execute groups
+    let orch = stress_orchestrator(603, 1024, 1);
+    let sessions: Vec<u64> = (0..8).map(|u| orch.open_session(&format!("batcher-{u}"))).collect();
+    let tickets: Vec<Ticket> = (0..64)
+        .map(|i| orch.enqueue(sessions[i % sessions.len()], SubmitRequest::new("hello world").deadline_ms(1e12)))
+        .collect();
+    assert_eq!(orch.queue_depth(), 64);
+    Arc::clone(&orch).start_queue();
+    let outcomes: Vec<Outcome> = tickets.iter().map(|t| t.wait().unwrap()).collect();
+    let served = outcomes.iter().filter(|o| o.decision.target().is_some()).count();
+    assert!(served > 0);
+
+    // coalescing evidence: strictly fewer execute groups than requests, and
+    // at least one group held multiple cross-session requests (on the Real
+    // backend each such group is one `execute_batch` call; the Sim backend
+    // records the same grouping through these metrics)
+    let groups = orch.metrics.counter_value("batch_groups");
+    assert!(groups > 0);
+    assert!(groups < outcomes.len() as u64, "no coalescing happened: {groups} groups for {} requests", outcomes.len());
+    let sizes = orch.metrics.histogram("batch_group_size").unwrap();
+    assert!(sizes.max() >= 2.0, "no group held more than one request (max {})", sizes.max());
+    assert_eq!(orch.audit.len(), 64);
+    assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+}
+
+#[test]
+fn primary_requests_drain_ahead_of_burstable() {
+    // park burstable arrivals first, then primary ones; a single worker
+    // must still serve every primary request before any burstable one
+    let orch = stress_orchestrator(604, 1024, 1);
+    let s = orch.open_session("prioritizer");
+    let enqueue = |prompt: &str, tier: PriorityTier| {
+        let tickets: Vec<Ticket> =
+            (0..4).map(|_| orch.enqueue(s, SubmitRequest::new(prompt).priority(tier).deadline_ms(1e12))).collect();
+        tickets
+    };
+    let burstable = enqueue("hello world", PriorityTier::Burstable);
+    let primary = enqueue("patient john doe ssn 123-45-6789", PriorityTier::Primary);
+    Arc::clone(&orch).start_queue();
+    let primary_ids: Vec<u64> = primary.iter().map(|t| t.wait().unwrap().request_id).collect();
+    let burstable_ids: Vec<u64> = burstable.iter().map(|t| t.wait().unwrap().request_id).collect();
+
+    // audit entries are appended in drain order: every primary id must
+    // appear before every burstable id
+    let order: Vec<u64> = orch.audit.entries().iter().map(|e| e.request_id).collect();
+    let pos = |id: &u64| order.iter().position(|x| x == id).expect("audited");
+    let last_primary = primary_ids.iter().map(pos).max().unwrap();
+    let first_burstable = burstable_ids.iter().map(pos).min().unwrap();
+    assert!(
+        last_primary < first_burstable,
+        "primary must drain first: primary <= {last_primary}, burstable from {first_burstable}, order {order:?}"
+    );
+}
