@@ -1,25 +1,47 @@
 //! E9 — MIST sanitization microbenchmarks: entity detection, forward τ,
-//! backward φ⁻¹, and full history migration. Sanitization sits on the
-//! trust-boundary crossing path, so its latency bounds the cross-tier
-//! routing overhead.
+//! backward φ⁻¹, and the per-session incremental history path. Sanitization
+//! sits on the trust-boundary crossing path, so its latency bounds the
+//! cross-tier routing overhead.
+//!
+//! The headline comparison is cold vs incremental on a 64-turn session:
+//! the cold path scans every turn; the incremental path reuses the
+//! per-level sanitized-history cache and scans only the outgoing prompt
+//! (the newest-turn delta). Gated at ≥5x unless `ISLANDRUN_BENCH_GATE=off`
+//! (the CI smoke job measures without gating). With
+//! `ISLANDRUN_BENCH_JSON=<path>` the results land in `BENCH_sanitize.json`.
 
 use islandrun::agents::mist::entities;
-use islandrun::agents::mist::sanitize::{sanitize_history, turn, PlaceholderMap};
-use islandrun::types::Role;
-use islandrun::util::bench::{bench, report};
+use islandrun::agents::mist::sanitize::PlaceholderMap;
+use islandrun::server::Session;
+use islandrun::util::bench::{bench, gate_enabled, report, write_json_artifact};
 
 const SHORT: &str = "patient john doe ssn 123-45-6789 diagnosed with diabetes in chicago";
+const PROMPT: &str = "patient jane smith asks about metformin in berlin";
+const HISTORY_TURNS: usize = 64;
 
-fn long_history() -> Vec<islandrun::types::Turn> {
-    let mut h = Vec::new();
-    for i in 0..20 {
-        h.push(turn(
-            Role::User,
-            &format!("turn {i}: patient jane smith mrn 4921{i} prescribed metformin 500 mg daily in berlin on 2024-03-1{}", i % 9),
-        ));
-        h.push(turn(Role::Assistant, &format!("noted for jane smith, adjusting the plan {i}")));
+/// A 64-turn entity-rich session history (32 user/assistant pairs).
+fn session_with_history(id: u64) -> Session {
+    let mut s = Session::new(id, "bench", 0xBE9C ^ id);
+    for i in 0..HISTORY_TURNS / 2 {
+        s.record_turn(
+            &format!(
+                "turn {i}: patient jane smith mrn 4921{i} prescribed metformin 500 mg daily in berlin on 2024-03-1{}",
+                i % 9
+            ),
+            &format!("noted for jane smith, adjusting the plan {i}"),
+            1.0,
+        );
     }
-    h
+    s
+}
+
+/// One request's sanitize pass through the three-phase session API:
+/// plan (read lock scope) → detect (no lock) → apply (write lock scope).
+fn sanitize_pass(session: &mut Session, level: f64) -> usize {
+    let snapshot = session.history.clone();
+    let plan = session.plan_sanitize(level, &snapshot, PROMPT);
+    let wire = plan.detect().apply(session);
+    wire.history.len()
 }
 
 fn main() {
@@ -29,19 +51,51 @@ fn main() {
         std::hint::black_box(entities::detect(SHORT));
     }));
 
-    results.push(bench("sanitize short prompt", 20, 2000, || {
+    let short = bench("sanitize short prompt", 20, 2000, || {
         let mut map = PlaceholderMap::new(1);
         std::hint::black_box(map.sanitize(SHORT, 0.4));
-    }));
+    });
+    results.push(short.clone());
 
-    let history = long_history();
-    results.push(bench("sanitize 40-turn history", 5, 200, || {
-        let mut map = PlaceholderMap::new(2);
-        std::hint::black_box(sanitize_history(&history, 0.4, &mut map));
-    }));
+    // cold: an empty cache forces a scan of the whole 64-turn history +
+    // prompt. The session is prebuilt and only its cache is reset per
+    // iteration, so the measurement is the sanitize pass itself, not
+    // session construction (leaving the placeholder map warm makes "cold"
+    // slightly cheaper — conservative for the speedup gate below).
+    let mut cold_session = session_with_history(2);
+    let cold = bench("sanitize 64-turn history (cold)", 5, 120, || {
+        cold_session.sanitized = Default::default();
+        std::hint::black_box(sanitize_pass(&mut cold_session, 0.4));
+    });
+    results.push(cold.clone());
+
+    // incremental: the cache already covers all 64 turns; each request
+    // scans only the outgoing prompt and reuses the cached prefix
+    let mut warm = session_with_history(3);
+    let _ = sanitize_pass(&mut warm, 0.4); // warm the 0.4-level cache
+    assert_eq!(
+        warm.sanitized.turns_at(0.4).map(|t| t.len()),
+        Some(HISTORY_TURNS),
+        "level cache must cover the full history before the incremental measurement"
+    );
+    let incremental = bench("sanitize 64-turn history (incremental)", 20, 2000, || {
+        std::hint::black_box(sanitize_pass(&mut warm, 0.4));
+    });
+    results.push(incremental.clone());
+
+    // failover path: cold-sanitize at 0.7, then hop down to 0.3 — the
+    // second pass re-sanitizes the cached clean form (placeholders inert,
+    // still O(covered)); the cache is reset per iteration, session reused
+    let mut failover_session = session_with_history(4);
+    let resplice = bench("cold@0.7 + failover resplice@0.3 (64 turns)", 5, 120, || {
+        failover_session.sanitized = Default::default();
+        sanitize_pass(&mut failover_session, 0.7);
+        std::hint::black_box(sanitize_pass(&mut failover_session, 0.3));
+    });
+    results.push(resplice.clone());
 
     // desanitize pass over a response full of placeholders
-    let mut map = PlaceholderMap::new(3);
+    let mut map = PlaceholderMap::new(5);
     let sanitized = map.sanitize(SHORT, 0.4);
     let response = format!("{sanitized} — recommend follow-up for the same case. {sanitized}");
     results.push(bench("desanitize response", 20, 2000, || {
@@ -50,10 +104,41 @@ fn main() {
 
     report("sanitization — trust-boundary crossing costs", &results);
 
+    let speedup = if incremental.mean_us > 0.0 { cold.mean_us / incremental.mean_us } else { 0.0 };
+    println!("\nincremental speedup over cold 64-turn sanitization: {speedup:.1}x");
+
+    let json_rows: Vec<Vec<(String, f64)>> = vec![
+        vec![
+            ("turns".to_string(), HISTORY_TURNS as f64),
+            ("cold_mean_us".to_string(), cold.mean_us),
+            ("cold_p99_us".to_string(), cold.p99_us),
+            ("incremental_mean_us".to_string(), incremental.mean_us),
+            ("incremental_p99_us".to_string(), incremental.p99_us),
+            ("resplice_mean_us".to_string(), resplice.mean_us),
+            ("speedup_cold_over_incremental".to_string(), speedup),
+        ],
+        vec![
+            ("turns".to_string(), 1.0),
+            ("cold_mean_us".to_string(), short.mean_us),
+            ("cold_p99_us".to_string(), short.p99_us),
+        ],
+    ];
+    write_json_artifact("sanitize", &json_rows);
+
     // round-trip correctness under bench load (guard against optimizing away)
     let mut m = PlaceholderMap::new(9);
     let s = m.sanitize(SHORT, 0.4);
     assert!(PlaceholderMap::verify_clean(&s, 0.4));
     assert!(m.desanitize(&s).contains("john doe"));
     println!("PASS: round-trip integrity under bench configuration");
+
+    if gate_enabled() {
+        assert!(
+            speedup >= 5.0,
+            "incremental 64-turn sanitization must be >= 5x over cold, measured {speedup:.1}x"
+        );
+        println!("PASS: incremental path >= 5x over cold ({speedup:.1}x)");
+    } else {
+        println!("GATE OFF: measured {speedup:.1}x incremental speedup (smoke run, not asserted)");
+    }
 }

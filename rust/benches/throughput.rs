@@ -29,9 +29,7 @@ fn total_requests() -> usize {
     std::env::var("ISLANDRUN_BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4000)
 }
 
-fn gate_enabled() -> bool {
-    std::env::var("ISLANDRUN_BENCH_GATE").map(|v| v != "off").unwrap_or(true)
-}
+use islandrun::util::bench::gate_enabled;
 
 fn orchestrator(seed: u64) -> Arc<Orchestrator> {
     let mut cfg = Config::default();

@@ -6,6 +6,31 @@
 //! (typed placeholders + bidirectional map), not a function of NER recall.
 //! Types are deliberately coarse (PERSON, LOCATION, ID, …) per the Attack-3
 //! mitigation: "Placeholder types are coarse-grained … reducing uniqueness."
+//!
+//! # Scanner design and the Unicode-safety contract
+//!
+//! Gazetteer matching is a single pass of an Aho–Corasick-style automaton
+//! built over every gazetteer term at once, walking the **original** string
+//! and folding only ASCII letters (`A-Z` → `a-z`) for comparison. Because
+//! the input is never rewritten, every reported span is a byte range of the
+//! original text, always on `char` boundaries — the previous implementation
+//! computed offsets on `text.to_lowercase()`, whose byte length can differ
+//! from the original (`İ` → `i̇` grows, `ẞ` → `ß` shrinks), so non-ASCII
+//! prompts could panic on a char boundary or emit garbage spans.
+//!
+//! The contract:
+//! - [`detect`] never panics on any valid `&str`, including combining
+//!   marks, emoji and mixed-width scripts;
+//! - every [`Entity`] span satisfies `text.is_char_boundary(start)` and
+//!   `text.is_char_boundary(end)`, and `&text[start..end] == entity.text`;
+//! - scan-time case folding is ASCII-only; non-ASCII case is covered at
+//!   build time by inserting uppercase variants of each non-ASCII pattern
+//!   char (`"MÜLLER"` matches the gazetteer entry `"müller"` via the
+//!   `"mÜller"` variant). Chars whose uppercase expands to multiple chars
+//!   have no variant — a bounded recall trade-off, never a safety one;
+//! - word boundaries are computed on `char`s: a term followed by a
+//!   combining mark (U+0300..U+036F) or another alphanumeric char is
+//!   mid-word and not reported.
 
 use once_cell::sync::Lazy;
 use regex::Regex;
@@ -53,7 +78,8 @@ impl EntityKind {
     }
 }
 
-/// A detected entity span.
+/// A detected entity span. `start`/`end` are byte offsets into the string
+/// passed to [`detect`], guaranteed to lie on `char` boundaries.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Entity {
     pub kind: EntityKind,
@@ -83,67 +109,226 @@ static RE_FINANCIAL: Lazy<Regex> = Lazy::new(|| {
 });
 static RE_TEMPORAL: Lazy<Regex> = Lazy::new(|| {
     Regex::new(r"(?i)\b\d{1,4}[-/]\d{1,2}[-/]\d{1,4}\b|\b(?:yesterday|tomorrow|last\s+\w+day|next\s+\w+day|on\s+(?:mon|tues|wednes|thurs|fri|satur|sun)day)\b").unwrap()
-})
-;
+});
 static RE_AGE: Lazy<Regex> = Lazy::new(|| Regex::new(r"(?i)\b\d{1,3}[- ]?year[- ]?old\b").unwrap());
 
-fn find_gazetteer(text_lower: &str, terms: &[&str], kind: EntityKind, out: &mut Vec<Entity>, orig: &str) {
-    for term in terms {
-        let mut from = 0;
-        while let Some(pos) = text_lower[from..].find(term) {
-            let start = from + pos;
-            let end = start + term.len();
-            // word-boundary check
-            let before_ok = start == 0 || !text_lower.as_bytes()[start - 1].is_ascii_alphanumeric();
-            let after_ok = end >= text_lower.len() || !text_lower.as_bytes()[end].is_ascii_alphanumeric();
-            if before_ok && after_ok {
-                out.push(Entity { kind, start, end, text: orig[start..end].to_string() });
+/// What a trie term means when it matches. Last names are not entities on
+/// their own — they only extend a preceding first name into a full PERSON.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TermTag {
+    Kind(EntityKind),
+    PersonFirst,
+    PersonLast,
+}
+
+/// Aho–Corasick automaton over every gazetteer term. Matching folds ASCII
+/// case per input byte; pattern bytes are stored verbatim (gazetteer terms
+/// are already lowercase, including their non-ASCII bytes), so reported
+/// spans are byte ranges of the unmodified input.
+struct Scanner {
+    /// Sorted-by-byte edge lists; node 0 is the root.
+    children: Vec<Vec<(u8, u32)>>,
+    fail: Vec<u32>,
+    /// Terms ending at this node (own + those reachable via failure links),
+    /// as (tag, byte length of the term).
+    out: Vec<Vec<(TermTag, u32)>>,
+}
+
+impl Scanner {
+    fn build(terms: &[(String, TermTag)]) -> Scanner {
+        let mut children: Vec<Vec<(u8, u32)>> = vec![Vec::new()];
+        let mut out: Vec<Vec<(TermTag, u32)>> = vec![Vec::new()];
+        for (term, tag) in terms {
+            let mut node = 0usize;
+            for &b in term.as_bytes() {
+                match children[node].iter().find(|(eb, _)| *eb == b) {
+                    Some(&(_, next)) => node = next as usize,
+                    None => {
+                        let next = children.len() as u32;
+                        children[node].push((b, next));
+                        children.push(Vec::new());
+                        out.push(Vec::new());
+                        node = next as usize;
+                    }
+                }
             }
-            from = end;
+            out[node].push((*tag, term.len() as u32));
         }
+        // BFS failure links; outputs of the failure target propagate so one
+        // state visit reports every term ending at this position.
+        let mut fail = vec![0u32; children.len()];
+        let mut queue: std::collections::VecDeque<u32> = children[0].iter().map(|&(_, n)| n).collect();
+        while let Some(u) = queue.pop_front() {
+            let edges = children[u as usize].clone();
+            for (b, v) in edges {
+                // follow failure links until a node with a `b`-edge (the
+                // chain visits strictly shallower nodes than v's parent, so
+                // the found target is never v itself)
+                let mut f = fail[u as usize];
+                loop {
+                    if let Some(&(_, next)) = children[f as usize].iter().find(|(eb, _)| *eb == b) {
+                        f = next;
+                        break;
+                    }
+                    if f == 0 {
+                        break;
+                    }
+                    f = fail[f as usize];
+                }
+                fail[v as usize] = f;
+                let inherited = out[f as usize].clone();
+                out[v as usize].extend(inherited);
+                queue.push_back(v);
+            }
+        }
+        Scanner { children, fail, out }
+    }
+
+    fn step(&self, mut state: u32, byte: u8) -> u32 {
+        let b = byte.to_ascii_lowercase();
+        loop {
+            if let Some(&(_, next)) = self.children[state as usize].iter().find(|(eb, _)| *eb == b) {
+                return next;
+            }
+            if state == 0 {
+                return 0;
+            }
+            state = self.fail[state as usize];
+        }
+    }
+
+    /// One pass over `text`: every word-bounded gazetteer hit, as
+    /// `(tag, start, end)` byte offsets into the original string.
+    fn scan(&self, text: &str) -> Vec<(TermTag, usize, usize)> {
+        let mut hits = Vec::new();
+        let mut state = 0u32;
+        for (i, &b) in text.as_bytes().iter().enumerate() {
+            state = self.step(state, b);
+            for &(tag, len) in &self.out[state as usize] {
+                let end = i + 1;
+                let start = end - len as usize;
+                if word_bounded(text, start, end) {
+                    hits.push((tag, start, end));
+                }
+            }
+        }
+        hits
     }
 }
 
-/// Detect all entities in `text`. Overlapping detections are resolved by
-/// (earliest start, longest span, highest sensitivity).
-pub fn detect(text: &str) -> Vec<Entity> {
-    let lower = text.to_lowercase();
-    let mut out = Vec::new();
-
-    // Person: first name optionally followed by a known last name; merge.
-    for first in FIRST_NAMES {
-        let mut from = 0;
-        while let Some(pos) = lower[from..].find(first) {
-            let start = from + pos;
-            let mut end = start + first.len();
-            let before_ok = start == 0 || !lower.as_bytes()[start - 1].is_ascii_alphanumeric();
-            let mut after_ok = end >= lower.len() || !lower.as_bytes()[end].is_ascii_alphanumeric();
-            if before_ok && after_ok {
-                // try to extend over "first last"
-                if end < lower.len() {
-                    let rest = &lower[end..];
-                    for last in LAST_NAMES {
-                        if rest.starts_with(' ') && rest[1..].starts_with(last) {
-                            let e2 = end + 1 + last.len();
-                            if e2 >= lower.len() || !lower.as_bytes()[e2].is_ascii_alphanumeric() {
-                                end = e2;
-                                break;
-                            }
-                        }
-                    }
-                }
-                after_ok = end >= lower.len() || !lower.as_bytes()[end].is_ascii_alphanumeric();
-                if after_ok {
-                    out.push(Entity { kind: EntityKind::Person, start, end, text: text[start..end].to_string() });
+/// Spelling variants of a gazetteer term covering non-ASCII case: the
+/// scan-time fold handles ASCII letters, so for every non-ASCII char we
+/// also insert the variant with its single-char uppercase form (`ü` → also
+/// `Ü`), keeping `"MÜLLER"`-style all-caps entities detectable. Variants
+/// are full byte patterns of their own, so spans remain exact byte ranges
+/// of the input.
+fn case_variants(term: &str) -> Vec<String> {
+    let mut variants: Vec<String> = vec![String::with_capacity(term.len())];
+    for c in term.chars() {
+        let mut alts: Vec<char> = vec![c];
+        if !c.is_ascii() {
+            let mut up = c.to_uppercase();
+            if let (Some(u), None) = (up.next(), up.next()) {
+                if u != c {
+                    alts.push(u);
                 }
             }
-            from = end.max(start + 1);
+        }
+        let mut next = Vec::with_capacity(variants.len() * alts.len());
+        for v in &variants {
+            for &a in &alts {
+                let mut s = v.clone();
+                s.push(a);
+                next.push(s);
+            }
+        }
+        variants = next;
+    }
+    variants
+}
+
+static SCANNER: Lazy<Scanner> = Lazy::new(|| {
+    let mut terms: Vec<(String, TermTag)> = Vec::new();
+    for (list, tag) in [
+        (FIRST_NAMES, TermTag::PersonFirst),
+        (LAST_NAMES, TermTag::PersonLast),
+        (CITIES, TermTag::Kind(EntityKind::Location)),
+        (CONDITIONS, TermTag::Kind(EntityKind::MedicalCondition)),
+        (MEDICATIONS, TermTag::Kind(EntityKind::Medication)),
+        (ORGS, TermTag::Kind(EntityKind::Org)),
+    ] {
+        for t in list {
+            for v in case_variants(t) {
+                terms.push((v, tag));
+            }
         }
     }
-    find_gazetteer(&lower, CITIES, EntityKind::Location, &mut out, text);
-    find_gazetteer(&lower, CONDITIONS, EntityKind::MedicalCondition, &mut out, text);
-    find_gazetteer(&lower, MEDICATIONS, EntityKind::Medication, &mut out, text);
-    find_gazetteer(&lower, ORGS, EntityKind::Org, &mut out, text);
+    Scanner::build(&terms)
+});
+
+/// A char that continues a word: alphanumerics, plus combining diacritics
+/// (a term trailed by a combining mark renders as a *different* word — it
+/// must not match).
+fn is_word_char(c: char) -> bool {
+    c.is_alphanumeric() || ('\u{0300}'..='\u{036F}').contains(&c)
+}
+
+/// True when `[start, end)` is a valid char-boundary span of `text` whose
+/// neighbours are not word chars.
+fn word_bounded(text: &str, start: usize, end: usize) -> bool {
+    // Trie spans are byte-aligned to valid UTF-8 pattern text, so these
+    // hold structurally; the guard keeps slicing panic-free regardless.
+    if !text.is_char_boundary(start) || !text.is_char_boundary(end) {
+        return false;
+    }
+    let before_ok = !text[..start].chars().next_back().is_some_and(is_word_char);
+    let after_ok = !text[end..].chars().next().is_some_and(is_word_char);
+    before_ok && after_ok
+}
+
+/// One scan pass: every entity candidate found in `hay`, whose byte
+/// offsets also index `original` (the caller guarantees `hay` is either
+/// `original` itself or a length-preserving masked copy). Entity text is
+/// sliced from `original`.
+fn collect_candidates(hay: &str, original: &str) -> Vec<Entity> {
+    let hits = SCANNER.scan(hay);
+    let mut out = Vec::new();
+
+    // O(1) "last name starting at byte offset" lookup for the first→full
+    // name extension (a linear scan here would make adversarial inputs
+    // with many name hits quadratic).
+    let last_by_start: std::collections::HashMap<usize, usize> = hits
+        .iter()
+        .filter(|(t, _, _)| *t == TermTag::PersonLast)
+        .map(|&(_, s, e)| (s, e))
+        .collect();
+
+    for &(tag, start, end) in &hits {
+        match tag {
+            TermTag::Kind(kind) => {
+                out.push(Entity { kind, start, end, text: original[start..end].to_string() })
+            }
+            TermTag::PersonFirst => {
+                // extend over "first last" when a word-bounded last name
+                // starts one space after the first name ends
+                let mut span_end = end;
+                if hay.as_bytes().get(end) == Some(&b' ') {
+                    if let Some(&le) = last_by_start.get(&(end + 1)) {
+                        span_end = le;
+                    }
+                }
+                out.push(Entity {
+                    kind: EntityKind::Person,
+                    start,
+                    end: span_end,
+                    text: original[start..span_end].to_string(),
+                });
+            }
+            // lone last names are too weak a signal to be entities
+            TermTag::PersonLast => {}
+        }
+    }
+
     for (re, kind) in [
         (&*RE_ID, EntityKind::Id),
         (&*RE_CONTACT, EntityKind::Contact),
@@ -151,25 +336,73 @@ pub fn detect(text: &str) -> Vec<Entity> {
         (&*RE_TEMPORAL, EntityKind::Temporal),
         (&*RE_AGE, EntityKind::Id),
     ] {
-        for m in re.find_iter(text) {
-            out.push(Entity { kind, start: m.start(), end: m.end(), text: m.as_str().to_string() });
+        for m in re.find_iter(hay) {
+            out.push(Entity { kind, start: m.start(), end: m.end(), text: original[m.start()..m.end()].to_string() });
         }
     }
+    out
+}
 
-    // Resolve overlaps: sort by (start, -len, -sensitivity) and drop spans
-    // overlapping an accepted one.
-    out.sort_by(|a, b| {
-        a.start
-            .cmp(&b.start)
-            .then((b.end - b.start).cmp(&(a.end - a.start)))
-            .then(b.kind.sensitivity().partial_cmp(&a.kind.sensitivity()).unwrap())
-    });
+fn overlaps(a: &Entity, start: usize, end: usize) -> bool {
+    start < a.end && a.start < end
+}
+
+/// Detect all entities in `text`. Overlapping detections are resolved by
+/// (earliest start, longest span, highest sensitivity). See the module docs
+/// for the Unicode-safety contract on the returned spans.
+///
+/// Resolution alone is not enough: `find_iter` resumes AFTER each match, so
+/// a dropped straddling match can eclipse a real entity behind it — e.g. in
+/// `"ssn 123-45-6789 4111 1111 1111 1111"` the Financial class's leftmost
+/// match is `"6789 4111 1111 1111"`, which loses overlap resolution to the
+/// SSN and would leave the card number undetected (and hence transmitted in
+/// cleartext by τ). Whenever a dropped candidate is not fully covered by an
+/// accepted span, the accepted spans are masked out (length-preserving, so
+/// offsets stay valid) and the classes re-scanned; the common no-straddle
+/// case pays nothing beyond one boolean check.
+pub fn detect(text: &str) -> Vec<Entity> {
     let mut accepted: Vec<Entity> = Vec::new();
-    for e in out {
-        if accepted.iter().all(|a| e.start >= a.end || e.end <= a.start) {
-            accepted.push(e);
+    let mut masked: Option<String> = None;
+    // each extra round accepts at least one span; 8 bounds adversarial input
+    for _round in 0..8 {
+        let hay: &str = masked.as_deref().unwrap_or(text);
+        let mut candidates = collect_candidates(hay, text);
+        if !accepted.is_empty() {
+            // masked spans can still be straddled by \s-bridged matches;
+            // anything touching an accepted span is not a new entity
+            candidates.retain(|e| !accepted.iter().any(|a| overlaps(a, e.start, e.end)));
+        }
+        candidates.sort_by(|a, b| {
+            a.start
+                .cmp(&b.start)
+                .then((b.end - b.start).cmp(&(a.end - a.start)))
+                .then(b.kind.sensitivity().partial_cmp(&a.kind.sensitivity()).unwrap())
+        });
+        let mut fresh: Vec<Entity> = Vec::new();
+        let mut uncovered_drop = false;
+        for e in candidates {
+            if fresh.iter().all(|a| !overlaps(a, e.start, e.end)) {
+                fresh.push(e);
+            } else if !fresh.iter().any(|a| a.start <= e.start && a.end >= e.end) {
+                // the dropped span sticks out of every accepted span: its
+                // find_iter pass may have skipped a real match behind it
+                uncovered_drop = true;
+            }
+        }
+        let done = !uncovered_drop;
+        if uncovered_drop || masked.is_some() {
+            let m = masked.get_or_insert_with(|| text.to_string());
+            for e in &fresh {
+                m.replace_range(e.start..e.end, &" ".repeat(e.end - e.start));
+            }
+        }
+        let stuck = fresh.is_empty();
+        accepted.extend(fresh);
+        if done || stuck {
+            break;
         }
     }
+    accepted.sort_by_key(|e| e.start);
     accepted
 }
 
@@ -179,6 +412,15 @@ mod tests {
 
     fn kinds(text: &str) -> Vec<EntityKind> {
         detect(text).into_iter().map(|e| e.kind).collect()
+    }
+
+    /// Every span the detector reports must slice the original text cleanly
+    /// and reproduce the entity text verbatim.
+    fn assert_spans_sound(text: &str) {
+        for e in detect(text) {
+            assert!(text.is_char_boundary(e.start) && text.is_char_boundary(e.end), "{e:?} in {text:?}");
+            assert_eq!(&text[e.start..e.end], e.text, "span/text mismatch in {text:?}");
+        }
     }
 
     #[test]
@@ -246,5 +488,139 @@ mod tests {
     fn sensitivity_ordering() {
         assert!(EntityKind::Id.sensitivity() > EntityKind::Person.sensitivity());
         assert!(EntityKind::Person.sensitivity() > EntityKind::Temporal.sensitivity());
+    }
+
+    // ------------- non-ASCII regression tests (the offset bugfix) -------------
+
+    #[test]
+    fn non_ascii_last_name_matches_with_original_offsets() {
+        // "müller" is in the gazetteer with its multi-byte ü; offsets must
+        // index the original string
+        let text = "call jane müller in berlin";
+        let es = detect(text);
+        let person = es.iter().find(|e| e.kind == EntityKind::Person).expect("person");
+        assert_eq!(person.text, "jane müller");
+        assert_eq!(&text[person.start..person.end], "jane müller");
+        let city = es.iter().find(|e| e.kind == EntityKind::Location).expect("location");
+        assert_eq!(city.text, "berlin");
+        assert_spans_sound(text);
+    }
+
+    #[test]
+    fn dotted_capital_i_before_entity_does_not_shift_offsets() {
+        // "İ" (U+0130) lowercases to a LONGER byte sequence ("i" + U+0307):
+        // the old to_lowercase()-offset scheme sliced the original string
+        // with shifted indices here. Entities AFTER the İ must come out with
+        // exact spans.
+        let text = "İstanbul trip notes: jane smith met john doe in berlin";
+        let es = detect(text);
+        let persons: Vec<&Entity> = es.iter().filter(|e| e.kind == EntityKind::Person).collect();
+        assert_eq!(persons.len(), 2, "{es:?}");
+        assert_eq!(persons[0].text, "jane smith");
+        assert_eq!(persons[1].text, "john doe");
+        for p in &persons {
+            assert_eq!(&text[p.start..p.end], p.text);
+        }
+        assert!(es.iter().any(|e| e.kind == EntityKind::Location && e.text == "berlin"));
+        assert_spans_sound(text);
+    }
+
+    #[test]
+    fn sharp_s_and_mixed_width_text_never_panic() {
+        for text in [
+            "weiß is not wei",                       // ß directly after a first name fragment
+            "straße 12, tokyo",                      // multi-byte mid-word
+            "日本語テキスト john doe 日本語",          // CJK around an entity
+            "ẞ İ ß ﬀ ﬁ ligatures and john",          // chars whose case maps change length
+        ] {
+            assert_spans_sound(text);
+        }
+        let es = detect("日本語テキスト john doe 日本語");
+        assert!(es.iter().any(|e| e.kind == EntityKind::Person && e.text == "john doe"));
+    }
+
+    #[test]
+    fn combining_marks_block_word_boundary() {
+        // "jane" + U+0301 renders as "jané…": mid-word, must not match
+        let text = "jane\u{0301}ish spoke to maria";
+        let es = detect(text);
+        assert!(!es.iter().any(|e| e.text.starts_with("jane")), "{es:?}");
+        assert!(es.iter().any(|e| e.kind == EntityKind::Person && e.text == "maria"));
+        assert_spans_sound(text);
+    }
+
+    #[test]
+    fn emoji_around_entities_keep_exact_spans() {
+        let text = "🏝️ patient john doe 🏥 in chicago 🌆 ssn 123-45-6789";
+        let es = detect(text);
+        assert!(es.iter().any(|e| e.kind == EntityKind::Person && e.text == "john doe"));
+        assert!(es.iter().any(|e| e.kind == EntityKind::Location && e.text == "chicago"));
+        assert!(es.iter().any(|e| e.kind == EntityKind::Id && e.text == "123-45-6789"));
+        assert_spans_sound(text);
+    }
+
+    #[test]
+    fn uppercase_non_ascii_gazetteer_chars_still_match() {
+        // "MÜLLER" must keep matching "müller" (the old full-lowercase path
+        // caught it; the build-time Ü-variant preserves that recall)
+        let text = "call JANE MÜLLER in berlin";
+        let es = detect(text);
+        let person = es.iter().find(|e| e.kind == EntityKind::Person).expect("person");
+        assert_eq!(person.text, "JANE MÜLLER");
+        assert_eq!(&text[person.start..person.end], "JANE MÜLLER");
+        // mixed case too
+        let es = detect("ask Müller's colleague jane Müller");
+        assert!(es.iter().any(|e| e.kind == EntityKind::Person && e.text == "jane Müller"), "{es:?}");
+    }
+
+    #[test]
+    fn case_variants_expand_only_non_ascii_chars() {
+        assert_eq!(case_variants("john"), vec!["john".to_string()]);
+        let mut v = case_variants("müller");
+        v.sort();
+        assert_eq!(v, vec!["mÜller".to_string(), "müller".to_string()]);
+    }
+
+    #[test]
+    fn ascii_case_folding_still_matches_uppercase_ascii() {
+        let es = detect("PATIENT JOHN DOE WITH DIABETES IN CHICAGO");
+        assert!(es.iter().any(|e| e.kind == EntityKind::Person && e.text == "JOHN DOE"), "{es:?}");
+        assert!(es.iter().any(|e| e.kind == EntityKind::MedicalCondition && e.text == "DIABETES"));
+        assert!(es.iter().any(|e| e.kind == EntityKind::Location && e.text == "CHICAGO"));
+    }
+
+    #[test]
+    fn multiword_org_terms_match_through_the_trie() {
+        let es = detect("admitted to general hospital by the firm");
+        let orgs: Vec<&Entity> = es.iter().filter(|e| e.kind == EntityKind::Org).collect();
+        assert_eq!(orgs.len(), 2, "{es:?}");
+        assert_eq!(orgs[0].text, "general hospital");
+        assert_eq!(orgs[1].text, "the firm");
+    }
+
+    #[test]
+    fn straddling_match_does_not_eclipse_the_entity_behind_it() {
+        // RE_FINANCIAL's leftmost match here is "6789 4111 1111 1111",
+        // which straddles the SSN span and loses overlap resolution; the
+        // masked rescan must still surface the card number itself.
+        let text = "ssn 123-45-6789 4111 1111 1111 1111";
+        let es = detect(text);
+        assert!(es.iter().any(|e| e.kind == EntityKind::Id && e.text == "123-45-6789"), "{es:?}");
+        let fin = es.iter().find(|e| e.kind == EntityKind::Financial).expect("card must be detected");
+        assert_eq!(fin.text, "4111 1111 1111 1111");
+        // and the Def. 4 pipeline stays clean end to end
+        let mut map = crate::agents::mist::sanitize::PlaceholderMap::new(77);
+        let clean = map.sanitize(text, 0.4);
+        assert!(crate::agents::mist::sanitize::PlaceholderMap::verify_clean(&clean, 0.4), "{clean}");
+        assert!(!clean.contains("4111"), "{clean}");
+    }
+
+    #[test]
+    fn repeated_entities_all_reported() {
+        let es = detect("john called, then john called again from chicago, not chicago heights");
+        let persons = es.iter().filter(|e| e.kind == EntityKind::Person).count();
+        assert_eq!(persons, 2, "{es:?}");
+        let cities = es.iter().filter(|e| e.kind == EntityKind::Location).count();
+        assert_eq!(cities, 2, "{es:?}");
     }
 }

@@ -37,6 +37,12 @@ pub struct Pattern {
     pub name: &'static str,
     pub category: Category,
     pub regex: Regex,
+    /// A literal (lowercase) that MUST occur, case-insensitively, in any
+    /// text this regex can match. Scanning checks the literal with a cheap
+    /// ASCII-folded substring search and skips the regex when absent, so
+    /// clean text pays one memmem per keyword pattern instead of a full
+    /// regex pass. `None` for purely structural patterns (digit shapes).
+    pub gate: Option<&'static str>,
 }
 
 /// A Stage-1 match found in a request.
@@ -49,78 +55,91 @@ pub struct Match {
 }
 
 macro_rules! patterns {
-    ($(($name:literal, $cat:expr, $re:literal)),+ $(,)?) => {
-        vec![$(Pattern { name: $name, category: $cat, regex: Regex::new($re).expect($name) }),+]
+    ($(($name:literal, $cat:expr, $re:literal, $gate:expr)),+ $(,)?) => {
+        vec![$(Pattern { name: $name, category: $cat, regex: Regex::new($re).expect($name), gate: $gate }),+]
     };
 }
 
-/// The full Stage-1 pattern set (m ≈ 50).
+/// The full Stage-1 pattern set (m ≈ 50). Gate literals are chosen
+/// conservatively: only a literal the regex requires in EVERY match (up to
+/// ASCII case) may gate it; structural digit-shape patterns stay ungated.
 pub static PATTERNS: Lazy<Vec<Pattern>> = Lazy::new(|| {
     use Category::*;
     patterns![
         // ---------------- PII ----------------
-        ("email", Pii, r"(?i)\b[a-z0-9._%+-]+@[a-z0-9.-]+\.[a-z]{2,}\b"),
-        ("phone-us", Pii, r"\b\d{3}[-. ]\d{3}[-. ]\d{4}\b"),
-        ("phone-intl", Pii, r"\+\d{1,3}[ -]?\d{2,4}[ -]?\d{3,4}[ -]?\d{3,4}\b"),
-        ("ssn", Pii, r"\b\d{3}-\d{2}-\d{4}\b"),
-        ("ipv4", Pii, r"\b(?:\d{1,3}\.){3}\d{1,3}\b"),
-        ("ipv6", Pii, r"(?i)\b(?:[0-9a-f]{1,4}:){3,7}[0-9a-f]{1,4}\b"),
-        ("mac-addr", Pii, r"(?i)\b(?:[0-9a-f]{2}:){5}[0-9a-f]{2}\b"),
-        ("passport", Pii, r"(?i)\bpassport\s*(?:no\.?|number)?\s*[:#]?\s*[a-z]?\d{7,9}\b"),
-        ("drivers-license", Pii, r"(?i)\b(?:driver'?s?\s+licen[sc]e|dl)\s*[:#]?\s*[a-z]?\d{6,9}\b"),
-        ("plate", Pii, r"(?i)\blicense\s+plate\s*[:#]?\s*[a-z0-9-]{5,8}\b"),
-        ("dob", Pii, r"(?i)\b(?:dob|date\s+of\s+birth)\s*[:#]?\s*\d{1,4}[-/]\d{1,2}[-/]\d{1,4}\b"),
-        ("street-address", Pii, r"(?i)\b\d{1,5}\s+[a-z]+\s+(?:st|street|ave|avenue|rd|road|blvd|lane|ln|dr|drive)\b"),
-        ("zip+4", Pii, r"\b\d{5}-\d{4}\b"),
-        ("geo-coord", Pii, r"-?\d{1,3}\.\d{4,},\s*-?\d{1,3}\.\d{4,}"),
-        ("aadhaar", Pii, r"\b\d{4}\s\d{4}\s\d{4}\b"),
-        ("national-id", Pii, r"(?i)\bnational\s+id\s*[:#]?\s*\d{6,12}\b"),
-        ("username-handle", Pii, r"(?i)\bmy\s+(?:name|username)\s+is\s+[a-z][a-z .'-]{2,40}\b"),
-        ("api-key", Pii, r"\b(?:sk|pk|api)[-_](?:live|test)?[-_]?[A-Za-z0-9]{16,}\b"),
-        ("password-assign", Pii, r"(?i)\bpassword\s*[:=]\s*\S{6,}"),
-        ("ssh-key", Pii, r"ssh-(?:rsa|ed25519)\s+[A-Za-z0-9+/=]{40,}"),
+        ("email", Pii, r"(?i)\b[a-z0-9._%+-]+@[a-z0-9.-]+\.[a-z]{2,}\b", Some("@")),
+        ("phone-us", Pii, r"\b\d{3}[-. ]\d{3}[-. ]\d{4}\b", None),
+        ("phone-intl", Pii, r"\+\d{1,3}[ -]?\d{2,4}[ -]?\d{3,4}[ -]?\d{3,4}\b", Some("+")),
+        ("ssn", Pii, r"\b\d{3}-\d{2}-\d{4}\b", None),
+        ("ipv4", Pii, r"\b(?:\d{1,3}\.){3}\d{1,3}\b", Some(".")),
+        ("ipv6", Pii, r"(?i)\b(?:[0-9a-f]{1,4}:){3,7}[0-9a-f]{1,4}\b", Some(":")),
+        ("mac-addr", Pii, r"(?i)\b(?:[0-9a-f]{2}:){5}[0-9a-f]{2}\b", Some(":")),
+        ("passport", Pii, r"(?i)\bpassport\s*(?:no\.?|number)?\s*[:#]?\s*[a-z]?\d{7,9}\b", Some("passport")),
+        ("drivers-license", Pii, r"(?i)\b(?:driver'?s?\s+licen[sc]e|dl)\s*[:#]?\s*[a-z]?\d{6,9}\b", None),
+        ("plate", Pii, r"(?i)\blicense\s+plate\s*[:#]?\s*[a-z0-9-]{5,8}\b", Some("plate")),
+        ("dob", Pii, r"(?i)\b(?:dob|date\s+of\s+birth)\s*[:#]?\s*\d{1,4}[-/]\d{1,2}[-/]\d{1,4}\b", None),
+        ("street-address", Pii, r"(?i)\b\d{1,5}\s+[a-z]+\s+(?:st|street|ave|avenue|rd|road|blvd|lane|ln|dr|drive)\b", None),
+        ("zip+4", Pii, r"\b\d{5}-\d{4}\b", None),
+        ("geo-coord", Pii, r"-?\d{1,3}\.\d{4,},\s*-?\d{1,3}\.\d{4,}", Some(",")),
+        ("aadhaar", Pii, r"\b\d{4}\s\d{4}\s\d{4}\b", None),
+        ("national-id", Pii, r"(?i)\bnational\s+id\s*[:#]?\s*\d{6,12}\b", Some("national")),
+        ("username-handle", Pii, r"(?i)\bmy\s+(?:name|username)\s+is\s+[a-z][a-z .'-]{2,40}\b", Some("my")),
+        ("api-key", Pii, r"\b(?:sk|pk|api)[-_](?:live|test)?[-_]?[A-Za-z0-9]{16,}\b", None),
+        ("password-assign", Pii, r"(?i)\bpassword\s*[:=]\s*\S{6,}", Some("password")),
+        ("ssh-key", Pii, r"ssh-(?:rsa|ed25519)\s+[A-Za-z0-9+/=]{40,}", Some("ssh-")),
         // ---------------- HIPAA / PHI ----------------
-        ("patient-kw", Hipaa, r"(?i)\bpatient\b"),
-        ("mrn", Hipaa, r"(?i)\bmrn\s*[:#]?\s*\d{4,10}\b"),
-        ("icd10", Hipaa, r"(?i)\b[a-tv-z]\d{2}(?:\.\d{1,4})?\b\s*(?:code|diagnos)"),
-        ("diagnosis-kw", Hipaa, r"(?i)\bdiagnos(?:is|ed|tic)\b"),
-        ("prescription", Hipaa, r"(?i)\bprescri(?:bed?|ption)\b"),
-        ("dosage", Hipaa, r"(?i)\b\d+\s*(?:mg|mcg|ml|units?)\s+(?:daily|twice|bid|tid|qid|per\s+day)\b"),
-        ("med-metformin", Hipaa, r"(?i)\bmetformin\b"),
-        ("med-insulin", Hipaa, r"(?i)\binsulin\b"),
-        ("med-lisinopril", Hipaa, r"(?i)\blisinopril\b"),
-        ("med-atorvastatin", Hipaa, r"(?i)\batorvastatin\b"),
-        ("hba1c", Hipaa, r"(?i)\bhba1c\b"),
-        ("blood-pressure", Hipaa, r"\b\d{2,3}/\d{2,3}\s*(?:mmhg|bp)\b"),
-        ("lab-result", Hipaa, r"(?i)\b(?:glucose|cholesterol|a1c|creatinine)\s+(?:level|result)s?\b"),
-        ("condition-diabetes", Hipaa, r"(?i)\bdiabet(?:es|ic)\b"),
-        ("condition-hypertension", Hipaa, r"(?i)\bhypertension\b"),
-        ("condition-cancer", Hipaa, r"(?i)\b(?:cancer|oncolog|chemotherapy)\b"),
-        ("condition-hiv", Hipaa, r"(?i)\bhiv(?:\s+positive)?\b"),
-        ("condition-mental", Hipaa, r"(?i)\b(?:depression|anxiety\s+disorder|schizophrenia|bipolar)\b"),
-        ("symptom-report", Hipaa, r"(?i)\bsymptoms?\s+(?:of|include|analysis)\b"),
-        ("treatment-plan", Hipaa, r"(?i)\btreatment\s+(?:options?|plan)\b"),
-        ("health-insurance-id", Hipaa, r"(?i)\b(?:member|policy)\s+id\s*[:#]?\s*[a-z0-9]{6,14}\b"),
+        ("patient-kw", Hipaa, r"(?i)\bpatient\b", Some("patient")),
+        ("mrn", Hipaa, r"(?i)\bmrn\s*[:#]?\s*\d{4,10}\b", Some("mrn")),
+        ("icd10", Hipaa, r"(?i)\b[a-tv-z]\d{2}(?:\.\d{1,4})?\b\s*(?:code|diagnos)", None),
+        ("diagnosis-kw", Hipaa, r"(?i)\bdiagnos(?:is|ed|tic)\b", Some("diagnos")),
+        ("prescription", Hipaa, r"(?i)\bprescri(?:bed?|ption)\b", Some("prescri")),
+        ("dosage", Hipaa, r"(?i)\b\d+\s*(?:mg|mcg|ml|units?)\s+(?:daily|twice|bid|tid|qid|per\s+day)\b", None),
+        ("med-metformin", Hipaa, r"(?i)\bmetformin\b", Some("metformin")),
+        ("med-insulin", Hipaa, r"(?i)\binsulin\b", Some("insulin")),
+        ("med-lisinopril", Hipaa, r"(?i)\blisinopril\b", Some("lisinopril")),
+        ("med-atorvastatin", Hipaa, r"(?i)\batorvastatin\b", Some("atorvastatin")),
+        ("hba1c", Hipaa, r"(?i)\bhba1c\b", Some("hba1c")),
+        ("blood-pressure", Hipaa, r"\b\d{2,3}/\d{2,3}\s*(?:mmhg|bp)\b", Some("/")),
+        ("lab-result", Hipaa, r"(?i)\b(?:glucose|cholesterol|a1c|creatinine)\s+(?:level|result)s?\b", None),
+        ("condition-diabetes", Hipaa, r"(?i)\bdiabet(?:es|ic)\b", Some("diabet")),
+        ("condition-hypertension", Hipaa, r"(?i)\bhypertension\b", Some("hypertension")),
+        ("condition-cancer", Hipaa, r"(?i)\b(?:cancer|oncolog|chemotherapy)\b", None),
+        ("condition-hiv", Hipaa, r"(?i)\bhiv(?:\s+positive)?\b", Some("hiv")),
+        ("condition-mental", Hipaa, r"(?i)\b(?:depression|anxiety\s+disorder|schizophrenia|bipolar)\b", None),
+        ("symptom-report", Hipaa, r"(?i)\bsymptoms?\s+(?:of|include|analysis)\b", Some("symptom")),
+        ("treatment-plan", Hipaa, r"(?i)\btreatment\s+(?:options?|plan)\b", Some("treatment")),
+        ("health-insurance-id", Hipaa, r"(?i)\b(?:member|policy)\s+id\s*[:#]?\s*[a-z0-9]{6,14}\b", Some("id")),
         // ---------------- Financial ----------------
-        ("card-visa", Financial, r"\b4\d{3}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b"),
-        ("card-mc", Financial, r"\b5[1-5]\d{2}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b"),
-        ("card-amex", Financial, r"\b3[47]\d{2}[- ]?\d{6}[- ]?\d{5}\b"),
-        ("cvv", Financial, r"(?i)\bcvv2?\s*[:#]?\s*\d{3,4}\b"),
-        ("iban", Financial, r"\b[A-Z]{2}\d{2}[A-Z0-9]{11,30}\b"),
-        ("swift", Financial, r"(?i)\bswift\s*(?:code)?\s*[:#]?\s*[a-z]{6}[a-z0-9]{2,5}\b"),
-        ("routing-number", Financial, r"(?i)\brouting\s*(?:no\.?|number)?\s*[:#]?\s*\d{9}\b"),
-        ("account-number", Financial, r"(?i)\baccount\s*(?:no\.?|number)?\s*[:#]?\s*\d{8,12}\b"),
-        ("wire-transfer", Financial, r"(?i)\bwire\s+transfer\b"),
-        ("salary", Financial, r"(?i)\bsalary\s+(?:review|of|is)\b"),
-        ("crypto-btc", Financial, r"\b(?:bc1|[13])[a-km-zA-HJ-NP-Z1-9]{25,42}\b"),
-        ("tax-ein", Financial, r"\b\d{2}-\d{7}\b"),
+        ("card-visa", Financial, r"\b4\d{3}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b", None),
+        ("card-mc", Financial, r"\b5[1-5]\d{2}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b", None),
+        ("card-amex", Financial, r"\b3[47]\d{2}[- ]?\d{6}[- ]?\d{5}\b", None),
+        ("cvv", Financial, r"(?i)\bcvv2?\s*[:#]?\s*\d{3,4}\b", Some("cvv")),
+        ("iban", Financial, r"\b[A-Z]{2}\d{2}[A-Z0-9]{11,30}\b", None),
+        ("swift", Financial, r"(?i)\bswift\s*(?:code)?\s*[:#]?\s*[a-z]{6}[a-z0-9]{2,5}\b", Some("swift")),
+        ("routing-number", Financial, r"(?i)\brouting\s*(?:no\.?|number)?\s*[:#]?\s*\d{9}\b", Some("routing")),
+        ("account-number", Financial, r"(?i)\baccount\s*(?:no\.?|number)?\s*[:#]?\s*\d{8,12}\b", Some("account")),
+        ("wire-transfer", Financial, r"(?i)\bwire\s+transfer\b", Some("wire")),
+        ("salary", Financial, r"(?i)\bsalary\s+(?:review|of|is)\b", Some("salary")),
+        ("crypto-btc", Financial, r"\b(?:bc1|[13])[a-km-zA-HJ-NP-Z1-9]{25,42}\b", None),
+        ("tax-ein", Financial, r"\b\d{2}-\d{7}\b", None),
     ]
 });
 
-/// Scan text, returning every Stage-1 match.
+/// Scan text, returning every Stage-1 match. Each pattern's regex runs at
+/// most once; keyword-anchored patterns are skipped entirely when their
+/// required literal is absent (see [`Pattern::gate`]). The text is
+/// ASCII-folded once up front — `to_ascii_lowercase` is byte-preserving,
+/// so the folded copy is valid UTF-8 and gate checks are plain (optimized)
+/// substring searches against already-lowercase literals.
 pub fn scan(text: &str) -> Vec<Match> {
+    let folded = text.to_ascii_lowercase();
     let mut out = Vec::new();
     for p in PATTERNS.iter() {
+        if let Some(lit) = p.gate {
+            if !folded.contains(lit) {
+                continue;
+            }
+        }
         for m in p.regex.find_iter(text) {
             out.push(Match { pattern: p.name, category: p.category, start: m.start(), end: m.end() });
         }
@@ -223,5 +242,52 @@ mod tests {
     fn case_insensitive_where_expected() {
         assert_eq!(stage1_floor("PATIENT WITH HYPERTENSION"), 0.9);
         assert_eq!(stage1_floor("Email ME at X@Y.ORG"), 0.8);
+    }
+
+    /// `scan` with literal gates must find exactly what an ungated pass
+    /// finds: a gate may only skip work, never change results.
+    #[test]
+    fn gated_scan_equals_ungated_scan() {
+        fn scan_ungated(text: &str) -> Vec<Match> {
+            let mut out = Vec::new();
+            for p in PATTERNS.iter() {
+                for m in p.regex.find_iter(text) {
+                    out.push(Match { pattern: p.name, category: p.category, start: m.start(), end: m.end() });
+                }
+            }
+            out
+        }
+        for text in [
+            "contact me at jane@example.com",
+            "call 555-123-4567 tomorrow",
+            "my ip is 10.0.0.12",
+            "patient diagnosed with diabetes",
+            "prescribed metformin 500 mg daily",
+            "ssn 123-45-6789 of a patient",
+            "search medical literature for diabetes guidelines",
+            "how does insulin regulate glucose",
+            "charge card 4111-1111-1111-1234",
+            "wire transfer from account 1234567890",
+            "routing number 021000021",
+            "what is the capital of france",
+            "explain how rust ownership works",
+            "PATIENT WITH HYPERTENSION",
+            "Email ME at X@Y.ORG",
+            "passport no: X1234567 and license plate AB-123C",
+            "my name is jane doe, dob 1990/01/02, bp 120/80 bp",
+            "İstanbul'da MRN: 48291 ve hba1c sonuçları",
+            "salary review for 日本 staff, cvv: 123, swift code ABCDEF12",
+        ] {
+            assert_eq!(scan(text), scan_ungated(text), "gate changed results for {text:?}");
+        }
+    }
+
+    #[test]
+    fn gates_fold_ascii_case_only() {
+        // uppercase ASCII keywords pass their gate…
+        assert_eq!(stage1_floor("WIRE TRANSFER incoming"), 0.9);
+        // …and multi-byte chars never false-match an ASCII literal: "ü"
+        // does not fold to "u", so this stays clean
+        assert_eq!(stage1_floor("ünrelated text"), 0.0);
     }
 }

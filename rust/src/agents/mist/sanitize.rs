@@ -17,9 +17,14 @@ use std::collections::HashMap;
 use once_cell::sync::Lazy;
 use regex::Regex;
 
-use crate::agents::mist::entities::{detect, EntityKind};
+use crate::agents::mist::entities::{detect, Entity, EntityKind};
 use crate::types::{Role, Turn};
 use crate::util::Rng;
+
+/// Default size of the random placeholder-id space per session.
+const ID_SPACE: u64 = 1_000_000;
+/// Random draws attempted before falling back to sequential ids.
+const MAX_ID_RETRIES: u32 = 16;
 
 /// Session-scoped bidirectional placeholder map (φ).
 #[derive(Clone, Debug)]
@@ -27,6 +32,11 @@ pub struct PlaceholderMap {
     forward: HashMap<String, String>, // entity value -> placeholder
     reverse: HashMap<String, String>, // placeholder -> entity value
     rng: Rng,
+    /// Upper bound (exclusive) of the random id range `[1, id_space)`.
+    id_space: u64,
+    /// Next sequential id for the deterministic fallback; starts at
+    /// `id_space` so fallback ids never collide with random ones.
+    next_seq: u64,
 }
 
 static RE_PLACEHOLDER: Lazy<Regex> = Lazy::new(|| Regex::new(r"\[[A-Z][A-Z_]*_\d+\]").unwrap());
@@ -35,7 +45,20 @@ impl PlaceholderMap {
     /// Create a map for one session. Different sessions must use different
     /// seeds (the session store derives them from the session id).
     pub fn new(session_seed: u64) -> PlaceholderMap {
-        PlaceholderMap { forward: HashMap::new(), reverse: HashMap::new(), rng: Rng::new(session_seed) }
+        PlaceholderMap::with_id_space(session_seed, ID_SPACE)
+    }
+
+    /// Like [`PlaceholderMap::new`] with an explicit random-id space
+    /// (test/bench hook: a tiny space forces the sequential fallback).
+    pub fn with_id_space(session_seed: u64, id_space: u64) -> PlaceholderMap {
+        let id_space = id_space.max(2);
+        PlaceholderMap {
+            forward: HashMap::new(),
+            reverse: HashMap::new(),
+            rng: Rng::new(session_seed),
+            id_space,
+            next_seq: id_space,
+        }
     }
 
     /// Number of distinct entities currently mapped.
@@ -53,9 +76,23 @@ impl PlaceholderMap {
         if let Some(p) = self.forward.get(&key) {
             return p.clone();
         }
-        // random, session-scoped identifier; retry on (unlikely) collision
+        // Random, session-scoped identifier with BOUNDED retries: the old
+        // unbounded loop hung a worker once one kind's id space filled up.
+        // After the retry budget, fall back to a deterministic sequential
+        // counter that starts past the random range (disjoint, so the scan
+        // below terminates after at most a few occupied slots).
+        for _ in 0..MAX_ID_RETRIES {
+            let id = self.rng.range_u64(1, self.id_space);
+            let placeholder = format!("[{}_{}]", kind.prefix(), id);
+            if !self.reverse.contains_key(&placeholder) {
+                self.forward.insert(key, placeholder.clone());
+                self.reverse.insert(placeholder.clone(), value.to_string());
+                return placeholder;
+            }
+        }
         loop {
-            let id = self.rng.range_u64(1, 1000);
+            let id = self.next_seq;
+            self.next_seq += 1;
             let placeholder = format!("[{}_{}]", kind.prefix(), id);
             if !self.reverse.contains_key(&placeholder) {
                 self.forward.insert(key, placeholder.clone());
@@ -69,6 +106,15 @@ impl PlaceholderMap {
     /// `target_privacy` by typed placeholders.
     pub fn sanitize(&mut self, text: &str, target_privacy: f64) -> String {
         let entities = detect(text);
+        self.splice(text, &entities, target_privacy)
+    }
+
+    /// Splice precomputed entities into `text`: the cheap half of
+    /// [`PlaceholderMap::sanitize`], for callers that ran [`detect`] on an
+    /// immutable snapshot *outside* the lock guarding this map. `entities`
+    /// must be `detect(text)`'s output (sorted, non-overlapping, in-bounds
+    /// char-boundary spans).
+    pub fn splice(&mut self, text: &str, entities: &[Entity], target_privacy: f64) -> String {
         let mut out = String::with_capacity(text.len());
         let mut cursor = 0;
         for e in entities {
@@ -227,6 +273,48 @@ mod tests {
         let text = "explain how rust ownership works";
         assert_eq!(map.sanitize(text, 0.4), text);
         assert!(map.is_empty());
+    }
+
+    #[test]
+    fn two_thousand_distinct_entities_of_one_kind_terminate_with_unique_ids() {
+        // regression: the old 999-id space + unbounded retry loop hung a
+        // worker once a session accumulated >999 distinct PERSONs
+        let mut map = PlaceholderMap::new(31);
+        let mut placeholders = std::collections::HashSet::new();
+        for i in 0..2_000 {
+            // synthetic distinct values of one kind, inserted directly
+            // through the id allocator
+            let p = map.placeholder_for(EntityKind::Person, &format!("person-{i}"));
+            assert!(p.starts_with("[PERSON_") && p.ends_with(']'), "{p}");
+            assert!(placeholders.insert(p.clone()), "duplicate placeholder {p}");
+            // the reverse map resolves every placeholder back
+            assert_eq!(map.desanitize(&p), format!("person-{i}"));
+        }
+        assert_eq!(map.len(), 2_000);
+    }
+
+    #[test]
+    fn exhausted_random_space_falls_back_to_sequential_ids() {
+        // a 4-slot random space exhausts immediately: the deterministic
+        // fallback must keep allocating unique ids without spinning
+        let mut map = PlaceholderMap::with_id_space(7, 4);
+        let mut placeholders = std::collections::HashSet::new();
+        for i in 0..100 {
+            let p = map.placeholder_for(EntityKind::Person, &format!("p{i}"));
+            assert!(placeholders.insert(p), "duplicate at {i}");
+        }
+        assert_eq!(map.len(), 100);
+        // sequential ids start past the random range
+        assert!(placeholders.iter().any(|p| p.contains("[PERSON_4")), "{placeholders:?}");
+    }
+
+    #[test]
+    fn splice_matches_sanitize_for_precomputed_entities() {
+        let text = "patient john doe ssn 123-45-6789 in chicago";
+        let entities = crate::agents::mist::entities::detect(text);
+        let mut a = PlaceholderMap::new(99);
+        let mut b = PlaceholderMap::new(99);
+        assert_eq!(a.sanitize(text, 0.4), b.splice(text, &entities, 0.4));
     }
 
     #[test]

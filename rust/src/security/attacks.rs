@@ -95,7 +95,8 @@ pub fn attack3_placeholder_analysis() -> AttackOutcome {
         }
     }
     let pairs = n as usize * (n as usize - 1) / 2;
-    // With ids drawn from ~1000 values, expected collision rate ≈ 0.1%.
+    // With ids drawn from a ~10^6-value per-session space, the expected
+    // cross-session collision rate is ≈ 10^-6.
     let rate = collisions as f64 / pairs as f64;
     AttackOutcome {
         name: "A3 placeholder-analysis",

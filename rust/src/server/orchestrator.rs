@@ -50,7 +50,6 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock, Weak};
 
 use crate::agents::lighthouse::Lighthouse;
-use crate::agents::mist::sanitize::sanitize_history;
 use crate::agents::mist::Mist;
 use crate::agents::tide::hysteresis::Hysteresis;
 use crate::agents::tide::monitor::DegradeDetector;
@@ -655,6 +654,16 @@ impl Orchestrator {
     /// hop to a *lower*-privacy island than the one sanitized for must
     /// re-sanitize at the new level — entities between the two levels were
     /// left in cleartext by the first pass.
+    ///
+    /// The pass is INCREMENTAL and mostly lock-free: phase 1 reads the
+    /// session's per-level sanitized-history cache under the shard read
+    /// lock, phase 2 runs entity detection on the immutable snapshot with
+    /// no lock held (only the delta turns appended since the last request
+    /// at this — or a stricter — level are scanned; a failover hop to a
+    /// lower level rescans the cached clean form, not the raw history),
+    /// and phase 3 holds the write lock just for `PlaceholderMap` splices
+    /// and the cache refresh. Detection cost therefore scales with the
+    /// delta, and the shard critical section no longer serializes scans.
     fn sanitize_for_target(&self, p: &mut Prepared) -> anyhow::Result<()> {
         if !p.routed.sanitize {
             return Ok(());
@@ -665,20 +674,33 @@ impl Orchestrator {
                 return Ok(());
             }
         }
-        let Some((clean_history, clean_prompt)) = self.sessions.with_mut(p.session_id, |s| {
-            let h = sanitize_history(&p.request.history, target_privacy, &mut s.placeholders);
-            // the outgoing prompt is sanitized at the same level
-            let pr = s.placeholders.sanitize(&p.request.prompt, target_privacy);
-            (h, pr)
-        }) else {
+        // phase 1: capture the plan (cache prefix + delta) — shard read lock
+        let Some(plan) = self
+            .sessions
+            .with(p.session_id, |s| s.plan_sanitize(target_privacy, &p.request.history, &p.request.prompt))
+        else {
             self.audit_vanished(p.id, &p.user, p.now, p.s_r, "session closed before sanitization", p.failovers);
             anyhow::bail!("session {} closed mid-request", p.session_id);
         };
-        p.request.history = clean_history;
-        p.request.prompt = clean_prompt;
+        // phase 2: entity detection on the immutable snapshot — NO lock
+        let detected = plan.detect();
+        // phase 3: placeholder splice + cache refresh — shard write lock
+        let Some(wire) = self.sessions.with_mut(p.session_id, |s| detected.apply(s)) else {
+            self.audit_vanished(p.id, &p.user, p.now, p.s_r, "session closed before sanitization", p.failovers);
+            anyhow::bail!("session {} closed mid-request", p.session_id);
+        };
+        p.request.history = wire.history;
+        p.request.prompt = wire.prompt;
         if !p.sanitized {
-            // count the turn once, not once per failover re-sanitization
-            self.metrics.count("sanitized_turns", 1);
+            // one per request that sanitized, however many failover hops
+            self.metrics.count("sanitized_requests", 1);
+        }
+        // real per-turn work: texts scanned + spliced this pass (delta
+        // turns, respliced cached turns, the prompt) vs turns served
+        // straight from the per-level cache
+        self.metrics.count("sanitized_turns", wire.transformed as u64);
+        if wire.reused > 0 {
+            self.metrics.count("sanitized_turns_reused", wire.reused as u64);
         }
         p.sanitized = true;
         p.sanitized_at = Some(target_privacy);

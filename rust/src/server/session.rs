@@ -1,10 +1,12 @@
 //! Session store: multi-turn conversations with trust-boundary tracking.
 //!
 //! Each session owns its chat history `h_r`, the privacy level of the island
-//! the previous turn ran on (`P_prev`, Algorithm 1 line 14) and the
+//! the previous turn ran on (`P_prev`, Algorithm 1 line 14), the
 //! session-scoped [`PlaceholderMap`] so the same entity keeps the same
 //! placeholder across turns while different sessions get uncorrelated ids
-//! (Attack-3 mitigation).
+//! (Attack-3 mitigation), and a per-privacy-level cache of the sanitized
+//! history so repeat trust-boundary crossings pay O(delta turns), not
+//! O(whole history) — see [`Session::plan_sanitize`].
 //!
 //! The store is sharded for concurrent serving: session ids are allocated
 //! from an atomic counter and sessions live in `RwLock`-guarded shards keyed
@@ -12,15 +14,92 @@
 //! locks. Access goes through closures ([`SessionStore::with`] /
 //! [`SessionStore::with_mut`]) rather than returned references, keeping lock
 //! scopes explicit and minimal.
+//!
+//! # Incremental sanitization (three phases)
+//!
+//! Entity detection is the expensive part of sanitization; running it for
+//! the whole history on every crossing made the privacy hot path
+//! O(history) per request *inside* the session-shard lock (O(n²) per
+//! conversation, serializing every request in the shard). The rebuilt path
+//! splits the work so scanning happens on an immutable snapshot outside
+//! any lock:
+//!
+//! 1. [`Session::plan_sanitize`] (shard **read** lock): look up the
+//!    per-level cache, clone the reusable sanitized prefix and the
+//!    still-original delta turns.
+//! 2. [`SanitizePlan::detect`] (**no lock**): run entity detection over the
+//!    delta (and, on a failover hop to a lower level, over the cached form
+//!    being re-sanitized).
+//! 3. [`DetectedSanitize::apply`] (shard **write** lock): splice
+//!    placeholders via the session's [`PlaceholderMap`] — hash lookups and
+//!    string copies only — and refresh the level cache.
+//!
+//! Turns are append-only and stored in their original (desanitized) form,
+//! so a cached sanitized prefix never goes stale; new turns are the delta.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
+use crate::agents::mist::entities::{detect, Entity};
 use crate::agents::mist::sanitize::PlaceholderMap;
 use crate::types::{Role, Turn};
 
 const SHARDS: usize = 16;
+
+/// Per-level cache entries kept per session (islands expose only a handful
+/// of distinct privacy levels; the least-covering entry is evicted beyond
+/// this).
+const MAX_CACHED_LEVELS: usize = 4;
+
+/// Sanitized-history prefixes, keyed by the privacy level they were built
+/// for. `turns[i]` is the sanitized form of `history[i]`; a cache entry
+/// covers `turns.len()` leading turns of the session history.
+#[derive(Debug, Default)]
+pub struct SanitizedCache {
+    entries: Vec<(u64, Vec<Turn>)>, // (level bits, sanitized prefix)
+}
+
+impl SanitizedCache {
+    fn get(&self, level: f64) -> Option<&Vec<Turn>> {
+        let bits = level.to_bits();
+        self.entries.iter().find(|(l, _)| *l == bits).map(|(_, t)| t)
+    }
+
+    /// Sanitized prefix cached for exactly this level (observability/tests).
+    pub fn turns_at(&self, level: f64) -> Option<&[Turn]> {
+        self.get(level).map(|t| t.as_slice())
+    }
+
+    /// Levels currently cached, with how many turns each covers.
+    pub fn coverage(&self) -> Vec<(f64, usize)> {
+        self.entries.iter().map(|(l, t)| (f64::from_bits(*l), t.len())).collect()
+    }
+
+    fn store(&mut self, level: f64, turns: Vec<Turn>) {
+        let bits = level.to_bits();
+        if let Some(entry) = self.entries.iter_mut().find(|(l, _)| *l == bits) {
+            // longer coverage wins: a racing request that sanitized a
+            // shorter snapshot must not shrink the cache
+            if turns.len() >= entry.1.len() {
+                entry.1 = turns;
+            }
+            return;
+        }
+        if self.entries.len() >= MAX_CACHED_LEVELS {
+            let evict = self.entries.iter().enumerate().min_by_key(|(_, (_, t))| t.len()).map(|(i, _)| i);
+            if let Some(pos) = evict {
+                // never trade a longer-built entry for a shorter newcomer —
+                // that would force a near-cold rescan at the evicted level
+                if self.entries[pos].1.len() >= turns.len() {
+                    return;
+                }
+                self.entries.remove(pos);
+            }
+        }
+        self.entries.push((bits, turns));
+    }
+}
 
 /// One conversation.
 #[derive(Debug)]
@@ -31,6 +110,8 @@ pub struct Session {
     /// Privacy score of the island the previous turn executed on.
     pub prev_island_privacy: Option<f64>,
     pub placeholders: PlaceholderMap,
+    /// Per-privacy-level sanitized prefixes of `history`.
+    pub sanitized: SanitizedCache,
 }
 
 impl Session {
@@ -38,7 +119,14 @@ impl Session {
         // Placeholder ids derive from (mesh seed, session id): deterministic
         // for replay, uncorrelated across sessions.
         let seed = mesh_seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        Session { id, user: user.to_string(), history: Vec::new(), prev_island_privacy: None, placeholders: PlaceholderMap::new(seed) }
+        Session {
+            id,
+            user: user.to_string(),
+            history: Vec::new(),
+            prev_island_privacy: None,
+            placeholders: PlaceholderMap::new(seed),
+            sanitized: SanitizedCache::default(),
+        }
     }
 
     /// Append a completed turn pair and record where it ran.
@@ -46,6 +134,170 @@ impl Session {
         self.history.push(Turn { role: Role::User, text: user_text.to_string() });
         self.history.push(Turn { role: Role::Assistant, text: assistant_text.to_string() });
         self.prev_island_privacy = Some(island_privacy);
+    }
+
+    /// Phase 1 of incremental sanitization (run under the shard READ lock):
+    /// split the `snapshot` of this session's history into a reusable
+    /// sanitized prefix and the delta still to transform at `level`.
+    ///
+    /// Cache preference, coverage first:
+    /// - the longest entry at a level ≤ `level` (exact level wins ties):
+    ///   reused verbatim — it replaced at least every entity `level`
+    ///   requires (over-sanitization is privacy-safe by Def. 4, never
+    ///   under);
+    /// - else the longest entry at a level > `level` (the failover-down
+    ///   case): its turns are re-sanitized at `level` from the cached
+    ///   clean form — entities *between* the two levels are still
+    ///   cleartext there and get placeholders now, while already-placed
+    ///   placeholders are inert;
+    /// - otherwise the whole snapshot is the delta (cold path).
+    pub fn plan_sanitize(&self, level: f64, snapshot: &[Turn], prompt: &str) -> SanitizePlan {
+        let max_len = snapshot.len();
+        let mut base: Vec<Turn> = Vec::new();
+        let mut resplice_base = false;
+        // best verbatim candidate: max coverage among levels <= `level`,
+        // ties to the highest (least over-sanitized) level
+        let mut verbatim: Option<(f64, &Vec<Turn>)> = None;
+        // best resplice candidate: max coverage among levels > `level`,
+        // ties to the lowest (closest) level
+        let mut above: Option<(f64, &Vec<Turn>)> = None;
+        for (bits, turns) in &self.sanitized.entries {
+            if turns.is_empty() {
+                continue;
+            }
+            let l = f64::from_bits(*bits);
+            if l <= level {
+                let better = match verbatim {
+                    None => true,
+                    Some((best, bt)) => turns.len() > bt.len() || (turns.len() == bt.len() && l > best),
+                };
+                if better {
+                    verbatim = Some((l, turns));
+                }
+            } else {
+                let better = match above {
+                    None => true,
+                    Some((best, bt)) => turns.len() > bt.len() || (turns.len() == bt.len() && l < best),
+                };
+                if better {
+                    above = Some((l, turns));
+                }
+            }
+        }
+        if let Some((_, turns)) = verbatim {
+            base = turns[..turns.len().min(max_len)].to_vec();
+        } else if let Some((_, turns)) = above {
+            base = turns[..turns.len().min(max_len)].to_vec();
+            resplice_base = true;
+        }
+        let delta = snapshot[base.len()..].to_vec();
+        SanitizePlan { level, base, resplice_base, delta, prompt: prompt.to_string() }
+    }
+}
+
+/// Phase-1 output of incremental sanitization: an immutable work order,
+/// detached from the session so detection can run lock-free.
+#[derive(Debug)]
+pub struct SanitizePlan {
+    level: f64,
+    /// Already-sanitized prefix (from the per-level cache).
+    base: Vec<Turn>,
+    /// True when `base` was built for a HIGHER level and must be
+    /// re-sanitized at `level` (failover to a lower-privacy island).
+    resplice_base: bool,
+    /// Original-text turns past the cached prefix.
+    delta: Vec<Turn>,
+    prompt: String,
+}
+
+impl SanitizePlan {
+    /// Phase 2: entity detection over everything still to transform — the
+    /// expensive scan, run OUTSIDE any session lock on immutable text.
+    pub fn detect(self) -> DetectedSanitize {
+        let SanitizePlan { level, base, resplice_base, delta, prompt } = self;
+        let base: Vec<(Turn, Option<Vec<Entity>>)> = base
+            .into_iter()
+            .map(|t| {
+                let ents = if resplice_base { Some(detect(&t.text)) } else { None };
+                (t, ents)
+            })
+            .collect();
+        let delta: Vec<(Turn, Vec<Entity>)> = delta
+            .into_iter()
+            .map(|t| {
+                let ents = detect(&t.text);
+                (t, ents)
+            })
+            .collect();
+        let prompt_entities = detect(&prompt);
+        DetectedSanitize { level, base, delta, prompt, prompt_entities }
+    }
+}
+
+/// Phase-2 output: every span to replace is known; what remains is cheap
+/// placeholder splicing against the session's [`PlaceholderMap`].
+#[derive(Debug)]
+pub struct DetectedSanitize {
+    level: f64,
+    base: Vec<(Turn, Option<Vec<Entity>>)>,
+    delta: Vec<(Turn, Vec<Entity>)>,
+    prompt: String,
+    prompt_entities: Vec<Entity>,
+}
+
+/// The wire-ready result of one incremental sanitization pass.
+#[derive(Debug)]
+pub struct SanitizedWire {
+    /// Sanitized history to transmit.
+    pub history: Vec<Turn>,
+    /// Sanitized outgoing prompt.
+    pub prompt: String,
+    /// Texts actually scanned + spliced this pass (delta turns, re-spliced
+    /// cached turns, and the prompt) — the real per-turn work metric.
+    pub transformed: usize,
+    /// Turns reused verbatim from the per-level cache.
+    pub reused: usize,
+}
+
+impl DetectedSanitize {
+    /// Phase 3 (run under the shard WRITE lock): splice placeholders and
+    /// refresh the session's per-level cache. Only map lookups and string
+    /// splices happen here — the critical section no longer scales with
+    /// scanning cost.
+    pub fn apply(self, session: &mut Session) -> SanitizedWire {
+        let DetectedSanitize { level, base, delta, prompt, prompt_entities } = self;
+        let mut transformed = 0usize;
+        let mut reused = 0usize;
+        let mut history: Vec<Turn> = Vec::with_capacity(base.len() + delta.len());
+        for (turn, ents) in base {
+            match ents {
+                None => {
+                    reused += 1;
+                    history.push(turn);
+                }
+                Some(es) => {
+                    transformed += 1;
+                    let text = session.placeholders.splice(&turn.text, &es, level);
+                    history.push(Turn { role: turn.role, text });
+                }
+            }
+        }
+        for (turn, es) in delta {
+            transformed += 1;
+            let text = session.placeholders.splice(&turn.text, &es, level);
+            history.push(Turn { role: turn.role, text });
+        }
+        let history_transformed = transformed;
+        let prompt = session.placeholders.splice(&prompt, &prompt_entities, level);
+        transformed += 1; // the prompt itself
+        // Refresh the cache only when some history turn actually changed:
+        // a fully-warm pass (prompt-only work) would store content already
+        // reachable through the cache, paying an O(history) clone under
+        // the shard write lock for nothing.
+        if history_transformed > 0 {
+            session.sanitized.store(level, history.clone());
+        }
+        SanitizedWire { history, prompt, transformed, reused }
     }
 }
 
@@ -159,6 +411,125 @@ mod tests {
             .unwrap();
         assert_eq!(store.with(id, |s| s.prev_island_privacy).unwrap(), Some(0.4));
         assert_eq!(store.with(id, |s| s.history.len()).unwrap(), 4);
+    }
+
+    fn run_sanitize(session: &mut Session, level: f64) -> SanitizedWire {
+        let snapshot = session.history.clone();
+        let plan = session.plan_sanitize(level, &snapshot, "follow-up prompt");
+        plan.detect().apply(session)
+    }
+
+    #[test]
+    fn incremental_sanitize_only_transforms_the_delta() {
+        let mut s = Session::new(1, "alice", 42);
+        s.record_turn("patient john doe has diabetes", "noted for john doe", 1.0);
+        s.record_turn("jane smith is in chicago", "ok", 1.0);
+        // cold pass at 0.4: all 4 turns + prompt transformed
+        let cold = run_sanitize(&mut s, 0.4);
+        assert_eq!(cold.transformed, 5);
+        assert_eq!(cold.reused, 0);
+        assert_eq!(cold.history.len(), 4);
+        assert!(!cold.history[0].text.contains("john"), "{:?}", cold.history[0]);
+        // two more turns land; the next pass at the same level reuses the
+        // cached prefix and transforms only the delta + prompt
+        s.record_turn("what are common complications", "many", 0.4);
+        let warm = run_sanitize(&mut s, 0.4);
+        assert_eq!(warm.reused, 4);
+        assert_eq!(warm.transformed, 3, "2 delta turns + prompt");
+        assert_eq!(warm.history.len(), 6);
+        // reused prefix is byte-identical to the cold pass
+        assert_eq!(&warm.history[..4], &cold.history[..]);
+    }
+
+    #[test]
+    fn stricter_cache_is_reused_verbatim_for_higher_levels() {
+        let mut s = Session::new(2, "bob", 7);
+        s.record_turn("patient john doe has diabetes in chicago", "ok", 1.0);
+        let at_03 = run_sanitize(&mut s, 0.3);
+        // a later request at a LESS strict level reuses the 0.3 form
+        // verbatim (over-sanitization is privacy-safe)
+        let at_07 = run_sanitize(&mut s, 0.7);
+        assert_eq!(at_07.reused, 2);
+        assert_eq!(at_07.transformed, 1, "prompt only");
+        assert_eq!(&at_07.history[..], &at_03.history[..]);
+    }
+
+    #[test]
+    fn failover_down_resplices_cached_form_and_matches_fresh() {
+        let mut s = Session::new(3, "carol", 11);
+        s.record_turn("patient john doe has diabetes in chicago", "noted", 1.0);
+        s.record_turn("jane smith arrives tomorrow", "ok", 1.0);
+        // first crossing lands on a private edge at 0.7: persons (0.8) and
+        // medical (0.9) replaced; locations (0.6) and temporal (0.5) kept
+        let edge = run_sanitize(&mut s, 0.7);
+        assert!(edge.history[0].text.contains("chicago"), "{:?}", edge.history[0]);
+        assert!(!edge.history[0].text.contains("john"));
+        // failover to cloud at 0.3 re-sanitizes from the cached clean form
+        let cloud = run_sanitize(&mut s, 0.3);
+        assert_eq!(cloud.reused, 0, "resplice scans the cached turns");
+        assert_eq!(cloud.transformed, 5, "4 respliced turns + prompt");
+        assert!(!cloud.history[0].text.contains("chicago"));
+        // cache coherence: same wire text as sanitizing the original
+        // history fresh at 0.3 — identical placeholder kinds and positions
+        // (ids are drawn in a different order, so compare id-normalized)
+        let mut fresh = Session::new(3, "carol", 11);
+        fresh.history = s.history.clone();
+        let fresh_cloud = run_sanitize(&mut fresh, 0.3);
+        let norm = |turns: &[Turn]| -> Vec<String> {
+            turns.iter().map(|t| crate::util::collapse_digit_runs(&t.text)).collect()
+        };
+        assert_eq!(norm(&cloud.history), norm(&fresh_cloud.history));
+        assert_eq!(
+            crate::util::collapse_digit_runs(&cloud.prompt),
+            crate::util::collapse_digit_runs(&fresh_cloud.prompt)
+        );
+    }
+
+    #[test]
+    fn cache_bounded_and_longest_coverage_wins() {
+        let mut s = Session::new(4, "dave", 13);
+        // each level sees fresh delta turns, so each pass stores an entry
+        for (i, level) in [0.2, 0.3, 0.45, 0.55, 0.65].into_iter().enumerate() {
+            s.record_turn(&format!("john doe in berlin, round {i}"), "ok", 1.0);
+            let _ = run_sanitize(&mut s, level);
+        }
+        assert!(s.sanitized.coverage().len() <= MAX_CACHED_LEVELS);
+        // a racing request that sanitized a SHORTER snapshot must not
+        // shrink an existing entry
+        let full = s.sanitized.turns_at(0.65).unwrap().to_vec();
+        assert_eq!(full.len(), 10);
+        s.sanitized.store(0.65, Vec::new());
+        assert_eq!(s.sanitized.turns_at(0.65).unwrap(), &full[..]);
+    }
+
+    #[test]
+    fn fully_warm_pass_does_not_rewrite_the_cache() {
+        let mut s = Session::new(6, "fay", 19);
+        s.record_turn("john doe in berlin", "ok", 1.0);
+        let _ = run_sanitize(&mut s, 0.4);
+        let before = s.sanitized.coverage();
+        // no new turns: the next pass reuses the prefix, transforms only
+        // the prompt, and must leave the cache untouched
+        let warm = run_sanitize(&mut s, 0.4);
+        assert_eq!(warm.reused, 2);
+        assert_eq!(warm.transformed, 1);
+        assert_eq!(s.sanitized.coverage(), before);
+    }
+
+    #[test]
+    fn snapshot_shorter_than_cache_truncates_the_prefix() {
+        let mut s = Session::new(5, "erin", 17);
+        s.record_turn("john doe called", "ok", 1.0);
+        s.record_turn("jane smith called", "ok", 1.0);
+        let _ = run_sanitize(&mut s, 0.4); // caches 4 turns
+        // a concurrent request prepared against an older, 2-turn snapshot
+        let snapshot = s.history[..2].to_vec();
+        let plan = s.plan_sanitize(0.4, &snapshot, "p");
+        let wire = plan.detect().apply(&mut s);
+        assert_eq!(wire.history.len(), 2);
+        assert_eq!(wire.reused, 2);
+        // and the longer cache entry survives the shorter store
+        assert_eq!(s.sanitized.turns_at(0.4).unwrap().len(), 4);
     }
 
     #[test]

@@ -84,6 +84,13 @@ pub fn write_json_artifact(bench_name: &str, rows: &[Vec<(String, f64)>]) {
     }
 }
 
+/// Whether speedup gates should assert (`ISLANDRUN_BENCH_GATE=off`
+/// disables them — smoke runs measure, they do not gate). Shared by every
+/// gated bench so the env contract cannot drift between them.
+pub fn gate_enabled() -> bool {
+    std::env::var("ISLANDRUN_BENCH_GATE").map(|v| v != "off").unwrap_or(true)
+}
+
 /// Human-readable microseconds.
 pub fn fmt_us(us: f64) -> String {
     if us < 1000.0 {

@@ -16,3 +16,24 @@ pub use atomic::AtomicF64;
 pub use rng::Rng;
 pub use stats::Histogram;
 pub use table::Table;
+
+/// Replace every ASCII digit run in `text` with a single `#`, e.g.
+/// `"[PERSON_4821]"` → `"[PERSON_#]"`. Used by tests comparing sanitized
+/// wire text across sessions, where placeholder ids are session-random but
+/// kinds and positions must match exactly.
+pub fn collapse_digit_runs(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut in_run = false;
+    for c in text.chars() {
+        if c.is_ascii_digit() {
+            if !in_run {
+                out.push('#');
+                in_run = true;
+            }
+        } else {
+            in_run = false;
+            out.push(c);
+        }
+    }
+    out
+}

@@ -98,6 +98,103 @@ fn desanitized_responses_keep_conversation_coherent() {
         .unwrap();
 }
 
+use islandrun::util::collapse_digit_runs;
+
+/// Def. 4 under failover: a request that first sanitized for the private
+/// edge (P=0.8) and then failed over to cloud (P=0.4) must transmit the
+/// same wire text as a cold sanitization at 0.4 — the incremental cache
+/// re-sanitizes from the cached clean form, and that form must be coherent
+/// with sanitizing fresh.
+#[test]
+fn failover_to_lower_privacy_island_matches_fresh_sanitization() {
+    let mut cfg = Config::default();
+    cfg.rate_limit_rps = 1e9;
+    cfg.failover_retry_budget = 4;
+    let islands = preset_healthcare();
+    let orch = Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(islandrun::islands::Fleet::new(islands.clone(), 71)), 71);
+    let s = orch.open_session("dr");
+
+    // turn 1: PHI on the workstation (P=1.0), no sanitization
+    let t1 = orch.submit(s, "patient john doe ssn 123-45-6789 has diabetes", PriorityTier::Primary, None).unwrap();
+    assert_eq!(t1.decision.target(), Some(islands[0].id));
+    assert!(!t1.sanitized);
+    orch.advance(500.0);
+
+    // saturate the workstation so follow-ups offload to the PHI edge
+    orch.set_island_load(islands[0].id, 0.99);
+    let t2 = orch.submit(s, "what should we monitor generally", PriorityTier::Burstable, None).unwrap();
+    assert_eq!(t2.decision.target(), Some(islands[1].id), "expected the 0.8 edge, got {:?}", t2.decision);
+    assert!(t2.sanitized, "1.0 -> 0.8 crossing must sanitize");
+    orch.advance(500.0);
+
+    // the edge dies silently; the next follow-up is routed there, fails at
+    // execute, and fails over DOWN to cloud (0.4) — re-sanitized from the
+    // cached 0.8-level form
+    orch.silent_crash_island(islands[1].id);
+    let t3 = orch.submit(s, "anything else to watch for", PriorityTier::Burstable, None).unwrap();
+    assert_eq!(t3.decision.target(), Some(islands[2].id), "expected cloud after failover, got {:?}", t3.decision);
+    assert!(t3.sanitized);
+    assert!(orch.metrics.counter_value("failovers") >= 1);
+    assert_eq!(orch.metrics.counter_value("sanitized_requests"), 2);
+
+    // cache coherence: the 0.4-level cache (what went over the wire) must
+    // equal a cold sanitization of the same original history at 0.4,
+    // modulo the session-random placeholder ids
+    let (original, cached) = orch
+        .sessions
+        .with(s, |sess| {
+            let cached = sess.sanitized.turns_at(islands[2].privacy).expect("0.4 cache populated").to_vec();
+            (sess.history.clone(), cached)
+        })
+        .unwrap();
+    let mut fresh_map = PlaceholderMap::new(0xF4E5);
+    let fresh = islandrun::agents::mist::sanitize::sanitize_history(&original[..cached.len()], islands[2].privacy, &mut fresh_map);
+    assert_eq!(cached.len(), 4, "t3 snapshot covered both earlier turn pairs");
+    for (c, f) in cached.iter().zip(&fresh) {
+        assert_eq!(collapse_digit_runs(&c.text), collapse_digit_runs(&f.text), "cached {c:?} vs fresh {f:?}");
+        assert_eq!(c.role, f.role);
+    }
+    // and nothing above the cloud's level survives in the cached form
+    for turn in &cached {
+        assert!(PlaceholderMap::verify_clean(&turn.text, islands[2].privacy), "{turn:?}");
+    }
+}
+
+/// The per-session cache makes repeat crossings O(delta): alternating
+/// sensitive (workstation) and benign (edge) turns, each crossing
+/// sanitizes only the turns appended since the previous crossing.
+#[test]
+fn repeat_crossings_sanitize_only_the_delta() {
+    let mut cfg = Config::default();
+    cfg.rate_limit_rps = 1e9;
+    let islands = preset_healthcare();
+    let orch = Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(islandrun::islands::Fleet::new(islands.clone(), 72)), 72);
+    let s = orch.open_session("dr");
+    // keep the workstation effectively full so benign turns offload to the
+    // 0.8 edge; Primary still lands on it as the failsafe local pick
+    orch.set_island_load(islands[0].id, 0.99);
+
+    for i in 0..3 {
+        let phi = format!("patient john doe ssn 123-45-678{i} has diabetes");
+        let t_phi = orch.submit(s, &phi, PriorityTier::Primary, None).unwrap();
+        assert_eq!(t_phi.decision.target(), Some(islands[0].id), "round {i}: {:?}", t_phi.decision);
+        assert!(!t_phi.sanitized);
+        orch.advance(500.0);
+        let t_gen = orch.submit(s, "what should we monitor generally", PriorityTier::Burstable, None).unwrap();
+        assert_eq!(t_gen.decision.target(), Some(islands[1].id), "round {i}: {:?}", t_gen.decision);
+        assert!(t_gen.sanitized);
+        orch.advance(500.0);
+    }
+
+    // three crossings at the same level: the first is cold (2 turns +
+    // prompt), each later one transforms exactly its 4-turn delta + prompt
+    // and reuses the cached prefix — 3 + 5 + 5 scanned vs 21 without the
+    // cache
+    assert_eq!(orch.metrics.counter_value("sanitized_requests"), 3);
+    assert_eq!(orch.metrics.counter_value("sanitized_turns"), 13);
+    assert_eq!(orch.metrics.counter_value("sanitized_turns_reused"), 8);
+}
+
 #[test]
 fn mist_engine_and_heuristic_agree_on_extremes() {
     // when artifacts exist, the real classifier and the heuristic must agree

@@ -170,6 +170,95 @@ fn prop_sanitize_round_trip() {
     );
 }
 
+/// Unicode fuzz for the sanitization pipeline: random mixed-script strings
+/// through detect → sanitize → verify_clean → desanitize must never panic,
+/// never leave an above-threshold entity, report only char-boundary spans,
+/// and round-trip placeholder-free text byte-for-byte. This is the
+/// regression net for the old `to_lowercase()`-offset bug, where a single
+/// `İ`/`ẞ` before an entity shifted every span.
+#[test]
+fn prop_unicode_sanitize_never_panics_and_round_trips() {
+    // entity terms in one fixed casing so desanitize is an exact inverse
+    let entity_terms = [
+        "john doe",
+        "jane smith",
+        "jane müller",
+        "arun patel",
+        "maria garcia",
+        "chicago",
+        "berlin",
+        "osaka",
+        "diabetes",
+        "asthma",
+        "metformin",
+        "acme corp",
+        "ssn 123-45-6789",
+        "card 4111 1111 1111 1111",
+        "a@b.co",
+    ];
+    // Unicode confusion: chars whose case maps change byte length (İ, ẞ),
+    // multi-byte letters, combining marks, emoji, CJK, RTL — everything
+    // that broke original-string slicing with lowered-text offsets. No
+    // brackets (they would collide with placeholder syntax).
+    let confusion = [
+        "İstanbul",
+        "İİİ",
+        "ẞtraße",
+        "ß",
+        "ümit",
+        "naïve",
+        "e\u{0301}clair",
+        "🏝️",
+        "🏥💉",
+        "日本語テキスト",
+        "данные",
+        "مرحبا",
+        "Ωmega",
+        "ﬁﬂ",
+        "z\u{0300}\u{0301}\u{0302}",
+    ];
+    let filler = ["and", "then", "we", "discussed", "the", "plan", "quietly", "again"];
+    check(
+        "unicode-sanitize",
+        CheckCfg { cases: 400, ..CheckCfg::default() },
+        |rng, size| {
+            let mut text = String::new();
+            for _ in 0..(1 + rng.below(2 + size.max(1))) {
+                match rng.below(6) {
+                    0 | 1 => text.push_str(rng.pick(&entity_terms)),
+                    2 | 3 => text.push_str(rng.pick(&confusion)),
+                    _ => text.push_str(rng.pick(&filler)),
+                }
+                text.push(' ');
+            }
+            let level = *rng.pick(&[0.3, 0.45, 0.55, 0.7, 0.95]);
+            (text, level, rng.next_u64())
+        },
+        |(text, level, seed)| {
+            // must not panic on any of these, ever
+            let entities = islandrun::agents::mist::entities::detect(text);
+            for e in &entities {
+                if !text.is_char_boundary(e.start) || !text.is_char_boundary(e.end) {
+                    return CaseResult::Fail(format!("span off char boundary: {e:?} in {text:?}"));
+                }
+                if text[e.start..e.end] != e.text {
+                    return CaseResult::Fail(format!("span/text mismatch: {e:?} in {text:?}"));
+                }
+            }
+            let mut map = PlaceholderMap::new(*seed);
+            let sanitized = map.sanitize(text, *level);
+            all(vec![
+                ensure(PlaceholderMap::verify_clean(&sanitized, *level), || {
+                    format!("dirty at {level}: {sanitized:?} from {text:?}")
+                }),
+                ensure(map.desanitize(&sanitized) == *text, || {
+                    format!("round trip broke: {:?} -> {:?} -> {:?}", text, sanitized, map.desanitize(&sanitized))
+                }),
+            ])
+        },
+    );
+}
+
 /// Eq. 2: trust composition is conservative — never above any component.
 #[test]
 fn prop_trust_composition_conservative() {
