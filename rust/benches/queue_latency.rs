@@ -1,17 +1,23 @@
 //! Queue-path latency: enqueue→resolve wall time through the admission
-//! queue + worker pool (Sim backend) at 1, 4 and 16 producers.
+//! queue + worker pool (Sim backend) at 1, 4 and 16 producers, for BOTH
+//! batching modes — run-to-completion coalescing and continuous
+//! (decode-step) batching.
 //!
 //! Each producer runs a closed loop over the non-blocking surface: enqueue
-//! one request, wait its Ticket, record the elapsed wall time, repeat. That
-//! measures the full lifecycle overhead a caller of `enqueue` observes —
-//! admission, queue wait, routing, coalesced execution and ticket
-//! resolution — under increasing producer concurrency against a fixed
-//! 4-thread worker pool.
+//! one request, block on the ticket's TokenStream for the FIRST event
+//! (time-to-first-token: in continuous mode tokens stream at decode-chunk
+//! boundaries; in coalesce mode the first event is the terminal, so TTFT
+//! equals completion), then wait the ticket and record end-to-end wall
+//! time. That measures both the full lifecycle overhead and the streaming
+//! head-start continuous batching buys under increasing producer
+//! concurrency against a fixed 4-thread worker pool.
 //!
 //! CI hooks: `ISLANDRUN_BENCH_REQUESTS` overrides the total request count
-//! (the bench-smoke job uses a short run) and `ISLANDRUN_BENCH_JSON=<path>`
+//! (the bench-smoke job uses a short run), `ISLANDRUN_BENCH_JSON=<path>`
 //! writes the measured rows as a JSON artifact (uploaded as
-//! `BENCH_queue.json`).
+//! `BENCH_queue.json`), and `ISLANDRUN_BENCH_GATE=off` disables the final
+//! continuous-vs-coalesce comparison gate (throughput and p99 TTFT at 16
+//! producers) for smoke runs on noisy shared runners.
 
 use std::sync::Arc;
 
@@ -19,17 +25,17 @@ use islandrun::agents::mist::Mist;
 use islandrun::config::{preset_personal_group, Config};
 use islandrun::eval::loadgen::class_for;
 use islandrun::islands::Fleet;
-use islandrun::runtime::BatchPolicy;
+use islandrun::runtime::{BatchMode, BatchPolicy};
 use islandrun::server::{Backend, Orchestrator, SubmitRequest};
 use islandrun::substrate::trace::{priority_for, prompt_for};
-use islandrun::util::bench::write_json_artifact;
+use islandrun::util::bench::{gate_enabled, write_json_artifact};
 use islandrun::util::{stats, Rng, Table};
 
 fn total_requests() -> usize {
     std::env::var("ISLANDRUN_BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4000)
 }
 
-fn orchestrator(seed: u64) -> Arc<Orchestrator> {
+fn orchestrator(seed: u64, mode: BatchMode) -> Arc<Orchestrator> {
     let mut cfg = Config::default();
     // the bench measures lifecycle latency, not admission policy
     cfg.rate_limit_rps = 1e9;
@@ -39,96 +45,172 @@ fn orchestrator(seed: u64) -> Arc<Orchestrator> {
     let orch = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), seed));
     // zero batch linger: measure queue + pipeline overhead, not the
     // deliberate latency-for-occupancy wait of the default policy
-    orch.set_batch_policy(BatchPolicy { max_batch: 8, max_wait: std::time::Duration::ZERO });
+    let policy = BatchPolicy { max_batch: 8, max_wait: std::time::Duration::ZERO, mode, ..BatchPolicy::default() };
+    orch.set_batch_policy(policy);
     orch
+}
+
+fn mode_name(mode: BatchMode) -> &'static str {
+    match mode {
+        BatchMode::Coalesce => "coalesce",
+        BatchMode::Continuous => "continuous",
+    }
+}
+
+struct Row {
+    mode: BatchMode,
+    producers: usize,
+    rate: f64,
+    ttft_p99: f64,
 }
 
 fn main() {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let total = total_requests();
-    println!("queue_latency — enqueue→resolve via the admission queue (Sim), {cores} cores, {total} requests\n");
+    println!("queue_latency — enqueue→first-token→resolve via the admission queue (Sim)");
+    println!("{cores} cores, {total} requests\n");
 
     let mut t = Table::new(
-        "queue_latency — enqueue→resolve wall time vs producer count (4 workers)",
-        &["producers", "req/s", "p50 ms", "p99 ms", "served", "rejected", "errors"],
+        "queue_latency — wall time vs producer count and batch mode (4 workers)",
+        &["mode", "producers", "req/s", "p50 ms", "p99 ms", "ttft p50", "ttft p99", "occupancy", "served", "rejected"],
     );
     let mut json_rows = Vec::new();
-    for &producers in &[1usize, 4, 16] {
-        let orch = orchestrator(900 + producers as u64);
-        Arc::clone(&orch).start_queue();
-        let per = (total / producers).max(1);
-        let t0 = std::time::Instant::now();
-        let handles: Vec<_> = (0..producers)
-            .map(|p| {
-                let orch = Arc::clone(&orch);
-                std::thread::spawn(move || {
-                    let session = orch.open_session(&format!("qbench-{p}"));
-                    let mut rng = Rng::new(41 ^ (p as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-                    let mut samples = Vec::with_capacity(per);
-                    let mut served = 0usize;
-                    let mut rejected = 0usize;
-                    let mut errors = 0usize;
-                    for i in 0..per {
-                        let class = class_for(i);
-                        let submit = SubmitRequest::new(prompt_for(class, &mut rng))
-                            .priority(priority_for(class))
-                            .deadline_ms(1e12);
-                        let start = std::time::Instant::now();
-                        let ticket = orch.enqueue(session, submit);
-                        match ticket.wait() {
-                            Ok(out) => {
-                                samples.push(start.elapsed().as_secs_f64() * 1e3);
-                                if out.decision.target().is_some() {
-                                    served += 1;
-                                } else {
-                                    rejected += 1;
+    let mut gate_rows: Vec<Row> = Vec::new();
+    for &mode in &[BatchMode::Coalesce, BatchMode::Continuous] {
+        for &producers in &[1usize, 4, 16] {
+            let orch = orchestrator(900 + producers as u64, mode);
+            Arc::clone(&orch).start_queue();
+            let per = (total / producers).max(1);
+            let t0 = std::time::Instant::now();
+            let handles: Vec<_> = (0..producers)
+                .map(|p| {
+                    let orch = Arc::clone(&orch);
+                    std::thread::spawn(move || {
+                        let session = orch.open_session(&format!("qbench-{p}"));
+                        let mut rng = Rng::new(41 ^ (p as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                        let mut samples = Vec::with_capacity(per);
+                        let mut ttfts = Vec::with_capacity(per);
+                        let mut served = 0usize;
+                        let mut rejected = 0usize;
+                        let mut errors = 0usize;
+                        for i in 0..per {
+                            let class = class_for(i);
+                            let submit = SubmitRequest::new(prompt_for(class, &mut rng))
+                                .priority(priority_for(class))
+                                .deadline_ms(1e12);
+                            let start = std::time::Instant::now();
+                            let ticket = orch.enqueue(session, submit);
+                            // TTFT: block for the first stream event only.
+                            // Continuous pushes it at the first decode chunk;
+                            // coalesce resolves in one shot, so its first
+                            // event IS the terminal.
+                            let first = ticket.stream().next();
+                            let ttft = start.elapsed().as_secs_f64() * 1e3;
+                            debug_assert!(first.is_some(), "a stream always yields at least the terminal");
+                            match ticket.wait() {
+                                Ok(out) => {
+                                    samples.push(start.elapsed().as_secs_f64() * 1e3);
+                                    ttfts.push(ttft);
+                                    if out.decision.target().is_some() {
+                                        served += 1;
+                                    } else {
+                                        rejected += 1;
+                                    }
                                 }
+                                Err(_) => errors += 1,
                             }
-                            Err(_) => errors += 1,
+                            orch.advance(5.0);
                         }
-                        orch.advance(5.0);
-                    }
-                    (samples, served, rejected, errors)
+                        (samples, ttfts, served, rejected, errors)
+                    })
                 })
-            })
-            .collect();
-        let mut samples = Vec::with_capacity(producers * per);
-        let (mut served, mut rejected, mut errors) = (0usize, 0usize, 0usize);
-        for h in handles {
-            let (s, sv, rj, er) = h.join().unwrap();
-            samples.extend(s);
-            served += sv;
-            rejected += rj;
-            errors += er;
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let attempted = producers * per;
-        assert_eq!(served + rejected + errors, attempted, "lost tickets");
-        assert_eq!(errors, 0, "no ticket may resolve with an error");
-        assert_eq!(orch.audit.len(), attempted, "audit trail must cover every enqueued request");
-        assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+                .collect();
+            let mut samples = Vec::with_capacity(producers * per);
+            let mut ttfts = Vec::with_capacity(producers * per);
+            let (mut served, mut rejected, mut errors) = (0usize, 0usize, 0usize);
+            for h in handles {
+                let (s, tt, sv, rj, er) = h.join().unwrap();
+                samples.extend(s);
+                ttfts.extend(tt);
+                served += sv;
+                rejected += rj;
+                errors += er;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let attempted = producers * per;
+            assert_eq!(served + rejected + errors, attempted, "lost tickets");
+            assert_eq!(errors, 0, "no ticket may resolve with an error");
+            assert_eq!(orch.audit.len(), attempted, "audit trail must cover every enqueued request");
+            assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
 
-        let rate = attempted as f64 / wall.max(1e-9);
-        let p50 = stats::percentile(&samples, 0.5);
-        let p99 = stats::percentile(&samples, 0.99);
-        t.row(&[
-            producers.to_string(),
-            format!("{rate:.0}"),
-            format!("{p50:.2}"),
-            format!("{p99:.2}"),
-            served.to_string(),
-            rejected.to_string(),
-            errors.to_string(),
-        ]);
-        json_rows.push(vec![
-            ("producers".to_string(), producers as f64),
-            ("req_per_s".to_string(), rate),
-            ("p50_ms".to_string(), p50),
-            ("p99_ms".to_string(), p99),
-            ("served".to_string(), served as f64),
-            ("rejected".to_string(), rejected as f64),
-        ]);
+            let rate = attempted as f64 / wall.max(1e-9);
+            let p50 = stats::percentile(&samples, 0.5);
+            let p99 = stats::percentile(&samples, 0.99);
+            let ttft_p50 = stats::percentile(&ttfts, 0.5);
+            let ttft_p99 = stats::percentile(&ttfts, 0.99);
+            // mean in-flight requests per step-loop round (0 when the mode
+            // never ran a step loop, i.e. coalesce)
+            let occupancy = orch.metrics.histogram("batch_occupancy").map(|h| h.mean()).unwrap_or(0.0);
+            t.row(&[
+                mode_name(mode).to_string(),
+                producers.to_string(),
+                format!("{rate:.0}"),
+                format!("{p50:.2}"),
+                format!("{p99:.2}"),
+                format!("{ttft_p50:.2}"),
+                format!("{ttft_p99:.2}"),
+                format!("{occupancy:.2}"),
+                served.to_string(),
+                rejected.to_string(),
+            ]);
+            json_rows.push(vec![
+                ("mode".to_string(), if mode == BatchMode::Continuous { 1.0 } else { 0.0 }),
+                ("producers".to_string(), producers as f64),
+                ("req_per_s".to_string(), rate),
+                ("p50_ms".to_string(), p50),
+                ("p99_ms".to_string(), p99),
+                ("ttft_p50_ms".to_string(), ttft_p50),
+                ("ttft_p99_ms".to_string(), ttft_p99),
+                ("steady_state_batch_occupancy".to_string(), occupancy),
+                ("served".to_string(), served as f64),
+                ("rejected".to_string(), rejected as f64),
+            ]);
+            gate_rows.push(Row { mode, producers, rate, ttft_p99 });
+        }
     }
     t.print();
     write_json_artifact("queue", &json_rows);
+
+    // The tentpole claim, gated: at 16 producers, continuous batching must
+    // beat run-to-completion coalescing on BOTH throughput and p99 TTFT.
+    // `ISLANDRUN_BENCH_GATE=off` skips the assertion (smoke runs on shared
+    // runners), but the fields always land in the JSON artifact above.
+    let find = |mode: BatchMode| {
+        gate_rows
+            .iter()
+            .find(|r| r.mode == mode && r.producers == 16)
+            .expect("both modes run the 16-producer point")
+    };
+    let coalesce = find(BatchMode::Coalesce);
+    let continuous = find(BatchMode::Continuous);
+    println!(
+        "\n16 producers: continuous {:.0} req/s / ttft p99 {:.2} ms vs coalesce {:.0} req/s / ttft p99 {:.2} ms",
+        continuous.rate, continuous.ttft_p99, coalesce.rate, coalesce.ttft_p99
+    );
+    if gate_enabled() {
+        assert!(
+            continuous.rate > coalesce.rate,
+            "continuous batching must out-serve coalescing at 16 producers: {:.0} <= {:.0} req/s",
+            continuous.rate,
+            coalesce.rate
+        );
+        assert!(
+            continuous.ttft_p99 < coalesce.ttft_p99,
+            "continuous batching must cut p99 TTFT at 16 producers: {:.2} >= {:.2} ms",
+            continuous.ttft_p99,
+            coalesce.ttft_p99
+        );
+    } else {
+        println!("bench gate disabled (ISLANDRUN_BENCH_GATE=off): comparison not enforced");
+    }
 }

@@ -15,4 +15,4 @@ pub mod executor;
 pub mod sim;
 
 pub use cost::CostLedger;
-pub use sim::{ExecError, ExecReport, Fleet, SimIsland};
+pub use sim::{DecodeHandle, ExecContext, ExecError, ExecReport, Fleet, SimIsland};

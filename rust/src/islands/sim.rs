@@ -65,6 +65,86 @@ impl std::fmt::Display for ExecError {
 
 impl std::error::Error for ExecError {}
 
+/// Typed execution context: everything the fleet samples on a request's
+/// behalf before an island runs it. Replaces the old grab-bag of floats
+/// (`now_ms`, `rtt`, `payload_kb`) so the one-shot [`SimIsland::execute`]
+/// and the [`SimIsland::prefill`] / [`SimIsland::decode_step`] pair share
+/// one signature.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecContext {
+    /// Virtual arrival time (ms).
+    pub now_ms: f64,
+    /// Pre-sampled network round trip for this request's payload (ms).
+    pub rtt_ms: f64,
+    /// Bytes moved over the network (KB) — E11 accounting.
+    pub payload_kb: f64,
+}
+
+/// An in-flight decode: returned by [`SimIsland::prefill`], advanced by
+/// [`SimIsland::decode_step`]. The handle owns the request's position in
+/// virtual time (`cursor_ms`) and its running cost; the island's slot is
+/// only ever booked through the last *completed* step, so dropping a handle
+/// mid-decode frees the slot immediately — nothing to un-book.
+#[derive(Clone, Debug)]
+pub struct DecodeHandle {
+    island: IslandId,
+    /// Booked slot index on bounded islands (`None` = unbounded).
+    slot: Option<usize>,
+    /// Virtual time through which this request has computed.
+    cursor_ms: f64,
+    arrival_ms: f64,
+    queued_ms: f64,
+    rtt_ms: f64,
+    payload_kb: f64,
+    /// Per-token decode cost in ms, slowdown-adjusted at prefill time.
+    per_token_ms: f64,
+    prefill_tokens: usize,
+    max_new_tokens: usize,
+    tokens_decoded: usize,
+    /// Running cost: prefill + tokens decoded so far.
+    cost: f64,
+}
+
+impl DecodeHandle {
+    pub fn island(&self) -> IslandId {
+        self.island
+    }
+
+    pub fn tokens_decoded(&self) -> usize {
+        self.tokens_decoded
+    }
+
+    /// Has the full `max_new_tokens` budget been decoded?
+    pub fn is_complete(&self) -> bool {
+        self.tokens_decoded >= self.max_new_tokens
+    }
+
+    /// Virtual time through which this request has computed (prefill end +
+    /// completed decode steps). The caller's deadline checks compare this
+    /// against the request's absolute deadline.
+    pub fn cursor_ms(&self) -> f64 {
+        self.cursor_ms
+    }
+
+    pub fn cost(&self) -> f64 {
+        self.cost
+    }
+
+    /// Report for the work done so far (complete or cancelled): latency
+    /// covers network + queue + prefill + completed decode steps, cost
+    /// covers only tokens actually decoded.
+    pub fn report(&self) -> ExecReport {
+        ExecReport {
+            island: self.island,
+            arrival_ms: self.arrival_ms,
+            latency_ms: self.cursor_ms + self.rtt_ms / 2.0 - self.arrival_ms,
+            queued_ms: self.queued_ms,
+            cost: self.cost,
+            payload_kb: self.payload_kb,
+        }
+    }
+}
+
 /// Outcome of one simulated execution.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ExecReport {
@@ -162,12 +242,12 @@ impl SimIsland {
         self.rt.lock().unwrap().executed
     }
 
-    /// Execute a request arriving at `now_ms` with a pre-sampled network
-    /// round trip; returns the report. The caller has already decided this
+    /// Run the prefill phase: book the earliest free slot, charge compute
+    /// for the prompt + history tokens, and return a [`DecodeHandle`]
+    /// positioned at the prefill's end. The caller has already decided this
     /// island is the target (router) and sampled the link
-    /// ([`Fleet::execute`] does both).
-    pub fn execute(&self, request: &Request, now_ms: f64, rtt: f64, payload_kb: f64) -> Result<ExecReport, ExecError> {
-        let tokens = request.token_estimate();
+    /// ([`Fleet::prefill`] does both).
+    pub fn prefill(&self, request: &Request, ctx: ExecContext) -> Result<DecodeHandle, ExecError> {
         let mut rt = self.rt.lock().unwrap();
         // checked under the rt lock so a crash() racing this call is seen
         // before any slot is booked
@@ -175,12 +255,14 @@ impl SimIsland {
             return Err(ExecError::IslandDown(self.spec.id));
         }
         let (startup, per_token) = compute_model(self.spec.tier);
-        // external load slows compute proportionally
+        // external load slows compute proportionally; frozen at prefill
+        // time so every decode step of this request prices consistently
         let slow = 1.0 / (1.0 - rt.external_load.min(0.9));
-        let compute = (startup + per_token * tokens as f64) * slow;
+        let prefill_tokens = request.prefill_token_estimate();
+        let prefill_ms = (startup + per_token * prefill_tokens as f64) * slow;
 
-        let (queued, start) = if self.spec.unbounded() {
-            (0.0, now_ms + rtt / 2.0)
+        let (slot, queued, start) = if self.spec.unbounded() {
+            (None, 0.0, ctx.now_ms + ctx.rtt_ms / 2.0)
         } else {
             // earliest-free-slot queueing
             let (slot_idx, &free_at) = rt
@@ -189,27 +271,79 @@ impl SimIsland {
                 .enumerate()
                 .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .expect("bounded island has slots");
-            let start = (now_ms + rtt / 2.0).max(free_at);
-            let queued = (free_at - (now_ms + rtt / 2.0)).max(0.0);
-            rt.busy_until[slot_idx] = start + compute;
-            (queued, start)
+            let start = (ctx.now_ms + ctx.rtt_ms / 2.0).max(free_at);
+            let queued = (free_at - (ctx.now_ms + ctx.rtt_ms / 2.0)).max(0.0);
+            rt.busy_until[slot_idx] = start + prefill_ms;
+            (Some(slot_idx), queued, start)
         };
-        let finish = start + compute + rtt / 2.0;
 
         // battery drain: proportional to compute on battery islands
         if let Some(b) = rt.battery.as_mut() {
-            *b = (*b - compute / 2_000_000.0).max(0.0);
+            *b = (*b - prefill_ms / 2_000_000.0).max(0.0);
         }
         rt.executed += 1;
 
-        Ok(ExecReport {
+        Ok(DecodeHandle {
             island: self.spec.id,
-            arrival_ms: now_ms,
-            latency_ms: finish - now_ms,
+            slot,
+            cursor_ms: start + prefill_ms,
+            arrival_ms: ctx.now_ms,
             queued_ms: queued,
-            cost: self.spec.request_cost(tokens),
-            payload_kb,
+            rtt_ms: ctx.rtt_ms,
+            payload_kb: ctx.payload_kb,
+            per_token_ms: per_token * slow,
+            prefill_tokens,
+            max_new_tokens: request.max_new_tokens,
+            tokens_decoded: 0,
+            cost: self.spec.request_cost(prefill_tokens),
         })
+    }
+
+    /// Decode up to `max_tokens` further tokens (capped by the handle's
+    /// remaining budget), extending the slot booking by exactly the step's
+    /// compute. Returns the number of tokens decoded this step (0 when the
+    /// budget is exhausted). Between steps the slot is only booked through
+    /// completed work, so a caller that stops stepping frees the island
+    /// immediately — that is the cancel path.
+    pub fn decode_step(&self, h: &mut DecodeHandle, max_tokens: usize) -> Result<usize, ExecError> {
+        let n = max_tokens.min(h.max_new_tokens.saturating_sub(h.tokens_decoded));
+        if n == 0 {
+            return Ok(0);
+        }
+        let mut rt = self.rt.lock().unwrap();
+        if !self.is_online() {
+            return Err(ExecError::IslandDown(self.spec.id));
+        }
+        let step_ms = h.per_token_ms * n as f64;
+        // a co-resident request may have booked our slot past our cursor
+        // since the last step: decode resumes at whichever is later, so
+        // slot bookings stay monotone and requests time-share the slot
+        let start = match h.slot {
+            Some(s) => h.cursor_ms.max(rt.busy_until.get(s).copied().unwrap_or(h.cursor_ms)),
+            None => h.cursor_ms,
+        };
+        if let Some(s) = h.slot {
+            if let Some(b) = rt.busy_until.get_mut(s) {
+                *b = start + step_ms;
+            }
+        }
+        h.cursor_ms = start + step_ms;
+        h.tokens_decoded += n;
+        h.cost = self.spec.request_cost(h.prefill_tokens + h.tokens_decoded);
+        if let Some(b) = rt.battery.as_mut() {
+            *b = (*b - step_ms / 2_000_000.0).max(0.0);
+        }
+        Ok(n)
+    }
+
+    /// Legacy one-shot execution: prefill plus the full decode budget in a
+    /// single call. Mathematically identical to the pre-split path (same
+    /// total compute, slot booking, battery drain and cost); the blocking
+    /// submit path and the coalescing batcher still use it.
+    pub fn execute(&self, request: &Request, ctx: ExecContext) -> Result<ExecReport, ExecError> {
+        let mut handle = self.prefill(request, ctx)?;
+        self.decode_step(&mut handle, request.max_new_tokens)?;
+        Ok(handle.report())
     }
 }
 
@@ -356,23 +490,55 @@ impl Fleet {
         }
     }
 
-    /// Execute on a chosen island at the current virtual time. Only the RTT
-    /// sample holds the shared NetSim lock; slot booking and accounting run
-    /// under the target island's own mutex, so executions on different
-    /// islands overlap. Fails island-down when the target crashed between
-    /// routing and execution (the orchestrator's failover path re-routes).
-    pub fn execute(&self, id: IslandId, request: &Request) -> Result<ExecReport, ExecError> {
-        let now = self.now();
+    /// Build the typed [`ExecContext`] for a request on `island`: current
+    /// virtual time plus one RTT sample for the request's payload. Only the
+    /// sample holds the shared NetSim lock.
+    fn exec_context(&self, island: &SimIsland, request: &Request) -> ExecContext {
+        let now_ms = self.now();
+        let payload_kb = payload_kb(request);
+        let rtt_ms = {
+            let mut net = self.net.lock().unwrap();
+            net.round_trip_retry(island.spec.link, payload_kb.max(0.5), 3).unwrap_or(5_000.0)
+        };
+        ExecContext { now_ms, rtt_ms, payload_kb }
+    }
+
+    /// Resolve an island for execution: present and online, or the error
+    /// the orchestrator's failover path expects.
+    fn live_island(&self, id: IslandId) -> Result<Arc<SimIsland>, ExecError> {
         let island = self.get(id).ok_or(ExecError::UnknownIsland(id))?;
         if !island.is_online() {
             return Err(ExecError::IslandDown(id));
         }
-        let payload_kb = payload_kb(request);
-        let rtt = {
-            let mut net = self.net.lock().unwrap();
-            net.round_trip_retry(island.spec.link, payload_kb.max(0.5), 3).unwrap_or(5_000.0)
-        };
-        island.execute(request, now, rtt, payload_kb)
+        Ok(island)
+    }
+
+    /// Execute on a chosen island at the current virtual time. Slot booking
+    /// and accounting run under the target island's own mutex, so
+    /// executions on different islands overlap. Fails island-down when the
+    /// target crashed between routing and execution (the orchestrator's
+    /// failover path re-routes).
+    pub fn execute(&self, id: IslandId, request: &Request) -> Result<ExecReport, ExecError> {
+        let island = self.live_island(id)?;
+        let ctx = self.exec_context(&island, request);
+        island.execute(request, ctx)
+    }
+
+    /// Start a request on a chosen island: prefill only, returning the
+    /// [`DecodeHandle`] the per-island step loop advances between batch
+    /// admissions.
+    pub fn prefill(&self, id: IslandId, request: &Request) -> Result<DecodeHandle, ExecError> {
+        let island = self.live_island(id)?;
+        let ctx = self.exec_context(&island, request);
+        island.prefill(request, ctx)
+    }
+
+    /// Advance an in-flight decode by up to `max_tokens` tokens. Fails
+    /// island-down / unknown-island when the island crashed or left the
+    /// fleet mid-decode (the step loop falls back to a re-routed one-shot).
+    pub fn decode_step(&self, h: &mut DecodeHandle, max_tokens: usize) -> Result<usize, ExecError> {
+        let island = self.live_island(h.island())?;
+        island.decode_step(h, max_tokens)
     }
 }
 
@@ -505,6 +671,73 @@ mod tests {
         let total: u64 = f.islands().iter().map(|i| i.executed()).sum();
         assert_eq!(total, 400);
         assert!((f.now() - 40_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prefill_plus_steps_matches_one_shot_execute() {
+        // same seed → same RTT sample sequence: stepping the decode in
+        // chunks must land on exactly the report the one-shot path produces
+        let a = fleet();
+        let b = fleet();
+        let r = Request::new(1, &"x".repeat(200)).with_max_new_tokens(16);
+        for id in [0u32, 1, 5] {
+            let one_shot = a.execute(IslandId(id), &r).unwrap();
+            let mut h = b.prefill(IslandId(id), &r).unwrap();
+            assert_eq!(h.tokens_decoded(), 0);
+            assert!(!h.is_complete());
+            let mut steps = 0;
+            while !h.is_complete() {
+                let n = b.decode_step(&mut h, 4).unwrap();
+                assert!(n > 0 && n <= 4);
+                steps += 1;
+            }
+            assert_eq!(steps, 4, "16 tokens in chunks of 4");
+            assert_eq!(b.decode_step(&mut h, 4).unwrap(), 0, "budget exhausted");
+            let rep = h.report();
+            assert_eq!(rep.island, one_shot.island);
+            assert_eq!(rep.cost, one_shot.cost, "island {id}: stepped cost must match one-shot");
+            assert_eq!(rep.queued_ms, one_shot.queued_ms);
+            assert_eq!(rep.payload_kb, one_shot.payload_kb);
+            // chunked f64 accumulation may differ from the one-shot by ulps
+            assert!((rep.latency_ms - one_shot.latency_ms).abs() < 1e-6, "island {id}: {rep:?} vs {one_shot:?}");
+        }
+    }
+
+    #[test]
+    fn abandoned_decode_frees_the_slot_immediately() {
+        // mobile has 1 slot: a 512-token decode abandoned after 2 steps
+        // must leave the slot booked only through the completed work
+        let f = fleet();
+        let r = Request::new(1, "prompt").with_max_new_tokens(512);
+        let mut h = f.prefill(IslandId(1), &r).unwrap();
+        f.decode_step(&mut h, 4).unwrap();
+        f.decode_step(&mut h, 4).unwrap();
+        assert_eq!(h.tokens_decoded(), 8);
+        let partial_cost = h.cost();
+        // cost so far covers prefill + 8 tokens, strictly below the full run
+        let full = Fleet::new(preset_personal_group(), 7).execute(IslandId(1), &r).unwrap();
+        assert!(partial_cost <= full.cost);
+        // drop the handle: just past the cursor the slot is free again,
+        // ~2000 ms (504 tokens x 4 ms) before a full decode would end
+        let freed_at = h.cursor_ms();
+        drop(h);
+        assert_eq!(f.get(IslandId(1)).unwrap().capacity(freed_at + 1.0), 1.0);
+        assert!(f.prefill(IslandId(1), &r).is_ok(), "slot is reusable");
+    }
+
+    #[test]
+    fn decode_step_fails_island_down_when_crashed_mid_decode() {
+        let f = fleet();
+        let r = Request::new(1, "prompt").with_max_new_tokens(32);
+        let mut h = f.prefill(IslandId(0), &r).unwrap();
+        assert!(f.decode_step(&mut h, 4).is_ok());
+        f.crash(IslandId(0));
+        assert_eq!(f.decode_step(&mut h, 4), Err(ExecError::IslandDown(IslandId(0))));
+        f.revive(IslandId(0));
+        assert!(f.decode_step(&mut h, 4).is_ok(), "decode resumes after revive");
+        // an island that left the fleet surfaces as unknown
+        f.leave(IslandId(0));
+        assert_eq!(f.decode_step(&mut h, 4), Err(ExecError::UnknownIsland(IslandId(0))));
     }
 
     #[test]

@@ -15,18 +15,37 @@ pub struct Pending<T> {
     pub enqueued: Instant,
 }
 
+/// How a formed batch executes on the island.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Run-to-completion: each popped chunk executes whole requests in one
+    /// shot (the pre-continuous behavior; still what the Real backend's
+    /// `execute_batch` does).
+    Coalesce,
+    /// Decode-step granularity: the per-island step loop interleaves
+    /// `decode_step` calls across the in-flight batch and admits newly
+    /// routed requests between steps (sim backend).
+    Continuous,
+}
+
 /// Batching policy configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
-    /// Compiled batch-size variants, ascending (from meta.json).
+    /// Compiled batch-size variants, ascending (from meta.json). On the
+    /// continuous path this caps the in-flight decode batch per island.
     pub max_batch: usize,
     /// Max time the oldest item may wait before a forced flush.
     pub max_wait: Duration,
+    /// Continuous mode: tokens decoded per request per step-loop round
+    /// before the loop re-checks admissions, deadlines and cancels.
+    pub decode_chunk: usize,
+    /// Execution mode for formed batches.
+    pub mode: BatchMode,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5), decode_chunk: 4, mode: BatchMode::Continuous }
     }
 }
 
@@ -105,7 +124,8 @@ mod tests {
 
     #[test]
     fn flushes_when_full() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10), ..BatchPolicy::default() };
+        let mut b = Batcher::new(policy);
         for i in 0..3 {
             b.push(i);
         }
@@ -118,7 +138,8 @@ mod tests {
 
     #[test]
     fn flushes_on_timeout() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) });
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), ..BatchPolicy::default() };
+        let mut b = Batcher::new(policy);
         b.push("x");
         assert!(!b.ready(Instant::now()));
         std::thread::sleep(Duration::from_millis(3));
@@ -128,7 +149,8 @@ mod tests {
 
     #[test]
     fn take_batch_caps_at_max() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) });
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), ..BatchPolicy::default() };
+        let mut b = Batcher::new(policy);
         for i in 0..5 {
             b.push(i);
         }
@@ -145,7 +167,8 @@ mod tests {
 
     #[test]
     fn fifo_order_preserved() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(0) });
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(0), ..BatchPolicy::default() };
+        let mut b = Batcher::new(policy);
         for i in 0..3 {
             b.push(i);
         }
@@ -154,13 +177,14 @@ mod tests {
 
     #[test]
     fn chunk_by_policy_splits_fifo_groups() {
-        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1) };
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1), ..BatchPolicy::default() };
         let chunks = chunk_by_policy((0..7).collect(), policy);
         assert_eq!(chunks, vec![vec![0, 1, 2], vec![3, 4, 5], vec![6]]);
         let empty: Vec<Vec<u32>> = chunk_by_policy(Vec::new(), policy);
         assert!(empty.is_empty());
         // degenerate max_batch=0 is clamped to 1 rather than looping forever
-        let ones = chunk_by_policy(vec![1, 2], BatchPolicy { max_batch: 0, max_wait: Duration::from_millis(1) });
+        let degenerate = BatchPolicy { max_batch: 0, max_wait: Duration::from_millis(1), ..BatchPolicy::default() };
+        let ones = chunk_by_policy(vec![1, 2], degenerate);
         assert_eq!(ones, vec![vec![1], vec![2]]);
     }
 }

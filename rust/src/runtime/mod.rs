@@ -5,6 +5,8 @@
 //! - [`features`] — hashed n-gram featurizer (mirrors the python trainer)
 //! - [`meta`]     — artifacts/meta.json contract
 //! - [`batcher`]  — dynamic batching policy for generation requests
+//! - [`steploop`] — per-island lanes feeding the continuous (decode-step)
+//!   batching driver on the serving path
 //!
 //! Python never runs here: artifacts are HLO text produced once by
 //! `python/compile/aot.py` (see DESIGN.md §1).
@@ -13,7 +15,9 @@ pub mod batcher;
 pub mod features;
 pub mod meta;
 pub mod pjrt;
+pub mod steploop;
 
-pub use batcher::{chunk_by_policy, BatchPolicy, Batcher};
+pub use batcher::{chunk_by_policy, BatchMode, BatchPolicy, Batcher};
+pub use steploop::StepLanes;
 pub use meta::Meta;
 pub use pjrt::{Engine, EngineHandle, GenResult};

@@ -1,0 +1,209 @@
+//! Per-island step-loop lanes: the hand-off structure between the queue
+//! drain (which routes requests) and the continuous-batching driver (which
+//! interleaves decode steps on one island).
+//!
+//! Each island gets a lane holding an inbox of routed-but-not-yet-started
+//! jobs plus a `driver_active` flag. A drain thread `admit`s jobs and then
+//! `try_drive`s the lane: exactly one thread at a time becomes the island's
+//! driver and runs the step loop, pulling admitted jobs into the in-flight
+//! batch *between decode steps* via `take`. Other drains just drop their
+//! jobs in the inbox and move on — newly routed requests join an island's
+//! running batch without waiting for it to finish.
+//!
+//! Exit is race-free: `try_exit` only releases the driver role while the
+//! inbox is empty, atomically under the lane lock, so a job admitted
+//! concurrently with a driver winding down is either taken by that driver
+//! or finds `try_drive` returning true for its own drain — never stranded.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug)]
+struct LaneInner<J> {
+    inbox: Vec<J>,
+    driver_active: bool,
+}
+
+#[derive(Debug)]
+struct Lane<J> {
+    inner: Mutex<LaneInner<J>>,
+}
+
+impl<J> Default for Lane<J> {
+    fn default() -> Self {
+        Lane { inner: Mutex::new(LaneInner { inbox: Vec::new(), driver_active: false }) }
+    }
+}
+
+/// Keyed set of step-loop lanes (key = island id on the serving path).
+#[derive(Debug)]
+pub struct StepLanes<K: Ord + Copy, J> {
+    lanes: Mutex<BTreeMap<K, Arc<Lane<J>>>>,
+}
+
+impl<K: Ord + Copy, J> Default for StepLanes<K, J> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Ord + Copy, J> StepLanes<K, J> {
+    pub fn new() -> Self {
+        StepLanes { lanes: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn lane(&self, key: K) -> Arc<Lane<J>> {
+        let mut lanes = self.lanes.lock().unwrap();
+        Arc::clone(lanes.entry(key).or_default())
+    }
+
+    /// Drop jobs into the lane's inbox. A running driver picks them up at
+    /// its next step boundary; otherwise the admitting thread should call
+    /// [`try_drive`](Self::try_drive) to become the driver itself.
+    pub fn admit(&self, key: K, jobs: Vec<J>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let lane = self.lane(key);
+        lane.inner.lock().unwrap().inbox.extend(jobs);
+    }
+
+    /// Claim the driver role for the lane. Returns `true` when this caller
+    /// became the driver (and must run the step loop until
+    /// [`try_exit`](Self::try_exit) succeeds), `false` when a driver is
+    /// already active.
+    pub fn try_drive(&self, key: K) -> bool {
+        let lane = self.lane(key);
+        let mut inner = lane.inner.lock().unwrap();
+        if inner.driver_active {
+            return false;
+        }
+        inner.driver_active = true;
+        true
+    }
+
+    /// Pull up to `max` admitted jobs into the driver's in-flight batch
+    /// (FIFO admission order).
+    pub fn take(&self, key: K, max: usize) -> Vec<J> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let lane = self.lane(key);
+        let mut inner = lane.inner.lock().unwrap();
+        let n = inner.inbox.len().min(max);
+        inner.inbox.drain(..n).collect()
+    }
+
+    /// Release the driver role — but only if the inbox is still empty
+    /// (checked atomically under the lane lock). Returns `true` when the
+    /// driver exited; `false` means jobs arrived since the last `take` and
+    /// the caller must keep driving.
+    pub fn try_exit(&self, key: K) -> bool {
+        let lane = self.lane(key);
+        let mut inner = lane.inner.lock().unwrap();
+        if !inner.inbox.is_empty() {
+            return false;
+        }
+        inner.driver_active = false;
+        true
+    }
+
+    /// Panic recovery: drain every pending job and clear the driver flag so
+    /// the lane is usable again. The caller fails the returned jobs' tickets.
+    pub fn fail_pending(&self, key: K) -> Vec<J> {
+        let lane = self.lane(key);
+        let mut inner = lane.inner.lock().unwrap();
+        inner.driver_active = false;
+        std::mem::take(&mut inner.inbox)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_driver_per_lane() {
+        let lanes: StepLanes<u32, i32> = StepLanes::new();
+        assert!(lanes.try_drive(1));
+        assert!(!lanes.try_drive(1), "second driver must be refused");
+        assert!(lanes.try_drive(2), "other lanes are independent");
+        assert!(lanes.try_exit(1));
+        assert!(lanes.try_drive(1), "exited lane accepts a new driver");
+    }
+
+    #[test]
+    fn admit_take_is_fifo_and_capped() {
+        let lanes: StepLanes<u32, i32> = StepLanes::new();
+        lanes.admit(7, vec![1, 2, 3]);
+        lanes.admit(7, vec![4]);
+        assert_eq!(lanes.take(7, 2), vec![1, 2]);
+        assert_eq!(lanes.take(7, 0), Vec::<i32>::new());
+        assert_eq!(lanes.take(7, 10), vec![3, 4]);
+        assert!(lanes.take(7, 10).is_empty());
+    }
+
+    #[test]
+    fn exit_refused_while_inbox_nonempty() {
+        let lanes: StepLanes<u32, i32> = StepLanes::new();
+        assert!(lanes.try_drive(3));
+        lanes.admit(3, vec![9]);
+        assert!(!lanes.try_exit(3), "driver must keep driving while jobs are pending");
+        assert_eq!(lanes.take(3, 8), vec![9]);
+        assert!(lanes.try_exit(3));
+    }
+
+    #[test]
+    fn fail_pending_drains_and_frees_the_lane() {
+        let lanes: StepLanes<u32, i32> = StepLanes::new();
+        assert!(lanes.try_drive(5));
+        lanes.admit(5, vec![1, 2]);
+        assert_eq!(lanes.fail_pending(5), vec![1, 2]);
+        assert!(lanes.try_drive(5), "lane usable after recovery");
+    }
+
+    #[test]
+    fn concurrent_admit_and_drive_loses_no_job() {
+        let lanes: Arc<StepLanes<u32, usize>> = Arc::new(StepLanes::new());
+        let total = 400;
+        let producers: Vec<_> = (0..4)
+            .map(|t| {
+                let lanes = Arc::clone(&lanes);
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        lanes.admit(0, vec![t * 100 + i]);
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let lanes = Arc::clone(&lanes);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while seen.len() < total {
+                    if lanes.try_drive(0) {
+                        loop {
+                            let got = lanes.take(0, 8);
+                            if got.is_empty() {
+                                if lanes.try_exit(0) {
+                                    break;
+                                }
+                                continue;
+                            }
+                            seen.extend(got);
+                        }
+                    }
+                    std::thread::yield_now();
+                }
+                seen
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), total);
+    }
+}

@@ -131,6 +131,21 @@ impl AuditLog {
             .collect()
     }
 
+    /// Entries for cancelled requests (caller cancel or a deadline expiring
+    /// mid-decode). Scoped by the `cancelled:` reason prefix so they stay
+    /// out of [`sheds`](Self::sheds): a cancelled request may have executed
+    /// partially on an island and been charged for decoded tokens, while a
+    /// shed never ran at all.
+    pub fn cancellations(&self) -> Vec<AuditEntry> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| e.reject_reason.as_deref().map(|r| r.starts_with("cancelled:")).unwrap_or(false))
+            .cloned()
+            .collect()
+    }
+
     /// Export as a JSON array (regulator-facing artifact).
     pub fn to_json(&self) -> Json {
         Json::Arr(
@@ -220,6 +235,20 @@ mod tests {
         assert!(sheds.iter().all(|e| e.island.is_none() && e.s_r == 0.0 && e.failovers == 0));
         // sheds never count as privacy violations (no island executed them)
         assert!(log.violations(0.0, 1.0).iter().all(|id| *id != 2 && *id != 4));
+    }
+
+    #[test]
+    fn cancellations_are_scoped_by_prefix_and_disjoint_from_sheds() {
+        let log = AuditLog::new();
+        log.record(entry(1, 0.5, Some((0, 1.0))));
+        log.record(AuditEntry::shed(2, "alice", 10.0, "shed: admission queue full (8 queued, fail-closed)"));
+        let mut cancelled = entry(3, 0.4, Some((1, 1.0)));
+        cancelled.reject_reason = Some("cancelled: deadline expired mid-decode after 24/512 tokens".into());
+        log.record(cancelled);
+        assert_eq!(log.cancellations().iter().map(|e| e.request_id).collect::<Vec<_>>(), vec![3]);
+        assert_eq!(log.sheds().iter().map(|e| e.request_id).collect::<Vec<_>>(), vec![2]);
+        // a mid-decode cancel ran on an island — the entry keeps it
+        assert_eq!(log.cancellations()[0].island, Some(IslandId(1)));
     }
 
     #[test]

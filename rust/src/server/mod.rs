@@ -2,7 +2,9 @@
 //! surface ([`SubmitRequest`] / [`Ticket`] / the admission queue in
 //! [`queue`]) and the orchestrator façade implementing the Fig. 2
 //! route-then-sanitize pipeline as an explicit request lifecycle
-//! (enqueue → admit → route → batch → execute → resolve).
+//! (enqueue → admit → route → batch → decode steps → resolve), with
+//! streaming token delivery ([`TokenStream`]) and cooperative mid-decode
+//! cancellation ([`Ticket::cancel`]).
 
 pub mod audit;
 pub mod orchestrator;
@@ -15,4 +17,4 @@ pub use orchestrator::{Backend, BatchItem, IslandSnapshot, Orchestrator, Outcome
 pub use queue::SubmitRequest;
 pub use ratelimit::RateLimiter;
 pub use session::{Session, SessionStore};
-pub use ticket::Ticket;
+pub use ticket::{Ticket, TokenEvent, TokenStream};

@@ -32,13 +32,23 @@
 //! and the per-user rate limiter sit behind short mutexes.
 //!
 //! Batching: both the queue drain and `submit_many` route first, then group
-//! co-routed requests per island and chunk each group by the live
-//! [`BatchPolicy`] — on the Real backend each chunk becomes one
-//! `execute_batch` call, filling the compiled PJRT batch variants instead
-//! of dispatching row by row (Fig. 2's island-execute stage is where the
-//! batcher sits). Because the queue drain batches whatever is parked,
-//! coalescing happens across sessions — the fleet-scale batching story, not
-//! per-call-scale.
+//! co-routed requests per island by the live [`BatchPolicy`] — because the
+//! queue drain batches whatever is parked, coalescing happens across
+//! sessions (the fleet-scale batching story, not per-call-scale). What a
+//! group *is* depends on [`BatchMode`]:
+//!
+//! - **Continuous** (default, Sim backend): requests join a per-island step
+//!   loop that interleaves [`Fleet::decode_step`] calls across the
+//!   in-flight batch at decode-step granularity, admitting newly routed
+//!   requests between steps instead of waiting for the batch to finish.
+//!   Tokens stream to the ticket as steps complete, and both caller cancels
+//!   ([`Ticket::cancel`]) and deadlines expiring mid-generation stop the
+//!   decode at the next step boundary — freeing the slot immediately, with
+//!   the ledger charged only for tokens actually decoded.
+//! - **Coalesce** (Real backend; opt-in on Sim): run-to-completion chunks —
+//!   on the Real backend each chunk becomes one `execute_batch` call,
+//!   filling the compiled PJRT batch variants instead of dispatching row by
+//!   row (Fig. 2's island-execute stage is where the batcher sits).
 //!
 //! Backends:
 //! - [`Backend::Sim`] — virtual-time [`Fleet`] (evals, examples, attacks),
@@ -56,8 +66,8 @@ use crate::agents::tide::monitor::DegradeDetector;
 use crate::agents::waves::{Decision, IslandState, Routed, Waves};
 use crate::config::Config;
 use crate::islands::executor::{self, IslandExecutor};
-use crate::islands::{CostLedger, Fleet};
-use crate::runtime::{chunk_by_policy, BatchPolicy};
+use crate::islands::{CostLedger, DecodeHandle, Fleet};
+use crate::runtime::{chunk_by_policy, BatchMode, BatchPolicy, StepLanes};
 use crate::server::audit::{AuditEntry, AuditLog};
 use crate::server::queue::{AdmissionQueue, QueueItem, SubmitRequest};
 use crate::server::ratelimit::RateLimiter;
@@ -87,6 +97,15 @@ pub struct Outcome {
     pub response: String,
     /// Whether history sanitization was applied this turn.
     pub sanitized: bool,
+    /// Tokens actually decoded for this request. Equals the full token
+    /// budget for served requests; smaller for cancelled ones (the ledger
+    /// charges exactly these); 0 for rejects and sheds.
+    pub tokens_generated: usize,
+    /// The request was cancelled — by the caller ([`Ticket::cancel`]) or by
+    /// its deadline expiring mid-decode — after consuming a request id.
+    /// `cost`/`tokens_generated` reflect any partial decode that was
+    /// charged; the audit entry carries a `cancelled:` reject reason.
+    pub cancelled: bool,
 }
 
 /// One item of a batched submission (see [`Orchestrator::submit_many`]).
@@ -143,8 +162,9 @@ struct Prepared {
 
 /// Terminal state of the failure-aware execution loop.
 enum ExecEnd {
-    /// `(latency_ms, cost, raw_response)` from the island that served it.
-    Done(f64, f64, String),
+    /// `(latency_ms, cost, raw_response, tokens_generated)` from the island
+    /// that served it.
+    Done(f64, f64, String, usize),
     /// Every attempt hit a dead island and the retry budget ran out (or no
     /// online island remained). Audited as an exhausted-retries reject.
     Exhausted { reason: String },
@@ -162,6 +182,34 @@ enum AttemptErr {
     IslandDown(String),
     /// Anything else — not re-routable.
     Fatal(anyhow::Error),
+}
+
+/// A routed request parked in an island's step-loop lane, waiting to join
+/// the in-flight continuous batch (see [`StepLanes`]).
+struct StepJob {
+    key: QueuedKey,
+    prepared: Prepared,
+}
+
+/// One in-flight request of an island's continuous batch: its queue
+/// bookkeeping plus the live decode cursor.
+struct Active {
+    job: StepJob,
+    handle: DecodeHandle,
+}
+
+/// Outcome of one decode-step attempt on an in-flight request.
+enum StepVerdict {
+    /// Decoded a chunk; more tokens remain.
+    Running,
+    /// The token budget is fully decoded — finish and resolve.
+    Done,
+    /// The caller cancelled the ticket; stop at this step boundary.
+    CancelRequested,
+    /// The absolute deadline passed mid-decode; stop at this step boundary.
+    DeadlineExpired,
+    /// The island died mid-decode — hand the request to the failover path.
+    IslandGone,
 }
 
 /// The orchestrator.
@@ -196,6 +244,11 @@ pub struct Orchestrator {
     workers_started: AtomicBool,
     /// Failover re-routes allowed per request before exhausted-retries.
     retry_budget: u32,
+    /// Per-island continuous-batching lanes: the hand-off between queue
+    /// drains (which route) and the single per-island driver (which
+    /// interleaves decode steps). Only used in [`BatchMode::Continuous`] on
+    /// the Sim backend.
+    step_lanes: StepLanes<IslandId, StepJob>,
     /// TIDE degrade detectors, one per island, sampled at heartbeat cadence.
     degrade: Mutex<BTreeMap<IslandId, DegradeDetector>>,
     degrade_zero_samples: u32,
@@ -244,6 +297,7 @@ impl Orchestrator {
             serve_workers,
             workers_started: AtomicBool::new(false),
             retry_budget,
+            step_lanes: StepLanes::new(),
             degrade: Mutex::new(BTreeMap::new()),
             degrade_zero_samples,
             last_liveness_sync: AtomicF64::new(f64::NEG_INFINITY),
@@ -550,7 +604,31 @@ impl Orchestrator {
     fn prepare(&self, session_id: u64, sr: &SubmitRequest) -> anyhow::Result<Result<Prepared, Outcome>> {
         let user = self.admit(session_id)?;
         let id = self.next_request_id.fetch_add(1, Ordering::SeqCst);
+        if let Err(why) = sr.validate() {
+            return Ok(Err(self.reject_invalid(id, &user, &why)));
+        }
         self.prepare_admitted(id, session_id, user, sr)
+    }
+
+    /// Audited fail-closed rejection for a degenerate [`SubmitRequest`]
+    /// (`SubmitRequest::validate`): the request consumed an id at admission,
+    /// so it sheds like any other — one audit entry, zero cost — instead of
+    /// entering the pipeline with a budget no island could ever satisfy.
+    fn reject_invalid(&self, id: u64, user: &str, why: &str) -> Outcome {
+        self.metrics.count("rejected_invalid_request", 1);
+        let reason = format!("shed: invalid request: {why}");
+        self.audit.record(AuditEntry::shed(id, user, self.now_ms(), &reason));
+        Outcome {
+            request_id: id,
+            s_r: 0.0,
+            decision: Decision::Reject { reason },
+            latency_ms: 0.0,
+            cost: 0.0,
+            response: String::new(),
+            sanitized: false,
+            tokens_generated: 0,
+            cancelled: false,
+        }
     }
 
     /// MIST + TIDE + WAVES + sanitize for a request that already cleared
@@ -624,6 +702,8 @@ impl Orchestrator {
                     cost: 0.0,
                     response: String::new(),
                     sanitized: false,
+                    tokens_generated: 0,
+                    cancelled: false,
                 }));
             }
             Some(r) => r.clone(),
@@ -767,13 +847,22 @@ impl Orchestrator {
             cost: 0.0,
             response: String::new(),
             sanitized: p.sanitized,
+            tokens_generated: 0,
+            cancelled: false,
         }
     }
 
     /// Post-execution bookkeeping shared by the single and batched paths.
     /// Does NOT append the conversation turn — callers do, so the batched
     /// path can record turns in submission order.
-    fn finish(&self, p: Prepared, latency_ms: f64, cost: f64, raw_response: String) -> Outcome {
+    fn finish(
+        &self,
+        p: Prepared,
+        latency_ms: f64,
+        cost: f64,
+        raw_response: String,
+        tokens_generated: usize,
+    ) -> Outcome {
         // Desanitize the response before the user sees it (backward pass)
         let response = if p.sanitized {
             self.sessions.with(p.session_id, |s| s.placeholders.desanitize(&raw_response)).unwrap_or(raw_response)
@@ -808,18 +897,20 @@ impl Orchestrator {
             cost,
             response,
             sanitized: p.sanitized,
+            tokens_generated,
+            cancelled: false,
         }
     }
 
     /// One execution attempt on the currently routed island. Island-down
     /// failures (crashed / left / unreachable) are separated from fatal
     /// errors so the caller can fail over.
-    fn execute_once(&self, p: &Prepared) -> Result<(f64, f64, String), AttemptErr> {
+    fn execute_once(&self, p: &Prepared) -> Result<(f64, f64, String, usize), AttemptErr> {
         match &self.backend {
             Backend::Sim(fleet) => match fleet.execute(p.routed.target, &p.request) {
                 Ok(rep) => {
                     let ack = format!("[sim:{}] ack {} tokens", p.routed.target, p.request.max_new_tokens);
-                    Ok((rep.latency_ms, rep.cost, ack))
+                    Ok((rep.latency_ms, rep.cost, ack, p.request.max_new_tokens))
                 }
                 Err(e) => Err(AttemptErr::IslandDown(e.to_string())),
             },
@@ -828,7 +919,7 @@ impl Orchestrator {
                     return Err(AttemptErr::IslandDown(format!("island {} missing", p.routed.target)));
                 };
                 match island_executor.execute(&island, &p.request) {
-                    Ok(resp) => Ok((resp.compute_ms + resp.network_ms, resp.cost, resp.text)),
+                    Ok(resp) => Ok((resp.compute_ms + resp.network_ms, resp.cost, resp.text, resp.tokens_generated)),
                     Err(e) if executor::is_island_down(&e) => Err(AttemptErr::IslandDown(e.to_string())),
                     Err(e) => Err(AttemptErr::Fatal(e)),
                 }
@@ -844,7 +935,7 @@ impl Orchestrator {
     fn execute_with_failover(&self, p: &mut Prepared) -> ExecEnd {
         loop {
             let down_reason = match self.execute_once(p) {
-                Ok((latency, cost, text)) => return ExecEnd::Done(latency, cost, text),
+                Ok((latency, cost, text, tokens)) => return ExecEnd::Done(latency, cost, text, tokens),
                 Err(AttemptErr::Fatal(e)) => return ExecEnd::Fatal(e),
                 Err(AttemptErr::IslandDown(reason)) => reason,
             };
@@ -899,7 +990,7 @@ impl Orchestrator {
     /// its accounting (no conversation-turn recording — callers own that).
     fn run_prepared(&self, mut p: Prepared) -> anyhow::Result<Outcome> {
         match self.execute_with_failover(&mut p) {
-            ExecEnd::Done(latency_ms, cost, raw_response) => Ok(self.finish(p, latency_ms, cost, raw_response)),
+            ExecEnd::Done(latency_ms, cost, raw, tokens) => Ok(self.finish(p, latency_ms, cost, raw, tokens)),
             ExecEnd::Exhausted { reason } => Ok(self.finish_exhausted(p, reason)),
             ExecEnd::Fatal(e) => {
                 self.audit_execution_failure(&p, &e);
@@ -1082,7 +1173,9 @@ impl Orchestrator {
                             Some(responses) => {
                                 for ((key, prepared), resp) in chunk.into_iter().zip(responses) {
                                     let latency = resp.compute_ms + resp.network_ms;
-                                    done.push((key, Ok(self.finish(prepared, latency, resp.cost, resp.text))));
+                                    let tokens = resp.tokens_generated;
+                                    let out = self.finish(prepared, latency, resp.cost, resp.text, tokens);
+                                    done.push((key, Ok(out)));
                                 }
                             }
                             None => {
@@ -1096,6 +1189,267 @@ impl Orchestrator {
             }
         }
         done
+    }
+
+    // -- continuous (decode-step) batching: the queue drain's Sim-backend
+    // -- execution path in BatchMode::Continuous --------------------------
+
+    /// Hand routed requests to their islands' step loops. Jobs are admitted
+    /// to every lane *first* (so no island's work waits on another island's
+    /// drive loop), then this thread drives whichever lanes have no active
+    /// driver. Lanes with a driver already running pick the new jobs up at
+    /// that driver's next step boundary — this is where a newly routed
+    /// request joins an in-flight batch mid-decode.
+    fn execute_stepped(&self, ready: Vec<(QueuedKey, Prepared)>) {
+        let mut by_island: Vec<(IslandId, Vec<StepJob>)> = Vec::new();
+        for (key, prepared) in ready {
+            let target = prepared.routed.target;
+            let job = StepJob { key, prepared };
+            match by_island.iter_mut().find(|(id, _)| *id == target) {
+                Some((_, group)) => group.push(job),
+                None => by_island.push((target, vec![job])),
+            }
+        }
+        let mut islands: Vec<IslandId> = Vec::with_capacity(by_island.len());
+        for (island, group) in by_island {
+            self.metrics.count("batch_groups", 1);
+            self.metrics.observe("batch_group_size", group.len() as f64);
+            self.step_lanes.admit(island, group);
+            islands.push(island);
+        }
+        for island in islands {
+            if self.step_lanes.try_drive(island) {
+                self.drive_island(island);
+            }
+        }
+    }
+
+    /// Run one island's step loop as its (sole) driver, with panic
+    /// containment: a panicking step loop fails its in-flight and pending
+    /// tickets with an error — audited, never silently lost — and releases
+    /// the lane so the island stays usable.
+    fn drive_island(&self, island: IslandId) {
+        let mut active: Vec<Active> = Vec::new();
+        let drove = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.drive_island_inner(island, &mut active)
+        }));
+        if drove.is_err() {
+            self.metrics.count("step_drive_panics", 1);
+            let now = self.now_ms();
+            let orphans = active.drain(..).map(|a| a.job).chain(self.step_lanes.fail_pending(island));
+            for job in orphans {
+                // resolve directly (not resolve_ticket): a job whose ticket
+                // already resolved before the panic is not a double
+                // resolution, just a straggler check. The contains() guard
+                // keeps "exactly one audit entry per consumed id".
+                if job.key.ticket.resolve(Err("internal error: island step loop panicked".to_string()))
+                    && !self.audit.contains(job.prepared.id)
+                {
+                    let entry =
+                        AuditEntry::shed(job.prepared.id, &job.prepared.user, now, "shed: island step loop panicked");
+                    self.audit.record(entry);
+                }
+            }
+        }
+    }
+
+    /// The per-island step loop (vLLM-style continuous batching, virtual
+    /// time): each round tops the in-flight batch up from the lane inbox
+    /// (up to `max_batch`), then advances every in-flight request by one
+    /// decode chunk. Requests finish, cancel, or expire *individually* at
+    /// step boundaries — a slot freed mid-round is refilled on the next
+    /// round without waiting for the rest of the batch.
+    fn drive_island_inner(&self, island: IslandId, active: &mut Vec<Active>) {
+        let Some(fleet) = self.sim_fleet() else {
+            // continuous stepping is Sim-only; anything admitted here runs
+            // through the one-shot failure-aware path instead
+            for job in self.step_lanes.fail_pending(island) {
+                self.settle_queued(job.key, self.run_prepared(job.prepared));
+            }
+            return;
+        };
+        loop {
+            let policy = self.batch_policy();
+            let room = policy.max_batch.saturating_sub(active.len());
+            for job in self.step_lanes.take(island, room) {
+                self.begin_decode(fleet, job, active);
+            }
+            if active.is_empty() {
+                if self.step_lanes.try_exit(island) {
+                    return;
+                }
+                continue; // jobs arrived while winding down — keep driving
+            }
+            self.metrics.observe("batch_occupancy", active.len() as f64);
+            self.metrics.gauge("steady_state_batch_occupancy", active.len() as f64);
+            let chunk = policy.decode_chunk.max(1);
+            let mut idx = 0;
+            while idx < active.len() {
+                match self.step_one(fleet, &mut active[idx], chunk) {
+                    StepVerdict::Running => idx += 1,
+                    verdict => {
+                        // Vec::remove (not swap_remove): conclusions stay in
+                        // admission order, so co-finishing requests audit in
+                        // the order the queue released them
+                        let finished = active.remove(idx);
+                        self.conclude_active(island, finished, verdict);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Prefill one admitted job and add it to the in-flight batch. A cancel
+    /// that arrived while the job sat in the lane resolves here without
+    /// touching the island; a prefill failure (island died after routing)
+    /// falls back to the one-shot failure-aware path, which re-routes.
+    fn begin_decode(&self, fleet: &Fleet, job: StepJob, active: &mut Vec<Active>) {
+        if job.key.ticket.cancel_requested() {
+            self.cancel_before_execution(job);
+            return;
+        }
+        let StepJob { key, prepared } = job;
+        match fleet.prefill(prepared.routed.target, &prepared.request) {
+            Ok(handle) => active.push(Active { job: StepJob { key, prepared }, handle }),
+            Err(_) => self.settle_queued(key, self.run_prepared(prepared)),
+        }
+    }
+
+    /// Resolve a job cancelled after routing but before any island work:
+    /// audited with the real MIST score and routing evidence, zero cost.
+    fn cancel_before_execution(&self, job: StepJob) {
+        let StepJob { key, prepared } = job;
+        self.metrics.count("cancelled_before_execution", 1);
+        let reason = "cancelled: by caller before execution".to_string();
+        self.audit.record(AuditEntry {
+            request_id: prepared.id,
+            user: prepared.user.clone(),
+            t_ms: prepared.now,
+            s_r: prepared.s_r,
+            island: None,
+            island_privacy: None,
+            sanitized: prepared.sanitized,
+            reject_reason: Some(reason.clone()),
+            failovers: prepared.failovers,
+        });
+        let outcome = Outcome {
+            request_id: prepared.id,
+            s_r: prepared.s_r,
+            decision: Decision::Reject { reason },
+            latency_ms: 0.0,
+            cost: 0.0,
+            response: String::new(),
+            sanitized: prepared.sanitized,
+            tokens_generated: 0,
+            cancelled: true,
+        };
+        self.settle_queued(key, Ok(outcome));
+    }
+
+    /// Advance one in-flight request by up to `chunk` decode tokens,
+    /// checking the cooperative cancel flag and the absolute deadline at
+    /// the step boundary first — this is what makes mid-decode cancellation
+    /// prompt: a cancel or an expired deadline frees the slot after the
+    /// current chunk, not after the full token budget.
+    fn step_one(&self, fleet: &Fleet, a: &mut Active, chunk: usize) -> StepVerdict {
+        if a.job.key.ticket.cancel_requested() {
+            return StepVerdict::CancelRequested;
+        }
+        // d_r is the remaining budget measured from routing time (`now`), so
+        // their sum is the request's absolute deadline in virtual time
+        let deadline_at = a.job.prepared.now + a.job.prepared.request.deadline_ms;
+        if a.handle.cursor_ms() > deadline_at {
+            return StepVerdict::DeadlineExpired;
+        }
+        match fleet.decode_step(&mut a.handle, chunk) {
+            Err(_) => StepVerdict::IslandGone,
+            Ok(n) => {
+                if n > 0 {
+                    let to = a.handle.tokens_decoded();
+                    a.job.key.ticket.push_tokens(&format!("[sim:{} t{}..{}]", a.handle.island(), to - n, to));
+                }
+                if a.handle.is_complete() {
+                    StepVerdict::Done
+                } else {
+                    StepVerdict::Running
+                }
+            }
+        }
+    }
+
+    /// Settle a request leaving the in-flight batch (any reason but
+    /// `Running`).
+    fn conclude_active(&self, island: IslandId, finished: Active, verdict: StepVerdict) {
+        let Active { job, handle } = finished;
+        let StepJob { key, prepared } = job;
+        let budget = prepared.request.max_new_tokens;
+        match verdict {
+            StepVerdict::Running => unreachable!("running requests stay in the batch"),
+            StepVerdict::Done => {
+                let report = handle.report();
+                let response = format!("[sim:{}] ack {} tokens", island, handle.tokens_decoded());
+                let out = self.finish(prepared, report.latency_ms, report.cost, response, handle.tokens_decoded());
+                self.settle_queued(key, Ok(out));
+            }
+            StepVerdict::CancelRequested => {
+                self.metrics.count("cancelled_mid_decode", 1);
+                let reason = format!("cancelled: by caller after {}/{} tokens", handle.tokens_decoded(), budget);
+                let out = self.finish_cancelled(prepared, &handle, reason);
+                self.settle_queued(key, Ok(out));
+            }
+            StepVerdict::DeadlineExpired => {
+                self.metrics.count("cancelled_deadline_mid_decode", 1);
+                let reason = format!(
+                    "cancelled: deadline expired mid-decode after {}/{} tokens",
+                    handle.tokens_decoded(),
+                    budget
+                );
+                let out = self.finish_cancelled(prepared, &handle, reason);
+                self.settle_queued(key, Ok(out));
+            }
+            StepVerdict::IslandGone => {
+                // partial work on an island that died mid-decode is never
+                // charged (same as a failed one-shot attempt); the
+                // failure-aware path marks it offline and re-routes
+                self.settle_queued(key, self.run_prepared(prepared));
+            }
+        }
+    }
+
+    /// Post-cancellation bookkeeping: the mirror of [`finish`] for a decode
+    /// stopped early. The audit entry keeps the island and routing evidence
+    /// under a `cancelled:` reason (disjoint from `shed:` — this request
+    /// *ran*, partially), and the ledger is charged exactly the prefill +
+    /// decoded-token cost the handle accumulated — never the full budget.
+    ///
+    /// [`finish`]: Orchestrator::finish
+    fn finish_cancelled(&self, p: Prepared, handle: &DecodeHandle, reason: String) -> Outcome {
+        let report = handle.report();
+        self.audit.record(AuditEntry {
+            request_id: p.id,
+            user: p.user.clone(),
+            t_ms: p.now,
+            s_r: p.s_r,
+            island: Some(p.routed.target),
+            island_privacy: Some(p.routed.target_privacy),
+            sanitized: p.sanitized,
+            reject_reason: Some(reason),
+            failovers: p.failovers,
+        });
+        self.ledger.charge(&p.user, report.cost);
+        self.metrics.count("requests_cancelled", 1);
+        self.metrics.observe("cancelled_tokens_decoded", handle.tokens_decoded() as f64);
+        Outcome {
+            request_id: p.id,
+            s_r: p.s_r,
+            decision: p.decision,
+            latency_ms: report.latency_ms,
+            cost: report.cost,
+            response: format!("[sim:{}] cancelled after {} tokens", p.routed.target, handle.tokens_decoded()),
+            sanitized: p.sanitized,
+            tokens_generated: handle.tokens_decoded(),
+            cancelled: true,
+        }
     }
 }
 
@@ -1132,6 +1486,14 @@ impl Orchestrator {
             }
         };
         let id = self.next_request_id.fetch_add(1, Ordering::SeqCst);
+        if let Err(why) = submit.validate() {
+            // degenerate budgets shed fail-closed at the front door: a
+            // zero-token or zero-deadline request could never be served,
+            // only occupy a queue slot until the drain discovered it
+            let rejected = self.reject_invalid(id, &user, &why);
+            self.resolve_ticket(&cell, Ok(rejected));
+            return ticket;
+        }
         let now = self.now_ms();
         match self.queue.push(id, session_id, user, submit, now, Arc::clone(&cell)) {
             Ok(depth) => {
@@ -1175,15 +1537,23 @@ impl Orchestrator {
         self.serve_workers
     }
 
-    /// Drain one popped batch: shed expired items, prepare + route the
-    /// rest, coalesce co-routed requests (across sessions — this is the
-    /// fleet-scale batching point) and resolve every ticket exactly once.
+    /// Drain one popped batch: resolve cancelled-while-queued items, shed
+    /// expired ones, prepare + route the rest, then execute — through the
+    /// per-island step loops ([`BatchMode::Continuous`], Sim backend) or the
+    /// coalescing run-to-completion path — and resolve every ticket exactly
+    /// once. Either way, co-routed requests batch across sessions (this is
+    /// the fleet-scale batching point).
     fn drain_batch(&self, batch: Vec<QueueItem>) {
         let now = self.now_ms();
         self.metrics.gauge("queue_depth", self.queue.len() as f64);
         let mut ready: Vec<(QueuedKey, Prepared)> = Vec::new();
         for item in batch {
             let QueueItem { id, session_id, user, mut submit, enqueued_ms, deadline_at_ms, ticket, .. } = item;
+            if ticket.cancel_requested() {
+                // cancelled before any routing work: cheapest exit
+                self.cancel_while_queued(id, &user, &ticket, now - enqueued_ms);
+                continue;
+            }
             if now > deadline_at_ms {
                 self.shed_expired(id, &user, &ticket, now - enqueued_ms);
                 continue;
@@ -1200,16 +1570,53 @@ impl Orchestrator {
                 Ok(Ok(prepared)) => ready.push((QueuedKey { ticket, session_id, prompt: submit.prompt }, prepared)),
             }
         }
-        for (key, result) in self.execute_coalesced(ready) {
-            if let Ok(out) = &result {
+        if self.batch_policy().mode == BatchMode::Continuous && self.sim_backed() {
+            self.execute_stepped(ready);
+        } else {
+            for (key, result) in self.execute_coalesced(ready) {
+                self.settle_queued(key, result);
+            }
+        }
+    }
+
+    /// Record the conversation turn (served, non-cancelled requests only —
+    /// a partial decode is not a completed turn) and resolve the ticket.
+    /// The single settlement point for every queued request that reached
+    /// execution, on both batching paths.
+    fn settle_queued(&self, key: QueuedKey, result: anyhow::Result<Outcome>) {
+        if let Ok(out) = &result {
+            if !out.cancelled {
                 if let Some(r) = out.decision.routed() {
                     let _ = self
                         .sessions
                         .with_mut(key.session_id, |s| s.record_turn(&key.prompt, &out.response, r.target_privacy));
                 }
             }
-            self.resolve_ticket(&key.ticket, result);
         }
+        self.resolve_ticket(&key.ticket, result);
+    }
+
+    /// Resolve a ticket cancelled while still parked in the admission
+    /// queue: never routed, never executed — zero cost, one audit entry
+    /// (under the `cancelled:` reason prefix, like every cancel).
+    fn cancel_while_queued(&self, id: u64, user: &str, ticket: &TicketCell, waited_ms: f64) {
+        self.metrics.count("cancelled_while_queued", 1);
+        let reason = format!("cancelled: by caller after {waited_ms:.0} ms in queue, before routing");
+        // shaped like a shed entry (no island, s_r unscored) but scoped by
+        // the cancelled: prefix so AuditLog::sheds() stays load-shedding-only
+        self.audit.record(AuditEntry::shed(id, user, self.now_ms(), &reason));
+        let outcome = Outcome {
+            request_id: id,
+            s_r: 0.0,
+            decision: Decision::Reject { reason },
+            latency_ms: 0.0,
+            cost: 0.0,
+            response: String::new(),
+            sanitized: false,
+            tokens_generated: 0,
+            cancelled: true,
+        };
+        self.resolve_ticket(ticket, Ok(outcome));
     }
 
     /// Resolve a ticket, folding `anyhow::Error` into the cloneable message
@@ -1251,6 +1658,8 @@ impl Orchestrator {
             cost: 0.0,
             response: String::new(),
             sanitized: false,
+            tokens_generated: 0,
+            cancelled: false,
         };
         self.resolve_ticket(ticket, Ok(outcome));
     }
@@ -1685,7 +2094,8 @@ mod tests {
     #[test]
     fn set_batch_policy_is_live_through_arc() {
         let o = Arc::new(sim_orchestrator());
-        o.set_batch_policy(BatchPolicy { max_batch: 2, max_wait: std::time::Duration::from_millis(1) });
+        let wait = std::time::Duration::from_millis(1);
+        o.set_batch_policy(BatchPolicy { max_batch: 2, max_wait: wait, ..BatchPolicy::default() });
         assert_eq!(o.batch_policy().max_batch, 2);
         let s = o.open_session("retuner");
         let items: Vec<BatchItem<'_>> = (0..5)
@@ -1696,6 +2106,77 @@ mod tests {
         // no coalesced group may exceed the retuned cap
         let h = o.metrics.histogram("batch_group_size").unwrap();
         assert!(h.max() <= 2.0, "group of {} exceeded max_batch=2", h.max());
+    }
+
+    #[test]
+    fn invalid_budgets_shed_at_the_front_door() {
+        let o = Arc::new(sim_orchestrator());
+        let s = o.open_session("validator");
+        // queue path: rejected before occupying a queue slot
+        let t = o.enqueue(s, SubmitRequest::new("hello").max_new_tokens(0));
+        assert!(t.is_resolved(), "invalid requests resolve immediately");
+        let out = t.wait().unwrap();
+        match &out.decision {
+            Decision::Reject { reason } => assert!(reason.contains("max_new_tokens"), "{reason}"),
+            other => panic!("expected invalid-request shed, got {other:?}"),
+        }
+        assert!(!out.cancelled);
+        assert_eq!(o.queue_depth(), 0);
+        // blocking path enforces the same contract
+        let out2 = o.submit_request(s, SubmitRequest::new("hello").deadline_ms(0.0)).unwrap();
+        match &out2.decision {
+            Decision::Reject { reason } => assert!(reason.contains("deadline_ms"), "{reason}"),
+            other => panic!("expected invalid-request shed, got {other:?}"),
+        }
+        assert_eq!(o.metrics.counter_value("rejected_invalid_request"), 2);
+        // both consumed ids and both are on the audit trail as sheds
+        assert_eq!(o.audit.len(), 2);
+        assert_eq!(o.audit.sheds().len(), 2);
+    }
+
+    #[test]
+    fn cancel_while_queued_resolves_without_routing() {
+        let o = Arc::new(sim_orchestrator());
+        let s = o.open_session("canceller");
+        // workers not started: the request parks, the cancel lands first
+        let t = o.enqueue(s, SubmitRequest::new("hello world"));
+        t.cancel();
+        assert!(!t.is_resolved(), "cancel is cooperative — resolved at drain time");
+        Arc::clone(&o).start_queue();
+        let out = t.wait().unwrap();
+        assert!(out.cancelled);
+        assert_eq!(out.cost, 0.0);
+        assert_eq!(out.tokens_generated, 0);
+        assert_eq!(o.metrics.counter_value("cancelled_while_queued"), 1);
+        assert_eq!(o.audit.cancellations().len(), 1);
+        assert!(o.audit.sheds().is_empty(), "a cancel is not load shedding");
+        assert_eq!(o.ledger.total(), 0.0);
+    }
+
+    #[test]
+    fn deadline_expiring_mid_decode_cancels_stream_and_charges_partial() {
+        use crate::server::ticket::TokenEvent;
+        let o = Arc::new(sim_orchestrator());
+        let s = o.open_session("doomed");
+        // 512 tokens cannot decode inside 300 virtual ms on any island
+        // (fastest per-token rate is 1.2 ms), but the deadline filter is
+        // soft, so the request routes and starts decoding — the step loop
+        // must stop it at a chunk boundary once the cursor passes 300 ms
+        let t = o.enqueue(s, SubmitRequest::new("hello world").deadline_ms(300.0).max_new_tokens(512));
+        Arc::clone(&o).start_queue();
+        let events: Vec<TokenEvent> = t.stream().collect();
+        assert!(matches!(events.first(), Some(TokenEvent::First { .. })), "{events:?}");
+        assert!(matches!(events.last(), Some(TokenEvent::Cancelled { .. })), "{events:?}");
+        let out = t.wait().unwrap();
+        assert!(out.cancelled);
+        assert!(out.decision.target().is_some(), "cancelled mid-decode, not rejected: {:?}", out.decision);
+        assert!(out.tokens_generated > 0, "prefill beat the deadline, some tokens decoded");
+        assert!(out.tokens_generated < 512, "decode must stop early, got {}", out.tokens_generated);
+        assert_eq!(o.metrics.counter_value("cancelled_deadline_mid_decode"), 1);
+        assert_eq!(o.audit.len(), 1);
+        assert_eq!(o.audit.cancellations().len(), 1);
+        let entry = &o.audit.cancellations()[0];
+        assert!(entry.island.is_some(), "the audit entry keeps the island it ran on");
     }
 
     #[test]

@@ -119,6 +119,22 @@ impl SubmitRequest {
         self.max_new_tokens = n;
         self
     }
+
+    /// Structural validity check, enforced at the serving front door
+    /// ([`Orchestrator::enqueue`](crate::server::Orchestrator::enqueue) and
+    /// the blocking submit path). A zero token budget would route and then
+    /// occupy a worker generating nothing; a zero, negative or non-finite
+    /// deadline insta-expires inside the drain loop. Both are shed
+    /// fail-closed with an audited reject instead.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_new_tokens == 0 {
+            return Err("max_new_tokens must be >= 1".to_string());
+        }
+        if self.deadline_ms.is_nan() || self.deadline_ms <= 0.0 {
+            return Err(format!("deadline_ms must be a positive number of milliseconds (got {})", self.deadline_ms));
+        }
+        Ok(())
+    }
 }
 
 /// One admitted request parked in the queue: everything the drain needs to
@@ -396,5 +412,17 @@ mod tests {
         assert_eq!(sr.max_new_tokens, 64);
         // the sensitivity floor clamps into [0,1]
         assert_eq!(SubmitRequest::new("q").sensitivity(7.0).sensitivity_floor, Some(1.0));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_budgets() {
+        assert!(SubmitRequest::new("q").validate().is_ok());
+        assert!(SubmitRequest::new("q").deadline_ms(f64::INFINITY).validate().is_ok(), "no deadline pressure is fine");
+        let err = SubmitRequest::new("q").max_new_tokens(0).validate().unwrap_err();
+        assert!(err.contains("max_new_tokens"), "{err}");
+        for bad in [0.0, -5.0, f64::NAN] {
+            let err = SubmitRequest::new("q").deadline_ms(bad).validate().unwrap_err();
+            assert!(err.contains("deadline_ms"), "{err}");
+        }
     }
 }

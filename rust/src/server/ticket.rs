@@ -3,18 +3,34 @@
 //! resolves exactly once when the worker pool finishes (or sheds) the
 //! request.
 //!
-//! The cell behind a ticket is a condvar-backed one-shot: the queue drain
-//! resolves it with either a completed [`Outcome`] (served, fail-closed
-//! reject, or shed) or an error message (session raced a close, fatal
-//! execution error, orchestrator shut down). [`Ticket::wait`] blocks;
-//! [`Ticket::try_poll`] never does — both may be called repeatedly and see
-//! the same terminal value. `resolve` returns whether it won the one-shot,
-//! so the queue-stress invariant "no ticket lost or double-resolved" is
-//! checkable: the orchestrator counts any second resolution in the
+//! The cell behind a ticket is a condvar-backed one-shot plus a token event
+//! queue: the per-island step loop pushes incremental tokens as decode
+//! steps complete, and the queue drain resolves the terminal value with
+//! either a completed [`Outcome`] (served, fail-closed reject, shed, or
+//! cancelled) or an error message (session raced a close, fatal execution
+//! error, orchestrator shut down). Three ways to consume it:
+//!
+//! - [`Ticket::wait`] blocks for the terminal [`Outcome`] — the original
+//!   surface, kept as a thin drain-the-stream shim so existing call sites
+//!   compile unchanged,
+//! - [`Ticket::try_poll`] never blocks — both may be called repeatedly and
+//!   see the same terminal value,
+//! - [`Ticket::stream`] yields [`TokenEvent`]s as they arrive: `First` for
+//!   the time-to-first-token moment, `Token` for each later chunk, then
+//!   exactly one of `Done` / `Cancelled`.
+//!
+//! [`Ticket::cancel`] is cooperative: it raises a flag the step loop
+//! observes at the next decode-step boundary (or the drain observes at
+//! admission), so a cancel frees the island's slot without un-booking
+//! anything. `resolve` returns whether it won the one-shot, so the
+//! queue-stress invariant "no ticket lost or double-resolved" is checkable:
+//! the orchestrator counts any second resolution in the
 //! `ticket_double_resolved` metric (which must stay 0).
 //!
 //! [`Orchestrator::enqueue`]: crate::server::Orchestrator::enqueue
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::server::orchestrator::Outcome;
@@ -24,25 +40,85 @@ use crate::server::orchestrator::Outcome;
 /// `Clone`, and a ticket must serve repeated reads).
 type TicketValue = Result<Outcome, String>;
 
-/// Shared one-shot cell between a [`Ticket`] and the worker that resolves it.
+/// One event on a ticket's token stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokenEvent {
+    /// The first generated chunk — its arrival is the time-to-first-token.
+    First { text: String },
+    /// A subsequent generated chunk.
+    Token { text: String },
+    /// The request reached a successful terminal outcome.
+    Done,
+    /// The request was cancelled (caller cancel, mid-decode deadline
+    /// expiry, shed, or pipeline error) — the stream ends here.
+    Cancelled { reason: String },
+}
+
+/// Interior state guarded by the cell's mutex: the one-shot terminal value
+/// plus the pending token events a streaming consumer has not read yet.
+#[derive(Debug, Default)]
+struct CellState {
+    terminal: Option<TicketValue>,
+    events: VecDeque<TokenEvent>,
+    emitted_any: bool,
+}
+
+/// Shared cell between a [`Ticket`] and the worker that resolves it.
 #[derive(Debug, Default)]
 pub(crate) struct TicketCell {
-    state: Mutex<Option<TicketValue>>,
+    state: Mutex<CellState>,
     cond: Condvar,
+    cancel: AtomicBool,
+}
+
+/// The stream event a terminal value maps to (for consumers that reach the
+/// terminal before — or without — draining pushed tokens).
+fn terminal_event(v: &TicketValue) -> TokenEvent {
+    match v {
+        Ok(out) if out.cancelled => {
+            TokenEvent::Cancelled { reason: format!("cancelled after {} tokens", out.tokens_generated) }
+        }
+        Ok(_) => TokenEvent::Done,
+        Err(msg) => TokenEvent::Cancelled { reason: msg.clone() },
+    }
 }
 
 impl TicketCell {
     /// Resolve the one-shot. Returns `true` when this call installed the
     /// value, `false` when the ticket was already resolved (the new value is
-    /// dropped — first resolution wins).
+    /// dropped — first resolution wins). The matching terminal stream event
+    /// is appended so a streaming consumer sees the end of the stream.
     pub(crate) fn resolve(&self, value: TicketValue) -> bool {
         let mut state = self.state.lock().unwrap();
-        if state.is_some() {
+        if state.terminal.is_some() {
             return false;
         }
-        *state = Some(value);
+        state.events.push_back(terminal_event(&value));
+        state.terminal = Some(value);
         self.cond.notify_all();
         true
+    }
+
+    /// Push an incremental token chunk (step loop → streaming consumer).
+    /// No-op after the terminal value landed.
+    pub(crate) fn push_tokens(&self, text: &str) {
+        let mut state = self.state.lock().unwrap();
+        if state.terminal.is_some() {
+            return;
+        }
+        let event = if state.emitted_any {
+            TokenEvent::Token { text: text.to_string() }
+        } else {
+            TokenEvent::First { text: text.to_string() }
+        };
+        state.emitted_any = true;
+        state.events.push_back(event);
+        self.cond.notify_all();
+    }
+
+    /// Has the consumer asked for this request to be cancelled?
+    pub(crate) fn cancel_requested(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst)
     }
 }
 
@@ -66,10 +142,14 @@ impl Ticket {
     /// Block until the request reaches a terminal state and return it.
     /// Requires a running worker pool ([`crate::server::Orchestrator::start_queue`])
     /// unless the ticket was shed/rejected at enqueue time.
+    ///
+    /// Compatibility shim over the streaming surface: waits for the
+    /// terminal value, ignoring incremental tokens (the full response is in
+    /// [`Outcome::response`]).
     pub fn wait(&self) -> anyhow::Result<Outcome> {
         let state = self.cell.state.lock().unwrap();
-        let state = self.cell.cond.wait_while(state, |s| s.is_none()).unwrap();
-        match state.as_ref().expect("wait_while guarantees Some") {
+        let state = self.cell.cond.wait_while(state, |s| s.terminal.is_none()).unwrap();
+        match state.terminal.as_ref().expect("wait_while guarantees Some") {
             Ok(outcome) => Ok(outcome.clone()),
             Err(msg) => Err(anyhow::anyhow!("{msg}")),
         }
@@ -79,7 +159,7 @@ impl Ticket {
     /// executing, `Some` once terminal (repeatable).
     pub fn try_poll(&self) -> Option<anyhow::Result<Outcome>> {
         let state = self.cell.state.lock().unwrap();
-        state.as_ref().map(|v| match v {
+        state.terminal.as_ref().map(|v| match v {
             Ok(outcome) => Ok(outcome.clone()),
             Err(msg) => Err(anyhow::anyhow!("{msg}")),
         })
@@ -87,7 +167,58 @@ impl Ticket {
 
     /// Has the request reached a terminal state yet?
     pub fn is_resolved(&self) -> bool {
-        self.cell.state.lock().unwrap().is_some()
+        self.cell.state.lock().unwrap().terminal.is_some()
+    }
+
+    /// Request cancellation. Cooperative: the step loop observes the flag
+    /// at the next decode-step boundary (freeing the island's slot
+    /// immediately), the drain observes it at admission; either resolves
+    /// the ticket with a cancelled [`Outcome`]. Requires a running worker
+    /// pool to take effect; cancelling an already-terminal ticket is a
+    /// no-op.
+    pub fn cancel(&self) {
+        self.cell.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// Blocking iterator over this request's [`TokenEvent`]s: zero or more
+    /// `First`/`Token` chunks, then exactly one `Done` or `Cancelled`.
+    /// Single-consumer per stream instance; a fresh `stream()` on a
+    /// terminal ticket yields just the terminal event.
+    pub fn stream(&self) -> TokenStream {
+        TokenStream { cell: Arc::clone(&self.cell), done: false }
+    }
+}
+
+/// Blocking token-event iterator — see [`Ticket::stream`].
+#[derive(Debug)]
+pub struct TokenStream {
+    cell: Arc<TicketCell>,
+    done: bool,
+}
+
+impl Iterator for TokenStream {
+    type Item = TokenEvent;
+
+    fn next(&mut self) -> Option<TokenEvent> {
+        if self.done {
+            return None;
+        }
+        let mut state = self.cell.state.lock().unwrap();
+        loop {
+            if let Some(event) = state.events.pop_front() {
+                if matches!(event, TokenEvent::Done | TokenEvent::Cancelled { .. }) {
+                    self.done = true;
+                }
+                return Some(event);
+            }
+            if let Some(v) = state.terminal.as_ref() {
+                // a previous stream instance consumed the queued terminal
+                // event: synthesize it so every stream ends properly
+                self.done = true;
+                return Some(terminal_event(v));
+            }
+            state = self.cell.cond.wait(state).unwrap();
+        }
     }
 }
 
@@ -105,6 +236,8 @@ mod tests {
             cost: 0.0,
             response: String::new(),
             sanitized: false,
+            tokens_generated: 0,
+            cancelled: false,
         }
     }
 
@@ -145,5 +278,62 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         assert!(cell.resolve(Ok(outcome(42))));
         assert_eq!(waiter.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn stream_yields_first_then_tokens_then_done() {
+        let (ticket, cell) = Ticket::new_pair();
+        cell.push_tokens("hel");
+        cell.push_tokens("lo");
+        assert!(cell.resolve(Ok(outcome(3))));
+        let events: Vec<TokenEvent> = ticket.stream().collect();
+        assert_eq!(
+            events,
+            vec![
+                TokenEvent::First { text: "hel".into() },
+                TokenEvent::Token { text: "lo".into() },
+                TokenEvent::Done,
+            ]
+        );
+        // the iterator is fused after the terminal event
+        assert_eq!(ticket.stream().count(), 1, "fresh stream on a terminal ticket sees just the terminal");
+    }
+
+    #[test]
+    fn stream_blocks_until_events_arrive() {
+        let (ticket, cell) = Ticket::new_pair();
+        let consumer = std::thread::spawn(move || ticket.stream().collect::<Vec<_>>());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        cell.push_tokens("x");
+        cell.resolve(Ok(outcome(9)));
+        let events = consumer.join().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0], TokenEvent::First { text: "x".into() });
+        assert_eq!(events[1], TokenEvent::Done);
+    }
+
+    #[test]
+    fn cancelled_outcome_ends_the_stream_with_cancelled() {
+        let (ticket, cell) = Ticket::new_pair();
+        ticket.cancel();
+        assert!(cell.cancel_requested());
+        let mut out = outcome(5);
+        out.cancelled = true;
+        out.tokens_generated = 12;
+        assert!(cell.resolve(Ok(out)));
+        let events: Vec<TokenEvent> = ticket.stream().collect();
+        assert_eq!(events, vec![TokenEvent::Cancelled { reason: "cancelled after 12 tokens".into() }]);
+        // wait() still surfaces the cancelled outcome, not an error
+        let got = ticket.wait().unwrap();
+        assert!(got.cancelled);
+        assert_eq!(got.tokens_generated, 12);
+    }
+
+    #[test]
+    fn tokens_after_terminal_are_dropped() {
+        let (ticket, cell) = Ticket::new_pair();
+        assert!(cell.resolve(Ok(outcome(1))));
+        cell.push_tokens("late");
+        assert_eq!(ticket.stream().collect::<Vec<_>>(), vec![TokenEvent::Done]);
     }
 }

@@ -320,10 +320,19 @@ impl Request {
         self
     }
 
-    /// Total token estimate (prompt + history) for cost accounting.
+    /// Prompt + history tokens (the prefill side), estimated as
+    /// ceil(chars / 4). Character-based on purpose: byte lengths over-charge
+    /// multi-byte UTF-8 text 2-4x (a CJK prompt is not 3x the tokens of an
+    /// ASCII one of the same length).
+    pub fn prefill_token_estimate(&self) -> usize {
+        let chars: usize =
+            self.prompt.chars().count() + self.history.iter().map(|t| t.text.chars().count()).sum::<usize>();
+        (chars + 3) / 4
+    }
+
+    /// Total token estimate (prefill + generation budget) for cost accounting.
     pub fn token_estimate(&self) -> usize {
-        let hist: usize = self.history.iter().map(|t| t.text.len()).sum();
-        (self.prompt.len() + hist) / 4 + self.max_new_tokens
+        self.prefill_token_estimate() + self.max_new_tokens
     }
 }
 
@@ -408,6 +417,24 @@ mod tests {
         assert_eq!(r.deadline_ms, 500.0);
         assert_eq!(r.required_dataset.as_deref(), Some("case_law"));
         assert!(r.token_estimate() >= 8);
+    }
+
+    #[test]
+    fn token_estimate_ascii_cjk_parity() {
+        // 40 characters of ASCII and 40 characters of CJK must estimate the
+        // same token count; the old byte-based estimate charged the CJK
+        // prompt 3x (UTF-8 encodes each of these chars as 3 bytes).
+        let ascii = Request::new(1, &"a".repeat(40)).with_max_new_tokens(8);
+        let cjk = Request::new(2, &"\u{6f22}".repeat(40)).with_max_new_tokens(8);
+        assert_eq!(ascii.prefill_token_estimate(), 10); // ceil(40 / 4)
+        assert_eq!(cjk.prefill_token_estimate(), ascii.prefill_token_estimate());
+        assert_eq!(cjk.token_estimate(), ascii.token_estimate());
+        // ceil, not floor: a 1-char prompt is still >= 1 prefill token
+        assert_eq!(Request::new(3, "x").prefill_token_estimate(), 1);
+        // history counts toward prefill
+        let with_hist = Request::new(4, &"a".repeat(40))
+            .with_history(vec![Turn { role: Role::User, text: "\u{6f22}".repeat(40) }]);
+        assert_eq!(with_hist.prefill_token_estimate(), 20);
     }
 
     #[test]

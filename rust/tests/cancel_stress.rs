@@ -1,0 +1,199 @@
+//! Mid-decode cancellation stress: producers race tight-deadline requests,
+//! caller cancels, and normal traffic through the continuous-batching step
+//! loops, with virtual time frozen so every deadline expiry happens *on the
+//! decode cursor*, mid-generation — never at the queue-expiry check.
+//!
+//! Pins the cancellation invariants that must hold under contention:
+//! - every cancelled ticket resolves exactly once (`ticket_double_resolved`
+//!   stays 0, every `wait()` returns),
+//! - every consumed id leaves exactly one audit entry, and cancelled
+//!   outcomes match the `cancelled:`-scoped audit view one-to-one,
+//! - the ledger equals Σ per-outcome costs — a cancelled request is charged
+//!   exactly its prefill + decoded tokens, never its full budget,
+//! - a deadline expiring mid-generation stops the decode early
+//!   (`tokens_generated` strictly below the budget) and frees the slot: the
+//!   batch-occupancy metric shows slots being shared and re-used,
+//! - a ticket cancelled while still parked resolves without routing.
+//!
+//! Producer count is overridable via `ISLANDRUN_STRESS_THREADS` so the CI
+//! release-mode stress job can push harder than the debug test job.
+
+use std::sync::Arc;
+
+use islandrun::agents::mist::Mist;
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator, Outcome, SubmitRequest, Ticket, TokenEvent};
+
+const PER_PRODUCER: usize = 30;
+const PRE_CANCELLED: usize = 8;
+const PRE_BURST: usize = 8;
+/// Token budget no island can decode inside the doomed deadline (fastest
+/// per-token rate in the preset is 1.2 virtual ms → 512 tokens ≥ 614 ms).
+const DOOMED_TOKENS: usize = 512;
+const DOOMED_DEADLINE_MS: f64 = 300.0;
+
+fn producers() -> usize {
+    std::env::var("ISLANDRUN_STRESS_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(16)
+}
+
+fn stress_orchestrator(seed: u64) -> Arc<Orchestrator> {
+    let mut cfg = Config::default();
+    // admission policy is not under test: a saturating rate limit or budget
+    // would turn submissions away and hide the cancellation invariants
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    cfg.queue_capacity = 100_000;
+    cfg.serve_workers = 4;
+    let fleet = Fleet::new(preset_personal_group(), seed);
+    Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), seed))
+}
+
+#[test]
+fn mid_decode_cancellation_under_contention_keeps_every_invariant() {
+    let producers = producers();
+    let orch = stress_orchestrator(701);
+
+    // --- phase 0 (deterministic): cancel while parked -------------------
+    // enqueued and cancelled before any worker exists, so the drain MUST
+    // observe the flag before routing
+    let pre_session = orch.open_session("precancel");
+    let pre_cancelled: Vec<Ticket> = (0..PRE_CANCELLED)
+        .map(|_| {
+            let t = orch.enqueue(pre_session, SubmitRequest::new("hello world").deadline_ms(1e12));
+            t.cancel();
+            t
+        })
+        .collect();
+    // a parked burst of identical co-routed requests: the first drain to
+    // reach them pops the whole batch at once, so the step loop provably
+    // holds a multi-request in-flight batch (occupancy invariant below)
+    let burst_session = orch.open_session("preburst");
+    let pre_burst: Vec<Ticket> = (0..PRE_BURST)
+        .map(|_| orch.enqueue(burst_session, SubmitRequest::new("hello world").deadline_ms(1e12).max_new_tokens(8)))
+        .collect();
+
+    Arc::clone(&orch).start_queue();
+
+    // --- phase 1 (racing): fast / doomed / caller-cancel mix ------------
+    // NOTE: virtual time is never advanced. The queue-expiry check (now >
+    // deadline_at) therefore never fires; a doomed request can only die on
+    // its decode cursor, mid-generation, inside the step loop.
+    let handles: Vec<_> = (0..producers)
+        .map(|t| {
+            let orch = Arc::clone(&orch);
+            std::thread::spawn(move || {
+                let session = orch.open_session(&format!("cstress-{t}"));
+                let tickets: Vec<Ticket> = (0..PER_PRODUCER)
+                    .map(|i| match i % 6 {
+                        // plenty of budget: completes and streams tokens
+                        0 | 1 | 2 => orch
+                            .enqueue(session, SubmitRequest::new("hello world").deadline_ms(1e12).max_new_tokens(8)),
+                        // doomed: the deadline lands mid-decode, always
+                        3 | 4 => orch.enqueue(
+                            session,
+                            SubmitRequest::new("summarize my week please")
+                                .deadline_ms(DOOMED_DEADLINE_MS)
+                                .max_new_tokens(DOOMED_TOKENS),
+                        ),
+                        // racer: caller cancel races the step loop — may
+                        // land while queued, before execution, mid-decode,
+                        // or after completion (then it is a no-op)
+                        _ => {
+                            let ticket = orch.enqueue(
+                                session,
+                                SubmitRequest::new("tell me a long story").deadline_ms(1e12).max_new_tokens(512),
+                            );
+                            ticket.cancel();
+                            ticket
+                        }
+                    })
+                    .collect();
+                tickets.into_iter().map(|t| t.wait().expect("no ticket may error")).collect::<Vec<Outcome>>()
+            })
+        })
+        .collect();
+
+    // --- probe: the streaming surface end-to-end ------------------------
+    let probe_session = orch.open_session("probe");
+    let probe = orch.enqueue(probe_session, SubmitRequest::new("hello world").deadline_ms(1e12).max_new_tokens(8));
+    let events: Vec<TokenEvent> = probe.stream().collect();
+    assert!(matches!(events.first(), Some(TokenEvent::First { .. })), "stream must open with First: {events:?}");
+    assert!(matches!(events.last(), Some(TokenEvent::Done)), "a served stream ends with Done: {events:?}");
+    let probe_out = probe.wait().unwrap();
+    assert!(!probe_out.cancelled);
+    assert_eq!(probe_out.tokens_generated, 8);
+
+    let mut outcomes: Vec<Outcome> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    outcomes.extend(pre_cancelled.iter().map(|t| t.wait().expect("pre-cancelled tickets resolve cleanly")));
+    outcomes.extend(pre_burst.iter().map(|t| t.wait().expect("burst tickets resolve cleanly")));
+    outcomes.push(probe_out);
+    let total = producers * PER_PRODUCER + PRE_CANCELLED + PRE_BURST + 1;
+    assert_eq!(outcomes.len(), total);
+
+    // 1. no ticket lost or double-resolved
+    assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+    assert_eq!(orch.metrics.counter_value("enqueued"), total as u64);
+
+    // 2. exactly one audit entry per consumed id, ids matching outcomes
+    let mut ids: Vec<u64> = outcomes.iter().map(|o| o.request_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), total, "request ids must be unique");
+    assert_eq!(orch.audit.len(), total);
+    let mut audit_ids: Vec<u64> = orch.audit.entries().iter().map(|e| e.request_id).collect();
+    audit_ids.sort_unstable();
+    audit_ids.dedup();
+    assert_eq!(audit_ids, ids, "audit trail must cover exactly the enqueued ids");
+
+    // 3. ledger equals Σ outcome costs: cancels charge their partial decode
+    // and nothing more, sheds and pre-execution cancels charge nothing
+    let expected_total: f64 = outcomes.iter().map(|o| o.cost).sum();
+    let tolerance = 1e-9 * (1.0 + expected_total.abs());
+    assert!(
+        (orch.ledger.total() - expected_total).abs() < tolerance,
+        "ledger total {} != outcome sum {}",
+        orch.ledger.total(),
+        expected_total
+    );
+
+    // 4. every doomed request died on its decode cursor, before its budget
+    let doomed_total = (producers * PER_PRODUCER * 2 / 6) as u64;
+    assert_eq!(orch.metrics.counter_value("cancelled_deadline_mid_decode"), doomed_total);
+    let cancelled: Vec<&Outcome> = outcomes.iter().filter(|o| o.cancelled).collect();
+    assert!(cancelled.len() as u64 >= doomed_total + PRE_CANCELLED as u64, "got {} cancelled", cancelled.len());
+    for out in &cancelled {
+        assert!(out.tokens_generated < DOOMED_TOKENS, "cancel must stop decode early: {}", out.tokens_generated);
+        if out.decision.target().is_none() {
+            assert_eq!(out.cost, 0.0, "a cancel that never reached an island is free");
+            assert_eq!(out.tokens_generated, 0);
+        }
+    }
+
+    // 5. cancelled outcomes and the cancelled:-scoped audit view agree 1:1
+    let cancellations = orch.audit.cancellations();
+    assert_eq!(cancellations.len(), cancelled.len());
+    let mut cancel_ids: Vec<u64> = cancellations.iter().map(|e| e.request_id).collect();
+    cancel_ids.sort_unstable();
+    let mut outcome_cancel_ids: Vec<u64> = cancelled.iter().map(|o| o.request_id).collect();
+    outcome_cancel_ids.sort_unstable();
+    assert_eq!(cancel_ids, outcome_cancel_ids);
+
+    // 6. the parked cancels resolved without routing (and count the racers
+    // whose cancel also landed before routing, if any)
+    assert!(orch.metrics.counter_value("cancelled_while_queued") >= PRE_CANCELLED as u64);
+    for t in &pre_cancelled {
+        let out = t.wait().unwrap();
+        assert!(out.cancelled);
+        assert_eq!(out.cost, 0.0);
+        assert!(out.decision.target().is_none(), "cancelled-while-queued must never route");
+    }
+
+    // 7. freed slots are re-used: the step loops ran with shared batches
+    let occupancy = orch.metrics.histogram("batch_occupancy").expect("step loops must record occupancy");
+    assert!(occupancy.count() > 0);
+    assert!(occupancy.max() >= 2.0, "no step batch ever held 2+ requests (max {})", occupancy.max());
+
+    // 8. compliance stays clean under cancellation churn
+    assert!(orch.audit.violations(0.9, 0.9).is_empty());
+}

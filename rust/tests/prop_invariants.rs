@@ -313,7 +313,9 @@ fn prop_batcher_conservation_and_order() {
             (n, cap)
         },
         |&(n, cap)| {
-            let mut b = Batcher::new(BatchPolicy { max_batch: cap, max_wait: std::time::Duration::from_secs(0) });
+            let policy =
+                BatchPolicy { max_batch: cap, max_wait: std::time::Duration::from_secs(0), ..BatchPolicy::default() };
+            let mut b = Batcher::new(policy);
             for i in 0..n {
                 b.push(i);
             }
