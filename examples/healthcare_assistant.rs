@@ -7,7 +7,7 @@
 use islandrun::agents::mist::Mist;
 use islandrun::config::{preset_healthcare, Config};
 use islandrun::islands::Fleet;
-use islandrun::server::{Backend, Orchestrator};
+use islandrun::server::{Backend, Orchestrator, SubmitRequest};
 use islandrun::substrate::trace::healthcare_day;
 use islandrun::types::{PriorityTier, TrustTier};
 use islandrun::util::Table;
@@ -25,7 +25,8 @@ fn main() -> anyhow::Result<()> {
     let mut cost = 0.0;
     for item in &day {
         orch.advance(86_400.0 / 1000.0 * 0.9); // spread over a virtual day
-        let out = orch.submit(session, &item.request.prompt, item.request.priority, None)?;
+        let out =
+            orch.submit_request(session, SubmitRequest::new(&item.request.prompt).priority(item.request.priority))?;
         if let Some(id) = out.decision.target() {
             let island = islands.iter().find(|i| i.id == id).unwrap();
             match island.tier {
@@ -53,17 +54,19 @@ fn main() -> anyhow::Result<()> {
     // ---- context migration demo (§VII.B) -------------------------------
     println!("context migration across the trust boundary:");
     let s = orch.open_session("dr-lee");
-    let turn1 = orch.submit(
+    let turn1 = orch.submit_request(
         s,
-        "patient john doe ssn 123-45-6789 diagnosed with diabetes, hba1c elevated",
-        PriorityTier::Primary,
-        None,
+        SubmitRequest::new("patient john doe ssn 123-45-6789 diagnosed with diabetes, hba1c elevated")
+            .priority(PriorityTier::Primary),
     )?;
     println!("  turn 1 (PHI): s_r={:.2} -> {:?}, sanitized={}", turn1.s_r, turn1.decision.target(), turn1.sanitized);
 
     // saturate the clinic + edge so the general follow-up must use cloud
     orch.saturate_bounded_islands(0.99);
-    let turn2 = orch.submit(s, "what lifestyle changes are usually recommended", PriorityTier::Burstable, None)?;
+    let turn2 = orch.submit_request(
+        s,
+        SubmitRequest::new("what lifestyle changes are usually recommended").priority(PriorityTier::Burstable),
+    )?;
     let island = islands.iter().find(|i| Some(i.id) == turn2.decision.target()).unwrap();
     println!(
         "  turn 2 (general): s_r={:.2} -> {} (P={}), history sanitized={}",

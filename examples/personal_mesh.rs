@@ -8,7 +8,7 @@ use islandrun::agents::lighthouse::Lighthouse;
 use islandrun::agents::mist::Mist;
 use islandrun::config::{preset_hiking_pair, preset_personal_group, Config};
 use islandrun::islands::Fleet;
-use islandrun::server::{Backend, Orchestrator};
+use islandrun::server::{Backend, Orchestrator, SubmitRequest};
 use islandrun::types::{IslandId, PriorityTier};
 use islandrun::util::Table;
 
@@ -26,7 +26,10 @@ fn main() -> anyhow::Result<()> {
     let session = orch.open_session("commuter");
 
     // at the desk: laptop serves
-    let turn1 = orch.submit(session, "refactor this helper function in the platform service", PriorityTier::Secondary, None)?;
+    let turn1 = orch.submit_request(
+        session,
+        SubmitRequest::new("refactor this helper function in the platform service").priority(PriorityTier::Secondary),
+    )?;
     let t1 = islands.iter().find(|i| Some(i.id) == turn1.decision.target()).unwrap();
     println!("at the desk    -> {} (sanitized={})", t1.name, turn1.sanitized);
 
@@ -35,7 +38,10 @@ fn main() -> anyhow::Result<()> {
     // island without losing a request
     lighthouse.tick(10_000.0);
     orch.leave_island(IslandId(0));
-    let turn2 = orch.submit(session, "continue: also update the unit tests", PriorityTier::Secondary, None)?;
+    let turn2 = orch.submit_request(
+        session,
+        SubmitRequest::new("continue: also update the unit tests").priority(PriorityTier::Secondary),
+    )?;
     let t2 = islands.iter().find(|i| Some(i.id) == turn2.decision.target()).unwrap();
     println!("in the car     -> {} (intra-group, sanitized={})", t2.name, turn2.sanitized);
     assert_ne!(t1.id, t2.id);
@@ -44,7 +50,10 @@ fn main() -> anyhow::Result<()> {
     // back home: the laptop rejoins (dynamic discovery) and serves again
     let laptop = islands.iter().find(|i| i.id == IslandId(0)).unwrap().clone();
     assert!(orch.join_island(laptop));
-    let turn3 = orch.submit(session, "now write the changelog entry", PriorityTier::Secondary, None)?;
+    let turn3 = orch.submit_request(
+        session,
+        SubmitRequest::new("now write the changelog entry").priority(PriorityTier::Secondary),
+    )?;
     let t3 = islands.iter().find(|i| Some(i.id) == turn3.decision.target()).unwrap();
     println!("back at desk   -> {} (rejoined mesh)", t3.name);
 
@@ -57,7 +66,10 @@ fn main() -> anyhow::Result<()> {
 
     let mut t = Table::new("photo-enhancement requests from friend A (phone at 15% battery)", &["request", "executed on", "battery rule"]);
     for i in 0..4 {
-        let out = orch2.submit(s2, "enhance this mountain photo with ai", PriorityTier::Secondary, None)?;
+        let out = orch2.submit_request(
+            s2,
+            SubmitRequest::new("enhance this mountain photo with ai").priority(PriorityTier::Secondary),
+        )?;
         let island = pair.iter().find(|x| Some(x.id) == out.decision.target()).unwrap();
         t.row(&[
             format!("photo {}", i + 1),

@@ -14,7 +14,7 @@ use islandrun::agents::mist::{Mist, Stage2};
 use islandrun::config::{preset_personal_group, Config};
 use islandrun::islands::executor::IslandExecutor;
 use islandrun::runtime::{BatchPolicy, Batcher, Engine};
-use islandrun::server::{Backend, Orchestrator};
+use islandrun::server::{Backend, Orchestrator, SubmitRequest};
 use islandrun::substrate::trace::{paper_mix, SensClass};
 use islandrun::util::Table;
 
@@ -46,7 +46,8 @@ fn main() -> anyhow::Result<()> {
     let mut total_cost = 0.0;
     let mut latencies = Vec::new();
     for item in &trace {
-        let out = orch.submit(session, &item.request.prompt, item.request.priority, None)?;
+        let out =
+            orch.submit_request(session, SubmitRequest::new(&item.request.prompt).priority(item.request.priority))?;
         if let Some(id) = out.decision.target() {
             let island = islands.iter().find(|i| i.id == id).unwrap();
             if island.privacy < item.truth.score() {

@@ -10,7 +10,7 @@ use islandrun::agents::mist::{Mist, Stage2};
 use islandrun::config::{preset_personal_group, Config};
 use islandrun::islands::executor::IslandExecutor;
 use islandrun::runtime::Engine;
-use islandrun::server::{Backend, BatchItem, Orchestrator};
+use islandrun::server::{Backend, Orchestrator, SubmitRequest};
 use islandrun::substrate::trace::paper_mix;
 use islandrun::util::bench::{bench, report};
 use islandrun::util::Table;
@@ -58,15 +58,13 @@ fn main() -> anyhow::Result<()> {
     let trace = paper_mix(32, 5);
 
     // batched submit: co-routed requests coalesce into the compiled PJRT
-    // batch variants through Orchestrator::submit_many
-    let items: Vec<BatchItem<'_>> = trace
-        .iter()
-        .map(|i| BatchItem { prompt: &i.request.prompt, priority: i.request.priority, dataset: None })
-        .collect();
+    // batch variants through Orchestrator::submit_many_requests
+    let items: Vec<SubmitRequest> =
+        trace.iter().map(|i| SubmitRequest::new(&i.request.prompt).priority(i.request.priority)).collect();
     let t0 = Instant::now();
     let mut latencies = Vec::new();
     for chunk in items.chunks(8) {
-        for result in orch.submit_many(session, chunk) {
+        for result in orch.submit_many_requests(session, chunk.to_vec()) {
             latencies.push(result?.latency_ms);
         }
     }

@@ -8,9 +8,15 @@
 //! smaller fleet. Reported per phase: req/s, p99 latency of served
 //! requests, served/rejected split, failover count and failover rate.
 //!
+//! Latency percentiles are read from the orchestrator's own labeled
+//! histograms: the fleet-wide p99 from the `latency_ms` histogram
+//! and a per-island breakdown (p50/p99/served) from the
+//! `island_latency_ms{island,tier,privacy}` children — the bench reports
+//! exactly what `render_prometheus()` exposes.
+//!
 //! CI hooks: `ISLANDRUN_BENCH_REQUESTS` overrides the total request count,
-//! `ISLANDRUN_BENCH_JSON=<path>` writes the rows as a JSON artifact
-//! (uploaded as `BENCH_failover.json`).
+//! `ISLANDRUN_BENCH_JSON=<path>` writes the rows (fleet-wide and
+//! per-island) as a JSON artifact (uploaded as `BENCH_failover.json`).
 
 use std::sync::Arc;
 
@@ -20,7 +26,7 @@ use islandrun::eval::loadgen::run_closed_loop;
 use islandrun::islands::Fleet;
 use islandrun::server::{Backend, Orchestrator};
 use islandrun::util::bench::write_json_artifact;
-use islandrun::util::{stats, Table};
+use islandrun::util::Table;
 
 const THREADS: usize = 8;
 
@@ -46,6 +52,7 @@ fn main() {
         &["down", "req/s", "p99 ms", "served", "rejected", "failovers", "failover rate", "Δp99 vs 0%"],
     );
     let mut json_rows = Vec::new();
+    let mut per_island_rows = Vec::new();
     let mut baseline_p99 = 0.0f64;
     let mut baseline_rate = 0.0f64;
     for (phase, down_rate) in [0.0f64, 0.1, 0.3].into_iter().enumerate() {
@@ -62,9 +69,11 @@ fn main() {
         assert_eq!(orch.audit.len(), report.outcomes.len(), "audit trail must cover every admitted request");
 
         let rate = report.requests_per_sec();
-        let latencies: Vec<f64> =
-            report.outcomes.iter().filter(|o| o.latency_ms > 0.0).map(|o| o.latency_ms).collect();
-        let p99 = stats::percentile(&latencies, 0.99);
+        // fleet-wide served-latency distribution from the orchestrator's
+        // own histogram — no bench-side sample collection
+        let latency = orch.metrics.histogram("latency_ms").expect("latency_ms registered");
+        assert_eq!(latency.count(), report.served() as u64, "histogram samples == served requests");
+        let p99 = latency.p99();
         let failovers = orch.metrics.counter_value("failovers");
         let failover_rate = failovers as f64 / report.attempted as f64;
         if phase == 0 {
@@ -91,8 +100,38 @@ fn main() {
             ("failover_rate".to_string(), failover_rate),
             ("added_p99_ms".to_string(), p99 - baseline_p99),
         ]);
+
+        // per-island latency breakdown, straight from the labeled
+        // histogram children (labels: island, tier, privacy)
+        let mut children = orch.metrics.histogram_children("island_latency_ms");
+        children.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut it = Table::new(
+            &format!("failover — per-island served latency at {:.0}% down", down_rate * 100.0),
+            &["island", "tier", "privacy", "served", "p50 ms", "p99 ms"],
+        );
+        for (labels, h) in &children {
+            it.row(&[
+                labels[0].clone(),
+                labels[1].clone(),
+                labels[2].clone(),
+                h.count().to_string(),
+                format!("{:.1}", h.p50()),
+                format!("{:.1}", h.p99()),
+            ]);
+            let island_idx: f64 =
+                labels[0].strip_prefix("island-").and_then(|n| n.parse().ok()).unwrap_or(-1.0);
+            per_island_rows.push(vec![
+                ("down_rate".to_string(), down_rate),
+                ("island".to_string(), island_idx),
+                ("served".to_string(), h.count() as f64),
+                ("p50_ms".to_string(), h.p50()),
+                ("p99_ms".to_string(), h.p99()),
+            ]);
+        }
+        it.print();
     }
     t.print();
+    json_rows.extend(per_island_rows);
     write_json_artifact("failover", &json_rows);
 
     println!(

@@ -12,6 +12,12 @@
 //! head-start continuous batching buys under increasing producer
 //! concurrency against a fixed 4-thread worker pool.
 //!
+//! Wall-time and TTFT samples are recorded through pre-registered labeled
+//! histogram handles (`bench_wall_ms{mode,producers}` /
+//! `bench_ttft_ms{mode,producers}`) on the orchestrator's own registry, and
+//! every reported percentile is read back from the histogram snapshot — the
+//! artifact exercises the same telemetry path production metrics use.
+//!
 //! CI hooks: `ISLANDRUN_BENCH_REQUESTS` overrides the total request count
 //! (the bench-smoke job uses a short run), `ISLANDRUN_BENCH_JSON=<path>`
 //! writes the measured rows as a JSON artifact (uploaded as
@@ -29,7 +35,7 @@ use islandrun::runtime::{BatchMode, BatchPolicy};
 use islandrun::server::{Backend, Orchestrator, SubmitRequest};
 use islandrun::substrate::trace::{priority_for, prompt_for};
 use islandrun::util::bench::{gate_enabled, write_json_artifact};
-use islandrun::util::{stats, Rng, Table};
+use islandrun::util::{Rng, Table};
 
 fn total_requests() -> usize {
     std::env::var("ISLANDRUN_BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4000)
@@ -80,16 +86,32 @@ fn main() {
         for &producers in &[1usize, 4, 16] {
             let orch = orchestrator(900 + producers as u64, mode);
             Arc::clone(&orch).start_queue();
+            // labeled histogram handles on the orchestrator's own registry:
+            // the cells are resolved ONCE here and bumped lock-free in the
+            // producer loops, exactly like the serving hot path
+            let label_producers = producers.to_string();
+            let wall_vec = orch.metrics.histogram_vec(
+                "bench_wall_ms",
+                "bench: enqueue->resolve wall time (ms)",
+                &["mode", "producers"],
+            );
+            let ttft_vec = orch.metrics.histogram_vec(
+                "bench_ttft_ms",
+                "bench: enqueue->first-token wall time (ms)",
+                &["mode", "producers"],
+            );
+            let wall_hist = wall_vec.with(&[mode_name(mode), &label_producers]);
+            let ttft_hist = ttft_vec.with(&[mode_name(mode), &label_producers]);
             let per = (total / producers).max(1);
             let t0 = std::time::Instant::now();
             let handles: Vec<_> = (0..producers)
                 .map(|p| {
                     let orch = Arc::clone(&orch);
+                    let wall_hist = wall_hist.clone();
+                    let ttft_hist = ttft_hist.clone();
                     std::thread::spawn(move || {
                         let session = orch.open_session(&format!("qbench-{p}"));
                         let mut rng = Rng::new(41 ^ (p as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-                        let mut samples = Vec::with_capacity(per);
-                        let mut ttfts = Vec::with_capacity(per);
                         let mut served = 0usize;
                         let mut rejected = 0usize;
                         let mut errors = 0usize;
@@ -109,8 +131,8 @@ fn main() {
                             debug_assert!(first.is_some(), "a stream always yields at least the terminal");
                             match ticket.wait() {
                                 Ok(out) => {
-                                    samples.push(start.elapsed().as_secs_f64() * 1e3);
-                                    ttfts.push(ttft);
+                                    wall_hist.observe(start.elapsed().as_secs_f64() * 1e3);
+                                    ttft_hist.observe(ttft);
                                     if out.decision.target().is_some() {
                                         served += 1;
                                     } else {
@@ -121,17 +143,13 @@ fn main() {
                             }
                             orch.advance(5.0);
                         }
-                        (samples, ttfts, served, rejected, errors)
+                        (served, rejected, errors)
                     })
                 })
                 .collect();
-            let mut samples = Vec::with_capacity(producers * per);
-            let mut ttfts = Vec::with_capacity(producers * per);
             let (mut served, mut rejected, mut errors) = (0usize, 0usize, 0usize);
             for h in handles {
-                let (s, tt, sv, rj, er) = h.join().unwrap();
-                samples.extend(s);
-                ttfts.extend(tt);
+                let (sv, rj, er) = h.join().unwrap();
                 served += sv;
                 rejected += rj;
                 errors += er;
@@ -144,10 +162,15 @@ fn main() {
             assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
 
             let rate = attempted as f64 / wall.max(1e-9);
-            let p50 = stats::percentile(&samples, 0.5);
-            let p99 = stats::percentile(&samples, 0.99);
-            let ttft_p50 = stats::percentile(&ttfts, 0.5);
-            let ttft_p99 = stats::percentile(&ttfts, 0.99);
+            // percentiles come from the labeled histogram snapshots — the
+            // same data `render_prometheus()` would expose
+            let wall_snap = wall_hist.snapshot();
+            let ttft_snap = ttft_hist.snapshot();
+            assert_eq!(wall_snap.count() + errors as u64, attempted as u64, "every resolved ticket is sampled");
+            let p50 = wall_snap.p50();
+            let p99 = wall_snap.p99();
+            let ttft_p50 = ttft_snap.p50();
+            let ttft_p99 = ttft_snap.p99();
             // mean in-flight requests per step-loop round (0 when the mode
             // never ran a step loop, i.e. coalesce)
             let occupancy = orch.metrics.histogram("batch_occupancy").map(|h| h.mean()).unwrap_or(0.0);

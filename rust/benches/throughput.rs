@@ -9,10 +9,16 @@
 //! least 2x the single-worker rate (asserted below when >= 4 cores are
 //! available).
 //!
+//! Also benchmarks the telemetry hot path itself: per-request counter
+//! bumps through a pre-resolved typed handle vs the legacy string-keyed
+//! `count(name, n)` lookup, and gates that the handle path is no slower
+//! (it should be much faster — one atomic add vs a read-locked map probe).
+//!
 //! CI hooks: `ISLANDRUN_BENCH_REQUESTS` overrides the total request count
 //! (the bench-smoke job uses a short run), `ISLANDRUN_BENCH_GATE=off`
-//! disables the speedup assertions (smoke runs measure, they do not gate),
-//! and `ISLANDRUN_BENCH_JSON=<path>` writes the measured rows as a JSON
+//! disables the speedup assertions and the telemetry no-regression gate
+//! (smoke runs measure, they do not gate), and
+//! `ISLANDRUN_BENCH_JSON=<path>` writes the measured rows as a JSON
 //! artifact (uploaded as `BENCH_throughput.json`).
 
 use std::sync::Arc;
@@ -22,8 +28,9 @@ use islandrun::config::{preset_personal_group, Config};
 use islandrun::eval::loadgen::run_closed_loop;
 use islandrun::islands::Fleet;
 use islandrun::server::{Backend, Orchestrator};
+use islandrun::telemetry::Metrics;
 use islandrun::util::bench::write_json_artifact;
-use islandrun::util::{stats, Table};
+use islandrun::util::Table;
 
 fn total_requests() -> usize {
     std::env::var("ISLANDRUN_BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4000)
@@ -58,8 +65,8 @@ fn main() {
         assert_eq!(report.outcomes.len() + report.errors, report.attempted, "lost submissions");
         assert_eq!(orch.audit.len(), report.outcomes.len(), "audit trail must cover every admitted request");
         let rate = report.requests_per_sec();
-        let latencies: Vec<f64> = report.outcomes.iter().filter(|o| o.latency_ms > 0.0).map(|o| o.latency_ms).collect();
-        let p99 = stats::percentile(&latencies, 0.99);
+        // served-latency p99 straight from the orchestrator's histogram
+        let p99 = orch.metrics.histogram("latency_ms").map(|h| h.p99()).unwrap_or(0.0);
         rates.push((threads, rate));
         let speedup = rate / rates[0].1;
         t.row(&[
@@ -97,5 +104,59 @@ fn main() {
         println!("PASS (reduced): {speedup:.2}x speedup on only {cores} cores; the 2x gate needs >= 4");
     } else {
         println!("SKIP scaling assertion: single-core host ({speedup:.2}x measured)");
+    }
+
+    telemetry_hot_path_bench();
+}
+
+/// Microbench: N counter bumps through a pre-resolved handle vs the legacy
+/// string-keyed `count(name, 1)` path (name-table read lock + BTreeMap
+/// probe per bump). The tentpole claim is that handles make per-request
+/// telemetry effectively free, so the gate only requires "no slower" with
+/// generous slack for timer noise on shared runners.
+fn telemetry_hot_path_bench() {
+    const BUMPS: u64 = 200_000;
+    const REPS: usize = 5;
+    let m = Metrics::new();
+    let handle = m.register_counter("bench_handle_bumps", "microbench: cached-handle counter bumps");
+    // warm both paths so first-touch registration stays out of the timings
+    handle.inc();
+    m.count("bench_string_bumps", 1);
+
+    let time = |f: &mut dyn FnMut()| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..REPS {
+            let t0 = std::time::Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best * 1e9 / BUMPS as f64
+    };
+    let handle_ns = time(&mut || {
+        for _ in 0..BUMPS {
+            handle.inc();
+        }
+    });
+    let string_ns = time(&mut || {
+        for _ in 0..BUMPS {
+            m.count("bench_string_bumps", 1);
+        }
+    });
+    assert_eq!(m.counter_value("bench_handle_bumps"), 1 + REPS as u64 * BUMPS);
+    assert_eq!(m.counter_value("bench_string_bumps"), 1 + REPS as u64 * BUMPS);
+
+    println!(
+        "
+telemetry hot path: handle {handle_ns:.1} ns/bump vs string-keyed {string_ns:.1} ns/bump ({:.2}x)",
+        string_ns / handle_ns
+    );
+    if gate_enabled() {
+        assert!(
+            handle_ns <= string_ns * 1.25,
+            "typed handles must not be slower than the string-keyed path: {handle_ns:.1} > {string_ns:.1} ns/bump"
+        );
+        println!("PASS: handle-based counters are no slower than the string-keyed path");
+    } else {
+        println!("GATE OFF: telemetry comparison not enforced");
     }
 }

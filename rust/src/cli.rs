@@ -9,6 +9,9 @@
 //! islandrun loadgen [--requests N] [--producers P] [--workers W] [--preset P]
 //!                                            open-loop run over the
 //!                                            enqueue/Ticket queue path (Sim)
+//! islandrun stats [--requests N] [--preset P] [--prom] [--prom-out FILE]
+//!                 [--events-out FILE]        run a short Sim workload and dump
+//!                                            telemetry (table or Prometheus)
 //! islandrun help
 //! ```
 
@@ -38,9 +41,18 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                let value = argv.get(i + 1).cloned().unwrap_or_default();
-                flags.push((key.to_string(), value));
-                i += 2;
+                // a flag followed by another flag (or nothing) is boolean:
+                // store an empty value and do NOT consume the next token
+                match argv.get(i + 1) {
+                    Some(next) if !next.starts_with("--") => {
+                        flags.push((key.to_string(), next.clone()));
+                        i += 2;
+                    }
+                    _ => {
+                        flags.push((key.to_string(), String::new()));
+                        i += 1;
+                    }
+                }
             } else {
                 positional.push(a.clone());
                 i += 1;
@@ -70,6 +82,12 @@ USAGE:
                   [--preset personal|healthcare|legal|hiking]
                                              open-loop run over the non-blocking
                                              enqueue/Ticket path (Sim backend)
+  islandrun stats [--requests N] [--preset P] [--prom] [--prom-out FILE]
+                  [--events-out FILE]        run a short Sim workload and print
+                                             telemetry: the metrics table, or
+                                             Prometheus text exposition (--prom);
+                                             optionally write the exposition and
+                                             the per-request analytics JSONL
   islandrun help                             this message
 ";
 
@@ -88,6 +106,7 @@ pub fn run(argv: &[String]) -> i32 {
         Some("attacks") => cmd_attacks(),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("stats") => cmd_stats(&args),
         Some("help") | None => {
             print!("{HELP}");
             0
@@ -253,6 +272,50 @@ fn cmd_loadgen(args: &Args) -> i32 {
     0
 }
 
+/// Drive a short deterministic Sim workload through the queue path and
+/// expose the resulting telemetry: the human-readable metrics table by
+/// default, the Prometheus text exposition with `--prom`, plus optional
+/// file dumps (`--prom-out`, `--events-out`) for CI artifacts. The
+/// exposition is format-linted before it is printed or written.
+fn cmd_stats(args: &Args) -> i32 {
+    let total: usize = args.flag("requests").and_then(|s| s.parse().ok()).unwrap_or(200);
+    let preset_name = args.flag("preset").filter(|p| !p.is_empty()).unwrap_or("personal");
+    let Some(islands) = preset(preset_name) else {
+        eprintln!("unknown preset '{preset_name}'");
+        return 2;
+    };
+    let mut cfg = Config::default();
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    let orch = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(Fleet::new(islands, 7)), 7));
+    let report = run_open_loop(&orch, 2, (total + 1) / 2, 11);
+
+    let exposition = orch.metrics.render_prometheus();
+    if let Err(e) = crate::telemetry::lint_exposition(&exposition) {
+        eprintln!("render_prometheus produced an invalid exposition: {e}");
+        return 1;
+    }
+    if args.flag("prom").is_some() {
+        print!("{exposition}");
+    } else {
+        println!("stats — {} requests on '{preset_name}' (Sim), {} served", report.attempted, report.served());
+        orch.metrics.report().print();
+    }
+    if let Some(path) = args.flag("prom-out").filter(|p| !p.is_empty()) {
+        if let Err(e) = std::fs::write(path, &exposition) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+    }
+    if let Some(path) = args.flag("events-out").filter(|p| !p.is_empty()) {
+        if let Err(e) = std::fs::write(path, orch.analytics.to_jsonl()) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+    }
+    0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,6 +348,42 @@ mod tests {
     #[test]
     fn attacks_command_passes() {
         assert_eq!(run(&argv(&["attacks"])), 0);
+    }
+
+    #[test]
+    fn boolean_flags_do_not_swallow_the_next_flag() {
+        let a = Args::parse(&argv(&["stats", "--prom", "--prom-out", "/tmp/x.prom"]));
+        assert_eq!(a.flag("prom"), Some(""));
+        assert_eq!(a.flag("prom-out"), Some("/tmp/x.prom"));
+        let b = Args::parse(&argv(&["stats", "--prom"]));
+        assert_eq!(b.flag("prom"), Some(""));
+    }
+
+    #[test]
+    fn stats_command_emits_lintable_exposition_and_events() {
+        let dir = std::env::temp_dir();
+        let prom = dir.join("islandrun_cli_stats.prom");
+        let events = dir.join("islandrun_cli_stats.jsonl");
+        let code = run(&argv(&[
+            "stats",
+            "--requests",
+            "32",
+            "--prom",
+            "--prom-out",
+            prom.to_str().unwrap(),
+            "--events-out",
+            events.to_str().unwrap(),
+        ]));
+        assert_eq!(code, 0);
+        let text = std::fs::read_to_string(&prom).unwrap();
+        crate::telemetry::lint_exposition(&text).unwrap();
+        assert!(text.contains("islandrun_requests_resolved_total"), "outcome family missing:\n{text}");
+        let jsonl = std::fs::read_to_string(&events).unwrap();
+        assert!(!jsonl.trim().is_empty(), "analytics JSONL must cover the resolved requests");
+        let first = crate::config::json::Json::parse(jsonl.lines().next().unwrap()).unwrap();
+        assert!(first.get("outcome").as_str().is_some());
+        let _ = std::fs::remove_file(&prom);
+        let _ = std::fs::remove_file(&events);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::config::{preset_healthcare, preset_legal, preset_personal_group, Conf
 use crate::eval::harness::{run_policy, RunOpts};
 use crate::islands::Fleet;
 use crate::security;
-use crate::server::{Backend, Orchestrator};
+use crate::server::{Backend, Orchestrator, SubmitRequest};
 use crate::substrate::netsim::NetSim;
 use crate::substrate::trace::{self, paper_mix, SensClass};
 use crate::types::{LinkKind, PriorityTier, Request};
@@ -304,7 +304,11 @@ pub fn e8_motivating() -> Vec<Table> {
     orch.set_island_load(crate::types::IslandId(0), 0.97);
 
     let turn1 = orch
-        .submit(session, "Analyze treatment options for 45-year-old diabetic patient with elevated HbA1c", PriorityTier::Primary, None)
+        .submit_request(
+            session,
+            SubmitRequest::new("Analyze treatment options for 45-year-old diabetic patient with elevated HbA1c")
+                .priority(PriorityTier::Primary),
+        )
         .unwrap();
     let islands = preset_personal_group();
     let t1_island = islands.iter().find(|i| i.id == turn1.decision.target().unwrap()).unwrap();
@@ -314,7 +318,11 @@ pub fn e8_motivating() -> Vec<Table> {
 
     // free capacity everywhere but keep laptop busy; general follow-up
     let turn2 = orch
-        .submit(session, "What are common complications of long term conditions?", PriorityTier::Burstable, None)
+        .submit_request(
+            session,
+            SubmitRequest::new("What are common complications of long term conditions?")
+                .priority(PriorityTier::Burstable),
+        )
         .unwrap();
     let t2_island = islands.iter().find(|i| i.id == turn2.decision.target().unwrap()).unwrap();
     t.row(&["turn-2 s_r (expect ~0.2-0.3)".into(), f(turn2.s_r, 2)]);

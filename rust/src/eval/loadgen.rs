@@ -152,7 +152,7 @@ pub fn run_closed_loop_churn(
                     }
                     let class = class_for(i);
                     let prompt = prompt_for(class, &mut rng);
-                    match orch.submit(session, &prompt, priority_for(class), None) {
+                    match orch.submit_request(session, SubmitRequest::new(&prompt).priority(priority_for(class))) {
                         Ok(out) => local.push(out),
                         Err(_) => local_errors += 1,
                     }

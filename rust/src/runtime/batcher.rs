@@ -99,7 +99,7 @@ impl<T> Batcher<T> {
 
 /// Split an already-collected group into policy-sized FIFO chunks
 /// (`<= max_batch` each) without standing up a live queue. The
-/// orchestrator's coalescing paths — `submit_many` and the admission-queue
+/// orchestrator's coalescing paths — `submit_many_requests` and the admission-queue
 /// drain — group co-routed requests per island and chunk each group this
 /// way before dispatching one `execute_batch` per chunk.
 pub fn chunk_by_policy<T>(items: Vec<T>, policy: BatchPolicy) -> Vec<Vec<T>> {

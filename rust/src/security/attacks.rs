@@ -16,7 +16,7 @@ use crate::agents::tide::hysteresis::Preference;
 use crate::agents::waves::Waves;
 use crate::config::{preset_personal_group, Config};
 use crate::islands::Fleet;
-use crate::server::{Backend, Orchestrator};
+use crate::server::{Backend, Orchestrator, SubmitRequest};
 use crate::types::{IslandId, PriorityTier, Request};
 
 /// Result of one attack drill.
@@ -117,13 +117,17 @@ pub fn attack4_island_flooding() -> AttackOutcome {
 
     let mut flood_admitted = 0;
     for _ in 0..200 {
-        if orch.submit(attacker, "junk junk junk", PriorityTier::Burstable, None).is_ok() {
+        let flood = SubmitRequest::new("junk junk junk").priority(PriorityTier::Burstable);
+        if orch.submit_request(attacker, flood).is_ok() {
             flood_admitted += 1;
         }
     }
     // victim's primary (sensitive) request must still run on a P=1.0 island
     let out = orch
-        .submit(victim, "patient john doe ssn 123-45-6789 needs dosage review", PriorityTier::Primary, None)
+        .submit_request(
+            victim,
+            SubmitRequest::new("patient john doe ssn 123-45-6789 needs dosage review").priority(PriorityTier::Primary),
+        )
         .expect("victim admitted");
     let victim_private = match out.decision.target() {
         Some(id) => preset_personal_group().iter().find(|i| i.id == id).map(|i| i.privacy >= 0.9).unwrap_or(false),

@@ -7,6 +7,12 @@
 //! that was active, where the request ran, and whether sanitization was
 //! applied. Exportable as JSON.
 //!
+//! Each entry carries the same typed [`AuditReason`] that resolves the
+//! caller's ticket and labels the `requests_resolved` metric counter —
+//! audit, outcome and metrics share one source of truth, so the
+//! [`AuditLog::sheds`] / [`AuditLog::cancellations`] views are derived from
+//! the enum rather than from string prefixes.
+//!
 //! Append-only and thread-safe: submitters on `Arc<Orchestrator>` append
 //! under one short mutex; queries take a snapshot. The invariant the
 //! concurrency stress test pins down: exactly one entry per admitted
@@ -15,6 +21,7 @@
 use std::sync::Mutex;
 
 use crate::config::json::Json;
+use crate::server::resolution::AuditReason;
 use crate::types::IslandId;
 
 /// One audited decision.
@@ -28,6 +35,11 @@ pub struct AuditEntry {
     pub island: Option<IslandId>,
     pub island_privacy: Option<f64>,
     pub sanitized: bool,
+    /// Typed terminal state — shared verbatim with the caller's `Outcome`
+    /// and the `requests_resolved{outcome,reason}` metric label.
+    pub reason: AuditReason,
+    /// Human-readable detail for non-served entries (why exactly, with
+    /// request-specific numbers). `None` for served requests.
     pub reject_reason: Option<String>,
     /// How many times the request was re-routed after its island died
     /// between routing and execution. 0 = first-choice island served it;
@@ -38,12 +50,11 @@ pub struct AuditEntry {
 }
 
 impl AuditEntry {
-    /// Entry for a request shed at the admission queue (queue full or
-    /// deadline expired while queued): it consumed a request id but was
-    /// never routed, so there is no island and MIST never ran (`s_r` is
-    /// recorded as 0.0). `reason` should carry the `"shed: "` prefix so
-    /// [`AuditLog::sheds`] can scope compliance queries to shed traffic.
-    pub fn shed(request_id: u64, user: &str, t_ms: f64, reason: &str) -> AuditEntry {
+    /// Entry for a request that terminated before it was ever routed (shed
+    /// at the admission queue, cancelled while queued, invalid, or orphaned
+    /// by a panic/shutdown): it consumed a request id but there is no
+    /// island and MIST never ran (`s_r` is recorded as 0.0).
+    pub fn unrouted(request_id: u64, user: &str, t_ms: f64, reason: AuditReason, detail: &str) -> AuditEntry {
         AuditEntry {
             request_id,
             user: user.to_string(),
@@ -52,7 +63,8 @@ impl AuditEntry {
             island: None,
             island_privacy: None,
             sanitized: false,
-            reject_reason: Some(reason.to_string()),
+            reason,
+            reject_reason: Some(detail.to_string()),
             failovers: 0,
         }
     }
@@ -117,33 +129,21 @@ impl AuditLog {
         self.entries.lock().unwrap().iter().map(|e| e.failovers as u64).sum()
     }
 
-    /// Entries for requests shed at the admission queue (queue-full and
-    /// deadline-expired rejects; see [`AuditEntry::shed`]). The queue stress
-    /// test pins "every shed request leaves exactly one audit entry" on this
-    /// view.
+    /// Entries for requests shed before reaching an island (queue-full,
+    /// queued-deadline, invalid, panic/shutdown orphans) — derived from the
+    /// typed reason, not a string prefix. The queue stress test pins "every
+    /// shed request leaves exactly one audit entry" on this view.
     pub fn sheds(&self) -> Vec<AuditEntry> {
-        self.entries
-            .lock()
-            .unwrap()
-            .iter()
-            .filter(|e| e.reject_reason.as_deref().map(|r| r.starts_with("shed:")).unwrap_or(false))
-            .cloned()
-            .collect()
+        self.entries.lock().unwrap().iter().filter(|e| e.reason.is_shed()).cloned().collect()
     }
 
     /// Entries for cancelled requests (caller cancel or a deadline expiring
-    /// mid-decode). Scoped by the `cancelled:` reason prefix so they stay
-    /// out of [`sheds`](Self::sheds): a cancelled request may have executed
-    /// partially on an island and been charged for decoded tokens, while a
-    /// shed never ran at all.
+    /// mid-decode). Typed as [`crate::server::Resolution::Cancelled`], so
+    /// they stay disjoint from [`sheds`](Self::sheds): a cancelled request
+    /// may have executed partially on an island and been charged for
+    /// decoded tokens, while a shed never ran at all.
     pub fn cancellations(&self) -> Vec<AuditEntry> {
-        self.entries
-            .lock()
-            .unwrap()
-            .iter()
-            .filter(|e| e.reject_reason.as_deref().map(|r| r.starts_with("cancelled:")).unwrap_or(false))
-            .cloned()
-            .collect()
+        self.entries.lock().unwrap().iter().filter(|e| e.reason.is_cancelled()).cloned().collect()
     }
 
     /// Export as a JSON array (regulator-facing artifact).
@@ -162,6 +162,8 @@ impl AuditLog {
                         ("island", e.island.map(|i| Json::num(i.0 as f64)).unwrap_or(Json::Null)),
                         ("island_privacy", e.island_privacy.map(Json::num).unwrap_or(Json::Null)),
                         ("sanitized", Json::Bool(e.sanitized)),
+                        ("outcome", Json::str(e.reason.class())),
+                        ("reason", Json::str(e.reason.reason())),
                         ("reject_reason", e.reject_reason.as_deref().map(Json::str).unwrap_or(Json::Null)),
                         ("failovers", Json::num(e.failovers as f64)),
                     ])
@@ -174,6 +176,7 @@ impl AuditLog {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::server::resolution::{CancelPoint, FailReason, Resolution, ShedReason};
 
     fn entry(id: u64, s_r: f64, island: Option<(u32, f64)>) -> AuditEntry {
         AuditEntry {
@@ -184,6 +187,7 @@ mod tests {
             island: island.map(|(i, _)| IslandId(i)),
             island_privacy: island.map(|(_, p)| p),
             sanitized: false,
+            reason: if island.is_none() { Resolution::Failed(FailReason::FailClosed) } else { Resolution::Served },
             reject_reason: if island.is_none() { Some("fail-closed".into()) } else { None },
             failovers: 0,
         }
@@ -219,17 +223,32 @@ mod tests {
         let text = j.to_string();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.idx(0).get("request_id").as_i64(), Some(1));
+        assert_eq!(back.idx(0).get("outcome").as_str(), Some("served"));
         assert_eq!(back.idx(1).get("island"), &Json::Null);
+        assert_eq!(back.idx(1).get("outcome").as_str(), Some("failed"));
+        assert_eq!(back.idx(1).get("reason").as_str(), Some("fail_closed"));
         assert_eq!(back.idx(1).get("reject_reason").as_str(), Some("fail-closed"));
     }
 
     #[test]
-    fn shed_entries_are_scoped_by_prefix() {
+    fn shed_entries_are_scoped_by_typed_reason() {
         let log = AuditLog::new();
         log.record(entry(1, 0.5, Some((0, 1.0))));
-        log.record(AuditEntry::shed(2, "alice", 10.0, "shed: admission queue full (8 queued, fail-closed)"));
+        log.record(AuditEntry::unrouted(
+            2,
+            "alice",
+            10.0,
+            Resolution::Shed(ShedReason::QueueFull),
+            "shed: admission queue full (8 queued, fail-closed)",
+        ));
         log.record(entry(3, 0.9, None)); // plain fail-closed reject, not a shed
-        log.record(AuditEntry::shed(4, "bob", 20.0, "shed: deadline expired after 512 ms in queue"));
+        log.record(AuditEntry::unrouted(
+            4,
+            "bob",
+            20.0,
+            Resolution::Shed(ShedReason::DeadlineExpired),
+            "shed: deadline expired after 512 ms in queue",
+        ));
         let sheds = log.sheds();
         assert_eq!(sheds.iter().map(|e| e.request_id).collect::<Vec<_>>(), vec![2, 4]);
         assert!(sheds.iter().all(|e| e.island.is_none() && e.s_r == 0.0 && e.failovers == 0));
@@ -238,14 +257,30 @@ mod tests {
     }
 
     #[test]
-    fn cancellations_are_scoped_by_prefix_and_disjoint_from_sheds() {
+    fn cancellations_are_scoped_by_typed_reason_and_disjoint_from_sheds() {
         let log = AuditLog::new();
         log.record(entry(1, 0.5, Some((0, 1.0))));
-        log.record(AuditEntry::shed(2, "alice", 10.0, "shed: admission queue full (8 queued, fail-closed)"));
+        log.record(AuditEntry::unrouted(
+            2,
+            "alice",
+            10.0,
+            Resolution::Shed(ShedReason::QueueFull),
+            "shed: admission queue full (8 queued, fail-closed)",
+        ));
         let mut cancelled = entry(3, 0.4, Some((1, 1.0)));
+        cancelled.reason = Resolution::Cancelled(CancelPoint::DeadlineMidDecode);
         cancelled.reject_reason = Some("cancelled: deadline expired mid-decode after 24/512 tokens".into());
         log.record(cancelled);
-        assert_eq!(log.cancellations().iter().map(|e| e.request_id).collect::<Vec<_>>(), vec![3]);
+        // a cancelled-while-queued entry is a cancellation, never a shed,
+        // even though it uses the unrouted constructor
+        log.record(AuditEntry::unrouted(
+            5,
+            "bob",
+            30.0,
+            Resolution::Cancelled(CancelPoint::WhileQueued),
+            "cancelled: by caller after 12 ms in queue, before routing",
+        ));
+        assert_eq!(log.cancellations().iter().map(|e| e.request_id).collect::<Vec<_>>(), vec![3, 5]);
         assert_eq!(log.sheds().iter().map(|e| e.request_id).collect::<Vec<_>>(), vec![2]);
         // a mid-decode cancel ran on an island — the entry keeps it
         assert_eq!(log.cancellations()[0].island, Some(IslandId(1)));

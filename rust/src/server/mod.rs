@@ -10,11 +10,13 @@ pub mod audit;
 pub mod orchestrator;
 pub mod queue;
 pub mod ratelimit;
+pub mod resolution;
 pub mod session;
 pub mod ticket;
 
-pub use orchestrator::{Backend, BatchItem, IslandSnapshot, Orchestrator, Outcome};
+pub use orchestrator::{Backend, IslandSnapshot, Orchestrator, Outcome};
 pub use queue::SubmitRequest;
 pub use ratelimit::RateLimiter;
+pub use resolution::{AuditReason, CancelPoint, FailReason, Resolution, ShedReason};
 pub use session::{Session, SessionStore};
 pub use ticket::{Ticket, TokenEvent, TokenStream};

@@ -23,15 +23,25 @@
 //! (`rejected_queue_full`), and requests whose deadline expired while
 //! queued are shed at drain time (`shed_deadline_expired`) — both audited.
 //!
-//! The blocking [`Orchestrator::submit`] / [`Orchestrator::submit_many`]
-//! shims remain for compatibility and delegate to the same pipeline; both
-//! take `&self`, so any number of threads can drive the orchestrator
-//! through `Arc<Orchestrator>`. Request ids come from an atomic counter;
-//! sessions live in an `RwLock`-sharded store; metrics, the cost ledger and
-//! the audit log are internally synchronized; the hysteresis state machine
-//! and the per-user rate limiter sit behind short mutexes.
+//! The blocking [`Orchestrator::submit_request`] /
+//! [`Orchestrator::submit_many_requests`] calls delegate to the same
+//! pipeline; all entry points take `&self`, so any number of threads can
+//! drive the orchestrator through `Arc<Orchestrator>`. Request ids come
+//! from an atomic counter; sessions live in an `RwLock`-sharded store;
+//! metrics, the cost ledger and the audit log are internally synchronized;
+//! the hysteresis state machine and the per-user rate limiter sit behind
+//! short mutexes.
 //!
-//! Batching: both the queue drain and `submit_many` route first, then group
+//! Telemetry: every per-request metric bump goes through the pre-registered
+//! typed handles in [`ServingMetrics`] — atomic adds on cached cells, zero
+//! name lookups on the hot path — and every resolved request id leaves one
+//! typed [`Resolution`] in three places that can never disagree: the
+//! [`Outcome`], the audit entry, and the `requests_resolved{outcome,reason}`
+//! counter. Each resolution also appends one structured [`RequestEvent`]
+//! (lifecycle timestamps, island, tier, failovers, sanitization counts) to
+//! the bounded [`Orchestrator::analytics`] ring.
+//!
+//! Batching: both the queue drain and `submit_many_requests` route first, then group
 //! co-routed requests per island by the live [`BatchPolicy`] — because the
 //! queue drain batches whatever is parked, coalescing happens across
 //! sessions (the fleet-scale batching story, not per-call-scale). What a
@@ -71,10 +81,12 @@ use crate::runtime::{chunk_by_policy, BatchMode, BatchPolicy, StepLanes};
 use crate::server::audit::{AuditEntry, AuditLog};
 use crate::server::queue::{AdmissionQueue, QueueItem, SubmitRequest};
 use crate::server::ratelimit::RateLimiter;
+use crate::server::resolution::{CancelPoint, FailReason, Resolution, ShedReason};
 use crate::server::session::SessionStore;
 use crate::server::ticket::{Ticket, TicketCell};
-use crate::telemetry::Metrics;
-use crate::types::{Island, IslandId, PriorityTier, Request};
+use crate::telemetry::serving::IslandCells;
+use crate::telemetry::{EventLog, Metrics, RequestEvent, ServingMetrics};
+use crate::types::{Island, IslandId, Request};
 use crate::util::AtomicF64;
 
 /// Execution backend.
@@ -101,19 +113,22 @@ pub struct Outcome {
     /// budget for served requests; smaller for cancelled ones (the ledger
     /// charges exactly these); 0 for rejects and sheds.
     pub tokens_generated: usize,
-    /// The request was cancelled — by the caller ([`Ticket::cancel`]) or by
-    /// its deadline expiring mid-decode — after consuming a request id.
-    /// `cost`/`tokens_generated` reflect any partial decode that was
-    /// charged; the audit entry carries a `cancelled:` reject reason.
-    pub cancelled: bool,
+    /// How the request terminated: served, shed, cancelled, or failed —
+    /// the same typed [`Resolution`] the audit entry and the
+    /// `requests_resolved{outcome,reason}` counter carry. For cancelled
+    /// requests, `cost`/`tokens_generated` reflect any partial decode that
+    /// was charged.
+    pub resolution: Resolution,
 }
 
-/// One item of a batched submission (see [`Orchestrator::submit_many`]).
-#[derive(Clone, Debug)]
-pub struct BatchItem<'a> {
-    pub prompt: &'a str,
-    pub priority: PriorityTier,
-    pub dataset: Option<&'a str>,
+impl Outcome {
+    /// The request was cancelled — by the caller ([`Ticket::cancel`]) or by
+    /// its deadline expiring mid-decode — after consuming a request id.
+    /// Accessor shim over [`Outcome::resolution`] for callers of the old
+    /// `cancelled: bool` field.
+    pub fn cancelled(&self) -> bool {
+        self.resolution.is_cancelled()
+    }
 }
 
 /// Point-in-time public view of one island: the narrow read surface that
@@ -158,6 +173,26 @@ struct Prepared {
     /// failover hop attempt; lands in the audit entry and must equal the
     /// per-request contribution to the `failovers` metric).
     failovers: u32,
+    /// Trust-tier label of the currently routed island (re-resolved on
+    /// failover re-routes, like `cells`).
+    tier: &'static str,
+    /// Cached per-island metric cells for the routed target, so resolution
+    /// bumps the labeled `island_latency_ms`/`served_by_island` series
+    /// without any map lookup.
+    cells: Arc<IslandCells>,
+    /// Conversation turns rewritten by sanitization for this request,
+    /// summed across failover re-sanitizations (analytics event field).
+    sanitized_turns: u64,
+    /// When the request entered the admission queue (`NaN` on the blocking
+    /// path, which never queues).
+    enqueued_ms: f64,
+    /// When routing completed (== `now`).
+    routed_ms: f64,
+    /// When prefill started on the serving island (`NaN` until execution).
+    prefill_ms: f64,
+    /// When the first decoded tokens reached the ticket (`NaN` on
+    /// non-streaming paths).
+    first_token_ms: f64,
 }
 
 /// Terminal state of the failure-aware execution loop.
@@ -224,6 +259,14 @@ pub struct Orchestrator {
     pub sessions: SessionStore,
     pub ledger: CostLedger,
     pub metrics: Metrics,
+    /// Pre-registered typed handles into `metrics` for every serving-path
+    /// series: the hot path bumps these cached atomic cells directly
+    /// instead of resolving names per request.
+    serving: ServingMetrics,
+    /// Per-request analytics: one structured [`RequestEvent`] per resolved
+    /// request id, in a bounded ring with JSONL export
+    /// ([`EventLog::to_jsonl`]).
+    pub analytics: EventLog,
     /// §XIV compliance audit trail of every decision (incl. rejections).
     /// Behind an `Arc` so queue workers can still audit sheds for batches
     /// they popped even if the orchestrator is dropped mid-drain (no id may
@@ -279,6 +322,8 @@ impl Orchestrator {
         for island in initial {
             let _ = lighthouse.register_owned(island, 0.0);
         }
+        let metrics = Metrics::new();
+        let serving = ServingMetrics::register(&metrics);
         Orchestrator {
             waves: Waves::new(config),
             mist,
@@ -287,7 +332,9 @@ impl Orchestrator {
             hysteresis: Mutex::new(hysteresis),
             sessions: SessionStore::new(seed),
             ledger: CostLedger::new(),
-            metrics: Metrics::new(),
+            metrics,
+            serving,
+            analytics: EventLog::default(),
             audit: Arc::new(AuditLog::new()),
             limiter: Mutex::new(limiter),
             next_request_id: AtomicU64::new(1),
@@ -442,7 +489,7 @@ impl Orchestrator {
         match self.sim_fleet() {
             Some(fleet) if fleet.crash(id) => {
                 self.lighthouse.mark_offline(id);
-                self.metrics.count("island_crashes", 1);
+                self.serving.island_crashes.inc();
                 true
             }
             _ => false,
@@ -464,7 +511,7 @@ impl Orchestrator {
                 self.lighthouse.beat(id, fleet.now());
                 self.lighthouse.set_degraded(id, false);
                 self.degrade.lock().unwrap().remove(&id);
-                self.metrics.count("island_revives", 1);
+                self.serving.island_revives.inc();
                 true
             }
             _ => false,
@@ -479,7 +526,7 @@ impl Orchestrator {
                 // re-joins after a leave are fresh registrations
                 let _ = self.lighthouse.deregister(island.id);
                 let _ = self.lighthouse.register_owned(island, fleet.now());
-                self.metrics.count("island_joins", 1);
+                self.serving.island_joins.inc();
                 true
             }
             _ => false,
@@ -492,7 +539,7 @@ impl Orchestrator {
         let island = fleet.leave(id)?;
         let _ = self.lighthouse.deregister(id);
         self.degrade.lock().unwrap().remove(&id);
-        self.metrics.count("island_leaves", 1);
+        self.serving.island_leaves.inc();
         Some(island)
     }
 
@@ -525,7 +572,11 @@ impl Orchestrator {
             let is = det.observe(s.capacity);
             if is != was {
                 self.lighthouse.set_degraded(s.island.id, is);
-                self.metrics.count(if is { "islands_degraded" } else { "islands_recovered" }, 1);
+                if is {
+                    self.serving.islands_degraded.inc();
+                } else {
+                    self.serving.islands_recovered.inc();
+                }
             }
         }
     }
@@ -591,10 +642,89 @@ impl Orchestrator {
             .ok_or_else(|| anyhow::anyhow!("unknown session {session_id}"))?;
         let now = self.now_ms();
         if !self.limiter.lock().unwrap().admit(&user, now) {
-            self.metrics.count("rate_limited", 1);
+            self.serving.rate_limited.inc();
             anyhow::bail!("rate limited: user {user}");
         }
         Ok(user)
+    }
+
+    /// Record one terminal resolution: exactly one
+    /// `requests_resolved{outcome,reason}` bump and one analytics event per
+    /// consumed request id, at the site that constructed the final
+    /// outcome/audit entry.
+    fn record_resolution(&self, res: Resolution, ev: RequestEvent) {
+        self.serving.resolved.of(res).inc();
+        self.analytics.push(ev);
+    }
+
+    /// Analytics event for a request that resolved without routing evidence
+    /// (sheds, fail-closed rejects, queue-time cancels, shutdown).
+    fn unrouted_event(
+        &self,
+        res: Resolution,
+        id: u64,
+        user: &str,
+        s_r: f64,
+        enqueued_ms: f64,
+        failovers: u32,
+    ) -> RequestEvent {
+        RequestEvent {
+            request_id: id,
+            user: user.to_string(),
+            outcome: res.class(),
+            reason: res.reason(),
+            island: None,
+            tier: None,
+            privacy: None,
+            s_r,
+            failovers,
+            sanitized: false,
+            sanitized_turns: 0,
+            enqueued_ms,
+            routed_ms: f64::NAN,
+            prefill_ms: f64::NAN,
+            first_token_ms: f64::NAN,
+            resolved_ms: self.now_ms(),
+            tokens_generated: 0,
+            latency_ms: f64::NAN,
+            cost_usd: 0.0,
+        }
+    }
+
+    /// Analytics event for a request that was routed ([`Prepared`]):
+    /// carries the island/tier/privacy labels and the lifecycle timestamps
+    /// accumulated so far. `routed` gates the island evidence — exhausted
+    /// failovers resolve with no island, like their audit entry.
+    fn prepared_event(
+        &self,
+        p: &Prepared,
+        res: Resolution,
+        routed: bool,
+        tokens: usize,
+        latency_ms: f64,
+        cost: f64,
+    ) -> RequestEvent {
+        RequestEvent {
+            request_id: p.id,
+            user: p.user.clone(),
+            outcome: res.class(),
+            reason: res.reason(),
+            island: if routed { Some(p.routed.target.to_string()) } else { None },
+            tier: if routed { Some(p.tier) } else { None },
+            privacy: if routed { Some(p.routed.target_privacy) } else { None },
+            s_r: p.s_r,
+            failovers: p.failovers,
+            sanitized: p.sanitized,
+            sanitized_turns: p.sanitized_turns,
+            enqueued_ms: p.enqueued_ms,
+            routed_ms: p.routed_ms,
+            prefill_ms: p.prefill_ms,
+            first_token_ms: p.first_token_ms,
+            resolved_ms: self.now_ms(),
+            tokens_generated: tokens as u32,
+            latency_ms,
+            cost_usd: cost,
+        }
     }
 
     /// Admission + MIST + TIDE + WAVES + sanitize for one submission:
@@ -607,7 +737,8 @@ impl Orchestrator {
         if let Err(why) = sr.validate() {
             return Ok(Err(self.reject_invalid(id, &user, &why)));
         }
-        self.prepare_admitted(id, session_id, user, sr)
+        // the blocking path never queues: no enqueue timestamp
+        self.prepare_admitted(id, session_id, user, sr, f64::NAN)
     }
 
     /// Audited fail-closed rejection for a degenerate [`SubmitRequest`]
@@ -615,9 +746,11 @@ impl Orchestrator {
     /// so it sheds like any other — one audit entry, zero cost — instead of
     /// entering the pipeline with a budget no island could ever satisfy.
     fn reject_invalid(&self, id: u64, user: &str, why: &str) -> Outcome {
-        self.metrics.count("rejected_invalid_request", 1);
+        let res = Resolution::Shed(ShedReason::InvalidRequest);
+        self.serving.rejected_invalid_request.inc();
         let reason = format!("shed: invalid request: {why}");
-        self.audit.record(AuditEntry::shed(id, user, self.now_ms(), &reason));
+        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason));
+        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, f64::NAN, 0));
         Outcome {
             request_id: id,
             s_r: 0.0,
@@ -627,7 +760,7 @@ impl Orchestrator {
             response: String::new(),
             sanitized: false,
             tokens_generated: 0,
-            cancelled: false,
+            resolution: res,
         }
     }
 
@@ -642,6 +775,7 @@ impl Orchestrator {
         session_id: u64,
         user: String,
         sr: &SubmitRequest,
+        enqueued_ms: f64,
     ) -> anyhow::Result<Result<Prepared, Outcome>> {
         let now = self.now_ms();
         let Some((history, prev_privacy)) =
@@ -665,12 +799,12 @@ impl Orchestrator {
         let report = self.mist.analyze(&request);
         let s_r = report.score.max(sr.sensitivity_floor.unwrap_or(0.0)).clamp(0.0, 1.0);
         request.sensitivity = Some(s_r);
-        self.metrics.observe("mist_s_r", s_r);
+        self.serving.mist_s_r.observe(s_r);
 
         // TIDE capacity (Alg. 1 line 2) + LIGHTHOUSE liveness + hysteresis
         let (states, local_capacity) = self.routing_view();
         let pref = self.hysteresis.lock().unwrap().observe(local_capacity);
-        self.metrics.gauge("local_capacity", local_capacity);
+        self.serving.local_capacity.set(local_capacity);
 
         // WAVES decision (Alg. 1)
         let budget_left = self.ledger.remaining(&user, self.budget_ceiling);
@@ -678,22 +812,25 @@ impl Orchestrator {
 
         let routed = match decision.routed() {
             None => {
-                self.metrics.count("rejected_fail_closed", 1);
+                let res = Resolution::Failed(FailReason::FailClosed);
+                self.serving.rejected_fail_closed.inc();
                 let reason = match &decision {
                     Decision::Reject { reason } => Some(reason.clone()),
                     _ => None,
                 };
                 self.audit.record(AuditEntry {
                     request_id: id,
-                    user,
+                    user: user.clone(),
                     t_ms: now,
                     s_r,
                     island: None,
                     island_privacy: None,
                     sanitized: false,
+                    reason: res,
                     reject_reason: reason,
                     failovers: 0,
                 });
+                self.record_resolution(res, self.unrouted_event(res, id, &user, s_r, enqueued_ms, 0));
                 return Ok(Err(Outcome {
                     request_id: id,
                     s_r,
@@ -703,11 +840,15 @@ impl Orchestrator {
                     response: String::new(),
                     sanitized: false,
                     tokens_generated: 0,
-                    cancelled: false,
+                    resolution: res,
                 }));
             }
             Some(r) => r.clone(),
         };
+
+        // resolve the routed island's tier label + cached metric cells once
+        // at routing time — resolution-time bumps are then pure atomics
+        let (tier, cells) = self.island_telemetry(&states, &routed);
 
         // Sanitize on trust-boundary crossing (Alg. 1 lines 14-17)
         let mut prepared = Prepared {
@@ -722,9 +863,26 @@ impl Orchestrator {
             sanitized_at: None,
             now,
             failovers: 0,
+            tier,
+            cells,
+            sanitized_turns: 0,
+            enqueued_ms,
+            routed_ms: now,
+            prefill_ms: f64::NAN,
+            first_token_ms: f64::NAN,
         };
         self.sanitize_for_target(&mut prepared)?;
         Ok(Ok(prepared))
+    }
+
+    /// Tier label + cached per-island metric cells for a routing target.
+    fn island_telemetry(&self, states: &[IslandState], routed: &Routed) -> (&'static str, Arc<IslandCells>) {
+        let tier = states
+            .iter()
+            .find(|s| s.island.id == routed.target)
+            .map(|s| s.island.tier.name())
+            .unwrap_or("unknown");
+        (tier, self.serving.island(routed.target.0, tier, routed.target_privacy))
     }
 
     /// Sanitize the request history + outgoing prompt for the currently
@@ -773,14 +931,15 @@ impl Orchestrator {
         p.request.prompt = wire.prompt;
         if !p.sanitized {
             // one per request that sanitized, however many failover hops
-            self.metrics.count("sanitized_requests", 1);
+            self.serving.sanitized_requests.inc();
         }
         // real per-turn work: texts scanned + spliced this pass (delta
         // turns, respliced cached turns, the prompt) vs turns served
         // straight from the per-level cache
-        self.metrics.count("sanitized_turns", wire.transformed as u64);
+        self.serving.sanitized_turns.add(wire.transformed as u64);
+        p.sanitized_turns += wire.transformed as u64;
         if wire.reused > 0 {
-            self.metrics.count("sanitized_turns_reused", wire.reused as u64);
+            self.serving.sanitized_turns_reused.add(wire.reused as u64);
         }
         p.sanitized = true;
         p.sanitized_at = Some(target_privacy);
@@ -792,6 +951,7 @@ impl Orchestrator {
     /// `failovers` carries any hops already counted in the `failovers`
     /// metric, keeping Σ audit.failovers == the metric even on this path.
     fn audit_vanished(&self, id: u64, user: &str, now: f64, s_r: f64, reason: &str, failovers: u32) {
+        let res = Resolution::Failed(FailReason::SessionClosed);
         self.audit.record(AuditEntry {
             request_id: id,
             user: user.to_string(),
@@ -800,16 +960,19 @@ impl Orchestrator {
             island: None,
             island_privacy: None,
             sanitized: false,
+            reason: res,
             reject_reason: Some(reason.to_string()),
             failovers,
         });
+        self.record_resolution(res, self.unrouted_event(res, id, user, s_r, f64::NAN, failovers));
     }
 
     /// Audit trail entry for a request that was admitted and routed but
     /// failed at execution — without this, failed executions would consume
     /// request ids yet vanish from the §XIV compliance trail.
     fn audit_execution_failure(&self, p: &Prepared, err: &anyhow::Error) {
-        self.metrics.count("execution_failed", 1);
+        let res = Resolution::Failed(FailReason::ExecutionError);
+        self.serving.execution_failed.inc();
         self.audit.record(AuditEntry {
             request_id: p.id,
             user: p.user.clone(),
@@ -818,27 +981,33 @@ impl Orchestrator {
             island: Some(p.routed.target),
             island_privacy: Some(p.routed.target_privacy),
             sanitized: p.sanitized,
+            reason: res,
             reject_reason: Some(format!("execution failed: {err}")),
             failovers: p.failovers,
         });
+        self.record_resolution(res, self.prepared_event(p, res, true, 0, f64::NAN, 0.0));
     }
 
     /// Audit + metrics + fail-closed Outcome for a request whose failover
     /// retry budget ran out: the request is *rejected*, never silently
     /// lost — exactly one audit entry, zero cost charged.
     fn finish_exhausted(&self, p: Prepared, reason: String) -> Outcome {
-        self.metrics.count("rejected_failover_exhausted", 1);
+        let res = Resolution::Failed(FailReason::FailoverExhausted);
+        self.serving.rejected_failover_exhausted.inc();
         self.audit.record(AuditEntry {
             request_id: p.id,
-            user: p.user,
+            user: p.user.clone(),
             t_ms: p.now,
             s_r: p.s_r,
             island: None,
             island_privacy: None,
             sanitized: p.sanitized,
+            reason: res,
             reject_reason: Some(reason.clone()),
             failovers: p.failovers,
         });
+        // no island in the event either: every candidate it touched died
+        self.record_resolution(res, self.prepared_event(&p, res, false, 0, f64::NAN, 0.0));
         Outcome {
             request_id: p.id,
             s_r: p.s_r,
@@ -848,7 +1017,7 @@ impl Orchestrator {
             response: String::new(),
             sanitized: p.sanitized,
             tokens_generated: 0,
-            cancelled: false,
+            resolution: res,
         }
     }
 
@@ -870,6 +1039,7 @@ impl Orchestrator {
             raw_response
         };
 
+        let res = Resolution::Served;
         self.audit.record(AuditEntry {
             request_id: p.id,
             user: p.user.clone(),
@@ -878,16 +1048,21 @@ impl Orchestrator {
             island: Some(p.routed.target),
             island_privacy: Some(p.routed.target_privacy),
             sanitized: p.sanitized,
+            reason: res,
             reject_reason: None,
             failovers: p.failovers,
         });
         if p.failovers > 0 {
-            self.metrics.count("failover_successes", 1);
+            self.serving.failover_successes.inc();
         }
         self.ledger.charge(&p.user, cost);
-        self.metrics.count("requests_served", 1);
-        self.metrics.observe("latency_ms", latency_ms);
-        self.metrics.observe("cost_usd", cost.max(1e-9));
+        self.serving.requests_served.inc();
+        self.serving.latency_ms.observe(latency_ms);
+        self.serving.cost_usd.observe(cost.max(1e-9));
+        // per-island labeled series through the cells cached at route time
+        p.cells.served.inc();
+        p.cells.latency_ms.observe(latency_ms);
+        self.record_resolution(res, self.prepared_event(&p, res, true, tokens_generated, latency_ms, cost));
 
         Outcome {
             request_id: p.id,
@@ -898,7 +1073,7 @@ impl Orchestrator {
             response,
             sanitized: p.sanitized,
             tokens_generated,
-            cancelled: false,
+            resolution: res,
         }
     }
 
@@ -933,6 +1108,9 @@ impl Orchestrator {
     /// to the configured retry budget. Each hop is recorded in per-island
     /// failover metrics and lands in the request's single audit entry.
     fn execute_with_failover(&self, p: &mut Prepared) -> ExecEnd {
+        if p.prefill_ms.is_nan() {
+            p.prefill_ms = self.now_ms();
+        }
         loop {
             let down_reason = match self.execute_once(p) {
                 Ok((latency, cost, text, tokens)) => return ExecEnd::Done(latency, cost, text, tokens),
@@ -945,8 +1123,8 @@ impl Orchestrator {
             // counter holds even for budget-exhausted requests.
             let dead = p.routed.target;
             self.lighthouse.mark_offline(dead);
-            self.metrics.count("failovers", 1);
-            self.metrics.count(&format!("failover_from_island_{}", dead.0), 1);
+            self.serving.failovers.inc();
+            self.serving.failover_from(dead.0).inc();
             p.failovers += 1;
             if p.failovers > self.retry_budget {
                 return ExecEnd::Exhausted {
@@ -965,6 +1143,11 @@ impl Orchestrator {
                 Some(r) => {
                     p.routed = r.clone();
                     p.decision = decision.clone();
+                    // the hop changed the serving island: re-resolve the
+                    // tier label + cached metric cells alongside it
+                    let (tier, cells) = self.island_telemetry(&states, &p.routed);
+                    p.tier = tier;
+                    p.cells = cells;
                     // a failover hop may cross a trust boundary the first
                     // island did not — sanitize before retrying.
                     // sanitize_for_target audits its own failure, so this
@@ -1000,28 +1183,6 @@ impl Orchestrator {
         }
     }
 
-    /// Blocking compatibility shim over [`submit_request`]
-    /// (positional-argument form; cannot express the full
-    /// [`SubmitRequest`] surface — deadline, sensitivity floor,
-    /// jurisdiction floor, model pin, token budget). Prefer
-    /// [`Orchestrator::enqueue`] (non-blocking, queue-scheduled,
-    /// cross-session batching) or [`submit_request`] for new code.
-    ///
-    /// [`submit_request`]: Orchestrator::submit_request
-    pub fn submit(
-        &self,
-        session_id: u64,
-        prompt: &str,
-        priority: PriorityTier,
-        dataset: Option<&str>,
-    ) -> anyhow::Result<Outcome> {
-        let mut sr = SubmitRequest::new(prompt).priority(priority);
-        if let Some(ds) = dataset {
-            sr = sr.dataset(ds);
-        }
-        self.submit_request(session_id, sr)
-    }
-
     /// Submit one typed request within a session and block until it
     /// completes (Fig. 2 pipeline, caller's thread). Returns Err for
     /// rate-limited submissions, Ok(Outcome) otherwise — including
@@ -1043,26 +1204,6 @@ impl Orchestrator {
                 self.sessions.with_mut(session_id, |s| s.record_turn(&sr.prompt, &outcome.response, r.target_privacy));
         }
         Ok(outcome)
-    }
-
-    /// Blocking compatibility shim over [`submit_many_requests`]
-    /// (borrowed-item form). Prefer [`Orchestrator::enqueue`] for new code:
-    /// the queue drain coalesces co-routed requests across *all* sessions
-    /// and submitters, not just within one call's batch.
-    ///
-    /// [`submit_many_requests`]: Orchestrator::submit_many_requests
-    pub fn submit_many(&self, session_id: u64, items: &[BatchItem<'_>]) -> Vec<anyhow::Result<Outcome>> {
-        let subs: Vec<SubmitRequest> = items
-            .iter()
-            .map(|item| {
-                let mut sr = SubmitRequest::new(item.prompt).priority(item.priority);
-                if let Some(ds) = item.dataset {
-                    sr = sr.dataset(ds);
-                }
-                sr
-            })
-            .collect();
-        self.submit_many_requests(session_id, subs)
     }
 
     /// Submit a batch of typed requests for one session. Each item is
@@ -1131,8 +1272,8 @@ impl Orchestrator {
         let mut done: Vec<(K, anyhow::Result<Outcome>)> = Vec::new();
         for (island_id, group) in by_island {
             for chunk in chunk_by_policy(group, policy) {
-                self.metrics.count("batch_groups", 1);
-                self.metrics.observe("batch_group_size", chunk.len() as f64);
+                self.serving.batch_groups.inc();
+                self.serving.batch_group_size.observe(chunk.len() as f64);
                 match &self.backend {
                     Backend::Sim(_) => {
                         // the sim executes per request; co-routed grouping
@@ -1212,8 +1353,8 @@ impl Orchestrator {
         }
         let mut islands: Vec<IslandId> = Vec::with_capacity(by_island.len());
         for (island, group) in by_island {
-            self.metrics.count("batch_groups", 1);
-            self.metrics.observe("batch_group_size", group.len() as f64);
+            self.serving.batch_groups.inc();
+            self.serving.batch_group_size.observe(group.len() as f64);
             self.step_lanes.admit(island, group);
             islands.push(island);
         }
@@ -1234,7 +1375,8 @@ impl Orchestrator {
             self.drive_island_inner(island, &mut active)
         }));
         if drove.is_err() {
-            self.metrics.count("step_drive_panics", 1);
+            self.serving.step_drive_panics.inc();
+            let res = Resolution::Shed(ShedReason::WorkerPanic);
             let now = self.now_ms();
             let orphans = active.drain(..).map(|a| a.job).chain(self.step_lanes.fail_pending(island));
             for job in orphans {
@@ -1245,9 +1387,15 @@ impl Orchestrator {
                 if job.key.ticket.resolve(Err("internal error: island step loop panicked".to_string()))
                     && !self.audit.contains(job.prepared.id)
                 {
-                    let entry =
-                        AuditEntry::shed(job.prepared.id, &job.prepared.user, now, "shed: island step loop panicked");
+                    let entry = AuditEntry::unrouted(
+                        job.prepared.id,
+                        &job.prepared.user,
+                        now,
+                        res,
+                        "shed: island step loop panicked",
+                    );
                     self.audit.record(entry);
+                    self.record_resolution(res, self.prepared_event(&job.prepared, res, true, 0, f64::NAN, 0.0));
                 }
             }
         }
@@ -1280,8 +1428,8 @@ impl Orchestrator {
                 }
                 continue; // jobs arrived while winding down — keep driving
             }
-            self.metrics.observe("batch_occupancy", active.len() as f64);
-            self.metrics.gauge("steady_state_batch_occupancy", active.len() as f64);
+            self.serving.batch_occupancy.observe(active.len() as f64);
+            self.serving.steady_state_batch_occupancy.set(active.len() as f64);
             let chunk = policy.decode_chunk.max(1);
             let mut idx = 0;
             while idx < active.len() {
@@ -1308,7 +1456,8 @@ impl Orchestrator {
             self.cancel_before_execution(job);
             return;
         }
-        let StepJob { key, prepared } = job;
+        let StepJob { key, mut prepared } = job;
+        prepared.prefill_ms = self.now_ms();
         match fleet.prefill(prepared.routed.target, &prepared.request) {
             Ok(handle) => active.push(Active { job: StepJob { key, prepared }, handle }),
             Err(_) => self.settle_queued(key, self.run_prepared(prepared)),
@@ -1319,7 +1468,8 @@ impl Orchestrator {
     /// audited with the real MIST score and routing evidence, zero cost.
     fn cancel_before_execution(&self, job: StepJob) {
         let StepJob { key, prepared } = job;
-        self.metrics.count("cancelled_before_execution", 1);
+        let res = Resolution::Cancelled(CancelPoint::BeforeExecution);
+        self.serving.cancelled_before_execution.inc();
         let reason = "cancelled: by caller before execution".to_string();
         self.audit.record(AuditEntry {
             request_id: prepared.id,
@@ -1329,9 +1479,11 @@ impl Orchestrator {
             island: None,
             island_privacy: None,
             sanitized: prepared.sanitized,
+            reason: res,
             reject_reason: Some(reason.clone()),
             failovers: prepared.failovers,
         });
+        self.record_resolution(res, self.prepared_event(&prepared, res, false, 0, f64::NAN, 0.0));
         let outcome = Outcome {
             request_id: prepared.id,
             s_r: prepared.s_r,
@@ -1341,7 +1493,7 @@ impl Orchestrator {
             response: String::new(),
             sanitized: prepared.sanitized,
             tokens_generated: 0,
-            cancelled: true,
+            resolution: res,
         };
         self.settle_queued(key, Ok(outcome));
     }
@@ -1365,6 +1517,11 @@ impl Orchestrator {
             Err(_) => StepVerdict::IslandGone,
             Ok(n) => {
                 if n > 0 {
+                    if a.job.prepared.first_token_ms.is_nan() {
+                        // virtual decode cursor: when the first chunk's
+                        // tokens became available on the island's clock
+                        a.job.prepared.first_token_ms = a.handle.cursor_ms();
+                    }
                     let to = a.handle.tokens_decoded();
                     a.job.key.ticket.push_tokens(&format!("[sim:{} t{}..{}]", a.handle.island(), to - n, to));
                 }
@@ -1392,19 +1549,19 @@ impl Orchestrator {
                 self.settle_queued(key, Ok(out));
             }
             StepVerdict::CancelRequested => {
-                self.metrics.count("cancelled_mid_decode", 1);
+                self.serving.cancelled_mid_decode.inc();
                 let reason = format!("cancelled: by caller after {}/{} tokens", handle.tokens_decoded(), budget);
-                let out = self.finish_cancelled(prepared, &handle, reason);
+                let out = self.finish_cancelled(prepared, &handle, reason, CancelPoint::MidDecode);
                 self.settle_queued(key, Ok(out));
             }
             StepVerdict::DeadlineExpired => {
-                self.metrics.count("cancelled_deadline_mid_decode", 1);
+                self.serving.cancelled_deadline_mid_decode.inc();
                 let reason = format!(
                     "cancelled: deadline expired mid-decode after {}/{} tokens",
                     handle.tokens_decoded(),
                     budget
                 );
-                let out = self.finish_cancelled(prepared, &handle, reason);
+                let out = self.finish_cancelled(prepared, &handle, reason, CancelPoint::DeadlineMidDecode);
                 self.settle_queued(key, Ok(out));
             }
             StepVerdict::IslandGone => {
@@ -1423,7 +1580,8 @@ impl Orchestrator {
     /// decoded-token cost the handle accumulated — never the full budget.
     ///
     /// [`finish`]: Orchestrator::finish
-    fn finish_cancelled(&self, p: Prepared, handle: &DecodeHandle, reason: String) -> Outcome {
+    fn finish_cancelled(&self, p: Prepared, handle: &DecodeHandle, reason: String, point: CancelPoint) -> Outcome {
+        let res = Resolution::Cancelled(point);
         let report = handle.report();
         self.audit.record(AuditEntry {
             request_id: p.id,
@@ -1433,12 +1591,17 @@ impl Orchestrator {
             island: Some(p.routed.target),
             island_privacy: Some(p.routed.target_privacy),
             sanitized: p.sanitized,
+            reason: res,
             reject_reason: Some(reason),
             failovers: p.failovers,
         });
         self.ledger.charge(&p.user, report.cost);
-        self.metrics.count("requests_cancelled", 1);
-        self.metrics.observe("cancelled_tokens_decoded", handle.tokens_decoded() as f64);
+        self.serving.requests_cancelled.inc();
+        self.serving.cancelled_tokens_decoded.observe(handle.tokens_decoded() as f64);
+        self.record_resolution(
+            res,
+            self.prepared_event(&p, res, true, handle.tokens_decoded(), report.latency_ms, report.cost),
+        );
         Outcome {
             request_id: p.id,
             s_r: p.s_r,
@@ -1448,7 +1611,7 @@ impl Orchestrator {
             response: format!("[sim:{}] cancelled after {} tokens", p.routed.target, handle.tokens_decoded()),
             sanitized: p.sanitized,
             tokens_generated: handle.tokens_decoded(),
-            cancelled: true,
+            resolution: res,
         }
     }
 }
@@ -1499,8 +1662,8 @@ impl Orchestrator {
             Ok(depth) => {
                 // counted only for requests that actually entered the queue,
                 // so `enqueued` minus resolutions tracks in-flight depth
-                self.metrics.count("enqueued", 1);
-                self.metrics.gauge("queue_depth", depth as f64);
+                self.serving.enqueued.inc();
+                self.serving.queue_depth.set(depth as f64);
             }
             Err(item) => self.shed_queue_full(item),
         }
@@ -1545,7 +1708,7 @@ impl Orchestrator {
     /// the fleet-scale batching point).
     fn drain_batch(&self, batch: Vec<QueueItem>) {
         let now = self.now_ms();
-        self.metrics.gauge("queue_depth", self.queue.len() as f64);
+        self.serving.queue_depth.set(self.queue.len() as f64);
         let mut ready: Vec<(QueuedKey, Prepared)> = Vec::new();
         for item in batch {
             let QueueItem { id, session_id, user, mut submit, enqueued_ms, deadline_at_ms, ticket, .. } = item;
@@ -1558,13 +1721,13 @@ impl Orchestrator {
                 self.shed_expired(id, &user, &ticket, now - enqueued_ms);
                 continue;
             }
-            self.metrics.observe("queue_wait_ms", (now - enqueued_ms).max(0.0));
+            self.serving.queue_wait_ms.observe((now - enqueued_ms).max(0.0));
             // route on the REMAINING latency budget, not the original d_r:
             // time already burned in the queue is gone, and the deadline
             // feasibility filter must not pick an island that can only meet
             // the full budget (soft overall — the failsafe still queues).
             submit.deadline_ms = deadline_at_ms - now;
-            match self.prepare_admitted(id, session_id, user, &submit) {
+            match self.prepare_admitted(id, session_id, user, &submit, enqueued_ms) {
                 Err(e) => self.resolve_ticket(&ticket, Err(e)),
                 Ok(Err(rejected)) => self.resolve_ticket(&ticket, Ok(rejected)),
                 Ok(Ok(prepared)) => ready.push((QueuedKey { ticket, session_id, prompt: submit.prompt }, prepared)),
@@ -1585,7 +1748,7 @@ impl Orchestrator {
     /// execution, on both batching paths.
     fn settle_queued(&self, key: QueuedKey, result: anyhow::Result<Outcome>) {
         if let Ok(out) = &result {
-            if !out.cancelled {
+            if !out.cancelled() {
                 if let Some(r) = out.decision.routed() {
                     let _ = self
                         .sessions
@@ -1600,11 +1763,14 @@ impl Orchestrator {
     /// queue: never routed, never executed — zero cost, one audit entry
     /// (under the `cancelled:` reason prefix, like every cancel).
     fn cancel_while_queued(&self, id: u64, user: &str, ticket: &TicketCell, waited_ms: f64) {
-        self.metrics.count("cancelled_while_queued", 1);
+        let res = Resolution::Cancelled(CancelPoint::WhileQueued);
+        self.serving.cancelled_while_queued.inc();
         let reason = format!("cancelled: by caller after {waited_ms:.0} ms in queue, before routing");
-        // shaped like a shed entry (no island, s_r unscored) but scoped by
-        // the cancelled: prefix so AuditLog::sheds() stays load-shedding-only
-        self.audit.record(AuditEntry::shed(id, user, self.now_ms(), &reason));
+        // shaped like a shed entry (no island, s_r unscored) but carrying a
+        // Cancelled reason, so AuditLog::sheds() stays load-shedding-only
+        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason));
+        let enqueued = self.now_ms() - waited_ms;
+        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, enqueued, 0));
         let outcome = Outcome {
             request_id: id,
             s_r: 0.0,
@@ -1614,7 +1780,7 @@ impl Orchestrator {
             response: String::new(),
             sanitized: false,
             tokens_generated: 0,
-            cancelled: true,
+            resolution: res,
         };
         self.resolve_ticket(ticket, Ok(outcome));
     }
@@ -1625,7 +1791,7 @@ impl Orchestrator {
     fn resolve_ticket(&self, cell: &TicketCell, result: anyhow::Result<Outcome>) {
         let value = result.map_err(|e| e.to_string());
         if !cell.resolve(value) {
-            self.metrics.count("ticket_double_resolved", 1);
+            self.serving.ticket_double_resolved.inc();
         }
     }
 
@@ -1633,23 +1799,28 @@ impl Orchestrator {
     /// reject with exactly one audit entry, zero cost, and an immediately
     /// resolved ticket.
     fn shed_queue_full(&self, item: QueueItem) {
-        self.metrics.count("rejected_queue_full", 1);
+        let res = Resolution::Shed(ShedReason::QueueFull);
+        self.serving.rejected_queue_full.inc();
         let reason = format!("shed: admission queue full ({} queued, fail-closed)", self.queue.capacity());
-        self.audit.record(AuditEntry::shed(item.id, &item.user, self.now_ms(), &reason));
-        self.resolve_shed(&item.ticket, item.id, reason);
+        self.audit.record(AuditEntry::unrouted(item.id, &item.user, self.now_ms(), res, &reason));
+        self.record_resolution(res, self.unrouted_event(res, item.id, &item.user, 0.0, item.enqueued_ms, 0));
+        self.resolve_shed(&item.ticket, item.id, reason, res);
     }
 
     /// Shed a request whose deadline `d_r` expired while it waited in the
     /// queue: by Def. 2 the answer is already useless, so the drain rejects
     /// it instead of burning island capacity on it.
     fn shed_expired(&self, id: u64, user: &str, ticket: &TicketCell, waited_ms: f64) {
-        self.metrics.count("shed_deadline_expired", 1);
+        let res = Resolution::Shed(ShedReason::DeadlineExpired);
+        self.serving.shed_deadline_expired.inc();
         let reason = format!("shed: deadline expired after {waited_ms:.0} ms in queue");
-        self.audit.record(AuditEntry::shed(id, user, self.now_ms(), &reason));
-        self.resolve_shed(ticket, id, reason);
+        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason));
+        let enqueued = self.now_ms() - waited_ms;
+        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, enqueued, 0));
+        self.resolve_shed(ticket, id, reason, res);
     }
 
-    fn resolve_shed(&self, ticket: &TicketCell, id: u64, reason: String) {
+    fn resolve_shed(&self, ticket: &TicketCell, id: u64, reason: String, res: Resolution) {
         let outcome = Outcome {
             request_id: id,
             s_r: 0.0,
@@ -1659,7 +1830,7 @@ impl Orchestrator {
             response: String::new(),
             sanitized: false,
             tokens_generated: 0,
-            cancelled: false,
+            resolution: res,
         };
         self.resolve_ticket(ticket, Ok(outcome));
     }
@@ -1693,8 +1864,13 @@ fn queue_worker(orch: Weak<Orchestrator>, queue: Arc<AdmissionQueue>, audit: Arc
                 if item.ticket.resolve(Err("orchestrator shut down before the request was served".into()))
                     && !audit.contains(item.id)
                 {
-                    let entry =
-                        AuditEntry::shed(item.id, &item.user, item.enqueued_ms, "shed: orchestrator shut down");
+                    let entry = AuditEntry::unrouted(
+                        item.id,
+                        &item.user,
+                        item.enqueued_ms,
+                        Resolution::Shed(ShedReason::Shutdown),
+                        "shed: orchestrator shut down",
+                    );
                     audit.record(entry);
                 }
             }
@@ -1710,11 +1886,13 @@ fn queue_worker(orch: Weak<Orchestrator>, queue: Arc<AdmissionQueue>, audit: Arc
             // (panic between finish() and its ticket resolution) must NOT
             // get a second entry — the contains() check keeps the §XIV
             // "exactly one entry per consumed id" invariant through panics.
-            o.metrics.count("queue_drain_panics", 1);
+            o.serving.queue_drain_panics.inc();
+            let res = Resolution::Shed(ShedReason::WorkerPanic);
             let now = o.now_ms();
             for (id, user, cell) in &stragglers {
                 if cell.resolve(Err("internal error: queue drain panicked".into())) && !o.audit.contains(*id) {
-                    o.audit.record(AuditEntry::shed(*id, user, now, "shed: queue drain panicked"));
+                    o.audit.record(AuditEntry::unrouted(*id, user, now, res, "shed: queue drain panicked"));
+                    o.record_resolution(res, o.unrouted_event(res, *id, user, 0.0, f64::NAN, 0));
                 }
             }
         }
@@ -1733,10 +1911,18 @@ impl Drop for Orchestrator {
             return;
         }
         let now = self.now_ms();
+        let res = Resolution::Shed(ShedReason::Shutdown);
         for item in leftovers {
-            self.audit
-                .record(AuditEntry::shed(item.id, &item.user, now, "shed: orchestrator shut down while queued"));
-            let _ = item.ticket.resolve(Err("orchestrator shut down before the request was served".to_string()));
+            self.audit.record(AuditEntry::unrouted(
+                item.id,
+                &item.user,
+                now,
+                res,
+                "shed: orchestrator shut down while queued",
+            ));
+            if item.ticket.resolve(Err("orchestrator shut down before the request was served".to_string())) {
+                self.record_resolution(res, self.unrouted_event(res, item.id, &item.user, 0.0, item.enqueued_ms, 0));
+            }
         }
     }
 }
@@ -1745,17 +1931,25 @@ impl Drop for Orchestrator {
 mod tests {
     use super::*;
     use crate::config::preset_personal_group;
+    use crate::types::PriorityTier;
 
     fn sim_orchestrator() -> Orchestrator {
         let fleet = Fleet::new(preset_personal_group(), 11);
         Orchestrator::new(Config::default(), Mist::heuristic(), Backend::Sim(fleet), 42)
     }
 
+    /// Blocking positional-form submit, now spelled through the typed
+    /// [`SubmitRequest`] surface (the old `submit` shim is gone).
+    fn submit(o: &Orchestrator, session: u64, prompt: &str, priority: PriorityTier) -> anyhow::Result<Outcome> {
+        o.submit_request(session, SubmitRequest::new(prompt).priority(priority))
+    }
+
     #[test]
     fn sensitive_prompt_stays_personal() {
         let o = sim_orchestrator();
         let s = o.open_session("alice");
-        let out = o.submit(s, "patient john doe ssn 123-45-6789 diagnosed with diabetes", PriorityTier::Primary, None).unwrap();
+        let out =
+            submit(&o, s, "patient john doe ssn 123-45-6789 diagnosed with diabetes", PriorityTier::Primary).unwrap();
         assert!(out.s_r >= 0.9);
         let target = out.decision.target().unwrap();
         let islands = preset_personal_group();
@@ -1769,10 +1963,10 @@ mod tests {
         let o = sim_orchestrator();
         let s = o.open_session("alice");
         // turn 1: sensitive, runs locally
-        o.submit(s, "patient john doe has diabetes", PriorityTier::Primary, None).unwrap();
+        submit(&o, s, "patient john doe has diabetes", PriorityTier::Primary).unwrap();
         // saturate local islands so the next burstable turn offloads
         o.saturate_bounded_islands(0.99);
-        let out = o.submit(s, "what are common complications", PriorityTier::Burstable, None).unwrap();
+        let out = submit(&o, s, "what are common complications", PriorityTier::Burstable).unwrap();
         let islands = preset_personal_group();
         let target = islands.iter().find(|i| i.id == out.decision.target().unwrap()).unwrap();
         assert!(target.privacy < 1.0, "should offload, got {}", target.name);
@@ -1788,7 +1982,7 @@ mod tests {
         // remove all personal islands: sensitive requests unroutable
         o.retain_islands(|i| i.privacy < 0.9);
         let s = o.open_session("bob");
-        let out = o.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
+        let out = submit(&o, s, "patient john doe ssn 123-45-6789", PriorityTier::Primary).unwrap();
         assert!(matches!(out.decision, Decision::Reject { .. }));
         assert_eq!(o.metrics.counter_value("rejected_fail_closed"), 1);
     }
@@ -1802,7 +1996,7 @@ mod tests {
         let s = o.open_session("mallory");
         let mut blocked = 0;
         for _ in 0..10 {
-            if o.submit(s, "hello", PriorityTier::Burstable, None).is_err() {
+            if submit(&o, s, "hello", PriorityTier::Burstable).is_err() {
                 blocked += 1;
             }
         }
@@ -1816,7 +2010,7 @@ mod tests {
         let s = o.open_session("carol");
         // saturate local → burstable goes to cloud and pays
         o.saturate_bounded_islands(0.99);
-        let out = o.submit(s, "what is the capital of france", PriorityTier::Burstable, None).unwrap();
+        let out = submit(&o, s, "what is the capital of france", PriorityTier::Burstable).unwrap();
         assert!(out.cost > 0.0);
         assert!(o.ledger.spent("carol") > 0.0);
     }
@@ -1825,14 +2019,14 @@ mod tests {
     fn audit_log_records_every_decision() {
         let o = sim_orchestrator();
         let s = o.open_session("auditor");
-        o.submit(s, "hello world", PriorityTier::Secondary, None).unwrap();
-        o.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
+        submit(&o, s, "hello world", PriorityTier::Secondary).unwrap();
+        submit(&o, s, "patient john doe ssn 123-45-6789", PriorityTier::Primary).unwrap();
         assert_eq!(o.audit.len(), 2);
         // compliance scan over the trail: no entry with s_r>=0.9 ran below P=0.9
         assert!(o.audit.violations(0.9, 0.9).is_empty());
         // rejections are audited too
         o.retain_islands(|i| i.privacy < 0.9);
-        let out = o.submit(s, "patient jane smith mrn 12345", PriorityTier::Primary, None).unwrap();
+        let out = submit(&o, s, "patient jane smith mrn 12345", PriorityTier::Primary).unwrap();
         assert!(matches!(out.decision, Decision::Reject { .. }));
         assert_eq!(o.audit.len(), 3);
         assert!(o.audit.entries().last().unwrap().reject_reason.is_some());
@@ -1842,9 +2036,43 @@ mod tests {
     fn metrics_populated() {
         let o = sim_orchestrator();
         let s = o.open_session("dave");
-        o.submit(s, "hello world", PriorityTier::Secondary, None).unwrap();
+        submit(&o, s, "hello world", PriorityTier::Secondary).unwrap();
         assert_eq!(o.metrics.counter_value("requests_served"), 1);
         assert!(o.metrics.histogram("latency_ms").unwrap().count() == 1);
+    }
+
+    #[test]
+    fn resolutions_drive_labeled_counters_and_analytics() {
+        let o = sim_orchestrator();
+        let s = o.open_session("observer");
+        let out = submit(&o, s, "hello world", PriorityTier::Secondary).unwrap();
+        assert_eq!(out.resolution, Resolution::Served);
+        // typed resolution, audit reason and labeled counter agree
+        assert_eq!(o.audit.entries()[0].reason, Resolution::Served);
+        let served: u64 = o
+            .metrics
+            .counter_children("requests_resolved")
+            .into_iter()
+            .filter(|(labels, _)| labels[0] == "served")
+            .map(|(_, v)| v)
+            .sum();
+        assert_eq!(served, 1);
+        // one analytics event per resolved id, with routing evidence
+        let events = o.analytics.snapshot();
+        assert_eq!(events.len(), 1);
+        let ev = &events[0];
+        assert_eq!(ev.outcome, "served");
+        assert_eq!(ev.reason, "ok");
+        assert!(ev.island.is_some());
+        assert!(ev.tier.is_some());
+        assert!(ev.routed_ms.is_finite());
+        assert!(ev.enqueued_ms.is_nan(), "blocking path never queues");
+        // per-island labeled series recorded under the serving island
+        assert_eq!(o.metrics.counter_value("served_by_island"), 1);
+        assert_eq!(o.metrics.histogram("island_latency_ms").unwrap().count(), 1);
+        let labels = &o.metrics.histogram_children("island_latency_ms")[0].0;
+        assert_eq!(labels.len(), 3, "island/tier/privacy labels: {labels:?}");
+        assert!(labels[0].starts_with("island-"), "{labels:?}");
     }
 
     #[test]
@@ -1861,7 +2089,7 @@ mod tests {
                     let s = o.open_session(&format!("user-{t}"));
                     let mut ids = Vec::new();
                     for _ in 0..25 {
-                        let out = o.submit(s, "hello world", PriorityTier::Secondary, None).unwrap();
+                        let out = submit(&o, s, "hello world", PriorityTier::Secondary).unwrap();
                         ids.push(out.request_id);
                         o.advance(50.0);
                     }
@@ -1901,7 +2129,7 @@ mod tests {
         let s = o.open_session("erin");
         o.crash_island(IslandId(0));
         for _ in 0..20 {
-            let out = o.submit(s, "hello world", PriorityTier::Secondary, None).unwrap();
+            let out = submit(&o, s, "hello world", PriorityTier::Secondary).unwrap();
             assert_ne!(out.decision.target(), Some(IslandId(0)), "routed to a crashed island");
             o.advance(100.0);
         }
@@ -1935,7 +2163,7 @@ mod tests {
             }
         }
         let s = o.open_session("alice");
-        let out = o.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
+        let out = submit(&o, s, "patient john doe ssn 123-45-6789", PriorityTier::Primary).unwrap();
         assert_eq!(out.decision.target(), Some(survivor), "{:?}", out.decision);
         // exactly one audit entry carrying the failover trail
         assert_eq!(o.audit.len(), 1);
@@ -1962,7 +2190,7 @@ mod tests {
             }
         }
         let s = o.open_session("bob");
-        let out = o.submit(s, "patient jane roe ssn 987-65-4321", PriorityTier::Primary, None).unwrap();
+        let out = submit(&o, s, "patient jane roe ssn 987-65-4321", PriorityTier::Primary).unwrap();
         assert!(matches!(out.decision, Decision::Reject { .. }), "{:?}", out.decision);
         assert_eq!(out.cost, 0.0);
         assert_eq!(o.ledger.total(), 0.0, "no charge for a request that never ran");
@@ -1979,12 +2207,12 @@ mod tests {
     fn submit_many_matches_submit_semantics_and_coalesces() {
         let o = sim_orchestrator();
         let s = o.open_session("batcher");
-        let items: Vec<BatchItem<'_>> = vec![
-            BatchItem { prompt: "hello world", priority: PriorityTier::Secondary, dataset: None },
-            BatchItem { prompt: "patient john doe ssn 123-45-6789", priority: PriorityTier::Primary, dataset: None },
-            BatchItem { prompt: "explain how rust ownership works", priority: PriorityTier::Secondary, dataset: None },
+        let items = vec![
+            SubmitRequest::new("hello world").priority(PriorityTier::Secondary),
+            SubmitRequest::new("patient john doe ssn 123-45-6789").priority(PriorityTier::Primary),
+            SubmitRequest::new("explain how rust ownership works").priority(PriorityTier::Secondary),
         ];
-        let results = o.submit_many(s, &items);
+        let results = o.submit_many_requests(s, items);
         assert_eq!(results.len(), 3);
         for r in &results {
             let out = r.as_ref().unwrap();
@@ -2098,10 +2326,9 @@ mod tests {
         o.set_batch_policy(BatchPolicy { max_batch: 2, max_wait: wait, ..BatchPolicy::default() });
         assert_eq!(o.batch_policy().max_batch, 2);
         let s = o.open_session("retuner");
-        let items: Vec<BatchItem<'_>> = (0..5)
-            .map(|_| BatchItem { prompt: "hello world", priority: PriorityTier::Secondary, dataset: None })
-            .collect();
-        let results = o.submit_many(s, &items);
+        let items: Vec<SubmitRequest> =
+            (0..5).map(|_| SubmitRequest::new("hello world").priority(PriorityTier::Secondary)).collect();
+        let results = o.submit_many_requests(s, items);
         assert!(results.iter().all(|r| r.is_ok()));
         // no coalesced group may exceed the retuned cap
         let h = o.metrics.histogram("batch_group_size").unwrap();
@@ -2120,7 +2347,8 @@ mod tests {
             Decision::Reject { reason } => assert!(reason.contains("max_new_tokens"), "{reason}"),
             other => panic!("expected invalid-request shed, got {other:?}"),
         }
-        assert!(!out.cancelled);
+        assert!(!out.cancelled());
+        assert_eq!(out.resolution, Resolution::Shed(ShedReason::InvalidRequest));
         assert_eq!(o.queue_depth(), 0);
         // blocking path enforces the same contract
         let out2 = o.submit_request(s, SubmitRequest::new("hello").deadline_ms(0.0)).unwrap();
@@ -2144,7 +2372,8 @@ mod tests {
         assert!(!t.is_resolved(), "cancel is cooperative — resolved at drain time");
         Arc::clone(&o).start_queue();
         let out = t.wait().unwrap();
-        assert!(out.cancelled);
+        assert!(out.cancelled());
+        assert_eq!(out.resolution, Resolution::Cancelled(CancelPoint::WhileQueued));
         assert_eq!(out.cost, 0.0);
         assert_eq!(out.tokens_generated, 0);
         assert_eq!(o.metrics.counter_value("cancelled_while_queued"), 1);
@@ -2168,7 +2397,8 @@ mod tests {
         assert!(matches!(events.first(), Some(TokenEvent::First { .. })), "{events:?}");
         assert!(matches!(events.last(), Some(TokenEvent::Cancelled { .. })), "{events:?}");
         let out = t.wait().unwrap();
-        assert!(out.cancelled);
+        assert!(out.cancelled());
+        assert_eq!(out.resolution, Resolution::Cancelled(CancelPoint::DeadlineMidDecode));
         assert!(out.decision.target().is_some(), "cancelled mid-decode, not rejected: {:?}", out.decision);
         assert!(out.tokens_generated > 0, "prefill beat the deadline, some tokens decoded");
         assert!(out.tokens_generated < 512, "decode must stop early, got {}", out.tokens_generated);

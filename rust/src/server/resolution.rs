@@ -1,0 +1,168 @@
+//! Typed request resolutions: how a ticket terminated.
+//!
+//! Replaces two stringly conventions at once: `Outcome`'s ad-hoc
+//! `cancelled: bool` flag, and the `"shed:"` / `"cancelled:"` prefix
+//! convention on audit reject reasons. One enum drives all three consumers —
+//! the `Outcome` the caller sees, the audit-log entry, and the
+//! outcome-labeled metric counter — so they can never disagree about what
+//! happened to a request.
+
+/// Why a request was shed before it reached an island.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Admission queue at capacity (fail-closed back-pressure).
+    QueueFull,
+    /// Deadline expired while waiting in the admission queue.
+    DeadlineExpired,
+    /// The request failed validation before admission.
+    InvalidRequest,
+    /// A serving worker or step loop panicked with the request in flight.
+    WorkerPanic,
+    /// The orchestrator shut down with the request still queued.
+    Shutdown,
+}
+
+/// Where in the lifecycle a caller- or deadline-driven cancel landed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelPoint {
+    /// Cancelled while waiting in the admission queue, before routing.
+    WhileQueued,
+    /// Cancelled after routing but before the island started decoding.
+    BeforeExecution,
+    /// Caller cancel observed between decode steps.
+    MidDecode,
+    /// Deadline expired between decode steps.
+    DeadlineMidDecode,
+}
+
+/// Why a request failed after admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailReason {
+    /// No island satisfied the privacy/jurisdiction constraints (fail-closed).
+    FailClosed,
+    /// Failover retry budget exhausted without a successful attempt.
+    FailoverExhausted,
+    /// The island executor reported a non-recoverable error.
+    ExecutionError,
+    /// The session vanished mid-flight (closed by the caller).
+    SessionClosed,
+}
+
+/// Terminal state of a request. Every resolved ticket carries exactly one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resolution {
+    /// Served to completion by an island.
+    Served,
+    /// Dropped before reaching an island (back-pressure / validation).
+    Shed(ShedReason),
+    /// Terminated early by the caller or a deadline.
+    Cancelled(CancelPoint),
+    /// Admitted but could not be served.
+    Failed(FailReason),
+}
+
+/// Audit entries record the same typed reason as the outcome and the
+/// outcome-class metric label — one source of truth for all three.
+pub type AuditReason = Resolution;
+
+impl Resolution {
+    /// Outcome class label: `served` / `shed` / `cancelled` / `failed`.
+    pub fn class(&self) -> &'static str {
+        match self {
+            Resolution::Served => "served",
+            Resolution::Shed(_) => "shed",
+            Resolution::Cancelled(_) => "cancelled",
+            Resolution::Failed(_) => "failed",
+        }
+    }
+
+    /// Fine-grained reason label (the `reason` metric label value).
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Resolution::Served => "ok",
+            Resolution::Shed(ShedReason::QueueFull) => "queue_full",
+            Resolution::Shed(ShedReason::DeadlineExpired) => "deadline_expired",
+            Resolution::Shed(ShedReason::InvalidRequest) => "invalid_request",
+            Resolution::Shed(ShedReason::WorkerPanic) => "worker_panic",
+            Resolution::Shed(ShedReason::Shutdown) => "shutdown",
+            Resolution::Cancelled(CancelPoint::WhileQueued) => "while_queued",
+            Resolution::Cancelled(CancelPoint::BeforeExecution) => "before_execution",
+            Resolution::Cancelled(CancelPoint::MidDecode) => "mid_decode",
+            Resolution::Cancelled(CancelPoint::DeadlineMidDecode) => "deadline_mid_decode",
+            Resolution::Failed(FailReason::FailClosed) => "fail_closed",
+            Resolution::Failed(FailReason::FailoverExhausted) => "failover_exhausted",
+            Resolution::Failed(FailReason::ExecutionError) => "execution_error",
+            Resolution::Failed(FailReason::SessionClosed) => "session_closed",
+        }
+    }
+
+    pub fn is_served(&self) -> bool {
+        matches!(self, Resolution::Served)
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Resolution::Shed(_))
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        matches!(self, Resolution::Cancelled(_))
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, Resolution::Failed(_))
+    }
+
+    /// All variants, for exhaustive metric pre-registration and tests.
+    pub const ALL: [Resolution; 14] = [
+        Resolution::Served,
+        Resolution::Shed(ShedReason::QueueFull),
+        Resolution::Shed(ShedReason::DeadlineExpired),
+        Resolution::Shed(ShedReason::InvalidRequest),
+        Resolution::Shed(ShedReason::WorkerPanic),
+        Resolution::Shed(ShedReason::Shutdown),
+        Resolution::Cancelled(CancelPoint::WhileQueued),
+        Resolution::Cancelled(CancelPoint::BeforeExecution),
+        Resolution::Cancelled(CancelPoint::MidDecode),
+        Resolution::Cancelled(CancelPoint::DeadlineMidDecode),
+        Resolution::Failed(FailReason::FailClosed),
+        Resolution::Failed(FailReason::FailoverExhausted),
+        Resolution::Failed(FailReason::ExecutionError),
+        Resolution::Failed(FailReason::SessionClosed),
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_and_reason_labels_are_consistent() {
+        for r in Resolution::ALL {
+            match r {
+                Resolution::Served => assert_eq!(r.class(), "served"),
+                Resolution::Shed(_) => assert_eq!(r.class(), "shed"),
+                Resolution::Cancelled(_) => assert_eq!(r.class(), "cancelled"),
+                Resolution::Failed(_) => assert_eq!(r.class(), "failed"),
+            }
+            assert!(!r.reason().is_empty());
+        }
+    }
+
+    #[test]
+    fn reason_labels_are_unique_within_class() {
+        let mut seen = std::collections::BTreeSet::new();
+        for r in Resolution::ALL {
+            assert!(seen.insert((r.class(), r.reason())), "duplicate label pair for {r:?}");
+        }
+        assert_eq!(seen.len(), 14);
+    }
+
+    #[test]
+    fn predicates_match_variants() {
+        assert!(Resolution::Served.is_served());
+        assert!(Resolution::Shed(ShedReason::QueueFull).is_shed());
+        assert!(Resolution::Cancelled(CancelPoint::MidDecode).is_cancelled());
+        assert!(Resolution::Failed(FailReason::FailClosed).is_failed());
+        assert!(!Resolution::Served.is_cancelled());
+    }
+}

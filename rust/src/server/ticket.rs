@@ -75,7 +75,7 @@ pub(crate) struct TicketCell {
 /// terminal before — or without — draining pushed tokens).
 fn terminal_event(v: &TicketValue) -> TokenEvent {
     match v {
-        Ok(out) if out.cancelled => {
+        Ok(out) if out.cancelled() => {
             TokenEvent::Cancelled { reason: format!("cancelled after {} tokens", out.tokens_generated) }
         }
         Ok(_) => TokenEvent::Done,
@@ -226,6 +226,7 @@ impl Iterator for TokenStream {
 mod tests {
     use super::*;
     use crate::agents::waves::Decision;
+    use crate::server::resolution::{CancelPoint, FailReason, Resolution};
 
     fn outcome(id: u64) -> Outcome {
         Outcome {
@@ -237,7 +238,7 @@ mod tests {
             response: String::new(),
             sanitized: false,
             tokens_generated: 0,
-            cancelled: false,
+            resolution: Resolution::Failed(FailReason::FailClosed),
         }
     }
 
@@ -318,14 +319,14 @@ mod tests {
         ticket.cancel();
         assert!(cell.cancel_requested());
         let mut out = outcome(5);
-        out.cancelled = true;
+        out.resolution = Resolution::Cancelled(CancelPoint::MidDecode);
         out.tokens_generated = 12;
         assert!(cell.resolve(Ok(out)));
         let events: Vec<TokenEvent> = ticket.stream().collect();
         assert_eq!(events, vec![TokenEvent::Cancelled { reason: "cancelled after 12 tokens".into() }]);
         // wait() still surfaces the cancelled outcome, not an error
         let got = ticket.wait().unwrap();
-        assert!(got.cancelled);
+        assert!(got.cancelled());
         assert_eq!(got.tokens_generated, 12);
     }
 

@@ -1,0 +1,211 @@
+//! Per-request analytics events: one structured record per resolved ticket,
+//! kept in a bounded ring buffer with JSONL export for the eval harness.
+//!
+//! Metrics (mod.rs) answer "how many / how fast in aggregate"; the event log
+//! answers "what happened to request 17492" — lifecycle timestamps
+//! (enqueue→route→prefill→first-token→resolve), the island and tier that
+//! served it, failover and sanitization counts, and the typed outcome. The
+//! buffer is bounded: when full, the oldest event is dropped and a drop
+//! counter bumped, so a long-running server never grows without limit.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::json::Json;
+
+/// Default ring capacity: enough for a full bench run's tail without
+/// unbounded growth on long-lived servers.
+pub const DEFAULT_EVENT_CAPACITY: usize = 4096;
+
+/// One resolved request. Timestamps are virtual-clock milliseconds; a stage
+/// a request never reached is `NaN` and exports as JSON `null`.
+#[derive(Clone, Debug)]
+pub struct RequestEvent {
+    pub request_id: u64,
+    pub user: String,
+    /// Outcome class label: `served` / `shed` / `cancelled` / `failed`.
+    pub outcome: &'static str,
+    /// Outcome reason label, e.g. `queue_full`, `deadline_mid_decode`.
+    pub reason: &'static str,
+    /// Serving island (`island-N`), if one was assigned.
+    pub island: Option<String>,
+    /// Trust tier of the serving island.
+    pub tier: Option<&'static str>,
+    /// Privacy score of the serving island.
+    pub privacy: Option<f64>,
+    /// MIST sensitivity score after floor clamping.
+    pub s_r: f64,
+    pub failovers: u32,
+    pub sanitized: bool,
+    /// Conversation turns rewritten by MIST for this request.
+    pub sanitized_turns: u64,
+    pub enqueued_ms: f64,
+    pub routed_ms: f64,
+    pub prefill_ms: f64,
+    pub first_token_ms: f64,
+    pub resolved_ms: f64,
+    pub tokens_generated: u32,
+    pub latency_ms: f64,
+    pub cost_usd: f64,
+}
+
+fn ms(v: f64) -> Json {
+    if v.is_finite() {
+        Json::num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl RequestEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("request_id", Json::num(self.request_id as f64)),
+            ("user", Json::str(&self.user)),
+            ("outcome", Json::str(self.outcome)),
+            ("reason", Json::str(self.reason)),
+            ("island", self.island.as_deref().map(Json::str).unwrap_or(Json::Null)),
+            ("tier", self.tier.map(Json::str).unwrap_or(Json::Null)),
+            ("privacy", self.privacy.map(Json::num).unwrap_or(Json::Null)),
+            ("s_r", Json::num(self.s_r)),
+            ("failovers", Json::num(self.failovers as f64)),
+            ("sanitized", Json::Bool(self.sanitized)),
+            ("sanitized_turns", Json::num(self.sanitized_turns as f64)),
+            ("enqueued_ms", ms(self.enqueued_ms)),
+            ("routed_ms", ms(self.routed_ms)),
+            ("prefill_ms", ms(self.prefill_ms)),
+            ("first_token_ms", ms(self.first_token_ms)),
+            ("resolved_ms", ms(self.resolved_ms)),
+            ("tokens_generated", Json::num(self.tokens_generated as f64)),
+            ("latency_ms", ms(self.latency_ms)),
+            ("cost_usd", Json::num(self.cost_usd)),
+        ])
+    }
+}
+
+/// Bounded ring buffer of [`RequestEvent`]s.
+pub struct EventLog {
+    inner: Mutex<VecDeque<RequestEvent>>,
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        Self::new(DEFAULT_EVENT_CAPACITY)
+    }
+}
+
+impl EventLog {
+    pub fn new(capacity: usize) -> Self {
+        EventLog {
+            inner: Mutex::new(VecDeque::with_capacity(capacity.min(1024))),
+            capacity: capacity.max(1),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Append an event, evicting the oldest when the ring is full.
+    pub fn push(&self, ev: RequestEvent) {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() == self.capacity {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::SeqCst);
+        }
+        q.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Events evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::SeqCst)
+    }
+
+    /// Copy of the buffered events, oldest first.
+    pub fn snapshot(&self) -> Vec<RequestEvent> {
+        self.inner.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// JSONL export: one JSON object per line, oldest first.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.inner.lock().unwrap().iter() {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event(id: u64) -> RequestEvent {
+        RequestEvent {
+            request_id: id,
+            user: "u".to_string(),
+            outcome: "served",
+            reason: "ok",
+            island: Some("island-1".to_string()),
+            tier: Some("personal"),
+            privacy: Some(0.9),
+            s_r: 0.4,
+            failovers: 0,
+            sanitized: false,
+            sanitized_turns: 0,
+            enqueued_ms: 1.0,
+            routed_ms: 2.0,
+            prefill_ms: 3.0,
+            first_token_ms: 4.0,
+            resolved_ms: 9.0,
+            tokens_generated: 16,
+            latency_ms: 8.0,
+            cost_usd: 0.001,
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let log = EventLog::new(3);
+        for id in 0..5 {
+            log.push(event(id));
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped(), 2);
+        let ids: Vec<u64> = log.snapshot().iter().map(|e| e.request_id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn jsonl_parses_back_line_by_line() {
+        let log = EventLog::new(8);
+        log.push(event(1));
+        let mut ev = event(2);
+        ev.first_token_ms = f64::NAN; // never reached first token
+        ev.island = None;
+        ev.tier = None;
+        log.push(ev);
+        let jsonl = log.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("outcome"), &Json::str("served"));
+        assert_eq!(first.get("island"), &Json::str("island-1"));
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("first_token_ms"), &Json::Null);
+        assert_eq!(second.get("island"), &Json::Null);
+    }
+}

@@ -1,0 +1,176 @@
+//! Lock-free histogram: the same log-scaled bucket grid as
+//! [`crate::util::Histogram`], but with atomic bucket counters so recording
+//! a sample from the serving hot path never takes a lock. Queries snapshot
+//! into the plain [`Histogram`] so all percentile/summary code is shared.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::stats;
+use crate::util::{AtomicF64, Histogram};
+
+/// Concurrent histogram over positive f64 samples (e.g. milliseconds).
+///
+/// `record` is wait-free apart from two short CAS loops maintaining min/max;
+/// bucket, count and sum updates are single atomic adds. Relaxed ordering is
+/// enough: readers only consume full snapshots, and a snapshot racing a
+/// record may miss at most the in-flight sample (counts stay consistent with
+/// the buckets actually copied because `count` is re-derived per bucket on
+/// merge-free queries — see `snapshot`).
+pub struct AtomicHistogram {
+    /// bucket i covers the same [lo, hi) range as `util::Histogram` bucket i
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicF64,
+    min: AtomicF64,
+    max: AtomicF64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> Self {
+        AtomicHistogram {
+            buckets: (0..stats::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicF64::new(0.0),
+            min: AtomicF64::new(f64::INFINITY),
+            max: AtomicF64::new(f64::NEG_INFINITY),
+        }
+    }
+
+    /// Record one sample. Non-finite or negative samples are clamped to 0,
+    /// matching [`Histogram::record`] (they still count).
+    pub fn record(&self, x: f64) {
+        let x = if x.is_finite() && x > 0.0 { x } else { 0.0 };
+        self.buckets[stats::bucket_index(x)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(x);
+        // CAS loops terminate fast: each retry means another thread moved the
+        // extremum strictly toward (or past) ours.
+        loop {
+            let cur = self.min.load();
+            if x >= cur || self.min.compare_exchange(cur, x) {
+                break;
+            }
+        }
+        loop {
+            let cur = self.max.load();
+            if x <= cur || self.max.compare_exchange(cur, x) {
+                break;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the atomic state into a plain [`Histogram`] for querying.
+    ///
+    /// Taken concurrently with `record`, the snapshot is a consistent recent
+    /// state up to in-flight samples: count is re-derived from the copied
+    /// buckets so `count()` always equals the bucket total.
+    pub fn snapshot(&self) -> Histogram {
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count: u64 = buckets.iter().sum();
+        let (min, max) = if count == 0 {
+            (f64::INFINITY, f64::NEG_INFINITY)
+        } else {
+            (self.min.load(), self.max.load())
+        };
+        Histogram::from_parts(buckets, count, self.sum.load(), min, max)
+    }
+
+    /// Zero in place (between experiment repetitions); racing records land in
+    /// the zeroed cells rather than an orphaned histogram.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0.0);
+        self.min.store(f64::INFINITY);
+        self.max.store(f64::NEG_INFINITY);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_plain_histogram() {
+        let a = AtomicHistogram::new();
+        let mut h = Histogram::new();
+        let mut r = crate::util::Rng::new(7);
+        for _ in 0..5000 {
+            let x = r.range_f64(0.5, 800.0);
+            a.record(x);
+            h.record(x);
+        }
+        let s = a.snapshot();
+        assert_eq!(s.count(), h.count());
+        assert!((s.mean() - h.mean()).abs() < 1e-9);
+        assert_eq!(s.p50(), h.p50());
+        assert_eq!(s.p99(), h.p99());
+        assert_eq!(s.min(), h.min());
+        assert_eq!(s.max(), h.max());
+    }
+
+    #[test]
+    fn degenerate_samples_clamp_like_plain() {
+        let a = AtomicHistogram::new();
+        a.record(f64::NAN);
+        a.record(-5.0);
+        let s = a.snapshot();
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.max(), 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = AtomicHistogram::new().snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        use std::sync::Arc;
+        let a = Arc::new(AtomicHistogram::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for i in 0..2000 {
+                        a.record((t * 2000 + i) as f64 * 0.01 + 0.01);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = a.snapshot();
+        assert_eq!(s.count(), 16_000);
+        assert!(s.min() > 0.0 && s.max() < 161.0);
+    }
+
+    #[test]
+    fn reset_zeroes_in_place() {
+        let a = AtomicHistogram::new();
+        a.record(5.0);
+        a.reset();
+        assert_eq!(a.snapshot().count(), 0);
+        a.record(2.0);
+        let s = a.snapshot();
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.max(), 2.0);
+    }
+}

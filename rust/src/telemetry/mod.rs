@@ -1,26 +1,224 @@
-//! Metrics registry: counters, gauges and latency histograms.
+//! Metrics registry: typed counter/gauge/histogram families with label sets.
 //!
 //! Owned by the rust coordinator (L3 owns "metrics" per the architecture);
-//! every agent and island executor reports here. Thread-safe and
-//! lock-minimal: counters and gauges are atomics reached through an
-//! `RwLock`-ed name table (read-locked on the hot path, write-locked only
-//! the first time a name appears), histograms keep a single mutex because
-//! recording mutates bucket arrays. Many threads submit through
-//! `Arc<Orchestrator>` concurrently; the per-request cost here is a few
-//! atomic adds plus one short histogram lock.
+//! every agent and island executor reports here. The API has two tiers:
+//!
+//! * **Registered handles** (`Counter`, `Gauge`, `Hist` and their labeled
+//!   `*Vec` families) — resolved once at registration time, each holding a
+//!   cached `Arc` to its atomic cell. Bumping a handle is a single atomic
+//!   op: no name lookup, no lock, no allocation on the serving hot path.
+//!   [`crate::telemetry::ServingMetrics`] pre-registers every serving-path
+//!   metric this way.
+//! * **Legacy string-keyed calls** (`count`/`gauge`/`observe`) — get-or-
+//!   register by name on every call. Kept for cold paths and as the
+//!   baseline the throughput bench compares handle bumps against.
+//!
+//! Histograms are lock-free ([`AtomicHistogram`]): fixed log-scaled buckets
+//! with atomic counters, so recording a latency sample never serializes
+//! behind other threads. [`Metrics::render_prometheus`] (in
+//! [`prometheus`]) exports everything in Prometheus text exposition format.
+
+pub mod events;
+pub mod hist;
+pub mod prometheus;
+pub mod serving;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, RwLock};
+
+pub use events::{EventLog, RequestEvent};
+pub use hist::AtomicHistogram;
+pub use prometheus::lint_exposition;
+pub use serving::ServingMetrics;
 
 use crate::util::{AtomicF64, Histogram, Table};
+
+/// A metric cell that can be zeroed in place (for `Metrics::reset`).
+trait Cell: Default {
+    fn zero(&self);
+}
+
+impl Cell for AtomicU64 {
+    fn zero(&self) {
+        self.store(0, Ordering::SeqCst);
+    }
+}
+
+impl Cell for AtomicF64 {
+    fn zero(&self) {
+        self.store(0.0);
+    }
+}
+
+impl Cell for AtomicHistogram {
+    fn zero(&self) {
+        self.reset();
+    }
+}
+
+/// One metric family: a help string, an ordered label-key list, and one cell
+/// per distinct label-value combination. The unlabeled case is a family with
+/// an empty key list and a single child at the empty label vector.
+pub(crate) struct Family<C> {
+    pub(crate) help: String,
+    pub(crate) labels: Vec<String>,
+    pub(crate) children: RwLock<BTreeMap<Vec<String>, Arc<C>>>,
+}
+
+impl<C: Cell> Family<C> {
+    fn new(help: &str, labels: &[&str]) -> Self {
+        Family {
+            help: help.to_string(),
+            labels: labels.iter().map(|s| s.to_string()).collect(),
+            children: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Get or create the child cell for a label-value combination.
+    fn child(&self, values: &[&str]) -> Arc<C> {
+        assert_eq!(
+            values.len(),
+            self.labels.len(),
+            "label arity mismatch: family declares {:?}, got {} values",
+            self.labels,
+            values.len()
+        );
+        let key: Vec<String> = values.iter().map(|s| s.to_string()).collect();
+        if let Some(c) = self.children.read().unwrap().get(&key) {
+            return Arc::clone(c);
+        }
+        let mut w = self.children.write().unwrap();
+        Arc::clone(w.entry(key).or_default())
+    }
+
+    /// Sorted (label values, cell) snapshot of all children.
+    fn snapshot_children(&self) -> Vec<(Vec<String>, Arc<C>)> {
+        self.children.read().unwrap().iter().map(|(k, v)| (k.clone(), Arc::clone(v))).collect()
+    }
+}
+
+/// Handle to one counter cell. Cloning is cheap (`Arc` bump); bumping is a
+/// single atomic add with no registry access.
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::SeqCst);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.cell.load(Ordering::SeqCst)
+    }
+}
+
+/// Handle to one gauge cell (absolute-valued f64).
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<AtomicF64>,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.cell.store(v);
+    }
+
+    pub fn value(&self) -> f64 {
+        self.cell.load()
+    }
+}
+
+/// Handle to one lock-free histogram cell.
+#[derive(Clone)]
+pub struct Hist {
+    cell: Arc<AtomicHistogram>,
+}
+
+impl Hist {
+    pub fn observe(&self, v: f64) {
+        self.cell.record(v);
+    }
+
+    pub fn snapshot(&self) -> Histogram {
+        self.cell.snapshot()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.cell.count()
+    }
+}
+
+/// A labeled counter family; `with(values)` resolves (and caches in the
+/// registry) the child for one label-value combination. Call `with` once at
+/// setup and keep the returned [`Counter`] — that is the zero-lookup path.
+#[derive(Clone)]
+pub struct CounterVec {
+    family: Arc<Family<AtomicU64>>,
+}
+
+impl CounterVec {
+    pub fn with(&self, values: &[&str]) -> Counter {
+        Counter { cell: self.family.child(values) }
+    }
+}
+
+/// A labeled gauge family.
+#[derive(Clone)]
+pub struct GaugeVec {
+    family: Arc<Family<AtomicF64>>,
+}
+
+impl GaugeVec {
+    pub fn with(&self, values: &[&str]) -> Gauge {
+        Gauge { cell: self.family.child(values) }
+    }
+}
+
+/// A labeled histogram family.
+#[derive(Clone)]
+pub struct HistogramVec {
+    family: Arc<Family<AtomicHistogram>>,
+}
+
+impl HistogramVec {
+    pub fn with(&self, values: &[&str]) -> Hist {
+        Hist { cell: self.family.child(values) }
+    }
+}
+
+const UNREGISTERED_HELP: &str = "(registered on first use)";
 
 /// Central metrics registry.
 #[derive(Default)]
 pub struct Metrics {
-    counters: RwLock<BTreeMap<String, Arc<AtomicU64>>>,
-    gauges: RwLock<BTreeMap<String, Arc<AtomicF64>>>,
-    histograms: Mutex<BTreeMap<String, Histogram>>,
+    pub(crate) counters: RwLock<BTreeMap<String, Arc<Family<AtomicU64>>>>,
+    pub(crate) gauges: RwLock<BTreeMap<String, Arc<Family<AtomicF64>>>>,
+    pub(crate) histograms: RwLock<BTreeMap<String, Arc<Family<AtomicHistogram>>>>,
+}
+
+fn family<C: Cell>(
+    table: &RwLock<BTreeMap<String, Arc<Family<C>>>>,
+    name: &str,
+    help: &str,
+    labels: &[&str],
+) -> Arc<Family<C>> {
+    if let Some(f) = table.read().unwrap().get(name) {
+        assert!(
+            f.labels.len() == labels.len() && f.labels.iter().zip(labels).all(|(a, b)| a.as_str() == *b),
+            "metric {name:?} re-registered with different labels ({:?} vs {labels:?})",
+            f.labels
+        );
+        return Arc::clone(f);
+    }
+    let mut w = table.write().unwrap();
+    Arc::clone(w.entry(name.to_string()).or_insert_with(|| Arc::new(Family::new(help, labels))))
 }
 
 impl Metrics {
@@ -28,78 +226,154 @@ impl Metrics {
         Self::default()
     }
 
-    fn counter_cell(&self, name: &str) -> Arc<AtomicU64> {
-        if let Some(c) = self.counters.read().unwrap().get(name) {
-            return Arc::clone(c);
-        }
-        let mut w = self.counters.write().unwrap();
-        Arc::clone(w.entry(name.to_string()).or_default())
+    // ---- registration: resolve handles once, bump them lock-free after ----
+
+    /// Register (or look up) an unlabeled counter and return its handle.
+    pub fn register_counter(&self, name: &str, help: &str) -> Counter {
+        Counter { cell: family(&self.counters, name, help, &[]).child(&[]) }
     }
 
-    fn gauge_cell(&self, name: &str) -> Arc<AtomicF64> {
-        if let Some(g) = self.gauges.read().unwrap().get(name) {
-            return Arc::clone(g);
-        }
-        let mut w = self.gauges.write().unwrap();
-        Arc::clone(w.entry(name.to_string()).or_default())
+    /// Register a labeled counter family.
+    pub fn counter_vec(&self, name: &str, help: &str, labels: &[&str]) -> CounterVec {
+        CounterVec { family: family(&self.counters, name, help, labels) }
     }
 
-    /// Increment a named counter by `n`.
+    /// Register (or look up) an unlabeled gauge and return its handle.
+    pub fn register_gauge(&self, name: &str, help: &str) -> Gauge {
+        Gauge { cell: family(&self.gauges, name, help, &[]).child(&[]) }
+    }
+
+    /// Register a labeled gauge family.
+    pub fn gauge_vec(&self, name: &str, help: &str, labels: &[&str]) -> GaugeVec {
+        GaugeVec { family: family(&self.gauges, name, help, labels) }
+    }
+
+    /// Register (or look up) an unlabeled histogram and return its handle.
+    pub fn register_histogram(&self, name: &str, help: &str) -> Hist {
+        Hist { cell: family(&self.histograms, name, help, &[]).child(&[]) }
+    }
+
+    /// Register a labeled histogram family.
+    pub fn histogram_vec(&self, name: &str, help: &str, labels: &[&str]) -> HistogramVec {
+        HistogramVec { family: family(&self.histograms, name, help, labels) }
+    }
+
+    // ---- legacy string-keyed API: get-or-register by name on every call ----
+
+    /// Increment a named counter by `n`. String-keyed slow path: resolves the
+    /// name through the registry on every call. Hot paths should hold a
+    /// [`Counter`] handle instead (see [`ServingMetrics`]).
     pub fn count(&self, name: &str, n: u64) {
-        self.counter_cell(name).fetch_add(n, Ordering::SeqCst);
+        family(&self.counters, name, UNREGISTERED_HELP, &[]).child(&[]).fetch_add(n, Ordering::SeqCst);
     }
 
-    /// Set a gauge to an absolute value.
+    /// Set a gauge to an absolute value (string-keyed slow path).
     pub fn gauge(&self, name: &str, v: f64) {
-        self.gauge_cell(name).store(v);
+        family(&self.gauges, name, UNREGISTERED_HELP, &[]).child(&[]).store(v);
     }
 
-    /// Record a histogram sample (e.g. latency in ms).
+    /// Record a histogram sample (string-keyed slow path).
     pub fn observe(&self, name: &str, v: f64) {
-        let mut g = self.histograms.lock().unwrap();
-        g.entry(name.to_string()).or_default().record(v);
+        family(&self.histograms, name, UNREGISTERED_HELP, &[]).child(&[]).record(v);
     }
 
+    // ---- queries ----
+
+    /// Total over all children of a counter family (0 if absent). For a
+    /// labeled family this is the sum across label combinations.
     pub fn counter_value(&self, name: &str) -> u64 {
-        self.counters.read().unwrap().get(name).map(|c| c.load(Ordering::SeqCst)).unwrap_or(0)
+        match self.counters.read().unwrap().get(name) {
+            Some(f) => f.children.read().unwrap().values().map(|c| c.load(Ordering::SeqCst)).sum(),
+            None => 0,
+        }
     }
 
+    /// Value of an unlabeled gauge (None if never set).
     pub fn gauge_value(&self, name: &str) -> Option<f64> {
-        self.gauges.read().unwrap().get(name).map(|g| g.load())
+        let table = self.gauges.read().unwrap();
+        let f = table.get(name)?;
+        let children = f.children.read().unwrap();
+        children.get(&Vec::new()).map(|g| g.load())
     }
 
-    /// Snapshot of a histogram by name.
+    /// Snapshot of a histogram family by name, merged across all label
+    /// combinations. None if the name was never registered.
     pub fn histogram(&self, name: &str) -> Option<Histogram> {
-        self.histograms.lock().unwrap().get(name).cloned()
+        let table = self.histograms.read().unwrap();
+        let f = table.get(name)?;
+        let mut merged = Histogram::new();
+        for child in f.children.read().unwrap().values() {
+            merged.merge(&child.snapshot());
+        }
+        Some(merged)
+    }
+
+    /// Per-child values of a counter family: (label values, count), sorted.
+    pub fn counter_children(&self, name: &str) -> Vec<(Vec<String>, u64)> {
+        match self.counters.read().unwrap().get(name) {
+            Some(f) => f.snapshot_children().into_iter().map(|(k, c)| (k, c.load(Ordering::SeqCst))).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Per-child snapshots of a histogram family: (label values, histogram).
+    pub fn histogram_children(&self, name: &str) -> Vec<(Vec<String>, Histogram)> {
+        match self.histograms.read().unwrap().get(name) {
+            Some(f) => f.snapshot_children().into_iter().map(|(k, h)| (k, h.snapshot())).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// `name{k="v",...}` display form for a child (plain name if unlabeled).
+    fn series_name(name: &str, labels: &[String], values: &[String]) -> String {
+        if values.is_empty() {
+            return name.to_string();
+        }
+        let pairs: Vec<String> =
+            labels.iter().zip(values).map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+        format!("{name}{{{}}}", pairs.join(","))
     }
 
     /// Render everything as a report table (used by `islandrun stats`).
     pub fn report(&self) -> Table {
         let mut t = Table::new("metrics", &["metric", "value"]);
-        for (k, v) in self.counters.read().unwrap().iter() {
-            t.row(&[k.clone(), v.load(Ordering::SeqCst).to_string()]);
+        for (name, f) in self.counters.read().unwrap().iter() {
+            for (values, c) in f.snapshot_children() {
+                t.row(&[Self::series_name(name, &f.labels, &values), c.load(Ordering::SeqCst).to_string()]);
+            }
         }
-        for (k, v) in self.gauges.read().unwrap().iter() {
-            t.row(&[k.clone(), format!("{:.3}", v.load())]);
+        for (name, f) in self.gauges.read().unwrap().iter() {
+            for (values, g) in f.snapshot_children() {
+                t.row(&[Self::series_name(name, &f.labels, &values), format!("{:.3}", g.load())]);
+            }
         }
-        for (k, h) in self.histograms.lock().unwrap().iter() {
-            t.row(&[k.clone(), h.summary()]);
+        for (name, f) in self.histograms.read().unwrap().iter() {
+            for (values, h) in f.snapshot_children() {
+                t.row(&[Self::series_name(name, &f.labels, &values), h.snapshot().summary()]);
+            }
         }
         t
     }
 
-    /// Clear all metrics (between experiment repetitions). Counter and gauge
-    /// cells are zeroed in place rather than dropped so a racing `count()`
-    /// that already fetched a cell still lands its increment in a live
-    /// counter instead of an orphaned one.
+    /// Clear all metrics (between experiment repetitions). Every cell —
+    /// including histogram buckets — is zeroed in place rather than dropped,
+    /// so handles resolved before the reset keep recording into live cells.
     pub fn reset(&self) {
-        for c in self.counters.read().unwrap().values() {
-            c.store(0, Ordering::SeqCst);
+        for f in self.counters.read().unwrap().values() {
+            for c in f.children.read().unwrap().values() {
+                c.zero();
+            }
         }
-        for g in self.gauges.read().unwrap().values() {
-            g.store(0.0);
+        for f in self.gauges.read().unwrap().values() {
+            for g in f.children.read().unwrap().values() {
+                g.zero();
+            }
         }
-        self.histograms.lock().unwrap().clear();
+        for f in self.histograms.read().unwrap().values() {
+            for h in f.children.read().unwrap().values() {
+                h.zero();
+            }
+        }
     }
 }
 
@@ -147,7 +421,8 @@ mod tests {
         assert!(rendered.contains("| c"));
         m.reset();
         assert_eq!(m.counter_value("a"), 0);
-        assert!(m.histogram("c").is_none());
+        // cells are zeroed in place, not dropped: the family survives empty
+        assert_eq!(m.histogram("c").unwrap().count(), 0);
     }
 
     #[test]
@@ -172,5 +447,81 @@ mod tests {
         assert_eq!(m.counter_value("n"), 4000);
         assert_eq!(m.histogram("h").unwrap().count(), 4000);
         assert_eq!(m.gauge_value("g"), Some(0.5));
+    }
+
+    #[test]
+    fn registered_handles_share_cells_with_legacy_names() {
+        let m = Metrics::new();
+        let c = m.register_counter("served", "requests served");
+        c.inc();
+        m.count("served", 2); // legacy path lands in the same cell
+        assert_eq!(c.value(), 3);
+        assert_eq!(m.counter_value("served"), 3);
+
+        let g = m.register_gauge("depth", "queue depth");
+        g.set(7.0);
+        assert_eq!(m.gauge_value("depth"), Some(7.0));
+
+        let h = m.register_histogram("wait", "queue wait");
+        h.observe(4.0);
+        m.observe("wait", 6.0);
+        assert_eq!(m.histogram("wait").unwrap().count(), 2);
+        assert_eq!(h.snapshot().count(), 2);
+    }
+
+    #[test]
+    fn labeled_families_track_children_separately() {
+        let m = Metrics::new();
+        let v = m.counter_vec("resolved", "by outcome", &["outcome", "reason"]);
+        let served = v.with(&["served", "ok"]);
+        let shed = v.with(&["shed", "queue_full"]);
+        served.add(5);
+        shed.add(2);
+        // counter_value sums across label combinations
+        assert_eq!(m.counter_value("resolved"), 7);
+        let children = m.counter_children("resolved");
+        assert_eq!(children.len(), 2);
+        assert_eq!(children[0], (vec!["served".to_string(), "ok".to_string()], 5));
+        assert_eq!(children[1], (vec!["shed".to_string(), "queue_full".to_string()], 2));
+
+        let hv = m.histogram_vec("lat", "latency by island", &["island"]);
+        hv.with(&["island-0"]).observe(10.0);
+        hv.with(&["island-1"]).observe(30.0);
+        let merged = m.histogram("lat").unwrap();
+        assert_eq!(merged.count(), 2);
+        assert!((merged.mean() - 20.0).abs() < 1e-9);
+        assert_eq!(m.histogram_children("lat").len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "label arity mismatch")]
+    fn wrong_label_arity_panics() {
+        let m = Metrics::new();
+        let v = m.counter_vec("x", "help", &["a", "b"]);
+        v.with(&["only-one"]);
+    }
+
+    #[test]
+    fn reset_keeps_handles_live() {
+        let m = Metrics::new();
+        let c = m.register_counter("c", "h");
+        let h = m.register_histogram("hst", "h");
+        c.inc();
+        h.observe(1.0);
+        m.reset();
+        c.inc();
+        h.observe(2.0);
+        assert_eq!(m.counter_value("c"), 1);
+        let s = m.histogram("hst").unwrap();
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.max(), 2.0);
+    }
+
+    #[test]
+    fn report_renders_labeled_series() {
+        let m = Metrics::new();
+        m.counter_vec("resolved", "h", &["outcome"]).with(&["served"]).inc();
+        let rendered = m.report().render();
+        assert!(rendered.contains("resolved{outcome=\"served\"}"), "{rendered}");
     }
 }

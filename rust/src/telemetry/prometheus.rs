@@ -1,0 +1,457 @@
+//! Prometheus text exposition: render the whole registry as
+//! `# HELP`/`# TYPE`-annotated sample lines, plus a format lint used by the
+//! telemetry consistency tests (and by `islandrun stats --prom` consumers
+//! that want to validate a dump before shipping it to a scraper).
+//!
+//! Conventions (documented in the README "Observability" section):
+//! * every metric is prefixed `islandrun_`;
+//! * counters get a `_total` suffix;
+//! * histograms expose cumulative `_bucket{le="..."}` series ending in
+//!   `le="+Inf"`, plus `_sum` and `_count`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+use super::Metrics;
+
+const PREFIX: &str = "islandrun_";
+
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// `k="v",...` pairs (no braces); empty string when unlabeled.
+fn label_pairs(keys: &[String], values: &[String]) -> String {
+    keys.iter()
+        .zip(values)
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn series(full: &str, pairs: &str) -> String {
+    if pairs.is_empty() {
+        full.to_string()
+    } else {
+        format!("{full}{{{pairs}}}")
+    }
+}
+
+/// A bucket series needs `le` appended to the child's own labels.
+fn series_with_le(full: &str, pairs: &str, le: &str) -> String {
+    if pairs.is_empty() {
+        format!("{full}{{le=\"{le}\"}}")
+    } else {
+        format!("{full}{{{pairs},le=\"{le}\"}}")
+    }
+}
+
+impl Metrics {
+    /// Render every registered family in Prometheus text exposition format.
+    /// Families and children are emitted in sorted order, so the output is
+    /// deterministic for a given registry state.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, f) in self.counters.read().unwrap().iter() {
+            let full = format!("{PREFIX}{name}_total");
+            let _ = writeln!(out, "# HELP {full} {}", escape_help(&f.help));
+            let _ = writeln!(out, "# TYPE {full} counter");
+            for (values, c) in f.snapshot_children() {
+                let pairs = label_pairs(&f.labels, &values);
+                let _ = writeln!(out, "{} {}", series(&full, &pairs), c.load(Ordering::SeqCst));
+            }
+        }
+        for (name, f) in self.gauges.read().unwrap().iter() {
+            let full = format!("{PREFIX}{name}");
+            let _ = writeln!(out, "# HELP {full} {}", escape_help(&f.help));
+            let _ = writeln!(out, "# TYPE {full} gauge");
+            for (values, g) in f.snapshot_children() {
+                let pairs = label_pairs(&f.labels, &values);
+                let _ = writeln!(out, "{} {}", series(&full, &pairs), g.load());
+            }
+        }
+        for (name, f) in self.histograms.read().unwrap().iter() {
+            let full = format!("{PREFIX}{name}");
+            let _ = writeln!(out, "# HELP {full} {}", escape_help(&f.help));
+            let _ = writeln!(out, "# TYPE {full} histogram");
+            for (values, h) in f.snapshot_children() {
+                let pairs = label_pairs(&f.labels, &values);
+                let snap = h.snapshot();
+                let bucket = format!("{full}_bucket");
+                for (le, cum) in snap.cumulative_buckets() {
+                    let _ = writeln!(out, "{} {}", series_with_le(&bucket, &pairs, &format!("{le}")), cum);
+                }
+                let _ = writeln!(out, "{} {}", series_with_le(&bucket, &pairs, "+Inf"), snap.count());
+                let _ = writeln!(out, "{} {}", series(&format!("{full}_sum"), &pairs), snap.sum());
+                let _ = writeln!(out, "{} {}", series(&format!("{full}_count"), &pairs), snap.count());
+            }
+        }
+        out
+    }
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse the inside of a label block into (key, unescaped value) pairs.
+fn parse_labels(s: &str, line_no: usize) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    let mut rest = s.trim();
+    while !rest.is_empty() {
+        let eq = rest.find('=').ok_or_else(|| format!("line {line_no}: label without '='"))?;
+        let key = rest[..eq].trim();
+        if !valid_label_name(key) {
+            return Err(format!("line {line_no}: invalid label name {key:?}"));
+        }
+        rest = rest[eq + 1..].trim_start();
+        if !rest.starts_with('"') {
+            return Err(format!("line {line_no}: label value for {key:?} is not quoted"));
+        }
+        let mut val = String::new();
+        let mut close = None;
+        let mut chars = rest.char_indices().skip(1);
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => val.push('\n'),
+                    Some((_, '\\')) => val.push('\\'),
+                    Some((_, '"')) => val.push('"'),
+                    other => {
+                        return Err(format!(
+                            "line {line_no}: bad escape \\{} in label {key:?}",
+                            other.map(|(_, c)| c).unwrap_or(' ')
+                        ))
+                    }
+                },
+                '"' => {
+                    close = Some(i);
+                    break;
+                }
+                _ => val.push(c),
+            }
+        }
+        let close = close.ok_or_else(|| format!("line {line_no}: unterminated label value for {key:?}"))?;
+        out.push((key.to_string(), val));
+        rest = rest[close + 1..].trim_start();
+        if let Some(r) = rest.strip_prefix(',') {
+            rest = r.trim_start();
+            if rest.is_empty() {
+                return Err(format!("line {line_no}: trailing comma in label block"));
+            }
+        } else if !rest.is_empty() {
+            return Err(format!("line {line_no}: expected ',' between labels, got {rest:?}"));
+        }
+    }
+    Ok(out)
+}
+
+/// Split a sample line into (name, label pairs, value).
+fn parse_sample(line: &str, line_no: usize) -> Result<(String, Vec<(String, String)>, f64), String> {
+    let (name, labels, rest) = if let Some(open) = line.find('{') {
+        let name = &line[..open];
+        // find the closing brace, honoring quotes and escapes
+        let mut close = None;
+        let mut in_quotes = false;
+        let mut chars = line.char_indices().skip_while(|&(i, _)| i <= open);
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '"' => in_quotes = !in_quotes,
+                '\\' if in_quotes => {
+                    let _ = chars.next();
+                }
+                '}' if !in_quotes => {
+                    close = Some(i);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let close = close.ok_or_else(|| format!("line {line_no}: unterminated label block"))?;
+        (name, parse_labels(&line[open + 1..close], line_no)?, line[close + 1..].trim())
+    } else {
+        let mut it = line.splitn(2, char::is_whitespace);
+        let name = it.next().unwrap_or("");
+        (name, Vec::new(), it.next().unwrap_or("").trim())
+    };
+    if !valid_metric_name(name) {
+        return Err(format!("line {line_no}: invalid metric name {name:?}"));
+    }
+    // value, optionally followed by an integer timestamp
+    let mut toks = rest.split_whitespace();
+    let value_tok = toks.next().ok_or_else(|| format!("line {line_no}: sample {name:?} has no value"))?;
+    let value: f64 = value_tok
+        .parse()
+        .map_err(|_| format!("line {line_no}: sample {name:?} has non-numeric value {value_tok:?}"))?;
+    if let Some(ts) = toks.next() {
+        if ts.parse::<i64>().is_err() {
+            return Err(format!("line {line_no}: trailing token {ts:?} is not a timestamp"));
+        }
+    }
+    if toks.next().is_some() {
+        return Err(format!("line {line_no}: trailing garbage after sample {name:?}"));
+    }
+    Ok((name.to_string(), labels, value))
+}
+
+/// Validate Prometheus text exposition output. Checks:
+/// * unique `# HELP` / `# TYPE` per family, and both present for any family
+///   with samples;
+/// * `# TYPE` precedes the family's first sample;
+/// * metric and label names are well-formed, label values properly quoted
+///   and escaped;
+/// * no duplicate series (same name + label set twice);
+/// * per histogram child: cumulative bucket counts are monotone
+///   non-decreasing over increasing `le`, the series ends at `le="+Inf"`,
+///   and the `+Inf` count equals the child's `_count`.
+pub fn lint_exposition(text: &str) -> Result<(), String> {
+    let mut helps: BTreeSet<String> = BTreeSet::new();
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut seen_series: BTreeSet<String> = BTreeSet::new();
+    let mut families_with_samples: BTreeSet<String> = BTreeSet::new();
+    // histogram child accounting, keyed by (family, serialized labels sans le)
+    let mut buckets: BTreeMap<(String, String), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<(String, String), f64> = BTreeMap::new();
+
+    let child_key = |labels: &[(String, String)]| -> String {
+        let mut pairs: Vec<String> =
+            labels.iter().filter(|(k, _)| k != "le").map(|(k, v)| format!("{k}={v:?}")).collect();
+        pairs.sort();
+        pairs.join(",")
+    };
+
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("");
+            if !valid_metric_name(name) {
+                return Err(format!("line {line_no}: HELP for invalid name {name:?}"));
+            }
+            if !helps.insert(name.to_string()) {
+                return Err(format!("line {line_no}: duplicate HELP for {name}"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            if !valid_metric_name(name) {
+                return Err(format!("line {line_no}: TYPE for invalid name {name:?}"));
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {line_no}: unknown TYPE {kind:?} for {name}"));
+            }
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                return Err(format!("line {line_no}: duplicate TYPE for {name}"));
+            }
+            if families_with_samples.contains(name) {
+                return Err(format!("line {line_no}: TYPE for {name} appears after its samples"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+
+        let (name, labels, value) = parse_sample(line, line_no)?;
+        // resolve the owning family: exact TYPE match, else histogram suffix
+        let family = if types.contains_key(&name) {
+            name.clone()
+        } else {
+            let base = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|suf| name.strip_suffix(suf))
+                .map(str::to_string);
+            match base {
+                Some(b) if types.get(&b).map(String::as_str) == Some("histogram") => b,
+                _ => return Err(format!("line {line_no}: sample {name} has no preceding TYPE")),
+            }
+        };
+        families_with_samples.insert(family.clone());
+
+        let series_id = format!("{name}|{}", {
+            let mut pairs: Vec<String> = labels.iter().map(|(k, v)| format!("{k}={v:?}")).collect();
+            pairs.sort();
+            pairs.join(",")
+        });
+        if !seen_series.insert(series_id) {
+            return Err(format!("line {line_no}: duplicate series for {name}"));
+        }
+
+        if name.ends_with("_bucket") && types.get(&family).map(String::as_str) == Some("histogram") {
+            let le = labels
+                .iter()
+                .find(|(k, _)| k == "le")
+                .map(|(_, v)| v.clone())
+                .ok_or_else(|| format!("line {line_no}: bucket sample without le label"))?;
+            let bound: f64 = le
+                .parse()
+                .map_err(|_| format!("line {line_no}: unparsable le bound {le:?}"))?;
+            buckets.entry((family, child_key(&labels))).or_default().push((bound, value));
+        } else if name.ends_with("_count") && !types.contains_key(&name) {
+            counts.insert((family, child_key(&labels)), value);
+        }
+    }
+
+    for name in &helps {
+        if !types.contains_key(name) {
+            return Err(format!("{name}: HELP without TYPE"));
+        }
+    }
+    for name in types.keys() {
+        if !helps.contains(name) {
+            return Err(format!("{name}: TYPE without HELP"));
+        }
+    }
+
+    for ((family, key), mut series) in buckets {
+        series.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut prev = f64::NEG_INFINITY;
+        for &(_, count) in &series {
+            if count < prev {
+                return Err(format!("{family}{{{key}}}: bucket counts not monotone"));
+            }
+            prev = count;
+        }
+        let (last_bound, last_count) = *series.last().unwrap();
+        if !last_bound.is_infinite() {
+            return Err(format!("{family}{{{key}}}: bucket series does not end at le=\"+Inf\""));
+        }
+        match counts.get(&(family.clone(), key.clone())) {
+            Some(&c) if c == last_count => {}
+            Some(&c) => {
+                return Err(format!("{family}{{{key}}}: +Inf bucket {last_count} != _count {c}"));
+            }
+            None => return Err(format!("{family}{{{key}}}: histogram child missing _count")),
+        }
+    }
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_round_trips_through_lint() {
+        let m = Metrics::new();
+        m.register_counter("requests_served", "requests served end to end").add(7);
+        m.counter_vec("requests_resolved", "terminal outcomes", &["outcome", "reason"])
+            .with(&["served", "ok"])
+            .add(5);
+        m.register_gauge("queue_depth", "admission queue depth").set(3.0);
+        let hv = m.histogram_vec("island_latency_ms", "per-island latency", &["island", "tier"]);
+        let h = hv.with(&["island-0", "personal"]);
+        for x in [1.0, 5.0, 25.0] {
+            h.observe(x);
+        }
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE islandrun_requests_served_total counter"), "{text}");
+        assert!(text.contains("islandrun_requests_resolved_total{outcome=\"served\",reason=\"ok\"} 5"), "{text}");
+        assert!(text.contains("islandrun_queue_depth 3"), "{text}");
+        assert!(text.contains("island=\"island-0\",tier=\"personal\",le=\"+Inf\"} 3"), "{text}");
+        assert!(text.contains("islandrun_island_latency_ms_count{island=\"island-0\",tier=\"personal\"} 3"), "{text}");
+        lint_exposition(&text).unwrap();
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let m = Metrics::new();
+        m.counter_vec("odd", "odd labels", &["k"]).with(&["a\"b\\c\nd"]).inc();
+        let text = m.render_prometheus();
+        assert!(text.contains(r#"islandrun_odd_total{k="a\"b\\c\nd"} 1"#), "{text}");
+        lint_exposition(&text).unwrap();
+    }
+
+    #[test]
+    fn empty_histogram_child_still_lints() {
+        let m = Metrics::new();
+        m.register_histogram("latency_ms", "never recorded");
+        let text = m.render_prometheus();
+        assert!(text.contains("islandrun_latency_ms_bucket{le=\"+Inf\"} 0"), "{text}");
+        lint_exposition(&text).unwrap();
+    }
+
+    #[test]
+    fn lint_rejects_duplicate_help() {
+        let text = "# HELP x_total a\n# HELP x_total b\n# TYPE x_total counter\n";
+        assert!(lint_exposition(text).unwrap_err().contains("duplicate HELP"));
+    }
+
+    #[test]
+    fn lint_rejects_sample_without_type() {
+        let text = "mystery_metric 4\n";
+        assert!(lint_exposition(text).unwrap_err().contains("no preceding TYPE"));
+    }
+
+    #[test]
+    fn lint_rejects_non_monotone_buckets() {
+        let text = "\
+# HELP h latency
+# TYPE h histogram
+h_bucket{le=\"1\"} 5
+h_bucket{le=\"2\"} 3
+h_bucket{le=\"+Inf\"} 5
+h_sum 9
+h_count 5
+";
+        assert!(lint_exposition(text).unwrap_err().contains("not monotone"));
+    }
+
+    #[test]
+    fn lint_rejects_missing_inf_bucket() {
+        let text = "\
+# HELP h latency
+# TYPE h histogram
+h_bucket{le=\"1\"} 5
+h_sum 9
+h_count 5
+";
+        assert!(lint_exposition(text).unwrap_err().contains("does not end at le"));
+    }
+
+    #[test]
+    fn lint_rejects_inf_count_mismatch() {
+        let text = "\
+# HELP h latency
+# TYPE h histogram
+h_bucket{le=\"+Inf\"} 4
+h_sum 9
+h_count 5
+";
+        assert!(lint_exposition(text).unwrap_err().contains("!= _count"));
+    }
+
+    #[test]
+    fn lint_rejects_duplicate_series_and_bad_escape() {
+        let dup = "# HELP c_total n\n# TYPE c_total counter\nc_total{a=\"x\"} 1\nc_total{a=\"x\"} 2\n";
+        assert!(lint_exposition(dup).unwrap_err().contains("duplicate series"));
+        let bad = "# HELP c_total n\n# TYPE c_total counter\nc_total{a=\"x\\q\"} 1\n";
+        assert!(lint_exposition(bad).unwrap_err().contains("bad escape"));
+    }
+}

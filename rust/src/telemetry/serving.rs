@@ -1,0 +1,329 @@
+//! Pre-registered serving-path metrics: every counter, gauge and histogram
+//! the orchestrator touches per request, resolved to typed handles once at
+//! construction. A request's hot path then performs only atomic bumps —
+//! no name lookups, no registry locks, no allocation.
+//!
+//! Label conventions (see the README "Observability" section):
+//! * `island` — `island-N` (the [`crate::types::IslandId`] display form);
+//! * `tier` — [`crate::types::TrustTier::name`]: `personal` /
+//!   `private-edge` / `cloud`;
+//! * `privacy` — the island's privacy score, fixed to two decimals;
+//! * `outcome` / `reason` — [`Resolution::class`] / [`Resolution::reason`].
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::server::Resolution;
+
+use super::{Counter, CounterVec, Gauge, Hist, HistogramVec, Metrics};
+
+/// Cached cells for one island's per-island series. Resolved at routing
+/// time and carried with the prepared request, so recording a served
+/// request's latency is a single atomic histogram insert.
+pub struct IslandCells {
+    /// `island_latency_ms{island,tier,privacy}` — end-to-end latency of
+    /// requests served by this island.
+    pub latency_ms: Hist,
+    /// `served_by_island{island,tier,privacy}` — requests served.
+    pub served: Counter,
+}
+
+/// One pre-resolved counter per [`Resolution`] variant — the
+/// `requests_resolved{outcome,reason}` family without any per-request
+/// lookup.
+pub struct ResolvedCells {
+    served: Counter,
+    shed_queue_full: Counter,
+    shed_deadline_expired: Counter,
+    shed_invalid_request: Counter,
+    shed_worker_panic: Counter,
+    shed_shutdown: Counter,
+    cancelled_while_queued: Counter,
+    cancelled_before_execution: Counter,
+    cancelled_mid_decode: Counter,
+    cancelled_deadline_mid_decode: Counter,
+    failed_fail_closed: Counter,
+    failed_failover_exhausted: Counter,
+    failed_execution_error: Counter,
+    failed_session_closed: Counter,
+}
+
+impl ResolvedCells {
+    fn register(vec: &CounterVec) -> Self {
+        let cell = |r: Resolution| vec.with(&[r.class(), r.reason()]);
+        use crate::server::{CancelPoint as C, FailReason as F, ShedReason as S};
+        ResolvedCells {
+            served: cell(Resolution::Served),
+            shed_queue_full: cell(Resolution::Shed(S::QueueFull)),
+            shed_deadline_expired: cell(Resolution::Shed(S::DeadlineExpired)),
+            shed_invalid_request: cell(Resolution::Shed(S::InvalidRequest)),
+            shed_worker_panic: cell(Resolution::Shed(S::WorkerPanic)),
+            shed_shutdown: cell(Resolution::Shed(S::Shutdown)),
+            cancelled_while_queued: cell(Resolution::Cancelled(C::WhileQueued)),
+            cancelled_before_execution: cell(Resolution::Cancelled(C::BeforeExecution)),
+            cancelled_mid_decode: cell(Resolution::Cancelled(C::MidDecode)),
+            cancelled_deadline_mid_decode: cell(Resolution::Cancelled(C::DeadlineMidDecode)),
+            failed_fail_closed: cell(Resolution::Failed(F::FailClosed)),
+            failed_failover_exhausted: cell(Resolution::Failed(F::FailoverExhausted)),
+            failed_execution_error: cell(Resolution::Failed(F::ExecutionError)),
+            failed_session_closed: cell(Resolution::Failed(F::SessionClosed)),
+        }
+    }
+
+    /// The counter for one resolution — a direct field match, no lookup.
+    pub fn of(&self, r: Resolution) -> &Counter {
+        use crate::server::{CancelPoint as C, FailReason as F, ShedReason as S};
+        match r {
+            Resolution::Served => &self.served,
+            Resolution::Shed(S::QueueFull) => &self.shed_queue_full,
+            Resolution::Shed(S::DeadlineExpired) => &self.shed_deadline_expired,
+            Resolution::Shed(S::InvalidRequest) => &self.shed_invalid_request,
+            Resolution::Shed(S::WorkerPanic) => &self.shed_worker_panic,
+            Resolution::Shed(S::Shutdown) => &self.shed_shutdown,
+            Resolution::Cancelled(C::WhileQueued) => &self.cancelled_while_queued,
+            Resolution::Cancelled(C::BeforeExecution) => &self.cancelled_before_execution,
+            Resolution::Cancelled(C::MidDecode) => &self.cancelled_mid_decode,
+            Resolution::Cancelled(C::DeadlineMidDecode) => &self.cancelled_deadline_mid_decode,
+            Resolution::Failed(F::FailClosed) => &self.failed_fail_closed,
+            Resolution::Failed(F::FailoverExhausted) => &self.failed_failover_exhausted,
+            Resolution::Failed(F::ExecutionError) => &self.failed_execution_error,
+            Resolution::Failed(F::SessionClosed) => &self.failed_session_closed,
+        }
+    }
+}
+
+/// Every serving-path metric, pre-registered against one [`Metrics`]
+/// registry. Legacy string-keyed reads (`counter_value("requests_served")`
+/// etc.) keep working because handles share cells with the name table.
+pub struct ServingMetrics {
+    // admission + queue
+    pub rate_limited: Counter,
+    pub enqueued: Counter,
+    pub rejected_queue_full: Counter,
+    pub shed_deadline_expired: Counter,
+    pub rejected_invalid_request: Counter,
+    pub queue_depth: Gauge,
+    pub queue_wait_ms: Hist,
+    // routing + sanitization
+    pub rejected_fail_closed: Counter,
+    pub local_capacity: Gauge,
+    pub mist_s_r: Hist,
+    pub sanitized_requests: Counter,
+    pub sanitized_turns: Counter,
+    pub sanitized_turns_reused: Counter,
+    // execution + failover
+    pub execution_failed: Counter,
+    pub failovers: Counter,
+    pub failover_successes: Counter,
+    pub rejected_failover_exhausted: Counter,
+    pub batch_groups: Counter,
+    pub batch_group_size: Hist,
+    pub batch_occupancy: Hist,
+    pub steady_state_batch_occupancy: Gauge,
+    pub step_drive_panics: Counter,
+    pub queue_drain_panics: Counter,
+    // resolution
+    pub requests_served: Counter,
+    pub requests_cancelled: Counter,
+    pub cancelled_while_queued: Counter,
+    pub cancelled_before_execution: Counter,
+    pub cancelled_mid_decode: Counter,
+    pub cancelled_deadline_mid_decode: Counter,
+    pub cancelled_tokens_decoded: Hist,
+    pub ticket_double_resolved: Counter,
+    pub latency_ms: Hist,
+    pub cost_usd: Hist,
+    /// `requests_resolved{outcome,reason}` — exactly one bump per resolved
+    /// request id; the consistency stress test pins Σ(children) == tickets
+    /// resolved.
+    pub resolved: ResolvedCells,
+    // fleet churn
+    pub island_crashes: Counter,
+    pub island_revives: Counter,
+    pub island_joins: Counter,
+    pub island_leaves: Counter,
+    pub islands_degraded: Counter,
+    pub islands_recovered: Counter,
+    // per-island labeled families (children resolved lazily per island and
+    // cached so routing pays one lookup per request, resolution pays none)
+    island_latency: HistogramVec,
+    served_by_island: CounterVec,
+    failovers_by_island: CounterVec,
+    island_cells: RwLock<BTreeMap<u32, Arc<IslandCells>>>,
+    failover_cells: RwLock<BTreeMap<u32, Counter>>,
+}
+
+impl ServingMetrics {
+    pub fn register(m: &Metrics) -> ServingMetrics {
+        let c = |name: &str, help: &str| m.register_counter(name, help);
+        let g = |name: &str, help: &str| m.register_gauge(name, help);
+        let h = |name: &str, help: &str| m.register_histogram(name, help);
+        ServingMetrics {
+            rate_limited: c("rate_limited", "requests refused by the per-user rate limiter"),
+            enqueued: c("enqueued", "requests accepted into the admission queue"),
+            rejected_queue_full: c("rejected_queue_full", "requests shed because the admission queue was full"),
+            shed_deadline_expired: c(
+                "shed_deadline_expired",
+                "requests shed at drain time: deadline expired while queued",
+            ),
+            rejected_invalid_request: c("rejected_invalid_request", "requests rejected by submit-time validation"),
+            queue_depth: g("queue_depth", "admission queue depth at the last enqueue/drain"),
+            queue_wait_ms: h("queue_wait_ms", "time spent parked in the admission queue (ms)"),
+            rejected_fail_closed: c(
+                "rejected_fail_closed",
+                "requests rejected fail-closed: no island satisfied the constraints",
+            ),
+            local_capacity: g("local_capacity", "aggregate local capacity R(t) at the last routing pass"),
+            mist_s_r: h("mist_s_r", "MIST sensitivity score s_r after floor clamping"),
+            sanitized_requests: c(
+                "sanitized_requests",
+                "requests whose history was sanitized for a trust-boundary crossing",
+            ),
+            sanitized_turns: c("sanitized_turns", "conversation turns rewritten by MIST sanitization"),
+            sanitized_turns_reused: c("sanitized_turns_reused", "sanitized turns reused from the incremental cache"),
+            execution_failed: c("execution_failed", "requests failed on a non-recoverable island execution error"),
+            failovers: c("failovers", "failover hops: execution attempts that hit a dead island"),
+            failover_successes: c("failover_successes", "requests served after at least one failover hop"),
+            rejected_failover_exhausted: c(
+                "rejected_failover_exhausted",
+                "requests rejected after exhausting the failover retry budget",
+            ),
+            batch_groups: c("batch_groups", "co-routed batch groups dispatched to islands"),
+            batch_group_size: h("batch_group_size", "requests per dispatched batch group"),
+            batch_occupancy: h("batch_occupancy", "in-flight requests per continuous-batching step-loop round"),
+            steady_state_batch_occupancy: g(
+                "steady_state_batch_occupancy",
+                "in-flight requests at the last step-loop round",
+            ),
+            step_drive_panics: c("step_drive_panics", "island step-loop driver panics (orphaned requests shed)"),
+            queue_drain_panics: c("queue_drain_panics", "queue worker drain panics (batch shed)"),
+            requests_served: c("requests_served", "requests served end to end"),
+            requests_cancelled: c("requests_cancelled", "requests cancelled after decoding started (partial charge)"),
+            cancelled_while_queued: c(
+                "cancelled_while_queued",
+                "caller cancels observed while the request was still queued",
+            ),
+            cancelled_before_execution: c(
+                "cancelled_before_execution",
+                "caller cancels observed after routing, before decode",
+            ),
+            cancelled_mid_decode: c("cancelled_mid_decode", "caller cancels observed between decode steps"),
+            cancelled_deadline_mid_decode: c(
+                "cancelled_deadline_mid_decode",
+                "deadline expiries observed between decode steps",
+            ),
+            cancelled_tokens_decoded: h(
+                "cancelled_tokens_decoded",
+                "tokens decoded (and charged) before a mid-decode cancel",
+            ),
+            ticket_double_resolved: c(
+                "ticket_double_resolved",
+                "ticket resolutions that lost the first-wins race (must stay 0)",
+            ),
+            latency_ms: h("latency_ms", "end-to-end latency of served requests (ms)"),
+            cost_usd: h("cost_usd", "per-request serving cost (USD)"),
+            resolved: ResolvedCells::register(&m.counter_vec(
+                "requests_resolved",
+                "terminal request resolutions by outcome class and reason",
+                &["outcome", "reason"],
+            )),
+            island_crashes: c("island_crashes", "announced island crashes (clean shutdown)"),
+            island_revives: c("island_revives", "islands powered back on and announced"),
+            island_joins: c("island_joins", "islands that joined the mesh mid-run"),
+            island_leaves: c("island_leaves", "islands deprovisioned from the mesh"),
+            islands_degraded: c("islands_degraded", "TIDE degrade-detector trips (island capacity collapsed)"),
+            islands_recovered: c("islands_recovered", "TIDE degrade-detector recoveries"),
+            island_latency: m.histogram_vec(
+                "island_latency_ms",
+                "end-to-end latency of served requests, by serving island (ms)",
+                &["island", "tier", "privacy"],
+            ),
+            served_by_island: m.counter_vec(
+                "served_by_island",
+                "requests served, by serving island",
+                &["island", "tier", "privacy"],
+            ),
+            failovers_by_island: m.counter_vec(
+                "failovers_by_island",
+                "failover hops attributed to the island that died",
+                &["island"],
+            ),
+            island_cells: RwLock::new(BTreeMap::new()),
+            failover_cells: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Cached per-island cells; `tier`/`privacy` become label values on
+    /// first resolution (island specs are static, so first wins).
+    pub fn island(&self, id: u32, tier: &str, privacy: f64) -> Arc<IslandCells> {
+        if let Some(cells) = self.island_cells.read().unwrap().get(&id) {
+            return Arc::clone(cells);
+        }
+        let island = format!("island-{id}");
+        let privacy = format!("{privacy:.2}");
+        let labels = [island.as_str(), tier, privacy.as_str()];
+        let cells = Arc::new(IslandCells {
+            latency_ms: self.island_latency.with(&labels),
+            served: self.served_by_island.with(&labels),
+        });
+        let mut w = self.island_cells.write().unwrap();
+        Arc::clone(w.entry(id).or_insert(cells))
+    }
+
+    /// Cached `failovers_by_island{island}` counter for a dead island.
+    pub fn failover_from(&self, id: u32) -> Counter {
+        if let Some(c) = self.failover_cells.read().unwrap().get(&id) {
+            return c.clone();
+        }
+        let island = format!("island-{id}");
+        let counter = self.failovers_by_island.with(&[island.as_str()]);
+        let mut w = self.failover_cells.write().unwrap();
+        w.entry(id).or_insert(counter).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registers_against_legacy_names() {
+        let m = Metrics::new();
+        let s = ServingMetrics::register(&m);
+        s.requests_served.inc();
+        s.latency_ms.observe(12.0);
+        s.queue_depth.set(3.0);
+        assert_eq!(m.counter_value("requests_served"), 1);
+        assert_eq!(m.histogram("latency_ms").unwrap().count(), 1);
+        assert_eq!(m.gauge_value("queue_depth"), Some(3.0));
+    }
+
+    #[test]
+    fn resolved_cells_cover_every_resolution() {
+        let m = Metrics::new();
+        let s = ServingMetrics::register(&m);
+        for r in Resolution::ALL {
+            s.resolved.of(r).inc();
+        }
+        assert_eq!(m.counter_value("requests_resolved"), Resolution::ALL.len() as u64);
+        assert_eq!(m.counter_children("requests_resolved").len(), Resolution::ALL.len());
+    }
+
+    #[test]
+    fn island_cells_are_cached_and_labeled() {
+        let m = Metrics::new();
+        let s = ServingMetrics::register(&m);
+        let a = s.island(3, "personal", 0.9);
+        let b = s.island(3, "personal", 0.9);
+        assert!(Arc::ptr_eq(&a, &b));
+        a.latency_ms.observe(5.0);
+        a.served.inc();
+        let children = m.histogram_children("island_latency_ms");
+        assert_eq!(children.len(), 1);
+        assert_eq!(children[0].0, vec!["island-3".to_string(), "personal".to_string(), "0.90".to_string()]);
+        assert_eq!(children[0].1.count(), 1);
+        s.failover_from(3).inc();
+        s.failover_from(3).inc();
+        assert_eq!(m.counter_value("failovers_by_island"), 2);
+    }
+}

@@ -19,6 +19,23 @@ const BASE: f64 = 1e-3; // 1 microsecond when samples are in ms
 const GROWTH: f64 = 1.07;
 const NBUCKETS: usize = 400;
 
+/// Number of log-scaled buckets (shared with the lock-free telemetry
+/// histogram so both record into identical bucket grids).
+pub(crate) const BUCKETS: usize = NBUCKETS;
+
+/// Bucket index for a sample, after the same clamping [`Histogram::record`]
+/// applies (non-finite / negative samples land in bucket 0).
+pub(crate) fn bucket_index(x: f64) -> usize {
+    let x = if x.is_finite() && x > 0.0 { x } else { 0.0 };
+    Histogram::bucket_of(x)
+}
+
+/// Upper bound of bucket `i` (exclusive): bucket i covers
+/// [BASE * GROWTH^i, BASE * GROWTH^(i+1)).
+pub(crate) fn bucket_upper(i: usize) -> f64 {
+    Histogram::bucket_lo(i + 1)
+}
+
 impl Default for Histogram {
     fn default() -> Self {
         Self::new()
@@ -28,6 +45,35 @@ impl Default for Histogram {
 impl Histogram {
     pub fn new() -> Self {
         Histogram { buckets: vec![0; NBUCKETS], count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Rebuild a histogram from raw parts — used by the lock-free telemetry
+    /// histogram to snapshot its atomic bucket array into this query type.
+    /// `buckets` must use the same BASE/GROWTH grid (enforced by length).
+    pub(crate) fn from_parts(buckets: Vec<u64>, count: u64, sum: f64, min: f64, max: f64) -> Self {
+        assert_eq!(buckets.len(), NBUCKETS, "bucket grid mismatch");
+        Histogram { buckets, count, sum, min, max }
+    }
+
+    /// Cumulative (bucket, upper-bound) pairs up to and including the last
+    /// non-empty bucket — the Prometheus `le` series, excluding `+Inf`.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let last = match self.buckets.iter().rposition(|&c| c > 0) {
+            Some(i) => i,
+            None => return Vec::new(),
+        };
+        let mut out = Vec::with_capacity(last + 1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate().take(last + 1) {
+            cum += c;
+            out.push((Self::bucket_lo(i + 1), cum));
+        }
+        out
+    }
+
+    /// Total of all samples (numerator of [`Histogram::mean`]).
+    pub fn sum(&self) -> f64 {
+        self.sum
     }
 
     fn bucket_of(x: f64) -> usize {

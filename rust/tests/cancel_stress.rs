@@ -7,7 +7,7 @@
 //! - every cancelled ticket resolves exactly once (`ticket_double_resolved`
 //!   stays 0, every `wait()` returns),
 //! - every consumed id leaves exactly one audit entry, and cancelled
-//!   outcomes match the `cancelled:`-scoped audit view one-to-one,
+//!   outcomes match the typed cancellation audit view one-to-one,
 //! - the ledger equals Σ per-outcome costs — a cancelled request is charged
 //!   exactly its prefill + decoded tokens, never its full budget,
 //! - a deadline expiring mid-generation stops the decode early
@@ -121,7 +121,7 @@ fn mid_decode_cancellation_under_contention_keeps_every_invariant() {
     assert!(matches!(events.first(), Some(TokenEvent::First { .. })), "stream must open with First: {events:?}");
     assert!(matches!(events.last(), Some(TokenEvent::Done)), "a served stream ends with Done: {events:?}");
     let probe_out = probe.wait().unwrap();
-    assert!(!probe_out.cancelled);
+    assert!(!probe_out.cancelled());
     assert_eq!(probe_out.tokens_generated, 8);
 
     let mut outcomes: Vec<Outcome> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
@@ -160,7 +160,7 @@ fn mid_decode_cancellation_under_contention_keeps_every_invariant() {
     // 4. every doomed request died on its decode cursor, before its budget
     let doomed_total = (producers * PER_PRODUCER * 2 / 6) as u64;
     assert_eq!(orch.metrics.counter_value("cancelled_deadline_mid_decode"), doomed_total);
-    let cancelled: Vec<&Outcome> = outcomes.iter().filter(|o| o.cancelled).collect();
+    let cancelled: Vec<&Outcome> = outcomes.iter().filter(|o| o.cancelled()).collect();
     assert!(cancelled.len() as u64 >= doomed_total + PRE_CANCELLED as u64, "got {} cancelled", cancelled.len());
     for out in &cancelled {
         assert!(out.tokens_generated < DOOMED_TOKENS, "cancel must stop decode early: {}", out.tokens_generated);
@@ -184,7 +184,7 @@ fn mid_decode_cancellation_under_contention_keeps_every_invariant() {
     assert!(orch.metrics.counter_value("cancelled_while_queued") >= PRE_CANCELLED as u64);
     for t in &pre_cancelled {
         let out = t.wait().unwrap();
-        assert!(out.cancelled);
+        assert!(out.cancelled());
         assert_eq!(out.cost, 0.0);
         assert!(out.decision.target().is_none(), "cancelled-while-queued must never route");
     }

@@ -121,10 +121,8 @@ fn churn_under_load_loses_no_request() {
     // 5. failover accounting is internally consistent
     let failovers_metric = orch.metrics.counter_value("failovers");
     assert_eq!(orch.audit.total_failovers(), failovers_metric, "audit failovers != failovers metric");
-    let per_island: u64 = preset_personal_group()
-        .iter()
-        .map(|i| orch.metrics.counter_value(&format!("failover_from_island_{}", i.id.0)))
-        .sum();
+    let per_island: u64 =
+        orch.metrics.counter_children("failovers_by_island").into_iter().map(|(_, n)| n).sum();
     assert_eq!(per_island, failovers_metric, "per-island failover counters must sum to the total");
 
     // 6. no outcome claims an island outside the original mesh

@@ -6,7 +6,7 @@ use islandrun::agents::mist::sanitize::PlaceholderMap;
 use islandrun::agents::mist::{Mist, Stage2};
 use islandrun::config::{preset_healthcare, preset_personal_group, Config};
 use islandrun::islands::Fleet;
-use islandrun::server::{Backend, Orchestrator};
+use islandrun::server::{Backend, Orchestrator, SubmitRequest};
 use islandrun::types::PriorityTier;
 
 fn sim(islands: Vec<islandrun::types::Island>, seed: u64) -> Orchestrator {
@@ -28,7 +28,7 @@ fn guarantee1_privacy_preservation_over_long_session() {
         };
         let prompt = islandrun::substrate::trace::prompt_for(class, &mut rng);
         let out = orch
-            .submit(s, &prompt, islandrun::substrate::trace::priority_for(class), None)
+            .submit_request(s, SubmitRequest::new(&prompt).priority(islandrun::substrate::trace::priority_for(class)))
             .expect("admitted");
         if let Some(id) = out.decision.target() {
             let island = islands.iter().find(|x| x.id == id).unwrap();
@@ -44,11 +44,18 @@ fn guarantee2_context_sanitization_on_every_downward_crossing() {
     let orch = sim(islands.clone(), 32);
     let s = orch.open_session("dr");
     // sensitive turn on the workstation
-    let t1 = orch.submit(s, "patient john doe ssn 123-45-6789 with diabetes", PriorityTier::Primary, None).unwrap();
+    let t1 = orch
+        .submit_request(
+            s,
+            SubmitRequest::new("patient john doe ssn 123-45-6789 with diabetes").priority(PriorityTier::Primary),
+        )
+        .unwrap();
     assert!(!t1.sanitized);
     // push follow-ups off the workstation
     orch.saturate_bounded_islands(0.99);
-    let t2 = orch.submit(s, "suggest general wellness resources", PriorityTier::Burstable, None).unwrap();
+    let t2 = orch
+        .submit_request(s, SubmitRequest::new("suggest general wellness resources").priority(PriorityTier::Burstable))
+        .unwrap();
     let target = islands.iter().find(|i| Some(i.id) == t2.decision.target()).unwrap();
     assert!(target.privacy < 1.0);
     assert!(t2.sanitized, "downward crossing must sanitize");
@@ -68,7 +75,14 @@ fn guarantee3_data_locality_never_exfiltrates() {
     let orch = sim(islands.clone(), 33);
     let s = orch.open_session("nurse");
     for _ in 0..30 {
-        let out = orch.submit(s, "query the phi records for trends", PriorityTier::Secondary, Some("phi_db")).unwrap();
+        let out = orch
+            .submit_request(
+                s,
+                SubmitRequest::new("query the phi records for trends")
+                    .priority(PriorityTier::Secondary)
+                    .dataset("phi_db"),
+            )
+            .unwrap();
         let target = out.decision.target().expect("dataset exists on an island");
         assert_eq!(target, islands[3].id, "requests must follow the data");
         orch.advance(2_000.0);
@@ -80,10 +94,14 @@ fn desanitized_responses_keep_conversation_coherent() {
     let islands = preset_personal_group();
     let orch = sim(islands, 34);
     let s = orch.open_session("alice");
-    orch.submit(s, "patient jane smith has hypertension", PriorityTier::Primary, None).unwrap();
+    orch
+        .submit_request(s, SubmitRequest::new("patient jane smith has hypertension").priority(PriorityTier::Primary))
+        .unwrap();
     // force offload; the sim response echoes placeholders back
     orch.saturate_bounded_islands(0.99);
-    let out = orch.submit(s, "thanks, anything else to monitor", PriorityTier::Burstable, None).unwrap();
+    let out = orch
+        .submit_request(s, SubmitRequest::new("thanks, anything else to monitor").priority(PriorityTier::Burstable))
+        .unwrap();
     assert!(out.sanitized);
     // stored history view (what the user sees) contains original entities,
     // never placeholder tokens
@@ -115,14 +133,21 @@ fn failover_to_lower_privacy_island_matches_fresh_sanitization() {
     let s = orch.open_session("dr");
 
     // turn 1: PHI on the workstation (P=1.0), no sanitization
-    let t1 = orch.submit(s, "patient john doe ssn 123-45-6789 has diabetes", PriorityTier::Primary, None).unwrap();
+    let t1 = orch
+        .submit_request(
+            s,
+            SubmitRequest::new("patient john doe ssn 123-45-6789 has diabetes").priority(PriorityTier::Primary),
+        )
+        .unwrap();
     assert_eq!(t1.decision.target(), Some(islands[0].id));
     assert!(!t1.sanitized);
     orch.advance(500.0);
 
     // saturate the workstation so follow-ups offload to the PHI edge
     orch.set_island_load(islands[0].id, 0.99);
-    let t2 = orch.submit(s, "what should we monitor generally", PriorityTier::Burstable, None).unwrap();
+    let t2 = orch
+        .submit_request(s, SubmitRequest::new("what should we monitor generally").priority(PriorityTier::Burstable))
+        .unwrap();
     assert_eq!(t2.decision.target(), Some(islands[1].id), "expected the 0.8 edge, got {:?}", t2.decision);
     assert!(t2.sanitized, "1.0 -> 0.8 crossing must sanitize");
     orch.advance(500.0);
@@ -131,7 +156,9 @@ fn failover_to_lower_privacy_island_matches_fresh_sanitization() {
     // execute, and fails over DOWN to cloud (0.4) — re-sanitized from the
     // cached 0.8-level form
     orch.silent_crash_island(islands[1].id);
-    let t3 = orch.submit(s, "anything else to watch for", PriorityTier::Burstable, None).unwrap();
+    let t3 = orch
+        .submit_request(s, SubmitRequest::new("anything else to watch for").priority(PriorityTier::Burstable))
+        .unwrap();
     assert_eq!(t3.decision.target(), Some(islands[2].id), "expected cloud after failover, got {:?}", t3.decision);
     assert!(t3.sanitized);
     assert!(orch.metrics.counter_value("failovers") >= 1);
@@ -176,11 +203,13 @@ fn repeat_crossings_sanitize_only_the_delta() {
 
     for i in 0..3 {
         let phi = format!("patient john doe ssn 123-45-678{i} has diabetes");
-        let t_phi = orch.submit(s, &phi, PriorityTier::Primary, None).unwrap();
+        let t_phi = orch.submit_request(s, SubmitRequest::new(&phi).priority(PriorityTier::Primary)).unwrap();
         assert_eq!(t_phi.decision.target(), Some(islands[0].id), "round {i}: {:?}", t_phi.decision);
         assert!(!t_phi.sanitized);
         orch.advance(500.0);
-        let t_gen = orch.submit(s, "what should we monitor generally", PriorityTier::Burstable, None).unwrap();
+        let t_gen = orch
+            .submit_request(s, SubmitRequest::new("what should we monitor generally").priority(PriorityTier::Burstable))
+            .unwrap();
         assert_eq!(t_gen.decision.target(), Some(islands[1].id), "round {i}: {:?}", t_gen.decision);
         assert!(t_gen.sanitized);
         orch.advance(500.0);
@@ -227,7 +256,9 @@ fn fail_closed_beats_availability_everywhere() {
     let orch = sim(islands, 35);
     let s = orch.open_session("alice");
     for _ in 0..10 {
-        let out = orch.submit(s, "patient john doe ssn 123-45-6789", PriorityTier::Primary, None).unwrap();
+        let out = orch
+            .submit_request(s, SubmitRequest::new("patient john doe ssn 123-45-6789").priority(PriorityTier::Primary))
+            .unwrap();
         assert!(matches!(out.decision, islandrun::agents::waves::Decision::Reject { .. }));
         orch.advance(100.0);
     }

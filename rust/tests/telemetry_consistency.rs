@@ -1,0 +1,181 @@
+//! Telemetry ↔ outcome consistency under mixed concurrent traffic.
+//!
+//! Every terminal resolution must be counted exactly once in the
+//! `requests_resolved{outcome,reason}` family and logged exactly once in the
+//! analytics ring; served requests must land exactly once in the latency
+//! histograms (fleet-wide and per-island). The stress mix covers blocking
+//! submits, queued tickets, cancel-while-queued, and invalid requests, then
+//! pins:
+//! - Σ outcome-labeled counters == tickets/submissions resolved,
+//! - histogram sample counts == served requests (fleet and per-island),
+//! - one analytics event per resolution, with outcome/reason pairs drawn
+//!   from the same typed [`Resolution`] vocabulary as the counters,
+//! - `render_prometheus()` passes the format lint and exposes the island /
+//!   tier / outcome label sets.
+//!
+//! Producer count is overridable via `ISLANDRUN_STRESS_THREADS` so the CI
+//! release-mode stress job can push harder than the debug test job.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use islandrun::agents::mist::Mist;
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::eval::loadgen::class_for;
+use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator, Outcome, Resolution, SubmitRequest, Ticket};
+use islandrun::substrate::trace::{priority_for, prompt_for};
+use islandrun::telemetry::lint_exposition;
+use islandrun::util::Rng;
+
+const PER_PRODUCER: usize = 40;
+const QUEUED: usize = 24;
+const PRE_CANCELLED: usize = 6;
+const INVALID: usize = 3;
+
+fn producers() -> usize {
+    std::env::var("ISLANDRUN_STRESS_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
+fn orchestrator(seed: u64) -> Arc<Orchestrator> {
+    let mut cfg = Config::default();
+    // admission policy is not under test: a saturating rate limit or budget
+    // would shed traffic through paths this test wants to count explicitly
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    cfg.queue_capacity = 100_000;
+    cfg.serve_workers = 4;
+    let fleet = Fleet::new(preset_personal_group(), seed);
+    Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), seed))
+}
+
+#[test]
+fn every_resolution_is_counted_logged_and_exposable() {
+    let producers = producers();
+    let orch = orchestrator(611);
+
+    // --- phase 0: parked tickets cancelled before any worker exists ------
+    let pre_session = orch.open_session("precancel");
+    let pre_cancelled: Vec<Ticket> = (0..PRE_CANCELLED)
+        .map(|_| {
+            let t = orch.enqueue(pre_session, SubmitRequest::new("hello world").deadline_ms(1e12));
+            t.cancel();
+            t
+        })
+        .collect();
+
+    // --- phase 1: blocking submits + queued tickets from many threads ----
+    Arc::clone(&orch).start_queue();
+    let outcomes: Arc<Mutex<Vec<Outcome>>> = Arc::new(Mutex::new(Vec::new()));
+    let handles: Vec<_> = (0..producers)
+        .map(|p| {
+            let orch = Arc::clone(&orch);
+            let outcomes = Arc::clone(&outcomes);
+            std::thread::spawn(move || {
+                let session = orch.open_session(&format!("mixed-{p}"));
+                let mut rng = Rng::new(17 ^ (p as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut local = Vec::new();
+                let mut tickets = Vec::new();
+                for i in 0..PER_PRODUCER {
+                    let class = class_for(i);
+                    let req = SubmitRequest::new(prompt_for(class, &mut rng)).priority(priority_for(class));
+                    local.push(orch.submit_request(session, req).expect("blocking submit resolves"));
+                    orch.advance(5.0);
+                }
+                for i in 0..QUEUED / producers.max(1) {
+                    let class = class_for(i);
+                    let req = SubmitRequest::new(prompt_for(class, &mut rng))
+                        .priority(priority_for(class))
+                        .deadline_ms(1e12);
+                    tickets.push(orch.enqueue(session, req));
+                    orch.advance(5.0);
+                }
+                for _ in 0..INVALID {
+                    local.push(
+                        orch.submit_request(session, SubmitRequest::new("degenerate").max_new_tokens(0))
+                            .expect("invalid requests shed, they do not error"),
+                    );
+                }
+                for t in tickets {
+                    local.push(t.wait().expect("no ticket may be lost"));
+                }
+                outcomes.lock().unwrap().extend(local);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut outcomes = Arc::try_unwrap(outcomes).expect("workers joined").into_inner().unwrap();
+    outcomes.extend(pre_cancelled.iter().map(|t| t.wait().expect("pre-cancelled tickets resolve")));
+
+    // --- invariant 1: Σ outcome-labeled counters == resolutions ----------
+    let total = outcomes.len() as u64;
+    let children = orch.metrics.counter_children("requests_resolved");
+    let counted: u64 = children.iter().map(|(_, n)| n).sum();
+    assert_eq!(counted, total, "requests_resolved must count each resolution exactly once");
+    assert_eq!(orch.metrics.counter_value("requests_resolved"), total);
+    // per-(outcome, reason) pair, the counter matches the outcomes
+    let mut by_pair: BTreeMap<(&str, &str), u64> = BTreeMap::new();
+    for out in &outcomes {
+        *by_pair.entry((out.resolution.class(), out.resolution.reason())).or_default() += 1;
+    }
+    for (labels, n) in &children {
+        let pair = (labels[0].as_str(), labels[1].as_str());
+        assert!(
+            Resolution::ALL.iter().any(|r| (r.class(), r.reason()) == pair),
+            "label pair {pair:?} is outside the typed Resolution vocabulary"
+        );
+        let expected = by_pair.iter().find(|((c, r), _)| (*c, *r) == pair).map(|(_, n)| *n).unwrap_or(0);
+        assert_eq!(*n, expected, "counter {pair:?} disagrees with outcomes");
+    }
+    assert!(
+        outcomes.iter().any(|o| o.resolution == Resolution::Served),
+        "the mix must serve something for the histogram invariants to bite"
+    );
+
+    // --- invariant 2: histogram samples == served requests ---------------
+    let served = outcomes.iter().filter(|o| o.resolution == Resolution::Served).count() as u64;
+    assert_eq!(orch.metrics.counter_value("requests_served"), served);
+    let latency = orch.metrics.histogram("latency_ms").expect("latency_ms registered");
+    assert_eq!(latency.count(), served, "latency_ms samples must equal served requests");
+    let island_children = orch.metrics.histogram_children("island_latency_ms");
+    let island_samples: u64 = island_children.iter().map(|(_, h)| h.count()).sum();
+    assert_eq!(island_samples, served, "per-island latency samples must sum to served requests");
+    let served_by_island: u64 = orch.metrics.counter_children("served_by_island").iter().map(|(_, n)| n).sum();
+    assert_eq!(served_by_island, served);
+    for (labels, _) in &island_children {
+        assert_eq!(labels.len(), 3, "island series carry island/tier/privacy labels");
+        assert!(labels[0].starts_with("island-"), "{labels:?}");
+        assert!(["personal", "private-edge", "cloud"].contains(&labels[1].as_str()), "{labels:?}");
+        assert!(labels[2].parse::<f64>().is_ok(), "{labels:?}");
+    }
+
+    // --- invariant 3: one analytics event per resolution -----------------
+    assert_eq!(orch.analytics.dropped(), 0, "the mix must fit the default ring");
+    let events = orch.analytics.snapshot();
+    assert_eq!(events.len() as u64, total, "one analytics event per resolved request");
+    let mut event_pairs: BTreeMap<(&str, &str), u64> = BTreeMap::new();
+    for ev in &events {
+        *event_pairs.entry((ev.outcome, ev.reason)).or_default() += 1;
+    }
+    assert_eq!(event_pairs, by_pair, "analytics events must mirror the outcome counters");
+    for ev in &events {
+        if ev.outcome == "served" {
+            assert!(ev.island.is_some() && ev.tier.is_some(), "served events carry island evidence");
+            assert!(ev.resolved_ms.is_finite());
+        }
+    }
+
+    // --- invariant 4: the exposition is valid and fully labeled ----------
+    let text = orch.metrics.render_prometheus();
+    lint_exposition(&text).expect("render_prometheus must pass the format lint");
+    assert!(text.contains("islandrun_requests_resolved_total{outcome=\"served\",reason=\"ok\"}"), "{text}");
+    assert!(text.contains("islandrun_island_latency_ms_bucket{island=\"island-"), "per-island buckets missing");
+    assert!(text.contains("islandrun_requests_served_total"), "unlabeled counters must render");
+    assert!(text.contains("le=\"+Inf\""), "histograms must close with +Inf");
+
+    // --- lifecycle bookkeeping stays intact under the mix ----------------
+    assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+    assert_eq!(orch.audit.len(), outcomes.len(), "one audit entry per consumed id");
+}
