@@ -6,9 +6,15 @@
 //! islandrun demo                             §I.A motivating example
 //! islandrun attacks                          §VIII.C attack drill
 //! islandrun serve [--requests N] [--preset P] real PJRT serving run
+//! islandrun serve --addr HOST:PORT [--keys K=USER,..] [--rate RPS]
+//!                 [--burst B] [--max-seconds S] HTTP/1.1 network serving
+//!                                            surface on the Sim backend
 //! islandrun loadgen [--requests N] [--producers P] [--workers W] [--preset P]
 //!                                            open-loop run over the
 //!                                            enqueue/Ticket queue path (Sim)
+//! islandrun loadgen --http [--addr HOST:PORT --keys K1,K2]
+//!                                            same arrival schedule, but over
+//!                                            real loopback sockets
 //! islandrun stats [--requests N] [--preset P] [--prom] [--prom-out FILE]
 //!                 [--events-out FILE]        run a short Sim workload and dump
 //!                                            telemetry (table or Prometheus)
@@ -21,11 +27,11 @@ use std::sync::Arc;
 use crate::agents::mist::{Mist, Stage2};
 use crate::config::{preset, Config};
 use crate::eval::experiments;
-use crate::eval::loadgen::run_open_loop;
+use crate::eval::loadgen::{run_open_loop, run_open_loop_http};
 use crate::islands::executor::IslandExecutor;
 use crate::islands::Fleet;
 use crate::runtime::Engine;
-use crate::server::{Backend, Orchestrator, SubmitRequest};
+use crate::server::{Backend, HttpConfig, HttpServer, Orchestrator, SubmitRequest};
 
 /// Tiny argument scanner: positional args + `--key value` flags.
 pub struct Args {
@@ -78,10 +84,21 @@ USAGE:
   islandrun attacks                          run the §VIII.C attack drill
   islandrun serve [--requests N] [--preset personal|healthcare|legal|hiking]
                   [--artifacts DIR]          serve a real workload via PJRT
+  islandrun serve --addr HOST:PORT [--keys KEY=USER,...] [--rate RPS]
+                  [--burst B] [--workers W] [--preset P] [--max-seconds S]
+                                             network serving surface: HTTP/1.1
+                                             submit/poll/stream/cancel endpoints
+                                             with Bearer-key auth, /metrics and
+                                             /healthz, on the Sim backend
   islandrun loadgen [--requests N] [--producers P] [--workers W]
                   [--preset personal|healthcare|legal|hiking]
                                              open-loop run over the non-blocking
                                              enqueue/Ticket path (Sim backend)
+  islandrun loadgen --http [--addr HOST:PORT --keys KEY1,KEY2]
+                                             socket-true open loop: the same
+                                             arrival schedule over real loopback
+                                             TCP (spins an ephemeral server when
+                                             no --addr is given)
   islandrun stats [--requests N] [--preset P] [--prom] [--prom-out FILE]
                   [--events-out FILE]        run a short Sim workload and print
                                              telemetry: the metrics table, or
@@ -172,6 +189,9 @@ fn cmd_attacks() -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    if args.flag("addr").is_some() {
+        return cmd_serve_http(args);
+    }
     let n: usize = args.flag("requests").and_then(|s| s.parse().ok()).unwrap_or(16);
     let preset_name = args.flag("preset").unwrap_or("personal");
     let artifacts = args.flag("artifacts").unwrap_or("artifacts");
@@ -224,6 +244,77 @@ fn cmd_serve(args: &Args) -> i32 {
     0
 }
 
+/// Parse `--keys` grants: comma-separated `key=user` pairs mapping each
+/// bearer API key to the user it bills to.
+fn parse_keys(spec: &str) -> Result<Vec<(String, String)>, String> {
+    let mut grants = Vec::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let Some((key, user)) = part.split_once('=') else {
+            return Err(format!("bad --keys entry '{part}' (expected KEY=USER)"));
+        };
+        if key.is_empty() || user.is_empty() {
+            return Err(format!("bad --keys entry '{part}' (empty key or user)"));
+        }
+        grants.push((key.to_string(), user.to_string()));
+    }
+    if grants.is_empty() {
+        return Err("--keys must list at least one KEY=USER grant".to_string());
+    }
+    Ok(grants)
+}
+
+/// `serve --addr`: expose the orchestrator over the dependency-free
+/// HTTP/1.1 surface on the Sim backend. The PJRT in-process `serve` path
+/// (no `--addr`) is untouched. Admission is enforced per API key by the
+/// HTTP front door's token bucket (`--rate`/`--burst`), so the
+/// orchestrator's own limiter is opened wide to avoid double-charging.
+fn cmd_serve_http(args: &Args) -> i32 {
+    let addr = args.flag("addr").filter(|a| !a.is_empty()).unwrap_or("127.0.0.1:8080");
+    let keys_spec = args.flag("keys").filter(|k| !k.is_empty()).unwrap_or("dev-key=cli-user");
+    let grants = match parse_keys(keys_spec) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let preset_name = args.flag("preset").filter(|p| !p.is_empty()).unwrap_or("personal");
+    let Some(islands) = preset(preset_name) else {
+        eprintln!("unknown preset '{preset_name}'");
+        return 2;
+    };
+    let rate: f64 = args.flag("rate").and_then(|s| s.parse().ok()).unwrap_or(50.0);
+    let burst: f64 = args.flag("burst").and_then(|s| s.parse().ok()).unwrap_or(rate);
+    let workers: usize = args.flag("workers").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let mut cfg = Config::default();
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    cfg.serve_workers = workers;
+    let orch = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(Fleet::new(islands, 7)), 7));
+    let http_cfg = HttpConfig { rate_per_sec: rate.max(0.0), burst: burst.max(1.0), ..HttpConfig::default() };
+    let server = match HttpServer::start(Arc::clone(&orch), addr, &grants, http_cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            return 1;
+        }
+    };
+    println!("listening on http://{} — preset '{preset_name}', {} API key(s), Sim backend", server.addr(), grants.len());
+    println!("endpoints: POST /v1/submit · GET /v1/tickets/:id · GET /v1/stream/:id · POST /v1/tickets/:id/cancel · GET /metrics · GET /healthz");
+    match args.flag("max-seconds").and_then(|s| s.parse::<f64>().ok()) {
+        Some(secs) => {
+            // bounded run (tests / smoke): serve, drain, report
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs.max(0.0)));
+            server.shutdown();
+            orch.metrics.report().print();
+        }
+        None => loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        },
+    }
+    0
+}
+
 /// Open-loop load generation over the non-blocking request lifecycle
 /// (enqueue → admit → queue → route → batch → execute → resolve) on the
 /// Sim backend: producers push the whole arrival stream through
@@ -231,6 +322,9 @@ fn cmd_serve(args: &Args) -> i32 {
 /// every `Ticket` is awaited. Prints the lifecycle metrics (queue waits,
 /// sheds, batch grouping) that the blocking path cannot exhibit.
 fn cmd_loadgen(args: &Args) -> i32 {
+    if args.flag("http").is_some() {
+        return cmd_loadgen_http(args);
+    }
     let total: usize = args.flag("requests").and_then(|s| s.parse().ok()).unwrap_or(400);
     let producers: usize = args.flag("producers").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
     let workers: usize = args.flag("workers").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
@@ -270,6 +364,87 @@ fn cmd_loadgen(args: &Args) -> i32 {
         return 1;
     }
     0
+}
+
+/// `loadgen --http`: the socket-true twin of the in-process open loop —
+/// identical arrival schedule, but every request crosses a real loopback
+/// TCP connection through `POST /v1/submit` / `GET /v1/tickets/:id`. With
+/// `--addr` + `--keys` it drives an already-running server (keys are raw
+/// bearer tokens, comma-separated); without `--addr` it spins an ephemeral
+/// Sim-backed server so the command is self-contained.
+fn cmd_loadgen_http(args: &Args) -> i32 {
+    let total: usize = args.flag("requests").and_then(|s| s.parse().ok()).unwrap_or(400);
+    let producers: usize = args.flag("producers").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let per_producer = ((total + producers - 1) / producers).max(1);
+    if let Some(addr_spec) = args.flag("addr").filter(|a| !a.is_empty()) {
+        use std::net::ToSocketAddrs;
+        let Some(addr) = addr_spec.to_socket_addrs().ok().and_then(|mut it| it.next()) else {
+            eprintln!("cannot resolve --addr '{addr_spec}'");
+            return 2;
+        };
+        let keys: Vec<String> =
+            args.flag("keys").unwrap_or("").split(',').filter(|k| !k.is_empty()).map(String::from).collect();
+        if keys.is_empty() {
+            eprintln!("--http with --addr needs --keys KEY1,KEY2 (raw bearer tokens)");
+            return 2;
+        }
+        let report = run_open_loop_http(addr, &keys, producers, per_producer, 11);
+        print_http_load_report(&report, None);
+        return if report.errors == 0 { 0 } else { 1 };
+    }
+    // self-contained: ephemeral loopback server on the Sim backend
+    let workers: usize = args.flag("workers").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let preset_name = args.flag("preset").filter(|p| !p.is_empty()).unwrap_or("personal");
+    let Some(islands) = preset(preset_name) else {
+        eprintln!("unknown preset '{preset_name}'");
+        return 2;
+    };
+    let mut cfg = Config::default();
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    cfg.serve_workers = workers;
+    let orch = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(Fleet::new(islands, 7)), 7));
+    // the generator measures transport + queue behavior, not admission
+    let http_cfg = HttpConfig { rate_per_sec: 1e9, burst: 1e9, ..HttpConfig::default() };
+    let grants = vec![("loadgen-key".to_string(), "http-loadgen".to_string())];
+    let server = match HttpServer::start(Arc::clone(&orch), "127.0.0.1:0", &grants, http_cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind loopback: {e}");
+            return 1;
+        }
+    };
+    let report = run_open_loop_http(server.addr(), &["loadgen-key".to_string()], producers, per_producer, 11);
+    server.shutdown();
+    print_http_load_report(&report, Some(&orch));
+    if report.errors != 0 {
+        eprintln!("{} requests errored on the wire — no ticket may be lost", report.errors);
+        return 1;
+    }
+    0
+}
+
+fn print_http_load_report(report: &crate::eval::loadgen::HttpLoadReport, orch: Option<&Arc<Orchestrator>>) {
+    let mut t = crate::util::Table::new("loadgen --http — open loop over loopback TCP", &["metric", "value"]);
+    t.row(&["connections x per-connection".into(), format!("{} x {}", report.connections, report.attempted / report.connections.max(1))]);
+    t.row(&["attempted".into(), report.attempted.to_string()]);
+    t.row(&["served".into(), report.served.to_string()]);
+    t.row(&["rejected (fail-closed + shed)".into(), report.rejected.to_string()]);
+    t.row(&["wire errors".into(), report.errors.to_string()]);
+    t.row(&["throughput".into(), format!("{:.0} req/s", report.requests_per_sec())]);
+    if let Some(orch) = orch {
+        t.row(&["server audit entries".into(), orch.audit.len().to_string()]);
+        if let Some(h) = orch.metrics.histogram("queue_wait_ms") {
+            t.row(&["queue wait p50 / p99 (virtual ms)".into(), format!("{:.1} / {:.1}", h.p50(), h.p99())]);
+        }
+        let submit_label = vec!["submit".to_string()];
+        if let Some((_, h)) =
+            orch.metrics.histogram_children("http_request_ms").into_iter().find(|(labels, _)| labels == &submit_label)
+        {
+            t.row(&["http submit p50 / p99 (wall ms)".into(), format!("{:.2} / {:.2}", h.p50(), h.p99())]);
+        }
+    }
+    t.print();
 }
 
 /// Drive a short deterministic Sim workload through the queue path and
@@ -390,5 +565,30 @@ mod tests {
     fn loadgen_command_drives_the_queue_path() {
         assert_eq!(run(&argv(&["loadgen", "--requests", "32", "--producers", "2", "--workers", "2"])), 0);
         assert_eq!(run(&argv(&["loadgen", "--preset", "nonexistent"])), 2);
+    }
+
+    #[test]
+    fn parse_keys_accepts_grants_and_rejects_garbage() {
+        let grants = parse_keys("a=alice,b=bob").unwrap();
+        assert_eq!(grants.len(), 2);
+        assert_eq!(grants[0], ("a".to_string(), "alice".to_string()));
+        assert!(parse_keys("").is_err());
+        assert!(parse_keys("noequals").is_err());
+        assert!(parse_keys("=user").is_err());
+        assert!(parse_keys("key=").is_err());
+    }
+
+    #[test]
+    fn serve_addr_starts_serves_and_drains() {
+        let code = run(&argv(&["serve", "--addr", "127.0.0.1:0", "--keys", "k=cli-user", "--max-seconds", "0"]));
+        assert_eq!(code, 0);
+        assert_eq!(run(&argv(&["serve", "--addr", "127.0.0.1:0", "--keys", "malformed"])), 2);
+    }
+
+    #[test]
+    fn loadgen_http_drives_the_socket_path() {
+        assert_eq!(run(&argv(&["loadgen", "--http", "--requests", "16", "--producers", "2", "--workers", "2"])), 0);
+        // external-server mode without keys is a usage error
+        assert_eq!(run(&argv(&["loadgen", "--http", "--addr", "127.0.0.1:1"])), 2);
     }
 }

@@ -20,10 +20,22 @@
 //! of announced crashes (the liveness view learns immediately) and silent
 //! ones (detected only by heartbeat timeout or a failed execution, which
 //! exercises the orchestrator's failover path).
+//!
+//! Socket mode ([`run_open_loop_http`]): the same open-loop arrival
+//! schedule (identical class mix, prompts and seeding) driven through a
+//! real [`crate::server::HttpServer`] endpoint over loopback TCP — submit
+//! over keep-alive connections, then poll every ticket to its terminal
+//! resolution. In-process vs. socket overhead is directly comparable
+//! because only the transport differs.
 
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
+use crate::config::json::Json;
+use crate::server::http::client::HttpClient;
+use crate::server::http::wire::priority_name;
 use crate::server::{Orchestrator, Outcome, SubmitRequest, Ticket};
 use crate::substrate::trace::{priority_for, prompt_for, SensClass};
 use crate::types::Island;
@@ -294,6 +306,138 @@ pub fn run_open_loop(orch: &Arc<Orchestrator>, producers: usize, per_producer: u
     LoadReport { threads: producers, attempted: producers * per_producer, outcomes, errors, wall_s }
 }
 
+/// Aggregate result of one socket-mode open-loop run. Unlike [`LoadReport`]
+/// the outcomes live server-side; the client only observes the typed
+/// resolution class off the wire, so the report carries counts, not
+/// [`Outcome`]s.
+#[derive(Debug)]
+pub struct HttpLoadReport {
+    /// Keep-alive connections driven (one per producer).
+    pub connections: usize,
+    /// Requests attempted (connections × per_connection).
+    pub attempted: usize,
+    /// Tickets that resolved `served` (a routing decision with a target).
+    pub served: usize,
+    /// Tickets that resolved with any other typed class (shed / failed /
+    /// cancelled) — fail-closed rejections, counted not lost.
+    pub rejected: usize,
+    /// Transport or protocol errors: refused submits (401/429/400), ticket
+    /// polls that 404ed, or tickets whose terminal state was an error.
+    pub errors: usize,
+    pub wall_s: f64,
+}
+
+impl HttpLoadReport {
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.attempted as f64 / self.wall_s
+        }
+    }
+}
+
+/// How long [`run_open_loop_http`] will poll one ticket before giving up
+/// and counting it as an error — a liveness backstop, never hit when the
+/// server is healthy.
+const HTTP_POLL_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Drive `producers` keep-alive connections × `per_producer` arrivals
+/// through a live [`crate::server::HttpServer`] at `addr`: the socket-true
+/// twin of [`run_open_loop`]. Each producer submits its whole stream over
+/// `POST /v1/submit` without waiting for completions (same class mix,
+/// prompts, per-producer seeding and unbounded deadline as the in-process
+/// driver, so the two measure the same workload and differ only in
+/// transport), then polls every ticket over `GET /v1/tickets/:id` to its
+/// terminal resolution. Producer `t` authenticates with
+/// `api_keys[t % len]`; virtual time is the server's concern (its clock
+/// pump), so no `advance` calls happen here.
+pub fn run_open_loop_http(
+    addr: SocketAddr,
+    api_keys: &[String],
+    producers: usize,
+    per_producer: usize,
+    seed: u64,
+) -> HttpLoadReport {
+    assert!(!api_keys.is_empty(), "run_open_loop_http needs at least one API key");
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..producers)
+        .map(|t| {
+            let key = api_keys[t % api_keys.len()].clone();
+            std::thread::spawn(move || drive_http_producer(addr, &key, t, per_producer, seed))
+        })
+        .collect();
+    let (mut served, mut rejected, mut errors) = (0usize, 0usize, 0usize);
+    for h in handles {
+        let (s, r, e) = h.join().unwrap();
+        served += s;
+        rejected += r;
+        errors += e;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    HttpLoadReport { connections: producers, attempted: producers * per_producer, served, rejected, errors, wall_s }
+}
+
+/// One producer's life: submit the whole arrival stream on a single
+/// keep-alive connection, then poll every ticket to a terminal state.
+/// Returns (served, rejected, errors).
+fn drive_http_producer(addr: SocketAddr, key: &str, t: usize, per_producer: usize, seed: u64) -> (usize, usize, usize) {
+    let Ok(mut client) = HttpClient::connect(addr) else {
+        return (0, 0, per_producer);
+    };
+    let mut rng = Rng::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut ids: Vec<u64> = Vec::with_capacity(per_producer);
+    let mut errors = 0usize;
+    for i in 0..per_producer {
+        let class = class_for(i);
+        let body = Json::obj(vec![
+            ("prompt", Json::str(&prompt_for(class, &mut rng))),
+            ("priority", Json::str(priority_name(priority_for(class)))),
+            ("deadline_ms", Json::num(1e12)),
+        ]);
+        match client.request("POST", "/v1/submit", Some(key), Some(&body)) {
+            Ok(resp) if resp.status == 200 => match resp.json().as_ref().and_then(|j| j.get("ticket").as_i64()) {
+                Some(id) => ids.push(id as u64),
+                None => errors += 1,
+            },
+            // 401/429/400/5xx: the server refused before admitting — no
+            // ticket exists, nothing to poll
+            Ok(_) | Err(_) => errors += 1,
+        }
+    }
+    let (mut served, mut rejected) = (0usize, 0usize);
+    'tickets: for id in ids {
+        let path = format!("/v1/tickets/{id}");
+        let give_up = Instant::now() + HTTP_POLL_DEADLINE;
+        loop {
+            let Ok(resp) = client.request("GET", &path, Some(key), None) else {
+                errors += 1;
+                continue 'tickets;
+            };
+            let parsed = if resp.status == 200 { resp.json() } else { None };
+            let Some(json) = parsed else {
+                errors += 1;
+                continue 'tickets;
+            };
+            if json.get("done").as_bool() == Some(true) {
+                match json.get("outcome").get("outcome").as_str() {
+                    Some("served") => served += 1,
+                    Some(_) => rejected += 1,
+                    // `{"done":true,"error":...}`: the ticket itself failed
+                    None => errors += 1,
+                }
+                continue 'tickets;
+            }
+            if Instant::now() > give_up {
+                errors += 1;
+                continue 'tickets;
+            }
+            std::thread::sleep(Duration::from_micros(300));
+        }
+    }
+    (served, rejected, errors)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +500,31 @@ mod tests {
         assert_eq!(ids.len(), 96);
         assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
         assert!(report.requests_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn open_loop_http_accounts_every_ticket() {
+        use crate::server::{HttpConfig, HttpServer};
+        let orch = orchestrator();
+        let grants =
+            vec![("lg-key-a".to_string(), "http-loadgen-a".to_string()), ("lg-key-b".to_string(), "http-loadgen-b".to_string())];
+        let server = HttpServer::start(
+            Arc::clone(&orch),
+            "127.0.0.1:0",
+            &grants,
+            HttpConfig { rate_per_sec: 1e9, burst: 1e9, ..HttpConfig::default() },
+        )
+        .expect("bind loopback");
+        let keys: Vec<String> = grants.iter().map(|(k, _)| k.clone()).collect();
+        let report = run_open_loop_http(server.addr(), &keys, 2, 12, 9);
+        assert_eq!(report.attempted, 24);
+        assert_eq!(report.errors, 0, "healthy server: every submit admitted, every poll terminal");
+        assert_eq!(report.served + report.rejected, 24);
+        // exactly one audit entry per wire submission
+        assert_eq!(orch.audit.len(), 24);
+        assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+        assert!(report.requests_per_sec() > 0.0);
+        server.shutdown();
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! Minimal blocking HTTP/1.1 client over one keep-alive connection —
+//! scaffolding for the loopback integration tests, the socket-true
+//! loadgen ([`crate::eval::loadgen::run_open_loop_http`]) and the
+//! `http_e2e` bench. Not a general-purpose client: it speaks exactly the
+//! dialect the server emits (`Content-Length` or chunked responses, SSE
+//! event framing) and nothing more.
+
+use std::collections::VecDeque;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use crate::config::json::Json;
+
+/// One response, fully buffered (chunked bodies are de-chunked).
+pub struct ClientResponse {
+    pub status: u16,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// Parse the body as JSON (`None` when it is not valid JSON).
+    pub fn json(&self) -> Option<Json> {
+        Json::parse(std::str::from_utf8(&self.body).ok()?).ok()
+    }
+}
+
+/// One keep-alive connection to the server. Dropping the client closes the
+/// socket — mid-stream, that is exactly the "client went away" signal the
+/// server turns into a cooperative cancel.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// De-chunked SSE bytes read ahead of the current record boundary.
+    pending: VecDeque<u8>,
+}
+
+fn read_line(r: &mut impl BufRead) -> io::Result<String> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line)?;
+    if n == 0 {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "server closed the connection"));
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(line)
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr) -> io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(HttpClient { reader, writer: stream, pending: VecDeque::new() })
+    }
+
+    /// Issue one request and read the full response (keep-alive: the
+    /// connection is reusable afterwards). `api_key` becomes a bearer
+    /// token; `body` is sent as JSON.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        api_key: Option<&str>,
+        body: Option<&Json>,
+    ) -> io::Result<ClientResponse> {
+        let payload = body.map(|b| b.to_string().into_bytes());
+        self.request_raw(method, path, api_key, payload.as_deref())
+    }
+
+    /// Like [`Self::request`] but with a raw body — lets tests send
+    /// deliberately malformed JSON to exercise the fail-closed 400 path.
+    pub fn request_raw(
+        &mut self,
+        method: &str,
+        path: &str,
+        api_key: Option<&str>,
+        body: Option<&[u8]>,
+    ) -> io::Result<ClientResponse> {
+        self.send(method, path, api_key, body)?;
+        let (status, chunked, len) = self.read_head()?;
+        let body = if chunked { self.read_chunked()? } else { self.read_sized(len)? };
+        Ok(ClientResponse { status, body })
+    }
+
+    /// Issue a `GET` for an SSE stream and read only the response head,
+    /// leaving the chunked body on the wire. Follow with [`Self::read_event`];
+    /// drop the client to abandon the stream mid-way.
+    pub fn start_stream(&mut self, path: &str, api_key: Option<&str>) -> io::Result<u16> {
+        self.send("GET", path, api_key, None)?;
+        let (status, _chunked, _len) = self.read_head()?;
+        Ok(status)
+    }
+
+    /// Hard-close the underlying socket (both directions) — the abrupt
+    /// "client went away" a mid-stream disconnect test needs, without
+    /// waiting for the value to drop.
+    pub fn disconnect(&mut self) {
+        let _ = self.writer.shutdown(std::net::Shutdown::Both);
+    }
+
+    /// Read the next SSE event off an open stream: `Ok(Some((event, data)))`
+    /// per record, `Ok(None)` at the end of the stream (terminating chunk).
+    pub fn read_event(&mut self) -> io::Result<Option<(String, String)>> {
+        let (mut event, mut data) = (String::new(), String::new());
+        loop {
+            let Some(line) = self.read_chunked_line()? else {
+                return Ok(None);
+            };
+            if line.is_empty() {
+                if event.is_empty() && data.is_empty() {
+                    continue;
+                }
+                return Ok(Some((event, data)));
+            }
+            if let Some(v) = line.strip_prefix("event: ") {
+                event = v.to_string();
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = v.to_string();
+            }
+        }
+    }
+
+    /// Drain an entire SSE stream to its end and return every event. On a
+    /// non-200 (fixed-length error body) the body is consumed so the
+    /// connection stays reusable.
+    pub fn stream_events(&mut self, path: &str, api_key: Option<&str>) -> io::Result<(u16, Vec<(String, String)>)> {
+        self.send("GET", path, api_key, None)?;
+        let (status, chunked, len) = self.read_head()?;
+        let mut events = Vec::new();
+        if !chunked {
+            let _ = self.read_sized(len)?;
+            return Ok((status, events));
+        }
+        while let Some(ev) = self.read_event()? {
+            events.push(ev);
+        }
+        Ok((status, events))
+    }
+
+    fn send(&mut self, method: &str, path: &str, api_key: Option<&str>, body: Option<&[u8]>) -> io::Result<()> {
+        let mut req = format!("{method} {path} HTTP/1.1\r\nHost: islandrun\r\n");
+        if let Some(key) = api_key {
+            req.push_str(&format!("Authorization: Bearer {key}\r\n"));
+        }
+        if let Some(payload) = body {
+            req.push_str(&format!("Content-Type: application/json\r\nContent-Length: {}\r\n", payload.len()));
+        }
+        req.push_str("\r\n");
+        let mut bytes = req.into_bytes();
+        bytes.extend_from_slice(body.unwrap_or_default());
+        self.writer.write_all(&bytes)?;
+        self.writer.flush()
+    }
+
+    /// Status line + headers; returns (status, chunked?, content-length).
+    fn read_head(&mut self) -> io::Result<(u16, bool, usize)> {
+        let status_line = read_line(&mut self.reader)?;
+        let status = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, format!("bad status line: {status_line}")))?;
+        let (mut chunked, mut len) = (false, 0usize);
+        loop {
+            let line = read_line(&mut self.reader)?;
+            if line.is_empty() {
+                break;
+            }
+            let Some((name, value)) = line.split_once(':') else { continue };
+            let (name, value) = (name.trim().to_ascii_lowercase(), value.trim());
+            if name == "transfer-encoding" && value.eq_ignore_ascii_case("chunked") {
+                chunked = true;
+            } else if name == "content-length" {
+                len = value
+                    .parse()
+                    .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad content-length"))?;
+            }
+        }
+        Ok((status, chunked, len))
+    }
+
+    fn read_sized(&mut self, len: usize) -> io::Result<Vec<u8>> {
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body)?;
+        Ok(body)
+    }
+
+    /// De-chunk a whole body (terminating chunk included).
+    fn read_chunked(&mut self) -> io::Result<Vec<u8>> {
+        let mut body = Vec::new();
+        while let Some(chunk) = self.read_chunk()? {
+            body.extend_from_slice(&chunk);
+        }
+        Ok(body)
+    }
+
+    /// One chunk, `None` on the zero-length terminator.
+    fn read_chunk(&mut self) -> io::Result<Option<Vec<u8>>> {
+        let size_line = read_line(&mut self.reader)?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, format!("bad chunk size: {size_line}")))?;
+        if size == 0 {
+            let _ = read_line(&mut self.reader); // trailing CRLF after the last chunk
+            return Ok(None);
+        }
+        let mut chunk = vec![0u8; size];
+        self.reader.read_exact(&mut chunk)?;
+        read_line(&mut self.reader)?; // chunk-terminating CRLF
+        Ok(Some(chunk))
+    }
+
+    /// Buffered line reader over the chunked SSE body: chunk boundaries and
+    /// SSE record boundaries are independent, so this re-frames by lines.
+    fn read_chunked_line(&mut self) -> io::Result<Option<String>> {
+        let mut line = Vec::new();
+        loop {
+            match self.read_byte()? {
+                None => {
+                    return if line.is_empty() {
+                        Ok(None)
+                    } else {
+                        Err(io::Error::new(io::ErrorKind::UnexpectedEof, "stream ended mid-line"))
+                    };
+                }
+                Some(b'\n') => {
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+                }
+                Some(b) => line.push(b),
+            }
+        }
+    }
+
+    fn read_byte(&mut self) -> io::Result<Option<u8>> {
+        if self.pending.is_empty() {
+            match self.read_chunk()? {
+                None => return Ok(None),
+                Some(chunk) => self.pending = chunk.into(),
+            }
+        }
+        Ok(self.pending.pop_front())
+    }
+}

@@ -1,0 +1,306 @@
+//! Hand-rolled HTTP/1.1 framing: request parsing and response writing over
+//! any [`BufRead`]/[`Write`] pair — no dependencies, same offline-vendoring
+//! discipline as the rest of the crate.
+//!
+//! The parser is deliberately narrow: request line + headers + an optional
+//! `Content-Length` body (the only framing our clients use). Everything
+//! else — chunked request bodies, multi-line headers, HTTP/2 preface — is
+//! rejected fail-closed as `InvalidData`, which the connection loop answers
+//! with a 400 and a close. Reads tolerate the socket read timeout the
+//! server installs for drain polling: a timeout *between* requests is an
+//! idle keep-alive connection (close it only when draining), a timeout
+//! *inside* a request is retried until the drain flag flips.
+
+use std::io::{self, BufRead, Read, Write};
+
+/// Hard cap on request bodies; larger submits are rejected before buffering.
+pub(crate) const MAX_BODY_BYTES: usize = 1 << 20;
+const MAX_HEADER_LINE: usize = 16 * 1024;
+const MAX_HEADERS: usize = 100;
+
+/// One parsed request: method, origin-form target, lower-cased headers and
+/// the (possibly empty) body.
+pub(crate) struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive single-valued header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Read one CRLF- (or LF-) terminated line. `at_boundary` marks the
+/// request line of a keep-alive connection: there, a clean EOF — or a read
+/// timeout once the server is draining — returns `None` (close the
+/// connection); anywhere else both are errors.
+fn read_line<R: BufRead>(r: &mut R, draining: &dyn Fn() -> bool, at_boundary: bool) -> io::Result<Option<String>> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let (consumed, done) = {
+            let buf = match r.fill_buf() {
+                Ok(b) => b,
+                Err(e) if is_timeout(&e) => {
+                    if !draining() {
+                        continue;
+                    }
+                    if at_boundary && line.is_empty() {
+                        return Ok(None);
+                    }
+                    return Err(io::Error::new(io::ErrorKind::TimedOut, "server draining mid-request"));
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if buf.is_empty() {
+                if at_boundary && line.is_empty() {
+                    return Ok(None);
+                }
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof mid-line"));
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    line.extend_from_slice(&buf[..pos]);
+                    (pos + 1, true)
+                }
+                None => {
+                    line.extend_from_slice(buf);
+                    (buf.len(), false)
+                }
+            }
+        };
+        r.consume(consumed);
+        if done {
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+        }
+        if line.len() > MAX_HEADER_LINE {
+            return Err(bad("header line too long"));
+        }
+    }
+}
+
+fn read_body<R: Read>(r: &mut R, len: usize, draining: &dyn Fn() -> bool) -> io::Result<Vec<u8>> {
+    let mut body = vec![0u8; len];
+    let mut filled = 0;
+    while filled < len {
+        match r.read(&mut body[filled..]) {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in body")),
+            Ok(n) => filled += n,
+            Err(e) if is_timeout(&e) => {
+                if draining() {
+                    return Err(io::Error::new(io::ErrorKind::TimedOut, "server draining mid-body"));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(body)
+}
+
+/// Read one request off a keep-alive connection. `Ok(None)` means the
+/// connection ended cleanly between requests (client EOF, or an idle
+/// connection observed after the drain flag flipped); `Err` means a
+/// malformed or truncated request — the caller answers 400/closes.
+pub(crate) fn read_request<R: BufRead>(r: &mut R, draining: &dyn Fn() -> bool) -> io::Result<Option<HttpRequest>> {
+    // tolerate stray blank lines between keep-alive requests (RFC 9112 §2.2)
+    let line = loop {
+        match read_line(r, draining, true)? {
+            None => return Ok(None),
+            Some(l) if l.is_empty() => continue,
+            Some(l) => break l,
+        }
+    };
+    let mut parts = line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => return Err(bad("malformed request line")),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad("unsupported HTTP version"));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let Some(hline) = read_line(r, draining, false)? else {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in headers"));
+        };
+        if hline.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(bad("too many headers"));
+        }
+        let Some((name, value)) = hline.split_once(':') else {
+            return Err(bad("malformed header"));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let len = match headers.iter().find(|(n, _)| n == "content-length") {
+        Some((_, v)) => v.parse::<usize>().map_err(|_| bad("malformed content-length"))?,
+        None => 0,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(bad("payload too large"));
+    }
+    let body = read_body(r, len, draining)?;
+    // the query string is routing noise for this API: strip it
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    Ok(Some(HttpRequest { method: method.to_string(), path, headers, body }))
+}
+
+pub(crate) fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one fixed-length response. Head and body go out in a single
+/// `write_all` so concurrent peeks never see a torn response.
+pub(crate) fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    close: bool,
+) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        reason_phrase(status),
+        body.len(),
+        if close { "close" } else { "keep-alive" },
+    );
+    for (name, value) in extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    let mut buf = head.into_bytes();
+    buf.extend_from_slice(body);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Start a chunked `text/event-stream` response. The stream stays
+/// keep-alive: the terminating zero-length chunk marks the end of the
+/// body, so the client can reuse the connection afterwards.
+pub(crate) fn write_stream_head(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+          Transfer-Encoding: chunked\r\nConnection: keep-alive\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// Write one chunk of a chunked body (flushed: SSE consumers read live).
+pub(crate) fn write_chunk(w: &mut impl Write, data: &[u8]) -> io::Result<()> {
+    let mut buf = format!("{:x}\r\n", data.len()).into_bytes();
+    buf.extend_from_slice(data);
+    buf.extend_from_slice(b"\r\n");
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Terminate a chunked body.
+pub(crate) fn write_last_chunk(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> io::Result<Option<HttpRequest>> {
+        read_request(&mut Cursor::new(raw.to_vec()), &|| false)
+    }
+
+    #[test]
+    fn parses_request_with_body_and_headers() {
+        let raw = b"POST /v1/submit?x=1 HTTP/1.1\r\nHost: localhost\r\nAuthorization: Bearer k1\r\n\
+                    Content-Length: 4\r\n\r\nabcd";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/submit", "query string is stripped");
+        assert_eq!(req.header("authorization"), Some("Bearer k1"));
+        assert_eq!(req.header("AUTHORIZATION"), Some("Bearer k1"), "header lookup is case-insensitive");
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn parses_two_keepalive_requests_off_one_stream() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\n\r\n";
+        let mut cur = Cursor::new(raw.to_vec());
+        let a = read_request(&mut cur, &|| false).unwrap().unwrap();
+        let b = read_request(&mut cur, &|| false).unwrap().unwrap();
+        assert_eq!(a.path, "/healthz");
+        assert_eq!(b.path, "/metrics");
+        assert!(read_request(&mut cur, &|| false).unwrap().is_none(), "clean EOF between requests");
+    }
+
+    #[test]
+    fn rejects_malformed_request_lines_and_headers() {
+        assert!(parse(b"NOT-HTTP\r\n\r\n").is_err());
+        assert!(parse(b"GET /x HTTP/2.0\r\n\r\n").is_err());
+        assert!(parse(b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n").is_err());
+        assert!(parse(b"GET /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_bodies_fail_closed() {
+        let raw = format!("POST /v1/submit HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(parse(raw.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn truncated_body_is_an_error_not_a_hang() {
+        assert!(parse(b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").is_err());
+    }
+
+    #[test]
+    fn response_writer_frames_status_and_length() {
+        let mut out = Vec::new();
+        write_response(&mut out, 404, "application/json", &[], b"{}", false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn chunked_writer_hex_frames_and_terminates() {
+        let mut out = Vec::new();
+        write_chunk(&mut out, b"0123456789abcdef0").unwrap();
+        write_last_chunk(&mut out).unwrap();
+        assert_eq!(out, b"11\r\n0123456789abcdef0\r\n0\r\n\r\n");
+    }
+}

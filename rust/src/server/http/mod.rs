@@ -1,0 +1,256 @@
+//! HTTP/1.1 network serving surface — the socket boundary in front of the
+//! orchestrator's non-blocking request lifecycle. Dependency-free: a std
+//! [`TcpListener`], a hand-rolled HTTP/1.1 parser (`conn`) and wire-JSON
+//! codecs (`wire`), same offline-vendoring discipline as the rest of the
+//! crate.
+//!
+//! Endpoints:
+//!
+//! | Route | Meaning |
+//! |---|---|
+//! | `POST /v1/submit` | JSON body → [`SubmitRequest`] → `enqueue`; returns a ticket id |
+//! | `GET /v1/tickets/:id` | non-blocking poll → typed resolution JSON (404 once reaped) |
+//! | `GET /v1/stream/:id` | chunked SSE relay of [`TokenEvent`]s; disconnect cancels |
+//! | `POST /v1/tickets/:id/cancel` | cooperative cancel |
+//! | `GET /metrics` | Prometheus exposition (unauthenticated scrape) |
+//! | `GET /healthz` | Lighthouse liveness summary (unauthenticated probe) |
+//!
+//! The trust anchor is the authenticated request boundary: API keys
+//! (`Authorization: Bearer`) map to orchestrator sessions, each key is
+//! rate-limited by the same token-bucket implementation the orchestrator
+//! uses ([`RateLimiter`]), and every refusal is observable — 401s consume
+//! nothing, 429s bump `rejected_rate_limited`, malformed submits consume a
+//! request id and leave exactly one audit entry.
+//!
+//! Shutdown is a graceful drain: new accepts are refused, idle keep-alive
+//! connections close at the next read-timeout poll, in-flight requests
+//! (including running SSE relays) finish, and every admitted ticket still
+//! resolves server-side — the no-ticket-lost invariant holds across the
+//! wire.
+//!
+//! [`SubmitRequest`]: crate::server::SubmitRequest
+//! [`TokenEvent`]: crate::server::TokenEvent
+
+pub mod client;
+mod conn;
+mod registry;
+mod router;
+pub(crate) mod wire;
+
+pub use registry::TicketRegistry;
+
+use std::collections::BTreeMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::server::{Orchestrator, RateLimiter};
+use crate::telemetry::serving::HttpMetrics;
+
+/// Tunables for one [`HttpServer`]. Defaults suit an interactive `serve`;
+/// tests and benches shrink the TTL / raise the rate.
+pub struct HttpConfig {
+    /// Per-key token-bucket rate (requests per second) at the front door.
+    pub rate_per_sec: f64,
+    /// Token-bucket burst capacity.
+    pub burst: f64,
+    /// Concurrent-connection cap; accepts over it are refused with 503.
+    pub max_connections: usize,
+    /// Ticket-registry capacity (unresolved tickets never evicted).
+    pub ticket_capacity: usize,
+    /// How long a resolved ticket stays pollable before it is reaped.
+    pub ticket_ttl_ms: u64,
+    /// Drive the Sim backend's virtual clock from wall time so token
+    /// buckets refill and liveness ticks fire while serving real sockets.
+    pub pump_sim_clock: bool,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            rate_per_sec: 50.0,
+            burst: 50.0,
+            max_connections: 256,
+            ticket_capacity: 4096,
+            ticket_ttl_ms: 60_000,
+            pump_sim_clock: true,
+        }
+    }
+}
+
+/// One API key's grant: the user it bills to and the session it submits on.
+pub(crate) struct KeyEntry {
+    pub user: String,
+    pub session_id: u64,
+}
+
+/// State shared by the accept loop and every connection handler.
+pub(crate) struct Shared {
+    pub orch: Arc<Orchestrator>,
+    pub keys: BTreeMap<String, KeyEntry>,
+    pub limiter: Mutex<RateLimiter>,
+    pub registry: TicketRegistry,
+    pub http: HttpMetrics,
+    pub draining: AtomicBool,
+    pub active: AtomicUsize,
+    pub max_connections: usize,
+    started: Instant,
+}
+
+impl Shared {
+    /// Wall-clock milliseconds since the server started — the front-door
+    /// limiter's clock (the orchestrator's own limiter keeps using
+    /// orchestrator time).
+    pub fn wall_ms(&self) -> f64 {
+        self.started.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// A running HTTP server. Dropping it (or calling [`HttpServer::shutdown`])
+/// drains gracefully; the orchestrator behind it is shared and survives.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    pump: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port), open one
+    /// orchestrator session per API key, start the accept loop and (on Sim
+    /// backends) the clock pump. The queue worker pool is started
+    /// idempotently.
+    pub fn start<A: ToSocketAddrs>(
+        orch: Arc<Orchestrator>,
+        addr: A,
+        keys: &[(String, String)],
+        config: HttpConfig,
+    ) -> io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Arc::clone(&orch).start_queue();
+        let mut key_map = BTreeMap::new();
+        for (key, user) in keys {
+            let session_id = orch.open_session(user);
+            key_map.insert(key.clone(), KeyEntry { user: user.clone(), session_id });
+        }
+        let http = HttpMetrics::register(&orch.metrics);
+        let registry = TicketRegistry::new(config.ticket_capacity, config.ticket_ttl_ms, http.tickets_reaped.clone());
+        let shared = Arc::new(Shared {
+            orch: Arc::clone(&orch),
+            keys: key_map,
+            limiter: Mutex::new(RateLimiter::new(config.rate_per_sec, config.burst.max(1.0))),
+            registry,
+            http,
+            draining: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            max_connections: config.max_connections.max(1),
+            started: Instant::now(),
+        });
+        let pump = if config.pump_sim_clock && orch.sim_backed() {
+            let shared = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name("islandrun-http-clock".into())
+                .spawn(move || {
+                    // virtual time tracks wall time: token buckets refill,
+                    // capacity recovers, liveness ticks fire
+                    let mut last = Instant::now();
+                    while !shared.draining.load(Ordering::SeqCst) {
+                        std::thread::sleep(Duration::from_millis(1));
+                        let dt_ms = last.elapsed().as_secs_f64() * 1e3;
+                        last = Instant::now();
+                        shared.orch.advance(dt_ms);
+                    }
+                })
+                .expect("spawn http clock pump");
+            Some(handle)
+        } else {
+            None
+        };
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let handlers = Arc::clone(&handlers);
+            std::thread::Builder::new()
+                .name("islandrun-http-accept".into())
+                .spawn(move || accept_loop(listener, shared, handlers))
+                .expect("spawn http accept loop")
+        };
+        Ok(HttpServer { addr, shared, accept: Some(accept), pump, handlers })
+    }
+
+    /// The bound address (resolves the port when started on `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Requests the registry currently tracks (test/diagnostic surface).
+    pub fn tickets_registered(&self) -> usize {
+        self.shared.registry.len()
+    }
+
+    /// Graceful drain: refuse new accepts, close idle connections at their
+    /// next drain poll, let in-flight requests finish, join every thread.
+    /// Admitted tickets keep resolving on the orchestrator, which outlives
+    /// the server — no ticket is lost.
+    pub fn shutdown(mut self) {
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        if self.shared.draining.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // wake the blocked accept() so the loop observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handlers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, handlers: Arc<Mutex<Vec<JoinHandle<()>>>>) {
+    for stream in listener.incoming() {
+        if shared.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        if shared.active.load(Ordering::SeqCst) >= shared.max_connections {
+            // over the cap: refuse inline, never spawn
+            let _ = router::refuse_overloaded(stream);
+            continue;
+        }
+        let count = shared.active.fetch_add(1, Ordering::SeqCst) + 1;
+        shared.http.active_connections.set(count as f64);
+        let conn_shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("islandrun-http-conn".into())
+            .spawn(move || {
+                router::serve_connection(&conn_shared, stream);
+                let left = conn_shared.active.fetch_sub(1, Ordering::SeqCst) - 1;
+                conn_shared.http.active_connections.set(left as f64);
+            })
+            .expect("spawn http connection handler");
+        let mut hs = handlers.lock().unwrap();
+        hs.retain(|h| !h.is_finished());
+        hs.push(handle);
+    }
+    // the listener drops here: further connects are refused by the OS
+}

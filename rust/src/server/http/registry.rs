@@ -1,0 +1,197 @@
+//! Bounded ticket registry for the HTTP surface: maps wire-visible ticket
+//! ids to live [`Ticket`]s so poll/stream/cancel can find them, and reaps
+//! resolved entries after a TTL so the server never leaks terminal
+//! `TicketCell`s (metric: `tickets_reaped`).
+//!
+//! Two invariants:
+//! * **No ticket lost** — an *unresolved* ticket is never evicted. When
+//!   every slot holds an unresolved ticket, `insert` refuses (the handler
+//!   answers 503) rather than dropping a live request's handle.
+//! * **Bounded memory** — resolved entries are dropped once their TTL
+//!   elapses (reaped lazily on the next registry operation), and
+//!   resolved-first eviction runs early when the registry hits capacity.
+//!   A reaped or never-issued id answers 404, never a panic or a hang.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::server::Ticket;
+use crate::telemetry::Counter;
+
+struct Entry {
+    ticket: Ticket,
+    /// Stamped lazily the first time a registry operation observes the
+    /// ticket resolved; the TTL counts from this observation.
+    resolved_at: Option<Instant>,
+}
+
+struct Inner {
+    next_id: u64,
+    entries: BTreeMap<u64, Entry>,
+}
+
+/// See the module docs. All operations take the one internal lock; the
+/// maps are small (bounded by `capacity`) and reaping is a linear sweep.
+pub struct TicketRegistry {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    ttl: Duration,
+    reaped: Counter,
+}
+
+impl TicketRegistry {
+    pub fn new(capacity: usize, ttl_ms: u64, reaped: Counter) -> TicketRegistry {
+        TicketRegistry {
+            inner: Mutex::new(Inner { next_id: 1, entries: BTreeMap::new() }),
+            capacity: capacity.max(1),
+            ttl: Duration::from_millis(ttl_ms),
+            reaped,
+        }
+    }
+
+    /// Register a ticket and return its wire-visible id, or `None` when
+    /// every slot holds an unresolved ticket (the caller sheds with 503 —
+    /// refusing new work beats dropping handles to admitted work).
+    pub fn insert(&self, ticket: Ticket) -> Option<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        self.reap_locked(&mut inner);
+        if inner.entries.len() >= self.capacity {
+            // at capacity before the TTL ran out: evict resolved entries
+            // early — their outcome has been readable for a full sweep
+            let resolved: Vec<u64> =
+                inner.entries.iter().filter(|(_, e)| e.ticket.is_resolved()).map(|(id, _)| *id).collect();
+            for id in resolved {
+                inner.entries.remove(&id);
+                self.reaped.inc();
+            }
+        }
+        if inner.entries.len() >= self.capacity {
+            return None;
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.entries.insert(id, Entry { ticket, resolved_at: None });
+        Some(id)
+    }
+
+    /// Look up a ticket by wire id. `None` for ids never issued or already
+    /// reaped — the handler answers 404.
+    pub fn get(&self, id: u64) -> Option<Ticket> {
+        let mut inner = self.inner.lock().unwrap();
+        self.reap_locked(&mut inner);
+        inner.entries.get(&id).map(|e| e.ticket.clone())
+    }
+
+    /// Entries currently registered (resolved-but-unreaped included).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn reap_locked(&self, inner: &mut Inner) {
+        let now = Instant::now();
+        for e in inner.entries.values_mut() {
+            if e.resolved_at.is_none() && e.ticket.is_resolved() {
+                e.resolved_at = Some(now);
+            }
+        }
+        let dead: Vec<u64> = inner
+            .entries
+            .iter()
+            .filter(|(_, e)| e.resolved_at.is_some_and(|t| now.duration_since(t) >= self.ttl))
+            .map(|(id, _)| *id)
+            .collect();
+        for id in dead {
+            inner.entries.remove(&id);
+            self.reaped.inc();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::waves::Decision;
+    use crate::server::resolution::Resolution;
+    use crate::server::{Outcome, Ticket};
+    use crate::telemetry::Metrics;
+
+    fn reap_counter(m: &Metrics) -> Counter {
+        m.register_counter("tickets_reaped", "resolved tickets reaped from the HTTP ticket registry")
+    }
+
+    fn resolved_ticket() -> Ticket {
+        let (ticket, cell) = Ticket::new_pair();
+        cell.resolve(Ok(Outcome {
+            request_id: 1,
+            s_r: 0.0,
+            decision: Decision::Reject { reason: "test".into() },
+            latency_ms: 0.0,
+            cost: 0.0,
+            response: String::new(),
+            sanitized: false,
+            tokens_generated: 0,
+            resolution: Resolution::Served,
+        }));
+        ticket
+    }
+
+    #[test]
+    fn issues_monotonic_ids_and_finds_tickets() {
+        let m = Metrics::new();
+        let r = TicketRegistry::new(8, 60_000, reap_counter(&m));
+        let (t1, _c1) = Ticket::new_pair();
+        let (t2, _c2) = Ticket::new_pair();
+        let a = r.insert(t1).unwrap();
+        let b = r.insert(t2).unwrap();
+        assert!(b > a);
+        assert!(r.get(a).is_some());
+        assert!(r.get(999).is_none(), "never-issued id is a miss");
+    }
+
+    #[test]
+    fn reaps_resolved_tickets_after_ttl() {
+        let m = Metrics::new();
+        let r = TicketRegistry::new(8, 20, reap_counter(&m));
+        let id = r.insert(resolved_ticket()).unwrap();
+        assert!(r.get(id).is_some(), "within TTL the outcome stays readable");
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(r.get(id).is_none(), "past TTL the entry is reaped");
+        assert_eq!(m.counter_value("tickets_reaped"), 1);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn unresolved_tickets_survive_ttl() {
+        let m = Metrics::new();
+        let r = TicketRegistry::new(8, 10, reap_counter(&m));
+        let (ticket, _cell) = Ticket::new_pair();
+        let id = r.insert(ticket).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(r.get(id).is_some(), "TTL counts from resolution, not insertion");
+        assert_eq!(m.counter_value("tickets_reaped"), 0);
+    }
+
+    #[test]
+    fn at_capacity_evicts_resolved_first_and_refuses_when_all_live() {
+        let m = Metrics::new();
+        let r = TicketRegistry::new(2, 60_000, reap_counter(&m));
+        let done = r.insert(resolved_ticket()).unwrap();
+        let (live, _cell) = Ticket::new_pair();
+        let live_id = r.insert(live).unwrap();
+        // full; a resolved slot is reclaimed early, before its TTL
+        let (third, _cell3) = Ticket::new_pair();
+        let third_id = r.insert(third).expect("resolved entry must be evicted to make room");
+        assert!(r.get(done).is_none());
+        assert!(r.get(live_id).is_some());
+        assert!(r.get(third_id).is_some());
+        assert_eq!(m.counter_value("tickets_reaped"), 1);
+        // now every slot is unresolved: refuse, never evict live handles
+        let (fourth, _cell4) = Ticket::new_pair();
+        assert!(r.insert(fourth).is_none());
+    }
+}

@@ -1,0 +1,309 @@
+//! Per-connection request loop and route dispatch. One thread per accepted
+//! connection runs [`serve_connection`]: parse a request, authenticate,
+//! dispatch, record the per-route metrics, repeat until the client hangs
+//! up, a write fails, or the server drains.
+//!
+//! Fail-closed posture at the boundary (§XIV): unauthenticated requests
+//! are refused before any body is interpreted and consume no request id;
+//! authenticated-but-malformed submits consume an id and leave exactly one
+//! audit entry via [`Orchestrator::reject_at_front_door`]; rate-limited
+//! submits answer 429 and bump the shared `rejected_rate_limited` cell.
+//!
+//! [`Orchestrator::reject_at_front_door`]: crate::server::Orchestrator::reject_at_front_door
+
+use std::io::{self, BufReader};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use super::conn::{self, HttpRequest};
+use super::wire;
+use super::{KeyEntry, Shared};
+use crate::config::json::Json;
+
+/// Read timeout used to poll the drain flag on idle keep-alive connections.
+const READ_POLL: Duration = Duration::from_millis(100);
+/// Safety cap on a single blocked write (a stuck client must not pin a
+/// handler thread through drain forever).
+const WRITE_CAP: Duration = Duration::from_secs(10);
+
+/// Refuse a connection over the concurrency cap without spawning a handler.
+pub(crate) fn refuse_overloaded(mut stream: TcpStream) -> io::Result<()> {
+    conn::write_response(&mut stream, 503, "application/json", &[], &wire::error_json("server overloaded"), true)
+}
+
+pub(crate) fn serve_connection(shared: &Shared, stream: TcpStream) {
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() || stream.set_write_timeout(Some(WRITE_CAP)).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let draining = || shared.draining.load(Ordering::SeqCst);
+    loop {
+        let req = match conn::read_request(&mut reader, &draining) {
+            Ok(Some(req)) => req,
+            // clean end: client EOF between requests, or idle at drain
+            Ok(None) => return,
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                // unroutable framing: answer 400 and close. No request id is
+                // consumed — nothing was authenticated, so there is nothing
+                // to audit against (the JSON-level 400s are per-route).
+                let _ = conn::write_response(
+                    &mut writer,
+                    400,
+                    "application/json",
+                    &[],
+                    &wire::error_json("bad request"),
+                    true,
+                );
+                shared.http.observe("other", 400, 0.0);
+                return;
+            }
+            Err(_) => return,
+        };
+        let t0 = Instant::now();
+        // in-flight requests finish during drain, but the connection closes
+        // after the response so the handler thread can be joined
+        let close = draining();
+        match dispatch(shared, &req, &mut writer, close) {
+            Ok((route, status, end)) => {
+                shared.http.observe(route, status, t0.elapsed().as_secs_f64() * 1e3);
+                if end || close {
+                    return;
+                }
+            }
+            Err(_) => return, // write failed: client gone
+        }
+    }
+}
+
+/// Route one request. Returns `(route label, status, close-after)`; `Err`
+/// only for write failures (the connection is then abandoned).
+fn dispatch(shared: &Shared, req: &HttpRequest, w: &mut TcpStream, close: bool) -> io::Result<(&'static str, u16, bool)> {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match segs.as_slice() {
+        ["metrics"] => {
+            if req.method != "GET" {
+                return method_not_allowed(w, "metrics", "GET", close);
+            }
+            let text = shared.orch.metrics.render_prometheus();
+            conn::write_response(w, 200, "text/plain; version=0.0.4", &[], text.as_bytes(), close)?;
+            Ok(("metrics", 200, close))
+        }
+        ["healthz"] => {
+            if req.method != "GET" {
+                return method_not_allowed(w, "healthz", "GET", close);
+            }
+            handle_healthz(shared, w, close)
+        }
+        ["v1", "submit"] => {
+            if req.method != "POST" {
+                return method_not_allowed(w, "submit", "POST", close);
+            }
+            handle_submit(shared, req, w, close)
+        }
+        ["v1", "tickets", id] => {
+            if req.method != "GET" {
+                return method_not_allowed(w, "ticket", "GET", close);
+            }
+            handle_poll(shared, req, w, id, close)
+        }
+        ["v1", "tickets", id, "cancel"] => {
+            if req.method != "POST" {
+                return method_not_allowed(w, "cancel", "POST", close);
+            }
+            handle_cancel(shared, req, w, id, close)
+        }
+        ["v1", "stream", id] => {
+            if req.method != "GET" {
+                return method_not_allowed(w, "stream", "GET", close);
+            }
+            handle_stream(shared, req, w, id, close)
+        }
+        _ => {
+            let status = write_json(w, 404, &Json::obj(vec![("error", Json::str("no such route"))]), close)?;
+            Ok(("other", status, close))
+        }
+    }
+}
+
+fn write_json(w: &mut TcpStream, status: u16, body: &Json, close: bool) -> io::Result<u16> {
+    conn::write_response(w, status, "application/json", &[], body.to_string().as_bytes(), close)?;
+    Ok(status)
+}
+
+fn method_not_allowed(
+    w: &mut TcpStream,
+    route: &'static str,
+    allow: &'static str,
+    close: bool,
+) -> io::Result<(&'static str, u16, bool)> {
+    conn::write_response(
+        w,
+        405,
+        "application/json",
+        &[("Allow", allow)],
+        &wire::error_json("method not allowed"),
+        close,
+    )?;
+    Ok((route, 405, close))
+}
+
+/// Bearer-token lookup. `None` means the caller gets a 401 — before any
+/// body interpretation, consuming no request id and writing no audit entry
+/// (there is no authenticated principal to attribute one to).
+fn authenticate<'a>(shared: &'a Shared, req: &HttpRequest) -> Option<&'a KeyEntry> {
+    let token = req.header("authorization")?.strip_prefix("Bearer ")?;
+    shared.keys.get(token)
+}
+
+fn unauthorized(w: &mut TcpStream, close: bool) -> io::Result<u16> {
+    conn::write_response(
+        w,
+        401,
+        "application/json",
+        &[("WWW-Authenticate", "Bearer")],
+        &wire::error_json("missing or unknown API key"),
+        close,
+    )?;
+    Ok(401)
+}
+
+fn handle_submit(
+    shared: &Shared,
+    req: &HttpRequest,
+    w: &mut TcpStream,
+    close: bool,
+) -> io::Result<(&'static str, u16, bool)> {
+    const ROUTE: &str = "submit";
+    let Some(entry) = authenticate(shared, req) else {
+        return Ok((ROUTE, unauthorized(w, close)?, close));
+    };
+    // per-key token bucket at the front door (wall-clock ms); the
+    // orchestrator's own limiter still applies behind it
+    if !shared.limiter.lock().unwrap().admit(&entry.user, shared.wall_ms()) {
+        shared.http.rejected_rate_limited.inc();
+        let body = Json::obj(vec![("error", Json::str("rate limited")), ("reason", Json::str("rate_limited"))]);
+        return Ok((ROUTE, write_json(w, 429, &body, close)?, close));
+    }
+    let parsed = wire::parse_submit(&req.body).and_then(|sr| match sr.validate() {
+        Ok(()) => Ok(sr),
+        Err(why) => Err(why),
+    });
+    let sr = match parsed {
+        Ok(sr) => sr,
+        Err(why) => {
+            // fail-closed 400: consumes a request id and leaves exactly one
+            // audit entry, like any in-process invalid submit
+            let out = shared.orch.reject_at_front_door(&entry.user, &why);
+            let body =
+                Json::obj(vec![("error", Json::str(&why)), ("request_id", Json::num(out.request_id as f64))]);
+            return Ok((ROUTE, write_json(w, 400, &body, close)?, close));
+        }
+    };
+    let ticket = shared.orch.enqueue(entry.session_id, sr);
+    match shared.registry.insert(ticket.clone()) {
+        Some(id) => Ok((ROUTE, write_json(w, 200, &Json::obj(vec![("ticket", Json::num(id as f64))]), close)?, close)),
+        None => {
+            // registry full of live tickets. The request is already admitted
+            // and will resolve + audit server-side (no ticket lost); cancel
+            // cooperatively so the unreachable handle stops burning decode.
+            ticket.cancel();
+            let body = Json::obj(vec![("error", Json::str("ticket registry full"))]);
+            Ok((ROUTE, write_json(w, 503, &body, close)?, close))
+        }
+    }
+}
+
+fn handle_poll(
+    shared: &Shared,
+    req: &HttpRequest,
+    w: &mut TcpStream,
+    id: &str,
+    close: bool,
+) -> io::Result<(&'static str, u16, bool)> {
+    const ROUTE: &str = "ticket";
+    if authenticate(shared, req).is_none() {
+        return Ok((ROUTE, unauthorized(w, close)?, close));
+    }
+    let Some(ticket) = id.parse::<u64>().ok().and_then(|id| shared.registry.get(id)) else {
+        return Ok((ROUTE, write_json(w, 404, &Json::obj(vec![("error", Json::str("unknown ticket"))]), close)?, close));
+    };
+    let body = match ticket.try_poll() {
+        None => Json::obj(vec![("done", Json::Bool(false))]),
+        Some(Ok(out)) => Json::obj(vec![("done", Json::Bool(true)), ("outcome", wire::outcome_json(&out))]),
+        Some(Err(e)) => Json::obj(vec![("done", Json::Bool(true)), ("error", Json::str(&e.to_string()))]),
+    };
+    Ok((ROUTE, write_json(w, 200, &body, close)?, close))
+}
+
+fn handle_cancel(
+    shared: &Shared,
+    req: &HttpRequest,
+    w: &mut TcpStream,
+    id: &str,
+    close: bool,
+) -> io::Result<(&'static str, u16, bool)> {
+    const ROUTE: &str = "cancel";
+    if authenticate(shared, req).is_none() {
+        return Ok((ROUTE, unauthorized(w, close)?, close));
+    }
+    let Some(ticket) = id.parse::<u64>().ok().and_then(|id| shared.registry.get(id)) else {
+        return Ok((ROUTE, write_json(w, 404, &Json::obj(vec![("error", Json::str("unknown ticket"))]), close)?, close));
+    };
+    ticket.cancel();
+    Ok((ROUTE, write_json(w, 200, &Json::obj(vec![("cancelled", Json::Bool(true))]), close)?, close))
+}
+
+/// Relay the ticket's token events as SSE over a chunked body. The stream
+/// keeps the connection reusable (terminating chunk) unless a write fails —
+/// a mid-stream client disconnect — in which case the ticket is cancelled
+/// cooperatively so the abandoned request stops burning its decode slot.
+fn handle_stream(
+    shared: &Shared,
+    req: &HttpRequest,
+    w: &mut TcpStream,
+    id: &str,
+    close: bool,
+) -> io::Result<(&'static str, u16, bool)> {
+    const ROUTE: &str = "stream";
+    if authenticate(shared, req).is_none() {
+        return Ok((ROUTE, unauthorized(w, close)?, close));
+    }
+    let Some(ticket) = id.parse::<u64>().ok().and_then(|id| shared.registry.get(id)) else {
+        return Ok((ROUTE, write_json(w, 404, &Json::obj(vec![("error", Json::str("unknown ticket"))]), close)?, close));
+    };
+    conn::write_stream_head(w)?;
+    for event in ticket.stream() {
+        let frame = wire::sse_event(&event);
+        if conn::write_chunk(w, frame.as_bytes()).is_err() {
+            ticket.cancel();
+            return Ok((ROUTE, 200, true));
+        }
+    }
+    if conn::write_last_chunk(w).is_err() {
+        return Ok((ROUTE, 200, true));
+    }
+    Ok((ROUTE, 200, close))
+}
+
+fn handle_healthz(shared: &Shared, w: &mut TcpStream, close: bool) -> io::Result<(&'static str, u16, bool)> {
+    let lh = &shared.orch.lighthouse;
+    let alive = lh.is_alive();
+    let islands = lh.islands();
+    let online = islands.iter().filter(|i| lh.is_online(i.id)).count();
+    let degraded = islands.iter().filter(|i| lh.is_degraded(i.id)).count();
+    let body = Json::obj(vec![
+        ("status", Json::str(if alive { "ok" } else { "down" })),
+        ("lighthouse_alive", Json::Bool(alive)),
+        ("islands", Json::num(islands.len() as f64)),
+        ("islands_online", Json::num(online as f64)),
+        ("islands_degraded", Json::num(degraded as f64)),
+        ("queue_depth", Json::num(shared.orch.queue_depth() as f64)),
+        ("draining", Json::Bool(shared.draining.load(Ordering::SeqCst))),
+    ]);
+    let status = if alive { 200 } else { 503 };
+    Ok(("healthz", write_json(w, status, &body, close)?, close))
+}

@@ -1,0 +1,173 @@
+//! Wire-JSON codecs for the HTTP surface: the submit-body decoder (strict,
+//! fail-closed — unknown fields and type mismatches are rejected, per the
+//! same §XIV fail-closed posture as routing) and the outcome / token-event
+//! encoders shared by the poll and stream endpoints.
+
+use crate::config::json::Json;
+use crate::server::{Outcome, SubmitRequest, TokenEvent};
+use crate::types::PriorityTier;
+
+const SUBMIT_FIELDS: [&str; 8] =
+    ["prompt", "priority", "deadline_ms", "sensitivity_floor", "min_jurisdiction", "model", "dataset", "max_new_tokens"];
+
+fn parse_priority(name: &str) -> Result<PriorityTier, String> {
+    match name {
+        "primary" => Ok(PriorityTier::Primary),
+        "secondary" => Ok(PriorityTier::Secondary),
+        "burstable" => Ok(PriorityTier::Burstable),
+        other => Err(format!("unknown priority {other:?} (expected primary/secondary/burstable)")),
+    }
+}
+
+pub(crate) fn priority_name(p: PriorityTier) -> &'static str {
+    match p {
+        PriorityTier::Primary => "primary",
+        PriorityTier::Secondary => "secondary",
+        PriorityTier::Burstable => "burstable",
+    }
+}
+
+/// Decode a `POST /v1/submit` body into a [`SubmitRequest`]. Strict: the
+/// body must be a JSON object, `prompt` is required, every other field is
+/// optional, and anything unrecognized or mistyped is an error the handler
+/// turns into a fail-closed 400 (with one audit entry).
+pub(crate) fn parse_submit(body: &[u8]) -> Result<SubmitRequest, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
+    let v = Json::parse(text).map_err(|e| format!("malformed JSON: {e}"))?;
+    let obj = v.as_obj().ok_or_else(|| "request body must be a JSON object".to_string())?;
+    for key in obj.keys() {
+        if !SUBMIT_FIELDS.contains(&key.as_str()) {
+            return Err(format!("unknown field {key:?}"));
+        }
+    }
+    let prompt = v.get("prompt").as_str().ok_or_else(|| "missing required string field \"prompt\"".to_string())?;
+    let mut sr = SubmitRequest::new(prompt);
+    let num = |name: &str| -> Result<Option<f64>, String> {
+        match v.get(name) {
+            Json::Null => Ok(None),
+            j => j.as_f64().map(Some).ok_or_else(|| format!("field {name:?} must be a number")),
+        }
+    };
+    let string = |name: &str| -> Result<Option<&str>, String> {
+        match v.get(name) {
+            Json::Null => Ok(None),
+            j => j.as_str().map(Some).ok_or_else(|| format!("field {name:?} must be a string")),
+        }
+    };
+    if let Some(p) = string("priority")? {
+        sr = sr.priority(parse_priority(p)?);
+    }
+    if let Some(ms) = num("deadline_ms")? {
+        sr = sr.deadline_ms(ms);
+    }
+    if let Some(floor) = num("sensitivity_floor")? {
+        sr = sr.sensitivity(floor);
+    }
+    if let Some(floor) = num("min_jurisdiction")? {
+        sr = sr.min_jurisdiction(floor);
+    }
+    if let Some(model) = string("model")? {
+        sr = sr.model(model);
+    }
+    if let Some(dataset) = string("dataset")? {
+        sr = sr.dataset(dataset);
+    }
+    if let Some(n) = num("max_new_tokens")? {
+        if !(n.is_finite() && n >= 0.0 && n.fract() == 0.0) {
+            return Err("field \"max_new_tokens\" must be a non-negative integer".to_string());
+        }
+        sr = sr.max_new_tokens(n as usize);
+    }
+    Ok(sr)
+}
+
+/// Encode a terminal [`Outcome`] for `GET /v1/tickets/:id`.
+pub(crate) fn outcome_json(out: &Outcome) -> Json {
+    Json::obj(vec![
+        ("request_id", Json::num(out.request_id as f64)),
+        ("outcome", Json::str(out.resolution.class())),
+        ("reason", Json::str(out.resolution.reason())),
+        ("island", out.decision.target().map(|id| Json::str(&id.to_string())).unwrap_or(Json::Null)),
+        ("s_r", Json::num(out.s_r)),
+        ("latency_ms", Json::num(out.latency_ms)),
+        ("cost_usd", Json::num(out.cost)),
+        ("tokens_generated", Json::num(out.tokens_generated as f64)),
+        ("sanitized", Json::Bool(out.sanitized)),
+        ("response", Json::str(&out.response)),
+    ])
+}
+
+/// Encode one [`TokenEvent`] as an SSE record (`event:` + `data:` lines).
+pub(crate) fn sse_event(ev: &TokenEvent) -> String {
+    let (name, data) = match ev {
+        TokenEvent::First { text } => ("first", Json::obj(vec![("text", Json::str(text))])),
+        TokenEvent::Token { text } => ("token", Json::obj(vec![("text", Json::str(text))])),
+        TokenEvent::Done => ("done", Json::obj(vec![])),
+        TokenEvent::Cancelled { reason } => ("cancelled", Json::obj(vec![("reason", Json::str(reason))])),
+    };
+    format!("event: {name}\ndata: {}\n\n", data.to_string())
+}
+
+/// `{"error": msg}` — the uniform error body.
+pub(crate) fn error_json(msg: &str) -> Vec<u8> {
+    Json::obj(vec![("error", Json::str(msg))]).to_string().into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_fully_specified_submit() {
+        let body = br#"{"prompt": "hello", "priority": "primary", "deadline_ms": 1500.5,
+            "sensitivity_floor": 0.8, "min_jurisdiction": 0.5, "model": "m1",
+            "dataset": "d1", "max_new_tokens": 32}"#;
+        let sr = parse_submit(body).unwrap();
+        assert_eq!(sr.prompt, "hello");
+        assert_eq!(sr.priority, PriorityTier::Primary);
+        assert_eq!(sr.deadline_ms, 1500.5);
+        assert_eq!(sr.sensitivity_floor, Some(0.8));
+        assert_eq!(sr.min_jurisdiction, Some(0.5));
+        assert_eq!(sr.model.as_deref(), Some("m1"));
+        assert_eq!(sr.dataset.as_deref(), Some("d1"));
+        assert_eq!(sr.max_new_tokens, 32);
+    }
+
+    #[test]
+    fn prompt_alone_gets_defaults() {
+        let sr = parse_submit(br#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(sr.priority, PriorityTier::Secondary);
+        assert_eq!(sr.deadline_ms, 2000.0);
+        assert_eq!(sr.sensitivity_floor, None);
+    }
+
+    #[test]
+    fn rejects_malformed_and_mistyped_bodies_fail_closed() {
+        assert!(parse_submit(b"{not json").is_err());
+        assert!(parse_submit(b"[1,2]").is_err(), "non-object body");
+        assert!(parse_submit(br#"{"priority": "primary"}"#).is_err(), "missing prompt");
+        assert!(parse_submit(br#"{"prompt": 3}"#).is_err(), "mistyped prompt");
+        assert!(parse_submit(br#"{"prompt": "x", "deadline_ms": "soon"}"#).is_err());
+        assert!(parse_submit(br#"{"prompt": "x", "priority": "urgent"}"#).is_err());
+        assert!(parse_submit(br#"{"prompt": "x", "max_new_tokens": 1.5}"#).is_err());
+        assert!(parse_submit(br#"{"prompt": "x", "turbo": true}"#).is_err(), "unknown field");
+        assert!(parse_submit(&[0xff, 0xfe]).is_err(), "not UTF-8");
+    }
+
+    #[test]
+    fn sse_events_carry_name_and_data() {
+        let first = sse_event(&TokenEvent::First { text: "he".into() });
+        assert_eq!(first, "event: first\ndata: {\"text\":\"he\"}\n\n");
+        let done = sse_event(&TokenEvent::Done);
+        assert!(done.starts_with("event: done\n"));
+        let cancelled = sse_event(&TokenEvent::Cancelled { reason: "cancelled after 3 tokens".into() });
+        assert!(cancelled.contains("cancelled after 3 tokens"));
+    }
+
+    #[test]
+    fn priority_names_round_trip() {
+        for p in [PriorityTier::Primary, PriorityTier::Secondary, PriorityTier::Burstable] {
+            assert_eq!(parse_priority(priority_name(p)).unwrap(), p);
+        }
+    }
+}

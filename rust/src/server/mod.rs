@@ -4,9 +4,11 @@
 //! route-then-sanitize pipeline as an explicit request lifecycle
 //! (enqueue → admit → route → batch → decode steps → resolve), with
 //! streaming token delivery ([`TokenStream`]) and cooperative mid-decode
-//! cancellation ([`Ticket::cancel`]).
+//! cancellation ([`Ticket::cancel`]), all exposed over sockets by the
+//! dependency-free HTTP/1.1 surface in [`http`].
 
 pub mod audit;
+pub mod http;
 pub mod orchestrator;
 pub mod queue;
 pub mod ratelimit;
@@ -14,6 +16,7 @@ pub mod resolution;
 pub mod session;
 pub mod ticket;
 
+pub use http::{HttpConfig, HttpServer, TicketRegistry};
 pub use orchestrator::{Backend, IslandSnapshot, Orchestrator, Outcome};
 pub use queue::SubmitRequest;
 pub use ratelimit::RateLimiter;

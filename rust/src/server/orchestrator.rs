@@ -636,14 +636,25 @@ impl Orchestrator {
     /// at enqueue time on the queue path, so floods are refused at the
     /// front door, not after occupying queue slots.
     fn admit(&self, session_id: u64) -> anyhow::Result<String> {
-        let user = self
-            .sessions
-            .user_of(session_id)
-            .ok_or_else(|| anyhow::anyhow!("unknown session {session_id}"))?;
+        self.admit_typed(session_id).map_err(|e| match e {
+            AdmitErr::UnknownSession(id) => anyhow::anyhow!("unknown session {id}"),
+            AdmitErr::RateLimited { user } => anyhow::anyhow!("rate limited: user {user}"),
+        })
+    }
+
+    /// Typed admission verdict for callers that must distinguish the two
+    /// refusals: the queue path sheds rate-limited floods with a typed
+    /// resolution (so the serving surface can answer 429 with evidence)
+    /// while unknown sessions stay plain errors — no user to attribute an
+    /// audit entry to.
+    fn admit_typed(&self, session_id: u64) -> Result<String, AdmitErr> {
+        let Some(user) = self.sessions.user_of(session_id) else {
+            return Err(AdmitErr::UnknownSession(session_id));
+        };
         let now = self.now_ms();
         if !self.limiter.lock().unwrap().admit(&user, now) {
             self.serving.rate_limited.inc();
-            anyhow::bail!("rate limited: user {user}");
+            return Err(AdmitErr::RateLimited { user });
         }
         Ok(user)
     }
@@ -1616,6 +1627,14 @@ impl Orchestrator {
     }
 }
 
+/// Why [`Orchestrator::admit_typed`] refused a submission.
+enum AdmitErr {
+    /// No session with this id — nothing to attribute the request to.
+    UnknownSession(u64),
+    /// The per-user token bucket refused the request (Attack 4).
+    RateLimited { user: String },
+}
+
 /// What the queue drain needs, besides the [`Prepared`] request, to resolve
 /// one queued submission: its ticket, and the original (pre-sanitization)
 /// prompt + session for conversation-turn recording.
@@ -1639,12 +1658,21 @@ impl Orchestrator {
     /// exactly once (served, rejected, shed, or an error).
     pub fn enqueue(&self, session_id: u64, submit: SubmitRequest) -> Ticket {
         let (ticket, cell) = Ticket::new_pair();
-        let user = match self.admit(session_id) {
+        let user = match self.admit_typed(session_id) {
             Ok(user) => user,
-            Err(e) => {
-                // rate limited / unknown session: refused before consuming
-                // a request id, mirroring the blocking path's Err return
-                self.resolve_ticket(&cell, Err(e));
+            Err(AdmitErr::UnknownSession(sid)) => {
+                // unknown session: refused before consuming a request id,
+                // mirroring the blocking path's Err return — there is no
+                // user to audit the refusal against
+                self.resolve_ticket(&cell, Err(anyhow::anyhow!("unknown session {sid}")));
+                return ticket;
+            }
+            Err(AdmitErr::RateLimited { user }) => {
+                // rate-limited floods shed with a typed resolution: the
+                // serving surface needs a `Shed(RateLimited)` outcome (and
+                // one audit entry) to answer 429 with evidence, not a
+                // stringly error
+                self.shed_rate_limited(&cell, &user);
                 return ticket;
             }
         };
@@ -1818,6 +1846,30 @@ impl Orchestrator {
         let enqueued = self.now_ms() - waited_ms;
         self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, enqueued, 0));
         self.resolve_shed(ticket, id, reason, res);
+    }
+
+    /// Shed a rate-limited submission on the queue path: consumes a request
+    /// id and resolves the ticket with a `Shed(RateLimited)` outcome — one
+    /// audit entry, one `requests_resolved` bump, zero cost — so the
+    /// refusal is as observable as any other shed.
+    fn shed_rate_limited(&self, ticket: &TicketCell, user: &str) {
+        let id = self.next_request_id.fetch_add(1, Ordering::SeqCst);
+        let res = Resolution::Shed(ShedReason::RateLimited);
+        self.serving.rejected_rate_limited.inc();
+        let reason = format!("shed: rate limited: user {user}");
+        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason));
+        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, f64::NAN, 0));
+        self.resolve_shed(ticket, id, reason, res);
+    }
+
+    /// Consume a request id for a submission that failed to parse or
+    /// validate at a serving boundary, before a [`SubmitRequest`] existed
+    /// (the HTTP surface rejects malformed bodies fail-closed). One audit
+    /// entry and one typed `Shed(InvalidRequest)` resolution, exactly like
+    /// an in-process invalid submit.
+    pub fn reject_at_front_door(&self, user: &str, why: &str) -> Outcome {
+        let id = self.next_request_id.fetch_add(1, Ordering::SeqCst);
+        self.reject_invalid(id, user, why)
     }
 
     fn resolve_shed(&self, ticket: &TicketCell, id: u64, reason: String, res: Resolution) {
@@ -2002,6 +2054,34 @@ mod tests {
         }
         assert!(blocked >= 7, "blocked={blocked}");
         assert!(o.metrics.counter_value("rate_limited") >= 7);
+    }
+
+    #[test]
+    fn enqueue_sheds_rate_limited_floods_with_typed_resolution() {
+        let mut cfg = Config::default();
+        cfg.rate_limit_rps = 0.001; // burst of 1, effectively no refill
+        let fleet = Fleet::new(preset_personal_group(), 3);
+        let o = std::sync::Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 3));
+        std::sync::Arc::clone(&o).start_queue();
+        let s = o.open_session("mallory");
+        let first = o.enqueue(s, SubmitRequest::new("hello"));
+        let flood = o.enqueue(s, SubmitRequest::new("hello again"));
+        let out = flood.wait().expect("rate-limited enqueue resolves a typed outcome, not Err");
+        assert_eq!(out.resolution, Resolution::Shed(ShedReason::RateLimited));
+        assert!(matches!(out.decision, Decision::Reject { .. }));
+        assert_eq!(o.metrics.counter_value("rejected_rate_limited"), 1);
+        // the shed consumed an id and left exactly one audit entry for it
+        assert!(o.audit.contains(out.request_id));
+        assert_eq!(o.audit.entries().iter().filter(|e| e.request_id == out.request_id).count(), 1);
+        let shed: u64 = o
+            .metrics
+            .counter_children("requests_resolved")
+            .into_iter()
+            .filter(|(labels, _)| labels[0] == "shed" && labels[1] == "rate_limited")
+            .map(|(_, v)| v)
+            .sum();
+        assert_eq!(shed, 1);
+        first.wait().expect("admitted request still serves");
     }
 
     #[test]

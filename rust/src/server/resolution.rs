@@ -16,6 +16,8 @@ pub enum ShedReason {
     DeadlineExpired,
     /// The request failed validation before admission.
     InvalidRequest,
+    /// The per-user token bucket refused the request at the front door.
+    RateLimited,
     /// A serving worker or step loop panicked with the request in flight.
     WorkerPanic,
     /// The orchestrator shut down with the request still queued.
@@ -83,6 +85,7 @@ impl Resolution {
             Resolution::Shed(ShedReason::QueueFull) => "queue_full",
             Resolution::Shed(ShedReason::DeadlineExpired) => "deadline_expired",
             Resolution::Shed(ShedReason::InvalidRequest) => "invalid_request",
+            Resolution::Shed(ShedReason::RateLimited) => "rate_limited",
             Resolution::Shed(ShedReason::WorkerPanic) => "worker_panic",
             Resolution::Shed(ShedReason::Shutdown) => "shutdown",
             Resolution::Cancelled(CancelPoint::WhileQueued) => "while_queued",
@@ -113,11 +116,12 @@ impl Resolution {
     }
 
     /// All variants, for exhaustive metric pre-registration and tests.
-    pub const ALL: [Resolution; 14] = [
+    pub const ALL: [Resolution; 15] = [
         Resolution::Served,
         Resolution::Shed(ShedReason::QueueFull),
         Resolution::Shed(ShedReason::DeadlineExpired),
         Resolution::Shed(ShedReason::InvalidRequest),
+        Resolution::Shed(ShedReason::RateLimited),
         Resolution::Shed(ShedReason::WorkerPanic),
         Resolution::Shed(ShedReason::Shutdown),
         Resolution::Cancelled(CancelPoint::WhileQueued),
@@ -154,7 +158,7 @@ mod tests {
         for r in Resolution::ALL {
             assert!(seen.insert((r.class(), r.reason())), "duplicate label pair for {r:?}");
         }
-        assert_eq!(seen.len(), 14);
+        assert_eq!(seen.len(), 15);
     }
 
     #[test]

@@ -36,6 +36,7 @@ pub struct ResolvedCells {
     shed_queue_full: Counter,
     shed_deadline_expired: Counter,
     shed_invalid_request: Counter,
+    shed_rate_limited: Counter,
     shed_worker_panic: Counter,
     shed_shutdown: Counter,
     cancelled_while_queued: Counter,
@@ -57,6 +58,7 @@ impl ResolvedCells {
             shed_queue_full: cell(Resolution::Shed(S::QueueFull)),
             shed_deadline_expired: cell(Resolution::Shed(S::DeadlineExpired)),
             shed_invalid_request: cell(Resolution::Shed(S::InvalidRequest)),
+            shed_rate_limited: cell(Resolution::Shed(S::RateLimited)),
             shed_worker_panic: cell(Resolution::Shed(S::WorkerPanic)),
             shed_shutdown: cell(Resolution::Shed(S::Shutdown)),
             cancelled_while_queued: cell(Resolution::Cancelled(C::WhileQueued)),
@@ -78,6 +80,7 @@ impl ResolvedCells {
             Resolution::Shed(S::QueueFull) => &self.shed_queue_full,
             Resolution::Shed(S::DeadlineExpired) => &self.shed_deadline_expired,
             Resolution::Shed(S::InvalidRequest) => &self.shed_invalid_request,
+            Resolution::Shed(S::RateLimited) => &self.shed_rate_limited,
             Resolution::Shed(S::WorkerPanic) => &self.shed_worker_panic,
             Resolution::Shed(S::Shutdown) => &self.shed_shutdown,
             Resolution::Cancelled(C::WhileQueued) => &self.cancelled_while_queued,
@@ -98,6 +101,10 @@ impl ResolvedCells {
 pub struct ServingMetrics {
     // admission + queue
     pub rate_limited: Counter,
+    /// `rejected_rate_limited` — rate-limit refusals shed with a typed
+    /// [`Resolution::Shed`] on the non-blocking path. The HTTP front door
+    /// re-registers the same name and bumps the same cell on 429s.
+    pub rejected_rate_limited: Counter,
     pub enqueued: Counter,
     pub rejected_queue_full: Counter,
     pub shed_deadline_expired: Counter,
@@ -160,6 +167,10 @@ impl ServingMetrics {
         let h = |name: &str, help: &str| m.register_histogram(name, help);
         ServingMetrics {
             rate_limited: c("rate_limited", "requests refused by the per-user rate limiter"),
+            rejected_rate_limited: c(
+                "rejected_rate_limited",
+                "requests shed with a typed resolution by the per-user rate limiter",
+            ),
             enqueued: c("enqueued", "requests accepted into the admission queue"),
             rejected_queue_full: c("rejected_queue_full", "requests shed because the admission queue was full"),
             shed_deadline_expired: c(
@@ -282,6 +293,75 @@ impl ServingMetrics {
     }
 }
 
+/// Route label values the HTTP surface reports under. Unrecognized paths
+/// collapse into `other` so hostile scanners cannot mint unbounded series.
+pub const HTTP_ROUTES: [&str; 7] = ["submit", "ticket", "cancel", "stream", "metrics", "healthz", "other"];
+
+/// Pre-registered metrics for the HTTP serving surface: per-route request
+/// counters (`http_requests{route,status}`), per-route latency histograms
+/// (`http_request_ms{route}`), the live-connection gauge, and the ticket
+/// registry's reap counter. Cells are cached per `(route, status)` so the
+/// per-request path after warm-up is two atomic bumps.
+pub struct HttpMetrics {
+    /// `http_active_connections` — connections currently being served.
+    pub active_connections: Gauge,
+    /// `rejected_rate_limited` — shared with [`ServingMetrics`]; the HTTP
+    /// front-door 429 path bumps the same cell as the in-process shed path.
+    pub rejected_rate_limited: Counter,
+    /// `tickets_reaped` — resolved tickets dropped from the HTTP ticket
+    /// registry after their TTL (or evicted resolved-first at capacity).
+    pub tickets_reaped: Counter,
+    requests: CounterVec,
+    latency: HistogramVec,
+    request_cells: RwLock<BTreeMap<(&'static str, u16), Counter>>,
+    latency_cells: RwLock<BTreeMap<&'static str, Hist>>,
+}
+
+impl HttpMetrics {
+    pub fn register(m: &Metrics) -> HttpMetrics {
+        HttpMetrics {
+            active_connections: m.register_gauge("http_active_connections", "HTTP connections currently open"),
+            rejected_rate_limited: m.register_counter(
+                "rejected_rate_limited",
+                "requests shed with a typed resolution by the per-user rate limiter",
+            ),
+            tickets_reaped: m
+                .register_counter("tickets_reaped", "resolved tickets reaped from the HTTP ticket registry"),
+            requests: m.counter_vec("http_requests", "HTTP requests handled, by route and status", &["route", "status"]),
+            latency: m.histogram_vec("http_request_ms", "HTTP request wall time, by route (ms)", &["route"]),
+            request_cells: RwLock::new(BTreeMap::new()),
+            latency_cells: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Record one handled request: bump `http_requests{route,status}` and
+    /// observe `http_request_ms{route}`. `route` must be one of
+    /// [`HTTP_ROUTES`] (the router guarantees this).
+    pub fn observe(&self, route: &'static str, status: u16, wall_ms: f64) {
+        self.request_counter(route, status).inc();
+        self.route_latency(route).observe(wall_ms);
+    }
+
+    fn request_counter(&self, route: &'static str, status: u16) -> Counter {
+        if let Some(c) = self.request_cells.read().unwrap().get(&(route, status)) {
+            return c.clone();
+        }
+        let status_label = status.to_string();
+        let counter = self.requests.with(&[route, status_label.as_str()]);
+        let mut w = self.request_cells.write().unwrap();
+        w.entry((route, status)).or_insert(counter).clone()
+    }
+
+    fn route_latency(&self, route: &'static str) -> Hist {
+        if let Some(h) = self.latency_cells.read().unwrap().get(route) {
+            return h.clone();
+        }
+        let hist = self.latency.with(&[route]);
+        let mut w = self.latency_cells.write().unwrap();
+        w.entry(route).or_insert(hist).clone()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,6 +387,29 @@ mod tests {
         }
         assert_eq!(m.counter_value("requests_resolved"), Resolution::ALL.len() as u64);
         assert_eq!(m.counter_children("requests_resolved").len(), Resolution::ALL.len());
+    }
+
+    #[test]
+    fn http_metrics_share_the_rate_limited_cell_and_label_routes() {
+        let m = Metrics::new();
+        let s = ServingMetrics::register(&m);
+        let h = HttpMetrics::register(&m);
+        // same family, same (empty) label set — one logical counter
+        s.rejected_rate_limited.inc();
+        h.rejected_rate_limited.inc();
+        assert_eq!(m.counter_value("rejected_rate_limited"), 2);
+        h.observe("submit", 200, 1.5);
+        h.observe("submit", 200, 2.5);
+        h.observe("submit", 429, 0.1);
+        h.observe("healthz", 200, 0.2);
+        assert_eq!(m.counter_value("http_requests"), 4);
+        assert_eq!(m.counter_children("http_requests").len(), 3);
+        let hists = m.histogram_children("http_request_ms");
+        assert_eq!(hists.len(), 2);
+        h.active_connections.set(3.0);
+        assert_eq!(m.gauge_value("http_active_connections"), Some(3.0));
+        h.tickets_reaped.inc();
+        assert_eq!(m.counter_value("tickets_reaped"), 1);
     }
 
     #[test]

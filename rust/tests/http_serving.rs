@@ -1,0 +1,321 @@
+//! Loopback integration tests for the HTTP/1.1 network serving surface:
+//! every scenario drives a real `TcpListener` on `127.0.0.1:0` through the
+//! crate's own minimal client, so the bytes on the wire are the bytes the
+//! server parses.
+//!
+//! Pinned invariants:
+//! - submit → poll round-trips a typed resolution; submit → stream relays
+//!   token events to a terminal record; cancel is cooperative,
+//! - the boundary is fail-closed: 401 before any body interpretation (no
+//!   request id, no audit entry), 429 off the per-key token bucket with
+//!   the `rejected_rate_limited` counter bumped, 400 + exactly one audit
+//!   entry for malformed/invalid JSON,
+//! - unknown and TTL-reaped tickets answer 404 (`tickets_reaped` counts),
+//! - a mid-stream client disconnect cancels the request cooperatively and
+//!   still leaves exactly one audit entry,
+//! - graceful drain loses no admitted ticket and refuses new connections,
+//! - `/metrics` is a lintable Prometheus exposition carrying the per-route
+//!   http series; `/healthz` reports Lighthouse liveness.
+//!
+//! Producer count for the concurrency scenario is overridable via
+//! `ISLANDRUN_STRESS_THREADS` so the CI release-mode stress job can push
+//! harder than the debug test job.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use islandrun::agents::mist::Mist;
+use islandrun::config::json::Json;
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::eval::loadgen::run_open_loop_http;
+use islandrun::islands::Fleet;
+use islandrun::server::http::client::HttpClient;
+use islandrun::server::{Backend, HttpConfig, HttpServer, Orchestrator};
+use islandrun::telemetry::lint_exposition;
+
+const KEY: &str = "test-key";
+const POLL_DEADLINE: Duration = Duration::from_secs(30);
+
+fn orchestrator() -> Arc<Orchestrator> {
+    let mut cfg = Config::default();
+    // these tests exercise the wire surface; admission policy is opened
+    // wide except where a scenario says otherwise (the 429 test tightens
+    // the HTTP front door instead)
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    let fleet = Fleet::new(preset_personal_group(), 77);
+    Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 77))
+}
+
+fn wide_open() -> HttpConfig {
+    HttpConfig { rate_per_sec: 1e9, burst: 1e9, ..HttpConfig::default() }
+}
+
+fn start(config: HttpConfig) -> (Arc<Orchestrator>, HttpServer) {
+    let orch = orchestrator();
+    let grants = vec![(KEY.to_string(), "http-tester".to_string())];
+    let server = HttpServer::start(Arc::clone(&orch), "127.0.0.1:0", &grants, config).expect("bind loopback");
+    (orch, server)
+}
+
+fn submit_body(prompt: &str, max_new_tokens: f64) -> Json {
+    Json::obj(vec![
+        ("prompt", Json::str(prompt)),
+        ("max_new_tokens", Json::num(max_new_tokens)),
+        ("deadline_ms", Json::num(1e12)),
+    ])
+}
+
+fn submit(client: &mut HttpClient, body: &Json) -> u64 {
+    let resp = client.request("POST", "/v1/submit", Some(KEY), Some(body)).expect("submit");
+    assert_eq!(resp.status, 200, "submit refused: {}", String::from_utf8_lossy(&resp.body));
+    resp.json().expect("submit response is JSON").get("ticket").as_i64().expect("ticket id") as u64
+}
+
+/// Poll `GET /v1/tickets/:id` until `done` and return the full response
+/// JSON (`outcome` or `error` key set).
+fn poll_until_done(client: &mut HttpClient, id: u64) -> Json {
+    let path = format!("/v1/tickets/{id}");
+    let give_up = Instant::now() + POLL_DEADLINE;
+    loop {
+        let resp = client.request("GET", &path, Some(KEY), None).expect("poll");
+        assert_eq!(resp.status, 200, "poll failed: {}", String::from_utf8_lossy(&resp.body));
+        let json = resp.json().expect("poll response is JSON");
+        if json.get("done").as_bool() == Some(true) {
+            return json;
+        }
+        assert!(Instant::now() < give_up, "ticket {id} never resolved");
+        std::thread::sleep(Duration::from_micros(300));
+    }
+}
+
+#[test]
+fn submit_then_poll_round_trips_a_typed_resolution() {
+    let (orch, server) = start(wide_open());
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    let id = submit(&mut client, &submit_body("hello over the wire", 8.0));
+    let done = poll_until_done(&mut client, id);
+    let out = done.get("outcome");
+    assert_eq!(out.get("outcome").as_str(), Some("served"), "wide-open server must serve: {done:?}");
+    assert!(out.get("island").as_str().unwrap_or("").starts_with("island-"));
+    assert!(out.get("tokens_generated").as_i64().unwrap_or(0) > 0);
+    let request_id = out.get("request_id").as_i64().expect("request id") as u64;
+    assert!(orch.audit.contains(request_id));
+    assert_eq!(orch.audit.len(), 1, "exactly one audit entry per request");
+    server.shutdown();
+}
+
+#[test]
+fn stream_relays_token_events_to_a_terminal_record() {
+    let (_orch, server) = start(wide_open());
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    let id = submit(&mut client, &submit_body("stream me some tokens", 6.0));
+    let (status, events) = client.stream_events(&format!("/v1/stream/{id}"), Some(KEY)).unwrap();
+    assert_eq!(status, 200);
+    assert!(events.len() >= 2, "at least one token event plus the terminal record: {events:?}");
+    assert_eq!(events.first().map(|(n, _)| n.as_str()), Some("first"));
+    assert_eq!(events.last().map(|(n, _)| n.as_str()), Some("done"));
+    // the stream keeps the connection reusable: poll the same ticket on it
+    let done = poll_until_done(&mut client, id);
+    assert_eq!(done.get("outcome").get("outcome").as_str(), Some("served"));
+    server.shutdown();
+}
+
+#[test]
+fn cancel_endpoint_cancels_cooperatively() {
+    let (orch, server) = start(wide_open());
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    // a decode long enough that the cancel always lands mid-flight
+    let id = submit(&mut client, &submit_body("long running decode", 5_000_000.0));
+    let resp = client.request("POST", &format!("/v1/tickets/{id}/cancel"), Some(KEY), None).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.json().unwrap().get("cancelled").as_bool(), Some(true));
+    let done = poll_until_done(&mut client, id);
+    assert_eq!(done.get("outcome").get("outcome").as_str(), Some("cancelled"), "{done:?}");
+    assert_eq!(orch.audit.len(), 1, "cancelled requests still audit exactly once");
+    server.shutdown();
+}
+
+#[test]
+fn unauthenticated_requests_are_refused_before_any_side_effect() {
+    let (orch, server) = start(wide_open());
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    let body = submit_body("should never be read", 4.0);
+    for key in [None, Some("wrong-key")] {
+        let resp = client.request("POST", "/v1/submit", key, Some(&body)).unwrap();
+        assert_eq!(resp.status, 401);
+        for path in ["/v1/tickets/1", "/v1/stream/1"] {
+            assert_eq!(client.request("GET", path, key, None).unwrap().status, 401);
+        }
+        assert_eq!(client.request("POST", "/v1/tickets/1/cancel", key, None).unwrap().status, 401);
+    }
+    assert!(orch.audit.is_empty(), "401s must not consume request ids or audit entries");
+    assert_eq!(server.tickets_registered(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn rate_limited_submits_answer_429_and_count() {
+    // burst of exactly 1 and a refill slow enough to never matter
+    let (orch, server) = start(HttpConfig { rate_per_sec: 1e-9, burst: 1.0, ..HttpConfig::default() });
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    let id = submit(&mut client, &submit_body("first one through", 4.0));
+    let resp = client.request("POST", "/v1/submit", Some(KEY), Some(&submit_body("bucket is dry", 4.0))).unwrap();
+    assert_eq!(resp.status, 429);
+    assert_eq!(resp.json().unwrap().get("reason").as_str(), Some("rate_limited"));
+    assert_eq!(orch.metrics.counter_value("rejected_rate_limited"), 1);
+    // only the admitted request ever reaches the orchestrator
+    poll_until_done(&mut client, id);
+    assert_eq!(orch.audit.len(), 1);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_and_invalid_submits_are_fail_closed_400s_with_one_audit_entry() {
+    let (orch, server) = start(wide_open());
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    let cases: [&[u8]; 3] = [
+        b"{not json",                                // unparseable
+        br#"{"prompt": "x", "max_new_tokens": 0}"#,  // parses, fails validate()
+        br#"{"prompt": "x", "turbo": true}"#,        // unknown field
+    ];
+    for (i, &body) in cases.iter().enumerate() {
+        let resp = client.request_raw("POST", "/v1/submit", Some(KEY), Some(body)).unwrap();
+        assert_eq!(resp.status, 400, "case {i}");
+        let json = resp.json().expect("400 body is JSON");
+        assert!(json.get("error").as_str().is_some());
+        let request_id = json.get("request_id").as_i64().expect("400 consumed a request id") as u64;
+        assert!(orch.audit.contains(request_id), "case {i} must audit");
+        assert_eq!(orch.audit.len(), i + 1, "exactly one audit entry per rejected submit");
+    }
+    assert_eq!(server.tickets_registered(), 0, "no ticket for a rejected submit");
+    server.shutdown();
+}
+
+#[test]
+fn unknown_and_reaped_tickets_answer_404() {
+    let (orch, server) = start(HttpConfig { ticket_ttl_ms: 25, rate_per_sec: 1e9, burst: 1e9, ..HttpConfig::default() });
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    let resp = client.request("GET", "/v1/tickets/999", Some(KEY), None).unwrap();
+    assert_eq!(resp.status, 404, "never-issued id");
+    let id = submit(&mut client, &submit_body("short lived", 4.0));
+    poll_until_done(&mut client, id);
+    std::thread::sleep(Duration::from_millis(120)); // past the 25ms TTL
+    let resp = client.request("GET", &format!("/v1/tickets/{id}"), Some(KEY), None).unwrap();
+    assert_eq!(resp.status, 404, "resolved ticket past its TTL is reaped");
+    assert!(orch.metrics.counter_value("tickets_reaped") >= 1);
+    assert_eq!(server.tickets_registered(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_the_request() {
+    let (orch, server) = start(wide_open());
+    let mut submitter = HttpClient::connect(server.addr()).unwrap();
+    let id = submit(&mut submitter, &submit_body("stream to be abandoned", 5_000_000.0));
+    let mut watcher = HttpClient::connect(server.addr()).unwrap();
+    let status = watcher.start_stream(&format!("/v1/stream/{id}"), Some(KEY)).unwrap();
+    assert_eq!(status, 200);
+    let first = watcher.read_event().unwrap().expect("at least one event before the disconnect");
+    assert_eq!(first.0, "first");
+    watcher.disconnect();
+    drop(watcher);
+    // the server's next relay write fails, which must cancel cooperatively
+    let done = poll_until_done(&mut submitter, id);
+    assert_eq!(done.get("outcome").get("outcome").as_str(), Some("cancelled"), "{done:?}");
+    let request_id = done.get("outcome").get("request_id").as_i64().unwrap() as u64;
+    assert!(orch.audit.contains(request_id));
+    assert_eq!(orch.audit.len(), 1, "disconnect-cancel audits exactly once");
+    server.shutdown();
+}
+
+#[test]
+fn graceful_drain_loses_no_admitted_ticket() {
+    let (orch, server) = start(wide_open());
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    const N: usize = 16;
+    for i in 0..N {
+        submit(&mut client, &submit_body(&format!("drain me {i}"), 4.0));
+    }
+    let addr = server.addr();
+    server.shutdown();
+    // the orchestrator outlives the server: every admitted ticket resolves
+    let give_up = Instant::now() + Duration::from_secs(10);
+    while orch.audit.len() < N {
+        assert!(Instant::now() < give_up, "drain lost tickets: {}/{N} audited", orch.audit.len());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(orch.audit.len(), N);
+    assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+    assert!(std::net::TcpStream::connect(addr).is_err(), "drained server must refuse new connections");
+}
+
+#[test]
+fn metrics_endpoint_is_a_lintable_exposition_with_http_series() {
+    let (_orch, server) = start(wide_open());
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    let id = submit(&mut client, &submit_body("observable", 4.0));
+    poll_until_done(&mut client, id);
+    // unauthenticated scrape, per standard Prometheus practice
+    let resp = client.request("GET", "/metrics", None, None).unwrap();
+    assert_eq!(resp.status, 200);
+    let text = String::from_utf8(resp.body).unwrap();
+    lint_exposition(&text).expect("exposition must lint clean");
+    for needle in [
+        "islandrun_http_requests_total",
+        "route=\"submit\"",
+        "route=\"ticket\"",
+        "islandrun_http_request_ms",
+        "islandrun_http_active_connections",
+        "islandrun_rejected_rate_limited_total",
+        "islandrun_tickets_reaped_total",
+    ] {
+        assert!(text.contains(needle), "{needle} missing from:\n{text}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn healthz_reports_lighthouse_liveness() {
+    let (_orch, server) = start(wide_open());
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    let resp = client.request("GET", "/healthz", None, None).unwrap();
+    assert_eq!(resp.status, 200);
+    let json = resp.json().unwrap();
+    assert_eq!(json.get("status").as_str(), Some("ok"));
+    assert_eq!(json.get("islands").as_i64(), Some(7));
+    assert_eq!(json.get("islands_online").as_i64(), Some(7));
+    assert_eq!(json.get("draining").as_bool(), Some(false));
+    server.shutdown();
+}
+
+#[test]
+fn routing_errors_answer_without_side_effects() {
+    let (orch, server) = start(wide_open());
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    assert_eq!(client.request("GET", "/v1/nope", Some(KEY), None).unwrap().status, 404);
+    assert_eq!(client.request("GET", "/v1/submit", Some(KEY), None).unwrap().status, 405, "wrong method");
+    assert_eq!(client.request("POST", "/metrics", None, None).unwrap().status, 405);
+    assert!(orch.audit.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_submitters_lose_nothing_over_the_wire() {
+    let producers: usize =
+        std::env::var("ISLANDRUN_STRESS_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
+    let orch = orchestrator();
+    let grants: Vec<(String, String)> =
+        (0..8).map(|k| (format!("stress-key-{k}"), format!("http-stress-{k}"))).collect();
+    let server = HttpServer::start(Arc::clone(&orch), "127.0.0.1:0", &grants, wide_open()).expect("bind loopback");
+    let keys: Vec<String> = grants.iter().map(|(k, _)| k.clone()).collect();
+    const PER_PRODUCER: usize = 25;
+    let report = run_open_loop_http(server.addr(), &keys, producers, PER_PRODUCER, 42);
+    let total = producers * PER_PRODUCER;
+    assert_eq!(report.attempted, total);
+    assert_eq!(report.errors, 0, "no request may be lost on the wire");
+    assert_eq!(report.served + report.rejected, total);
+    assert_eq!(orch.audit.len(), total, "exactly one audit entry per wire submission");
+    assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+    server.shutdown();
+}
