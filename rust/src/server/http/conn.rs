@@ -4,9 +4,14 @@
 //!
 //! The parser is deliberately narrow: request line + headers + an optional
 //! `Content-Length` body (the only framing our clients use). Everything
-//! else — chunked request bodies, multi-line headers, HTTP/2 preface — is
-//! rejected fail-closed as `InvalidData`, which the connection loop answers
-//! with a 400 and a close. Reads tolerate the socket read timeout the
+//! else — chunked request bodies (any `Transfer-Encoding` header),
+//! duplicate `Content-Length` headers (RFC 9112 §6.3 framing ambiguity),
+//! multi-line headers, HTTP/2 preface — is rejected fail-closed as
+//! `InvalidData`, which the connection loop answers with a 400 and a
+//! close; silently mis-framing either would desync the keep-alive stream
+//! (request smuggling). Bodies over [`MAX_BODY_BYTES`] are the one
+//! distinguishable parse error ([`is_payload_too_large`]) so the loop can
+//! answer 413 instead of 400. Reads tolerate the socket read timeout the
 //! server installs for drain polling: a timeout *between* requests is an
 //! idle keep-alive connection (close it only when draining), a timeout
 //! *inside* a request is retried until the drain flag flips.
@@ -37,6 +42,15 @@ impl HttpRequest {
 
 fn bad(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Marker message for the one parse error that gets its own status code.
+const PAYLOAD_TOO_LARGE: &str = "payload too large";
+
+/// True iff `e` is the oversized-body parse error — the connection loop
+/// answers it with 413 instead of the generic framing 400.
+pub(crate) fn is_payload_too_large(e: &io::Error) -> bool {
+    e.kind() == io::ErrorKind::InvalidData && e.get_ref().is_some_and(|inner| inner.to_string() == PAYLOAD_TOO_LARGE)
 }
 
 fn is_timeout(e: &io::Error) -> bool {
@@ -151,12 +165,26 @@ pub(crate) fn read_request<R: BufRead>(r: &mut R, draining: &dyn Fn() -> bool) -
         };
         headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
     }
-    let len = match headers.iter().find(|(n, _)| n == "content-length") {
-        Some((_, v)) => v.parse::<usize>().map_err(|_| bad("malformed content-length"))?,
+    // any Transfer-Encoding (chunked or otherwise) is unsupported framing:
+    // parsing the request as zero-length would leave the encoded body on
+    // the stream to be misread as the next pipelined request
+    if headers.iter().any(|(n, _)| n == "transfer-encoding") {
+        return Err(bad("chunked request bodies unsupported"));
+    }
+    let mut lens = headers.iter().filter(|(n, _)| n == "content-length");
+    let len = match lens.next() {
+        Some((_, v)) => {
+            // duplicates are a framing ambiguity even when they agree
+            // (RFC 9112 §6.3): reject rather than pick one
+            if lens.next().is_some() {
+                return Err(bad("duplicate content-length"));
+            }
+            v.parse::<usize>().map_err(|_| bad("malformed content-length"))?
+        }
         None => 0,
     };
     if len > MAX_BODY_BYTES {
-        return Err(bad("payload too large"));
+        return Err(bad(PAYLOAD_TOO_LARGE));
     }
     let body = read_body(r, len, draining)?;
     // the query string is routing noise for this API: strip it
@@ -275,9 +303,26 @@ mod tests {
     }
 
     #[test]
-    fn rejects_oversized_bodies_fail_closed() {
+    fn rejects_oversized_bodies_fail_closed_and_distinguishably() {
         let raw = format!("POST /v1/submit HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
-        assert!(parse(raw.as_bytes()).is_err());
+        let err = parse(raw.as_bytes()).unwrap_err();
+        assert!(is_payload_too_large(&err), "oversized body must map to 413, not a generic 400");
+        assert!(!is_payload_too_large(&parse(b"NOT-HTTP\r\n\r\n").unwrap_err()));
+    }
+
+    #[test]
+    fn rejects_transfer_encoding_before_reading_any_body() {
+        // parsing this as a zero-length body would leave "5\r\nhello..."
+        // on the stream as a smuggled second request
+        let raw = b"POST /v1/submit HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhello\r\n0\r\n\r\n";
+        assert!(parse(raw).is_err());
+        assert!(parse(b"POST /x HTTP/1.1\r\nTransfer-Encoding: identity\r\nContent-Length: 2\r\n\r\nok").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_content_length_even_when_values_agree() {
+        assert!(parse(b"POST /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 4\r\n\r\nabcd").is_err());
+        assert!(parse(b"POST /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nab").is_err());
     }
 
     #[test]

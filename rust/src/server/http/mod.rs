@@ -16,7 +16,9 @@
 //! | `GET /healthz` | Lighthouse liveness summary (unauthenticated probe) |
 //!
 //! The trust anchor is the authenticated request boundary: API keys
-//! (`Authorization: Bearer`) map to orchestrator sessions, each key is
+//! (`Authorization: Bearer`) map to orchestrator sessions, ticket ids are
+//! scoped to the session that submitted them (a foreign key's poll,
+//! stream, or cancel answers 404 exactly like an unknown id), each key is
 //! rate-limited by the same token-bucket implementation the orchestrator
 //! uses ([`RateLimiter`]), and every refusal is observable — 401s consume
 //! nothing, 429s bump `rejected_rate_limited`, malformed submits consume a
@@ -237,15 +239,18 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, handlers: Arc<Mutex<V
             let _ = router::refuse_overloaded(stream);
             continue;
         }
-        let count = shared.active.fetch_add(1, Ordering::SeqCst) + 1;
-        shared.http.active_connections.set(count as f64);
+        // gauge moves by deltas, never absolute sets: interleaved set()s
+        // from the accept loop and handler threads could publish a stale
+        // count; paired +1/-1 always converge to the live total
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        shared.http.active_connections.add(1.0);
         let conn_shared = Arc::clone(&shared);
         let handle = std::thread::Builder::new()
             .name("islandrun-http-conn".into())
             .spawn(move || {
                 router::serve_connection(&conn_shared, stream);
-                let left = conn_shared.active.fetch_sub(1, Ordering::SeqCst) - 1;
-                conn_shared.http.active_connections.set(left as f64);
+                conn_shared.active.fetch_sub(1, Ordering::SeqCst);
+                conn_shared.http.active_connections.add(-1.0);
             })
             .expect("spawn http connection handler");
         let mut hs = handlers.lock().unwrap();

@@ -3,6 +3,14 @@
 //! resolved entries after a TTL so the server never leaks terminal
 //! `TicketCell`s (metric: `tickets_reaped`).
 //!
+//! Every entry records the owning session at insert time, and
+//! [`TicketRegistry::get`] requires the caller to present the same owner:
+//! ids are sequential, so without the owner check any authenticated key
+//! could enumerate them and read, stream, or cancel another tenant's
+//! requests. A foreign id misses
+//! exactly like a never-issued one (the handler answers 404 either way),
+//! so the lookup is not an id-existence oracle across keys.
+//!
 //! Two invariants:
 //! * **No ticket lost** — an *unresolved* ticket is never evicted. When
 //!   every slot holds an unresolved ticket, `insert` refuses (the handler
@@ -21,6 +29,9 @@ use crate::telemetry::Counter;
 
 struct Entry {
     ticket: Ticket,
+    /// The session that submitted the ticket; lookups under any other
+    /// owner miss.
+    owner: u64,
     /// Stamped lazily the first time a registry operation observes the
     /// ticket resolved; the TTL counts from this observation.
     resolved_at: Option<Instant>,
@@ -50,10 +61,11 @@ impl TicketRegistry {
         }
     }
 
-    /// Register a ticket and return its wire-visible id, or `None` when
-    /// every slot holds an unresolved ticket (the caller sheds with 503 —
-    /// refusing new work beats dropping handles to admitted work).
-    pub fn insert(&self, ticket: Ticket) -> Option<u64> {
+    /// Register a ticket owned by `owner` (the submitting session) and
+    /// return its wire-visible id, or `None` when every slot holds an
+    /// unresolved ticket (the caller sheds with 503 — refusing new work
+    /// beats dropping handles to admitted work).
+    pub fn insert(&self, ticket: Ticket, owner: u64) -> Option<u64> {
         let mut inner = self.inner.lock().unwrap();
         self.reap_locked(&mut inner);
         if inner.entries.len() >= self.capacity {
@@ -71,16 +83,18 @@ impl TicketRegistry {
         }
         let id = inner.next_id;
         inner.next_id += 1;
-        inner.entries.insert(id, Entry { ticket, resolved_at: None });
+        inner.entries.insert(id, Entry { ticket, owner, resolved_at: None });
         Some(id)
     }
 
-    /// Look up a ticket by wire id. `None` for ids never issued or already
-    /// reaped — the handler answers 404.
-    pub fn get(&self, id: u64) -> Option<Ticket> {
+    /// Look up a ticket by wire id on behalf of `owner`. `None` for ids
+    /// never issued, already reaped, or owned by a different session — all
+    /// three miss identically, so the handler's 404 leaks nothing about
+    /// other tenants' ids.
+    pub fn get(&self, id: u64, owner: u64) -> Option<Ticket> {
         let mut inner = self.inner.lock().unwrap();
         self.reap_locked(&mut inner);
-        inner.entries.get(&id).map(|e| e.ticket.clone())
+        inner.entries.get(&id).filter(|e| e.owner == owner).map(|e| e.ticket.clone())
     }
 
     /// Entries currently registered (resolved-but-unreaped included).
@@ -140,27 +154,39 @@ mod tests {
         ticket
     }
 
+    const OWNER: u64 = 7;
+
     #[test]
     fn issues_monotonic_ids_and_finds_tickets() {
         let m = Metrics::new();
         let r = TicketRegistry::new(8, 60_000, reap_counter(&m));
         let (t1, _c1) = Ticket::new_pair();
         let (t2, _c2) = Ticket::new_pair();
-        let a = r.insert(t1).unwrap();
-        let b = r.insert(t2).unwrap();
+        let a = r.insert(t1, OWNER).unwrap();
+        let b = r.insert(t2, OWNER).unwrap();
         assert!(b > a);
-        assert!(r.get(a).is_some());
-        assert!(r.get(999).is_none(), "never-issued id is a miss");
+        assert!(r.get(a, OWNER).is_some());
+        assert!(r.get(999, OWNER).is_none(), "never-issued id is a miss");
+    }
+
+    #[test]
+    fn foreign_owner_lookup_misses_like_an_unknown_id() {
+        let m = Metrics::new();
+        let r = TicketRegistry::new(8, 60_000, reap_counter(&m));
+        let (ticket, _cell) = Ticket::new_pair();
+        let id = r.insert(ticket, OWNER).unwrap();
+        assert!(r.get(id, OWNER + 1).is_none(), "another session must not see the ticket");
+        assert!(r.get(id, OWNER).is_some(), "the owner still can");
     }
 
     #[test]
     fn reaps_resolved_tickets_after_ttl() {
         let m = Metrics::new();
         let r = TicketRegistry::new(8, 20, reap_counter(&m));
-        let id = r.insert(resolved_ticket()).unwrap();
-        assert!(r.get(id).is_some(), "within TTL the outcome stays readable");
+        let id = r.insert(resolved_ticket(), OWNER).unwrap();
+        assert!(r.get(id, OWNER).is_some(), "within TTL the outcome stays readable");
         std::thread::sleep(Duration::from_millis(40));
-        assert!(r.get(id).is_none(), "past TTL the entry is reaped");
+        assert!(r.get(id, OWNER).is_none(), "past TTL the entry is reaped");
         assert_eq!(m.counter_value("tickets_reaped"), 1);
         assert!(r.is_empty());
     }
@@ -170,9 +196,9 @@ mod tests {
         let m = Metrics::new();
         let r = TicketRegistry::new(8, 10, reap_counter(&m));
         let (ticket, _cell) = Ticket::new_pair();
-        let id = r.insert(ticket).unwrap();
+        let id = r.insert(ticket, OWNER).unwrap();
         std::thread::sleep(Duration::from_millis(30));
-        assert!(r.get(id).is_some(), "TTL counts from resolution, not insertion");
+        assert!(r.get(id, OWNER).is_some(), "TTL counts from resolution, not insertion");
         assert_eq!(m.counter_value("tickets_reaped"), 0);
     }
 
@@ -180,18 +206,18 @@ mod tests {
     fn at_capacity_evicts_resolved_first_and_refuses_when_all_live() {
         let m = Metrics::new();
         let r = TicketRegistry::new(2, 60_000, reap_counter(&m));
-        let done = r.insert(resolved_ticket()).unwrap();
+        let done = r.insert(resolved_ticket(), OWNER).unwrap();
         let (live, _cell) = Ticket::new_pair();
-        let live_id = r.insert(live).unwrap();
+        let live_id = r.insert(live, OWNER).unwrap();
         // full; a resolved slot is reclaimed early, before its TTL
         let (third, _cell3) = Ticket::new_pair();
-        let third_id = r.insert(third).expect("resolved entry must be evicted to make room");
-        assert!(r.get(done).is_none());
-        assert!(r.get(live_id).is_some());
-        assert!(r.get(third_id).is_some());
+        let third_id = r.insert(third, OWNER).expect("resolved entry must be evicted to make room");
+        assert!(r.get(done, OWNER).is_none());
+        assert!(r.get(live_id, OWNER).is_some());
+        assert!(r.get(third_id, OWNER).is_some());
         assert_eq!(m.counter_value("tickets_reaped"), 1);
         // now every slot is unresolved: refuse, never evict live handles
         let (fourth, _cell4) = Ticket::new_pair();
-        assert!(r.insert(fourth).is_none());
+        assert!(r.insert(fourth, OWNER).is_none());
     }
 }

@@ -8,6 +8,10 @@
 //! authenticated-but-malformed submits consume an id and leave exactly one
 //! audit entry via [`Orchestrator::reject_at_front_door`]; rate-limited
 //! submits answer 429 and bump the shared `rejected_rate_limited` cell.
+//! Ticket ids are scoped to the submitting key's session: poll, stream and
+//! cancel look the id up under the authenticated session, so a foreign id
+//! answers 404 exactly like an unknown one — no cross-tenant reads,
+//! cancels, or id-existence oracle.
 //!
 //! [`Orchestrator::reject_at_front_door`]: crate::server::Orchestrator::reject_at_front_door
 
@@ -47,18 +51,26 @@ pub(crate) fn serve_connection(shared: &Shared, stream: TcpStream) {
             // clean end: client EOF between requests, or idle at drain
             Ok(None) => return,
             Err(e) if e.kind() == io::ErrorKind::InvalidData => {
-                // unroutable framing: answer 400 and close. No request id is
-                // consumed — nothing was authenticated, so there is nothing
-                // to audit against (the JSON-level 400s are per-route).
+                // unroutable framing: answer 400 — or 413 when the only
+                // problem is the declared body size, so clients can tell
+                // "shrink the request" from "malformed request" — and
+                // close. No request id is consumed — nothing was
+                // authenticated, so there is nothing to audit against (the
+                // JSON-level 400s are per-route).
+                let (status, msg) = if conn::is_payload_too_large(&e) {
+                    (413, "payload too large")
+                } else {
+                    (400, "bad request")
+                };
                 let _ = conn::write_response(
                     &mut writer,
-                    400,
+                    status,
                     "application/json",
                     &[],
-                    &wire::error_json("bad request"),
+                    &wire::error_json(msg),
                     true,
                 );
-                shared.http.observe("other", 400, 0.0);
+                shared.http.observe("other", status, 0.0);
                 return;
             }
             Err(_) => return,
@@ -204,7 +216,7 @@ fn handle_submit(
         }
     };
     let ticket = shared.orch.enqueue(entry.session_id, sr);
-    match shared.registry.insert(ticket.clone()) {
+    match shared.registry.insert(ticket.clone(), entry.session_id) {
         Some(id) => Ok((ROUTE, write_json(w, 200, &Json::obj(vec![("ticket", Json::num(id as f64))]), close)?, close)),
         None => {
             // registry full of live tickets. The request is already admitted
@@ -225,10 +237,10 @@ fn handle_poll(
     close: bool,
 ) -> io::Result<(&'static str, u16, bool)> {
     const ROUTE: &str = "ticket";
-    if authenticate(shared, req).is_none() {
+    let Some(entry) = authenticate(shared, req) else {
         return Ok((ROUTE, unauthorized(w, close)?, close));
-    }
-    let Some(ticket) = id.parse::<u64>().ok().and_then(|id| shared.registry.get(id)) else {
+    };
+    let Some(ticket) = id.parse::<u64>().ok().and_then(|id| shared.registry.get(id, entry.session_id)) else {
         return Ok((ROUTE, write_json(w, 404, &Json::obj(vec![("error", Json::str("unknown ticket"))]), close)?, close));
     };
     let body = match ticket.try_poll() {
@@ -247,10 +259,10 @@ fn handle_cancel(
     close: bool,
 ) -> io::Result<(&'static str, u16, bool)> {
     const ROUTE: &str = "cancel";
-    if authenticate(shared, req).is_none() {
+    let Some(entry) = authenticate(shared, req) else {
         return Ok((ROUTE, unauthorized(w, close)?, close));
-    }
-    let Some(ticket) = id.parse::<u64>().ok().and_then(|id| shared.registry.get(id)) else {
+    };
+    let Some(ticket) = id.parse::<u64>().ok().and_then(|id| shared.registry.get(id, entry.session_id)) else {
         return Ok((ROUTE, write_json(w, 404, &Json::obj(vec![("error", Json::str("unknown ticket"))]), close)?, close));
     };
     ticket.cancel();
@@ -269,10 +281,10 @@ fn handle_stream(
     close: bool,
 ) -> io::Result<(&'static str, u16, bool)> {
     const ROUTE: &str = "stream";
-    if authenticate(shared, req).is_none() {
+    let Some(entry) = authenticate(shared, req) else {
         return Ok((ROUTE, unauthorized(w, close)?, close));
-    }
-    let Some(ticket) = id.parse::<u64>().ok().and_then(|id| shared.registry.get(id)) else {
+    };
+    let Some(ticket) = id.parse::<u64>().ok().and_then(|id| shared.registry.get(id, entry.session_id)) else {
         return Ok((ROUTE, write_json(w, 404, &Json::obj(vec![("error", Json::str("unknown ticket"))]), close)?, close));
     };
     conn::write_stream_head(w)?;

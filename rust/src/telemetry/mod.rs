@@ -130,6 +130,14 @@ impl Gauge {
         self.cell.store(v);
     }
 
+    /// Adjust the gauge by `delta` (atomic read-modify-write). For up/down
+    /// counts maintained from multiple threads — where interleaved
+    /// absolute `set`s could publish a stale value — deltas always
+    /// converge to the true count.
+    pub fn add(&self, delta: f64) {
+        self.cell.fetch_add(delta);
+    }
+
     pub fn value(&self) -> f64 {
         self.cell.load()
     }

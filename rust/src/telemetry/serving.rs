@@ -408,6 +408,9 @@ mod tests {
         assert_eq!(hists.len(), 2);
         h.active_connections.set(3.0);
         assert_eq!(m.gauge_value("http_active_connections"), Some(3.0));
+        h.active_connections.add(2.0);
+        h.active_connections.add(-1.0);
+        assert_eq!(m.gauge_value("http_active_connections"), Some(4.0), "gauge deltas accumulate");
         h.tickets_reaped.inc();
         assert_eq!(m.counter_value("tickets_reaped"), 1);
     }

@@ -11,6 +11,10 @@
 //!   the `rejected_rate_limited` counter bumped, 400 + exactly one audit
 //!   entry for malformed/invalid JSON,
 //! - unknown and TTL-reaped tickets answer 404 (`tickets_reaped` counts),
+//! - ticket ids are scoped to the submitting key: another tenant's poll,
+//!   stream, or cancel answers 404 exactly like an unknown id,
+//! - framing ambiguities (Transfer-Encoding, duplicate Content-Length)
+//!   are rejected fail-closed; oversized bodies answer 413,
 //! - a mid-stream client disconnect cancels the request cooperatively and
 //!   still leaves exactly one audit entry,
 //! - graceful drain loses no admitted ticket and refuses new connections,
@@ -205,6 +209,79 @@ fn unknown_and_reaped_tickets_answer_404() {
     assert_eq!(resp.status, 404, "resolved ticket past its TTL is reaped");
     assert!(orch.metrics.counter_value("tickets_reaped") >= 1);
     assert_eq!(server.tickets_registered(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn tickets_are_scoped_to_the_submitting_key() {
+    let orch = orchestrator();
+    let grants = vec![
+        ("key-a".to_string(), "tenant-a".to_string()),
+        ("key-b".to_string(), "tenant-b".to_string()),
+    ];
+    let server = HttpServer::start(Arc::clone(&orch), "127.0.0.1:0", &grants, wide_open()).expect("bind loopback");
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    // a decode long enough that the ticket is still live while B probes it
+    let body = submit_body("tenant A's private request", 5_000_000.0);
+    let resp = client.request("POST", "/v1/submit", Some("key-a"), Some(&body)).unwrap();
+    assert_eq!(resp.status, 200);
+    let id = resp.json().unwrap().get("ticket").as_i64().unwrap() as u64;
+    // ids are sequential: B presenting a valid key must still miss, and
+    // miss exactly like an unknown id (404, no existence oracle)
+    let poll = format!("/v1/tickets/{id}");
+    assert_eq!(client.request("GET", &poll, Some("key-b"), None).unwrap().status, 404);
+    assert_eq!(client.request("GET", &format!("/v1/stream/{id}"), Some("key-b"), None).unwrap().status, 404);
+    assert_eq!(client.request("POST", &format!("/v1/tickets/{id}/cancel"), Some("key-b"), None).unwrap().status, 404);
+    // B's probes had no side effect: A still owns a live, pollable ticket
+    let resp = client.request("GET", &poll, Some("key-a"), None).unwrap();
+    assert_eq!(resp.status, 200, "the owner still reaches the ticket");
+    assert_eq!(resp.json().unwrap().get("done").as_bool(), Some(false), "B's cancel must not have landed");
+    // A cancels its own ticket and reads the terminal resolution
+    assert_eq!(client.request("POST", &format!("/v1/tickets/{id}/cancel"), Some("key-a"), None).unwrap().status, 200);
+    let give_up = Instant::now() + POLL_DEADLINE;
+    loop {
+        let json = client.request("GET", &poll, Some("key-a"), None).unwrap().json().unwrap();
+        if json.get("done").as_bool() == Some(true) {
+            assert_eq!(json.get("outcome").get("outcome").as_str(), Some("cancelled"));
+            break;
+        }
+        assert!(Instant::now() < give_up, "owner's cancel never resolved");
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    server.shutdown();
+}
+
+/// Write raw bytes at the server and return the status line's code — for
+/// framing-level requests the well-behaved client cannot emit.
+fn raw_status(addr: std::net::SocketAddr, request: &str) -> u16 {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8_lossy(&buf);
+    let status = text.split_whitespace().nth(1).expect("status line");
+    status.parse().expect("numeric status")
+}
+
+#[test]
+fn framing_ambiguities_are_rejected_fail_closed() {
+    let (orch, server) = start(wide_open());
+    // chunked upload: accepting it as zero-length would smuggle the body
+    // bytes as the next pipelined request
+    assert_eq!(
+        raw_status(server.addr(), "POST /v1/submit HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+        400
+    );
+    // duplicate Content-Length: RFC 9112 §6.3 framing ambiguity
+    assert_eq!(
+        raw_status(server.addr(), "POST /v1/submit HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\n"),
+        400
+    );
+    // over the body cap: the dedicated status, distinguishable from 400
+    let oversized = format!("POST /v1/submit HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 2 * 1024 * 1024);
+    assert_eq!(raw_status(server.addr(), &oversized), 413);
+    assert!(orch.audit.is_empty(), "framing rejections happen before any request id is consumed");
     server.shutdown();
 }
 
