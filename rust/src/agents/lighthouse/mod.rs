@@ -33,6 +33,8 @@ use crate::types::{Island, IslandId};
 use heartbeat::{HeartbeatTracker, Liveness};
 use registry::{RegisterResult, Registry, Token};
 
+use crate::util::sync::{LockExt, RwLockExt};
+
 /// Lock-free health flags for one island (hot-path view).
 #[derive(Debug, Default)]
 struct IslandHealth {
@@ -70,15 +72,15 @@ impl Lighthouse {
     }
 
     fn health_cell(&self, id: IslandId) -> Arc<IslandHealth> {
-        if let Some(h) = self.health.read().unwrap().get(&id) {
+        if let Some(h) = self.health.read_clean().get(&id) {
             return Arc::clone(h);
         }
-        let mut w = self.health.write().unwrap();
+        let mut w = self.health.write_clean();
         Arc::clone(w.entry(id).or_default())
     }
 
     fn announce_online(&self, id: IslandId, now_ms: f64) {
-        self.heartbeats.lock().unwrap().announce(id, now_ms);
+        self.heartbeats.lock_clean().announce(id, now_ms);
         let cell = self.health_cell(id);
         cell.online.store(true, Ordering::SeqCst);
         cell.degraded.store(false, Ordering::SeqCst);
@@ -87,7 +89,7 @@ impl Lighthouse {
     /// Register an island with an attestation token; announces it online.
     pub fn register(&self, island: Island, token: Token, now_ms: f64) -> RegisterResult {
         let id = island.id;
-        let result = self.registry.write().unwrap().register(island, token);
+        let result = self.registry.write_clean().register(island, token);
         if matches!(result, RegisterResult::Accepted(_)) {
             self.announce_online(id, now_ms);
         }
@@ -97,7 +99,7 @@ impl Lighthouse {
     /// Owner-side registration (token minted with the mesh secret).
     pub fn register_owned(&self, island: Island, now_ms: f64) -> RegisterResult {
         let id = island.id;
-        let result = self.registry.write().unwrap().register_owned(island);
+        let result = self.registry.write_clean().register_owned(island);
         if matches!(result, RegisterResult::Accepted(_)) {
             self.announce_online(id, now_ms);
         }
@@ -107,10 +109,10 @@ impl Lighthouse {
     /// Remove an island from the mesh (clean leave). Its liveness record and
     /// health flags are dropped with it.
     pub fn deregister(&self, id: IslandId) -> Option<Island> {
-        let island = self.registry.write().unwrap().deregister(id);
+        let island = self.registry.write_clean().deregister(id);
         if island.is_some() {
-            self.heartbeats.lock().unwrap().forget(id);
-            self.health.write().unwrap().remove(&id);
+            self.heartbeats.lock_clean().forget(id);
+            self.health.write_clean().remove(&id);
         }
         island
     }
@@ -119,7 +121,7 @@ impl Lighthouse {
         if !self.is_alive() {
             return;
         }
-        let mut hb = self.heartbeats.lock().unwrap();
+        let mut hb = self.heartbeats.lock_clean();
         hb.beat(id, now_ms);
         let online = hb.is_online(id);
         drop(hb);
@@ -132,7 +134,7 @@ impl Lighthouse {
         if !self.is_alive() {
             return;
         }
-        let mut hb = self.heartbeats.lock().unwrap();
+        let mut hb = self.heartbeats.lock_clean();
         for id in ids {
             hb.beat(id, now_ms);
         }
@@ -145,14 +147,14 @@ impl Lighthouse {
         if !self.is_alive() {
             return;
         }
-        self.heartbeats.lock().unwrap().tick(now_ms);
+        self.heartbeats.lock_clean().tick(now_ms);
         self.sync_flags();
     }
 
     /// Mirror the tracker's online bits into the atomic hot-path flags.
     fn sync_flags(&self) {
-        let hb = self.heartbeats.lock().unwrap();
-        let health = self.health.read().unwrap();
+        let hb = self.heartbeats.lock_clean();
+        let health = self.health.read_clean();
         for (id, cell) in health.iter() {
             cell.online.store(hb.is_online(*id), Ordering::SeqCst);
         }
@@ -162,7 +164,7 @@ impl Lighthouse {
     /// failed execution (island died between routing and execute). The
     /// island returns only through a fresh beat / announce / revive.
     pub fn mark_offline(&self, id: IslandId) {
-        self.heartbeats.lock().unwrap().force_offline(id);
+        self.heartbeats.lock_clean().force_offline(id);
         self.health_cell(id).online.store(false, Ordering::SeqCst);
     }
 
@@ -172,7 +174,7 @@ impl Lighthouse {
     }
 
     pub fn is_degraded(&self, id: IslandId) -> bool {
-        self.health.read().unwrap().get(&id).map(|h| h.degraded.load(Ordering::SeqCst)).unwrap_or(false)
+        self.health.read_clean().get(&id).map(|h| h.degraded.load(Ordering::SeqCst)).unwrap_or(false)
     }
 
     /// Algorithm 1 line 4: the island list WAVES iterates. Only
@@ -181,27 +183,27 @@ impl Lighthouse {
     pub fn islands(&self) -> Vec<Island> {
         if !self.is_alive() {
             self.cache_serves.fetch_add(1, Ordering::SeqCst);
-            return self.cache.lock().unwrap().clone();
+            return self.cache.lock_clean().clone();
         }
         let list: Vec<Island> =
-            self.registry.read().unwrap().islands().filter(|i| self.is_online(i.id)).cloned().collect();
-        *self.cache.lock().unwrap() = list.clone();
+            self.registry.read_clean().islands().filter(|i| self.is_online(i.id)).cloned().collect();
+        *self.cache.lock_clean() = list.clone();
         list
     }
 
     pub fn get(&self, id: IslandId) -> Option<Island> {
-        self.registry.read().unwrap().get(id).cloned()
+        self.registry.read_clean().get(id).cloned()
     }
 
     /// Hot-path heartbeat-liveness check. Capacity degradation is a
     /// separate signal ([`Lighthouse::is_degraded`]): degraded islands are
     /// deprioritized by WAVES, offline ones are excluded outright.
     pub fn is_online(&self, id: IslandId) -> bool {
-        self.health.read().unwrap().get(&id).map(|h| h.online.load(Ordering::SeqCst)).unwrap_or(false)
+        self.health.read_clean().get(&id).map(|h| h.online.load(Ordering::SeqCst)).unwrap_or(false)
     }
 
     pub fn liveness(&self, id: IslandId) -> Option<Liveness> {
-        self.heartbeats.lock().unwrap().liveness(id)
+        self.heartbeats.lock_clean().liveness(id)
     }
 
     /// Simulate a LIGHTHOUSE crash / recovery (E6 ablation).

@@ -99,18 +99,23 @@ const CONDITIONS: &[&str] = &[
 const MEDICATIONS: &[&str] = &["metformin", "lisinopril", "insulin", "atorvastatin", "ibuprofen", "amoxicillin"];
 const ORGS: &[&str] = &["acme corp", "general hospital", "city clinic", "the firm"];
 
-static RE_ID: Lazy<Regex> =
-    Lazy::new(|| Regex::new(r"\b\d{3}-\d{2}-\d{4}\b|\b(?i:mrn)\s*[:#]?\s*\d{4,10}\b").unwrap());
-static RE_CONTACT: Lazy<Regex> = Lazy::new(|| {
-    Regex::new(r"(?i)\b[a-z0-9._%+-]+@[a-z0-9.-]+\.[a-z]{2,}\b|\b\d{3}[-. ]\d{3}[-. ]\d{4}\b").unwrap()
-});
-static RE_FINANCIAL: Lazy<Regex> = Lazy::new(|| {
-    Regex::new(r"\b\d{4}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b|(?i)\baccount\s*[:#]?\s*\d{8,12}\b").unwrap()
-});
+/// Compile one of this module's constant patterns. A malformed constant is
+/// a programming error this module's unit tests catch in CI, never a
+/// function of user input, so the first-use compile may panic at boot.
+fn compiled(re: &str) -> Regex {
+    // islandlint: allow(serving-path-panic) -- const pattern table, exercised by unit tests; compile happens once at first use, not per request
+    Regex::new(re).unwrap()
+}
+
+static RE_ID: Lazy<Regex> = Lazy::new(|| compiled(r"\b\d{3}-\d{2}-\d{4}\b|\b(?i:mrn)\s*[:#]?\s*\d{4,10}\b"));
+static RE_CONTACT: Lazy<Regex> =
+    Lazy::new(|| compiled(r"(?i)\b[a-z0-9._%+-]+@[a-z0-9.-]+\.[a-z]{2,}\b|\b\d{3}[-. ]\d{3}[-. ]\d{4}\b"));
+static RE_FINANCIAL: Lazy<Regex> =
+    Lazy::new(|| compiled(r"\b\d{4}[- ]?\d{4}[- ]?\d{4}[- ]?\d{4}\b|(?i)\baccount\s*[:#]?\s*\d{8,12}\b"));
 static RE_TEMPORAL: Lazy<Regex> = Lazy::new(|| {
-    Regex::new(r"(?i)\b\d{1,4}[-/]\d{1,2}[-/]\d{1,4}\b|\b(?:yesterday|tomorrow|last\s+\w+day|next\s+\w+day|on\s+(?:mon|tues|wednes|thurs|fri|satur|sun)day)\b").unwrap()
+    compiled(r"(?i)\b\d{1,4}[-/]\d{1,2}[-/]\d{1,4}\b|\b(?:yesterday|tomorrow|last\s+\w+day|next\s+\w+day|on\s+(?:mon|tues|wednes|thurs|fri|satur|sun)day)\b")
 });
-static RE_AGE: Lazy<Regex> = Lazy::new(|| Regex::new(r"(?i)\b\d{1,3}[- ]?year[- ]?old\b").unwrap());
+static RE_AGE: Lazy<Regex> = Lazy::new(|| compiled(r"(?i)\b\d{1,3}[- ]?year[- ]?old\b"));
 
 /// What a trie term means when it matches. Last names are not entities on
 /// their own — they only extend a preceding first name into a full PERSON.
@@ -376,7 +381,7 @@ pub fn detect(text: &str) -> Vec<Entity> {
             a.start
                 .cmp(&b.start)
                 .then((b.end - b.start).cmp(&(a.end - a.start)))
-                .then(b.kind.sensitivity().partial_cmp(&a.kind.sensitivity()).unwrap())
+                .then(b.kind.sensitivity().total_cmp(&a.kind.sensitivity()))
         });
         let mut fresh: Vec<Entity> = Vec::new();
         let mut uncovered_drop = false;

@@ -118,7 +118,7 @@ impl Mist {
                 let class = row
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
                     .unwrap_or(3);
                 Ok((class, CLASS_SENSITIVITY[class.min(3)]))

@@ -56,6 +56,7 @@ pub struct Match {
 
 macro_rules! patterns {
     ($(($name:literal, $cat:expr, $re:literal, $gate:expr)),+ $(,)?) => {
+        // islandlint: allow(serving-path-panic) -- the Stage-1 pattern table is a compile-time constant exercised by unit tests; first-use compile is boot-time, not per request
         vec![$(Pattern { name: $name, category: $cat, regex: Regex::new($re).expect($name), gate: $gate }),+]
     };
 }

@@ -39,7 +39,10 @@ pub struct PlaceholderMap {
     next_seq: u64,
 }
 
-static RE_PLACEHOLDER: Lazy<Regex> = Lazy::new(|| Regex::new(r"\[[A-Z][A-Z_]*_\d+\]").unwrap());
+static RE_PLACEHOLDER: Lazy<Regex> = Lazy::new(|| {
+    // islandlint: allow(serving-path-panic) -- constant pattern, exercised by every sanitize unit test; compiles once at first use
+    Regex::new(r"\[[A-Z][A-Z_]*_\d+\]").unwrap()
+});
 
 impl PlaceholderMap {
     /// Create a map for one session. Different sessions must use different
@@ -136,7 +139,8 @@ impl PlaceholderMap {
     pub fn desanitize(&self, text: &str) -> String {
         RE_PLACEHOLDER
             .replace_all(text, |caps: &regex::Captures<'_>| {
-                let p = caps.get(0).unwrap().as_str();
+                // capture 0 (the whole match) always exists
+                let p = caps.get(0).map(|m| m.as_str()).unwrap_or_default();
                 self.reverse.get(p).cloned().unwrap_or_else(|| p.to_string())
             })
             .into_owned()

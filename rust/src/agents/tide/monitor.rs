@@ -74,7 +74,7 @@ impl LoadProgram {
                         return (u0 + f * (u1 - u0)).clamp(0.0, 1.0);
                     }
                 }
-                self.knots.last().unwrap().1.clamp(0.0, 1.0)
+                self.knots.last().map(|&(_, u)| u).unwrap_or(0.0).clamp(0.0, 1.0)
             }
         }
     }

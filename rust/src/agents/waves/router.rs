@@ -243,32 +243,30 @@ impl Waves {
                     feasible = non_loopback;
                 }
             }
-            if feasible.is_empty() {
-                continue;
+            let best = feasible.iter().min_by(|a, b| {
+                self.total_score(request, &a.island).total_cmp(&self.total_score(request, &b.island))
+            });
+            if let Some(best) = best {
+                return Decision::Route(self.routed(request, &best.island, adm));
             }
-            let best = feasible
-                .iter()
-                .min_by(|a, b| {
-                    self.total_score(request, &a.island)
-                        .partial_cmp(&self.total_score(request, &b.island))
-                        .unwrap()
-                })
-                .unwrap();
-            return Decision::Route(self.routed(request, &best.island, adm));
         }
 
         // -- 6. failsafe (Alg. 1 line 11): privacy-eligible islands exist
         // but none has capacity — queue on the highest-privacy one,
         // preferring islands TIDE has not flagged as degraded.
-        let failsafe = eligible
-            .iter()
-            .max_by(|a, b| {
-                (!a.degraded, a.island.privacy, a.capacity)
-                    .partial_cmp(&(!b.degraded, b.island.privacy, b.capacity))
-                    .unwrap()
-            })
-            .unwrap();
-        Decision::FailsafeLocal(self.routed(request, &failsafe.island, adm))
+        let failsafe = eligible.iter().max_by(|a, b| {
+            (!a.degraded)
+                .cmp(&!b.degraded)
+                .then(a.island.privacy.total_cmp(&b.island.privacy))
+                .then(a.capacity.total_cmp(&b.capacity))
+        });
+        match failsafe {
+            Some(failsafe) => Decision::FailsafeLocal(self.routed(request, &failsafe.island, adm)),
+            // unreachable in practice: step 1 rejects when no island is
+            // privacy-eligible, so `eligible` is non-empty here. Shed
+            // fail-closed rather than panic if that invariant ever breaks.
+            None => Decision::Reject { reason: "no privacy-eligible island for failsafe queueing".to_string() },
+        }
     }
 
     fn routed(&self, request: &Request, island: &Island, adm: Admission) -> Routed {

@@ -41,6 +41,8 @@ use crate::substrate::trace::{priority_for, prompt_for, SensClass};
 use crate::types::Island;
 use crate::util::Rng;
 
+use crate::util::sync::LockExt;
+
 /// Aggregate result of one closed-loop run.
 #[derive(Debug)]
 pub struct LoadReport {
@@ -172,8 +174,8 @@ pub fn run_closed_loop_churn(
                     // buckets refill; atomic, so safe from every worker
                     orch.advance(5.0);
                 }
-                outcomes.lock().unwrap().extend(local);
-                *errors.lock().unwrap() += local_errors;
+                outcomes.lock_clean().extend(local);
+                *errors.lock_clean() += local_errors;
             })
         })
         .collect();
@@ -184,7 +186,7 @@ pub fn run_closed_loop_churn(
     let churn_stats = churn_handle.map(|h| h.join().unwrap()).unwrap_or_default();
     let wall_s = t0.elapsed().as_secs_f64();
     let outcomes = Arc::try_unwrap(outcomes).expect("workers joined").into_inner().unwrap();
-    let errors = *errors.lock().unwrap();
+    let errors = *errors.lock_clean();
     (LoadReport { threads, attempted: threads * per_thread, outcomes, errors, wall_s }, churn_stats)
 }
 

@@ -11,6 +11,8 @@ use std::sync::RwLock;
 use crate::runtime::features::fnv1a;
 use crate::util::AtomicF64;
 
+use crate::util::sync::RwLockExt;
+
 const SHARDS: usize = 8;
 
 fn shard_of(user: &str) -> usize {
@@ -31,13 +33,13 @@ impl CostLedger {
 
     /// Record a charge.
     pub fn charge(&self, user: &str, amount: f64) {
-        let mut shard = self.shards[shard_of(user)].write().unwrap();
+        let mut shard = self.shards[shard_of(user)].write_clean();
         *shard.entry(user.to_string()).or_insert(0.0) += amount;
         self.total.fetch_add(amount);
     }
 
     pub fn spent(&self, user: &str) -> f64 {
-        self.shards[shard_of(user)].read().unwrap().get(user).copied().unwrap_or(0.0)
+        self.shards[shard_of(user)].read_clean().get(user).copied().unwrap_or(0.0)
     }
 
     pub fn total(&self) -> f64 {
@@ -53,9 +55,9 @@ impl CostLedger {
     pub fn by_user(&self) -> Vec<(String, f64)> {
         let mut v: Vec<(String, f64)> = Vec::new();
         for shard in &self.shards {
-            v.extend(shard.read().unwrap().iter().map(|(k, &x)| (k.clone(), x)));
+            v.extend(shard.read_clean().iter().map(|(k, &x)| (k.clone(), x)));
         }
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
         v
     }
 }

@@ -13,6 +13,8 @@ use crate::runtime::EngineHandle;
 use crate::substrate::netsim::NetSim;
 use crate::types::{Island, IslandId, Request};
 
+use crate::util::sync::LockExt;
+
 /// A completed inference with full accounting.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -56,7 +58,7 @@ impl IslandExecutor {
     /// Run one request on `island` (single-prompt path).
     pub fn execute(&self, island: &Island, request: &Request) -> anyhow::Result<Response> {
         let mut results = self.execute_batch(island, std::slice::from_ref(request))?;
-        Ok(results.pop().expect("one response per request"))
+        results.pop().ok_or_else(|| anyhow::anyhow!("island {} returned no response for the request", island.id))
     }
 
     /// Run a batch of requests on the same island (dynamic batcher output).
@@ -86,7 +88,7 @@ impl IslandExecutor {
             // surface it as an island-down error so the orchestrator fails
             // over instead of charging the user for a request that never ran
             let network_ms = {
-                let mut net = self.net.lock().unwrap();
+                let mut net = self.net.lock_clean();
                 net.round_trip_retry(island.link, payload_kb.max(0.5), 3).ok_or_else(|| island_down_error(island.id))?
             };
             out.push(Response {

@@ -24,6 +24,8 @@ use crate::substrate::netsim::NetSim;
 use crate::types::{Island, IslandId, Request, TrustTier};
 use crate::util::AtomicF64;
 
+use crate::util::sync::{LockExt, RwLockExt};
+
 /// Per-tier compute model: fixed startup + per-token milliseconds.
 fn compute_model(tier: TrustTier) -> (f64, f64) {
     match tier {
@@ -214,7 +216,7 @@ impl SimIsland {
         if self.spec.unbounded() {
             return 1.0;
         }
-        let rt = self.rt.lock().unwrap();
+        let rt = self.rt.lock_clean();
         if rt.busy_until.is_empty() {
             return 0.0;
         }
@@ -225,21 +227,21 @@ impl SimIsland {
 
     /// Set the external utilization knob (load programs / test scaffolding).
     pub fn set_external_load(&self, load: f64) {
-        self.rt.lock().unwrap().external_load = load;
+        self.rt.lock_clean().external_load = load;
     }
 
     pub fn external_load(&self) -> f64 {
-        self.rt.lock().unwrap().external_load
+        self.rt.lock_clean().external_load
     }
 
     /// Current battery fraction, if battery-powered.
     pub fn battery(&self) -> Option<f64> {
-        self.rt.lock().unwrap().battery
+        self.rt.lock_clean().battery
     }
 
     /// Total requests this island has executed.
     pub fn executed(&self) -> u64 {
-        self.rt.lock().unwrap().executed
+        self.rt.lock_clean().executed
     }
 
     /// Run the prefill phase: book the earliest free slot, charge compute
@@ -248,7 +250,7 @@ impl SimIsland {
     /// island is the target (router) and sampled the link
     /// ([`Fleet::prefill`] does both).
     pub fn prefill(&self, request: &Request, ctx: ExecContext) -> Result<DecodeHandle, ExecError> {
-        let mut rt = self.rt.lock().unwrap();
+        let mut rt = self.rt.lock_clean();
         // checked under the rt lock so a crash() racing this call is seen
         // before any slot is booked
         if !self.is_online() {
@@ -264,16 +266,21 @@ impl SimIsland {
         let (slot, queued, start) = if self.spec.unbounded() {
             (None, 0.0, ctx.now_ms + ctx.rtt_ms / 2.0)
         } else {
-            // earliest-free-slot queueing
-            let (slot_idx, &free_at) = rt
+            // earliest-free-slot queueing. A bounded island always has at
+            // least one slot; treat a zero-slot spec as permanently busy
+            // from `now` rather than panicking mid-request.
+            let (slot_idx, free_at) = rt
                 .busy_until
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .expect("bounded island has slots");
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, &t)| (i, t))
+                .unwrap_or((0, ctx.now_ms));
             let start = (ctx.now_ms + ctx.rtt_ms / 2.0).max(free_at);
             let queued = (free_at - (ctx.now_ms + ctx.rtt_ms / 2.0)).max(0.0);
-            rt.busy_until[slot_idx] = start + prefill_ms;
+            if let Some(slot) = rt.busy_until.get_mut(slot_idx) {
+                *slot = start + prefill_ms;
+            }
             (Some(slot_idx), queued, start)
         };
 
@@ -310,7 +317,7 @@ impl SimIsland {
         if n == 0 {
             return Ok(0);
         }
-        let mut rt = self.rt.lock().unwrap();
+        let mut rt = self.rt.lock_clean();
         if !self.is_online() {
             return Err(ExecError::IslandDown(self.spec.id));
         }
@@ -384,24 +391,24 @@ impl Fleet {
     /// Snapshot of the current island list (membership may change the
     /// moment the read lock drops; the `Arc`s stay valid regardless).
     pub fn islands(&self) -> Vec<Arc<SimIsland>> {
-        self.islands.read().unwrap().clone()
+        self.islands.read_clean().clone()
     }
 
     /// Current island specs (registration / discovery view).
     pub fn specs(&self) -> Vec<Island> {
-        self.islands.read().unwrap().iter().map(|i| i.spec.clone()).collect()
+        self.islands.read_clean().iter().map(|i| i.spec.clone()).collect()
     }
 
     pub fn len(&self) -> usize {
-        self.islands.read().unwrap().len()
+        self.islands.read_clean().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.islands.read().unwrap().is_empty()
+        self.islands.read_clean().is_empty()
     }
 
     pub fn get(&self, id: IslandId) -> Option<Arc<SimIsland>> {
-        self.islands.read().unwrap().iter().find(|i| i.spec.id == id).cloned()
+        self.islands.read_clean().iter().find(|i| i.spec.id == id).cloned()
     }
 
     /// Power an island off in place (it stays a fleet member: heartbeats
@@ -431,7 +438,7 @@ impl Fleet {
     /// Add a new island to the mesh (dynamic discovery). Rejects duplicate
     /// ids; the new island starts online with fresh runtime state.
     pub fn join(&self, spec: Island) -> bool {
-        let mut islands = self.islands.write().unwrap();
+        let mut islands = self.islands.write_clean();
         if islands.iter().any(|i| i.spec.id == spec.id) {
             return false;
         }
@@ -443,22 +450,21 @@ impl Fleet {
     /// executions holding the island's `Arc` complete; new requests see
     /// `UnknownIsland`.
     pub fn leave(&self, id: IslandId) -> Option<Island> {
-        let mut islands = self.islands.write().unwrap();
+        let mut islands = self.islands.write_clean();
         let pos = islands.iter().position(|i| i.spec.id == id)?;
         Some(islands.remove(pos).spec.clone())
     }
 
     /// Drop every island whose spec fails the predicate (test scaffolding).
     pub fn retain(&self, pred: impl Fn(&Island) -> bool) {
-        self.islands.write().unwrap().retain(|i| pred(&i.spec));
+        self.islands.write_clean().retain(|i| pred(&i.spec));
     }
 
     /// Router-facing dynamic state snapshot.
     pub fn states(&self) -> Vec<crate::agents::waves::IslandState> {
         let now = self.now();
         self.islands
-            .read()
-            .unwrap()
+            .read_clean()
             .iter()
             .map(|i| crate::agents::waves::IslandState {
                 island: i.spec.clone(),
@@ -477,8 +483,7 @@ impl Fleet {
         let now = self.now();
         let personal: Vec<f64> = self
             .islands
-            .read()
-            .unwrap()
+            .read_clean()
             .iter()
             .filter(|i| i.spec.tier == TrustTier::Personal)
             .map(|i| i.capacity(now))
@@ -497,7 +502,7 @@ impl Fleet {
         let now_ms = self.now();
         let payload_kb = payload_kb(request);
         let rtt_ms = {
-            let mut net = self.net.lock().unwrap();
+            let mut net = self.net.lock_clean();
             net.round_trip_retry(island.spec.link, payload_kb.max(0.5), 3).unwrap_or(5_000.0)
         };
         ExecContext { now_ms, rtt_ms, payload_kb }

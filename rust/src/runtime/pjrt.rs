@@ -136,7 +136,7 @@ impl EngineHandle {
 /// when no calibration data exists.)
 #[cfg_attr(not(islandrun_pjrt), allow(dead_code))]
 fn pick_variant(variants: &[usize], n: usize) -> usize {
-    let max = *variants.iter().max().expect("variants nonempty");
+    let max = variants.iter().max().copied().unwrap_or(1);
     for &v in variants {
         if v >= n {
             return v;
@@ -169,8 +169,8 @@ mod real {
         let join = std::thread::Builder::new()
             .name("islandrun-pjrt".to_string())
             .spawn(move || engine_main(dir, meta2, rx, ready_tx))
-            .expect("spawn engine thread");
-        ready_rx.recv().expect("engine init reply")?;
+            .map_err(|e| anyhow::anyhow!("spawn pjrt engine thread: {e}"))?;
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("pjrt engine thread died during init"))??;
         Ok(Engine { handle: EngineHandle { tx, meta }, join: Some(join) })
     }
 
@@ -268,10 +268,10 @@ mod real {
             .min_by(|(va, ca), (vb, cb)| {
                 let ea = *ca / (n_remaining.min(**va) as f64);
                 let eb = *cb / (n_remaining.min(**vb) as f64);
-                ea.partial_cmp(&eb).unwrap()
+                ea.total_cmp(&eb)
             })
             .map(|(&v, _)| v)
-            .expect("variants nonempty")
+            .unwrap_or_else(|| pick_variant(&loaded.meta.lm_batch_variants, n_remaining))
     }
 
     fn run_lm(loaded: &Loaded, tokens: &[i32], batch: usize) -> anyhow::Result<Vec<f32>> {

@@ -18,6 +18,8 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
+use crate::util::sync::LockExt;
+
 #[derive(Debug)]
 struct LaneInner<J> {
     inbox: Vec<J>,
@@ -53,7 +55,7 @@ impl<K: Ord + Copy, J> StepLanes<K, J> {
     }
 
     fn lane(&self, key: K) -> Arc<Lane<J>> {
-        let mut lanes = self.lanes.lock().unwrap();
+        let mut lanes = self.lanes.lock_clean();
         Arc::clone(lanes.entry(key).or_default())
     }
 
@@ -65,7 +67,7 @@ impl<K: Ord + Copy, J> StepLanes<K, J> {
             return;
         }
         let lane = self.lane(key);
-        lane.inner.lock().unwrap().inbox.extend(jobs);
+        lane.inner.lock_clean().inbox.extend(jobs);
     }
 
     /// Claim the driver role for the lane. Returns `true` when this caller
@@ -74,7 +76,7 @@ impl<K: Ord + Copy, J> StepLanes<K, J> {
     /// already active.
     pub fn try_drive(&self, key: K) -> bool {
         let lane = self.lane(key);
-        let mut inner = lane.inner.lock().unwrap();
+        let mut inner = lane.inner.lock_clean();
         if inner.driver_active {
             return false;
         }
@@ -89,7 +91,7 @@ impl<K: Ord + Copy, J> StepLanes<K, J> {
             return Vec::new();
         }
         let lane = self.lane(key);
-        let mut inner = lane.inner.lock().unwrap();
+        let mut inner = lane.inner.lock_clean();
         let n = inner.inbox.len().min(max);
         inner.inbox.drain(..n).collect()
     }
@@ -100,7 +102,7 @@ impl<K: Ord + Copy, J> StepLanes<K, J> {
     /// the caller must keep driving.
     pub fn try_exit(&self, key: K) -> bool {
         let lane = self.lane(key);
-        let mut inner = lane.inner.lock().unwrap();
+        let mut inner = lane.inner.lock_clean();
         if !inner.inbox.is_empty() {
             return false;
         }
@@ -112,7 +114,7 @@ impl<K: Ord + Copy, J> StepLanes<K, J> {
     /// the lane is usable again. The caller fails the returned jobs' tickets.
     pub fn fail_pending(&self, key: K) -> Vec<J> {
         let lane = self.lane(key);
-        let mut inner = lane.inner.lock().unwrap();
+        let mut inner = lane.inner.lock_clean();
         inner.driver_active = false;
         std::mem::take(&mut inner.inbox)
     }

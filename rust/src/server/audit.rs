@@ -24,6 +24,8 @@ use crate::config::json::Json;
 use crate::server::resolution::AuditReason;
 use crate::types::IslandId;
 
+use crate::util::sync::LockExt;
+
 /// One audited decision.
 #[derive(Clone, Debug)]
 pub struct AuditEntry {
@@ -82,11 +84,11 @@ impl AuditLog {
     }
 
     pub fn record(&self, entry: AuditEntry) {
-        self.entries.lock().unwrap().push(entry);
+        self.entries.lock_clean().push(entry);
     }
 
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        self.entries.lock_clean().len()
     }
 
     /// Is there already an entry for this request id? Used by the queue
@@ -94,29 +96,28 @@ impl AuditLog {
     /// a straggler whose execution already landed on the trail must not get
     /// a second (shed) entry. Linear scan — recovery paths only.
     pub fn contains(&self, request_id: u64) -> bool {
-        self.entries.lock().unwrap().iter().any(|e| e.request_id == request_id)
+        self.entries.lock_clean().iter().any(|e| e.request_id == request_id)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.lock().unwrap().is_empty()
+        self.entries.lock_clean().is_empty()
     }
 
     /// Snapshot of the whole trail (clone; the log itself stays append-only).
     pub fn entries(&self) -> Vec<AuditEntry> {
-        self.entries.lock().unwrap().clone()
+        self.entries.lock_clean().clone()
     }
 
     /// All entries for one user (compliance review scope).
     pub fn for_user(&self, user: &str) -> Vec<AuditEntry> {
-        self.entries.lock().unwrap().iter().filter(|e| e.user == user).cloned().collect()
+        self.entries.lock_clean().iter().filter(|e| e.user == user).cloned().collect()
     }
 
     /// Compliance check: were any requests with sensitivity above `s` ever
     /// executed on an island with privacy below `p`? Returns offending ids.
     pub fn violations(&self, s: f64, p: f64) -> Vec<u64> {
         self.entries
-            .lock()
-            .unwrap()
+            .lock_clean()
             .iter()
             .filter(|e| e.s_r >= s && e.island_privacy.map(|ip| ip < p).unwrap_or(false))
             .map(|e| e.request_id)
@@ -126,7 +127,7 @@ impl AuditLog {
     /// Total failover re-routes recorded across the trail (cross-checked
     /// against the `failovers` metric by the churn stress test).
     pub fn total_failovers(&self) -> u64 {
-        self.entries.lock().unwrap().iter().map(|e| e.failovers as u64).sum()
+        self.entries.lock_clean().iter().map(|e| e.failovers as u64).sum()
     }
 
     /// Entries for requests shed before reaching an island (queue-full,
@@ -134,7 +135,7 @@ impl AuditLog {
     /// typed reason, not a string prefix. The queue stress test pins "every
     /// shed request leaves exactly one audit entry" on this view.
     pub fn sheds(&self) -> Vec<AuditEntry> {
-        self.entries.lock().unwrap().iter().filter(|e| e.reason.is_shed()).cloned().collect()
+        self.entries.lock_clean().iter().filter(|e| e.reason.is_shed()).cloned().collect()
     }
 
     /// Entries for cancelled requests (caller cancel or a deadline expiring
@@ -143,15 +144,14 @@ impl AuditLog {
     /// may have executed partially on an island and been charged for
     /// decoded tokens, while a shed never ran at all.
     pub fn cancellations(&self) -> Vec<AuditEntry> {
-        self.entries.lock().unwrap().iter().filter(|e| e.reason.is_cancelled()).cloned().collect()
+        self.entries.lock_clean().iter().filter(|e| e.reason.is_cancelled()).cloned().collect()
     }
 
     /// Export as a JSON array (regulator-facing artifact).
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.entries
-                .lock()
-                .unwrap()
+                .lock_clean()
                 .iter()
                 .map(|e| {
                     Json::obj(vec![

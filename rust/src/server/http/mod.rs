@@ -52,6 +52,8 @@ use std::time::{Duration, Instant};
 use crate::server::{Orchestrator, RateLimiter};
 use crate::telemetry::serving::HttpMetrics;
 
+use crate::util::sync::LockExt;
+
 /// Tunables for one [`HttpServer`]. Defaults suit an interactive `serve`;
 /// tests and benches shrink the TTL / raise the rate.
 pub struct HttpConfig {
@@ -167,8 +169,7 @@ impl HttpServer {
                         last = Instant::now();
                         shared.orch.advance(dt_ms);
                     }
-                })
-                .expect("spawn http clock pump");
+                })?;
             Some(handle)
         } else {
             None
@@ -179,8 +180,7 @@ impl HttpServer {
             let handlers = Arc::clone(&handlers);
             std::thread::Builder::new()
                 .name("islandrun-http-accept".into())
-                .spawn(move || accept_loop(listener, shared, handlers))
-                .expect("spawn http accept loop")
+                .spawn(move || accept_loop(listener, shared, handlers))?
         };
         Ok(HttpServer { addr, shared, accept: Some(accept), pump, handlers })
     }
@@ -215,7 +215,7 @@ impl HttpServer {
         if let Some(h) = self.pump.take() {
             let _ = h.join();
         }
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handlers.lock().unwrap());
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handlers.lock_clean());
         for h in handles {
             let _ = h.join();
         }
@@ -245,15 +245,23 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, handlers: Arc<Mutex<V
         shared.active.fetch_add(1, Ordering::SeqCst);
         shared.http.active_connections.add(1.0);
         let conn_shared = Arc::clone(&shared);
-        let handle = std::thread::Builder::new()
-            .name("islandrun-http-conn".into())
-            .spawn(move || {
-                router::serve_connection(&conn_shared, stream);
-                conn_shared.active.fetch_sub(1, Ordering::SeqCst);
-                conn_shared.http.active_connections.add(-1.0);
-            })
-            .expect("spawn http connection handler");
-        let mut hs = handlers.lock().unwrap();
+        let spawned = std::thread::Builder::new().name("islandrun-http-conn".into()).spawn(move || {
+            router::serve_connection(&conn_shared, stream);
+            conn_shared.active.fetch_sub(1, Ordering::SeqCst);
+            conn_shared.http.active_connections.add(-1.0);
+        });
+        let handle = match spawned {
+            Ok(handle) => handle,
+            Err(_) => {
+                // thread exhaustion: the closure (and the stream with it)
+                // is dropped, closing the connection; undo the counters the
+                // handler would have owned and keep accepting
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+                shared.http.active_connections.add(-1.0);
+                continue;
+            }
+        };
+        let mut hs = handlers.lock_clean();
         hs.retain(|h| !h.is_finished());
         hs.push(handle);
     }

@@ -27,6 +27,8 @@ use std::time::{Duration, Instant};
 use crate::server::Ticket;
 use crate::telemetry::Counter;
 
+use crate::util::sync::LockExt;
+
 struct Entry {
     ticket: Ticket,
     /// The session that submitted the ticket; lookups under any other
@@ -66,7 +68,7 @@ impl TicketRegistry {
     /// unresolved ticket (the caller sheds with 503 — refusing new work
     /// beats dropping handles to admitted work).
     pub fn insert(&self, ticket: Ticket, owner: u64) -> Option<u64> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_clean();
         self.reap_locked(&mut inner);
         if inner.entries.len() >= self.capacity {
             // at capacity before the TTL ran out: evict resolved entries
@@ -92,14 +94,14 @@ impl TicketRegistry {
     /// three miss identically, so the handler's 404 leaks nothing about
     /// other tenants' ids.
     pub fn get(&self, id: u64, owner: u64) -> Option<Ticket> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_clean();
         self.reap_locked(&mut inner);
         inner.entries.get(&id).filter(|e| e.owner == owner).map(|e| e.ticket.clone())
     }
 
     /// Entries currently registered (resolved-but-unreaped included).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
+        self.inner.lock_clean().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {

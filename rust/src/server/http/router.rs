@@ -25,6 +25,8 @@ use super::wire;
 use super::{KeyEntry, Shared};
 use crate::config::json::Json;
 
+use crate::util::sync::LockExt;
+
 /// Read timeout used to poll the drain flag on idle keep-alive connections.
 const READ_POLL: Duration = Duration::from_millis(100);
 /// Safety cap on a single blocked write (a stuck client must not pin a
@@ -195,7 +197,7 @@ fn handle_submit(
     };
     // per-key token bucket at the front door (wall-clock ms); the
     // orchestrator's own limiter still applies behind it
-    if !shared.limiter.lock().unwrap().admit(&entry.user, shared.wall_ms()) {
+    if !shared.limiter.lock_clean().admit(&entry.user, shared.wall_ms()) {
         shared.http.rejected_rate_limited.inc();
         let body = Json::obj(vec![("error", Json::str("rate limited")), ("reason", Json::str("rate_limited"))]);
         return Ok((ROUTE, write_json(w, 429, &body, close)?, close));

@@ -89,6 +89,8 @@ use crate::telemetry::{EventLog, Metrics, RequestEvent, ServingMetrics};
 use crate::types::{Island, IslandId, Request};
 use crate::util::AtomicF64;
 
+use crate::util::sync::{LockExt, RwLockExt};
+
 /// Execution backend.
 pub enum Backend {
     Sim(Fleet),
@@ -358,12 +360,12 @@ impl Orchestrator {
     /// submitters and queue workers are running; the next coalescing pass
     /// picks it up).
     pub fn set_batch_policy(&self, policy: BatchPolicy) {
-        *self.batch_policy.write().unwrap() = policy;
+        *self.batch_policy.write_clean() = policy;
     }
 
     /// The batching policy currently applied by the coalescing paths.
     pub fn batch_policy(&self) -> BatchPolicy {
-        *self.batch_policy.read().unwrap()
+        *self.batch_policy.read_clean()
     }
 
     /// Open a session for a user.
@@ -510,7 +512,7 @@ impl Orchestrator {
             Some(fleet) if fleet.revive(id) => {
                 self.lighthouse.beat(id, fleet.now());
                 self.lighthouse.set_degraded(id, false);
-                self.degrade.lock().unwrap().remove(&id);
+                self.degrade.lock_clean().remove(&id);
                 self.serving.island_revives.inc();
                 true
             }
@@ -538,7 +540,7 @@ impl Orchestrator {
         let fleet = self.sim_fleet()?;
         let island = fleet.leave(id)?;
         let _ = self.lighthouse.deregister(id);
-        self.degrade.lock().unwrap().remove(&id);
+        self.degrade.lock_clean().remove(&id);
         self.serving.island_leaves.inc();
         Some(island)
     }
@@ -565,7 +567,7 @@ impl Orchestrator {
         }
         self.lighthouse.beat_many(states.iter().filter(|s| s.online).map(|s| s.island.id), now);
         self.lighthouse.tick(now);
-        let mut detectors = self.degrade.lock().unwrap();
+        let mut detectors = self.degrade.lock_clean();
         for s in states {
             let det = detectors.entry(s.island.id).or_insert_with(|| DegradeDetector::new(self.degrade_zero_samples));
             let was = det.is_degraded();
@@ -652,7 +654,7 @@ impl Orchestrator {
             return Err(AdmitErr::UnknownSession(session_id));
         };
         let now = self.now_ms();
-        if !self.limiter.lock().unwrap().admit(&user, now) {
+        if !self.limiter.lock_clean().admit(&user, now) {
             self.serving.rate_limited.inc();
             return Err(AdmitErr::RateLimited { user });
         }
@@ -814,7 +816,7 @@ impl Orchestrator {
 
         // TIDE capacity (Alg. 1 line 2) + LIGHTHOUSE liveness + hysteresis
         let (states, local_capacity) = self.routing_view();
-        let pref = self.hysteresis.lock().unwrap().observe(local_capacity);
+        let pref = self.hysteresis.lock_clean().observe(local_capacity);
         self.serving.local_capacity.set(local_capacity);
 
         // WAVES decision (Alg. 1)
@@ -1147,7 +1149,7 @@ impl Orchestrator {
             }
             // re-route over the surviving fleet
             let (states, local_capacity) = self.routing_view();
-            let pref = self.hysteresis.lock().unwrap().observe(local_capacity);
+            let pref = self.hysteresis.lock_clean().observe(local_capacity);
             let budget_left = self.ledger.remaining(&p.user, self.budget_ceiling);
             let decision = self.waves.route(&p.request, p.s_r, &states, local_capacity, pref, budget_left);
             match decision.routed() {
@@ -1257,7 +1259,13 @@ impl Orchestrator {
             }
         }
 
-        results.into_iter().map(|r| r.expect("every item decided")).collect()
+        // Every item must have been decided by the coalesced execution;
+        // convert a hole to a typed error (fail-closed) instead of
+        // panicking the submitter if that invariant ever regresses.
+        results
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|| Err(anyhow::anyhow!("request left undecided by batch execution"))))
+            .collect()
     }
 
     /// The shared coalescing executor behind [`submit_many_requests`] and
@@ -1723,6 +1731,8 @@ impl Orchestrator {
             std::thread::Builder::new()
                 .name(format!("islandrun-serve-{w}"))
                 .spawn(move || queue_worker(weak, queue, audit))
+                // islandlint: allow(serving-path-panic) -- start_queue runs once at boot; a worker
+                // pool that cannot spawn would hang every enqueued ticket forever, so fail fast.
                 .expect("spawn serve worker");
         }
         self.serve_workers

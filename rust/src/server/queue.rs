@@ -26,6 +26,8 @@ use std::time::{Duration, Instant};
 use crate::server::ticket::TicketCell;
 use crate::types::PriorityTier;
 
+use crate::util::sync::{cond_wait_timeout, cond_wait_while, LockExt};
+
 /// Typed, builder-style submission: every routing-relevant [`Request`] knob
 /// the serving surface supports, without positional-argument creep.
 ///
@@ -217,7 +219,7 @@ impl AdmissionQueue {
     }
 
     pub(crate) fn len(&self) -> usize {
-        self.inner.lock().unwrap().heap.len()
+        self.inner.lock_clean().heap.len()
     }
 
     /// Push an admitted request. `Ok(depth)` on success; `Err(item)` hands
@@ -232,7 +234,7 @@ impl AdmissionQueue {
         now_ms: f64,
         ticket: Arc<TicketCell>,
     ) -> Result<usize, QueueItem> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_clean();
         let seq = inner.next_seq;
         inner.next_seq += 1;
         let deadline_at_ms = now_ms + submit.deadline_ms.max(0.0);
@@ -256,9 +258,9 @@ impl AdmissionQueue {
     /// shutdown signal).
     pub(crate) fn pop_batch(&self, max: usize, max_wait: Duration) -> Option<Vec<QueueItem>> {
         let max = max.max(1);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_clean();
         loop {
-            inner = self.cond.wait_while(inner, |i| i.heap.is_empty() && !i.closed).unwrap();
+            inner = cond_wait_while(&self.cond, inner, |i| i.heap.is_empty() && !i.closed);
             if inner.heap.is_empty() {
                 return None; // closed and drained
             }
@@ -269,7 +271,7 @@ impl AdmissionQueue {
                 if now >= give_up_at {
                     break;
                 }
-                let (guard, wait) = self.cond.wait_timeout(inner, give_up_at - now).unwrap();
+                let (guard, wait) = cond_wait_timeout(&self.cond, inner, give_up_at - now);
                 inner = guard;
                 if wait.timed_out() {
                     break;
@@ -280,8 +282,11 @@ impl AdmissionQueue {
             }
             let n = max.min(inner.heap.len());
             let mut batch = Vec::with_capacity(n);
-            for _ in 0..n {
-                batch.push(inner.heap.pop().expect("len checked"));
+            while batch.len() < n {
+                match inner.heap.pop() {
+                    Some(item) => batch.push(item),
+                    None => break,
+                }
             }
             return Some(batch);
         }
@@ -291,7 +296,7 @@ impl AdmissionQueue {
     /// still parked so the caller can resolve those tickets (no ticket may
     /// be silently lost, even at shutdown).
     pub(crate) fn close(&self) -> Vec<QueueItem> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_clean();
         inner.closed = true;
         let leftovers = std::mem::take(&mut inner.heap).into_sorted_vec();
         drop(inner);

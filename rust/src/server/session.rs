@@ -45,6 +45,8 @@ use crate::agents::mist::entities::{detect, Entity};
 use crate::agents::mist::sanitize::PlaceholderMap;
 use crate::types::{Role, Turn};
 
+use crate::util::sync::{LockExt, RwLockExt};
+
 const SHARDS: usize = 16;
 
 /// Per-level cache entries kept per session (islands expose only a handful
@@ -325,18 +327,18 @@ impl SessionStore {
     /// Open a session for a user; ids are unique even under concurrent opens.
     pub fn open(&self, user: &str) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        self.shard(id).write().unwrap().insert(id, Session::new(id, user, self.mesh_seed));
+        self.shard(id).write_clean().insert(id, Session::new(id, user, self.mesh_seed));
         id
     }
 
     /// Run `f` against the session under a read lock.
     pub fn with<R>(&self, id: u64, f: impl FnOnce(&Session) -> R) -> Option<R> {
-        self.shard(id).read().unwrap().get(&id).map(f)
+        self.shard(id).read_clean().get(&id).map(f)
     }
 
     /// Run `f` against the session under a write lock.
     pub fn with_mut<R>(&self, id: u64, f: impl FnOnce(&mut Session) -> R) -> Option<R> {
-        self.shard(id).write().unwrap().get_mut(&id).map(f)
+        self.shard(id).write_clean().get_mut(&id).map(f)
     }
 
     /// The user who owns a session.
@@ -345,11 +347,11 @@ impl SessionStore {
     }
 
     pub fn close(&self, id: u64) -> bool {
-        self.shard(id).write().unwrap().remove(&id).is_some()
+        self.shard(id).write_clean().remove(&id).is_some()
     }
 
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.read_clean().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -546,14 +548,14 @@ mod tests {
                     for _ in 0..100 {
                         mine.push(store.open(&format!("user-{t}")));
                     }
-                    ids.lock().unwrap().extend(mine);
+                    ids.lock_clean().extend(mine);
                 })
             })
             .collect();
         for h in handles {
             h.join().unwrap();
         }
-        let mut all = ids.lock().unwrap().clone();
+        let mut all = ids.lock_clean().clone();
         all.sort_unstable();
         all.dedup();
         assert_eq!(all.len(), 800);

@@ -35,6 +35,8 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::server::orchestrator::Outcome;
 
+use crate::util::sync::{cond_wait, cond_wait_while, LockExt};
+
 /// Terminal value of a ticket: a completed outcome, or the error message of
 /// a submission that fell out of the pipeline (`anyhow::Error` is not
 /// `Clone`, and a ticket must serve repeated reads).
@@ -89,7 +91,7 @@ impl TicketCell {
     /// dropped — first resolution wins). The matching terminal stream event
     /// is appended so a streaming consumer sees the end of the stream.
     pub(crate) fn resolve(&self, value: TicketValue) -> bool {
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.state.lock_clean();
         if state.terminal.is_some() {
             return false;
         }
@@ -102,7 +104,7 @@ impl TicketCell {
     /// Push an incremental token chunk (step loop → streaming consumer).
     /// No-op after the terminal value landed.
     pub(crate) fn push_tokens(&self, text: &str) {
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.state.lock_clean();
         if state.terminal.is_some() {
             return;
         }
@@ -147,18 +149,21 @@ impl Ticket {
     /// terminal value, ignoring incremental tokens (the full response is in
     /// [`Outcome::response`]).
     pub fn wait(&self) -> anyhow::Result<Outcome> {
-        let state = self.cell.state.lock().unwrap();
-        let state = self.cell.cond.wait_while(state, |s| s.terminal.is_none()).unwrap();
-        match state.terminal.as_ref().expect("wait_while guarantees Some") {
-            Ok(outcome) => Ok(outcome.clone()),
-            Err(msg) => Err(anyhow::anyhow!("{msg}")),
+        let state = self.cell.state.lock_clean();
+        let state = cond_wait_while(&self.cell.cond, state, |s| s.terminal.is_none());
+        match state.terminal.as_ref() {
+            Some(Ok(outcome)) => Ok(outcome.clone()),
+            Some(Err(msg)) => Err(anyhow::anyhow!("{msg}")),
+            // wait_while only returns once terminal is Some; shed fail-closed
+            // rather than panic if that ever regresses.
+            None => Err(anyhow::anyhow!("ticket woke without a terminal state")),
         }
     }
 
     /// Non-blocking poll: `None` while the request is still queued or
     /// executing, `Some` once terminal (repeatable).
     pub fn try_poll(&self) -> Option<anyhow::Result<Outcome>> {
-        let state = self.cell.state.lock().unwrap();
+        let state = self.cell.state.lock_clean();
         state.terminal.as_ref().map(|v| match v {
             Ok(outcome) => Ok(outcome.clone()),
             Err(msg) => Err(anyhow::anyhow!("{msg}")),
@@ -167,7 +172,7 @@ impl Ticket {
 
     /// Has the request reached a terminal state yet?
     pub fn is_resolved(&self) -> bool {
-        self.cell.state.lock().unwrap().terminal.is_some()
+        self.cell.state.lock_clean().terminal.is_some()
     }
 
     /// Request cancellation. Cooperative: the step loop observes the flag
@@ -203,7 +208,7 @@ impl Iterator for TokenStream {
         if self.done {
             return None;
         }
-        let mut state = self.cell.state.lock().unwrap();
+        let mut state = self.cell.state.lock_clean();
         loop {
             if let Some(event) = state.events.pop_front() {
                 if matches!(event, TokenEvent::Done | TokenEvent::Cancelled { .. }) {
@@ -217,7 +222,7 @@ impl Iterator for TokenStream {
                 self.done = true;
                 return Some(terminal_event(v));
             }
-            state = self.cell.cond.wait(state).unwrap();
+            state = cond_wait(&self.cell.cond, state);
         }
     }
 }

@@ -14,6 +14,8 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::util::sync::LockExt;
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 enum Msg {
@@ -39,24 +41,31 @@ impl Pool {
                 std::thread::Builder::new()
                     .name(format!("islandrun-worker-{i}"))
                     .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
+                        let msg = { rx.lock_clean().recv() };
                         match msg {
                             Ok(Msg::Run(job)) => job(),
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
+                    // islandlint: allow(serving-path-panic) -- pool construction is boot-time: if the OS
+                    // refuses to spawn worker threads the process cannot serve at all, so failing fast
+                    // here beats limping along with a partial pool.
                     .expect("spawn worker")
             })
             .collect();
         Pool { tx, workers }
     }
 
-    /// Submit a fire-and-forget job.
+    /// Submit a fire-and-forget job. A send only fails when every worker has
+    /// died (all receiver clones dropped); the job is dropped rather than
+    /// panicking the submitter.
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+        let _ = self.tx.send(Msg::Run(Box::new(f)));
     }
 
-    /// Run `f` over every item, in parallel, preserving order of results.
+    /// Run `f` over every item, in parallel, preserving the order of
+    /// results. Items whose worker died mid-job are omitted (the returned
+    /// vector can be shorter than the input under worker panics).
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -76,11 +85,21 @@ impl Pool {
         }
         drop(tx);
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (idx, r) = rx.recv().expect("worker result");
-            slots[idx] = Some(r);
+        let mut received = 0;
+        while received < n {
+            match rx.recv() {
+                Ok((idx, r)) => {
+                    if let Some(slot) = slots.get_mut(idx) {
+                        *slot = Some(r);
+                    }
+                    received += 1;
+                }
+                // every sender dropped without replying: a worker died
+                // mid-job; return what completed instead of hanging
+                Err(_) => break,
+            }
         }
-        slots.into_iter().map(|s| s.unwrap()).collect()
+        slots.into_iter().flatten().collect()
     }
 
     /// Number of worker threads.
@@ -115,9 +134,10 @@ impl<T: Send + 'static> Promise<T> {
         Promise { rx }
     }
 
-    /// Block until the result is ready.
-    pub fn wait(self) -> T {
-        self.rx.recv().expect("promise fulfilled")
+    /// Block until the result is ready. `None` when the job was lost: the
+    /// pool shut down before running it, or the job itself panicked.
+    pub fn wait(self) -> Option<T> {
+        self.rx.recv().ok()
     }
 
     /// Non-blocking poll.
@@ -168,7 +188,7 @@ mod tests {
     fn promise_wait_and_poll() {
         let pool = Pool::new(1);
         let p = Promise::spawn(&pool, || 7u32);
-        assert_eq!(p.wait(), 7);
+        assert_eq!(p.wait(), Some(7));
         let p2 = Promise::spawn(&pool, || {
             std::thread::sleep(std::time::Duration::from_millis(50));
             1u32

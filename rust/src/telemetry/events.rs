@@ -14,6 +14,8 @@ use std::sync::Mutex;
 
 use crate::config::json::Json;
 
+use crate::util::sync::LockExt;
+
 /// Default ring capacity: enough for a full bench run's tail without
 /// unbounded growth on long-lived servers.
 pub const DEFAULT_EVENT_CAPACITY: usize = 4096;
@@ -108,7 +110,7 @@ impl EventLog {
 
     /// Append an event, evicting the oldest when the ring is full.
     pub fn push(&self, ev: RequestEvent) {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.inner.lock_clean();
         if q.len() == self.capacity {
             q.pop_front();
             self.dropped.fetch_add(1, Ordering::SeqCst);
@@ -117,7 +119,7 @@ impl EventLog {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock_clean().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -135,13 +137,13 @@ impl EventLog {
 
     /// Copy of the buffered events, oldest first.
     pub fn snapshot(&self) -> Vec<RequestEvent> {
-        self.inner.lock().unwrap().iter().cloned().collect()
+        self.inner.lock_clean().iter().cloned().collect()
     }
 
     /// JSONL export: one JSON object per line, oldest first.
     pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
-        for ev in self.inner.lock().unwrap().iter() {
+        for ev in self.inner.lock_clean().iter() {
             out.push_str(&ev.to_json().to_string());
             out.push('\n');
         }

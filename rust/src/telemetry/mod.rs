@@ -34,6 +34,8 @@ pub use serving::ServingMetrics;
 
 use crate::util::{AtomicF64, Histogram, Table};
 
+use crate::util::sync::RwLockExt;
+
 /// A metric cell that can be zeroed in place (for `Metrics::reset`).
 trait Cell: Default {
     fn zero(&self);
@@ -85,16 +87,16 @@ impl<C: Cell> Family<C> {
             values.len()
         );
         let key: Vec<String> = values.iter().map(|s| s.to_string()).collect();
-        if let Some(c) = self.children.read().unwrap().get(&key) {
+        if let Some(c) = self.children.read_clean().get(&key) {
             return Arc::clone(c);
         }
-        let mut w = self.children.write().unwrap();
+        let mut w = self.children.write_clean();
         Arc::clone(w.entry(key).or_default())
     }
 
     /// Sorted (label values, cell) snapshot of all children.
     fn snapshot_children(&self) -> Vec<(Vec<String>, Arc<C>)> {
-        self.children.read().unwrap().iter().map(|(k, v)| (k.clone(), Arc::clone(v))).collect()
+        self.children.read_clean().iter().map(|(k, v)| (k.clone(), Arc::clone(v))).collect()
     }
 }
 
@@ -203,30 +205,93 @@ impl HistogramVec {
 
 const UNREGISTERED_HELP: &str = "(registered on first use)";
 
+/// Which of the three registry tables a name lives in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Why a registration was refused. Returned by the `try_*` registration
+/// methods; the infallible methods convert it into a counted, detached-cell
+/// fallback instead of panicking (same doctrine as poisoned locks in
+/// [`crate::util::sync`]: telemetry bugs degrade observability, they do not
+/// take down the serving path).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RegisterError {
+    /// The name is already registered as a different metric kind.
+    KindConflict { name: String, existing: MetricKind, requested: MetricKind },
+    /// The name is already registered with a different label schema.
+    LabelMismatch { name: String, existing: Vec<String>, requested: Vec<String> },
+}
+
+impl std::fmt::Display for RegisterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegisterError::KindConflict { name, existing, requested } => write!(
+                f,
+                "metric {name:?} is already registered as a {}, cannot re-register as a {}",
+                existing.as_str(),
+                requested.as_str()
+            ),
+            RegisterError::LabelMismatch { name, existing, requested } => write!(
+                f,
+                "metric {name:?} is already registered with labels {existing:?}, cannot re-register with {requested:?}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RegisterError {}
+
 /// Central metrics registry.
 #[derive(Default)]
 pub struct Metrics {
     pub(crate) counters: RwLock<BTreeMap<String, Arc<Family<AtomicU64>>>>,
     pub(crate) gauges: RwLock<BTreeMap<String, Arc<Family<AtomicF64>>>>,
     pub(crate) histograms: RwLock<BTreeMap<String, Arc<Family<AtomicHistogram>>>>,
+    /// Registrations refused for kind/label conflicts; rendered as
+    /// `islandrun_telemetry_register_conflicts_total`. Sticky across
+    /// [`Metrics::reset`]: a conflict is a wiring bug, not a sample.
+    pub(crate) register_conflicts: AtomicU64,
 }
 
-fn family<C: Cell>(
+fn try_family<C: Cell>(
     table: &RwLock<BTreeMap<String, Arc<Family<C>>>>,
+    kind: MetricKind,
+    other_kind: Option<MetricKind>,
     name: &str,
     help: &str,
     labels: &[&str],
-) -> Arc<Family<C>> {
-    if let Some(f) = table.read().unwrap().get(name) {
-        assert!(
-            f.labels.len() == labels.len() && f.labels.iter().zip(labels).all(|(a, b)| a.as_str() == *b),
-            "metric {name:?} re-registered with different labels ({:?} vs {labels:?})",
-            f.labels
-        );
-        return Arc::clone(f);
+) -> Result<Arc<Family<C>>, RegisterError> {
+    if let Some(f) = table.read_clean().get(name) {
+        let same =
+            f.labels.len() == labels.len() && f.labels.iter().zip(labels).all(|(a, b)| a.as_str() == *b);
+        if !same {
+            return Err(RegisterError::LabelMismatch {
+                name: name.to_string(),
+                existing: f.labels.clone(),
+                requested: labels.iter().map(|s| s.to_string()).collect(),
+            });
+        }
+        return Ok(Arc::clone(f));
     }
-    let mut w = table.write().unwrap();
-    Arc::clone(w.entry(name.to_string()).or_insert_with(|| Arc::new(Family::new(help, labels))))
+    if let Some(existing) = other_kind {
+        return Err(RegisterError::KindConflict { name: name.to_string(), existing, requested: kind });
+    }
+    let mut w = table.write_clean();
+    Ok(Arc::clone(w.entry(name.to_string()).or_insert_with(|| Arc::new(Family::new(help, labels)))))
 }
 
 impl Metrics {
@@ -234,36 +299,129 @@ impl Metrics {
         Self::default()
     }
 
+    /// Which kind `name` is currently registered as, if any.
+    pub fn kind_of(&self, name: &str) -> Option<MetricKind> {
+        if self.counters.read_clean().contains_key(name) {
+            return Some(MetricKind::Counter);
+        }
+        if self.gauges.read_clean().contains_key(name) {
+            return Some(MetricKind::Gauge);
+        }
+        if self.histograms.read_clean().contains_key(name) {
+            return Some(MetricKind::Histogram);
+        }
+        None
+    }
+
+    /// Registrations refused so far (kind conflicts and label mismatches).
+    pub fn register_conflicts(&self) -> u64 {
+        self.register_conflicts.load(Ordering::SeqCst)
+    }
+
+    fn conflict<T>(&self, _err: RegisterError, fallback: T) -> T {
+        self.register_conflicts.fetch_add(1, Ordering::SeqCst);
+        fallback
+    }
+
+    // ---- fallible registration: typed errors for conflicting re-use ----
+
+    /// Register (or look up) an unlabeled counter, refusing kind/label
+    /// conflicts with a typed error.
+    pub fn try_register_counter(&self, name: &str, help: &str) -> Result<Counter, RegisterError> {
+        let other = self.kind_of(name).filter(|k| *k != MetricKind::Counter);
+        try_family(&self.counters, MetricKind::Counter, other, name, help, &[])
+            .map(|f| Counter { cell: f.child(&[]) })
+    }
+
+    /// Register a labeled counter family, refusing kind/label conflicts.
+    pub fn try_counter_vec(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[&str],
+    ) -> Result<CounterVec, RegisterError> {
+        let other = self.kind_of(name).filter(|k| *k != MetricKind::Counter);
+        try_family(&self.counters, MetricKind::Counter, other, name, help, labels)
+            .map(|family| CounterVec { family })
+    }
+
+    /// Register (or look up) an unlabeled gauge, refusing kind/label conflicts.
+    pub fn try_register_gauge(&self, name: &str, help: &str) -> Result<Gauge, RegisterError> {
+        let other = self.kind_of(name).filter(|k| *k != MetricKind::Gauge);
+        try_family(&self.gauges, MetricKind::Gauge, other, name, help, &[])
+            .map(|f| Gauge { cell: f.child(&[]) })
+    }
+
+    /// Register a labeled gauge family, refusing kind/label conflicts.
+    pub fn try_gauge_vec(&self, name: &str, help: &str, labels: &[&str]) -> Result<GaugeVec, RegisterError> {
+        let other = self.kind_of(name).filter(|k| *k != MetricKind::Gauge);
+        try_family(&self.gauges, MetricKind::Gauge, other, name, help, labels)
+            .map(|family| GaugeVec { family })
+    }
+
+    /// Register (or look up) an unlabeled histogram, refusing kind/label
+    /// conflicts.
+    pub fn try_register_histogram(&self, name: &str, help: &str) -> Result<Hist, RegisterError> {
+        let other = self.kind_of(name).filter(|k| *k != MetricKind::Histogram);
+        try_family(&self.histograms, MetricKind::Histogram, other, name, help, &[])
+            .map(|f| Hist { cell: f.child(&[]) })
+    }
+
+    /// Register a labeled histogram family, refusing kind/label conflicts.
+    pub fn try_histogram_vec(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[&str],
+    ) -> Result<HistogramVec, RegisterError> {
+        let other = self.kind_of(name).filter(|k| *k != MetricKind::Histogram);
+        try_family(&self.histograms, MetricKind::Histogram, other, name, help, labels)
+            .map(|family| HistogramVec { family })
+    }
+
     // ---- registration: resolve handles once, bump them lock-free after ----
+    //
+    // The infallible forms delegate to the `try_*` methods. On conflict they
+    // bump `register_conflicts` and hand back a *detached* cell: a live handle
+    // whose family was never inserted into the registry, so bumps still work
+    // (no panic on the serving path) but never render. The conflict counter in
+    // the exposition is what makes the wiring bug visible.
 
     /// Register (or look up) an unlabeled counter and return its handle.
     pub fn register_counter(&self, name: &str, help: &str) -> Counter {
-        Counter { cell: family(&self.counters, name, help, &[]).child(&[]) }
+        self.try_register_counter(name, help)
+            .unwrap_or_else(|e| self.conflict(e, Counter { cell: Family::<AtomicU64>::new(help, &[]).child(&[]) }))
     }
 
     /// Register a labeled counter family.
     pub fn counter_vec(&self, name: &str, help: &str, labels: &[&str]) -> CounterVec {
-        CounterVec { family: family(&self.counters, name, help, labels) }
+        self.try_counter_vec(name, help, labels)
+            .unwrap_or_else(|e| self.conflict(e, CounterVec { family: Arc::new(Family::new(help, labels)) }))
     }
 
     /// Register (or look up) an unlabeled gauge and return its handle.
     pub fn register_gauge(&self, name: &str, help: &str) -> Gauge {
-        Gauge { cell: family(&self.gauges, name, help, &[]).child(&[]) }
+        self.try_register_gauge(name, help)
+            .unwrap_or_else(|e| self.conflict(e, Gauge { cell: Family::<AtomicF64>::new(help, &[]).child(&[]) }))
     }
 
     /// Register a labeled gauge family.
     pub fn gauge_vec(&self, name: &str, help: &str, labels: &[&str]) -> GaugeVec {
-        GaugeVec { family: family(&self.gauges, name, help, labels) }
+        self.try_gauge_vec(name, help, labels)
+            .unwrap_or_else(|e| self.conflict(e, GaugeVec { family: Arc::new(Family::new(help, labels)) }))
     }
 
     /// Register (or look up) an unlabeled histogram and return its handle.
     pub fn register_histogram(&self, name: &str, help: &str) -> Hist {
-        Hist { cell: family(&self.histograms, name, help, &[]).child(&[]) }
+        self.try_register_histogram(name, help).unwrap_or_else(|e| {
+            self.conflict(e, Hist { cell: Family::<AtomicHistogram>::new(help, &[]).child(&[]) })
+        })
     }
 
     /// Register a labeled histogram family.
     pub fn histogram_vec(&self, name: &str, help: &str, labels: &[&str]) -> HistogramVec {
-        HistogramVec { family: family(&self.histograms, name, help, labels) }
+        self.try_histogram_vec(name, help, labels)
+            .unwrap_or_else(|e| self.conflict(e, HistogramVec { family: Arc::new(Family::new(help, labels)) }))
     }
 
     // ---- legacy string-keyed API: get-or-register by name on every call ----
@@ -272,17 +430,17 @@ impl Metrics {
     /// name through the registry on every call. Hot paths should hold a
     /// [`Counter`] handle instead (see [`ServingMetrics`]).
     pub fn count(&self, name: &str, n: u64) {
-        family(&self.counters, name, UNREGISTERED_HELP, &[]).child(&[]).fetch_add(n, Ordering::SeqCst);
+        self.register_counter(name, UNREGISTERED_HELP).add(n);
     }
 
     /// Set a gauge to an absolute value (string-keyed slow path).
     pub fn gauge(&self, name: &str, v: f64) {
-        family(&self.gauges, name, UNREGISTERED_HELP, &[]).child(&[]).store(v);
+        self.register_gauge(name, UNREGISTERED_HELP).set(v);
     }
 
     /// Record a histogram sample (string-keyed slow path).
     pub fn observe(&self, name: &str, v: f64) {
-        family(&self.histograms, name, UNREGISTERED_HELP, &[]).child(&[]).record(v);
+        self.register_histogram(name, UNREGISTERED_HELP).observe(v);
     }
 
     // ---- queries ----
@@ -290,27 +448,27 @@ impl Metrics {
     /// Total over all children of a counter family (0 if absent). For a
     /// labeled family this is the sum across label combinations.
     pub fn counter_value(&self, name: &str) -> u64 {
-        match self.counters.read().unwrap().get(name) {
-            Some(f) => f.children.read().unwrap().values().map(|c| c.load(Ordering::SeqCst)).sum(),
+        match self.counters.read_clean().get(name) {
+            Some(f) => f.children.read_clean().values().map(|c| c.load(Ordering::SeqCst)).sum(),
             None => 0,
         }
     }
 
     /// Value of an unlabeled gauge (None if never set).
     pub fn gauge_value(&self, name: &str) -> Option<f64> {
-        let table = self.gauges.read().unwrap();
+        let table = self.gauges.read_clean();
         let f = table.get(name)?;
-        let children = f.children.read().unwrap();
+        let children = f.children.read_clean();
         children.get(&Vec::new()).map(|g| g.load())
     }
 
     /// Snapshot of a histogram family by name, merged across all label
     /// combinations. None if the name was never registered.
     pub fn histogram(&self, name: &str) -> Option<Histogram> {
-        let table = self.histograms.read().unwrap();
+        let table = self.histograms.read_clean();
         let f = table.get(name)?;
         let mut merged = Histogram::new();
-        for child in f.children.read().unwrap().values() {
+        for child in f.children.read_clean().values() {
             merged.merge(&child.snapshot());
         }
         Some(merged)
@@ -318,7 +476,7 @@ impl Metrics {
 
     /// Per-child values of a counter family: (label values, count), sorted.
     pub fn counter_children(&self, name: &str) -> Vec<(Vec<String>, u64)> {
-        match self.counters.read().unwrap().get(name) {
+        match self.counters.read_clean().get(name) {
             Some(f) => f.snapshot_children().into_iter().map(|(k, c)| (k, c.load(Ordering::SeqCst))).collect(),
             None => Vec::new(),
         }
@@ -326,7 +484,7 @@ impl Metrics {
 
     /// Per-child snapshots of a histogram family: (label values, histogram).
     pub fn histogram_children(&self, name: &str) -> Vec<(Vec<String>, Histogram)> {
-        match self.histograms.read().unwrap().get(name) {
+        match self.histograms.read_clean().get(name) {
             Some(f) => f.snapshot_children().into_iter().map(|(k, h)| (k, h.snapshot())).collect(),
             None => Vec::new(),
         }
@@ -345,17 +503,17 @@ impl Metrics {
     /// Render everything as a report table (used by `islandrun stats`).
     pub fn report(&self) -> Table {
         let mut t = Table::new("metrics", &["metric", "value"]);
-        for (name, f) in self.counters.read().unwrap().iter() {
+        for (name, f) in self.counters.read_clean().iter() {
             for (values, c) in f.snapshot_children() {
                 t.row(&[Self::series_name(name, &f.labels, &values), c.load(Ordering::SeqCst).to_string()]);
             }
         }
-        for (name, f) in self.gauges.read().unwrap().iter() {
+        for (name, f) in self.gauges.read_clean().iter() {
             for (values, g) in f.snapshot_children() {
                 t.row(&[Self::series_name(name, &f.labels, &values), format!("{:.3}", g.load())]);
             }
         }
-        for (name, f) in self.histograms.read().unwrap().iter() {
+        for (name, f) in self.histograms.read_clean().iter() {
             for (values, h) in f.snapshot_children() {
                 t.row(&[Self::series_name(name, &f.labels, &values), h.snapshot().summary()]);
             }
@@ -367,18 +525,18 @@ impl Metrics {
     /// including histogram buckets — is zeroed in place rather than dropped,
     /// so handles resolved before the reset keep recording into live cells.
     pub fn reset(&self) {
-        for f in self.counters.read().unwrap().values() {
-            for c in f.children.read().unwrap().values() {
+        for f in self.counters.read_clean().values() {
+            for c in f.children.read_clean().values() {
                 c.zero();
             }
         }
-        for f in self.gauges.read().unwrap().values() {
-            for g in f.children.read().unwrap().values() {
+        for f in self.gauges.read_clean().values() {
+            for g in f.children.read_clean().values() {
                 g.zero();
             }
         }
-        for f in self.histograms.read().unwrap().values() {
-            for h in f.children.read().unwrap().values() {
+        for f in self.histograms.read_clean().values() {
+            for h in f.children.read_clean().values() {
                 h.zero();
             }
         }
@@ -499,6 +657,58 @@ mod tests {
         assert_eq!(merged.count(), 2);
         assert!((merged.mean() - 20.0).abs() < 1e-9);
         assert_eq!(m.histogram_children("lat").len(), 2);
+    }
+
+    #[test]
+    fn kind_conflicts_yield_typed_errors_and_detached_fallbacks() {
+        let m = Metrics::new();
+        m.register_counter("depth", "a counter").inc();
+        assert_eq!(m.kind_of("depth"), Some(MetricKind::Counter));
+
+        let err = m.try_register_gauge("depth", "now a gauge?").unwrap_err();
+        assert_eq!(
+            err,
+            RegisterError::KindConflict {
+                name: "depth".to_string(),
+                existing: MetricKind::Counter,
+                requested: MetricKind::Gauge,
+            }
+        );
+        assert!(err.to_string().contains("already registered as a counter"));
+        assert_eq!(m.register_conflicts(), 0, "try_* refusals are not counted, infallible fallbacks are");
+
+        // The infallible path degrades to a detached (unrendered) cell and
+        // counts the conflict instead of panicking on the serving path.
+        let g = m.register_gauge("depth", "now a gauge?");
+        g.set(9.0);
+        assert_eq!(m.register_conflicts(), 1);
+        assert_eq!(m.gauge_value("depth"), None, "detached gauge never enters the registry");
+        assert_eq!(m.counter_value("depth"), 1, "the original counter is untouched");
+
+        // Legacy string-keyed bumps against the conflicting name also degrade.
+        m.observe("depth", 3.0);
+        assert_eq!(m.register_conflicts(), 2);
+        assert!(m.histogram("depth").is_none());
+    }
+
+    #[test]
+    fn label_mismatch_yields_typed_error() {
+        let m = Metrics::new();
+        m.counter_vec("resolved", "by outcome", &["outcome", "reason"]);
+        let err = m.try_counter_vec("resolved", "by outcome", &["outcome"]).unwrap_err();
+        match err {
+            RegisterError::LabelMismatch { name, existing, requested } => {
+                assert_eq!(name, "resolved");
+                assert_eq!(existing, vec!["outcome".to_string(), "reason".to_string()]);
+                assert_eq!(requested, vec!["outcome".to_string()]);
+            }
+            other => panic!("expected LabelMismatch, got {other:?}"),
+        }
+        // identical re-registration is sharing, not a conflict
+        let v = m.try_counter_vec("resolved", "by outcome", &["outcome", "reason"]).unwrap();
+        v.with(&["served", "ok"]).inc();
+        assert_eq!(m.counter_value("resolved"), 1);
+        assert_eq!(m.register_conflicts(), 0);
     }
 
     #[test]

@@ -15,6 +15,8 @@ use std::sync::atomic::Ordering;
 
 use super::Metrics;
 
+use crate::util::sync::RwLockExt;
+
 const PREFIX: &str = "islandrun_";
 
 fn escape_help(s: &str) -> String {
@@ -57,7 +59,27 @@ impl Metrics {
     /// deterministic for a given registry state.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
-        for (name, f) in self.counters.read().unwrap().iter() {
+        // Process-level health counters that live outside the registry maps:
+        // lock-poison recoveries (see `util::sync`) and registrations refused
+        // for kind/label conflicts. Both are wiring-bug telltales that must be
+        // scrapable even though nothing registers them explicitly.
+        let _ = writeln!(
+            out,
+            "# HELP {PREFIX}lock_poison_recoveries_total lock guards recovered from a poisoned state"
+        );
+        let _ = writeln!(out, "# TYPE {PREFIX}lock_poison_recoveries_total counter");
+        let _ = writeln!(
+            out,
+            "{PREFIX}lock_poison_recoveries_total {}",
+            crate::util::sync::poison_recoveries()
+        );
+        let _ = writeln!(
+            out,
+            "# HELP {PREFIX}telemetry_register_conflicts_total metric registrations refused for kind or label conflicts"
+        );
+        let _ = writeln!(out, "# TYPE {PREFIX}telemetry_register_conflicts_total counter");
+        let _ = writeln!(out, "{PREFIX}telemetry_register_conflicts_total {}", self.register_conflicts());
+        for (name, f) in self.counters.read_clean().iter() {
             let full = format!("{PREFIX}{name}_total");
             let _ = writeln!(out, "# HELP {full} {}", escape_help(&f.help));
             let _ = writeln!(out, "# TYPE {full} counter");
@@ -66,7 +88,7 @@ impl Metrics {
                 let _ = writeln!(out, "{} {}", series(&full, &pairs), c.load(Ordering::SeqCst));
             }
         }
-        for (name, f) in self.gauges.read().unwrap().iter() {
+        for (name, f) in self.gauges.read_clean().iter() {
             let full = format!("{PREFIX}{name}");
             let _ = writeln!(out, "# HELP {full} {}", escape_help(&f.help));
             let _ = writeln!(out, "# TYPE {full} gauge");
@@ -75,7 +97,7 @@ impl Metrics {
                 let _ = writeln!(out, "{} {}", series(&full, &pairs), g.load());
             }
         }
-        for (name, f) in self.histograms.read().unwrap().iter() {
+        for (name, f) in self.histograms.read_clean().iter() {
             let full = format!("{PREFIX}{name}");
             let _ = writeln!(out, "# HELP {full} {}", escape_help(&f.help));
             let _ = writeln!(out, "# TYPE {full} histogram");
@@ -220,6 +242,8 @@ fn parse_sample(line: &str, line_no: usize) -> Result<(String, Vec<(String, Stri
 /// * metric and label names are well-formed, label values properly quoted
 ///   and escaped;
 /// * no duplicate series (same name + label set twice);
+/// * no family whose name collides with a histogram family's generated
+///   `_bucket`/`_sum`/`_count` sample names;
 /// * per histogram child: cumulative bucket counts are monotone
 ///   non-decreasing over increasing `le`, the series ends at `le="+Inf"`,
 ///   and the `+Inf` count equals the child's `_count`.
@@ -328,8 +352,25 @@ pub fn lint_exposition(text: &str) -> Result<(), String> {
         }
     }
 
+    // Family names must not collide with another family's generated sample
+    // names: a histogram `h` owns `h_bucket` / `h_sum` / `h_count`, so a
+    // separate family claiming one of those names makes every sample line
+    // ambiguous between the two owners.
+    for (name, kind) in &types {
+        if kind == "histogram" {
+            for suf in ["_bucket", "_sum", "_count"] {
+                let derived = format!("{name}{suf}");
+                if types.contains_key(&derived) {
+                    return Err(format!(
+                        "{derived}: family name collides with histogram {name}'s {suf} samples"
+                    ));
+                }
+            }
+        }
+    }
+
     for ((family, key), mut series) in buckets {
-        series.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        series.sort_by(|a, b| a.0.total_cmp(&b.0));
         let mut prev = f64::NEG_INFINITY;
         for &(_, count) in &series {
             if count < prev {
@@ -337,7 +378,9 @@ pub fn lint_exposition(text: &str) -> Result<(), String> {
             }
             prev = count;
         }
-        let (last_bound, last_count) = *series.last().unwrap();
+        // series is non-empty: every key in `buckets` was inserted with at
+        // least one (bound, count) push
+        let Some(&(last_bound, last_count)) = series.last() else { continue };
         if !last_bound.is_infinite() {
             return Err(format!("{family}{{{key}}}: bucket series does not end at le=\"+Inf\""));
         }
@@ -445,6 +488,42 @@ h_sum 9
 h_count 5
 ";
         assert!(lint_exposition(text).unwrap_err().contains("!= _count"));
+    }
+
+    #[test]
+    fn lint_rejects_histogram_suffix_collision() {
+        let text = "\
+# HELP h latency
+# TYPE h histogram
+# HELP h_count inflight
+# TYPE h_count counter
+h_bucket{le=\"+Inf\"} 0
+h_sum 0
+h_count 0
+";
+        assert!(lint_exposition(text).unwrap_err().contains("collides with histogram"));
+    }
+
+    #[test]
+    fn process_counters_render_and_lint() {
+        let m = Metrics::new();
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE islandrun_lock_poison_recoveries_total counter"), "{text}");
+        assert!(text.contains("# TYPE islandrun_telemetry_register_conflicts_total counter"), "{text}");
+        assert!(text.contains("islandrun_telemetry_register_conflicts_total 0"), "{text}");
+        lint_exposition(&text).unwrap();
+    }
+
+    #[test]
+    fn conflicting_registration_is_counted_in_the_exposition() {
+        let m = Metrics::new();
+        m.register_counter("depth", "a counter").inc();
+        m.register_gauge("depth", "now a gauge?").set(4.0); // kind conflict: detached
+        let text = m.render_prometheus();
+        assert!(text.contains("islandrun_telemetry_register_conflicts_total 1"), "{text}");
+        assert!(text.contains("islandrun_depth_total 1"), "{text}");
+        assert!(!text.contains("islandrun_depth 4"), "detached gauge must not render: {text}");
+        lint_exposition(&text).unwrap();
     }
 
     #[test]

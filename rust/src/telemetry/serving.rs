@@ -17,6 +17,8 @@ use crate::server::Resolution;
 
 use super::{Counter, CounterVec, Gauge, Hist, HistogramVec, Metrics};
 
+use crate::util::sync::RwLockExt;
+
 /// Cached cells for one island's per-island series. Resolved at routing
 /// time and carried with the prepared request, so recording a served
 /// request's latency is a single atomic histogram insert.
@@ -267,7 +269,7 @@ impl ServingMetrics {
     /// Cached per-island cells; `tier`/`privacy` become label values on
     /// first resolution (island specs are static, so first wins).
     pub fn island(&self, id: u32, tier: &str, privacy: f64) -> Arc<IslandCells> {
-        if let Some(cells) = self.island_cells.read().unwrap().get(&id) {
+        if let Some(cells) = self.island_cells.read_clean().get(&id) {
             return Arc::clone(cells);
         }
         let island = format!("island-{id}");
@@ -277,18 +279,18 @@ impl ServingMetrics {
             latency_ms: self.island_latency.with(&labels),
             served: self.served_by_island.with(&labels),
         });
-        let mut w = self.island_cells.write().unwrap();
+        let mut w = self.island_cells.write_clean();
         Arc::clone(w.entry(id).or_insert(cells))
     }
 
     /// Cached `failovers_by_island{island}` counter for a dead island.
     pub fn failover_from(&self, id: u32) -> Counter {
-        if let Some(c) = self.failover_cells.read().unwrap().get(&id) {
+        if let Some(c) = self.failover_cells.read_clean().get(&id) {
             return c.clone();
         }
         let island = format!("island-{id}");
         let counter = self.failovers_by_island.with(&[island.as_str()]);
-        let mut w = self.failover_cells.write().unwrap();
+        let mut w = self.failover_cells.write_clean();
         w.entry(id).or_insert(counter).clone()
     }
 }
@@ -343,21 +345,21 @@ impl HttpMetrics {
     }
 
     fn request_counter(&self, route: &'static str, status: u16) -> Counter {
-        if let Some(c) = self.request_cells.read().unwrap().get(&(route, status)) {
+        if let Some(c) = self.request_cells.read_clean().get(&(route, status)) {
             return c.clone();
         }
         let status_label = status.to_string();
         let counter = self.requests.with(&[route, status_label.as_str()]);
-        let mut w = self.request_cells.write().unwrap();
+        let mut w = self.request_cells.write_clean();
         w.entry((route, status)).or_insert(counter).clone()
     }
 
     fn route_latency(&self, route: &'static str) -> Hist {
-        if let Some(h) = self.latency_cells.read().unwrap().get(route) {
+        if let Some(h) = self.latency_cells.read_clean().get(route) {
             return h.clone();
         }
         let hist = self.latency.with(&[route]);
-        let mut w = self.latency_cells.write().unwrap();
+        let mut w = self.latency_cells.write_clean();
         w.entry(route).or_insert(hist).clone()
     }
 }

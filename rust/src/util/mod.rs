@@ -10,6 +10,7 @@ pub mod bench;
 pub mod minicheck;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 
 pub use atomic::AtomicF64;

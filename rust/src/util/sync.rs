@@ -1,0 +1,187 @@
+//! Poisoned-lock recovery policy for the serving path.
+//!
+//! **Policy (decided once, applied everywhere):** a poisoned `Mutex`/`RwLock`
+//! is *recovered*, never propagated. Poisoning only means some thread
+//! panicked while holding the guard; every serving-path critical section in
+//! this crate maintains its invariants before blocking or returning (metrics
+//! cells are atomics, queues re-validate on drain, registries are
+//! last-write-wins maps), so the protected data is still structurally valid.
+//! Propagating the `PoisonError` instead would convert one contained panic —
+//! already counted and shed by the `catch_unwind` fences in the queue
+//! workers and step-loop drivers — into a crash loop that takes down every
+//! subsequent request touching the same lock. Fail-closed applies to
+//! *requests* (they shed with a typed [`crate::server::Resolution`]), not to
+//! the process.
+//!
+//! Every recovery is counted in [`POISON_RECOVERIES`] and surfaced as
+//! `islandrun_lock_poison_recoveries_total` in the Prometheus exposition, so
+//! a non-zero value is observable and alertable: it always indicates a
+//! panic happened somewhere, even if the panic itself was contained.
+//!
+//! `islandlint` rule R1 (`serving-path-panic`) denies unwrapping lock
+//! results in serving modules; these extension traits are the sanctioned
+//! replacement.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Process-wide count of poisoned-lock recoveries. Always zero in a healthy
+/// process; non-zero means a thread panicked while holding a guard.
+pub static POISON_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+
+/// Current recovery count (exported to the Prometheus exposition).
+pub fn poison_recoveries() -> u64 {
+    POISON_RECOVERIES.load(Ordering::Relaxed)
+}
+
+fn note_recovery() {
+    POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// `Mutex` extension: acquire the guard, recovering from poisoning.
+pub trait LockExt<T> {
+    /// Like `lock().unwrap()` but recovers a poisoned guard (and counts the
+    /// recovery) instead of panicking.
+    fn lock_clean(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn lock_clean(&self) -> MutexGuard<'_, T> {
+        match self.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                note_recovery();
+                poisoned.into_inner()
+            }
+        }
+    }
+}
+
+/// `RwLock` extension: acquire read/write guards, recovering from poisoning.
+pub trait RwLockExt<T> {
+    /// Like `read().unwrap()` but recovers a poisoned guard.
+    fn read_clean(&self) -> RwLockReadGuard<'_, T>;
+    /// Like `write().unwrap()` but recovers a poisoned guard.
+    fn write_clean(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T> RwLockExt<T> for RwLock<T> {
+    fn read_clean(&self) -> RwLockReadGuard<'_, T> {
+        match self.read() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                note_recovery();
+                poisoned.into_inner()
+            }
+        }
+    }
+
+    fn write_clean(&self) -> RwLockWriteGuard<'_, T> {
+        match self.write() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                note_recovery();
+                poisoned.into_inner()
+            }
+        }
+    }
+}
+
+/// `Condvar::wait` with poison recovery. The guard is handed to the condvar
+/// (the lock is *released* while parked), which is why islandlint rule R2
+/// (`lock-across-blocking`) exempts guards passed as a blocking call's
+/// argument.
+pub fn cond_wait<'a, T>(cond: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cond.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_recovery();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// `Condvar::wait_while` with poison recovery.
+pub fn cond_wait_while<'a, T, F>(cond: &Condvar, guard: MutexGuard<'a, T>, condition: F) -> MutexGuard<'a, T>
+where
+    F: FnMut(&mut T) -> bool,
+{
+    match cond.wait_while(guard, condition) {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_recovery();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// `Condvar::wait_timeout` with poison recovery.
+pub fn cond_wait_timeout<'a, T>(
+    cond: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    match cond.wait_timeout(guard, dur) {
+        Ok(pair) => pair,
+        Err(poisoned) => {
+            note_recovery();
+            poisoned.into_inner()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_clean_recovers_poison_and_counts() {
+        let before = poison_recoveries();
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock_clean();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        *m.lock_clean() += 1;
+        assert_eq!(*m.lock_clean(), 8);
+        assert!(poison_recoveries() > before);
+    }
+
+    #[test]
+    fn rwlock_clean_recovers_poison() {
+        let l = Arc::new(RwLock::new(1u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write_clean();
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        *l.write_clean() = 2;
+        assert_eq!(*l.read_clean(), 2);
+    }
+
+    #[test]
+    fn cond_wait_helpers_round_trip() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let h = std::thread::spawn(move || {
+            let (m, c) = &*p2;
+            *m.lock_clean() = true;
+            c.notify_all();
+        });
+        let (m, c) = &*pair;
+        let guard = cond_wait_while(c, m.lock_clean(), |ready| !*ready);
+        assert!(*guard);
+        drop(guard);
+        let (guard, timed_out) = cond_wait_timeout(c, m.lock_clean(), Duration::from_millis(1));
+        assert!(*guard);
+        let _ = timed_out;
+        h.join().unwrap();
+    }
+}

@@ -179,3 +179,54 @@ fn every_resolution_is_counted_logged_and_exposable() {
     assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
     assert_eq!(orch.audit.len(), outcomes.len(), "one audit entry per consumed id");
 }
+
+/// islandlint R4 (`resolution-coverage`) companion: every [`Resolution`]
+/// variant is named here explicitly — not via `Resolution::ALL` alone — so the
+/// static-analysis pass can prove each variant is asserted on in at least one
+/// test. For each variant we pin that (a) its outcome counter cell is
+/// pre-registered before any traffic flows (a typo'd reason can never mint a
+/// fresh zero cell at bump time) and (b) its `reason` label survives into the
+/// Prometheus exposition.
+#[test]
+fn every_resolution_variant_has_a_preregistered_cell_and_renders() {
+    use islandrun::server::{CancelPoint, FailReason, ShedReason};
+
+    let orch = orchestrator(612);
+
+    // Named explicitly, one per line: this list is the R4 test-side ledger.
+    let variants: [Resolution; 15] = [
+        Resolution::Served,
+        Resolution::Shed(ShedReason::QueueFull),
+        Resolution::Shed(ShedReason::DeadlineExpired),
+        Resolution::Shed(ShedReason::InvalidRequest),
+        Resolution::Shed(ShedReason::RateLimited),
+        Resolution::Shed(ShedReason::WorkerPanic),
+        Resolution::Shed(ShedReason::Shutdown),
+        Resolution::Cancelled(CancelPoint::WhileQueued),
+        Resolution::Cancelled(CancelPoint::BeforeExecution),
+        Resolution::Cancelled(CancelPoint::MidDecode),
+        Resolution::Cancelled(CancelPoint::DeadlineMidDecode),
+        Resolution::Failed(FailReason::FailClosed),
+        Resolution::Failed(FailReason::FailoverExhausted),
+        Resolution::Failed(FailReason::ExecutionError),
+        Resolution::Failed(FailReason::SessionClosed),
+    ];
+    assert_eq!(variants, Resolution::ALL, "the explicit ledger must mirror Resolution::ALL");
+
+    let children = orch.metrics.counter_children("requests_resolved");
+    let text = orch.metrics.render_prometheus();
+    lint_exposition(&text).expect("render_prometheus must pass the format lint");
+    for r in variants {
+        let pair = (r.class(), r.reason());
+        assert!(
+            children.iter().any(|(labels, _)| (labels[0].as_str(), labels[1].as_str()) == pair),
+            "no pre-registered requests_resolved cell for {pair:?}"
+        );
+        let series = format!(
+            "islandrun_requests_resolved_total{{outcome=\"{}\",reason=\"{}\"}}",
+            r.class(),
+            r.reason()
+        );
+        assert!(text.contains(&series), "exposition is missing {series}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Hand-rolled Rust lexer: classifies string/char literals and comments so
+//! the rule engine can work on a "code view" with non-code bytes blanked out.
+//!
+//! The lexer only needs to be right about *where literals and comments
+//! start and end* — it never interprets code. It handles the delimiters
+//! that matter for that job: escaped strings, byte strings, raw strings
+//! with arbitrary `#` fences (`r#"..."#`), nested block comments, char
+//! literals (including multi-byte chars like `'é'`), and the char-vs-
+//! lifetime ambiguity (`'a'` vs `<'a>`). All scanning is byte-wise; every
+//! token boundary lands on an ASCII delimiter, so byte offsets are always
+//! char boundaries and UTF-8 identifiers pass through untouched.
+
+/// What a non-code span is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Str,
+    Char,
+    LineComment,
+    BlockComment,
+}
+
+/// Non-code spans of `src` as `(kind, start, end)` byte ranges, in order.
+pub fn lex(src: &str) -> Vec<(TokKind, usize, usize)> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n {
+            if b[i + 1] == b'/' {
+                let j = memfind(b, b"\n", i).unwrap_or(n);
+                toks.push((TokKind::LineComment, i, j));
+                i = j;
+                continue;
+            }
+            if b[i + 1] == b'*' {
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                toks.push((TokKind::BlockComment, i, j));
+                i = j;
+                continue;
+            }
+        }
+        if c == b'"' {
+            let j = scan_escaped_string(b, i);
+            toks.push((TokKind::Str, i, j));
+            i = j;
+            continue;
+        }
+        if c == b'r' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'#') {
+            // raw string r"..." / r#"..."# (any fence width), or a raw
+            // identifier r#ident, which is not a string at all
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                let mut close = Vec::with_capacity(hashes + 1);
+                close.push(b'"');
+                close.resize(hashes + 1, b'#');
+                let k = match memfind(b, &close, j + 1) {
+                    Some(k) => k + close.len(),
+                    None => n,
+                };
+                toks.push((TokKind::Str, i, k));
+                i = k;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        if c == b'b' && i + 1 < n && b[i + 1] == b'"' {
+            let j = scan_escaped_string(b, i + 1);
+            toks.push((TokKind::Str, i, j));
+            i = j;
+            continue;
+        }
+        if c == b'\'' {
+            // char literal or lifetime
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // escaped char: scan to the closing quote
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                toks.push((TokKind::Char, i, (j + 1).min(n)));
+                i = (j + 1).min(n);
+                continue;
+            }
+            // one char (possibly multi-byte) followed by a closing quote?
+            if let Some(ch) = src[i + 1..].chars().next() {
+                let k = i + 1 + ch.len_utf8();
+                if k < n && b[k] == b'\'' {
+                    toks.push((TokKind::Char, i, k + 1));
+                    i = k + 1;
+                    continue;
+                }
+            }
+            // lifetime: skip just the quote
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    toks
+}
+
+fn scan_escaped_string(b: &[u8], open: usize) -> usize {
+    let n = b.len();
+    let mut j = open + 1;
+    while j < n {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+fn memfind(haystack: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || from >= haystack.len() {
+        return None;
+    }
+    haystack[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+/// `src` with non-code spans blanked to spaces (newlines kept, so byte
+/// offsets and line numbers are identical to the original). With
+/// `keep_strings`, string/char literals survive — that view is used by the
+/// metric-name rule, which must read literals but not comments.
+pub fn blank(src: &str, keep_strings: bool) -> String {
+    let mut out = src.as_bytes().to_vec();
+    for (kind, s, e) in lex(src) {
+        if keep_strings && matches!(kind, TokKind::Str | TokKind::Char) {
+            continue;
+        }
+        for byte in &mut out[s..e.min(src.len())] {
+            if *byte != b'\n' {
+                *byte = b' ';
+            }
+        }
+    }
+    // every blanked span is replaced whole, so the result stays valid UTF-8
+    String::from_utf8(out).expect("blanking only rewrites whole literal/comment spans")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanks_strings_and_comments() {
+        let src = "let x = \"a.unwrap()\"; // .unwrap()\nlet y = 1;";
+        let code = blank(src, false);
+        assert!(!code.contains("unwrap"));
+        assert!(code.contains("let y = 1;"));
+        assert_eq!(code.len(), src.len());
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let src = r####"let p = r#"panic!("no")"#; p"####;
+        let code = blank(src, false);
+        assert!(!code.contains("panic"));
+        assert!(code.ends_with("; p"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ code()";
+        let code = blank(src, false);
+        assert!(!code.contains("inner"));
+        assert!(code.contains("code()"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let src = "fn f<'a>(x: &'a str) { let c = '\"'; let d = 'é'; }";
+        let code = blank(src, false);
+        assert!(code.contains("fn f<'a>(x: &'a str)"));
+        assert!(!code.contains('"'));
+        assert!(!code.contains('é'));
+    }
+
+    #[test]
+    fn keep_strings_view_drops_only_comments() {
+        let src = "m.count(\"served\", 1); // bump \"fake\"";
+        let v = blank(src, true);
+        assert!(v.contains("\"served\""));
+        assert!(!v.contains("fake"));
+    }
+
+    #[test]
+    fn byte_strings_and_raw_idents() {
+        let src = "let b = b\"panic!\"; let r#fn = 1;";
+        let code = blank(src, false);
+        assert!(!code.contains("panic"));
+        assert!(code.contains("r#fn"));
+    }
+}

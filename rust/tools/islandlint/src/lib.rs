@@ -1,0 +1,220 @@
+//! islandlint: project-invariant static analysis for the IslandRun tree.
+//!
+//! A dependency-free lint pass over `rust/src/**`: a hand-rolled lexer
+//! (raw strings, nested comments, char-boundary-correct spans), a brace
+//! scope tracker, and five named rules enforcing invariants the compiler
+//! cannot see — see [`rules`] for the catalogue and the README's
+//! "Static analysis & sanitizers" section for suppression etiquette.
+//!
+//! The library surface exists so the integration tests can run individual
+//! rules over fixture trees; the `islandlint` binary wraps [`run`] with
+//! `--deny` / `--json` / `--rule` handling.
+
+pub mod lexer;
+pub mod rules;
+pub mod scopes;
+pub mod suppress;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One rule violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// A source file with the derived views every rule shares.
+pub struct SourceFile {
+    /// Path relative to the scan root, `/`-separated.
+    pub rel: String,
+    /// Raw text (suppression comments are read from here).
+    pub src: String,
+    /// Strings and comments blanked.
+    pub code: String,
+    /// Comments blanked, string/char literals kept (metric-name rule).
+    pub nostr: String,
+    /// Byte spans of `#[cfg(test)]` / `#[test]` items, over `code`.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: String, src: String) -> SourceFile {
+        let code = lexer::blank(&src, false);
+        let nostr = lexer::blank(&src, true);
+        let test_spans = scopes::test_spans(&code);
+        SourceFile { rel, src, code, nostr, test_spans }
+    }
+}
+
+/// The loaded tree: the `src` files under the scan root, plus the sibling
+/// integration-test files (`<root>/../tests/*.rs`), which the
+/// resolution-coverage rule counts as test assertions.
+pub struct Tree {
+    pub files: Vec<SourceFile>,
+    pub test_files: Vec<SourceFile>,
+}
+
+/// Load every `.rs` file under `root`, plus the sibling `tests/` dir.
+pub fn load_tree(root: &Path) -> io::Result<Tree> {
+    let mut files = Vec::new();
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+    for path in paths {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        files.push(SourceFile::parse(rel, fs::read_to_string(&path)?));
+    }
+    let mut test_files = Vec::new();
+    if let Some(tests_dir) = root.parent().map(|p| p.join("tests")) {
+        if tests_dir.is_dir() {
+            let mut tpaths = Vec::new();
+            collect_rs(&tests_dir, &mut tpaths)?;
+            tpaths.sort();
+            for path in tpaths {
+                let rel = format!("tests/{}", path.file_name().unwrap_or_default().to_string_lossy());
+                test_files.push(SourceFile::parse(rel, fs::read_to_string(&path)?));
+            }
+        }
+    }
+    Ok(Tree { files, test_files })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run the selected rules (all five when `only` is empty) plus the
+/// malformed-suppression sweep, sorted by file/line.
+pub fn run(tree: &Tree, only: &[String]) -> Vec<Finding> {
+    let enabled = |name: &str| only.is_empty() || only.iter().any(|r| r == name);
+    let mut findings = Vec::new();
+    if enabled("serving-path-panic") {
+        findings.extend(rules::r1(tree));
+    }
+    if enabled("lock-across-blocking") {
+        findings.extend(rules::r2(tree));
+    }
+    if enabled("metric-registration") {
+        findings.extend(rules::r3(tree));
+    }
+    if enabled("resolution-coverage") {
+        findings.extend(rules::r4(tree));
+    }
+    if enabled("trust-boundary-text") {
+        findings.extend(rules::r5(tree));
+    }
+    for f in &tree.files {
+        let lines: Vec<&str> = f.src.split('\n').collect();
+        findings.extend(suppress::malformed(&f.rel, &lines, &rules::RULES));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    findings
+}
+
+/// Count of well-formed suppression comments in the tree (reported so a
+/// growing waiver list is visible in CI logs).
+pub fn suppression_count(tree: &Tree) -> usize {
+    tree.files
+        .iter()
+        .flat_map(|f| f.src.lines())
+        .filter(|l| l.contains("islandlint: allow(") && l.contains("--"))
+        .count()
+}
+
+/// Render findings as an aligned human-readable table.
+pub fn render_table(findings: &[Finding]) -> String {
+    if findings.is_empty() {
+        return String::new();
+    }
+    let loc: Vec<String> = findings.iter().map(|f| format!("{}:{}", f.file, f.line)).collect();
+    let rule_w = findings.iter().map(|f| f.rule.len()).max().unwrap_or(0);
+    let loc_w = loc.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (f, l) in findings.iter().zip(&loc) {
+        out.push_str(&format!("{:<rule_w$}  {:<loc_w$}  {}\n", f.rule, l, f.message));
+    }
+    out
+}
+
+/// Render findings as a JSON document (hand-rolled: the linter is
+/// dependency-free by design).
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"rule\":{},\"file\":{},\"line\":{},\"message\":{}}}",
+            json_str(f.rule),
+            json_str(&f.file),
+            f.line,
+            json_str(&f.message)
+        ));
+    }
+    out.push_str(&format!("],\"total\":{}}}", findings.len()));
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping() {
+        let f = vec![Finding {
+            rule: "serving-path-panic",
+            file: "a\\b.rs".to_string(),
+            line: 3,
+            message: "uses \"quotes\"".to_string(),
+        }];
+        let j = render_json(&f);
+        assert!(j.contains(r#""file":"a\\b.rs""#), "{j}");
+        assert!(j.contains(r#"uses \"quotes\""#), "{j}");
+        assert!(j.ends_with(",\"total\":1}"), "{j}");
+    }
+
+    #[test]
+    fn empty_run_renders_empty() {
+        assert_eq!(render_table(&[]), "");
+        assert_eq!(render_json(&[]), "{\"findings\":[],\"total\":0}");
+    }
+}

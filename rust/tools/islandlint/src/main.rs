@@ -1,0 +1,97 @@
+//! islandlint CLI.
+//!
+//! ```text
+//! islandlint [ROOT] [--deny] [--json] [--rule NAME]...
+//! ```
+//!
+//! ROOT defaults to the workspace's `rust/src` (resolved relative to the
+//! current directory, then to the crate's own manifest, so both
+//! `cargo run -p islandlint` from the workspace root and the installed
+//! binary find the tree). Exit status: 0 when clean or when findings exist
+//! without `--deny`; 2 on findings under `--deny`; 1 on usage/IO errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut deny = false;
+    let mut json = false;
+    let mut only: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--deny" => deny = true,
+            "--json" => json = true,
+            "--rule" => match args.next() {
+                Some(r) if islandlint::rules::RULES.contains(&r.as_str()) => only.push(r),
+                Some(r) => {
+                    eprintln!(
+                        "islandlint: unknown rule {r:?} (known: {})",
+                        islandlint::rules::RULES.join(", ")
+                    );
+                    return ExitCode::from(1);
+                }
+                None => {
+                    eprintln!("islandlint: --rule needs a rule name");
+                    return ExitCode::from(1);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: islandlint [ROOT] [--deny] [--json] [--rule NAME]...");
+                println!("rules: {}", islandlint::rules::RULES.join(", "));
+                return ExitCode::SUCCESS;
+            }
+            _ if root.is_none() && !arg.starts_with('-') => root = Some(PathBuf::from(arg)),
+            _ => {
+                eprintln!("islandlint: unexpected argument {arg:?}");
+                return ExitCode::from(1);
+            }
+        }
+    }
+
+    let root = match root.or_else(default_root) {
+        Some(r) => r,
+        None => {
+            eprintln!("islandlint: could not locate rust/src; pass the tree root explicitly");
+            return ExitCode::from(1);
+        }
+    };
+    let tree = match islandlint::load_tree(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("islandlint: failed to read {}: {e}", root.display());
+            return ExitCode::from(1);
+        }
+    };
+
+    let findings = islandlint::run(&tree, &only);
+    if json {
+        println!("{}", islandlint::render_json(&findings));
+    } else if findings.is_empty() {
+        println!(
+            "islandlint: clean — {} files, {} suppressions with written reasons",
+            tree.files.len(),
+            islandlint::suppression_count(&tree)
+        );
+    } else {
+        print!("{}", islandlint::render_table(&findings));
+        println!("islandlint: {} finding(s)", findings.len());
+    }
+    if deny && !findings.is_empty() {
+        return ExitCode::from(2);
+    }
+    ExitCode::SUCCESS
+}
+
+/// `rust/src` relative to the current directory, the crate manifest
+/// (`tools/islandlint` → workspace `rust/src`), or `src` when run from
+/// inside `rust/`.
+fn default_root() -> Option<PathBuf> {
+    let candidates = [
+        PathBuf::from("rust/src"),
+        PathBuf::from("src"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../src"),
+    ];
+    candidates.into_iter().find(|p| p.is_dir())
+}

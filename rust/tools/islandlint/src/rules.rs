@@ -1,0 +1,652 @@
+//! The five project-invariant rules.
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | R1 `serving-path-panic`    | no panicking constructs in non-test serving code |
+//! | R2 `lock-across-blocking`  | no lock guard held across a blocking call |
+//! | R3 `metric-registration`   | metric-name literals must be pre-registered and exposition-safe |
+//! | R4 `resolution-coverage`   | every Resolution-family variant has a terminal site and a test |
+//! | R5 `trust-boundary-text`   | island-bound text is dispatched only by sanitize-owning modules |
+//!
+//! Every rule works on the blanked code view (strings and comments cannot
+//! produce findings), skips `#[cfg(test)]` spans where the invariant is
+//! test-only noise, and honors `// islandlint: allow(rule) -- reason`
+//! suppressions.
+
+use crate::scopes::{close_delim, find_from, find_word, in_spans, is_ident_byte, line_of, skip_ws};
+use crate::suppress::suppressed;
+use crate::{Finding, SourceFile, Tree};
+
+/// Directories that make up the serving path, relative to the scan root.
+pub const SERVING_DIRS: [&str; 6] =
+    ["server/", "runtime/", "telemetry/", "agents/", "islands/", "substrate/"];
+
+pub const RULES: [&str; 5] = [
+    "serving-path-panic",
+    "lock-across-blocking",
+    "metric-registration",
+    "resolution-coverage",
+    "trust-boundary-text",
+];
+
+fn serving(rel: &str) -> bool {
+    SERVING_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+fn lines_of(f: &SourceFile) -> Vec<&str> {
+    f.src.split('\n').collect()
+}
+
+/// Next non-whitespace byte after `pos` equals `want`?
+fn next_is(code: &str, pos: usize, want: u8) -> bool {
+    let j = skip_ws(code, pos);
+    j < code.len() && code.as_bytes()[j] == want
+}
+
+// ---------------------------------------------------------------- R1 ----
+
+/// Panicking constructs denied on the serving path: `.unwrap()`,
+/// `.expect(...)`, `panic!`, `todo!`, `unimplemented!`. Indexing (`x[i]`)
+/// is intentionally out of scope: the tree indexes fixed-shape data behind
+/// validated invariants, and a byte-level heuristic cannot tell those from
+/// adjacent panics without drowning the signal.
+pub fn r1(tree: &Tree) -> Vec<Finding> {
+    const RULE: &str = "serving-path-panic";
+    let mut out = Vec::new();
+    for f in &tree.files {
+        if !serving(&f.rel) {
+            continue;
+        }
+        let lines = lines_of(f);
+        let mut hits: Vec<(usize, &str)> = Vec::new();
+        for method in [".unwrap", ".expect"] {
+            for p in method_calls(&f.code, method) {
+                hits.push((p, method));
+            }
+        }
+        for mac in ["panic", "todo", "unimplemented"] {
+            for p in find_word(&f.code, mac) {
+                let b = f.code.as_bytes();
+                let after = p + mac.len();
+                if after < b.len() && b[after] == b'!' {
+                    let j = skip_ws(&f.code, after + 1);
+                    if j < b.len() && (b[j] == b'(' || b[j] == b'{') {
+                        hits.push((p, mac));
+                    }
+                }
+            }
+        }
+        hits.sort_unstable();
+        for (p, what) in hits {
+            if in_spans(p, &f.test_spans) {
+                continue;
+            }
+            let line = line_of(&f.src, p);
+            if suppressed(&lines, line, RULE) {
+                continue;
+            }
+            out.push(Finding {
+                rule: RULE,
+                file: f.rel.clone(),
+                line,
+                message: format!("`{what}` can panic on the serving path; return a typed error instead"),
+            });
+        }
+    }
+    out
+}
+
+/// Occurrences of `.name` followed (modulo whitespace) by `(`, where `name`
+/// is a whole identifier (`.unwrap_or(` does not match `.unwrap`).
+fn method_calls(code: &str, dot_name: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = find_from(code, dot_name, from) {
+        from = p + 1;
+        let after = p + dot_name.len();
+        if after < b.len() && is_ident_byte(b[after]) {
+            continue;
+        }
+        if next_is(code, after, b'(') {
+            out.push(p);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R2 ----
+
+/// Blocking calls a guard must not be held across. `(needle,
+/// requires_empty_args)`: `.join()` only blocks with no arguments
+/// (`v.join(", ")` is string joining), same for `.recv()` / `.accept()`.
+const BLOCKING_METHODS: [(&str, bool); 9] = [
+    (".wait", false),
+    (".wait_timeout", false),
+    (".wait_while", false),
+    (".recv_timeout", false),
+    (".read_exact", false),
+    (".write_all", false),
+    (".recv", true),
+    (".join", true),
+    (".accept", true),
+];
+const BLOCKING_FNS: [&str; 4] = ["cond_wait", "cond_wait_while", "cond_wait_timeout", "sleep"];
+
+/// Initializer suffixes that produce a lock guard (whitespace-normalized).
+const GUARD_SUFFIXES: [&str; 9] = [
+    ".lock_clean()",
+    ".read_clean()",
+    ".write_clean()",
+    ".lock().unwrap()",
+    ".read().unwrap()",
+    ".write().unwrap()",
+    ".lock()?",
+    ".read()?",
+    ".write()?",
+];
+
+/// A `let guard = ….lock…()` binding whose scope contains a blocking call
+/// before the guard drops. The guard being *passed to* the blocking call is
+/// the condvar handoff idiom and is exempt; so is anything after an
+/// explicit `drop(guard)`.
+pub fn r2(tree: &Tree) -> Vec<Finding> {
+    const RULE: &str = "lock-across-blocking";
+    let mut out = Vec::new();
+    for f in &tree.files {
+        if !serving(&f.rel) {
+            continue;
+        }
+        let lines = lines_of(f);
+        for p in find_word(&f.code, "let") {
+            if in_spans(p, &f.test_spans) {
+                continue;
+            }
+            let Some((name, stmt_end)) = parse_guard_binding(&f.code, p) else { continue };
+            // scope: from the end of the statement to the close of the
+            // enclosing block
+            let b = f.code.as_bytes();
+            let mut depth = 0i32;
+            let mut j = stmt_end;
+            let mut scope_end = b.len();
+            while j < b.len() {
+                match b[j] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth < 0 {
+                            scope_end = j;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            let mut scope = &f.code[stmt_end..scope_end];
+            let scope_base = stmt_end;
+            if let Some(d) = find_drop(scope, &name) {
+                scope = &scope[..d];
+            }
+            if let Some((at, what)) = first_blocking(scope, &name) {
+                let line = line_of(&f.src, scope_base + at);
+                let guard_line = line_of(&f.src, p);
+                if suppressed(&lines, line, RULE) || suppressed(&lines, guard_line, RULE) {
+                    continue;
+                }
+                out.push(Finding {
+                    rule: RULE,
+                    file: f.rel.clone(),
+                    line,
+                    message: format!(
+                        "guard `{name}` (bound on line {guard_line}) is held across blocking `{what}`"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// If the `let` at `let_pos` binds a lock guard, return (name, end-of-stmt).
+fn parse_guard_binding(code: &str, let_pos: usize) -> Option<(String, usize)> {
+    let b = code.as_bytes();
+    let mut j = skip_ws(code, let_pos + 3);
+    // optional `mut`
+    if code[j..].starts_with("mut") && j + 3 < b.len() && !is_ident_byte(b[j + 3]) {
+        j = skip_ws(code, j + 3);
+    }
+    // simple identifier pattern only (destructuring never binds a bare guard)
+    let start = j;
+    while j < b.len() && is_ident_byte(b[j]) {
+        j += 1;
+    }
+    if j == start {
+        return None;
+    }
+    let name = code[start..j].to_string();
+    j = skip_ws(code, j);
+    if j >= b.len() {
+        return None;
+    }
+    // optional `: Type` annotation up to `=`
+    if b[j] == b':' {
+        while j < b.len() && b[j] != b'=' && b[j] != b';' && b[j] != b'{' {
+            j += 1;
+        }
+    }
+    if j >= b.len() || b[j] != b'=' || (j + 1 < b.len() && b[j + 1] == b'=') {
+        return None;
+    }
+    // initializer runs to `;`; bail on `{` (closures/blocks — not a simple
+    // guard acquisition)
+    let init_start = j + 1;
+    let mut k = init_start;
+    while k < b.len() {
+        match b[k] {
+            b';' => break,
+            b'{' => return None,
+            _ => k += 1,
+        }
+    }
+    if k >= b.len() {
+        return None;
+    }
+    let normalized: String =
+        code[init_start..k].chars().filter(|c| !c.is_whitespace()).collect();
+    if GUARD_SUFFIXES.iter().any(|s| normalized.ends_with(s)) {
+        Some((name, k + 1))
+    } else {
+        None
+    }
+}
+
+fn find_drop(scope: &str, name: &str) -> Option<usize> {
+    for p in find_word(scope, "drop") {
+        let open = skip_ws(scope, p + 4);
+        if open < scope.len() && scope.as_bytes()[open] == b'(' {
+            let inner = skip_ws(scope, open + 1);
+            let boundary_ok =
+                scope.as_bytes().get(inner + name.len()).map_or(true, |&c| !is_ident_byte(c));
+            if scope[inner..].starts_with(name) && boundary_ok {
+                return Some(p);
+            }
+        }
+    }
+    None
+}
+
+/// First blocking call in `scope` that does not receive `name` as an
+/// argument, as (offset, matched call).
+fn first_blocking(scope: &str, name: &str) -> Option<(usize, String)> {
+    let mut best: Option<(usize, String)> = None;
+    let b = scope.as_bytes();
+    let mut consider = |p: usize, what: &str, open: usize| {
+        let close = close_delim(scope, open, b'(', b')');
+        let args = &scope[open + 1..close.saturating_sub(1).max(open + 1)];
+        if find_word(args, name).is_empty() {
+            if best.as_ref().map(|(bp, _)| p < *bp).unwrap_or(true) {
+                best = Some((p, what.to_string()));
+            }
+        }
+    };
+    for (needle, empty_only) in BLOCKING_METHODS {
+        for p in method_calls(scope, needle) {
+            let open = skip_ws(scope, p + needle.len());
+            if empty_only {
+                let inner = skip_ws(scope, open + 1);
+                if inner >= b.len() || b[inner] != b')' {
+                    continue;
+                }
+            }
+            consider(p, needle, open);
+        }
+    }
+    for fnname in BLOCKING_FNS {
+        for p in find_word(scope, fnname) {
+            // function position: not a method call on some receiver
+            if p > 0 && b[p - 1] == b'.' {
+                continue;
+            }
+            let after = p + fnname.len();
+            if !next_is(scope, after, b'(') {
+                continue;
+            }
+            let open = skip_ws(scope, after);
+            consider(p, fnname, open);
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------- R3 ----
+
+const REGISTER_FNS: [&str; 6] = [
+    "register_counter",
+    "counter_vec",
+    "register_gauge",
+    "gauge_vec",
+    "register_histogram",
+    "histogram_vec",
+];
+const BUMP_FNS: [&str; 8] = [
+    ".count",
+    ".gauge",
+    ".observe",
+    ".counter_value",
+    ".gauge_value",
+    ".histogram",
+    ".counter_children",
+    ".histogram_children",
+];
+const RESERVED_SUFFIXES: [&str; 4] = ["_total", "_bucket", "_sum", "_count"];
+
+/// Metric-name literals must be pre-registered (or be a declared
+/// `HTTP_ROUTES` route, for the HTTP per-route observe path), and
+/// registered names must survive the Prometheus renderer: valid charset,
+/// no reserved `_total`/`_bucket`/`_sum`/`_count` suffix that would collide
+/// with generated sample names (`telemetry::lint_exposition` enforces the
+/// same rule on the rendered text).
+pub fn r3(tree: &Tree) -> Vec<Finding> {
+    const RULE: &str = "metric-registration";
+    let mut out = Vec::new();
+    let mut registered: Vec<String> = Vec::new();
+    for f in &tree.files {
+        for fnname in REGISTER_FNS {
+            for p in find_word(&f.nostr, fnname) {
+                if let Some(name) = first_literal_arg(&f.nostr, p + fnname.len()) {
+                    registered.push(name);
+                }
+            }
+        }
+        // HTTP_ROUTES route names count as registered label values for the
+        // per-route HTTP observe path
+        for p in find_word(&f.nostr, "HTTP_ROUTES") {
+            if let Some(open) = find_from(&f.nostr, "[", p) {
+                if let Some(open) = find_from(&f.nostr, "[", open + 1) {
+                    let close = close_delim(&f.nostr, open, b'[', b']');
+                    registered.extend(literals_in(&f.nostr[open..close]));
+                }
+            }
+        }
+    }
+    for f in &tree.files {
+        let lines = lines_of(f);
+        for fnname in REGISTER_FNS {
+            for p in find_word(&f.nostr, fnname) {
+                let Some(name) = first_literal_arg(&f.nostr, p + fnname.len()) else { continue };
+                let line = line_of(&f.src, p);
+                if !valid_metric_name(&name) && !suppressed(&lines, line, RULE) {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: f.rel.clone(),
+                        line,
+                        message: format!("metric name {name:?} violates prometheus naming rules"),
+                    });
+                }
+                if let Some(suf) = RESERVED_SUFFIXES.iter().find(|s| name.ends_with(**s)) {
+                    if !suppressed(&lines, line, RULE) {
+                        out.push(Finding {
+                            rule: RULE,
+                            file: f.rel.clone(),
+                            line,
+                            message: format!(
+                                "metric name {name:?} ends in reserved suffix `{suf}` and would collide with generated exposition samples"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        if !serving(&f.rel) {
+            continue;
+        }
+        for fnname in BUMP_FNS {
+            for p in find_word(&f.nostr, &fnname[1..]) {
+                if p == 0 || f.nostr.as_bytes()[p - 1] != b'.' {
+                    continue;
+                }
+                if in_spans(p, &f.test_spans) {
+                    continue;
+                }
+                let Some(name) = first_literal_arg(&f.nostr, p + fnname.len() - 1) else { continue };
+                if registered.iter().any(|r| r == &name) {
+                    continue;
+                }
+                let line = line_of(&f.src, p);
+                if suppressed(&lines, line, RULE) {
+                    continue;
+                }
+                out.push(Finding {
+                    rule: RULE,
+                    file: f.rel.clone(),
+                    line,
+                    message: format!(
+                        "metric {name:?} bumped or read via `{fnname}` without a pre-registered handle"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// If the call at `after_name` opens with a string literal, return it.
+fn first_literal_arg(nostr: &str, after_name: usize) -> Option<String> {
+    let b = nostr.as_bytes();
+    let open = skip_ws(nostr, after_name);
+    if open >= b.len() || b[open] != b'(' {
+        return None;
+    }
+    let q = skip_ws(nostr, open + 1);
+    if q >= b.len() || b[q] != b'"' {
+        return None;
+    }
+    let mut j = q + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return Some(nostr[q + 1..j].to_string()),
+            _ => j += 1,
+        }
+    }
+    None
+}
+
+fn literals_in(nostr: &str) -> Vec<String> {
+    let b = nostr.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'"' {
+            let mut j = i + 1;
+            while j < b.len() && b[j] != b'"' {
+                if b[j] == b'\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            if j < b.len() {
+                out.push(nostr[i + 1..j].to_string());
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+// ---------------------------------------------------------------- R4 ----
+
+const RESOLUTION_ENUMS: [&str; 4] = ["ShedReason", "CancelPoint", "FailReason", "Resolution"];
+
+/// Every variant of the Resolution enum family must appear at a terminal
+/// site (non-test `server/` code) and in at least one test assertion (a
+/// `#[cfg(test)]` span or the integration-test tree).
+pub fn r4(tree: &Tree) -> Vec<Finding> {
+    const RULE: &str = "resolution-coverage";
+    let mut out = Vec::new();
+    let Some(res) = tree.files.iter().find(|f| f.rel == "server/resolution.rs") else {
+        return out; // nothing to check in trees without the enum family
+    };
+    let res_lines = lines_of(res);
+    let mut variants: Vec<(&str, String, usize)> = Vec::new();
+    for e in RESOLUTION_ENUMS {
+        for (v, off) in enum_variants(&res.code, e) {
+            variants.push((e, v, off));
+        }
+    }
+    for (enum_name, variant, def_off) in variants {
+        let mut terminal = 0usize;
+        let mut tested = 0usize;
+        for f in &tree.files {
+            if f.rel == "server/resolution.rs" {
+                continue;
+            }
+            for p in find_word(&f.code, &variant) {
+                if in_spans(p, &f.test_spans) {
+                    tested += 1;
+                } else if f.rel.starts_with("server/") {
+                    terminal += 1;
+                }
+            }
+        }
+        for f in &tree.test_files {
+            tested += find_word(&f.code, &variant).len();
+        }
+        let line = line_of(&res.src, def_off);
+        if suppressed(&res_lines, line, RULE) {
+            continue;
+        }
+        if terminal == 0 {
+            out.push(Finding {
+                rule: RULE,
+                file: res.rel.clone(),
+                line,
+                message: format!("{enum_name}::{variant} has no terminal site in non-test server/ code"),
+            });
+        }
+        if tested == 0 {
+            out.push(Finding {
+                rule: RULE,
+                file: res.rel.clone(),
+                line,
+                message: format!("{enum_name}::{variant} is never named in a test assertion"),
+            });
+        }
+    }
+    out
+}
+
+/// `(variant, byte offset)` list for `enum name { ... }` in the code view.
+fn enum_variants(code: &str, name: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for p in find_word(code, "enum") {
+        let after = skip_ws(code, p + 4);
+        if !code[after..].starts_with(name) {
+            continue;
+        }
+        let post = after + name.len();
+        if post < code.len() && is_ident_byte(code.as_bytes()[post]) {
+            continue;
+        }
+        let Some(open) = find_from(code, "{", post) else { continue };
+        let close = close_delim(code, open, b'{', b'}');
+        let body = &code[open + 1..close.saturating_sub(1)];
+        // split on depth-0 commas, take the first identifier of each chunk
+        let mut depth = 0i32;
+        let mut chunk_start = 0usize;
+        let bytes = body.as_bytes();
+        let mut chunks = Vec::new();
+        for (i, &b) in bytes.iter().enumerate() {
+            match b {
+                b'(' | b'{' | b'[' | b'<' => depth += 1,
+                b')' | b'}' | b']' | b'>' => depth -= 1,
+                b',' if depth == 0 => {
+                    chunks.push((chunk_start, i));
+                    chunk_start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        chunks.push((chunk_start, body.len()));
+        for (s, e) in chunks {
+            let chunk = &body[s..e];
+            let cb = chunk.as_bytes();
+            let mut i = 0;
+            while i < cb.len() && !is_ident_byte(cb[i]) {
+                i += 1;
+            }
+            let start = i;
+            while i < cb.len() && is_ident_byte(cb[i]) {
+                i += 1;
+            }
+            if start < i && chunk[start..].chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                out.push((chunk[start..i].to_string(), open + 1 + s + start));
+            }
+        }
+        break;
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R5 ----
+
+/// Modules allowed to construct and dispatch island-bound text: the
+/// orchestrator (which owns `sanitize_for_target`) and the island layer it
+/// hands sanitized requests to.
+pub const TRUST_ALLOWED: [&str; 2] = ["server/orchestrator.rs", "islands/"];
+const DISPATCH_METHODS: [&str; 4] = [".prefill", ".execute_batch", ".execute", ".generate"];
+
+/// Island-bound request/prefill dispatch outside the sanitize-owning
+/// modules. Any new call path that hands text to an island must route
+/// through the orchestrator's sanitize chokepoint first.
+pub fn r5(tree: &Tree) -> Vec<Finding> {
+    const RULE: &str = "trust-boundary-text";
+    let mut out = Vec::new();
+    for f in &tree.files {
+        if !serving(&f.rel) || TRUST_ALLOWED.iter().any(|a| f.rel.starts_with(a)) {
+            continue;
+        }
+        let lines = lines_of(f);
+        let mut hits: Vec<(usize, String)> = Vec::new();
+        for m in DISPATCH_METHODS {
+            for p in method_calls(&f.code, m) {
+                hits.push((p, format!("{m}(...)")));
+            }
+        }
+        for p in find_word(&f.code, "sanitize_for_target") {
+            hits.push((p, "sanitize_for_target".to_string()));
+        }
+        hits.sort_unstable_by_key(|(p, _)| *p);
+        for (p, what) in hits {
+            if in_spans(p, &f.test_spans) {
+                continue;
+            }
+            let line = line_of(&f.src, p);
+            if suppressed(&lines, line, RULE) {
+                continue;
+            }
+            out.push(Finding {
+                rule: RULE,
+                file: f.rel.clone(),
+                line,
+                message: format!(
+                    "island-bound dispatch `{what}` outside sanitize-owning modules ({})",
+                    TRUST_ALLOWED.join(", ")
+                ),
+            });
+        }
+    }
+    out
+}

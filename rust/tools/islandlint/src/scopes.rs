@@ -1,0 +1,132 @@
+//! Brace-scope helpers over the blanked code view: locating
+//! `#[cfg(test)]` / `#[test]` item spans, matching delimiters, and mapping
+//! byte offsets back to 1-based line numbers.
+
+/// Byte spans of test-gated items: each `#[cfg(test)]`, `#[cfg(all(test`,
+/// or `#[test]` attribute plus the brace-matched item that follows it
+/// (or up to the `;` for item declarations like `#[cfg(test)] use ...;`).
+pub fn test_spans(code: &str) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    for needle in ["#[cfg(test)]", "#[cfg(all(test", "#[test]"] {
+        let mut from = 0;
+        while let Some(p) = find_from(code, needle, from) {
+            from = p + needle.len();
+            let b = code.as_bytes();
+            let mut j = p + needle.len();
+            while j < b.len() {
+                match b[j] {
+                    b'{' => {
+                        let end = close_delim(code, j, b'{', b'}');
+                        spans.push((p, end));
+                        break;
+                    }
+                    b';' => {
+                        spans.push((p, j));
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+        }
+    }
+    spans
+}
+
+pub fn in_spans(pos: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(s, e)| s <= pos && pos < e)
+}
+
+/// 1-based line number of byte offset `pos`.
+pub fn line_of(src: &str, pos: usize) -> usize {
+    src.as_bytes()[..pos.min(src.len())].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// Byte offset one past the delimiter closing the one at `open_pos`.
+/// Call on the blanked code view only (no delimiters inside literals).
+pub fn close_delim(code: &str, open_pos: usize, open: u8, close: u8) -> usize {
+    let b = code.as_bytes();
+    let mut depth = 1usize;
+    let mut j = open_pos + 1;
+    while j < b.len() && depth > 0 {
+        if b[j] == open {
+            depth += 1;
+        } else if b[j] == close {
+            depth -= 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+/// First occurrence of `needle` in `hay[from..]`, as an absolute offset.
+pub fn find_from(hay: &str, needle: &str, from: usize) -> Option<usize> {
+    if from >= hay.len() {
+        return None;
+    }
+    hay[from..].find(needle).map(|p| p + from)
+}
+
+/// Is this byte part of an identifier? Multi-byte UTF-8 continuation and
+/// start bytes count as identifier bytes so `née.unwrap…`-style identifiers
+/// never produce false word boundaries.
+pub fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric() || b >= 0x80
+}
+
+/// Occurrences of `word` in `code` bounded by non-identifier bytes.
+pub fn find_word(code: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = find_from(code, word, from) {
+        from = p + 1;
+        let before_ok = p == 0 || !is_ident_byte(b[p - 1]);
+        let after = p + word.len();
+        let after_ok = after >= b.len() || !is_ident_byte(b[after]);
+        if before_ok && after_ok {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Offset of the first non-whitespace byte at or after `from`.
+pub fn skip_ws(code: &str, from: usize) -> usize {
+    let b = code.as_bytes();
+    let mut j = from;
+    while j < b.len() && b[j].is_ascii_whitespace() {
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::blank;
+
+    #[test]
+    fn test_mod_span_covers_body() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n  fn helper() { x.unwrap(); }\n}\n";
+        let code = blank(src, false);
+        let spans = test_spans(&code);
+        assert_eq!(spans.len(), 1);
+        let unwrap_at = code.find(".unwrap").unwrap();
+        assert!(in_spans(unwrap_at, &spans));
+        assert!(!in_spans(0, &spans));
+    }
+
+    #[test]
+    fn word_boundaries_respect_idents() {
+        let code = "a.unwrap(); a.unwrap_or(1); reunwrap();";
+        assert_eq!(find_word(code, "unwrap").len(), 1);
+    }
+
+    #[test]
+    fn lines_are_one_based() {
+        let src = "a\nb\nc";
+        assert_eq!(line_of(src, 0), 1);
+        assert_eq!(line_of(src, 2), 2);
+        assert_eq!(line_of(src, 4), 3);
+    }
+}

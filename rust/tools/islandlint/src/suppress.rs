@@ -1,0 +1,114 @@
+//! Suppression comments.
+//!
+//! A finding is suppressed by
+//! `// islandlint: allow(<rule>) -- <reason>` either on the finding's own
+//! line or anywhere in the contiguous `//` comment block immediately above
+//! it. The reason is mandatory: a reasonless `allow(...)` never suppresses
+//! anything and is itself reported (rule `bad-suppression`), so `--deny`
+//! cannot pass on silent waivers.
+
+use crate::Finding;
+
+const TAG: &str = "islandlint: allow(";
+
+/// Does line `line` (1-based) of the raw source carry or inherit a
+/// well-formed suppression for `rule`?
+pub fn suppressed(lines: &[&str], line: usize, rule: &str) -> bool {
+    if line == 0 || line > lines.len() {
+        return false;
+    }
+    if line_allows(lines[line - 1], rule) {
+        return true;
+    }
+    // walk the contiguous comment block immediately above
+    let mut i = line as isize - 2;
+    while i >= 0 && lines[i as usize].trim_start().starts_with("//") {
+        if line_allows(lines[i as usize], rule) {
+            return true;
+        }
+        i -= 1;
+    }
+    false
+}
+
+fn line_allows(line: &str, rule: &str) -> bool {
+    match parse_allow(line) {
+        Some((r, reason)) => r == rule && !reason.is_empty(),
+        None => false,
+    }
+}
+
+/// `Some((rule, reason))` if the line contains an allow tag at all — the
+/// reason is empty when missing, which callers treat as malformed.
+fn parse_allow(line: &str) -> Option<(&str, &str)> {
+    let at = line.find(TAG)?;
+    let rest = &line[at + TAG.len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim();
+    let after = rest[close + 1..].trim_start();
+    let reason = after.strip_prefix("--").map(str::trim).unwrap_or("");
+    Some((rule, reason))
+}
+
+/// Report every suppression in the file that names an unknown rule or
+/// carries no written reason. Runs over all files regardless of directory:
+/// a broken waiver is a lie wherever it sits.
+pub fn malformed(rel: &str, lines: &[&str], known_rules: &[&str]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let Some((rule, reason)) = parse_allow(line) else { continue };
+        if !known_rules.contains(&rule) {
+            out.push(Finding {
+                rule: "bad-suppression",
+                file: rel.to_string(),
+                line: idx + 1,
+                message: format!("allow({rule}) names an unknown rule"),
+            });
+        } else if reason.is_empty() {
+            out.push(Finding {
+                rule: "bad-suppression",
+                file: rel.to_string(),
+                line: idx + 1,
+                message: format!("allow({rule}) has no written reason (`-- why`)"),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_line_and_block_above() {
+        let lines = [
+            "// islandlint: allow(serving-path-panic) -- boot-time only",
+            "// second comment line",
+            "x.unwrap();",
+            "y.unwrap(); // islandlint: allow(serving-path-panic) -- test fixture",
+            "z.unwrap();",
+        ];
+        assert!(suppressed(&lines, 3, "serving-path-panic"));
+        assert!(suppressed(&lines, 4, "serving-path-panic"));
+        assert!(!suppressed(&lines, 5, "serving-path-panic"));
+        assert!(!suppressed(&lines, 3, "lock-across-blocking"));
+    }
+
+    #[test]
+    fn reasonless_allow_does_not_suppress() {
+        let lines = ["// islandlint: allow(serving-path-panic)", "x.unwrap();"];
+        assert!(!suppressed(&lines, 2, "serving-path-panic"));
+        let bad = malformed("f.rs", &lines, &["serving-path-panic"]);
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].message.contains("no written reason"));
+    }
+
+    #[test]
+    fn unknown_rule_is_flagged() {
+        let lines = ["// islandlint: allow(made-up) -- because"];
+        let bad = malformed("f.rs", &lines, &["serving-path-panic"]);
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].message.contains("unknown rule"));
+    }
+}

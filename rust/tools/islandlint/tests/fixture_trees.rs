@@ -1,0 +1,106 @@
+//! Rule-engine acceptance over the fixture corpora: every rule fires on
+//! its seeded violations and stays quiet on the clean tree.
+
+use std::path::Path;
+
+fn tree(which: &str) -> islandlint::Tree {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(which);
+    islandlint::load_tree(&root).expect("fixture tree loads")
+}
+
+fn count(findings: &[islandlint::Finding], rule: &str) -> usize {
+    findings.iter().filter(|f| f.rule == rule).count()
+}
+
+#[test]
+fn clean_tree_is_clean() {
+    let findings = islandlint::run(&tree("clean"), &[]);
+    assert!(
+        findings.is_empty(),
+        "clean fixture tree must produce no findings:\n{}",
+        islandlint::render_table(&findings)
+    );
+}
+
+#[test]
+fn violating_tree_fires_every_rule() {
+    let findings = islandlint::run(&tree("violating"), &[]);
+
+    // R1: unwrap/expect/panic!/todo!/unimplemented! in panics.rs, plus the
+    // reasonless-allow unwrap in waived.rs; decoys and test code stay quiet
+    assert_eq!(count(&findings, "serving-path-panic"), 6, "{}", islandlint::render_table(&findings));
+    let r1_files: Vec<&str> = findings
+        .iter()
+        .filter(|f| f.rule == "serving-path-panic")
+        .map(|f| f.file.as_str())
+        .collect();
+    assert!(r1_files.contains(&"server/panics.rs"));
+    assert!(r1_files.contains(&"server/waived.rs"), "reasonless allow must not suppress");
+
+    // R2: guard across recv, guard across sleep
+    assert_eq!(count(&findings, "lock-across-blocking"), 2, "{}", islandlint::render_table(&findings));
+    assert!(findings
+        .iter()
+        .any(|f| f.rule == "lock-across-blocking" && f.message.contains("`.recv`")));
+    assert!(findings
+        .iter()
+        .any(|f| f.rule == "lock-across-blocking" && f.message.contains("`sleep`")));
+
+    // R3: bad charset, reserved suffix, unregistered bump
+    assert_eq!(count(&findings, "metric-registration"), 3, "{}", islandlint::render_table(&findings));
+    assert!(findings.iter().any(|f| f.message.contains("\"bad-name\"")));
+    assert!(findings.iter().any(|f| f.message.contains("reserved suffix")));
+    assert!(findings.iter().any(|f| f.message.contains("\"never_registered\"")));
+
+    // R4: Ghost has neither a terminal site nor a test assertion
+    assert_eq!(count(&findings, "resolution-coverage"), 2, "{}", islandlint::render_table(&findings));
+    assert!(findings
+        .iter()
+        .all(|f| f.rule != "resolution-coverage" || f.message.contains("ShedReason::Ghost")));
+
+    // R5: .execute / .generate / sanitize_for_target outside allowed modules
+    assert_eq!(count(&findings, "trust-boundary-text"), 3, "{}", islandlint::render_table(&findings));
+    assert!(findings
+        .iter()
+        .all(|f| f.rule != "trust-boundary-text" || f.file == "runtime/dispatch.rs"));
+
+    // malformed suppressions: reasonless + unknown rule
+    assert_eq!(count(&findings, "bad-suppression"), 2, "{}", islandlint::render_table(&findings));
+}
+
+#[test]
+fn rule_selection_filters_findings() {
+    let t = tree("violating");
+    let only = vec!["serving-path-panic".to_string()];
+    let findings = islandlint::run(&t, &only);
+    // bad-suppression always runs; the other four rules are off
+    assert!(findings.iter().all(|f| f.rule == "serving-path-panic" || f.rule == "bad-suppression"));
+    assert_eq!(count(&findings, "serving-path-panic"), 6);
+}
+
+#[test]
+fn suppressions_round_trip() {
+    // Each violating finding disappears when the exact rule is allowed with
+    // a reason on the preceding line, and survives a mismatched rule name.
+    let src = "\
+// islandlint: allow(serving-path-panic) -- fixture waiver
+pub fn a(v: Option<u8>) -> u8 { v.unwrap() }
+pub fn b(v: Option<u8>) -> u8 { v.unwrap() }
+";
+    let tree = islandlint::Tree {
+        files: vec![islandlint::SourceFile::parse("server/x.rs".to_string(), src.to_string())],
+        test_files: vec![],
+    };
+    let findings = islandlint::run(&tree, &[]);
+    assert_eq!(findings.len(), 1, "{}", islandlint::render_table(&findings));
+    assert_eq!(findings[0].line, 3, "only the unwaived line fires");
+}
+
+#[test]
+fn json_output_is_stable() {
+    let findings = islandlint::run(&tree("violating"), &["resolution-coverage".to_string()]);
+    let json = islandlint::render_json(&findings);
+    assert!(json.starts_with("{\"findings\":["));
+    assert!(json.contains("\"rule\":\"resolution-coverage\""));
+    assert!(json.contains("\"file\":\"server/resolution.rs\""));
+}

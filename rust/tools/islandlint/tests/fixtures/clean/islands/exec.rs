@@ -1,0 +1,6 @@
+//! The island layer is allow-listed for dispatch: it receives requests
+//! already sanitized by the orchestrator chokepoint.
+
+pub fn run(fleet: &Fleet, req: &Request) -> Response {
+    fleet.execute(req.target, req)
+}

@@ -1,0 +1,60 @@
+//! Clean serving code: every rule's "stays quiet" side.
+//!
+//! Covers the condvar handoff exemption, drop-before-blocking, a
+//! suppressed boot-time panic with a written reason, raw-string and
+//! comment decoys, and terminal sites plus test assertions for every
+//! resolution variant.
+
+use crate::util::sync::{cond_wait, LockExt};
+
+pub fn resolve(r: Resolution) -> &'static str {
+    match r {
+        Resolution::Served => "served",
+        Resolution::Shed(ShedReason::QueueFull) => "queue_full",
+    }
+}
+
+pub struct Waiter {
+    state: std::sync::Mutex<u64>,
+    cond: std::sync::Condvar,
+}
+
+impl Waiter {
+    /// Handing the guard to the condvar is the sanctioned blocking idiom.
+    pub fn bump_and_wait(&self) -> u64 {
+        let guard = self.state.lock_clean();
+        let guard = cond_wait(&self.cond, guard);
+        *guard
+    }
+
+    /// Dropping the guard before blocking is always fine.
+    pub fn peek_then_sleep(&self) -> u64 {
+        let guard = self.state.lock_clean();
+        let v = *guard;
+        drop(guard);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        v
+    }
+}
+
+pub fn boot_pattern() -> Regex {
+    // islandlint: allow(serving-path-panic) -- fixture: constant pattern compiled once at boot, covered by unit tests
+    Regex::new("^ok$").unwrap()
+}
+
+pub fn decoys() -> usize {
+    let quiet = r##"q.unwrap() and unimplemented!() live in a raw string"##;
+    // mentioning z.expect("nope") in a comment is fine
+    quiet.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assertions_name_every_variant() {
+        assert_eq!(resolve(Resolution::Served), "served");
+        assert_eq!(resolve(Resolution::Shed(ShedReason::QueueFull)), "queue_full");
+    }
+}

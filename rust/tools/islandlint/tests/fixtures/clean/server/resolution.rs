@@ -1,0 +1,10 @@
+//! Clean-tree resolution enums: every variant is covered in `ok.rs`.
+
+pub enum ShedReason {
+    QueueFull,
+}
+
+pub enum Resolution {
+    Served,
+    Shed(ShedReason),
+}

@@ -1,0 +1,10 @@
+//! R5 seeds: island-bound dispatch outside the sanitize-owning modules.
+
+pub fn rogue(fleet: &Fleet, engine: &Engine, req: &Request) {
+    let _ = fleet.execute(req.target, req);
+    let _ = engine.generate(vec![req.prompt.clone()], 8);
+}
+
+pub fn rewrap(orch: &Orchestrator, p: &mut Prepared) {
+    let _ = orch.sanitize_for_target(p);
+}

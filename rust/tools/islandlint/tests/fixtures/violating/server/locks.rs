@@ -1,0 +1,25 @@
+//! R2 seeds: lock guards held across blocking calls.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct Q {
+    items: Mutex<Vec<u64>>,
+    cond: Condvar,
+}
+
+impl Q {
+    pub fn drain_badly(&self, rx: &std::sync::mpsc::Receiver<u64>) -> Vec<u64> {
+        let mut held = self.items.lock_clean();
+        let next = rx.recv();
+        if let Ok(v) = next {
+            held.push(v);
+        }
+        held.clone()
+    }
+
+    pub fn sleepy(&self) -> usize {
+        let held = self.items.lock_clean();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        held.len()
+    }
+}

@@ -1,0 +1,39 @@
+//! R1 seeds: every panicking construct fires once, decoys stay quiet.
+//! UTF-8 identifiers exercise the lexer's char-boundary handling.
+
+pub fn décode(café: Option<u32>) -> u32 {
+    café.unwrap()
+}
+
+pub fn strict(v: Result<u8, String>) -> u8 {
+    v.expect("boom")
+}
+
+pub fn sometimes(flag: bool) {
+    if flag {
+        panic!("fixture panic");
+    }
+}
+
+pub fn later() {
+    todo!()
+}
+
+pub fn never() {
+    unimplemented!()
+}
+
+pub fn decoys() -> usize {
+    let quiet = r#"x.unwrap() and panic!("inside a raw string")"#;
+    // a comment mentioning y.expect("nothing") also stays quiet
+    let fallback = Some(1).unwrap_or(0);
+    quiet.len() + fallback
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap() {
+        assert_eq!(Some(5).unwrap(), 5);
+    }
+}

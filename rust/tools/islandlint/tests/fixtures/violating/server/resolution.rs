@@ -1,0 +1,11 @@
+//! R4 seed: `Ghost` is declared but has no terminal site and no test.
+
+pub enum ShedReason {
+    QueueFull,
+    Ghost,
+}
+
+pub enum Resolution {
+    Served,
+    Shed(ShedReason),
+}

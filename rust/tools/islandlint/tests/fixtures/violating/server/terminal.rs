@@ -1,0 +1,20 @@
+//! Terminal sites and test assertions for every variant except `Ghost`.
+
+pub fn finish(r: Resolution) -> &'static str {
+    match r {
+        Resolution::Served => "served",
+        Resolution::Shed(ShedReason::QueueFull) => "queue_full",
+        Resolution::Shed(_) => "other",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names() {
+        assert_eq!(finish(Resolution::Served), "served");
+        assert_eq!(finish(Resolution::Shed(ShedReason::QueueFull)), "queue_full");
+    }
+}

@@ -1,0 +1,9 @@
+//! Malformed suppressions: a reasonless allow (which also fails to
+//! suppress the finding beneath it) and an allow naming an unknown rule.
+
+pub fn waived() -> String {
+    // islandlint: allow(serving-path-panic)
+    let home = std::env::var("HOME").unwrap();
+    // islandlint: allow(made-up-rule) -- this rule does not exist
+    home
+}

@@ -1,0 +1,10 @@
+//! R3 seeds: exposition-hostile names and an unregistered bump.
+
+pub fn register(m: &Metrics) {
+    m.register_counter("bad-name", "hyphens are not prometheus-legal");
+    m.register_histogram("wait_sum", "collides with generated histogram samples");
+}
+
+pub fn bump(m: &Metrics) {
+    m.count("never_registered", 1);
+}

@@ -1,0 +1,30 @@
+//! Self-check: the real `rust/src` tree is clean under `--deny` semantics.
+//!
+//! This is the test CI leans on: any new panic on the serving path, guard
+//! held across a blocking call, unregistered metric literal, uncovered
+//! resolution variant, rogue island dispatch, or reasonless suppression in
+//! the main crate fails this test before the lint job even runs.
+
+use std::path::Path;
+
+#[test]
+fn real_tree_is_clean_under_deny() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    let tree = islandlint::load_tree(&root).expect("rust/src must load");
+    assert!(tree.files.len() > 30, "expected the full source tree, found {}", tree.files.len());
+    assert!(!tree.test_files.is_empty(), "rust/tests must be visible for resolution-coverage");
+
+    let findings = islandlint::run(&tree, &[]);
+    assert!(
+        findings.is_empty(),
+        "islandlint found violations in rust/src:\n{}",
+        islandlint::render_table(&findings)
+    );
+
+    // The waivers that do exist all carry written reasons (a reasonless one
+    // would have surfaced above as bad-suppression).
+    assert!(
+        islandlint::suppression_count(&tree) >= 1,
+        "the tree documents its boot-time panic waivers"
+    );
+}
