@@ -18,6 +18,11 @@
 //! islandrun stats [--requests N] [--preset P] [--prom] [--prom-out FILE]
 //!                 [--events-out FILE]        run a short Sim workload and dump
 //!                                            telemetry (table or Prometheus)
+//! islandrun trace [--requests N] [--preset P] [--out FILE] [--chrome-out FILE]
+//!                                            run a Sim workload with trace
+//!                                            sampling forced wide open and
+//!                                            export the span trees (JSONL and
+//!                                            Chrome trace_event)
 //! islandrun help
 //! ```
 
@@ -32,6 +37,7 @@ use crate::islands::executor::IslandExecutor;
 use crate::islands::Fleet;
 use crate::runtime::Engine;
 use crate::server::{Backend, HttpConfig, HttpServer, Orchestrator, SubmitRequest};
+use crate::telemetry::traceout;
 
 /// Tiny argument scanner: positional args + `--key value` flags.
 pub struct Args {
@@ -105,6 +111,15 @@ USAGE:
                                              Prometheus text exposition (--prom);
                                              optionally write the exposition and
                                              the per-request analytics JSONL
+  islandrun trace [--requests N] [--preset P] [--out FILE] [--chrome-out FILE]
+                                             run a Sim workload with trace
+                                             sampling forced wide open, print
+                                             the sampling summary, and export
+                                             the kept span trees: one JSON
+                                             object per line (--out) and the
+                                             Chrome trace_event document
+                                             (--chrome-out, loadable in
+                                             chrome://tracing or Perfetto)
   islandrun help                             this message
 ";
 
@@ -124,6 +139,7 @@ pub fn run(argv: &[String]) -> i32 {
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("stats") => cmd_stats(&args),
+        Some("trace") => cmd_trace(&args),
         Some("help") | None => {
             print!("{HELP}");
             0
@@ -491,6 +507,69 @@ fn cmd_stats(args: &Args) -> i32 {
     0
 }
 
+/// Run a short deterministic Sim workload with trace sampling forced wide
+/// open (head rate 1.0, ring sized to the run) and export the kept span
+/// trees: JSONL via `--out` (one trace object per line, the same shape
+/// `GET /v1/traces/:id` serves) and the Chrome `trace_event` document via
+/// `--chrome-out`. Prints the sampling summary either way.
+fn cmd_trace(args: &Args) -> i32 {
+    let total: usize = args.flag("requests").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let preset_name = args.flag("preset").filter(|p| !p.is_empty()).unwrap_or("personal");
+    let Some(islands) = preset(preset_name) else {
+        eprintln!("unknown preset '{preset_name}'");
+        return 2;
+    };
+    let mut cfg = Config::default();
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    // exporting is the point of this command: keep every trace the run
+    // produces instead of the serving default's tail-sampled subset
+    cfg.trace_enabled = true;
+    cfg.trace_head_rate = 1.0;
+    cfg.trace_ring_capacity = total.max(64);
+    let orch = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(Fleet::new(islands, 7)), 7));
+    let report = run_open_loop(&orch, 2, (total + 1) / 2, 11);
+    let traces = orch.traces.snapshot();
+
+    let mut t = crate::util::Table::new("trace — request span trees (Sim, sampling wide open)", &["metric", "value"]);
+    t.row(&["requests attempted / served".into(), format!("{} / {}", report.attempted, report.served())]);
+    t.row(&["traces started".into(), orch.traces.started().to_string()]);
+    t.row(&["traces kept".into(), orch.traces.kept().to_string()]);
+    t.row(&["traces sampled out".into(), orch.traces.sampled_out().to_string()]);
+    t.row(&["ring occupancy".into(), traces.len().to_string()]);
+    if let Some(slowest) = traces.iter().max_by(|a, b| a.duration_ms().total_cmp(&b.duration_ms())) {
+        t.row(&[
+            "slowest trace".into(),
+            format!(
+                "{} {:.1}ms ({} spans, {}/{})",
+                slowest.trace_id.to_hex(),
+                slowest.duration_ms(),
+                slowest.spans.len(),
+                slowest.outcome,
+                slowest.reason
+            ),
+        ]);
+    }
+    t.print();
+    if let Some(path) = args.flag("out").filter(|p| !p.is_empty()) {
+        if let Err(e) = std::fs::write(path, traceout::to_jsonl(&traces)) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+    }
+    if let Some(path) = args.flag("chrome-out").filter(|p| !p.is_empty()) {
+        if let Err(e) = std::fs::write(path, traceout::to_chrome_json(&traces).to_string()) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+    }
+    if traces.is_empty() {
+        eprintln!("no traces kept — the run resolved no requests, so there is nothing to export");
+        return 1;
+    }
+    0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -559,6 +638,38 @@ mod tests {
         assert!(first.get("outcome").as_str().is_some());
         let _ = std::fs::remove_file(&prom);
         let _ = std::fs::remove_file(&events);
+    }
+
+    #[test]
+    fn trace_command_exports_jsonl_and_chrome_artifacts() {
+        let dir = std::env::temp_dir();
+        let jsonl = dir.join("islandrun_cli_traces.jsonl");
+        let chrome = dir.join("islandrun_cli_traces_chrome.json");
+        let code = run(&argv(&[
+            "trace",
+            "--requests",
+            "24",
+            "--out",
+            jsonl.to_str().unwrap(),
+            "--chrome-out",
+            chrome.to_str().unwrap(),
+        ]));
+        assert_eq!(code, 0);
+        let text = std::fs::read_to_string(&jsonl).unwrap();
+        assert!(!text.trim().is_empty(), "a wide-open run must keep traces");
+        let first = crate::config::json::Json::parse(text.lines().next().unwrap()).unwrap();
+        assert!(first.get("trace_id").as_str().is_some());
+        assert!(first.get("root").get("span_id").as_str().is_some());
+        assert!(first.get("outcome").as_str().is_some());
+        let doc = crate::config::json::Json::parse(&std::fs::read_to_string(&chrome).unwrap()).unwrap();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        assert!(
+            events.iter().any(|e| e.get("name").as_str() == Some("request")),
+            "every trace exports its root span as a Chrome event"
+        );
+        assert_eq!(run(&argv(&["trace", "--preset", "nonexistent"])), 2);
+        let _ = std::fs::remove_file(&jsonl);
+        let _ = std::fs::remove_file(&chrome);
     }
 
     #[test]

@@ -118,6 +118,14 @@ pub struct Config {
     /// Worker threads draining the admission queue
     /// (`Orchestrator::start_queue`).
     pub serve_workers: usize,
+    /// Request-scoped tracing master switch. Off means every
+    /// `TraceContext` is inert: no span recording, no ring, no ids.
+    pub trace_enabled: bool,
+    /// Head-sampling keep probability for ordinary served traces in [0, 1].
+    /// Tail rules (non-served terminals, slowest decile) apply regardless.
+    pub trace_head_rate: f64,
+    /// Completed-trace ring capacity (oldest kept traces evicted first).
+    pub trace_ring_capacity: usize,
     /// Artifacts directory with the AOT HLO files.
     pub artifacts_dir: String,
 }
@@ -143,6 +151,9 @@ impl Default for Config {
             degrade_zero_samples: 8,
             queue_capacity: 1024,
             serve_workers: 4,
+            trace_enabled: true,
+            trace_head_rate: 1.0,
+            trace_ring_capacity: 512,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -185,6 +196,15 @@ impl Config {
         if let Some(x) = v.get("serve_workers").as_f64() {
             c.serve_workers = x.max(1.0) as usize;
         }
+        if let Some(x) = v.get("trace_enabled").as_bool() {
+            c.trace_enabled = x;
+        }
+        if let Some(x) = v.get("trace_head_rate").as_f64() {
+            c.trace_head_rate = x.clamp(0.0, 1.0);
+        }
+        if let Some(x) = v.get("trace_ring_capacity").as_f64() {
+            c.trace_ring_capacity = x.max(1.0) as usize;
+        }
         if let Some(x) = v.get("artifacts_dir").as_str() {
             c.artifacts_dir = x.to_string();
         }
@@ -222,6 +242,9 @@ impl Config {
             ("degrade_zero_samples", Json::num(self.degrade_zero_samples as f64)),
             ("queue_capacity", Json::num(self.queue_capacity as f64)),
             ("serve_workers", Json::num(self.serve_workers as f64)),
+            ("trace_enabled", Json::Bool(self.trace_enabled)),
+            ("trace_head_rate", Json::num(self.trace_head_rate)),
+            ("trace_ring_capacity", Json::num(self.trace_ring_capacity as f64)),
             ("artifacts_dir", Json::str(&self.artifacts_dir)),
         ])
     }
@@ -371,6 +394,9 @@ mod tests {
         c.rate_limit_rps = 7.5;
         c.queue_capacity = 64;
         c.serve_workers = 2;
+        c.trace_enabled = false;
+        c.trace_head_rate = 0.25;
+        c.trace_ring_capacity = 128;
         let j = c.to_json();
         let c2 = Config::from_json(&j);
         assert_eq!(c2.weights, c.weights);
@@ -378,6 +404,9 @@ mod tests {
         assert_eq!(c2.rate_limit_rps, c.rate_limit_rps);
         assert_eq!(c2.queue_capacity, 64);
         assert_eq!(c2.serve_workers, 2);
+        assert!(!c2.trace_enabled);
+        assert_eq!(c2.trace_head_rate, 0.25);
+        assert_eq!(c2.trace_ring_capacity, 128);
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::server::http::client::HttpClient;
 use crate::server::http::wire::priority_name;
 use crate::server::{Orchestrator, Outcome, SubmitRequest, Ticket};
 use crate::substrate::trace::{priority_for, prompt_for, SensClass};
+use crate::telemetry::{format_traceparent, SpanId, TraceId};
 use crate::types::Island;
 use crate::util::Rng;
 
@@ -326,6 +327,10 @@ pub struct HttpLoadReport {
     /// Transport or protocol errors: refused submits (401/429/400), ticket
     /// polls that 404ed, or tickets whose terminal state was an error.
     pub errors: usize,
+    /// Hex trace ids the server returned for admitted submits. Producers
+    /// send a distinct W3C `traceparent` per request, so these are the
+    /// client-minted ids echoed back — the cross-system correlation handle.
+    pub trace_ids: Vec<String>,
     pub wall_s: f64,
 }
 
@@ -370,25 +375,46 @@ pub fn run_open_loop_http(
         })
         .collect();
     let (mut served, mut rejected, mut errors) = (0usize, 0usize, 0usize);
+    let mut trace_ids = Vec::with_capacity(producers * per_producer);
     for h in handles {
-        let (s, r, e) = h.join().unwrap();
+        let (s, r, e, ids) = h.join().unwrap();
         served += s;
         rejected += r;
         errors += e;
+        trace_ids.extend(ids);
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    HttpLoadReport { connections: producers, attempted: producers * per_producer, served, rejected, errors, wall_s }
+    HttpLoadReport {
+        connections: producers,
+        attempted: producers * per_producer,
+        served,
+        rejected,
+        errors,
+        trace_ids,
+        wall_s,
+    }
 }
 
 /// One producer's life: submit the whole arrival stream on a single
 /// keep-alive connection, then poll every ticket to a terminal state.
-/// Returns (served, rejected, errors).
-fn drive_http_producer(addr: SocketAddr, key: &str, t: usize, per_producer: usize, seed: u64) -> (usize, usize, usize) {
+/// Returns (served, rejected, errors, trace ids of admitted submits).
+fn drive_http_producer(
+    addr: SocketAddr,
+    key: &str,
+    t: usize,
+    per_producer: usize,
+    seed: u64,
+) -> (usize, usize, usize, Vec<String>) {
     let Ok(mut client) = HttpClient::connect(addr) else {
-        return (0, 0, per_producer);
+        return (0, 0, per_producer, Vec::new());
     };
     let mut rng = Rng::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    // separate stream for traceparent minting so the prompt sequence stays
+    // identical to run_open_loop's (same seed, same prompts, only the
+    // transport differs)
+    let mut trace_rng = Rng::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5452_4143_45);
     let mut ids: Vec<u64> = Vec::with_capacity(per_producer);
+    let mut trace_ids: Vec<String> = Vec::with_capacity(per_producer);
     let mut errors = 0usize;
     for i in 0..per_producer {
         let class = class_for(i);
@@ -397,9 +423,18 @@ fn drive_http_producer(addr: SocketAddr, key: &str, t: usize, per_producer: usiz
             ("priority", Json::str(priority_name(priority_for(class)))),
             ("deadline_ms", Json::num(1e12)),
         ]);
-        match client.request("POST", "/v1/submit", Some(key), Some(&body)) {
+        let tp = format_traceparent(
+            TraceId(((trace_rng.next_u64() as u128) << 64) | trace_rng.next_u64() as u128 | 1),
+            SpanId(trace_rng.next_u64() | 1),
+        );
+        match client.request_traced("POST", "/v1/submit", Some(key), Some(&body), Some(&tp)) {
             Ok(resp) if resp.status == 200 => match resp.json().as_ref().and_then(|j| j.get("ticket").as_i64()) {
-                Some(id) => ids.push(id as u64),
+                Some(id) => {
+                    ids.push(id as u64);
+                    if let Some(hex) = resp.json().as_ref().and_then(|j| j.get("trace_id").as_str().map(String::from)) {
+                        trace_ids.push(hex);
+                    }
+                }
                 None => errors += 1,
             },
             // 401/429/400/5xx: the server refused before admitting — no
@@ -437,7 +472,7 @@ fn drive_http_producer(addr: SocketAddr, key: &str, t: usize, per_producer: usiz
             std::thread::sleep(Duration::from_micros(300));
         }
     }
-    (served, rejected, errors)
+    (served, rejected, errors, trace_ids)
 }
 
 #[cfg(test)]
@@ -526,6 +561,13 @@ mod tests {
         assert_eq!(orch.audit.len(), 24);
         assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
         assert!(report.requests_per_sec() > 0.0);
+        // every admitted submit returned the trace id minted by the
+        // producer's traceparent — one distinct trace per request
+        assert_eq!(report.trace_ids.len(), 24);
+        let mut unique = report.trace_ids.clone();
+        unique.sort();
+        unique.dedup();
+        assert_eq!(unique.len(), 24, "client-minted trace ids must be adopted per request");
         server.shutdown();
     }
 

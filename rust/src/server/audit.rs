@@ -49,6 +49,9 @@ pub struct AuditEntry {
     /// retry budget exhausted. Every admitted request lands in exactly one
     /// of those buckets — the churn stress test pins this down.
     pub failovers: u32,
+    /// Hex trace id joining this entry to the trace ring and event log.
+    /// `None` only when tail sampling dropped the trace (or tracing is off).
+    pub trace_id: Option<String>,
 }
 
 impl AuditEntry {
@@ -68,7 +71,14 @@ impl AuditEntry {
             reason,
             reject_reason: Some(detail.to_string()),
             failovers: 0,
+            trace_id: None,
         }
+    }
+
+    /// Attach the kept trace id (builder-style, used at every terminal site).
+    pub fn with_trace(mut self, trace_id: Option<String>) -> AuditEntry {
+        self.trace_id = trace_id;
+        self
     }
 }
 
@@ -166,6 +176,7 @@ impl AuditLog {
                         ("reason", Json::str(e.reason.reason())),
                         ("reject_reason", e.reject_reason.as_deref().map(Json::str).unwrap_or(Json::Null)),
                         ("failovers", Json::num(e.failovers as f64)),
+                        ("trace_id", e.trace_id.as_deref().map(Json::str).unwrap_or(Json::Null)),
                     ])
                 })
                 .collect(),
@@ -190,6 +201,7 @@ mod tests {
             reason: if island.is_none() { Resolution::Failed(FailReason::FailClosed) } else { Resolution::Served },
             reject_reason: if island.is_none() { Some("fail-closed".into()) } else { None },
             failovers: 0,
+            trace_id: Some(format!("{id:032x}")),
         }
     }
 
@@ -228,6 +240,11 @@ mod tests {
         assert_eq!(back.idx(1).get("outcome").as_str(), Some("failed"));
         assert_eq!(back.idx(1).get("reason").as_str(), Some("fail_closed"));
         assert_eq!(back.idx(1).get("reject_reason").as_str(), Some("fail-closed"));
+        assert_eq!(back.idx(0).get("trace_id").as_str(), Some(format!("{:032x}", 1).as_str()));
+        // unrouted entries default to no trace until with_trace attaches one
+        let dropped = AuditEntry::unrouted(3, "alice", 1.0, entry(3, 0.0, None).reason, "x");
+        assert_eq!(dropped.trace_id, None);
+        assert_eq!(dropped.with_trace(Some("aa".into())).trace_id.as_deref(), Some("aa"));
     }
 
     #[test]

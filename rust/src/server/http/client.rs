@@ -15,12 +15,20 @@ use crate::config::json::Json;
 pub struct ClientResponse {
     pub status: u16,
     pub body: Vec<u8>,
+    /// Response headers, lower-cased names, arrival order.
+    pub headers: Vec<(String, String)>,
 }
 
 impl ClientResponse {
     /// Parse the body as JSON (`None` when it is not valid JSON).
     pub fn json(&self) -> Option<Json> {
         Json::parse(std::str::from_utf8(&self.body).ok()?).ok()
+    }
+
+    /// Case-insensitive single-valued header lookup (e.g. `traceparent`).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
     }
 }
 
@@ -64,8 +72,24 @@ impl HttpClient {
         api_key: Option<&str>,
         body: Option<&Json>,
     ) -> io::Result<ClientResponse> {
+        self.request_traced(method, path, api_key, body, None)
+    }
+
+    /// Like [`Self::request`] but carrying an outbound W3C `traceparent`
+    /// header, so callers can join the server-side trace to their own.
+    pub fn request_traced(
+        &mut self,
+        method: &str,
+        path: &str,
+        api_key: Option<&str>,
+        body: Option<&Json>,
+        traceparent: Option<&str>,
+    ) -> io::Result<ClientResponse> {
         let payload = body.map(|b| b.to_string().into_bytes());
-        self.request_raw(method, path, api_key, payload.as_deref())
+        self.send(method, path, api_key, payload.as_deref(), traceparent)?;
+        let (status, chunked, len, headers) = self.read_head()?;
+        let body = if chunked { self.read_chunked()? } else { self.read_sized(len)? };
+        Ok(ClientResponse { status, body, headers })
     }
 
     /// Like [`Self::request`] but with a raw body — lets tests send
@@ -77,18 +101,18 @@ impl HttpClient {
         api_key: Option<&str>,
         body: Option<&[u8]>,
     ) -> io::Result<ClientResponse> {
-        self.send(method, path, api_key, body)?;
-        let (status, chunked, len) = self.read_head()?;
+        self.send(method, path, api_key, body, None)?;
+        let (status, chunked, len, headers) = self.read_head()?;
         let body = if chunked { self.read_chunked()? } else { self.read_sized(len)? };
-        Ok(ClientResponse { status, body })
+        Ok(ClientResponse { status, body, headers })
     }
 
     /// Issue a `GET` for an SSE stream and read only the response head,
     /// leaving the chunked body on the wire. Follow with [`Self::read_event`];
     /// drop the client to abandon the stream mid-way.
     pub fn start_stream(&mut self, path: &str, api_key: Option<&str>) -> io::Result<u16> {
-        self.send("GET", path, api_key, None)?;
-        let (status, _chunked, _len) = self.read_head()?;
+        self.send("GET", path, api_key, None, None)?;
+        let (status, _chunked, _len, _headers) = self.read_head()?;
         Ok(status)
     }
 
@@ -125,8 +149,8 @@ impl HttpClient {
     /// non-200 (fixed-length error body) the body is consumed so the
     /// connection stays reusable.
     pub fn stream_events(&mut self, path: &str, api_key: Option<&str>) -> io::Result<(u16, Vec<(String, String)>)> {
-        self.send("GET", path, api_key, None)?;
-        let (status, chunked, len) = self.read_head()?;
+        self.send("GET", path, api_key, None, None)?;
+        let (status, chunked, len, _headers) = self.read_head()?;
         let mut events = Vec::new();
         if !chunked {
             let _ = self.read_sized(len)?;
@@ -138,10 +162,20 @@ impl HttpClient {
         Ok((status, events))
     }
 
-    fn send(&mut self, method: &str, path: &str, api_key: Option<&str>, body: Option<&[u8]>) -> io::Result<()> {
+    fn send(
+        &mut self,
+        method: &str,
+        path: &str,
+        api_key: Option<&str>,
+        body: Option<&[u8]>,
+        traceparent: Option<&str>,
+    ) -> io::Result<()> {
         let mut req = format!("{method} {path} HTTP/1.1\r\nHost: islandrun\r\n");
         if let Some(key) = api_key {
             req.push_str(&format!("Authorization: Bearer {key}\r\n"));
+        }
+        if let Some(tp) = traceparent {
+            req.push_str(&format!("traceparent: {tp}\r\n"));
         }
         if let Some(payload) = body {
             req.push_str(&format!("Content-Type: application/json\r\nContent-Length: {}\r\n", payload.len()));
@@ -153,8 +187,8 @@ impl HttpClient {
         self.writer.flush()
     }
 
-    /// Status line + headers; returns (status, chunked?, content-length).
-    fn read_head(&mut self) -> io::Result<(u16, bool, usize)> {
+    /// Status line + headers; returns (status, chunked?, content-length, headers).
+    fn read_head(&mut self) -> io::Result<(u16, bool, usize, Vec<(String, String)>)> {
         let status_line = read_line(&mut self.reader)?;
         let status = status_line
             .split(' ')
@@ -162,6 +196,7 @@ impl HttpClient {
             .and_then(|s| s.parse::<u16>().ok())
             .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, format!("bad status line: {status_line}")))?;
         let (mut chunked, mut len) = (false, 0usize);
+        let mut headers = Vec::new();
         loop {
             let line = read_line(&mut self.reader)?;
             if line.is_empty() {
@@ -176,8 +211,9 @@ impl HttpClient {
                     .parse()
                     .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad content-length"))?;
             }
+            headers.push((name, value.to_string()));
         }
-        Ok((status, chunked, len))
+        Ok((status, chunked, len, headers))
     }
 
     fn read_sized(&mut self, len: usize) -> io::Result<Vec<u8>> {

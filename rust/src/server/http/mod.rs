@@ -12,8 +12,13 @@
 //! | `GET /v1/tickets/:id` | non-blocking poll → typed resolution JSON (404 once reaped) |
 //! | `GET /v1/stream/:id` | chunked SSE relay of [`TokenEvent`]s; disconnect cancels |
 //! | `POST /v1/tickets/:id/cancel` | cooperative cancel |
+//! | `GET /v1/traces/:id` | one kept trace's span tree (owner-scoped) |
 //! | `GET /metrics` | Prometheus exposition (unauthenticated scrape) |
 //! | `GET /healthz` | Lighthouse liveness summary (unauthenticated probe) |
+//!
+//! The submit handler starts each request's trace (adopting a valid W3C
+//! `traceparent` header, failing open on malformed values) and echoes the
+//! root's `traceparent` on the response.
 //!
 //! The trust anchor is the authenticated request boundary: API keys
 //! (`Authorization: Bearer`) map to orchestrator sessions, ticket ids are

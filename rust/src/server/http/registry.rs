@@ -25,7 +25,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::server::Ticket;
-use crate::telemetry::Counter;
+use crate::telemetry::{Counter, TraceContext};
 
 use crate::util::sync::LockExt;
 
@@ -34,6 +34,9 @@ struct Entry {
     /// The session that submitted the ticket; lookups under any other
     /// owner miss.
     owner: u64,
+    /// The request's trace handle, kept so the stream handler can attach
+    /// the late `sse_relay` span after the terminal fires.
+    trace: TraceContext,
     /// Stamped lazily the first time a registry operation observes the
     /// ticket resolved; the TTL counts from this observation.
     resolved_at: Option<Instant>,
@@ -67,7 +70,7 @@ impl TicketRegistry {
     /// return its wire-visible id, or `None` when every slot holds an
     /// unresolved ticket (the caller sheds with 503 — refusing new work
     /// beats dropping handles to admitted work).
-    pub fn insert(&self, ticket: Ticket, owner: u64) -> Option<u64> {
+    pub fn insert(&self, ticket: Ticket, owner: u64, trace: TraceContext) -> Option<u64> {
         let mut inner = self.inner.lock_clean();
         self.reap_locked(&mut inner);
         if inner.entries.len() >= self.capacity {
@@ -85,7 +88,7 @@ impl TicketRegistry {
         }
         let id = inner.next_id;
         inner.next_id += 1;
-        inner.entries.insert(id, Entry { ticket, owner, resolved_at: None });
+        inner.entries.insert(id, Entry { ticket, owner, trace, resolved_at: None });
         Some(id)
     }
 
@@ -97,6 +100,14 @@ impl TicketRegistry {
         let mut inner = self.inner.lock_clean();
         self.reap_locked(&mut inner);
         inner.entries.get(&id).filter(|e| e.owner == owner).map(|e| e.ticket.clone())
+    }
+
+    /// The trace handle registered with a ticket, under the same owner
+    /// check as [`TicketRegistry::get`]. Inert for pre-tracing tickets.
+    pub fn trace_of(&self, id: u64, owner: u64) -> Option<TraceContext> {
+        let mut inner = self.inner.lock_clean();
+        self.reap_locked(&mut inner);
+        inner.entries.get(&id).filter(|e| e.owner == owner).map(|e| e.trace.clone())
     }
 
     /// Entries currently registered (resolved-but-unreaped included).
@@ -164,8 +175,8 @@ mod tests {
         let r = TicketRegistry::new(8, 60_000, reap_counter(&m));
         let (t1, _c1) = Ticket::new_pair();
         let (t2, _c2) = Ticket::new_pair();
-        let a = r.insert(t1, OWNER).unwrap();
-        let b = r.insert(t2, OWNER).unwrap();
+        let a = r.insert(t1, OWNER, TraceContext::none()).unwrap();
+        let b = r.insert(t2, OWNER, TraceContext::none()).unwrap();
         assert!(b > a);
         assert!(r.get(a, OWNER).is_some());
         assert!(r.get(999, OWNER).is_none(), "never-issued id is a miss");
@@ -176,16 +187,18 @@ mod tests {
         let m = Metrics::new();
         let r = TicketRegistry::new(8, 60_000, reap_counter(&m));
         let (ticket, _cell) = Ticket::new_pair();
-        let id = r.insert(ticket, OWNER).unwrap();
+        let id = r.insert(ticket, OWNER, TraceContext::none()).unwrap();
         assert!(r.get(id, OWNER + 1).is_none(), "another session must not see the ticket");
         assert!(r.get(id, OWNER).is_some(), "the owner still can");
+        assert!(r.trace_of(id, OWNER + 1).is_none(), "trace lookups honor the same owner check");
+        assert!(r.trace_of(id, OWNER).is_some());
     }
 
     #[test]
     fn reaps_resolved_tickets_after_ttl() {
         let m = Metrics::new();
         let r = TicketRegistry::new(8, 20, reap_counter(&m));
-        let id = r.insert(resolved_ticket(), OWNER).unwrap();
+        let id = r.insert(resolved_ticket(), OWNER, TraceContext::none()).unwrap();
         assert!(r.get(id, OWNER).is_some(), "within TTL the outcome stays readable");
         std::thread::sleep(Duration::from_millis(40));
         assert!(r.get(id, OWNER).is_none(), "past TTL the entry is reaped");
@@ -198,7 +211,7 @@ mod tests {
         let m = Metrics::new();
         let r = TicketRegistry::new(8, 10, reap_counter(&m));
         let (ticket, _cell) = Ticket::new_pair();
-        let id = r.insert(ticket, OWNER).unwrap();
+        let id = r.insert(ticket, OWNER, TraceContext::none()).unwrap();
         std::thread::sleep(Duration::from_millis(30));
         assert!(r.get(id, OWNER).is_some(), "TTL counts from resolution, not insertion");
         assert_eq!(m.counter_value("tickets_reaped"), 0);
@@ -208,18 +221,18 @@ mod tests {
     fn at_capacity_evicts_resolved_first_and_refuses_when_all_live() {
         let m = Metrics::new();
         let r = TicketRegistry::new(2, 60_000, reap_counter(&m));
-        let done = r.insert(resolved_ticket(), OWNER).unwrap();
+        let done = r.insert(resolved_ticket(), OWNER, TraceContext::none()).unwrap();
         let (live, _cell) = Ticket::new_pair();
-        let live_id = r.insert(live, OWNER).unwrap();
+        let live_id = r.insert(live, OWNER, TraceContext::none()).unwrap();
         // full; a resolved slot is reclaimed early, before its TTL
         let (third, _cell3) = Ticket::new_pair();
-        let third_id = r.insert(third, OWNER).expect("resolved entry must be evicted to make room");
+        let third_id = r.insert(third, OWNER, TraceContext::none()).expect("resolved entry must be evicted to make room");
         assert!(r.get(done, OWNER).is_none());
         assert!(r.get(live_id, OWNER).is_some());
         assert!(r.get(third_id, OWNER).is_some());
         assert_eq!(m.counter_value("tickets_reaped"), 1);
         // now every slot is unresolved: refuse, never evict live handles
         let (fourth, _cell4) = Ticket::new_pair();
-        assert!(r.insert(fourth, OWNER).is_none());
+        assert!(r.insert(fourth, OWNER, TraceContext::none()).is_none());
     }
 }

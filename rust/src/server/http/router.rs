@@ -11,7 +11,14 @@
 //! Ticket ids are scoped to the submitting key's session: poll, stream and
 //! cancel look the id up under the authenticated session, so a foreign id
 //! answers 404 exactly like an unknown one — no cross-tenant reads,
-//! cancels, or id-existence oracle.
+//! cancels, or id-existence oracle. Trace ids on `GET /v1/traces/:id` are
+//! scoped the same way, against the user recorded on the kept trace.
+//!
+//! Tracing at the boundary: the submit handler starts the request's trace
+//! before the body is interpreted, adopting a valid inbound W3C
+//! `traceparent` (malformed values fail open to a fresh root — a bad
+//! header never rejects a request) and echoing the root's `traceparent`
+//! on the response so external callers can correlate.
 //!
 //! [`Orchestrator::reject_at_front_door`]: crate::server::Orchestrator::reject_at_front_door
 
@@ -24,6 +31,8 @@ use super::conn::{self, HttpRequest};
 use super::wire;
 use super::{KeyEntry, Shared};
 use crate::config::json::Json;
+use crate::telemetry::traceout;
+use crate::telemetry::{parse_traceparent, TraceId, TraceSink};
 
 use crate::util::sync::LockExt;
 
@@ -136,6 +145,12 @@ fn dispatch(shared: &Shared, req: &HttpRequest, w: &mut TcpStream, close: bool) 
             }
             handle_stream(shared, req, w, id, close)
         }
+        ["v1", "traces", id] => {
+            if req.method != "GET" {
+                return method_not_allowed(w, "trace", "GET", close);
+            }
+            handle_trace(shared, req, w, id, close)
+        }
         _ => {
             let status = write_json(w, 404, &Json::obj(vec![("error", Json::str("no such route"))]), close)?;
             Ok(("other", status, close))
@@ -144,7 +159,17 @@ fn dispatch(shared: &Shared, req: &HttpRequest, w: &mut TcpStream, close: bool) 
 }
 
 fn write_json(w: &mut TcpStream, status: u16, body: &Json, close: bool) -> io::Result<u16> {
-    conn::write_response(w, status, "application/json", &[], body.to_string().as_bytes(), close)?;
+    write_json_with(w, status, &[], body, close)
+}
+
+fn write_json_with(
+    w: &mut TcpStream,
+    status: u16,
+    headers: &[(&str, &str)],
+    body: &Json,
+    close: bool,
+) -> io::Result<u16> {
+    conn::write_response(w, status, "application/json", headers, body.to_string().as_bytes(), close)?;
     Ok(status)
 }
 
@@ -202,6 +227,14 @@ fn handle_submit(
         let body = Json::obj(vec![("error", Json::str("rate limited")), ("reason", Json::str("rate_limited"))]);
         return Ok((ROUTE, write_json(w, 429, &body, close)?, close));
     }
+    // Start the request's trace before the body is interpreted. A valid
+    // inbound traceparent is adopted (the remote span parents our root); a
+    // malformed one fails open to a fresh root — never a rejection.
+    let remote = req.header("traceparent").and_then(parse_traceparent);
+    let trace = TraceSink::start(&shared.orch.traces, shared.orch.now_ms(), remote);
+    trace.set_user(&entry.user);
+    let tp = trace.traceparent();
+    let echo: Vec<(&str, &str)> = tp.as_deref().map(|v| ("traceparent", v)).into_iter().collect();
     let parsed = wire::parse_submit(&req.body).and_then(|sr| match sr.validate() {
         Ok(()) => Ok(sr),
         Err(why) => Err(why),
@@ -211,22 +244,29 @@ fn handle_submit(
         Err(why) => {
             // fail-closed 400: consumes a request id and leaves exactly one
             // audit entry, like any in-process invalid submit
-            let out = shared.orch.reject_at_front_door(&entry.user, &why);
+            let out = shared.orch.reject_at_front_door(&entry.user, &why, &trace);
             let body =
                 Json::obj(vec![("error", Json::str(&why)), ("request_id", Json::num(out.request_id as f64))]);
-            return Ok((ROUTE, write_json(w, 400, &body, close)?, close));
+            return Ok((ROUTE, write_json_with(w, 400, &echo, &body, close)?, close));
         }
     };
+    let sr = sr.trace(trace.clone());
     let ticket = shared.orch.enqueue(entry.session_id, sr);
-    match shared.registry.insert(ticket.clone(), entry.session_id) {
-        Some(id) => Ok((ROUTE, write_json(w, 200, &Json::obj(vec![("ticket", Json::num(id as f64))]), close)?, close)),
+    match shared.registry.insert(ticket.clone(), entry.session_id, trace.clone()) {
+        Some(id) => {
+            let mut fields = vec![("ticket", Json::num(id as f64))];
+            if let Some(hex) = trace.trace_hex() {
+                fields.push(("trace_id", Json::str(&hex)));
+            }
+            Ok((ROUTE, write_json_with(w, 200, &echo, &Json::obj(fields), close)?, close))
+        }
         None => {
             // registry full of live tickets. The request is already admitted
             // and will resolve + audit server-side (no ticket lost); cancel
             // cooperatively so the unreachable handle stops burning decode.
             ticket.cancel();
             let body = Json::obj(vec![("error", Json::str("ticket registry full"))]);
-            Ok((ROUTE, write_json(w, 503, &body, close)?, close))
+            Ok((ROUTE, write_json_with(w, 503, &echo, &body, close)?, close))
         }
     }
 }
@@ -286,21 +326,63 @@ fn handle_stream(
     let Some(entry) = authenticate(shared, req) else {
         return Ok((ROUTE, unauthorized(w, close)?, close));
     };
-    let Some(ticket) = id.parse::<u64>().ok().and_then(|id| shared.registry.get(id, entry.session_id)) else {
+    let wire_id = id.parse::<u64>().ok();
+    let Some(ticket) = wire_id.and_then(|id| shared.registry.get(id, entry.session_id)) else {
         return Ok((ROUTE, write_json(w, 404, &Json::obj(vec![("error", Json::str("unknown ticket"))]), close)?, close));
     };
+    let trace = wire_id.and_then(|id| shared.registry.trace_of(id, entry.session_id)).unwrap_or_default();
     conn::write_stream_head(w)?;
+    let relay_start = shared.orch.now_ms();
+    let mut relayed = 0u32;
+    let mut disconnected = false;
     for event in ticket.stream() {
         let frame = wire::sse_event(&event);
         if conn::write_chunk(w, frame.as_bytes()).is_err() {
             ticket.cancel();
-            return Ok((ROUTE, 200, true));
+            disconnected = true;
+            break;
         }
+        relayed += 1;
+    }
+    // late span: the request's terminal usually fires mid-relay, and kept
+    // traces accept spans recorded after the root closed
+    trace.add_span(
+        "sse_relay",
+        relay_start,
+        shared.orch.now_ms(),
+        vec![("events", Json::num(relayed as f64)), ("disconnected", Json::Bool(disconnected))],
+    );
+    if disconnected {
+        return Ok((ROUTE, 200, true));
     }
     if conn::write_last_chunk(w).is_err() {
         return Ok((ROUTE, 200, true));
     }
     Ok((ROUTE, 200, close))
+}
+
+/// `GET /v1/traces/:id` — one kept trace as JSON. Scoped to the caller's
+/// user: a foreign trace id answers 404 exactly like an unknown,
+/// sampled-out, or evicted one, so the endpoint is not an existence
+/// oracle across tenants.
+fn handle_trace(
+    shared: &Shared,
+    req: &HttpRequest,
+    w: &mut TcpStream,
+    id: &str,
+    close: bool,
+) -> io::Result<(&'static str, u16, bool)> {
+    const ROUTE: &str = "trace";
+    let Some(entry) = authenticate(shared, req) else {
+        return Ok((ROUTE, unauthorized(w, close)?, close));
+    };
+    let found = TraceId::from_hex(id)
+        .and_then(|tid| shared.orch.traces.get(tid))
+        .filter(|t| t.user == entry.user);
+    let Some(trace) = found else {
+        return Ok((ROUTE, write_json(w, 404, &Json::obj(vec![("error", Json::str("unknown trace"))]), close)?, close));
+    };
+    Ok((ROUTE, write_json(w, 200, &traceout::trace_json(&trace), close)?, close))
 }
 
 fn handle_healthz(shared: &Shared, w: &mut TcpStream, close: bool) -> io::Result<(&'static str, u16, bool)> {

@@ -74,6 +74,7 @@ use crate::agents::mist::Mist;
 use crate::agents::tide::hysteresis::Hysteresis;
 use crate::agents::tide::monitor::DegradeDetector;
 use crate::agents::waves::{Decision, IslandState, Routed, Waves};
+use crate::config::json::Json;
 use crate::config::Config;
 use crate::islands::executor::{self, IslandExecutor};
 use crate::islands::{CostLedger, DecodeHandle, Fleet};
@@ -85,7 +86,7 @@ use crate::server::resolution::{CancelPoint, FailReason, Resolution, ShedReason}
 use crate::server::session::SessionStore;
 use crate::server::ticket::{Ticket, TicketCell};
 use crate::telemetry::serving::IslandCells;
-use crate::telemetry::{EventLog, Metrics, RequestEvent, ServingMetrics};
+use crate::telemetry::{EventLog, Metrics, RequestEvent, ServingMetrics, TraceConfig, TraceContext, TraceSink};
 use crate::types::{Island, IslandId, Request};
 use crate::util::AtomicF64;
 
@@ -195,6 +196,10 @@ struct Prepared {
     /// When the first decoded tokens reached the ticket (`NaN` on
     /// non-streaming paths).
     first_token_ms: f64,
+    /// Request-scoped trace handle (threaded by value from the submit
+    /// surface — never a thread-local). Child spans for every pipeline
+    /// stage land here; exactly one terminal site closes the root span.
+    trace: TraceContext,
 }
 
 /// Terminal state of the failure-aware execution loop.
@@ -233,6 +238,12 @@ struct StepJob {
 struct Active {
     job: StepJob,
     handle: DecodeHandle,
+    /// Island-clock time when prefill completed and decode began (start of
+    /// the request's coalesced `decode` trace span).
+    decode_start_ms: f64,
+    /// Decode steps that actually produced tokens — exported as the
+    /// `chunks` attribute on the coalesced `decode` span.
+    decode_chunks: u32,
 }
 
 /// Outcome of one decode-step attempt on an in-flight request.
@@ -274,6 +285,10 @@ pub struct Orchestrator {
     /// they popped even if the orchestrator is dropped mid-drain (no id may
     /// vanish from the trail, even at shutdown).
     pub audit: Arc<AuditLog>,
+    /// Completed request traces: bounded ring behind the tail-sampling
+    /// policy ([`TraceSink`]), read by the trace exporters and the HTTP
+    /// `GET /v1/traces/:id` surface.
+    pub traces: Arc<TraceSink>,
     limiter: Mutex<RateLimiter>,
     next_request_id: AtomicU64,
     budget_ceiling: f64,
@@ -314,6 +329,14 @@ impl Orchestrator {
         let heartbeat_period_ms = config.heartbeat_period_ms as f64;
         let queue = Arc::new(AdmissionQueue::new(config.queue_capacity));
         let serve_workers = config.serve_workers.max(1);
+        let traces = TraceSink::new(
+            TraceConfig {
+                enabled: config.trace_enabled,
+                head_rate: config.trace_head_rate,
+                ring_capacity: config.trace_ring_capacity,
+            },
+            seed ^ 0x5452_4143_45u64,
+        );
         let lighthouse = Lighthouse::new(seed ^ 0x11A5_7110_5E0u64, heartbeat_period_ms, config.heartbeat_miss_limit);
         // register the initial fleet: every backend island is attested and
         // announced online at t=0 (churn helpers keep the view in sync)
@@ -338,6 +361,7 @@ impl Orchestrator {
             serving,
             analytics: EventLog::default(),
             audit: Arc::new(AuditLog::new()),
+            traces,
             limiter: Mutex::new(limiter),
             next_request_id: AtomicU64::new(1),
             budget_ceiling,
@@ -373,7 +397,10 @@ impl Orchestrator {
         self.sessions.open(user)
     }
 
-    fn now_ms(&self) -> f64 {
+    /// Serving-clock milliseconds: virtual time on the Sim backend, wall
+    /// time since startup on Real. Public so transport-side span recording
+    /// (the HTTP SSE relay) shares the pipeline's clock.
+    pub fn now_ms(&self) -> f64 {
         match &self.backend {
             Backend::Sim(fleet) => fleet.now(),
             // wall-clock ms since startup, so the per-user token bucket
@@ -680,6 +707,7 @@ impl Orchestrator {
         s_r: f64,
         enqueued_ms: f64,
         failovers: u32,
+        trace_id: Option<String>,
     ) -> RequestEvent {
         RequestEvent {
             request_id: id,
@@ -701,6 +729,7 @@ impl Orchestrator {
             tokens_generated: 0,
             latency_ms: f64::NAN,
             cost_usd: 0.0,
+            trace_id,
         }
     }
 
@@ -716,6 +745,7 @@ impl Orchestrator {
         tokens: usize,
         latency_ms: f64,
         cost: f64,
+        trace_id: Option<String>,
     ) -> RequestEvent {
         RequestEvent {
             request_id: p.id,
@@ -737,6 +767,7 @@ impl Orchestrator {
             tokens_generated: tokens as u32,
             latency_ms,
             cost_usd: cost,
+            trace_id,
         }
     }
 
@@ -748,7 +779,7 @@ impl Orchestrator {
         let user = self.admit(session_id)?;
         let id = self.next_request_id.fetch_add(1, Ordering::SeqCst);
         if let Err(why) = sr.validate() {
-            return Ok(Err(self.reject_invalid(id, &user, &why)));
+            return Ok(Err(self.reject_invalid(id, &user, &why, &sr.trace)));
         }
         // the blocking path never queues: no enqueue timestamp
         self.prepare_admitted(id, session_id, user, sr, f64::NAN)
@@ -758,12 +789,13 @@ impl Orchestrator {
     /// (`SubmitRequest::validate`): the request consumed an id at admission,
     /// so it sheds like any other — one audit entry, zero cost — instead of
     /// entering the pipeline with a budget no island could ever satisfy.
-    fn reject_invalid(&self, id: u64, user: &str, why: &str) -> Outcome {
+    fn reject_invalid(&self, id: u64, user: &str, why: &str, trace: &TraceContext) -> Outcome {
         let res = Resolution::Shed(ShedReason::InvalidRequest);
         self.serving.rejected_invalid_request.inc();
         let reason = format!("shed: invalid request: {why}");
-        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason));
-        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, f64::NAN, 0));
+        let trace_id = trace.end_request_span(self.now_ms(), res.class(), res.reason());
+        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason).with_trace(trace_id.clone()));
+        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, f64::NAN, 0, trace_id));
         Outcome {
             request_id: id,
             s_r: 0.0,
@@ -791,10 +823,11 @@ impl Orchestrator {
         enqueued_ms: f64,
     ) -> anyhow::Result<Result<Prepared, Outcome>> {
         let now = self.now_ms();
+        let trace = sr.trace.clone();
         let Some((history, prev_privacy)) =
             self.sessions.with(session_id, |s| (s.history.clone(), s.prev_island_privacy))
         else {
-            self.audit_vanished(id, &user, now, 0.0, "session closed before routing", 0);
+            self.audit_vanished(id, &user, now, 0.0, "session closed before routing", 0, &trace);
             anyhow::bail!("unknown session {session_id}");
         };
         let mut request =
@@ -831,6 +864,7 @@ impl Orchestrator {
                     Decision::Reject { reason } => Some(reason.clone()),
                     _ => None,
                 };
+                let trace_id = trace.end_request_span(self.now_ms(), res.class(), res.reason());
                 self.audit.record(AuditEntry {
                     request_id: id,
                     user: user.clone(),
@@ -842,8 +876,9 @@ impl Orchestrator {
                     reason: res,
                     reject_reason: reason,
                     failovers: 0,
+                    trace_id: trace_id.clone(),
                 });
-                self.record_resolution(res, self.unrouted_event(res, id, &user, s_r, enqueued_ms, 0));
+                self.record_resolution(res, self.unrouted_event(res, id, &user, s_r, enqueued_ms, 0, trace_id));
                 return Ok(Err(Outcome {
                     request_id: id,
                     s_r,
@@ -862,6 +897,16 @@ impl Orchestrator {
         // resolve the routed island's tier label + cached metric cells once
         // at routing time — resolution-time bumps are then pure atomics
         let (tier, cells) = self.island_telemetry(&states, &routed);
+        trace.add_span(
+            "route",
+            now,
+            self.now_ms(),
+            vec![
+                ("candidates", Json::num(states.len() as f64)),
+                ("island", Json::str(&routed.target.to_string())),
+                ("tier", Json::str(tier)),
+            ],
+        );
 
         // Sanitize on trust-boundary crossing (Alg. 1 lines 14-17)
         let mut prepared = Prepared {
@@ -883,6 +928,7 @@ impl Orchestrator {
             routed_ms: now,
             prefill_ms: f64::NAN,
             first_token_ms: f64::NAN,
+            trace,
         };
         self.sanitize_for_target(&mut prepared)?;
         Ok(Ok(prepared))
@@ -925,19 +971,20 @@ impl Orchestrator {
                 return Ok(());
             }
         }
+        let sanitize_start = self.now_ms();
         // phase 1: capture the plan (cache prefix + delta) — shard read lock
         let Some(plan) = self
             .sessions
             .with(p.session_id, |s| s.plan_sanitize(target_privacy, &p.request.history, &p.request.prompt))
         else {
-            self.audit_vanished(p.id, &p.user, p.now, p.s_r, "session closed before sanitization", p.failovers);
+            self.audit_vanished(p.id, &p.user, p.now, p.s_r, "session closed before sanitization", p.failovers, &p.trace);
             anyhow::bail!("session {} closed mid-request", p.session_id);
         };
         // phase 2: entity detection on the immutable snapshot — NO lock
         let detected = plan.detect();
         // phase 3: placeholder splice + cache refresh — shard write lock
         let Some(wire) = self.sessions.with_mut(p.session_id, |s| detected.apply(s)) else {
-            self.audit_vanished(p.id, &p.user, p.now, p.s_r, "session closed before sanitization", p.failovers);
+            self.audit_vanished(p.id, &p.user, p.now, p.s_r, "session closed before sanitization", p.failovers, &p.trace);
             anyhow::bail!("session {} closed mid-request", p.session_id);
         };
         p.request.history = wire.history;
@@ -956,6 +1003,15 @@ impl Orchestrator {
         }
         p.sanitized = true;
         p.sanitized_at = Some(target_privacy);
+        p.trace.add_span(
+            "sanitize",
+            sanitize_start,
+            self.now_ms(),
+            vec![
+                ("transformed", Json::num(wire.transformed as f64)),
+                ("reused", Json::num(wire.reused as f64)),
+            ],
+        );
         Ok(())
     }
 
@@ -963,8 +1019,9 @@ impl Orchestrator {
     /// the pipeline before execution (e.g. its session raced a `close()`).
     /// `failovers` carries any hops already counted in the `failovers`
     /// metric, keeping Σ audit.failovers == the metric even on this path.
-    fn audit_vanished(&self, id: u64, user: &str, now: f64, s_r: f64, reason: &str, failovers: u32) {
+    fn audit_vanished(&self, id: u64, user: &str, now: f64, s_r: f64, reason: &str, failovers: u32, trace: &TraceContext) {
         let res = Resolution::Failed(FailReason::SessionClosed);
+        let trace_id = trace.end_request_span(self.now_ms(), res.class(), res.reason());
         self.audit.record(AuditEntry {
             request_id: id,
             user: user.to_string(),
@@ -976,8 +1033,9 @@ impl Orchestrator {
             reason: res,
             reject_reason: Some(reason.to_string()),
             failovers,
+            trace_id: trace_id.clone(),
         });
-        self.record_resolution(res, self.unrouted_event(res, id, user, s_r, f64::NAN, failovers));
+        self.record_resolution(res, self.unrouted_event(res, id, user, s_r, f64::NAN, failovers, trace_id));
     }
 
     /// Audit trail entry for a request that was admitted and routed but
@@ -986,6 +1044,7 @@ impl Orchestrator {
     fn audit_execution_failure(&self, p: &Prepared, err: &anyhow::Error) {
         let res = Resolution::Failed(FailReason::ExecutionError);
         self.serving.execution_failed.inc();
+        let trace_id = p.trace.end_request_span(self.now_ms(), res.class(), res.reason());
         self.audit.record(AuditEntry {
             request_id: p.id,
             user: p.user.clone(),
@@ -997,8 +1056,9 @@ impl Orchestrator {
             reason: res,
             reject_reason: Some(format!("execution failed: {err}")),
             failovers: p.failovers,
+            trace_id: trace_id.clone(),
         });
-        self.record_resolution(res, self.prepared_event(p, res, true, 0, f64::NAN, 0.0));
+        self.record_resolution(res, self.prepared_event(p, res, true, 0, f64::NAN, 0.0, trace_id));
     }
 
     /// Audit + metrics + fail-closed Outcome for a request whose failover
@@ -1007,6 +1067,7 @@ impl Orchestrator {
     fn finish_exhausted(&self, p: Prepared, reason: String) -> Outcome {
         let res = Resolution::Failed(FailReason::FailoverExhausted);
         self.serving.rejected_failover_exhausted.inc();
+        let trace_id = p.trace.end_request_span(self.now_ms(), res.class(), res.reason());
         self.audit.record(AuditEntry {
             request_id: p.id,
             user: p.user.clone(),
@@ -1018,9 +1079,10 @@ impl Orchestrator {
             reason: res,
             reject_reason: Some(reason.clone()),
             failovers: p.failovers,
+            trace_id: trace_id.clone(),
         });
         // no island in the event either: every candidate it touched died
-        self.record_resolution(res, self.prepared_event(&p, res, false, 0, f64::NAN, 0.0));
+        self.record_resolution(res, self.prepared_event(&p, res, false, 0, f64::NAN, 0.0, trace_id));
         Outcome {
             request_id: p.id,
             s_r: p.s_r,
@@ -1053,6 +1115,14 @@ impl Orchestrator {
         };
 
         let res = Resolution::Served;
+        // close the root span where the island's clock says the response
+        // landed, so summed child spans reconcile with end-to-end latency
+        // even when the global virtual clock lags the decode cursor
+        let trace_end = {
+            let n = self.now_ms();
+            if p.prefill_ms.is_finite() && latency_ms.is_finite() { n.max(p.prefill_ms + latency_ms) } else { n }
+        };
+        let trace_id = p.trace.end_request_span(trace_end, res.class(), res.reason());
         self.audit.record(AuditEntry {
             request_id: p.id,
             user: p.user.clone(),
@@ -1064,6 +1134,7 @@ impl Orchestrator {
             reason: res,
             reject_reason: None,
             failovers: p.failovers,
+            trace_id: trace_id.clone(),
         });
         if p.failovers > 0 {
             self.serving.failover_successes.inc();
@@ -1075,7 +1146,7 @@ impl Orchestrator {
         // per-island labeled series through the cells cached at route time
         p.cells.served.inc();
         p.cells.latency_ms.observe(latency_ms);
-        self.record_resolution(res, self.prepared_event(&p, res, true, tokens_generated, latency_ms, cost));
+        self.record_resolution(res, self.prepared_event(&p, res, true, tokens_generated, latency_ms, cost, trace_id));
 
         Outcome {
             request_id: p.id,
@@ -1126,7 +1197,18 @@ impl Orchestrator {
         }
         loop {
             let down_reason = match self.execute_once(p) {
-                Ok((latency, cost, text, tokens)) => return ExecEnd::Done(latency, cost, text, tokens),
+                Ok((latency, cost, text, tokens)) => {
+                    // run-to-completion execution: prefill and decode are one
+                    // island-side interval, exported as a single-chunk span
+                    p.trace.add_span("prefill", p.prefill_ms, p.prefill_ms, vec![]);
+                    p.trace.add_span(
+                        "decode",
+                        p.prefill_ms,
+                        p.prefill_ms + latency.max(0.0),
+                        vec![("chunks", Json::num(1.0)), ("tokens", Json::num(tokens as f64))],
+                    );
+                    return ExecEnd::Done(latency, cost, text, tokens);
+                }
                 Err(AttemptErr::Fatal(e)) => return ExecEnd::Fatal(e),
                 Err(AttemptErr::IslandDown(reason)) => reason,
             };
@@ -1139,6 +1221,13 @@ impl Orchestrator {
             self.serving.failovers.inc();
             self.serving.failover_from(dead.0).inc();
             p.failovers += 1;
+            let hop_at = self.now_ms();
+            p.trace.add_span(
+                "failover_hop",
+                hop_at,
+                hop_at,
+                vec![("from", Json::str(&dead.to_string())), ("hop", Json::num(p.failovers as f64))],
+            );
             if p.failovers > self.retry_budget {
                 return ExecEnd::Exhausted {
                     reason: format!(
@@ -1406,15 +1495,20 @@ impl Orchestrator {
                 if job.key.ticket.resolve(Err("internal error: island step loop panicked".to_string()))
                     && !self.audit.contains(job.prepared.id)
                 {
+                    let trace_id = job.prepared.trace.end_request_span(now, res.class(), res.reason());
                     let entry = AuditEntry::unrouted(
                         job.prepared.id,
                         &job.prepared.user,
                         now,
                         res,
                         "shed: island step loop panicked",
-                    );
+                    )
+                    .with_trace(trace_id.clone());
                     self.audit.record(entry);
-                    self.record_resolution(res, self.prepared_event(&job.prepared, res, true, 0, f64::NAN, 0.0));
+                    self.record_resolution(
+                        res,
+                        self.prepared_event(&job.prepared, res, true, 0, f64::NAN, 0.0, trace_id),
+                    );
                 }
             }
         }
@@ -1478,7 +1572,12 @@ impl Orchestrator {
         let StepJob { key, mut prepared } = job;
         prepared.prefill_ms = self.now_ms();
         match fleet.prefill(prepared.routed.target, &prepared.request) {
-            Ok(handle) => active.push(Active { job: StepJob { key, prepared }, handle }),
+            Ok(handle) => {
+                // decode starts where the island's clock says prefill ended
+                let decode_start_ms = handle.cursor_ms();
+                prepared.trace.add_span("prefill", prepared.prefill_ms, decode_start_ms, vec![]);
+                active.push(Active { job: StepJob { key, prepared }, handle, decode_start_ms, decode_chunks: 0 });
+            }
             Err(_) => self.settle_queued(key, self.run_prepared(prepared)),
         }
     }
@@ -1490,6 +1589,7 @@ impl Orchestrator {
         let res = Resolution::Cancelled(CancelPoint::BeforeExecution);
         self.serving.cancelled_before_execution.inc();
         let reason = "cancelled: by caller before execution".to_string();
+        let trace_id = prepared.trace.end_request_span(self.now_ms(), res.class(), res.reason());
         self.audit.record(AuditEntry {
             request_id: prepared.id,
             user: prepared.user.clone(),
@@ -1501,8 +1601,9 @@ impl Orchestrator {
             reason: res,
             reject_reason: Some(reason.clone()),
             failovers: prepared.failovers,
+            trace_id: trace_id.clone(),
         });
-        self.record_resolution(res, self.prepared_event(&prepared, res, false, 0, f64::NAN, 0.0));
+        self.record_resolution(res, self.prepared_event(&prepared, res, false, 0, f64::NAN, 0.0, trace_id));
         let outcome = Outcome {
             request_id: prepared.id,
             s_r: prepared.s_r,
@@ -1536,6 +1637,7 @@ impl Orchestrator {
             Err(_) => StepVerdict::IslandGone,
             Ok(n) => {
                 if n > 0 {
+                    a.decode_chunks += 1;
                     if a.job.prepared.first_token_ms.is_nan() {
                         // virtual decode cursor: when the first chunk's
                         // tokens became available on the island's clock
@@ -1556,9 +1658,20 @@ impl Orchestrator {
     /// Settle a request leaving the in-flight batch (any reason but
     /// `Running`).
     fn conclude_active(&self, island: IslandId, finished: Active, verdict: StepVerdict) {
-        let Active { job, handle } = finished;
+        let Active { job, handle, decode_start_ms, decode_chunks } = finished;
         let StepJob { key, prepared } = job;
         let budget = prepared.request.max_new_tokens;
+        // one coalesced decode span per batch membership, chunk count as an
+        // attribute — a span per chunk would drown the trace viewer
+        prepared.trace.add_span(
+            "decode",
+            decode_start_ms,
+            handle.cursor_ms(),
+            vec![
+                ("chunks", Json::num(decode_chunks as f64)),
+                ("tokens", Json::num(handle.tokens_decoded() as f64)),
+            ],
+        );
         match verdict {
             StepVerdict::Running => unreachable!("running requests stay in the batch"),
             StepVerdict::Done => {
@@ -1602,6 +1715,8 @@ impl Orchestrator {
     fn finish_cancelled(&self, p: Prepared, handle: &DecodeHandle, reason: String, point: CancelPoint) -> Outcome {
         let res = Resolution::Cancelled(point);
         let report = handle.report();
+        let trace_end = self.now_ms().max(handle.cursor_ms());
+        let trace_id = p.trace.end_request_span(trace_end, res.class(), res.reason());
         self.audit.record(AuditEntry {
             request_id: p.id,
             user: p.user.clone(),
@@ -1613,13 +1728,14 @@ impl Orchestrator {
             reason: res,
             reject_reason: Some(reason),
             failovers: p.failovers,
+            trace_id: trace_id.clone(),
         });
         self.ledger.charge(&p.user, report.cost);
         self.serving.requests_cancelled.inc();
         self.serving.cancelled_tokens_decoded.observe(handle.tokens_decoded() as f64);
         self.record_resolution(
             res,
-            self.prepared_event(&p, res, true, handle.tokens_decoded(), report.latency_ms, report.cost),
+            self.prepared_event(&p, res, true, handle.tokens_decoded(), report.latency_ms, report.cost, trace_id),
         );
         Outcome {
             request_id: p.id,
@@ -1664,14 +1780,20 @@ impl Orchestrator {
     /// (`rejected_queue_full`), and the ticket resolves at once with the
     /// reject outcome. Tickets are never lost: every enqueue resolves
     /// exactly once (served, rejected, shed, or an error).
-    pub fn enqueue(&self, session_id: u64, submit: SubmitRequest) -> Ticket {
+    pub fn enqueue(&self, session_id: u64, mut submit: SubmitRequest) -> Ticket {
         let (ticket, cell) = Ticket::new_pair();
+        let admitted_at = self.now_ms();
+        // the root span opens at the front door — or is adopted from the
+        // HTTP submit handler, which starts it before parsing the body — so
+        // even a rate-limited shed leaves a complete (always-kept) trace
+        let trace = TraceSink::adopt_or_start(&self.traces, &submit.trace, admitted_at);
         let user = match self.admit_typed(session_id) {
             Ok(user) => user,
             Err(AdmitErr::UnknownSession(sid)) => {
                 // unknown session: refused before consuming a request id,
                 // mirroring the blocking path's Err return — there is no
                 // user to audit the refusal against
+                trace.end_request_span(self.now_ms(), "failed", "unknown_session");
                 self.resolve_ticket(&cell, Err(anyhow::anyhow!("unknown session {sid}")));
                 return ticket;
             }
@@ -1680,20 +1802,24 @@ impl Orchestrator {
                 // serving surface needs a `Shed(RateLimited)` outcome (and
                 // one audit entry) to answer 429 with evidence, not a
                 // stringly error
-                self.shed_rate_limited(&cell, &user);
+                trace.set_user(&user);
+                self.shed_rate_limited(&cell, &user, &trace);
                 return ticket;
             }
         };
+        trace.set_user(&user);
         let id = self.next_request_id.fetch_add(1, Ordering::SeqCst);
         if let Err(why) = submit.validate() {
             // degenerate budgets shed fail-closed at the front door: a
             // zero-token or zero-deadline request could never be served,
             // only occupy a queue slot until the drain discovered it
-            let rejected = self.reject_invalid(id, &user, &why);
+            let rejected = self.reject_invalid(id, &user, &why, &trace);
             self.resolve_ticket(&cell, Ok(rejected));
             return ticket;
         }
         let now = self.now_ms();
+        trace.add_span("admission", admitted_at, now, vec![]);
+        submit.trace = trace;
         match self.queue.push(id, session_id, user, submit, now, Arc::clone(&cell)) {
             Ok(depth) => {
                 // counted only for requests that actually entered the queue,
@@ -1750,13 +1876,16 @@ impl Orchestrator {
         let mut ready: Vec<(QueuedKey, Prepared)> = Vec::new();
         for item in batch {
             let QueueItem { id, session_id, user, mut submit, enqueued_ms, deadline_at_ms, ticket, .. } = item;
+            // every drained request gets a queue-wait span, including the
+            // ones about to shed — the wait is exactly what killed them
+            submit.trace.add_span("queue_wait", enqueued_ms, now, vec![("depth", Json::num(self.queue.len() as f64))]);
             if ticket.cancel_requested() {
                 // cancelled before any routing work: cheapest exit
-                self.cancel_while_queued(id, &user, &ticket, now - enqueued_ms);
+                self.cancel_while_queued(id, &user, &ticket, now - enqueued_ms, &submit.trace);
                 continue;
             }
             if now > deadline_at_ms {
-                self.shed_expired(id, &user, &ticket, now - enqueued_ms);
+                self.shed_expired(id, &user, &ticket, now - enqueued_ms, &submit.trace);
                 continue;
             }
             self.serving.queue_wait_ms.observe((now - enqueued_ms).max(0.0));
@@ -1800,15 +1929,16 @@ impl Orchestrator {
     /// Resolve a ticket cancelled while still parked in the admission
     /// queue: never routed, never executed — zero cost, one audit entry
     /// (under the `cancelled:` reason prefix, like every cancel).
-    fn cancel_while_queued(&self, id: u64, user: &str, ticket: &TicketCell, waited_ms: f64) {
+    fn cancel_while_queued(&self, id: u64, user: &str, ticket: &TicketCell, waited_ms: f64, trace: &TraceContext) {
         let res = Resolution::Cancelled(CancelPoint::WhileQueued);
         self.serving.cancelled_while_queued.inc();
         let reason = format!("cancelled: by caller after {waited_ms:.0} ms in queue, before routing");
+        let trace_id = trace.end_request_span(self.now_ms(), res.class(), res.reason());
         // shaped like a shed entry (no island, s_r unscored) but carrying a
         // Cancelled reason, so AuditLog::sheds() stays load-shedding-only
-        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason));
+        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason).with_trace(trace_id.clone()));
         let enqueued = self.now_ms() - waited_ms;
-        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, enqueued, 0));
+        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, enqueued, 0, trace_id));
         let outcome = Outcome {
             request_id: id,
             s_r: 0.0,
@@ -1840,21 +1970,23 @@ impl Orchestrator {
         let res = Resolution::Shed(ShedReason::QueueFull);
         self.serving.rejected_queue_full.inc();
         let reason = format!("shed: admission queue full ({} queued, fail-closed)", self.queue.capacity());
-        self.audit.record(AuditEntry::unrouted(item.id, &item.user, self.now_ms(), res, &reason));
-        self.record_resolution(res, self.unrouted_event(res, item.id, &item.user, 0.0, item.enqueued_ms, 0));
+        let trace_id = item.submit.trace.end_request_span(self.now_ms(), res.class(), res.reason());
+        self.audit.record(AuditEntry::unrouted(item.id, &item.user, self.now_ms(), res, &reason).with_trace(trace_id.clone()));
+        self.record_resolution(res, self.unrouted_event(res, item.id, &item.user, 0.0, item.enqueued_ms, 0, trace_id));
         self.resolve_shed(&item.ticket, item.id, reason, res);
     }
 
     /// Shed a request whose deadline `d_r` expired while it waited in the
     /// queue: by Def. 2 the answer is already useless, so the drain rejects
     /// it instead of burning island capacity on it.
-    fn shed_expired(&self, id: u64, user: &str, ticket: &TicketCell, waited_ms: f64) {
+    fn shed_expired(&self, id: u64, user: &str, ticket: &TicketCell, waited_ms: f64, trace: &TraceContext) {
         let res = Resolution::Shed(ShedReason::DeadlineExpired);
         self.serving.shed_deadline_expired.inc();
         let reason = format!("shed: deadline expired after {waited_ms:.0} ms in queue");
-        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason));
+        let trace_id = trace.end_request_span(self.now_ms(), res.class(), res.reason());
+        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason).with_trace(trace_id.clone()));
         let enqueued = self.now_ms() - waited_ms;
-        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, enqueued, 0));
+        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, enqueued, 0, trace_id));
         self.resolve_shed(ticket, id, reason, res);
     }
 
@@ -1862,13 +1994,14 @@ impl Orchestrator {
     /// id and resolves the ticket with a `Shed(RateLimited)` outcome — one
     /// audit entry, one `requests_resolved` bump, zero cost — so the
     /// refusal is as observable as any other shed.
-    fn shed_rate_limited(&self, ticket: &TicketCell, user: &str) {
+    fn shed_rate_limited(&self, ticket: &TicketCell, user: &str, trace: &TraceContext) {
         let id = self.next_request_id.fetch_add(1, Ordering::SeqCst);
         let res = Resolution::Shed(ShedReason::RateLimited);
         self.serving.rejected_rate_limited.inc();
         let reason = format!("shed: rate limited: user {user}");
-        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason));
-        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, f64::NAN, 0));
+        let trace_id = trace.end_request_span(self.now_ms(), res.class(), res.reason());
+        self.audit.record(AuditEntry::unrouted(id, user, self.now_ms(), res, &reason).with_trace(trace_id.clone()));
+        self.record_resolution(res, self.unrouted_event(res, id, user, 0.0, f64::NAN, 0, trace_id));
         self.resolve_shed(ticket, id, reason, res);
     }
 
@@ -1877,9 +2010,9 @@ impl Orchestrator {
     /// (the HTTP surface rejects malformed bodies fail-closed). One audit
     /// entry and one typed `Shed(InvalidRequest)` resolution, exactly like
     /// an in-process invalid submit.
-    pub fn reject_at_front_door(&self, user: &str, why: &str) -> Outcome {
+    pub fn reject_at_front_door(&self, user: &str, why: &str, trace: &TraceContext) -> Outcome {
         let id = self.next_request_id.fetch_add(1, Ordering::SeqCst);
-        self.reject_invalid(id, user, why)
+        self.reject_invalid(id, user, why, trace)
     }
 
     fn resolve_shed(&self, ticket: &TicketCell, id: u64, reason: String, res: Resolution) {
@@ -1926,20 +2059,25 @@ fn queue_worker(orch: Weak<Orchestrator>, queue: Arc<AdmissionQueue>, audit: Arc
                 if item.ticket.resolve(Err("orchestrator shut down before the request was served".into()))
                     && !audit.contains(item.id)
                 {
+                    let res = Resolution::Shed(ShedReason::Shutdown);
+                    // the trace sink is owned by the dropped orchestrator:
+                    // end_request_span fails soft through its Weak handle
+                    let trace_id = item.submit.trace.end_request_span(item.enqueued_ms, res.class(), res.reason());
                     let entry = AuditEntry::unrouted(
                         item.id,
                         &item.user,
                         item.enqueued_ms,
-                        Resolution::Shed(ShedReason::Shutdown),
+                        res,
                         "shed: orchestrator shut down",
-                    );
+                    )
+                    .with_trace(trace_id);
                     audit.record(entry);
                 }
             }
             return;
         };
-        let stragglers: Vec<(u64, String, Arc<TicketCell>)> =
-            batch.iter().map(|i| (i.id, i.user.clone(), Arc::clone(&i.ticket))).collect();
+        let stragglers: Vec<(u64, String, Arc<TicketCell>, TraceContext)> =
+            batch.iter().map(|i| (i.id, i.user.clone(), Arc::clone(&i.ticket), i.submit.trace.clone())).collect();
         let drained = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| o.drain_batch(batch)));
         if drained.is_err() {
             // drain_batch resolves (and audits) as it goes; first-one-wins
@@ -1951,10 +2089,14 @@ fn queue_worker(orch: Weak<Orchestrator>, queue: Arc<AdmissionQueue>, audit: Arc
             o.serving.queue_drain_panics.inc();
             let res = Resolution::Shed(ShedReason::WorkerPanic);
             let now = o.now_ms();
-            for (id, user, cell) in &stragglers {
+            for (id, user, cell, trace) in &stragglers {
                 if cell.resolve(Err("internal error: queue drain panicked".into())) && !o.audit.contains(*id) {
-                    o.audit.record(AuditEntry::unrouted(*id, user, now, res, "shed: queue drain panicked"));
-                    o.record_resolution(res, o.unrouted_event(res, *id, user, 0.0, f64::NAN, 0));
+                    let trace_id = trace.end_request_span(now, res.class(), res.reason());
+                    o.audit.record(
+                        AuditEntry::unrouted(*id, user, now, res, "shed: queue drain panicked")
+                            .with_trace(trace_id.clone()),
+                    );
+                    o.record_resolution(res, o.unrouted_event(res, *id, user, 0.0, f64::NAN, 0, trace_id));
                 }
             }
         }
@@ -1975,15 +2117,16 @@ impl Drop for Orchestrator {
         let now = self.now_ms();
         let res = Resolution::Shed(ShedReason::Shutdown);
         for item in leftovers {
-            self.audit.record(AuditEntry::unrouted(
-                item.id,
-                &item.user,
-                now,
-                res,
-                "shed: orchestrator shut down while queued",
-            ));
+            let trace_id = item.submit.trace.end_request_span(now, res.class(), res.reason());
+            self.audit.record(
+                AuditEntry::unrouted(item.id, &item.user, now, res, "shed: orchestrator shut down while queued")
+                    .with_trace(trace_id.clone()),
+            );
             if item.ticket.resolve(Err("orchestrator shut down before the request was served".to_string())) {
-                self.record_resolution(res, self.unrouted_event(res, item.id, &item.user, 0.0, item.enqueued_ms, 0));
+                self.record_resolution(
+                    res,
+                    self.unrouted_event(res, item.id, &item.user, 0.0, item.enqueued_ms, 0, trace_id),
+                );
             }
         }
     }

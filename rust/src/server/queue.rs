@@ -24,6 +24,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::server::ticket::TicketCell;
+use crate::telemetry::TraceContext;
 use crate::types::PriorityTier;
 
 use crate::util::sync::{cond_wait_timeout, cond_wait_while, LockExt};
@@ -67,6 +68,11 @@ pub struct SubmitRequest {
     pub dataset: Option<String>,
     /// Max new tokens to generate.
     pub max_new_tokens: usize,
+    /// Request-scoped trace handle. Inert by default; the HTTP submit path
+    /// starts it early (adopting an inbound `traceparent`) and the
+    /// orchestrator starts it at `enqueue` otherwise. Threaded by value —
+    /// never a thread-local — so worker handoffs keep the span tree intact.
+    pub trace: TraceContext,
 }
 
 impl SubmitRequest {
@@ -82,6 +88,7 @@ impl SubmitRequest {
             model: None,
             dataset: None,
             max_new_tokens: 16,
+            trace: TraceContext::none(),
         }
     }
 
@@ -119,6 +126,13 @@ impl SubmitRequest {
 
     pub fn max_new_tokens(mut self, n: usize) -> Self {
         self.max_new_tokens = n;
+        self
+    }
+
+    /// Attach an already-started trace context (HTTP submit does this so the
+    /// root span covers transport time and inbound `traceparent` adoption).
+    pub fn trace(mut self, trace: TraceContext) -> Self {
+        self.trace = trace;
         self
     }
 
@@ -415,6 +429,7 @@ mod tests {
         assert_eq!(sr.model.as_deref(), Some("tinylm"));
         assert_eq!(sr.dataset.as_deref(), Some("case_law"));
         assert_eq!(sr.max_new_tokens, 64);
+        assert!(!sr.trace.is_active(), "trace is inert until a sink starts it");
         // the sensitivity floor clamps into [0,1]
         assert_eq!(SubmitRequest::new("q").sensitivity(7.0).sensitivity_floor, Some(1.0));
     }

@@ -50,6 +50,9 @@ pub struct RequestEvent {
     pub tokens_generated: u32,
     pub latency_ms: f64,
     pub cost_usd: f64,
+    /// Hex trace id joining this event to the trace ring and audit log.
+    /// `None` only when tail sampling dropped the trace (or tracing is off).
+    pub trace_id: Option<String>,
 }
 
 fn ms(v: f64) -> Json {
@@ -82,6 +85,7 @@ impl RequestEvent {
             ("tokens_generated", Json::num(self.tokens_generated as f64)),
             ("latency_ms", ms(self.latency_ms)),
             ("cost_usd", Json::num(self.cost_usd)),
+            ("trace_id", self.trace_id.as_deref().map(Json::str).unwrap_or(Json::Null)),
         ])
     }
 }
@@ -176,6 +180,7 @@ mod tests {
             tokens_generated: 16,
             latency_ms: 8.0,
             cost_usd: 0.001,
+            trace_id: Some(format!("{:032x}", id + 1)),
         }
     }
 
@@ -199,6 +204,7 @@ mod tests {
         ev.first_token_ms = f64::NAN; // never reached first token
         ev.island = None;
         ev.tier = None;
+        ev.trace_id = None; // sampling dropped the trace
         log.push(ev);
         let jsonl = log.to_jsonl();
         let lines: Vec<&str> = jsonl.lines().collect();
@@ -206,8 +212,10 @@ mod tests {
         let first = Json::parse(lines[0]).unwrap();
         assert_eq!(first.get("outcome"), &Json::str("served"));
         assert_eq!(first.get("island"), &Json::str("island-1"));
+        assert_eq!(first.get("trace_id"), &Json::str(&format!("{:032x}", 2)));
         let second = Json::parse(lines[1]).unwrap();
         assert_eq!(second.get("first_token_ms"), &Json::Null);
         assert_eq!(second.get("island"), &Json::Null);
+        assert_eq!(second.get("trace_id"), &Json::Null);
     }
 }

@@ -22,6 +22,8 @@ pub mod events;
 pub mod hist;
 pub mod prometheus;
 pub mod serving;
+pub mod trace;
+pub mod traceout;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -31,6 +33,10 @@ pub use events::{EventLog, RequestEvent};
 pub use hist::AtomicHistogram;
 pub use prometheus::lint_exposition;
 pub use serving::ServingMetrics;
+pub use trace::{
+    format_traceparent, parse_traceparent, CompletedTrace, Span, SpanId, TraceConfig, TraceContext,
+    TraceId, TraceSink,
+};
 
 use crate::util::{AtomicF64, Histogram, Table};
 

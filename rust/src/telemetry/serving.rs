@@ -297,7 +297,7 @@ impl ServingMetrics {
 
 /// Route label values the HTTP surface reports under. Unrecognized paths
 /// collapse into `other` so hostile scanners cannot mint unbounded series.
-pub const HTTP_ROUTES: [&str; 7] = ["submit", "ticket", "cancel", "stream", "metrics", "healthz", "other"];
+pub const HTTP_ROUTES: [&str; 8] = ["submit", "ticket", "cancel", "stream", "trace", "metrics", "healthz", "other"];
 
 /// Pre-registered metrics for the HTTP serving surface: per-route request
 /// counters (`http_requests{route,status}`), per-route latency histograms

@@ -1,0 +1,703 @@
+//! Request-scoped distributed tracing: span trees, tail-based sampling, and
+//! W3C `traceparent` context propagation.
+//!
+//! Every request gets one **root span** opened at admission (`enqueue` or the
+//! HTTP submit handler) and closed at exactly one [`crate::server::Resolution`]
+//! terminal. Stage-level child spans (queue wait, WAVES routing, MIST
+//! sanitize, failover hops, prefill, decode, SSE relay) hang off that root, so
+//! a slow request can be attributed to the stage that burned its deadline
+//! instead of an aggregate histogram.
+//!
+//! Design constraints, in order:
+//!
+//! * **Typed context, no thread-locals.** [`TraceContext`] is a cheap
+//!   cloneable handle threaded through `SubmitRequest` and the worker
+//!   plumbing. A context that was never started (tracing disabled, or the
+//!   request predates the sink) is a no-op: every method tolerates it.
+//! * **Deterministic ids.** Trace and span ids come from the seeded
+//!   [`crate::util::Rng`] — never wall-clock entropy — so Sim runs reproduce
+//!   byte-identical trace files.
+//! * **Tail-based sampling.** The keep/drop decision happens when the trace
+//!   *finishes*: shed, cancelled, and failed requests are always kept, as are
+//!   traces slower than the running p90 of recent durations (the "slowest
+//!   decile"); ordinary served traces survive only a head-sampling coin
+//!   flipped at root creation ([`TraceConfig::head_rate`]).
+//! * **Bounded memory.** Kept traces land in a ring of
+//!   [`TraceConfig::ring_capacity`] entries; the oldest are evicted first.
+//!
+//! Exporters (Chrome `trace_event` JSON and JSONL) live in
+//! [`crate::telemetry::traceout`].
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::config::json::Json;
+use crate::util::sync::LockExt;
+use crate::util::Rng;
+
+/// Sliding window of recent trace durations used for the slowest-decile rule.
+const DURATION_WINDOW: usize = 256;
+
+/// Minimum samples before the slow-trace threshold activates; below this the
+/// threshold is `+inf` (nothing is "slow" until there is a population).
+const SLOW_MIN_SAMPLES: usize = 20;
+
+/// 128-bit trace identifier (W3C `trace-id`, 32 lowercase hex chars).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u128);
+
+impl TraceId {
+    /// Canonical 32-char lowercase hex form.
+    pub fn to_hex(self) -> String {
+        format!("{:032x}", self.0)
+    }
+
+    /// Parse the canonical form. Rejects wrong length, uppercase, non-hex,
+    /// and the all-zero id (invalid per the W3C spec).
+    pub fn from_hex(s: &str) -> Option<TraceId> {
+        if s.len() != 32 || !s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b)) {
+            return None;
+        }
+        match u128::from_str_radix(s, 16) {
+            Ok(0) | Err(_) => None,
+            Ok(v) => Some(TraceId(v)),
+        }
+    }
+}
+
+/// 64-bit span identifier (W3C `parent-id`, 16 lowercase hex chars).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SpanId(pub u64);
+
+impl SpanId {
+    /// Canonical 16-char lowercase hex form.
+    pub fn to_hex(self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    /// Parse the canonical form (rejects uppercase, bad length, all-zero).
+    pub fn from_hex(s: &str) -> Option<SpanId> {
+        if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b)) {
+            return None;
+        }
+        match u64::from_str_radix(s, 16) {
+            Ok(0) | Err(_) => None,
+            Ok(v) => Some(SpanId(v)),
+        }
+    }
+}
+
+/// Parse a W3C `traceparent` header value: `00-<trace-id>-<parent-id>-<flags>`.
+///
+/// Strict on shape (version 00, exact field lengths, lowercase hex, non-zero
+/// ids) but callers are expected to **fail open**: a `None` here means "mint a
+/// fresh root", never "reject the request".
+pub fn parse_traceparent(value: &str) -> Option<(TraceId, SpanId)> {
+    let mut parts = value.trim().split('-');
+    let version = parts.next()?;
+    let trace = parts.next()?;
+    let span = parts.next()?;
+    let flags = parts.next()?;
+    if parts.next().is_some() || version != "00" {
+        return None;
+    }
+    if flags.len() != 2 || !flags.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b)) {
+        return None;
+    }
+    Some((TraceId::from_hex(trace)?, SpanId::from_hex(span)?))
+}
+
+/// Render a `traceparent` header value (version 00, sampled flag set).
+pub fn format_traceparent(trace: TraceId, span: SpanId) -> String {
+    format!("00-{}-{}-01", trace.to_hex(), span.to_hex())
+}
+
+/// One recorded interval inside a trace. Child spans carry the root as their
+/// parent; the root's own parent is the remote span from an inbound
+/// `traceparent`, if any.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub id: SpanId,
+    pub parent: Option<SpanId>,
+    pub name: &'static str,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub attrs: Vec<(&'static str, Json)>,
+}
+
+/// Sampling and capacity knobs, mirrored from [`crate::config::Config`].
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Master switch; when false every started context is a no-op.
+    pub enabled: bool,
+    /// Head-sampling keep probability for ordinary served traces, in [0, 1].
+    /// `1.0` is "always" (the setting the consistency stress forces).
+    pub head_rate: f64,
+    /// Completed-trace ring size; oldest kept traces are evicted first.
+    pub ring_capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: true, head_rate: 1.0, ring_capacity: 512 }
+    }
+}
+
+/// Mutable per-trace state behind the context's mutex.
+struct TraceState {
+    rng: Rng,
+    user: String,
+    spans: Vec<Span>,
+    end_ms: f64,
+    outcome: &'static str,
+    reason: &'static str,
+    finished: bool,
+    kept: bool,
+}
+
+/// Shared body of one live trace. Held via `Arc` by every context clone and —
+/// once finished and kept — by the sink's ring, so late spans (the SSE relay
+/// records after the terminal fires) still attach to the exported tree.
+struct TraceInner {
+    trace_id: TraceId,
+    root_id: SpanId,
+    remote_parent: Option<SpanId>,
+    start_ms: f64,
+    head_keep: bool,
+    sink: Weak<TraceSink>,
+    state: Mutex<TraceState>,
+}
+
+impl TraceInner {
+    fn materialize(&self) -> CompletedTrace {
+        let st = self.state.lock_clean();
+        CompletedTrace {
+            trace_id: self.trace_id,
+            user: st.user.clone(),
+            outcome: st.outcome,
+            reason: st.reason,
+            root: Span {
+                id: self.root_id,
+                parent: self.remote_parent,
+                name: "request",
+                start_ms: self.start_ms,
+                end_ms: st.end_ms,
+                attrs: Vec::new(),
+            },
+            spans: st.spans.clone(),
+        }
+    }
+}
+
+/// Cheap cloneable handle to one request's trace. `Default` (and a context
+/// from a disabled sink) is inert: every method is a no-op returning `None`.
+#[derive(Clone, Default)]
+pub struct TraceContext {
+    inner: Option<Arc<TraceInner>>,
+}
+
+impl std::fmt::Debug for TraceContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.inner.as_ref() {
+            Some(inner) => write!(f, "TraceContext({})", inner.trace_id.to_hex()),
+            None => write!(f, "TraceContext(none)"),
+        }
+    }
+}
+
+impl TraceContext {
+    /// The inert context: carries no trace, records nothing.
+    pub fn none() -> TraceContext {
+        TraceContext::default()
+    }
+
+    /// True when a root span is open (or was opened) behind this handle.
+    pub fn is_active(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The trace id, if active.
+    pub fn trace_id(&self) -> Option<TraceId> {
+        self.inner.as_ref().map(|i| i.trace_id)
+    }
+
+    /// Hex trace id, if active (the form events/audit/export all use).
+    pub fn trace_hex(&self) -> Option<String> {
+        self.inner.as_ref().map(|i| i.trace_id.to_hex())
+    }
+
+    /// `traceparent` value identifying this request's root span — what the
+    /// HTTP layer echoes back so external callers can correlate.
+    pub fn traceparent(&self) -> Option<String> {
+        self.inner.as_ref().map(|i| format_traceparent(i.trace_id, i.root_id))
+    }
+
+    /// Stamp the owning user (first writer wins). Used by the HTTP layer for
+    /// tenant isolation on `GET /v1/traces/:id`.
+    pub fn set_user(&self, user: &str) {
+        if let Some(inner) = self.inner.as_ref() {
+            let mut st = inner.state.lock_clean();
+            if st.user.is_empty() {
+                st.user = user.to_string();
+            }
+        }
+    }
+
+    /// Record one completed child interval under the root. Timestamps are
+    /// virtual-clock ms from the orchestrator (never wall time in Sim);
+    /// `end_ms` is clamped to `start_ms` so spans are never negative.
+    pub fn add_span(
+        &self,
+        name: &'static str,
+        start_ms: f64,
+        end_ms: f64,
+        attrs: Vec<(&'static str, Json)>,
+    ) {
+        let Some(inner) = self.inner.as_ref() else {
+            return;
+        };
+        let mut st = inner.state.lock_clean();
+        let id = next_span_id(&mut st.rng);
+        st.spans.push(Span {
+            id,
+            parent: Some(inner.root_id),
+            name,
+            start_ms,
+            end_ms: end_ms.max(start_ms),
+            attrs,
+        });
+    }
+
+    /// Close the root span at a `Resolution` terminal and run the tail
+    /// sampling decision. Returns the hex trace id when the trace was kept
+    /// (what `RequestEvent`/`AuditEntry` carry), `None` when sampling dropped
+    /// it or the context is inert. Idempotent: the first terminal wins and
+    /// later calls replay its answer, so double-resolve races cannot record a
+    /// trace twice.
+    ///
+    /// Every non-test `Resolution` terminal site in `server/` must call this
+    /// (enforced by islandlint R6 `span-discipline`).
+    pub fn end_request_span(
+        &self,
+        end_ms: f64,
+        outcome: &'static str,
+        reason: &'static str,
+    ) -> Option<String> {
+        let inner = self.inner.as_ref()?;
+        let mut st = inner.state.lock_clean();
+        if st.finished {
+            return if st.kept { Some(inner.trace_id.to_hex()) } else { None };
+        }
+        st.finished = true;
+        st.end_ms = end_ms.max(inner.start_ms);
+        st.outcome = outcome;
+        st.reason = reason;
+        let Some(sink) = inner.sink.upgrade() else {
+            return None;
+        };
+        let duration = st.end_ms - inner.start_ms;
+        let slow = duration > sink.note_duration(duration);
+        let keep = outcome != "served" || inner.head_keep || slow;
+        st.kept = keep;
+        drop(st);
+        if keep {
+            sink.keep(Arc::clone(inner));
+            Some(inner.trace_id.to_hex())
+        } else {
+            sink.sampled_out.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+}
+
+/// Owner of completed traces: mints contexts, applies the tail-sampling
+/// policy, and holds the bounded ring the exporters and `GET /v1/traces/:id`
+/// read from.
+pub struct TraceSink {
+    cfg: TraceConfig,
+    rng: Mutex<Rng>,
+    ring: Mutex<VecDeque<Arc<TraceInner>>>,
+    durations: Mutex<VecDeque<f64>>,
+    /// f64 bit-pattern of the current slowest-decile threshold.
+    slow_thr: AtomicU64,
+    started: AtomicU64,
+    kept_total: AtomicU64,
+    sampled_out: AtomicU64,
+}
+
+impl TraceSink {
+    pub fn new(cfg: TraceConfig, seed: u64) -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            cfg,
+            rng: Mutex::new(Rng::new(seed ^ 0x7452_4143_4553_4e4b)),
+            ring: Mutex::new(VecDeque::new()),
+            durations: Mutex::new(VecDeque::new()),
+            slow_thr: AtomicU64::new(f64::INFINITY.to_bits()),
+            started: AtomicU64::new(0),
+            kept_total: AtomicU64::new(0),
+            sampled_out: AtomicU64::new(0),
+        })
+    }
+
+    /// Open a new root span at `now_ms`. `remote` carries a validated inbound
+    /// `traceparent` pair: the trace id is adopted and the remote span becomes
+    /// the root's parent. Returns the inert context when tracing is disabled.
+    pub fn start(sink: &Arc<TraceSink>, now_ms: f64, remote: Option<(TraceId, SpanId)>) -> TraceContext {
+        if !sink.cfg.enabled {
+            return TraceContext::none();
+        }
+        let (trace_id, root_id, head_keep, trace_rng) = {
+            let mut rng = sink.rng.lock_clean();
+            let trace_id = match remote {
+                Some((t, _)) => t,
+                None => next_trace_id(&mut rng),
+            };
+            let root_id = next_span_id(&mut rng);
+            let head_keep = rng.chance(sink.cfg.head_rate);
+            (trace_id, root_id, head_keep, rng.fork())
+        };
+        sink.started.fetch_add(1, Ordering::Relaxed);
+        TraceContext {
+            inner: Some(Arc::new(TraceInner {
+                trace_id,
+                root_id,
+                remote_parent: remote.map(|(_, s)| s),
+                start_ms: now_ms,
+                head_keep,
+                sink: Arc::downgrade(sink),
+                state: Mutex::new(TraceState {
+                    rng: trace_rng,
+                    user: String::new(),
+                    spans: Vec::new(),
+                    end_ms: now_ms,
+                    outcome: "open",
+                    reason: "open",
+                    finished: false,
+                    kept: false,
+                }),
+            })),
+        }
+    }
+
+    /// Reuse an already-started context (the HTTP layer starts traces at
+    /// submit time) or open a fresh root for direct `enqueue` callers.
+    pub fn adopt_or_start(
+        sink: &Arc<TraceSink>,
+        existing: &TraceContext,
+        now_ms: f64,
+    ) -> TraceContext {
+        if existing.is_active() {
+            existing.clone()
+        } else {
+            TraceSink::start(sink, now_ms, None)
+        }
+    }
+
+    /// Note a completed duration in the sliding window and return the
+    /// refreshed slowest-decile threshold (`+inf` until enough samples).
+    fn note_duration(&self, duration_ms: f64) -> f64 {
+        let mut ds = self.durations.lock_clean();
+        ds.push_back(duration_ms);
+        if ds.len() > DURATION_WINDOW {
+            ds.pop_front();
+        }
+        let thr = if ds.len() < SLOW_MIN_SAMPLES {
+            f64::INFINITY
+        } else {
+            let mut sorted: Vec<f64> = ds.iter().copied().collect();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            sorted[(sorted.len() * 9) / 10]
+        };
+        self.slow_thr.store(thr.to_bits(), Ordering::Relaxed);
+        thr
+    }
+
+    fn keep(&self, inner: Arc<TraceInner>) {
+        self.kept_total.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.ring.lock_clean();
+        ring.push_back(inner);
+        while ring.len() > self.cfg.ring_capacity.max(1) {
+            ring.pop_front();
+        }
+    }
+
+    /// The active sampling/capacity configuration.
+    pub fn config(&self) -> TraceConfig {
+        self.cfg
+    }
+
+    /// True when tracing is on (contexts will actually record).
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Root spans opened so far.
+    pub fn started(&self) -> u64 {
+        self.started.load(Ordering::Relaxed)
+    }
+
+    /// Traces retained by the tail policy (including ones since evicted).
+    pub fn kept(&self) -> u64 {
+        self.kept_total.load(Ordering::Relaxed)
+    }
+
+    /// Served traces dropped by sampling (these are the `trace_id: None`
+    /// rows in the event and audit logs).
+    pub fn sampled_out(&self) -> u64 {
+        self.sampled_out.load(Ordering::Relaxed)
+    }
+
+    /// Kept traces currently resident in the ring.
+    pub fn len(&self) -> usize {
+        self.ring.lock_clean().len()
+    }
+
+    /// True when no trace is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up one kept trace by id (newest wins on adoption collisions).
+    pub fn get(&self, id: TraceId) -> Option<CompletedTrace> {
+        self.ring.lock_clean().iter().rev().find(|t| t.trace_id == id).map(|t| t.materialize())
+    }
+
+    /// Materialize every resident trace, oldest first (export order).
+    pub fn snapshot(&self) -> Vec<CompletedTrace> {
+        self.ring.lock_clean().iter().map(|t| t.materialize()).collect()
+    }
+}
+
+/// An immutable, export-ready view of one kept trace.
+#[derive(Clone, Debug)]
+pub struct CompletedTrace {
+    pub trace_id: TraceId,
+    pub user: String,
+    pub outcome: &'static str,
+    pub reason: &'static str,
+    pub root: Span,
+    pub spans: Vec<Span>,
+}
+
+impl CompletedTrace {
+    /// End-to-end latency of the request (root span width).
+    pub fn duration_ms(&self) -> f64 {
+        (self.root.end_ms - self.root.start_ms).max(0.0)
+    }
+}
+
+fn next_trace_id(rng: &mut Rng) -> TraceId {
+    loop {
+        let v = ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128;
+        if v != 0 {
+            return TraceId(v);
+        }
+    }
+}
+
+fn next_span_id(rng: &mut Rng) -> SpanId {
+    loop {
+        let v = rng.next_u64();
+        if v != 0 {
+            return SpanId(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink_with(head_rate: f64, ring_capacity: usize) -> Arc<TraceSink> {
+        TraceSink::new(TraceConfig { enabled: true, head_rate, ring_capacity }, 7)
+    }
+
+    #[test]
+    fn traceparent_round_trips() {
+        let sink = sink_with(1.0, 8);
+        let ctx = TraceSink::start(&sink, 0.0, None);
+        let header = ctx.traceparent().unwrap();
+        let (tid, sid) = parse_traceparent(&header).unwrap();
+        assert_eq!(Some(tid), ctx.trace_id());
+        assert_eq!(format_traceparent(tid, sid), header);
+        assert_eq!(header.len(), 55);
+    }
+
+    #[test]
+    fn traceparent_rejects_malformed() {
+        let good = "00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-01";
+        assert!(parse_traceparent(good).is_some());
+        for bad in [
+            "",
+            "garbage",
+            "01-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-01",
+            "00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331",
+            "00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-01-extra",
+            "00-0AF7651916CD43DD8448EB211C80319C-b7ad6b7169203331-01",
+            "00-0af7651916cd43dd8448eb211c80319-b7ad6b7169203331-01",
+            "00-00000000000000000000000000000000-b7ad6b7169203331-01",
+            "00-0af7651916cd43dd8448eb211c80319c-0000000000000000-01",
+            "00-0af7651916cd43dd8448eb211c80319c-b7ad6b716920333g-01",
+            "00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-0g",
+        ] {
+            assert!(parse_traceparent(bad).is_none(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn ids_are_deterministic_and_nonzero() {
+        let a = sink_with(1.0, 8);
+        let b = sink_with(1.0, 8);
+        for _ in 0..16 {
+            let ca = TraceSink::start(&a, 0.0, None);
+            let cb = TraceSink::start(&b, 0.0, None);
+            assert_eq!(ca.trace_hex(), cb.trace_hex(), "same seed, same ids");
+            assert_ne!(ca.trace_id().unwrap().0, 0);
+        }
+    }
+
+    #[test]
+    fn remote_parent_is_adopted() {
+        let sink = sink_with(1.0, 8);
+        let remote = "00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-01";
+        let pair = parse_traceparent(remote).unwrap();
+        let ctx = TraceSink::start(&sink, 1.0, Some(pair));
+        assert_eq!(ctx.trace_hex().unwrap(), "0af7651916cd43dd8448eb211c80319c");
+        let id = ctx.end_request_span(2.0, "failed", "execution_error").unwrap();
+        let got = sink.get(TraceId::from_hex(&id).unwrap()).unwrap();
+        assert_eq!(got.root.parent, Some(pair.1), "root keeps the remote span as parent");
+    }
+
+    #[test]
+    fn tail_policy_always_keeps_non_served() {
+        let sink = sink_with(0.0, 64);
+        for (outcome, reason) in
+            [("shed", "queue_full"), ("cancelled", "mid_decode"), ("failed", "fail_closed")]
+        {
+            let ctx = TraceSink::start(&sink, 0.0, None);
+            assert!(ctx.end_request_span(1.0, outcome, reason).is_some());
+        }
+        // fast served traces at head_rate 0 are dropped
+        let ctx = TraceSink::start(&sink, 0.0, None);
+        assert!(ctx.end_request_span(1.0, "served", "ok").is_none());
+        assert_eq!(sink.kept(), 3);
+        assert_eq!(sink.sampled_out(), 1);
+    }
+
+    #[test]
+    fn tail_policy_keeps_slowest_decile() {
+        let sink = sink_with(0.0, 256);
+        let mut kept = Vec::new();
+        for i in 1..=40u32 {
+            let ctx = TraceSink::start(&sink, 0.0, None);
+            if ctx.end_request_span(f64::from(i), "served", "ok").is_some() {
+                kept.push(i);
+            }
+        }
+        // threshold is +inf until SLOW_MIN_SAMPLES; after that each strictly
+        // slower duration clears the running p90 and is kept
+        assert!(kept.iter().all(|&i| (i as usize) >= SLOW_MIN_SAMPLES));
+        assert!(kept.contains(&40), "the slowest trace must be kept");
+        assert!(!kept.is_empty() && kept.len() < 40);
+    }
+
+    #[test]
+    fn head_sampling_keeps_served_at_rate_one() {
+        let sink = sink_with(1.0, 64);
+        let ctx = TraceSink::start(&sink, 0.0, None);
+        let id = ctx.end_request_span(5.0, "served", "ok").unwrap();
+        let trace = sink.get(TraceId::from_hex(&id).unwrap()).unwrap();
+        assert_eq!(trace.outcome, "served");
+        assert_eq!(trace.reason, "ok");
+        assert!((trace.duration_ms() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_evicts_oldest() {
+        let sink = sink_with(0.0, 4);
+        let mut ids = Vec::new();
+        for _ in 0..10 {
+            let ctx = TraceSink::start(&sink, 0.0, None);
+            ids.push(ctx.end_request_span(1.0, "failed", "fail_closed").unwrap());
+        }
+        assert_eq!(sink.len(), 4);
+        assert!(sink.get(TraceId::from_hex(&ids[0]).unwrap()).is_none(), "oldest evicted");
+        assert!(sink.get(TraceId::from_hex(&ids[9]).unwrap()).is_some());
+        assert_eq!(sink.kept(), 10, "kept counts retention decisions, not residency");
+    }
+
+    #[test]
+    fn disabled_sink_yields_inert_contexts() {
+        let sink = TraceSink::new(TraceConfig { enabled: false, ..TraceConfig::default() }, 7);
+        let ctx = TraceSink::start(&sink, 0.0, None);
+        assert!(!ctx.is_active());
+        assert!(ctx.trace_hex().is_none());
+        assert!(ctx.traceparent().is_none());
+        ctx.add_span("route", 0.0, 1.0, vec![]);
+        assert!(ctx.end_request_span(1.0, "served", "ok").is_none());
+        assert_eq!(sink.started(), 0);
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn end_is_idempotent_first_terminal_wins() {
+        let sink = sink_with(1.0, 8);
+        let ctx = TraceSink::start(&sink, 0.0, None);
+        let first = ctx.end_request_span(3.0, "cancelled", "mid_decode");
+        let second = ctx.end_request_span(9.0, "served", "ok");
+        assert_eq!(first, second, "replay returns the original decision");
+        assert_eq!(sink.kept(), 1);
+        let trace = sink.snapshot().pop().unwrap();
+        assert_eq!(trace.reason, "mid_decode");
+        assert!((trace.duration_ms() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn late_spans_attach_after_finish() {
+        let sink = sink_with(1.0, 8);
+        let ctx = TraceSink::start(&sink, 0.0, None);
+        ctx.set_user("alice");
+        ctx.add_span("queue_wait", 0.0, 2.0, vec![("depth", Json::num(3.0))]);
+        let id = ctx.end_request_span(5.0, "served", "ok").unwrap();
+        // the SSE relay records after the terminal resolves the ticket
+        ctx.add_span("sse_relay", 5.0, 6.0, vec![("events", Json::num(4.0))]);
+        let trace = sink.get(TraceId::from_hex(&id).unwrap()).unwrap();
+        assert_eq!(trace.user, "alice");
+        let names: Vec<&str> = trace.spans.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["queue_wait", "sse_relay"]);
+        assert!(trace.spans.iter().all(|s| s.parent == Some(trace.root.id)));
+    }
+
+    #[test]
+    fn set_user_first_writer_wins() {
+        let sink = sink_with(1.0, 8);
+        let ctx = TraceSink::start(&sink, 0.0, None);
+        ctx.set_user("alice");
+        ctx.set_user("mallory");
+        ctx.end_request_span(1.0, "failed", "session_closed");
+        assert_eq!(sink.snapshot().pop().unwrap().user, "alice");
+    }
+
+    #[test]
+    fn adopt_or_start_reuses_active_contexts() {
+        let sink = sink_with(1.0, 8);
+        let started = TraceSink::start(&sink, 0.0, None);
+        let adopted = TraceSink::adopt_or_start(&sink, &started, 4.0);
+        assert_eq!(started.trace_hex(), adopted.trace_hex());
+        let fresh = TraceSink::adopt_or_start(&sink, &TraceContext::none(), 4.0);
+        assert!(fresh.is_active());
+        assert_ne!(fresh.trace_hex(), started.trace_hex());
+    }
+
+    #[test]
+    fn span_ends_clamp_to_start() {
+        let sink = sink_with(1.0, 8);
+        let ctx = TraceSink::start(&sink, 10.0, None);
+        ctx.add_span("route", 5.0, 3.0, vec![]);
+        ctx.end_request_span(4.0, "shed", "deadline_expired");
+        let trace = sink.snapshot().pop().unwrap();
+        assert!(trace.duration_ms() >= 0.0);
+        assert!(trace.spans[0].end_ms >= trace.spans[0].start_ms);
+    }
+}

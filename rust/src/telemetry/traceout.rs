@@ -1,0 +1,169 @@
+//! Exporters for completed traces: per-trace JSON, JSONL, and Chrome
+//! `trace_event` format.
+//!
+//! The JSON shape is the contract shared by `GET /v1/traces/:id`, the
+//! `islandrun trace --out` JSONL artifact, and the consistency stress: one
+//! object per trace with the root span, flat child spans, and the terminal
+//! outcome/reason. The Chrome form (`--chrome-out`) renders every span as a
+//! complete `"ph": "X"` event — virtual-clock milliseconds scaled to the
+//! microseconds `chrome://tracing` / Perfetto expect — with one timeline row
+//! (`tid`) per trace so concurrent requests stack instead of overlapping.
+
+use crate::config::json::Json;
+
+use super::trace::{CompletedTrace, Span};
+
+fn attrs_json(attrs: &[(&'static str, Json)]) -> Json {
+    Json::obj(attrs.iter().map(|(k, v)| (*k, v.clone())).collect())
+}
+
+/// One span as JSON (ids in canonical hex, times in virtual-clock ms).
+pub fn span_json(span: &Span) -> Json {
+    Json::obj(vec![
+        ("span_id", Json::str(&span.id.to_hex())),
+        (
+            "parent_span_id",
+            match span.parent {
+                Some(p) => Json::str(&p.to_hex()),
+                None => Json::Null,
+            },
+        ),
+        ("name", Json::str(span.name)),
+        ("start_ms", Json::num(span.start_ms)),
+        ("end_ms", Json::num(span.end_ms)),
+        ("attrs", attrs_json(&span.attrs)),
+    ])
+}
+
+/// One complete trace as JSON: the `GET /v1/traces/:id` response body and
+/// one JSONL line.
+pub fn trace_json(trace: &CompletedTrace) -> Json {
+    Json::obj(vec![
+        ("trace_id", Json::str(&trace.trace_id.to_hex())),
+        ("user", Json::str(&trace.user)),
+        ("outcome", Json::str(trace.outcome)),
+        ("reason", Json::str(trace.reason)),
+        ("duration_ms", Json::num(trace.duration_ms())),
+        ("root", span_json(&trace.root)),
+        ("spans", Json::Arr(trace.spans.iter().map(span_json).collect())),
+    ])
+}
+
+/// All traces as JSONL, one object per line, oldest first.
+pub fn to_jsonl(traces: &[CompletedTrace]) -> String {
+    let mut out = String::new();
+    for t in traces {
+        out.push_str(&trace_json(t).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn chrome_event(trace: &CompletedTrace, span: &Span, tid: f64, is_root: bool) -> Json {
+    let mut args = vec![("trace_id", Json::str(&trace.trace_id.to_hex()))];
+    if is_root {
+        args.push(("outcome", Json::str(trace.outcome)));
+        args.push(("reason", Json::str(trace.reason)));
+    }
+    for (k, v) in &span.attrs {
+        args.push((*k, v.clone()));
+    }
+    Json::obj(vec![
+        ("name", Json::str(span.name)),
+        ("cat", Json::str(trace.outcome)),
+        ("ph", Json::str("X")),
+        // virtual-clock ms -> trace_event microseconds
+        ("ts", Json::num(span.start_ms * 1000.0)),
+        ("dur", Json::num((span.end_ms - span.start_ms).max(0.0) * 1000.0)),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(tid)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// All traces as one Chrome `trace_event` document (the `"traceEvents"`
+/// array form, loadable in `chrome://tracing` and Perfetto).
+pub fn to_chrome_json(traces: &[CompletedTrace]) -> Json {
+    let mut events = Vec::new();
+    for (i, t) in traces.iter().enumerate() {
+        let tid = (i + 1) as f64;
+        events.push(chrome_event(t, &t.root, tid, true));
+        for s in &t.spans {
+            events.push(chrome_event(t, s, tid, false));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{TraceConfig, TraceSink};
+    use super::*;
+
+    fn sample_traces() -> Vec<CompletedTrace> {
+        let sink = TraceSink::new(TraceConfig::default(), 11);
+        let a = TraceSink::start(&sink, 0.0, None);
+        a.set_user("alice");
+        a.add_span("queue_wait", 0.0, 2.0, vec![("depth", Json::num(1.0))]);
+        a.add_span("decode", 3.0, 9.0, vec![("chunks", Json::num(2.0))]);
+        a.end_request_span(10.0, "served", "ok");
+        let b = TraceSink::start(&sink, 4.0, None);
+        b.end_request_span(6.0, "shed", "queue_full");
+        sink.snapshot()
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_parser() {
+        let traces = sample_traces();
+        let jsonl = to_jsonl(&traces);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("user").as_str(), Some("alice"));
+        assert_eq!(first.get("outcome").as_str(), Some("served"));
+        assert_eq!(first.get("duration_ms").as_f64(), Some(10.0));
+        assert_eq!(first.get("spans").as_arr().unwrap().len(), 2);
+        let span = &first.get("spans").as_arr().unwrap()[0];
+        assert_eq!(span.get("name").as_str(), Some("queue_wait"));
+        assert_eq!(
+            span.get("parent_span_id").as_str(),
+            first.get("root").get("span_id").as_str(),
+            "children hang off the root"
+        );
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("reason").as_str(), Some("queue_full"));
+    }
+
+    #[test]
+    fn chrome_events_scale_ms_to_micros() {
+        let traces = sample_traces();
+        let doc = Json::parse(&to_chrome_json(&traces).to_string()).unwrap();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        // 1 root + 2 children for the first trace, 1 root for the second
+        assert_eq!(events.len(), 4);
+        for ev in events {
+            assert_eq!(ev.get("ph").as_str(), Some("X"));
+            assert_eq!(ev.get("pid").as_f64(), Some(1.0));
+        }
+        let decode = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("decode"))
+            .expect("decode span exported");
+        assert_eq!(decode.get("ts").as_f64(), Some(3000.0));
+        assert_eq!(decode.get("dur").as_f64(), Some(6000.0));
+        assert_eq!(decode.get("args").get("chunks").as_f64(), Some(2.0));
+        // traces get distinct timeline rows
+        let tids: std::collections::BTreeSet<i64> =
+            events.iter().filter_map(|e| e.get("tid").as_i64()).collect();
+        assert_eq!(tids.len(), 2);
+        // root events carry the terminal
+        let root = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("request") && e.get("cat").as_str() == Some("shed"))
+            .expect("shed root exported");
+        assert_eq!(root.get("args").get("reason").as_str(), Some("queue_full"));
+    }
+}

@@ -19,7 +19,11 @@
 //!   still leaves exactly one audit entry,
 //! - graceful drain loses no admitted ticket and refuses new connections,
 //! - `/metrics` is a lintable Prometheus exposition carrying the per-route
-//!   http series; `/healthz` reports Lighthouse liveness.
+//!   http series; `/healthz` reports Lighthouse liveness,
+//! - tracing rides the wire: a valid inbound `traceparent` is adopted (and
+//!   echoed on the submit response), a malformed one fails open to a fresh
+//!   root, and `GET /v1/traces/:id` serves the completed span tree scoped
+//!   to the submitting key — a foreign key misses like an unknown id.
 //!
 //! Producer count for the concurrency scenario is overridable via
 //! `ISLANDRUN_STRESS_THREADS` so the CI release-mode stress job can push
@@ -248,6 +252,100 @@ fn tickets_are_scoped_to_the_submitting_key() {
         assert!(Instant::now() < give_up, "owner's cancel never resolved");
         std::thread::sleep(Duration::from_micros(300));
     }
+    server.shutdown();
+}
+
+/// Poll `GET /v1/traces/:id` until the completed trace is kept (the
+/// terminal fires on a worker thread, so the tree can trail the ticket's
+/// resolution by a beat) and return it.
+fn fetch_trace(client: &mut HttpClient, key: &str, trace_id: &str) -> Json {
+    let path = format!("/v1/traces/{trace_id}");
+    let give_up = Instant::now() + POLL_DEADLINE;
+    loop {
+        let resp = client.request("GET", &path, Some(key), None).expect("trace fetch");
+        if resp.status == 200 {
+            return resp.json().expect("trace response is JSON");
+        }
+        assert_eq!(resp.status, 404, "trace fetch may only miss, never error");
+        assert!(Instant::now() < give_up, "trace {trace_id} never appeared");
+        std::thread::sleep(Duration::from_micros(300));
+    }
+}
+
+#[test]
+fn submit_adopts_inbound_traceparent_and_serves_the_span_tree() {
+    let (_orch, server) = start(wide_open());
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    // client-minted W3C context: the server must join it, not start fresh
+    let tp = "00-0123456789abcdef0123456789abcdef-00f067aa0ba902b7-01";
+    let resp = client
+        .request_traced("POST", "/v1/submit", Some(KEY), Some(&submit_body("trace me over the wire", 6.0)), Some(tp))
+        .unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let json = resp.json().unwrap();
+    let id = json.get("ticket").as_i64().expect("ticket id") as u64;
+    let trace_id = json.get("trace_id").as_str().expect("submit returns the trace id").to_string();
+    assert_eq!(trace_id, "0123456789abcdef0123456789abcdef", "valid inbound traceparent is adopted");
+    let echoed = resp.header("traceparent").expect("submit echoes traceparent").to_string();
+    assert!(echoed.contains(&trace_id), "echoed header carries the adopted trace id: {echoed}");
+    poll_until_done(&mut client, id);
+    let tree = fetch_trace(&mut client, KEY, &trace_id);
+    assert_eq!(tree.get("trace_id").as_str(), Some(trace_id.as_str()));
+    assert_eq!(tree.get("outcome").as_str(), Some("served"), "{tree:?}");
+    assert_eq!(tree.get("user").as_str(), Some("http-tester"));
+    let root = tree.get("root");
+    assert!(root.get("span_id").as_str().is_some());
+    let spans = tree.get("spans").as_arr().expect("child spans");
+    for name in ["queue_wait", "route", "decode"] {
+        assert!(
+            spans.iter().any(|s| s.get("name").as_str() == Some(name)),
+            "{name} span missing from {tree:?}"
+        );
+    }
+    // every child nests inside the request root's interval
+    let (t0, t1) = (root.get("start_ms").as_f64().unwrap(), root.get("end_ms").as_f64().unwrap());
+    for s in spans {
+        assert!(s.get("start_ms").as_f64().unwrap() >= t0 && s.get("end_ms").as_f64().unwrap() <= t1);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn trace_lookup_is_owner_scoped_and_malformed_traceparent_fails_open() {
+    let orch = orchestrator();
+    let grants =
+        vec![("key-a".to_string(), "tenant-a".to_string()), ("key-b".to_string(), "tenant-b".to_string())];
+    let server = HttpServer::start(Arc::clone(&orch), "127.0.0.1:0", &grants, wide_open()).expect("bind loopback");
+    let mut client = HttpClient::connect(server.addr()).unwrap();
+    // garbage traceparent: fail open to a fresh root, never a refusal
+    let resp = client
+        .request_traced("POST", "/v1/submit", Some("key-a"), Some(&submit_body("private trace", 4.0)), Some("not-a-traceparent"))
+        .unwrap();
+    assert_eq!(resp.status, 200, "malformed traceparent must not refuse the submit");
+    let json = resp.json().unwrap();
+    let id = json.get("ticket").as_i64().unwrap() as u64;
+    let trace_id = json.get("trace_id").as_str().expect("fresh root minted").to_string();
+    assert_eq!(trace_id.len(), 32, "canonical 128-bit hex id");
+    let give_up = Instant::now() + POLL_DEADLINE;
+    loop {
+        let json = client.request("GET", &format!("/v1/tickets/{id}"), Some("key-a"), None).unwrap().json().unwrap();
+        if json.get("done").as_bool() == Some(true) {
+            break;
+        }
+        assert!(Instant::now() < give_up, "ticket never resolved");
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    let tree = fetch_trace(&mut client, "key-a", &trace_id);
+    assert_eq!(tree.get("user").as_str(), Some("tenant-a"));
+    let path = format!("/v1/traces/{trace_id}");
+    // a foreign key misses exactly like an unknown id — no existence oracle
+    assert_eq!(client.request("GET", &path, Some("key-b"), None).unwrap().status, 404);
+    assert_eq!(
+        client.request("GET", "/v1/traces/ffffffffffffffffffffffffffffffff", Some("key-a"), None).unwrap().status,
+        404
+    );
+    assert_eq!(client.request("GET", &path, None, None).unwrap().status, 401, "traces require auth");
+    assert_eq!(client.request("POST", &path, Some("key-a"), None).unwrap().status, 405);
     server.shutdown();
 }
 

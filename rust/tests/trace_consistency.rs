@@ -1,0 +1,241 @@
+//! Trace ↔ lifecycle consistency under mixed concurrent traffic.
+//!
+//! With sampling forced wide open (head rate 1.0), every ticket resolved
+//! through the queue path must leave exactly one complete trace in the
+//! sink's ring, and that trace must agree with the rest of the telemetry:
+//! - one kept trace per resolution, every trace id unique,
+//! - the root span is closed by a terminal whose outcome/reason pair is
+//!   drawn from the typed [`Resolution`] vocabulary,
+//! - every child span nests inside the root's interval and hangs off the
+//!   root (flat tree, no dangling parents),
+//! - the analytics ring and the trace ring name the same trace ids with
+//!   the same outcome/reason pairs — the correlation contract,
+//! - all 15 [`Resolution`] variants (plus the out-of-band
+//!   `failed/unknown_session` pair) close traces, and the tail policy
+//!   keeps every non-served trace even at head rate 0.
+//!
+//! Producer count is overridable via `ISLANDRUN_STRESS_THREADS` so the CI
+//! release-mode stress job can push harder than the debug test job.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+
+use islandrun::agents::mist::Mist;
+use islandrun::config::{preset_personal_group, Config};
+use islandrun::eval::loadgen::class_for;
+use islandrun::islands::Fleet;
+use islandrun::server::{Backend, Orchestrator, Outcome, Resolution, SubmitRequest, Ticket};
+use islandrun::substrate::trace::{priority_for, prompt_for};
+use islandrun::telemetry::{CompletedTrace, TraceConfig, TraceSink};
+use islandrun::util::Rng;
+
+const PER_PRODUCER: usize = 30;
+const PRE_CANCELLED: usize = 6;
+const INVALID: usize = 3;
+
+fn producers() -> usize {
+    std::env::var("ISLANDRUN_STRESS_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
+fn orchestrator(seed: u64) -> Arc<Orchestrator> {
+    let mut cfg = Config::default();
+    // admission policy is not under test; sampling is forced wide open so
+    // the one-trace-per-resolution invariant is exact, not probabilistic
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    cfg.queue_capacity = 100_000;
+    cfg.serve_workers = 4;
+    cfg.trace_enabled = true;
+    cfg.trace_head_rate = 1.0;
+    cfg.trace_ring_capacity = 100_000;
+    let fleet = Fleet::new(preset_personal_group(), seed);
+    Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), seed))
+}
+
+fn assert_well_formed(t: &CompletedTrace) {
+    assert_eq!(t.root.name, "request");
+    assert!(t.root.parent.is_none(), "locally-minted roots have no remote parent");
+    assert!(t.root.end_ms >= t.root.start_ms, "terminal must close the root: {t:?}");
+    assert!(
+        Resolution::ALL.iter().any(|r| (r.class(), r.reason()) == (t.outcome, t.reason))
+            || (t.outcome, t.reason) == ("failed", "unknown_session"),
+        "({}, {}) is outside the terminal vocabulary",
+        t.outcome,
+        t.reason
+    );
+    for s in &t.spans {
+        assert_eq!(s.parent, Some(t.root.id), "child spans hang off the root: {t:?}");
+        assert!(
+            s.start_ms >= t.root.start_ms && s.end_ms <= t.root.end_ms,
+            "span {} [{}, {}] escapes root [{}, {}]",
+            s.name,
+            s.start_ms,
+            s.end_ms,
+            t.root.start_ms,
+            t.root.end_ms
+        );
+        assert!(s.end_ms >= s.start_ms, "span {} runs backwards", s.name);
+    }
+}
+
+#[test]
+fn every_resolved_ticket_leaves_exactly_one_complete_trace() {
+    let producers = producers();
+    let orch = orchestrator(733);
+
+    // --- phase 0: parked tickets cancelled before any worker exists ------
+    let pre_session = orch.open_session("precancel");
+    let pre_cancelled: Vec<Ticket> = (0..PRE_CANCELLED)
+        .map(|_| {
+            let t = orch.enqueue(pre_session, SubmitRequest::new("hello world").deadline_ms(1e12));
+            t.cancel();
+            t
+        })
+        .collect();
+
+    // --- phase 1: queued tickets from many threads, valid and degenerate -
+    Arc::clone(&orch).start_queue();
+    let outcomes: Arc<Mutex<Vec<Outcome>>> = Arc::new(Mutex::new(Vec::new()));
+    let handles: Vec<_> = (0..producers)
+        .map(|p| {
+            let orch = Arc::clone(&orch);
+            let outcomes = Arc::clone(&outcomes);
+            std::thread::spawn(move || {
+                let session = orch.open_session(&format!("traced-{p}"));
+                let mut rng = Rng::new(29 ^ (p as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut tickets = Vec::new();
+                for i in 0..PER_PRODUCER {
+                    let class = class_for(i);
+                    let req = SubmitRequest::new(prompt_for(class, &mut rng))
+                        .priority(priority_for(class))
+                        .deadline_ms(1e12);
+                    tickets.push(orch.enqueue(session, req));
+                    orch.advance(5.0);
+                }
+                for _ in 0..INVALID {
+                    tickets.push(orch.enqueue(session, SubmitRequest::new("degenerate").max_new_tokens(0)));
+                }
+                let local: Vec<Outcome> =
+                    tickets.into_iter().map(|t| t.wait().expect("no ticket may be lost")).collect();
+                outcomes.lock().unwrap().extend(local);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut outcomes = Arc::try_unwrap(outcomes).expect("workers joined").into_inner().unwrap();
+    outcomes.extend(pre_cancelled.iter().map(|t| t.wait().expect("pre-cancelled tickets resolve")));
+
+    let total = producers * (PER_PRODUCER + INVALID) + PRE_CANCELLED;
+    assert_eq!(outcomes.len(), total);
+
+    // --- invariant 1: one kept trace per resolution, ids unique ----------
+    assert_eq!(orch.traces.started(), total as u64, "every enqueue opens exactly one root");
+    assert_eq!(orch.traces.kept(), total as u64, "head rate 1.0 keeps every trace");
+    assert_eq!(orch.traces.sampled_out(), 0);
+    let traces = orch.traces.snapshot();
+    assert_eq!(traces.len(), total, "the ring was sized to hold the whole run");
+    let mut ids: Vec<String> = traces.iter().map(|t| t.trace_id.to_hex()).collect();
+    ids.sort();
+    let before = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), before, "trace ids must be unique across the run");
+
+    // --- invariant 2: every trace is a well-formed closed tree -----------
+    for t in &traces {
+        assert_well_formed(t);
+    }
+    let reasons: BTreeSet<(&str, &str)> = traces.iter().map(|t| (t.outcome, t.reason)).collect();
+    for pair in [("served", "ok"), ("shed", "invalid_request"), ("cancelled", "while_queued")] {
+        assert!(reasons.contains(&pair), "the mix must exercise {pair:?}, got {reasons:?}");
+    }
+
+    // --- invariant 3: traces and analytics events correlate 1:1 ----------
+    assert_eq!(orch.analytics.dropped(), 0, "the mix must fit the analytics ring");
+    let events = orch.analytics.snapshot();
+    assert_eq!(events.len(), total, "one analytics event per resolution");
+    let by_id: BTreeMap<String, (&str, &str)> =
+        traces.iter().map(|t| (t.trace_id.to_hex(), (t.outcome, t.reason))).collect();
+    for ev in &events {
+        let id = ev.trace_id.as_deref().expect("kept traces stamp their id on the event");
+        let &(outcome, reason) = by_id.get(id).expect("event names a kept trace");
+        assert_eq!((ev.outcome, ev.reason), (outcome, reason), "event and trace agree on the terminal");
+    }
+    let event_ids: BTreeSet<&str> = events.iter().filter_map(|e| e.trace_id.as_deref()).collect();
+    assert_eq!(event_ids.len(), total, "no two events share a trace");
+
+    // --- lifecycle bookkeeping stays intact under the mix ----------------
+    assert_eq!(orch.metrics.counter_value("ticket_double_resolved"), 0);
+    assert_eq!(orch.audit.len(), total, "one audit entry per consumed id");
+}
+
+/// islandlint R6 (`span-discipline`) companion: every [`Resolution`]
+/// variant is driven through `end_request_span` explicitly, so the end
+/// reasons the serving paths emit are all proven representable and kept.
+#[test]
+fn all_fifteen_resolution_variants_close_traces() {
+    let sink = TraceSink::new(TraceConfig { enabled: true, head_rate: 1.0, ring_capacity: 64 }, 7);
+    for (i, r) in Resolution::ALL.iter().enumerate() {
+        let ctx = TraceSink::start(&sink, i as f64, None);
+        ctx.set_user("variant");
+        let hex = ctx.end_request_span(i as f64 + 1.0, r.class(), r.reason());
+        assert!(hex.is_some(), "head-kept trace must report its id for {r:?}");
+    }
+    assert_eq!(sink.kept(), 15);
+    let kept: BTreeSet<(&str, &str)> = sink.snapshot().iter().map(|t| (t.outcome, t.reason)).collect();
+    let expected: BTreeSet<(&str, &str)> = Resolution::ALL.iter().map(|r| (r.class(), r.reason())).collect();
+    assert_eq!(kept, expected, "all 15 variants must appear as end reasons");
+}
+
+#[test]
+fn tail_policy_keeps_every_non_served_trace_at_head_rate_zero() {
+    let sink = TraceSink::new(TraceConfig { enabled: true, head_rate: 0.0, ring_capacity: 64 }, 7);
+    for (i, r) in Resolution::ALL.iter().enumerate() {
+        let ctx = TraceSink::start(&sink, i as f64, None);
+        ctx.end_request_span(i as f64 + 1.0, r.class(), r.reason());
+    }
+    // the single Served variant is head-sampled out; every failure is kept
+    assert_eq!(sink.kept(), 14, "tail sampling must keep all non-served traces");
+    assert_eq!(sink.sampled_out(), 1);
+    assert!(sink.snapshot().iter().all(|t| t.outcome != "served"));
+}
+
+#[test]
+fn front_door_sheds_leave_complete_traces() {
+    let mut cfg = Config::default();
+    cfg.rate_limit_rps = 1e9;
+    cfg.budget_ceiling = 1e9;
+    cfg.queue_capacity = 1;
+    cfg.trace_enabled = true;
+    cfg.trace_head_rate = 1.0;
+    cfg.trace_ring_capacity = 64;
+    let fleet = Fleet::new(preset_personal_group(), 91);
+    let orch = Arc::new(Orchestrator::new(cfg, Mist::heuristic(), Backend::Sim(fleet), 91));
+    let session = orch.open_session("front-door");
+    // no workers: the first enqueue parks, the rest shed queue_full
+    let _parked = orch.enqueue(session, SubmitRequest::new("parks in the queue").deadline_ms(1e12));
+    for _ in 0..2 {
+        let t = orch.enqueue(session, SubmitRequest::new("finds the queue full").deadline_ms(1e12));
+        let out = t.wait().expect("queue-full sheds resolve immediately");
+        assert_eq!(out.resolution.reason(), "queue_full");
+    }
+    // unknown session: refused before a request id exists, still traced
+    let t = orch.enqueue(9_999, SubmitRequest::new("no such session"));
+    assert!(t.wait().is_err());
+    let traces = orch.traces.snapshot();
+    let sheds: Vec<&CompletedTrace> = traces.iter().filter(|t| t.reason == "queue_full").collect();
+    assert_eq!(sheds.len(), 2, "every queue-full shed leaves a kept trace");
+    for t in &sheds {
+        assert_well_formed(t);
+        assert!(
+            t.spans.iter().any(|s| s.name == "admission"),
+            "queue-full sheds passed admission first: {t:?}"
+        );
+        assert_eq!(t.user, "front-door");
+    }
+    assert!(
+        traces.iter().any(|t| (t.outcome, t.reason) == ("failed", "unknown_session")),
+        "the unknown-session refusal closes its trace out-of-band: {traces:?}"
+    );
+}

@@ -2,7 +2,7 @@
 //!
 //! A dependency-free lint pass over `rust/src/**`: a hand-rolled lexer
 //! (raw strings, nested comments, char-boundary-correct spans), a brace
-//! scope tracker, and five named rules enforcing invariants the compiler
+//! scope tracker, and six named rules enforcing invariants the compiler
 //! cannot see — see [`rules`] for the catalogue and the README's
 //! "Static analysis & sanitizers" section for suppression etiquette.
 //!
@@ -103,7 +103,7 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
     Ok(())
 }
 
-/// Run the selected rules (all five when `only` is empty) plus the
+/// Run the selected rules (all six when `only` is empty) plus the
 /// malformed-suppression sweep, sorted by file/line.
 pub fn run(tree: &Tree, only: &[String]) -> Vec<Finding> {
     let enabled = |name: &str| only.is_empty() || only.iter().any(|r| r == name);
@@ -122,6 +122,9 @@ pub fn run(tree: &Tree, only: &[String]) -> Vec<Finding> {
     }
     if enabled("trust-boundary-text") {
         findings.extend(rules::r5(tree));
+    }
+    if enabled("span-discipline") {
+        findings.extend(rules::r6(tree));
     }
     for f in &tree.files {
         let lines: Vec<&str> = f.src.split('\n').collect();

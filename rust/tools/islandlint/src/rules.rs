@@ -1,4 +1,4 @@
-//! The five project-invariant rules.
+//! The six project-invariant rules.
 //!
 //! | rule | invariant |
 //! |------|-----------|
@@ -7,6 +7,7 @@
 //! | R3 `metric-registration`   | metric-name literals must be pre-registered and exposition-safe |
 //! | R4 `resolution-coverage`   | every Resolution-family variant has a terminal site and a test |
 //! | R5 `trust-boundary-text`   | island-bound text is dispatched only by sanitize-owning modules |
+//! | R6 `span-discipline`       | every audited Resolution terminal also ends the request span |
 //!
 //! Every rule works on the blanked code view (strings and comments cannot
 //! produce findings), skips `#[cfg(test)]` spans where the invariant is
@@ -21,12 +22,13 @@ use crate::{Finding, SourceFile, Tree};
 pub const SERVING_DIRS: [&str; 6] =
     ["server/", "runtime/", "telemetry/", "agents/", "islands/", "substrate/"];
 
-pub const RULES: [&str; 5] = [
+pub const RULES: [&str; 6] = [
     "serving-path-panic",
     "lock-across-blocking",
     "metric-registration",
     "resolution-coverage",
     "trust-boundary-text",
+    "span-discipline",
 ];
 
 fn serving(rel: &str) -> bool {
@@ -647,6 +649,86 @@ pub fn r5(tree: &Tree) -> Vec<Finding> {
                 ),
             });
         }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R6 ----
+
+/// A terminal site — a non-test `server/` fn that constructs a
+/// `Resolution::…` value and records an audit entry (`.record(…)`) — must
+/// also close the request's trace via `.end_request_span(…)`. A terminal
+/// that audits but leaves the span open strands the trace: it never
+/// reaches the sink's ring, the exporters, or `GET /v1/traces/:id`, and the
+/// event/audit rows' `trace_id` silently stays null. The inert-context
+/// no-op makes the call free on untraced requests, so there is no
+/// performance excuse for skipping it.
+pub fn r6(tree: &Tree) -> Vec<Finding> {
+    const RULE: &str = "span-discipline";
+    let mut out = Vec::new();
+    for f in &tree.files {
+        if !f.rel.starts_with("server/") {
+            continue;
+        }
+        let lines = lines_of(f);
+        for (fn_pos, body_start, body_end) in fn_bodies(&f.code) {
+            if in_spans(fn_pos, &f.test_spans) {
+                continue;
+            }
+            let body = &f.code[body_start..body_end];
+            if !constructs_resolution(body) || method_calls(body, ".record").is_empty() {
+                continue;
+            }
+            if !method_calls(body, ".end_request_span").is_empty() {
+                continue;
+            }
+            let line = line_of(&f.src, fn_pos);
+            if suppressed(&lines, line, RULE) {
+                continue;
+            }
+            out.push(Finding {
+                rule: RULE,
+                file: f.rel.clone(),
+                line,
+                message: "terminal site audits a Resolution but never calls `.end_request_span(...)`; \
+                          the request's trace is stranded open"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// `Resolution::Variant` construction (the path form; a bare `Resolution`
+/// type mention — parameters, matches on a borrowed value — is not a
+/// terminal).
+fn constructs_resolution(code: &str) -> bool {
+    find_word(code, "Resolution").iter().any(|&p| code[p + "Resolution".len()..].starts_with("::"))
+}
+
+/// `(fn_offset, body_start, body_end)` for every `fn` with a block body,
+/// in the blanked code view. Bodyless declarations (trait methods, extern
+/// fns — a `;` before the `{`) are skipped so a neighbour's body is never
+/// mis-attributed.
+fn fn_bodies(code: &str) -> Vec<(usize, usize, usize)> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    for p in find_word(code, "fn") {
+        let mut j = p + 2;
+        let mut open = None;
+        while j < b.len() {
+            match b[j] {
+                b'{' => {
+                    open = Some(j);
+                    break;
+                }
+                b';' => break,
+                _ => j += 1,
+            }
+        }
+        let Some(open) = open else { continue };
+        let close = close_delim(code, open, b'{', b'}');
+        out.push((p, open + 1, close.saturating_sub(1).max(open + 1)));
     }
     out
 }

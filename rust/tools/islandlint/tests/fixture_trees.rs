@@ -64,6 +64,13 @@ fn violating_tree_fires_every_rule() {
         .iter()
         .all(|f| f.rule != "trust-boundary-text" || f.file == "runtime/dispatch.rs"));
 
+    // R6: one audited terminal never ends the request span; the compliant
+    // sibling and the test-only helper stay quiet
+    assert_eq!(count(&findings, "span-discipline"), 1, "{}", islandlint::render_table(&findings));
+    assert!(findings
+        .iter()
+        .all(|f| f.rule != "span-discipline" || f.file == "server/spans.rs"));
+
     // malformed suppressions: reasonless + unknown rule
     assert_eq!(count(&findings, "bad-suppression"), 2, "{}", islandlint::render_table(&findings));
 }
@@ -73,7 +80,7 @@ fn rule_selection_filters_findings() {
     let t = tree("violating");
     let only = vec!["serving-path-panic".to_string()];
     let findings = islandlint::run(&t, &only);
-    // bad-suppression always runs; the other four rules are off
+    // bad-suppression always runs; the other five rules are off
     assert!(findings.iter().all(|f| f.rule == "serving-path-panic" || f.rule == "bad-suppression"));
     assert_eq!(count(&findings, "serving-path-panic"), 6);
 }

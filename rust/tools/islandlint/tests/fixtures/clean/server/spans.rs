@@ -1,0 +1,15 @@
+//! R6 clean side: the audited terminal closes its span, and a match
+//! that names variants without recording anything is not a terminal.
+
+pub fn close_out(audit: &Audit, trace: &TraceContext, now_ms: f64) {
+    let resolution = Resolution::Shed(ShedReason::QueueFull);
+    audit.record(&resolution, now_ms);
+    trace.end_request_span(now_ms, resolution.class(), resolution.reason());
+}
+
+pub fn describe(r: &Resolution) -> &'static str {
+    match r {
+        Resolution::Served => "served",
+        _ => "other",
+    }
+}

@@ -1,0 +1,25 @@
+//! R6 seed: one audited terminal leaves the request span open; the
+//! compliant terminal and the test-only helper stay quiet.
+
+pub fn shed_without_closing(audit: &Audit, trace: &TraceContext, now_ms: f64) {
+    let resolution = Resolution::Shed(ShedReason::QueueFull);
+    audit.record(&resolution, now_ms);
+    let _ = trace; // the span is never ended: span-discipline fires here
+}
+
+pub fn shed_and_close(audit: &Audit, trace: &TraceContext, now_ms: f64) {
+    let resolution = Resolution::Shed(ShedReason::QueueFull);
+    audit.record(&resolution, now_ms);
+    trace.end_request_span(now_ms, resolution.class(), resolution.reason());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_code_may_audit_without_a_span() {
+        let audit = Audit::default();
+        audit.record(&Resolution::Served, 0.0);
+    }
+}
